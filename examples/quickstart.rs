@@ -1,0 +1,82 @@
+//! Quickstart: the 60-second tour of the library.
+//!
+//! Trains a small RBF SVM, approximates it with the paper's
+//! second-order Maclaurin scheme (Eq. 3.8), checks the validity bound
+//! (Eq. 3.11), and compares accuracy + speed + model size.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::error_analysis;
+use approxrbf::data::SynthProfile;
+use approxrbf::linalg::MathBackend;
+use approxrbf::svm::predict::ExactPredictor;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::Kernel;
+
+fn main() -> approxrbf::Result<()> {
+    // 1. Data: a synthetic stand-in for ijcnn1 (d = 22).
+    let (train, test) = SynthProfile::ControlLike.generate(42, 2000, 2000);
+    println!(
+        "data: {} train / {} test, d = {}",
+        train.len(),
+        test.len(),
+        train.dim()
+    );
+
+    // 2. The paper's pre-training bound: γ_MAX = 1/(4·max‖x‖²).
+    let gamma_max = gamma_max_for_data(&train);
+    let gamma = gamma_max * 0.8; // stay inside the guarantee
+    println!("gamma_MAX = {gamma_max:.4}; training with gamma = {gamma:.4}");
+
+    // 3. Train the exact model (SMO, the LIBSVM role).
+    let t0 = std::time::Instant::now();
+    let (model, stats) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())?;
+    println!(
+        "trained: {} SVs ({} bounded), {} iterations, {:.2}s",
+        stats.n_sv,
+        stats.n_bounded_sv,
+        stats.iterations,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // 4. Approximate: O(n_SV·d) model → O(d²) model.
+    let t0 = std::time::Instant::now();
+    let am = build_approx_model(&model, MathBackend::Blocked)?;
+    println!(
+        "approximated in {:.4}s; ‖z‖² budget = {:.3}",
+        t0.elapsed().as_secs_f64(),
+        am.znorm_sq_budget()
+    );
+
+    // 5. Compare predictions.
+    let t0 = std::time::Instant::now();
+    let exact = ExactPredictor::new(&model, MathBackend::Loops)?;
+    let _ = exact.decision_batch(&test.x)?;
+    let t_exact = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let _ = am.decision_batch(&test.x, MathBackend::Blocked)?;
+    let t_approx = t0.elapsed().as_secs_f64();
+    let rep = error_analysis::compare(&model, &am, &test)?;
+    println!("\n== results ==");
+    println!("exact  predict: {t_exact:.4}s   acc {:.2}%", rep.exact_acc * 100.0);
+    println!(
+        "approx predict: {t_approx:.4}s   acc {:.2}%   ({:.0}x faster)",
+        rep.approx_acc * 100.0,
+        t_exact / t_approx
+    );
+    println!(
+        "labels differing: {:.2}%   instances in bound: {:.1}%",
+        rep.label_diff * 100.0,
+        rep.in_bound_fraction * 100.0
+    );
+    println!(
+        "model size: exact {} B -> approx {} B (ratio {:.1})",
+        model.text_size_bytes(),
+        am.text_size_bytes(),
+        model.text_size_bytes() as f64 / am.text_size_bytes() as f64
+    );
+    Ok(())
+}

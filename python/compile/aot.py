@@ -1,0 +1,131 @@
+"""AOT compile path: lower L2 functions to HLO *text* for the Rust runtime.
+
+Run once via `make artifacts`; Python never runs on the request path.
+
+Interchange format is HLO text, NOT `lowered.compile()` / serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).
+The HLO *text* parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md "Gotchas").
+
+Outputs (artifacts/):
+  <kind>_<impl>_d<d>[_n<nsv>][_b<batch>].hlo.txt   one per shape bucket
+  manifest.txt   one line per artifact:
+      kind=approx impl=jnp d=128 nsv=0 batch=256 outputs=2 file=...
+The Rust runtime (rust/src/runtime/) reads the manifest, picks the
+smallest bucket that fits a request, and pads inputs per the padding
+contract in kernels/ref.py.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape buckets. d buckets cover the five dataset profiles in
+# data/synth.rs (22->32, 100/123->128, 780->1024, 2000->2048); nsv buckets
+# cover trained model sizes after padding with zero-coef SVs.
+APPROX_DS = [32, 64, 128, 256, 512, 1024, 2048]
+EXACT_SHAPES = [  # (d, nsv)
+    (32, 1024), (32, 4096), (32, 8192),
+    (64, 1024), (64, 4096),
+    (128, 1024), (128, 4096), (128, 8192),
+    (256, 1024), (256, 4096),
+    (512, 1024), (512, 4096),
+    (1024, 1024), (1024, 4096),
+    (2048, 1024), (2048, 4096),
+]
+BUILD_SHAPES = EXACT_SHAPES
+BATCH = 256
+BULK_BATCH = 2048
+# Pallas (interpret) variants: structural/correctness artifacts; jnp
+# variants are the performance artifacts (DESIGN.md section 10).
+PALLAS_APPROX_DS = [32, 128]
+PALLAS_EXACT_SHAPES = [(32, 1024), (128, 1024)]
+PALLAS_BUILD_SHAPES = [(32, 1024), (128, 1024)]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir, manifest, kind, impl, d, nsv, batch, lowered, outputs):
+    name = f"{kind}_{impl}_d{d}"
+    if nsv:
+        name += f"_n{nsv}"
+    if batch:
+        name += f"_b{batch}"
+    fname = name + ".hlo.txt"
+    t0 = time.time()
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(
+        f"kind={kind} impl={impl} d={d} nsv={nsv} batch={batch} "
+        f"outputs={outputs} file={fname}"
+    )
+    print(f"  {fname:44s} {len(text)/1024:9.1f} KiB  {time.time()-t0:5.2f}s",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument("--skip-pallas", action="store_true",
+                    help="emit only the jnp performance artifacts")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    t0 = time.time()
+
+    print("== approx predict (jnp) ==", flush=True)
+    for d in APPROX_DS:
+        emit(out_dir, manifest, "approx", "jnp", d, 0, BATCH,
+             model.lower_predict_approx(d, BATCH, "jnp"), 2)
+        # Bulk bucket: amortizes per-execute overhead for offline
+        # prediction (EXPERIMENTS.md §Perf L3-P3).
+        emit(out_dir, manifest, "approx", "jnp", d, 0, BULK_BATCH,
+             model.lower_predict_approx(d, BULK_BATCH, "jnp"), 2)
+    print("== exact predict (jnp) ==", flush=True)
+    for d, n in EXACT_SHAPES:
+        emit(out_dir, manifest, "exact", "jnp", d, n, BATCH,
+             model.lower_predict_exact(d, n, BATCH, "jnp"), 1)
+    print("== build (jnp) ==", flush=True)
+    for d, n in BUILD_SHAPES:
+        emit(out_dir, manifest, "build", "jnp", d, n, 0,
+             model.lower_build(d, n, "jnp"), 3)
+
+    if not args.skip_pallas:
+        print("== approx predict (pallas, interpret) ==", flush=True)
+        for d in PALLAS_APPROX_DS:
+            emit(out_dir, manifest, "approx", "pallas", d, 0, BATCH,
+                 model.lower_predict_approx(d, BATCH, "pallas"), 2)
+        print("== exact predict (pallas, interpret) ==", flush=True)
+        for d, n in PALLAS_EXACT_SHAPES:
+            emit(out_dir, manifest, "exact", "pallas", d, n, BATCH,
+                 model.lower_predict_exact(d, n, BATCH, "pallas"), 1)
+        print("== build (pallas, interpret) ==", flush=True)
+        for d, n in PALLAS_BUILD_SHAPES:
+            emit(out_dir, manifest, "build", "pallas", d, n, 0,
+                 model.lower_build(d, n, "pallas"), 3)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest.txt "
+          f"in {time.time()-t0:.1f}s -> {out_dir}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

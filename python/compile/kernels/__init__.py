@@ -1,0 +1,7 @@
+"""Pallas kernels (L1) + pure-jnp oracles for the approxrbf compute stack."""
+
+from .approx_predict import approx_predict
+from .builder import build_approx
+from .rbf_exact import rbf_exact
+
+__all__ = ["approx_predict", "build_approx", "rbf_exact"]

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: batched approximated RBF-SVM decision function.
+
+Computes, for a tile of test instances Z (B_t x d):
+
+    fhat(z) = exp(-gamma ||z||^2) * (c + v.z + z^T M z) + b        (Eq. 3.8)
+
+and the squared norms ||z||^2 (free by-product consumed by the run-time
+validity check of Eq. 3.11 — the Rust router compares them against
+1/(16 gamma^2 ||x_M||^2)).
+
+TPU mapping (DESIGN.md section 7): the grid iterates over batch tiles; M
+stays resident in VMEM (d <= 1024; for d = 2048 the XLA path is used and M
+is panel-tiled by the compiler). z^T M z is evaluated as an MXU matmul
+(Z M) followed by a VPU row-reduction against Z — NOT a per-element loop —
+so the kernel is matmul-shaped exactly like the paper's BLAS formulation.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that the Rust runtime
+(xla crate, PJRT CPU) executes. Real-TPU characteristics are estimated
+analytically in DESIGN.md section 8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _approx_kernel(z_ref, m_ref, v_ref, s_ref, dec_ref, zn_ref):
+    """One batch tile. s_ref packs the scalars [c, gamma, b] as (3,)."""
+    z = z_ref[...].astype(jnp.float32)                    # (bt, d)
+    m = m_ref[...].astype(jnp.float32)                    # (d, d)
+    v = v_ref[...].astype(jnp.float32)                    # (d,)
+    c = s_ref[0]
+    gamma = s_ref[1]
+    b = s_ref[2]
+
+    zn = jnp.sum(z * z, axis=1)                           # (bt,)  VPU
+    zm = jnp.dot(z, m, preferred_element_type=jnp.float32)  # (bt, d) MXU
+    quad = jnp.sum(zm * z, axis=1)                        # (bt,)  VPU
+    lin = jnp.dot(z, v, preferred_element_type=jnp.float32)  # (bt,)
+    dec_ref[...] = jnp.exp(-gamma * zn) * (c + lin + quad) + b
+    zn_ref[...] = zn
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def approx_predict(Z, M, v, scalars, *, block_b=128):
+    """Approximated decision values for a batch.
+
+    Args:
+      Z: (B, d) f32 test instances; B must be a multiple of block_b
+         (the Rust caller pads the final batch tile with zero rows).
+      M: (d, d) f32 Hessian-derived matrix X^T D X.
+      v: (d,)   f32 gradient-derived vector X^T w.
+      scalars: (3,) f32 = [c, gamma, b].
+      block_b: batch tile size (grid = B // block_b).
+
+    Returns:
+      (decision (B,), znorm2 (B,)) both f32.
+    """
+    B, d = Z.shape
+    bt = min(block_b, B)
+    assert B % bt == 0, f"batch {B} not a multiple of tile {bt}"
+    grid = (B // bt,)
+    return pl.pallas_call(
+        _approx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ],
+        interpret=True,
+    )(Z, M, v, scalars)

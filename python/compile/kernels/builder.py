@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: build the approximate model (c, v, M) from SVs.
+
+This is the paper's "approximation speed" stage (Table 2, t_approx):
+
+    e_i = exp(-gamma ||x_i||^2)
+    c   = sum_i coef_i e_i
+    v   = X^T w,            w_i = 2 gamma   coef_i e_i      (gradient)
+    M   = X^T diag(D) X,    D_i = 2 gamma^2 coef_i e_i      (Hessian/2)
+
+dominated by the rank-n_SV symmetric update M = X^T D X — exactly the
+X D X^T of Eq. (3.8) with our row-major X. The grid iterates over SV
+panels (the only axis that grows) and accumulates all three outputs in
+place; d x d stays resident, mirroring a K-blocked SYRK.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _builder_kernel(x_ref, coef_ref, g_ref, c_ref, v_ref, m_ref):
+    s = pl.program_id(0)
+    gamma = g_ref[0]
+    x = x_ref[...].astype(jnp.float32)                     # (st, d)
+    coef = coef_ref[...].astype(jnp.float32)               # (st,)
+
+    xn = jnp.sum(x * x, axis=1)                            # (st,)
+    ce = coef * jnp.exp(-gamma * xn)                       # (st,)
+    w = 2.0 * gamma * ce
+    dd = 2.0 * gamma * gamma * ce
+
+    @pl.when(s == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        v_ref[...] = jnp.zeros_like(v_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    c_ref[...] += jnp.sum(ce)[None]
+    v_ref[...] += jnp.dot(x.T, w, preferred_element_type=jnp.float32)
+    m_ref[...] += jnp.dot(
+        x.T * dd[None, :], x, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def build_approx(X, coef, gamma, *, block_s=256):
+    """Approximate-model parameters from support vectors.
+
+    Args:
+      X: (n, d) f32 support vectors (padded SVs must carry coef = 0).
+      coef: (n,) f32 alpha_i * y_i.
+      gamma: (1,) f32 RBF parameter.
+
+    Returns: (c (1,), v (d,), M (d, d)) all f32.
+    """
+    n, d = X.shape
+    st = min(block_s, n)
+    assert n % st == 0
+    grid = (n // st,)
+    return pl.pallas_call(
+        _builder_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((st, d), lambda s: (s, 0)),
+            pl.BlockSpec((st,), lambda s: (s,)),
+            pl.BlockSpec((1,), lambda s: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda s: (0,)),
+            pl.BlockSpec((d,), lambda s: (0,)),
+            pl.BlockSpec((d, d), lambda s: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+        ],
+        interpret=True,
+    )(X, coef, gamma)

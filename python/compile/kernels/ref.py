@@ -1,0 +1,76 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. pytest (python/tests/) asserts allclose between the two
+over hypothesis-generated shapes/values; the Rust integration tests assert
+the PJRT-executed artifacts against the same math re-implemented in Rust.
+
+Conventions (match the paper, Section 3, with X stored row-major):
+  Z    : (B, d)  test instances, one per row
+  X    : (n, d)  support vectors, one per row  (paper's X is d x n_SV)
+  coef : (n,)    alpha_i * y_i
+  gamma, b : scalars (passed as (1,) f32 so one AOT artifact serves all)
+
+Decision function (Eq. 3.2/3.3):
+  f(z)    = sum_i coef_i * exp(-gamma * ||x_i - z||^2) + b
+Approximation (Eq. 3.7/3.8):
+  fhat(z) = exp(-gamma*||z||^2) * (c + v.z + z^T M z) + b
+with
+  e_i  = exp(-gamma*||x_i||^2)
+  c    = sum_i coef_i * e_i
+  v    = X^T w,              w_i = 2 gamma   * coef_i * e_i
+  M    = X^T diag(D) X,      D_i = 2 gamma^2 * coef_i * e_i
+"""
+
+import jax.numpy as jnp
+
+
+def rbf_exact_ref(Z, X, coef, gamma, b):
+    """Exact RBF decision values, O(B * n * d). Returns (B,)."""
+    # ||x_i - z||^2 = ||z||^2 + ||x_i||^2 - 2 z.x_i, computed batched.
+    zn = jnp.sum(Z * Z, axis=1, keepdims=True)          # (B, 1)
+    xn = jnp.sum(X * X, axis=1, keepdims=True).T        # (1, n)
+    cross = Z @ X.T                                     # (B, n)
+    d2 = zn + xn - 2.0 * cross
+    K = jnp.exp(-gamma * d2)                            # (B, n)
+    return K @ coef + b
+
+
+def build_ref(X, coef, gamma):
+    """Approximate-model parameters (c, v, M) from SVs. Eq. (3.8).
+
+    Returns (c: (1,), v: (d,), M: (d, d)).
+    """
+    xn = jnp.sum(X * X, axis=1)                         # (n,)
+    e = jnp.exp(-gamma * xn)                            # (n,)
+    ce = coef * e                                       # (n,)
+    c = jnp.sum(ce)[None]                               # (1,)
+    w = 2.0 * gamma * ce                                # (n,)
+    D = 2.0 * gamma * gamma * ce                        # (n,)
+    v = X.T @ w                                         # (d,)
+    M = (X * D[:, None]).T @ X                          # (d, d)
+    return c, v, M
+
+
+def approx_predict_ref(Z, M, v, c, gamma, b):
+    """Approximated decision values, O(B * d^2). Eq. (3.8).
+
+    Returns (decision: (B,), znorm2: (B,)). The squared norms are a free
+    by-product used by the run-time bound check (Eq. 3.11).
+    """
+    zn = jnp.sum(Z * Z, axis=1)                         # (B,)
+    zm = Z @ M                                          # (B, d)
+    quad = jnp.sum(zm * Z, axis=1)                      # (B,)
+    lin = Z @ v                                         # (B,)
+    dec = jnp.exp(-gamma * zn) * (c + lin + quad) + b
+    return dec, zn
+
+
+def maclaurin2_ref(x):
+    """Second-order Maclaurin approximation of exp(x) (Appendix A)."""
+    return 1.0 + x + 0.5 * x * x
+
+
+def maclaurin2_rel_error_ref(x):
+    """|e^x - (1 + x + x^2/2)| / e^x — the curve of Figure 1."""
+    return jnp.abs(jnp.exp(x) - maclaurin2_ref(x)) / jnp.exp(x)

@@ -1,0 +1,86 @@
+"""L2: JAX compute-graph definitions wrapping the L1 Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text for the Rust runtime.
+Each exists in two implementations:
+
+  impl="pallas" — calls the Pallas kernels (interpret=True). These lower
+      to scan/while-heavy HLO: correct everywhere, and the faithful
+      expression of the paper's tiling structure, but slow on CPU PJRT.
+  impl="jnp"    — the same math as pure jnp ops. XLA fuses these into a
+      handful of loops; this is the implementation the performance
+      artifacts use (DESIGN.md section 10 documents this honestly).
+
+Both implementations are asserted equal in python/tests/ and again from
+Rust (runtime parity tests), so swapping impls never changes numerics
+beyond f32 rounding.
+
+Signature conventions (fixed shapes; the Rust caller pads — see
+kernels/ref.py for the padding contract):
+  predict_approx(Z(B,d), M(d,d), v(d,), s(3,)=[c,gamma,b]) -> (dec(B,), zn(B,))
+  predict_exact (Z(B,d), X(n,d), coef(n,), s(2,)=[gamma,b]) -> (dec(B,),)
+  build         (X(n,d), coef(n,), g(1,)=[gamma])          -> (c(1,), v(d,), M(d,d))
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import approx_predict, build_approx, rbf_exact
+from .kernels import ref
+
+
+def predict_approx_fn(impl="jnp"):
+    """Approximated decision function (the paper's O(d^2) hot path)."""
+    if impl == "pallas":
+        def fn(Z, M, v, s):
+            dec, zn = approx_predict(Z, M, v, s)
+            return (dec, zn)
+    else:
+        def fn(Z, M, v, s):
+            dec, zn = ref.approx_predict_ref(Z, M, v, s[0], s[1], s[2])
+            return (dec, zn)
+    return fn
+
+
+def predict_exact_fn(impl="jnp"):
+    """Exact RBF decision function (the paper's O(n_SV d) baseline)."""
+    if impl == "pallas":
+        def fn(Z, X, coef, s):
+            return (rbf_exact(Z, X, coef, s),)
+    else:
+        def fn(Z, X, coef, s):
+            return (ref.rbf_exact_ref(Z, X, coef, s[0], s[1]),)
+    return fn
+
+
+def build_fn(impl="jnp"):
+    """Model approximation: SVs -> (c, v, M) (the paper's t_approx stage)."""
+    if impl == "pallas":
+        def fn(X, coef, g):
+            return build_approx(X, coef, g)
+    else:
+        def fn(X, coef, g):
+            return ref.build_ref(X, coef, g[0])
+    return fn
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_predict_approx(d, batch, impl="jnp"):
+    fn = predict_approx_fn(impl)
+    return jax.jit(fn).lower(
+        spec((batch, d)), spec((d, d)), spec((d,)), spec((3,))
+    )
+
+
+def lower_predict_exact(d, nsv, batch, impl="jnp"):
+    fn = predict_exact_fn(impl)
+    return jax.jit(fn).lower(
+        spec((batch, d)), spec((nsv, d)), spec((nsv,)), spec((2,))
+    )
+
+
+def lower_build(d, nsv, impl="jnp"):
+    fn = build_fn(impl)
+    return jax.jit(fn).lower(spec((nsv, d)), spec((nsv,)), spec((1,)))

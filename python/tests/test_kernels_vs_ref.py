@@ -1,0 +1,127 @@
+"""Core L1 correctness signal: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes-ranges; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import approx_predict, build_approx, rbf_exact
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def make_case(seed, B, d, n, scale, gamma):
+    rng = np.random.default_rng(seed)
+    Z = (rng.normal(size=(B, d)) * scale).astype(np.float32)
+    X = (rng.normal(size=(n, d)) * scale).astype(np.float32)
+    coef = rng.normal(size=(n,)).astype(np.float32)
+    b = float(rng.normal())
+    return jnp.array(Z), jnp.array(X), jnp.array(coef), gamma, b
+
+
+# Dims chosen to exercise tile-boundary behaviour: exact multiples of the
+# default tiles (128 batch / 256 SV blocks) and single-tile cases.
+SHAPES = st.sampled_from([
+    (128, 8, 256), (256, 16, 256), (128, 32, 512), (256, 5, 1024),
+    (128, 64, 256), (256, 128, 512),
+])
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shapes=SHAPES,
+       scale=st.floats(0.05, 1.0), gamma=st.floats(1e-4, 0.5))
+def test_rbf_exact_matches_ref(seed, shapes, scale, gamma):
+    B, d, n = shapes
+    Z, X, coef, gamma, b = make_case(seed, B, d, n, scale, gamma)
+    got = rbf_exact(Z, X, coef, jnp.array([gamma, b], dtype=jnp.float32))
+    want = ref.rbf_exact_ref(Z, X, coef, gamma, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shapes=SHAPES,
+       scale=st.floats(0.05, 1.0), gamma=st.floats(1e-4, 0.5))
+def test_builder_matches_ref(seed, shapes, scale, gamma):
+    _, d, n = shapes
+    _, X, coef, gamma, _ = make_case(seed, 1, d, n, scale, gamma)
+    c, v, M = build_approx(X, coef, jnp.array([gamma], dtype=jnp.float32))
+    cr, vr, Mr = ref.build_ref(X, coef, gamma)
+    np.testing.assert_allclose(c, cr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(v, vr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(M, Mr, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shapes=SHAPES,
+       scale=st.floats(0.05, 1.0), gamma=st.floats(1e-4, 0.5))
+def test_approx_predict_matches_ref(seed, shapes, scale, gamma):
+    B, d, n = shapes
+    Z, X, coef, gamma, b = make_case(seed, B, d, n, scale, gamma)
+    cr, vr, Mr = ref.build_ref(X, coef, gamma)
+    s = jnp.array([float(cr[0]), gamma, b], dtype=jnp.float32)
+    dec, zn = approx_predict(Z, Mr, vr, s)
+    dref, znref = ref.approx_predict_ref(Z, Mr, vr, cr[0], gamma, b)
+    np.testing.assert_allclose(dec, dref, rtol=RTOL, atol=1e-4)
+    np.testing.assert_allclose(zn, znref, rtol=RTOL, atol=ATOL)
+
+
+def test_padded_svs_are_noops():
+    """Padding contract: zero-coef SVs must not change any output."""
+    Z, X, coef, gamma, b = make_case(7, 128, 16, 256, 0.3, 0.05)
+    Xp = jnp.concatenate([X, jnp.ones((256, 16), jnp.float32) * 9.0])
+    cp = jnp.concatenate([coef, jnp.zeros((256,), jnp.float32)])
+    got = rbf_exact(Z, Xp, cp, jnp.array([gamma, b], dtype=jnp.float32))
+    want = ref.rbf_exact_ref(Z, X, coef, gamma, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-4)
+    c1, v1, M1 = build_approx(Xp, cp, jnp.array([gamma], jnp.float32))
+    c0, v0, M0 = ref.build_ref(X, coef, gamma)
+    np.testing.assert_allclose(c1, c0, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(v1, v0, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(M1, M0, rtol=RTOL, atol=ATOL)
+
+
+def test_padded_batch_rows_are_isolated():
+    """Zero-padded batch rows produce rows that don't affect real rows."""
+    Z, X, coef, gamma, b = make_case(8, 128, 16, 256, 0.3, 0.05)
+    Zp = jnp.concatenate([Z, jnp.zeros((128, 16), jnp.float32)])
+    cr, vr, Mr = ref.build_ref(X, coef, gamma)
+    s = jnp.array([float(cr[0]), gamma, b], dtype=jnp.float32)
+    dec_p, _ = approx_predict(Zp, Mr, vr, s)
+    dec, _ = approx_predict(Z, Mr, vr, s)
+    np.testing.assert_allclose(dec_p[:128], dec, rtol=RTOL, atol=ATOL)
+
+
+def test_approximation_error_bound_eq_a2():
+    """Appendix A / Eq. (A.2): rel err < 3.05% for |x| < 0.5."""
+    x = jnp.linspace(-0.5, 0.5, 10001)
+    err = ref.maclaurin2_rel_error_ref(x)
+    assert float(jnp.max(err)) < 0.0305
+
+
+def test_approx_tracks_exact_within_bound():
+    """End-to-end: when Eq. (3.11) holds, fhat is term-wise within ~3%.
+
+    Build a case that respects the bound and check decision values agree
+    to a few percent of the decision scale.
+    """
+    rng = np.random.default_rng(9)
+    B, d, n = 128, 16, 512
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=1, keepdims=True)       # ||x_i|| = 1
+    Z = rng.normal(size=(B, d)).astype(np.float32)
+    Z /= np.linalg.norm(Z, axis=1, keepdims=True)       # ||z|| = 1
+    coef = rng.normal(size=(n,)).astype(np.float32)
+    gamma = 0.2                                          # < 1/4 = gamma_max
+    b = 0.1
+    Z, X, coef = jnp.array(Z), jnp.array(X), jnp.array(coef)
+    cr, vr, Mr = ref.build_ref(X, coef, gamma)
+    s = jnp.array([float(cr[0]), gamma, b], dtype=jnp.float32)
+    dec, _ = approx_predict(Z, Mr, vr, s)
+    exact = ref.rbf_exact_ref(Z, X, coef, gamma, b)
+    scale = float(jnp.max(jnp.abs(exact - b))) + 1e-9
+    rel = float(jnp.max(jnp.abs(dec - exact))) / scale
+    assert rel < 0.05, rel

@@ -1,0 +1,77 @@
+//! Micro-benchmarks of the two hot kernels (mini-criterion harness,
+//! `harness = false`): the batched quadratic form (prediction) and the
+//! weighted SYRK (approximation build), across backends and sizes.
+//!
+//! Run: `cargo bench --bench hotpath_bench`
+
+use approxrbf::linalg::{quadform, syrk, Mat};
+use approxrbf::util::bench::{BenchConfig, Bencher};
+use approxrbf::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut bench = Bencher::new(BenchConfig {
+        warmup: 3,
+        samples: 20,
+        max_seconds: 10.0,
+    });
+    println!("# hot-path micro-benchmarks\n");
+
+    for d in [32usize, 128, 512] {
+        let mut m = Mat::zeros(d, d);
+        for a in 0..d {
+            for b in a..d {
+                let v = rng.normal() as f32;
+                *m.at_mut(a, b) = v;
+                *m.at_mut(b, a) = v;
+            }
+        }
+        let z = Mat::from_vec(
+            256,
+            d,
+            (0..256 * d).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap();
+        let s = bench.run(&format!("quadform_scalar d={d} batch=256"), || {
+            for r in 0..z.rows() {
+                std::hint::black_box(quadform::quadform_scalar(&m, z.row(r)));
+            }
+        });
+        println!("{:<36} {}", s.name, s.human());
+        let s = bench.run(&format!("quadform_simd   d={d} batch=256"), || {
+            for r in 0..z.rows() {
+                std::hint::black_box(quadform::quadform_symmetric(
+                    &m,
+                    z.row(r),
+                ));
+            }
+        });
+        println!("{:<36} {}", s.name, s.human());
+        let s = bench.run(&format!("quadform_batch  d={d} batch=256"), || {
+            std::hint::black_box(quadform::quadform_batch(&m, &z));
+        });
+        println!("{:<36} {}", s.name, s.human());
+    }
+
+    println!();
+    for (n, d) in [(2048usize, 64usize), (4096, 128), (2048, 512)] {
+        let x = Mat::from_vec(
+            n,
+            d,
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap();
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let s = bench.run(&format!("syrk_loops   n={n} d={d}"), || {
+            std::hint::black_box(syrk::syrk_weighted_loops(&x, &w));
+        });
+        println!("{:<36} {}", s.name, s.human());
+        let s = bench.run(&format!("syrk_blocked n={n} d={d}"), || {
+            std::hint::black_box(syrk::syrk_weighted_blocked(&x, &w));
+        });
+        println!("{:<36} {}", s.name, s.human());
+    }
+
+    bench.write_json("results/hotpath_bench.json").ok();
+    println!("\n(JSON: results/hotpath_bench.json)");
+}

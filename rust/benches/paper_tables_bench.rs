@@ -1,0 +1,38 @@
+//! `cargo bench` entry that regenerates the paper's evaluation at quick
+//! scale (the full-scale run is `approxrbf bench all --scale full`,
+//! recorded in EXPERIMENTS.md). One bench target per paper artifact so
+//! `cargo bench` exercises every table and figure end-to-end.
+//!
+//! Run: `cargo bench --bench paper_tables_bench`
+
+use approxrbf::benchsuite::{self, BenchContext, Scale};
+
+fn main() {
+    let ctx = BenchContext::new(Scale::Quick, 42);
+    let artifacts = std::path::Path::new("artifacts");
+    println!("(quick scale; full tables: `approxrbf bench all --scale full`)\n");
+    match benchsuite::fig1::run() {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("fig1 failed: {e}"),
+    }
+    match benchsuite::table1::run(&ctx) {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("table1 failed: {e}"),
+    }
+    match benchsuite::table2::run(&ctx, Some(artifacts)) {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("table2 failed: {e}"),
+    }
+    match benchsuite::table3::run(&ctx) {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("table3 failed: {e}"),
+    }
+    match benchsuite::ablations::run(&ctx) {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("ablations failed: {e}"),
+    }
+    match benchsuite::ann::run(&ctx) {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("ann comparison failed: {e}"),
+    }
+}

@@ -1,0 +1,99 @@
+//! Coordinator throughput benchmark: requests/second through the full
+//! L3 path under each routing policy and executor (native vs XLA when
+//! artifacts are present).
+//!
+//! Run: `cargo bench --bench serving_bench`
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::coordinator::{
+    Coordinator, CoordinatorConfig, ExecSpec, RoutePolicy,
+};
+use approxrbf::data::{SynthProfile, UnitNormScaler};
+use approxrbf::linalg::MathBackend;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::Kernel;
+
+const REQUESTS: usize = 10_000;
+
+fn main() {
+    let (raw_train, raw_test) =
+        SynthProfile::ControlLike.generate(11, 3000, 2000);
+    let train = UnitNormScaler.apply_dataset(&raw_train);
+    let test = UnitNormScaler.apply_dataset(&raw_test);
+    let gamma = gamma_max_for_data(&train) * 0.8;
+    let (model, stats) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    println!(
+        "# serving throughput (n_sv={}, d={}, {} requests)\n",
+        stats.n_sv,
+        train.dim(),
+        REQUESTS
+    );
+
+    let mut execs: Vec<(&str, ExecSpec)> =
+        vec![("native", ExecSpec::Native(MathBackend::Blocked))];
+    if Path::new("artifacts/manifest.txt").exists() {
+        execs.push((
+            "xla",
+            ExecSpec::Xla { artifacts_dir: "artifacts".into() },
+        ));
+    } else {
+        eprintln!("(artifacts/ missing: skipping XLA executor rows)");
+    }
+
+    for (exec_name, exec) in execs {
+        for policy in [
+            RoutePolicy::AlwaysExact,
+            RoutePolicy::AlwaysApprox,
+            RoutePolicy::Hybrid,
+        ] {
+            let coord = Coordinator::start(
+                model.clone(),
+                am.clone(),
+                CoordinatorConfig {
+                    policy,
+                    exec: exec.clone(),
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            // Warm (compiles XLA executables on first batch).
+            let _ = coord
+                .predict_all(&test.x.rows_slice(0, 64))
+                .unwrap();
+            let t0 = Instant::now();
+            let mut submitted = 0usize;
+            let mut received = 0usize;
+            while received < REQUESTS {
+                if submitted < REQUESTS {
+                    coord
+                        .submit(test.x.row(submitted % test.len()).to_vec())
+                        .unwrap();
+                    submitted += 1;
+                    while coord.recv(Duration::from_micros(0)).is_some() {
+                        received += 1;
+                    }
+                } else if coord.recv(Duration::from_millis(100)).is_some() {
+                    received += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let m = coord.metrics();
+            println!(
+                "exec={exec_name:<7} policy={:<7} {:>9.0} req/s   \
+                 mean batch {:>6.1}",
+                policy.name(),
+                REQUESTS as f64 / wall,
+                m.mean_batch_size
+            );
+            coord.shutdown().unwrap();
+        }
+    }
+}

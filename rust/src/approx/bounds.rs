@@ -1,0 +1,167 @@
+//! Validity bounds (paper §3.1).
+//!
+//! Term-wise accuracy needs `|2γ x_iᵀz| < ½` (Eq. 3.9). Cauchy–Schwarz
+//! turns that into the checkable `‖x_M‖²‖z‖² < 1/(16γ²)` (Eq. 3.11),
+//! giving (a) a pre-training cap `γ_MAX` from data norms and (b) a
+//! zero-cost per-instance run-time check (‖z‖² is computed anyway).
+
+use crate::data::Dataset;
+
+/// Pre-training γ cap for a dataset (paper: "report an upper bound for γ
+/// for a given data set prior to training"): both the future SVs and
+/// the future test points are bounded by the max data norm, so
+/// `γ_MAX = 1 / (4 · max‖x‖²)`. Slightly over-conservative because the
+/// max-norm instance need not become a support vector (§3.1).
+pub fn gamma_max_for_data(ds: &Dataset) -> f32 {
+    let m = ds.max_norm_sq();
+    if m <= 0.0 {
+        f32::INFINITY
+    } else {
+        1.0 / (4.0 * m)
+    }
+}
+
+/// γ cap given a trained model and an expected max test-instance norm:
+/// `γ_MAX = 1/(4‖x_M‖‖z‖_max)` (Eq. 3.11 solved for γ).
+pub fn gamma_max_for_model(max_sv_norm_sq: f32, max_z_norm_sq: f32) -> f32 {
+    let prod = (max_sv_norm_sq * max_z_norm_sq).sqrt();
+    if prod <= 0.0 {
+        f32::INFINITY
+    } else {
+        1.0 / (4.0 * prod)
+    }
+}
+
+/// Per-instance run-time check (Eq. 3.11): valid iff
+/// `zn_sq < 1/(16 γ² ‖x_M‖²)`.
+#[inline]
+pub fn instance_in_bound(zn_sq: f32, znorm_sq_budget: f32) -> bool {
+    zn_sq < znorm_sq_budget
+}
+
+/// Summary of bound adherence over a batch / dataset (drives Table 1's
+/// interpretation and the A2 routing ablation).
+#[derive(Clone, Debug)]
+pub struct BoundReport {
+    pub gamma: f32,
+    pub gamma_max: f32,
+    /// γ/γ_MAX — >1 means guarantees are abandoned (paper §4.2).
+    pub gamma_ratio: f32,
+    pub n_total: usize,
+    pub n_in_bound: usize,
+}
+
+impl BoundReport {
+    /// Evaluate bound adherence of every instance in `ds` against a
+    /// model's stored ‖x_M‖² and γ.
+    pub fn evaluate(
+        ds: &Dataset,
+        gamma: f32,
+        max_sv_norm_sq: f32,
+    ) -> BoundReport {
+        let budget = 1.0 / (16.0 * gamma * gamma * max_sv_norm_sq);
+        let norms = ds.x.row_norms_sq();
+        let n_in = norms.iter().filter(|&&n| instance_in_bound(n, budget)).count();
+        let gamma_max =
+            gamma_max_for_model(max_sv_norm_sq, norms.iter().copied().fold(0.0, f32::max));
+        BoundReport {
+            gamma,
+            gamma_max,
+            gamma_ratio: gamma / gamma_max,
+            n_total: ds.len(),
+            n_in_bound: n_in,
+        }
+    }
+
+    pub fn fraction_in_bound(&self) -> f64 {
+        self.n_in_bound as f64 / self.n_total.max(1) as f64
+    }
+
+    /// All instances guaranteed term-wise ≤3.05% relative error.
+    pub fn fully_valid(&self) -> bool {
+        self.n_in_bound == self.n_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+    use crate::data::synth;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn gamma_max_formula() {
+        let ds = Dataset::new(
+            Mat::from_vec(2, 2, vec![3.0, 4.0, 0.0, 1.0]).unwrap(),
+            vec![1.0, -1.0],
+        )
+        .unwrap();
+        // max norm² = 25 ⇒ γ_max = 1/100.
+        assert!((gamma_max_for_data(&ds) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn gamma_max_consistent_with_budget() {
+        // At γ = γ_max exactly, the worst instance sits on the boundary.
+        let max_sv = 2.0f32;
+        let max_z = 3.0f32;
+        let gmax = gamma_max_for_model(max_sv, max_z);
+        let budget = 1.0 / (16.0 * gmax * gmax * max_sv);
+        assert!((budget - max_z).abs() < 1e-4);
+    }
+
+    #[test]
+    fn unit_norm_data_gamma_max_quarter() {
+        let ds = synth::two_gaussians(51, 100, 5, 1.0);
+        let scaled = crate::data::UnitNormScaler.apply_dataset(&ds);
+        let g = gamma_max_for_data(&scaled);
+        assert!((g - 0.25).abs() < 1e-3, "g={g}");
+    }
+
+    #[test]
+    fn report_counts() {
+        let ds = Dataset::new(
+            Mat::from_vec(3, 1, vec![0.1, 0.5, 10.0]).unwrap(),
+            vec![1.0, 1.0, -1.0],
+        )
+        .unwrap();
+        // γ=0.5, ‖x_M‖²=1 ⇒ budget = 1/(16·0.25·1) = 0.25.
+        let r = BoundReport::evaluate(&ds, 0.5, 1.0);
+        // norms² = [0.01, 0.25, 100] ⇒ only the first is < 0.25.
+        assert_eq!(r.n_in_bound, 1);
+        assert!(!r.fully_valid());
+        assert!((r.fraction_in_bound() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn in_bound_instances_have_small_term_error() {
+        // The end-to-end guarantee: respecting Eq. 3.11 keeps each
+        // exponential's Maclaurin error under 3.05%.
+        prop_cases!("bound-implies-accuracy", 16, |rng| {
+            let d = 1 + rng.below(10);
+            let x: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32).collect();
+            let z: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32).collect();
+            let xn = crate::linalg::vecops::norm_sq(&x);
+            let zn = crate::linalg::vecops::norm_sq(&z);
+            let gamma = rng.range(1e-3, 1.0) as f32;
+            let budget = 1.0 / (16.0 * gamma * gamma * xn);
+            if instance_in_bound(zn, budget) {
+                let u = f64::from(
+                    2.0 * gamma * crate::linalg::vecops::dot(&x, &z),
+                );
+                assert!(u.abs() <= 0.5 + 1e-5);
+                let rel = crate::approx::maclaurin::rel_error(u);
+                assert!(rel < 0.0305, "rel={rel} u={u}");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_data_infinite_gamma() {
+        let ds = Dataset::new(Mat::zeros(2, 2), vec![1.0, -1.0]).unwrap();
+        assert!(gamma_max_for_data(&ds).is_infinite());
+    }
+}

@@ -1,0 +1,221 @@
+//! Build an [`ApproxModel`] from an exact RBF [`SvmModel`] (Eq. 3.8) —
+//! the paper's "approximation" stage whose cost is Table 2's t_approx:
+//!
+//! ```text
+//! e_i = exp(−γ‖x_i‖²)
+//! c   = Σ coef_i e_i
+//! v   = Xᵀ w,          w_i = 2γ  coef_i e_i
+//! M   = Xᵀ diag(D) X,  D_i = 2γ² coef_i e_i     (dominant: weighted SYRK)
+//! ```
+//!
+//! The `backend` argument reproduces the paper's LOOPS/BLAS/ATLAS axis
+//! for this stage; the XLA backend is driven by [`crate::runtime`].
+
+use crate::linalg::{syrk, vecops, MathBackend};
+use crate::svm::{Kernel, SvmModel};
+use crate::{approx::ApproxModel, Error, Result};
+
+/// Intermediate weights shared by all backends.
+pub struct BuilderWeights {
+    pub c: f32,
+    /// w_i = 2γ coef_i e_i.
+    pub w: Vec<f32>,
+    /// D_i = 2γ² coef_i e_i.
+    pub d: Vec<f32>,
+    pub max_sv_norm_sq: f32,
+}
+
+/// Compute (c, w, D, ‖x_M‖²) from the model — O(n_SV · d).
+pub fn builder_weights(model: &SvmModel, gamma: f32) -> BuilderWeights {
+    let mut c = 0.0f64;
+    let n = model.n_sv();
+    let mut w = Vec::with_capacity(n);
+    let mut d = Vec::with_capacity(n);
+    let mut max_norm = 0.0f32;
+    for i in 0..n {
+        let norm_sq = vecops::norm_sq(model.sv.row(i));
+        max_norm = max_norm.max(norm_sq);
+        let e = (-gamma * norm_sq).exp();
+        let ce = model.coef[i] * e;
+        c += f64::from(ce);
+        w.push(2.0 * gamma * ce);
+        d.push(2.0 * gamma * gamma * ce);
+    }
+    BuilderWeights { c: c as f32, w, d, max_sv_norm_sq: max_norm }
+}
+
+/// Build the approximate model. Fails on non-RBF kernels.
+pub fn build_approx_model(
+    model: &SvmModel,
+    backend: MathBackend,
+) -> Result<ApproxModel> {
+    let gamma = match model.kernel {
+        Kernel::Rbf { gamma } => gamma,
+        ref k => {
+            return Err(Error::InvalidArg(format!(
+                "approximation requires an RBF kernel, got {}",
+                k.name()
+            )))
+        }
+    };
+    let bw = builder_weights(model, gamma);
+    let (v, m) = match backend {
+        MathBackend::Loops => (
+            syrk::xt_w(&model.sv, &bw.w),
+            syrk::syrk_weighted_loops(&model.sv, &bw.d),
+        ),
+        MathBackend::Blocked => (
+            syrk::xt_w(&model.sv, &bw.w),
+            syrk::syrk_weighted_blocked(&model.sv, &bw.d),
+        ),
+        MathBackend::Xla => {
+            return Err(Error::InvalidArg(
+                "use runtime::Engine::build_approx for the XLA backend".into(),
+            ))
+        }
+    };
+    Ok(ApproxModel {
+        gamma,
+        b: model.b,
+        c: bw.c,
+        v,
+        m,
+        max_sv_norm_sq: bw.max_sv_norm_sq,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+    use crate::data::synth;
+    use crate::linalg::Mat;
+    use crate::svm::smo::{train_csvc, SmoParams};
+
+    /// Hand-built two-SV model for closed-form verification.
+    fn tiny_model(gamma: f32) -> SvmModel {
+        SvmModel::new(
+            Kernel::Rbf { gamma },
+            Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 2.0]).unwrap(),
+            vec![0.5, -0.25],
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn closed_form_two_svs() {
+        let gamma = 0.3f32;
+        let model = tiny_model(gamma);
+        let am = build_approx_model(&model, MathBackend::Loops).unwrap();
+        let e1 = (-gamma * 1.0f32).exp();
+        let e2 = (-gamma * 4.0f32).exp();
+        let c = 0.5 * e1 - 0.25 * e2;
+        assert!((am.c - c).abs() < 1e-6);
+        // v = 2γ (coef1 e1 x1 + coef2 e2 x2)
+        let v0 = 2.0 * gamma * 0.5 * e1 * 1.0;
+        let v1 = 2.0 * gamma * -0.25 * e2 * 2.0;
+        assert!((am.v[0] - v0).abs() < 1e-6);
+        assert!((am.v[1] - v1).abs() < 1e-6);
+        // M diag: 2γ² (coef1 e1 x1⊗x1 + coef2 e2 x2⊗x2)
+        let m00 = 2.0 * gamma * gamma * 0.5 * e1 * 1.0;
+        let m11 = 2.0 * gamma * gamma * -0.25 * e2 * 4.0;
+        assert!((am.m.at(0, 0) - m00).abs() < 1e-6);
+        assert!((am.m.at(1, 1) - m11).abs() < 1e-6);
+        assert_eq!(am.m.at(0, 1), 0.0);
+        assert_eq!(am.max_sv_norm_sq, 4.0);
+        assert_eq!(am.b, model.b);
+    }
+
+    #[test]
+    fn backends_agree() {
+        let ds = synth::two_gaussians(41, 200, 10, 1.2);
+        let (model, _) = train_csvc(
+            &ds,
+            Kernel::Rbf { gamma: 0.3 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let a = build_approx_model(&model, MathBackend::Loops).unwrap();
+        let b = build_approx_model(&model, MathBackend::Blocked).unwrap();
+        assert!(a.m.max_abs_diff(&b.m) < 1e-4 * (1.0 + a.m.fro_norm() as f32));
+        for (x, y) in a.v.iter().zip(&b.v) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        assert!((a.c - b.c).abs() < 1e-5);
+    }
+
+    #[test]
+    fn approx_tracks_exact_within_bound() {
+        // Construct a bound-respecting regime: unit-scaled data and a γ
+        // below γ_max = 1/(4‖x_M‖‖z‖_max). Then f̂ ≈ f to a few percent.
+        let ds = synth::two_gaussians(42, 300, 8, 2.0);
+        let scaled = crate::data::UnitNormScaler.apply_dataset(&ds);
+        let gamma = 0.2f32; // < 1/4 since all norms ≈ 1
+        let (model, _) = train_csvc(
+            &scaled,
+            Kernel::Rbf { gamma },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+        let mut max_rel = 0.0f32;
+        let mut scale = 0.0f32;
+        for r in 0..scaled.len() {
+            let exact = model.decision_one(scaled.x.row(r));
+            let (approx, zn) = am.decision_one(scaled.x.row(r));
+            assert!(zn <= am.znorm_sq_budget() * 1.01, "bound should hold");
+            max_rel = max_rel.max((exact - approx).abs());
+            scale = scale.max((exact - model.b).abs());
+        }
+        assert!(
+            max_rel < 0.05 * scale.max(0.1),
+            "max abs err {max_rel}, scale {scale}"
+        );
+    }
+
+    #[test]
+    fn non_rbf_rejected() {
+        let model = SvmModel::new(
+            Kernel::Linear,
+            Mat::zeros(1, 2),
+            vec![1.0],
+            0.0,
+        )
+        .unwrap();
+        assert!(build_approx_model(&model, MathBackend::Loops).is_err());
+        assert!(matches!(
+            build_approx_model(&tiny_model(0.1), MathBackend::Xla),
+            Err(Error::InvalidArg(_))
+        ));
+    }
+
+    #[test]
+    fn property_model_size_independent_of_nsv() {
+        // The headline claim: approx model size depends on d only.
+        prop_cases!("size-indep-nsv", 4, |rng| {
+            let d = 4 + rng.below(8);
+            let build = |n: usize, rng: &mut crate::util::Rng| {
+                let x = Mat::from_vec(
+                    n,
+                    d,
+                    (0..n * d).map(|_| rng.normal() as f32).collect(),
+                )
+                .unwrap();
+                let coef = (0..n).map(|_| rng.normal() as f32).collect();
+                let m = SvmModel::new(
+                    Kernel::Rbf { gamma: 0.1 },
+                    x,
+                    coef,
+                    0.0,
+                )
+                .unwrap();
+                build_approx_model(&m, MathBackend::Loops).unwrap()
+            };
+            let small = build(5, rng);
+            let large = build(200, rng);
+            assert_eq!(small.dim(), large.dim());
+            assert_eq!(small.m.rows(), large.m.rows());
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Error analysis between exact and approximated models: Table 1's
+//! "diff (%)" column (label disagreements), decision-value error
+//! distributions, and the per-term exponent histogram that explains
+//! *why* a configuration is or isn't within bounds.
+
+use crate::approx::ApproxModel;
+use crate::data::Dataset;
+use crate::linalg::MathBackend;
+use crate::svm::predict::{labels_from_decisions, ExactPredictor};
+use crate::svm::SvmModel;
+use crate::util::stats::{accuracy, label_diff_fraction, Summary};
+use crate::Result;
+
+/// Comparison of an exact model vs its approximation on a dataset.
+#[derive(Clone, Debug)]
+pub struct ErrorReport {
+    /// Accuracy of the exact model against ground truth.
+    pub exact_acc: f64,
+    /// Accuracy of the approximated model against ground truth.
+    pub approx_acc: f64,
+    /// Fraction of labels that differ between the two (Table 1 "diff").
+    pub label_diff: f64,
+    /// Summary of |f(z) − f̂(z)| over the dataset.
+    pub abs_err: Summary,
+    /// Fraction of instances satisfying the run-time bound (Eq. 3.11).
+    pub in_bound_fraction: f64,
+}
+
+/// Compare exact vs approximated decisions over `ds`.
+pub fn compare(
+    model: &SvmModel,
+    am: &ApproxModel,
+    ds: &Dataset,
+) -> Result<ErrorReport> {
+    let exact = ExactPredictor::new(model, MathBackend::Blocked)?
+        .decision_batch(&ds.x)?;
+    let (approx, norms) = am.decision_batch(&ds.x, MathBackend::Blocked)?;
+    let budget = am.znorm_sq_budget();
+    let n_in = norms.iter().filter(|&&n| n < budget).count();
+    let abs: Vec<f64> = exact
+        .iter()
+        .zip(&approx)
+        .map(|(&e, &a)| f64::from((e - a).abs()))
+        .collect();
+    Ok(ErrorReport {
+        exact_acc: accuracy(&labels_from_decisions(&exact), &ds.y),
+        approx_acc: accuracy(&labels_from_decisions(&approx), &ds.y),
+        label_diff: label_diff_fraction(&exact, &approx),
+        abs_err: Summary::from(&abs),
+        in_bound_fraction: n_in as f64 / ds.len().max(1) as f64,
+    })
+}
+
+/// Histogram of the per-term exponents `2γ x_iᵀ z` over a sample of
+/// (SV, instance) pairs — the quantity Eq. (3.9) bounds. Used by the
+/// diagnostics CLI to show how conservative Cauchy–Schwarz is (§4.2's
+/// d-dependence discussion).
+pub fn exponent_histogram(
+    model: &SvmModel,
+    ds: &Dataset,
+    max_pairs: usize,
+    rng: &mut crate::util::Rng,
+) -> Vec<f64> {
+    let gamma = model.kernel.gamma().unwrap_or(0.0);
+    let mut out = Vec::new();
+    let n_pairs = max_pairs.min(model.n_sv() * ds.len());
+    for _ in 0..n_pairs {
+        let i = rng.below(model.n_sv());
+        let r = rng.below(ds.len());
+        let u = 2.0
+            * gamma
+            * crate::linalg::vecops::dot(model.sv.row(i), ds.x.row(r));
+        out.push(f64::from(u));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::builder::build_approx_model;
+    use crate::data::synth;
+    use crate::svm::smo::{train_csvc, SmoParams};
+    use crate::svm::Kernel;
+
+    fn setup(gamma: f32) -> (SvmModel, ApproxModel, Dataset) {
+        let ds = synth::two_gaussians(61, 300, 8, 1.5);
+        let scaled = crate::data::UnitNormScaler.apply_dataset(&ds);
+        let (model, _) =
+            train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
+                .unwrap();
+        let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+        (model, am, scaled)
+    }
+
+    #[test]
+    fn in_bound_gamma_gives_tiny_diff() {
+        let (model, am, ds) = setup(0.2); // γ < γ_max = 0.25
+        let rep = compare(&model, &am, &ds).unwrap();
+        assert!(rep.in_bound_fraction > 0.999, "{}", rep.in_bound_fraction);
+        assert!(rep.label_diff < 0.01, "diff {}", rep.label_diff);
+        assert!((rep.exact_acc - rep.approx_acc).abs() < 0.02);
+    }
+
+    #[test]
+    fn oversized_gamma_grows_diff() {
+        let (m1, a1, d1) = setup(0.2);
+        let (m2, a2, d2) = setup(2.0); // 8× over γ_max
+        let r1 = compare(&m1, &a1, &d1).unwrap();
+        let r2 = compare(&m2, &a2, &d2).unwrap();
+        assert!(r2.in_bound_fraction < 0.5);
+        assert!(
+            r2.abs_err.mean > r1.abs_err.mean,
+            "{} vs {}",
+            r2.abs_err.mean,
+            r1.abs_err.mean
+        );
+    }
+
+    #[test]
+    fn exponent_histogram_within_cauchy_schwarz() {
+        let (model, _, ds) = setup(0.2);
+        let mut rng = crate::util::Rng::new(3);
+        let hist = exponent_histogram(&model, &ds, 500, &mut rng);
+        assert_eq!(hist.len(), 500);
+        // Cauchy–Schwarz cap: |2γ xᵀz| ≤ 2γ‖x‖‖z‖ ≤ 2·0.2·1·1.
+        for &u in &hist {
+            assert!(u.abs() <= 0.4 + 1e-4);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Second-order Maclaurin series of the exponential (Appendix A):
+//! `e^x ≈ 1 + x + x²/2`, with the paper's error constants: the relative
+//! error stays below 3.05% for |x| < ½ (Eq. A.2), which is what the
+//! validity bound Eq. (3.9)/(3.11) enforces term-wise.
+
+/// The paper's exponent interval half-width (Eq. 3.9: |2γxᵀz| < ½).
+pub const EXPONENT_BOUND: f64 = 0.5;
+
+/// Max relative error of the approximation on |x| ≤ ½ (Eq. A.2).
+pub const MAX_REL_ERROR_IN_BOUND: f64 = 0.0305;
+
+/// `1 + x + x²/2`.
+#[inline]
+pub fn maclaurin2(x: f64) -> f64 {
+    1.0 + x + 0.5 * x * x
+}
+
+/// Absolute relative error `|e^x − (1+x+x²/2)| / e^x` (Figure 1's y).
+#[inline]
+pub fn rel_error(x: f64) -> f64 {
+    (x.exp() - maclaurin2(x)).abs() / x.exp()
+}
+
+/// Sample the Figure 1 curve on `[lo, hi]` with `n` points.
+/// Returns (x, y) pairs.
+pub fn error_curve(lo: f64, hi: f64, n: usize) -> Vec<(f64, f64)> {
+    assert!(n >= 2);
+    (0..n)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+            (x, rel_error(x))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_at_zero() {
+        assert_eq!(maclaurin2(0.0), 1.0);
+        assert_eq!(rel_error(0.0), 0.0);
+    }
+
+    #[test]
+    fn eq_a2_bound_holds() {
+        // Paper Eq. (A.2): |x| < 1/2 ⇒ rel error < 0.0305.
+        let curve = error_curve(-EXPONENT_BOUND, EXPONENT_BOUND, 20001);
+        let max = curve.iter().map(|&(_, y)| y).fold(0.0, f64::max);
+        assert!(max < MAX_REL_ERROR_IN_BOUND, "max={max}");
+        // And the bound is tight-ish: the max is attained near x = −½.
+        assert!(max > 0.028, "bound should be near-tight, max={max}");
+    }
+
+    #[test]
+    fn error_explodes_outside_bound() {
+        // Figure 1's message: the error grows fast past |x| = ½.
+        assert!(rel_error(-2.0) > 0.5);
+        assert!(rel_error(2.0) > 0.3);
+        assert!(rel_error(-1.0) > rel_error(-0.5));
+    }
+
+    #[test]
+    fn error_monotone_away_from_zero() {
+        let mut prev = 0.0;
+        for i in 1..=40 {
+            let x = -2.0 * i as f64 / 40.0; // 0 → −2
+            let e = rel_error(x);
+            assert!(e >= prev, "x={x}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn curve_shape() {
+        let c = error_curve(-2.0, 2.0, 101);
+        assert_eq!(c.len(), 101);
+        assert_eq!(c[0].0, -2.0);
+        assert_eq!(c[100].0, 2.0);
+        // Negative side is worse than positive side (e^x in denominator).
+        assert!(c[0].1 > c[100].1);
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's contribution: second-order Maclaurin approximation of
+//! RBF-kernel decision functions (§3) with its validity bounds (§3.1),
+//! the builder that turns an exact [`crate::svm::SvmModel`] into an
+//! [`ApproxModel`] (Eq. 3.8), compressed-model I/O (Table 3), and
+//! error-analysis tooling (Table 1's diff column + Figure 1).
+
+pub mod bounds;
+pub mod builder;
+pub mod error_analysis;
+pub mod maclaurin;
+pub mod model;
+pub mod poly2_equiv;
+
+pub use bounds::{gamma_max_for_data, BoundReport};
+pub use builder::build_approx_model;
+pub use model::ApproxModel;

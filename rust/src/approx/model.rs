@@ -1,0 +1,311 @@
+//! The approximated model (Eq. 3.8): three scalars `(b, c, γ)`, a dense
+//! vector `v ∈ ℝᵈ`, a dense symmetric matrix `M ∈ ℝᵈˣᵈ` and the stored
+//! `‖x_M‖²` that powers the zero-cost run-time bound check (Eq. 3.11).
+//! Text I/O mirrors the exact model's text format so Table 3's size
+//! comparison is apples-to-apples.
+
+use std::path::Path;
+
+use crate::data::libsvm_format::fmt_f32;
+use crate::linalg::{quadform, vecops, Mat, MathBackend};
+use crate::{Error, Result};
+
+/// Approximated RBF-SVM model: f̂(z) = e^{−γ‖z‖²}(c + vᵀz + zᵀMz) + b.
+#[derive(Clone, Debug)]
+pub struct ApproxModel {
+    pub gamma: f32,
+    pub b: f32,
+    pub c: f32,
+    pub v: Vec<f32>,
+    pub m: Mat,
+    /// ‖x_M‖²: max squared SV norm of the source model (Eq. 3.11).
+    pub max_sv_norm_sq: f32,
+}
+
+impl ApproxModel {
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    /// The run-time bound threshold on ‖z‖²: the approximation is
+    /// guaranteed term-wise accurate iff `‖z‖² < 1/(16 γ² ‖x_M‖²)`.
+    pub fn znorm_sq_budget(&self) -> f32 {
+        1.0 / (16.0 * self.gamma * self.gamma * self.max_sv_norm_sq)
+    }
+
+    /// Decision value + squared norm for one instance.
+    /// O(d²), SIMD-on evaluators (symmetric quadform).
+    pub fn decision_one(&self, z: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(z.len(), self.dim());
+        let zn = vecops::norm_sq(z);
+        let quad = quadform::quadform_symmetric(&self.m, z);
+        let lin = vecops::dot(&self.v, z);
+        ((-self.gamma * zn).exp() * (self.c + lin + quad) + self.b, zn)
+    }
+
+    /// Scalar-evaluator variant (the paper's SIMD-off configuration).
+    pub fn decision_one_scalar(&self, z: &[f32]) -> (f32, f32) {
+        let zn = vecops::dot_scalar(z, z);
+        let quad = quadform::quadform_scalar(&self.m, z);
+        let lin = vecops::dot_scalar(&self.v, z);
+        ((-self.gamma * zn).exp() * (self.c + lin + quad) + self.b, zn)
+    }
+
+    /// Batched decisions. Returns (decisions, squared norms).
+    pub fn decision_batch(
+        &self,
+        z: &Mat,
+        backend: MathBackend,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if z.cols() != self.dim() {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs model dim {}",
+                z.cols(),
+                self.dim()
+            )));
+        }
+        match backend {
+            MathBackend::Loops => Ok((0..z.rows())
+                .map(|r| self.decision_one_scalar(z.row(r)))
+                .fold((Vec::new(), Vec::new()), |mut acc, (d, n)| {
+                    acc.0.push(d);
+                    acc.1.push(n);
+                    acc
+                })),
+            MathBackend::Blocked => {
+                // Batched: Z·M GEMM + fused row ops (TPU-shaped path).
+                let quads = quadform::quadform_batch(&self.m, z);
+                let mut dec = Vec::with_capacity(z.rows());
+                let mut norms = Vec::with_capacity(z.rows());
+                for r in 0..z.rows() {
+                    let zr = z.row(r);
+                    let zn = vecops::norm_sq(zr);
+                    let lin = vecops::dot(&self.v, zr);
+                    dec.push(
+                        (-self.gamma * zn).exp() * (self.c + lin + quads[r])
+                            + self.b,
+                    );
+                    norms.push(zn);
+                }
+                Ok((dec, norms))
+            }
+            MathBackend::Xla => Err(Error::InvalidArg(
+                "use runtime::Engine for the XLA backend".into(),
+            )),
+        }
+    }
+
+    /// Text encoding (Table 3's "approx" column measures this).
+    pub fn to_text(&self) -> String {
+        let d = self.dim();
+        let mut out = String::new();
+        out.push_str("approx_type maclaurin2_rbf\n");
+        out.push_str(&format!("d {d}\n"));
+        out.push_str(&format!("gamma {}\n", fmt_f32(self.gamma)));
+        out.push_str(&format!("b {}\n", fmt_f32(self.b)));
+        out.push_str(&format!("c {}\n", fmt_f32(self.c)));
+        out.push_str(&format!(
+            "max_sv_norm_sq {}\n",
+            fmt_f32(self.max_sv_norm_sq)
+        ));
+        out.push_str("v\n");
+        let vs: Vec<String> = self.v.iter().map(|&x| fmt_f32(x)).collect();
+        out.push_str(&vs.join(" "));
+        out.push('\n');
+        // M is symmetric: store the upper triangle row-wise, like the
+        // paper's implementation stores a packed symmetric matrix.
+        out.push_str("M upper\n");
+        for r in 0..d {
+            let row: Vec<String> =
+                (r..d).map(|c| fmt_f32(self.m.at(r, c))).collect();
+            out.push_str(&row.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn text_size_bytes(&self) -> usize {
+        self.to_text().len()
+    }
+
+    pub fn from_text(text: &str) -> Result<ApproxModel> {
+        let mut lines = text.lines();
+        let mut d = 0usize;
+        let mut gamma = None;
+        let mut b = None;
+        let mut c = None;
+        let mut max_norm = None;
+        loop {
+            let line = lines
+                .next()
+                .ok_or_else(|| Error::Parse("truncated approx model".into()))?
+                .trim();
+            if line == "v" {
+                break;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("approx_type") => {
+                    let t = it.next().unwrap_or("");
+                    if t != "maclaurin2_rbf" {
+                        return Err(Error::Parse(format!(
+                            "unknown approx_type '{t}'"
+                        )));
+                    }
+                }
+                Some("d") => {
+                    d = it
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| Error::Parse("bad d".into()))?
+                }
+                Some("gamma") => gamma = parse_f32(it.next()),
+                Some("b") => b = parse_f32(it.next()),
+                Some("c") => c = parse_f32(it.next()),
+                Some("max_sv_norm_sq") => max_norm = parse_f32(it.next()),
+                Some(other) => {
+                    return Err(Error::Parse(format!(
+                        "unknown approx header '{other}'"
+                    )))
+                }
+                None => {}
+            }
+        }
+        if d == 0 {
+            return Err(Error::Parse("missing d".into()));
+        }
+        let v: Vec<f32> = lines
+            .next()
+            .ok_or_else(|| Error::Parse("missing v".into()))?
+            .split_whitespace()
+            .map(|s| s.parse::<f32>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| Error::Parse("bad v".into()))?;
+        if v.len() != d {
+            return Err(Error::Parse(format!("v has {} != d", v.len())));
+        }
+        let header = lines.next().unwrap_or("").trim();
+        if header != "M upper" {
+            return Err(Error::Parse("missing 'M upper' header".into()));
+        }
+        let mut m = Mat::zeros(d, d);
+        for r in 0..d {
+            let row = lines
+                .next()
+                .ok_or_else(|| Error::Parse("truncated M".into()))?;
+            let vals: Vec<f32> = row
+                .split_whitespace()
+                .map(|s| s.parse::<f32>())
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| Error::Parse("bad M row".into()))?;
+            if vals.len() != d - r {
+                return Err(Error::Parse(format!(
+                    "M row {r}: {} values, expected {}",
+                    vals.len(),
+                    d - r
+                )));
+            }
+            for (k, &val) in vals.iter().enumerate() {
+                *m.at_mut(r, r + k) = val;
+                *m.at_mut(r + k, r) = val;
+            }
+        }
+        Ok(ApproxModel {
+            gamma: gamma.ok_or_else(|| Error::Parse("missing gamma".into()))?,
+            b: b.ok_or_else(|| Error::Parse("missing b".into()))?,
+            c: c.ok_or_else(|| Error::Parse("missing c".into()))?,
+            v,
+            m,
+            max_sv_norm_sq: max_norm
+                .ok_or_else(|| Error::Parse("missing max_sv_norm_sq".into()))?,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ApproxModel> {
+        ApproxModel::from_text(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn parse_f32(tok: Option<&str>) -> Option<f32> {
+    tok.and_then(|s| s.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> ApproxModel {
+        ApproxModel {
+            gamma: 0.1,
+            b: -0.2,
+            c: 0.5,
+            v: vec![1.0, -2.0],
+            m: Mat::from_vec(2, 2, vec![0.5, 0.25, 0.25, -0.75]).unwrap(),
+            max_sv_norm_sq: 4.0,
+        }
+    }
+
+    #[test]
+    fn decision_matches_formula() {
+        let m = toy();
+        let z = [0.3f32, -0.7];
+        let zn = 0.09 + 0.49;
+        let lin = 0.3 - 2.0 * -0.7;
+        let quad = 0.5 * 0.09
+            + 2.0 * 0.25 * 0.3 * -0.7
+            + -0.75 * 0.49;
+        let want = (-0.1f32 * zn).exp() * (0.5 + lin + quad) - 0.2;
+        let (got, got_n) = m.decision_one(&z);
+        assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        assert!((got_n - zn).abs() < 1e-6);
+        let (got_s, _) = m.decision_one_scalar(&z);
+        assert!((got_s - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn budget_formula() {
+        let m = toy();
+        // 1/(16 · 0.01 · 4) = 1.5625
+        assert!((m.znorm_sq_budget() - 1.5625).abs() < 1e-6);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let m = toy();
+        let back = ApproxModel::from_text(&m.to_text()).unwrap();
+        assert_eq!(back.v, m.v);
+        assert_eq!(back.m.max_abs_diff(&m.m), 0.0);
+        assert_eq!(back.gamma, m.gamma);
+        assert_eq!(back.b, m.b);
+        assert_eq!(back.c, m.c);
+        assert_eq!(back.max_sv_norm_sq, m.max_sv_norm_sq);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = toy();
+        let z = Mat::from_vec(3, 2, vec![0.1, 0.2, -1.0, 0.5, 0.0, 0.0])
+            .unwrap();
+        for backend in [MathBackend::Loops, MathBackend::Blocked] {
+            let (dec, norms) = m.decision_batch(&z, backend).unwrap();
+            for r in 0..3 {
+                let (d1, n1) = m.decision_one(z.row(r));
+                assert!((dec[r] - d1).abs() < 1e-4, "{backend:?} row {r}");
+                assert!((norms[r] - n1).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_text_rejected() {
+        assert!(ApproxModel::from_text("garbage").is_err());
+        let m = toy();
+        let text = m.to_text().replace("M upper", "M full");
+        assert!(ApproxModel::from_text(&text).is_err());
+    }
+}

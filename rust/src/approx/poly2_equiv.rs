@@ -1,0 +1,201 @@
+//! Relation to the degree-2 polynomial kernel (paper §3.2,
+//! Eqs. 3.12–3.16).
+//!
+//! A degree-2 polynomial kernel `κ(x,y) = (γ xᵀy + β)²` expands
+//! *exactly* (not approximately) into the same quadratic form as the
+//! RBF approximation:
+//!
+//! ```text
+//! f(z) = c + wᵀXz + zᵀ X D Xᵀ z + b
+//! c    = β² Σ αᵢyᵢ            (Eq. 3.14 right)
+//! wᵢ   = 2βγ αᵢyᵢ             (Eq. 3.15 right)
+//! Dᵢᵢ  = γ²  αᵢyᵢ             (Eq. 3.16 right)
+//! ```
+//!
+//! The two differences the paper highlights (Eq. 3.13): the
+//! approximated RBF model carries (i) the per-instance scaling
+//! `exp(−γ‖z‖²)` and (ii) a 2× relative weight on second-order terms.
+//! Within the validity bound the scaling factor is confined to
+//! `(e^{−1/4}, 1]` (§3.2 last paragraph), which this module also
+//! exposes and tests.
+
+use crate::approx::ApproxModel;
+use crate::linalg::syrk;
+use crate::svm::{Kernel, SvmModel};
+use crate::{Error, Result};
+
+/// Lower bound of the extra RBF scaling factor `exp(−γ‖z‖²)` when the
+/// validity bound holds and `‖x_M‖ ≥ ‖z‖`: `e^{−1/4}` (paper §3.2).
+pub const MIN_SCALING_IN_BOUND: f64 = 0.778_800_783_071_404_9; // e^-0.25
+
+/// Exact quadratic-form expansion of a degree-2 polynomial model.
+///
+/// Returns an [`ApproxModel`]-shaped object whose decision function —
+/// *without* the `exp(−γ‖z‖²)` factor — reproduces the polynomial
+/// model exactly. The `gamma` field is set to 0 so `decision_one`
+/// (which multiplies by `exp(−0·‖z‖²) = 1`) is the exact polynomial
+/// decision.
+pub fn expand_poly2(model: &SvmModel) -> Result<ApproxModel> {
+    let (gamma, beta) = match model.kernel {
+        Kernel::Poly2 { gamma, beta } => (gamma, beta),
+        ref k => {
+            return Err(Error::InvalidArg(format!(
+                "expected a degree-2 polynomial kernel, got {}",
+                k.name()
+            )))
+        }
+    };
+    let n = model.n_sv();
+    // Eq. 3.14–3.16, right-hand column.
+    let mut c = 0.0f64;
+    let mut w = Vec::with_capacity(n);
+    let mut dd = Vec::with_capacity(n);
+    for i in 0..n {
+        let ay = f64::from(model.coef[i]);
+        c += f64::from(beta) * f64::from(beta) * ay;
+        w.push(2.0 * beta * gamma * model.coef[i]);
+        dd.push(gamma * gamma * model.coef[i]);
+    }
+    Ok(ApproxModel {
+        gamma: 0.0, // exp(−0·‖z‖²) = 1: expansion is exact
+        b: model.b,
+        c: c as f32,
+        v: syrk::xt_w(&model.sv, &w),
+        m: syrk::syrk_weighted_blocked(&model.sv, &dd),
+        max_sv_norm_sq: model.max_sv_norm_sq(),
+    })
+}
+
+/// The per-instance scaling factor `exp(−γ‖z‖²)` that distinguishes an
+/// approximated RBF model from an exact polynomial model (Eq. 3.13).
+pub fn rbf_extra_scaling(gamma: f32, znorm_sq: f32) -> f64 {
+    f64::from(-gamma * znorm_sq).exp()
+}
+
+/// Convert an RBF approximation into the "equivalent-effect" degree-2
+/// polynomial coefficients of §3.2: α⁽²ᴰ⁾ᵢ = α⁽ᴿᴮᶠ⁾ᵢ·e^{−γ‖xᵢ‖²}
+/// (the SV-side exponentials folded into the coefficients, β = 1).
+pub fn equivalent_poly2_coefficients(model: &SvmModel) -> Result<Vec<f32>> {
+    let gamma = match model.kernel {
+        Kernel::Rbf { gamma } => gamma,
+        ref k => {
+            return Err(Error::InvalidArg(format!(
+                "expected an RBF kernel, got {}",
+                k.name()
+            )))
+        }
+    };
+    Ok((0..model.n_sv())
+        .map(|i| {
+            let nsq = crate::linalg::vecops::norm_sq(model.sv.row(i));
+            model.coef[i] * (-gamma * nsq).exp()
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::linalg::{Mat, MathBackend};
+    use crate::svm::smo::{train_csvc, SmoParams};
+
+    fn poly_model() -> (SvmModel, crate::data::Dataset) {
+        let ds = synth::two_gaussians(81, 200, 6, 2.0);
+        let (m, _) = train_csvc(
+            &ds,
+            Kernel::Poly2 { gamma: 0.5, beta: 1.0 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        (m, ds)
+    }
+
+    #[test]
+    fn expansion_is_exact_not_approximate() {
+        // The paper's key contrast (§3.2): for poly2 the quadratic form
+        // is EXACT. Verify decision values match κ-evaluation to f32
+        // rounding on every training point.
+        let (model, ds) = poly_model();
+        let expanded = expand_poly2(&model).unwrap();
+        for r in 0..ds.len() {
+            let via_kernel = model.decision_one(ds.x.row(r));
+            let (via_form, _) = expanded.decision_one(ds.x.row(r));
+            assert!(
+                (via_kernel - via_form).abs()
+                    < 2e-3 * (1.0 + via_kernel.abs()),
+                "row {r}: {via_kernel} vs {via_form}"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_coefficients() {
+        // Two hand-built SVs: check c, w, D against Eqs. 3.14–3.16.
+        let (gamma, beta) = (0.5f32, 2.0f32);
+        let model = SvmModel::new(
+            Kernel::Poly2 { gamma, beta },
+            Mat::from_vec(2, 2, vec![1., 0., 0., 1.]).unwrap(),
+            vec![0.75, -0.5],
+            0.0,
+        )
+        .unwrap();
+        let e = expand_poly2(&model).unwrap();
+        // c = β² Σ αy = 4 · 0.25 = 1
+        assert!((e.c - 1.0).abs() < 1e-6);
+        // v = Xᵀw with wᵢ = 2βγ αᵢyᵢ = 2·(0.75, −0.5)
+        assert!((e.v[0] - 1.5).abs() < 1e-6);
+        assert!((e.v[1] + 1.0).abs() < 1e-6);
+        // M = XᵀDX with Dᵢᵢ = γ²αᵢyᵢ = (0.1875, −0.125) on the diagonal
+        assert!((e.m.at(0, 0) - 0.1875).abs() < 1e-6);
+        assert!((e.m.at(1, 1) + 0.125).abs() < 1e-6);
+        assert_eq!(e.m.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn scaling_factor_confined_in_bound() {
+        // §3.2: within the bound (and ‖x_M‖ ≥ ‖z‖) the RBF scaling
+        // factor lies in (e^{−1/4}, 1].
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..200 {
+            let xm_sq = rng.range(0.1, 10.0) as f32;
+            let gamma = 1.0 / (4.0 * xm_sq); // at the γ cap for ‖z‖≤‖x_M‖
+            let zn_sq = rng.range(0.0, f64::from(xm_sq)) as f32;
+            let s = rbf_extra_scaling(gamma, zn_sq);
+            assert!(s > MIN_SCALING_IN_BOUND - 1e-9, "s={s}");
+            assert!(s <= 1.0);
+        }
+    }
+
+    #[test]
+    fn equivalent_coefficients_fold_exponentials() {
+        let ds = synth::two_gaussians(82, 50, 4, 1.5);
+        let (model, _) = train_csvc(
+            &ds,
+            Kernel::Rbf { gamma: 0.3 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let folded = equivalent_poly2_coefficients(&model).unwrap();
+        assert_eq!(folded.len(), model.n_sv());
+        for i in 0..model.n_sv() {
+            // |α·e^{−γ‖x‖²}| ≤ |α| with equality only at ‖x‖ = 0.
+            assert!(folded[i].abs() <= model.coef[i].abs() + 1e-7);
+            assert_eq!(folded[i].signum(), model.coef[i].signum());
+        }
+    }
+
+    #[test]
+    fn non_poly_rejected() {
+        let (model, _) = poly_model();
+        assert!(equivalent_poly2_coefficients(&model).is_err());
+        let rbf = SvmModel::new(
+            Kernel::Rbf { gamma: 0.1 },
+            Mat::zeros(1, 2),
+            vec![1.0],
+            0.0,
+        )
+        .unwrap();
+        assert!(expand_poly2(&rbf).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Ablations called out in DESIGN.md §6:
+//!
+//! * A1 — math-backend sweep for the two kernels that dominate the
+//!   paper's costs (weighted SYRK for t_approx; batched quadratic form
+//!   for t_pred) across a (d, n_SV) grid.
+//! * A2 — routing-policy ablation: serve a traffic mix with a
+//!   controllable out-of-bound fraction through the coordinator under
+//!   each policy; report accuracy-vs-latency.
+
+use std::time::Duration;
+
+use crate::approx::builder::build_approx_model;
+use crate::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+use crate::data::synth;
+use crate::linalg::{quadform, syrk, Mat, MathBackend};
+use crate::svm::smo::{train_csvc, SmoParams};
+use crate::svm::Kernel;
+use crate::util::bench::{markdown_table, Bencher};
+use crate::util::stats::accuracy;
+use crate::util::{Json, Rng};
+use crate::Result;
+
+use super::context::BenchContext;
+
+/// A1: backend sweep over (n, d) for SYRK and the quadratic form.
+pub fn run_backends(ctx: &BenchContext) -> Result<String> {
+    let grid: &[(usize, usize)] = match ctx.scale {
+        super::Scale::Full => &[
+            (1024, 32),
+            (1024, 128),
+            (4096, 128),
+            (4096, 512),
+            (8192, 128),
+            (2048, 1024),
+        ],
+        super::Scale::Quick => &[(256, 32), (512, 64)],
+    };
+    let mut rng = Rng::new(ctx.seed);
+    let cfg = ctx.scale.bench_config();
+    let mut bench = Bencher::new(cfg);
+    let mut rows = vec![vec![
+        "n_SV".to_string(),
+        "d".to_string(),
+        "syrk loops (s)".to_string(),
+        "syrk blocked (s)".to_string(),
+        "speedup".to_string(),
+        "quadform scalar (s/batch)".to_string(),
+        "quadform blocked (s/batch)".to_string(),
+        "speedup".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    for &(n, d) in grid {
+        let x = Mat::from_vec(
+            n,
+            d,
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+        )?;
+        let w: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let t_loops = bench
+            .run(&format!("syrk/loops/{n}x{d}"), || {
+                std::hint::black_box(syrk::syrk_weighted_loops(&x, &w));
+            })
+            .mean();
+        let t_blocked = bench
+            .run(&format!("syrk/blocked/{n}x{d}"), || {
+                std::hint::black_box(syrk::syrk_weighted_blocked(&x, &w));
+            })
+            .mean();
+        // Quadratic form over a 512-row batch.
+        let m = syrk::syrk_weighted_blocked(&x, &w);
+        let batch = Mat::from_vec(
+            512,
+            d,
+            (0..512 * d).map(|_| rng.normal() as f32).collect(),
+        )?;
+        let t_qf_scalar = bench
+            .run(&format!("quadform/scalar/{d}"), || {
+                for r in 0..batch.rows() {
+                    std::hint::black_box(quadform::quadform_scalar(
+                        &m,
+                        batch.row(r),
+                    ));
+                }
+            })
+            .mean();
+        let t_qf_blocked = bench
+            .run(&format!("quadform/blocked/{d}"), || {
+                std::hint::black_box(quadform::quadform_batch(&m, &batch));
+            })
+            .mean();
+        rows.push(vec![
+            format!("{n}"),
+            format!("{d}"),
+            format!("{t_loops:.4}"),
+            format!("{t_blocked:.4}"),
+            format!("{:.1}", t_loops / t_blocked),
+            format!("{t_qf_scalar:.5}"),
+            format!("{t_qf_blocked:.5}"),
+            format!("{:.1}", t_qf_scalar / t_qf_blocked),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("d", Json::num(d as f64)),
+            ("syrk_loops_s", Json::num(t_loops)),
+            ("syrk_blocked_s", Json::num(t_blocked)),
+            ("quadform_scalar_s", Json::num(t_qf_scalar)),
+            ("quadform_blocked_s", Json::num(t_qf_blocked)),
+        ]));
+    }
+    let path =
+        super::write_results_json("ablation_backends", &Json::Arr(json_rows))?;
+    let mut out = String::from(
+        "## Ablation A1 — math backends (SYRK = t_approx kernel; \
+         quadform = t_pred kernel)\n\n",
+    );
+    out.push_str(&markdown_table(&rows));
+    out.push_str(&format!("\n(JSON: {path})\n"));
+    Ok(out)
+}
+
+/// A2: routing policies under a traffic mix with out-of-bound instances.
+pub fn run_routing(ctx: &BenchContext) -> Result<String> {
+    // Unit-norm train data, γ slightly under γ_max ⇒ in-bound by design;
+    // a fraction of the test traffic is scaled ×3 (pushed out of bound).
+    let n = match ctx.scale {
+        super::Scale::Full => 1500,
+        super::Scale::Quick => 300,
+    };
+    let raw = synth::two_gaussians(ctx.seed ^ 0x0520, 2 * n, 16, 2.0);
+    let scaled = crate::data::UnitNormScaler.apply_dataset(&raw);
+    let (train, test) = scaled.split_at(n);
+    let gamma = 0.2f32; // < γ_max = 0.25 on unit-norm data
+    let (model, _) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())?;
+    let am = build_approx_model(&model, MathBackend::Blocked)?;
+
+    let exact_pred = crate::svm::predict::ExactPredictor::new(
+        &model,
+        MathBackend::Blocked,
+    )?;
+    let mut rows = vec![vec![
+        "out-of-bound traffic".to_string(),
+        "policy".to_string(),
+        "acc (%)".to_string(),
+        "diff vs exact (%)".to_string(),
+        "% approx route".to_string(),
+        "mean latency (µs)".to_string(),
+        "throughput (req/s)".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    let mut rng = Rng::new(ctx.seed ^ 0x2077);
+    for oob_frac in [0.0f64, 0.1, 0.5] {
+        // Build the traffic: scale a random subset of rows ×3 so that
+        // ‖z‖² = 9 > budget while labels stay valid (RBF decisions for
+        // these instances differ, which is exactly the hazard).
+        let mut traffic = test.clone();
+        let n_oob = (oob_frac * traffic.len() as f64) as usize;
+        let idx = rng.sample_indices(traffic.len(), n_oob);
+        for &r in &idx {
+            for v in traffic.x.row_mut(r) {
+                *v *= 3.0;
+            }
+        }
+        for policy in [
+            RoutePolicy::AlwaysApprox,
+            RoutePolicy::AlwaysExact,
+            RoutePolicy::Hybrid,
+        ] {
+            let coord = Coordinator::start(
+                model.clone(),
+                am.clone(),
+                CoordinatorConfig {
+                    policy,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+            )?;
+            let t0 = std::time::Instant::now();
+            let responses = coord.predict_all(&traffic.x)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let labels: Vec<f32> =
+                responses.iter().map(|r| r.label).collect();
+            let acc = accuracy(&labels, &traffic.y);
+            let exact_dec = exact_pred.decision_batch(&traffic.x)?;
+            let diff = crate::util::stats::label_diff_fraction(
+                &labels, &exact_dec,
+            );
+            let n_approx = responses
+                .iter()
+                .filter(|r| r.route == crate::coordinator::Route::Approx)
+                .count();
+            let mean_lat = responses
+                .iter()
+                .map(|r| r.latency.as_secs_f64())
+                .sum::<f64>()
+                / responses.len() as f64;
+            rows.push(vec![
+                format!("{:.0}%", oob_frac * 100.0),
+                policy.name().to_string(),
+                format!("{:.1}", acc * 100.0),
+                format!("{:.2}", diff * 100.0),
+                format!(
+                    "{:.0}",
+                    100.0 * n_approx as f64 / responses.len() as f64
+                ),
+                format!("{:.0}", mean_lat * 1e6),
+                format!("{:.0}", responses.len() as f64 / wall),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("oob_fraction", Json::num(oob_frac)),
+                ("policy", Json::str(policy.name())),
+                ("accuracy", Json::num(acc)),
+                ("label_diff_vs_exact", Json::num(diff)),
+                (
+                    "approx_route_fraction",
+                    Json::num(n_approx as f64 / responses.len() as f64),
+                ),
+                ("mean_latency_s", Json::num(mean_lat)),
+                (
+                    "throughput_rps",
+                    Json::num(responses.len() as f64 / wall),
+                ),
+            ]));
+            coord.shutdown()?;
+        }
+    }
+    let path =
+        super::write_results_json("ablation_routing", &Json::Arr(json_rows))?;
+    let mut out = String::from(
+        "## Ablation A2 — bound-aware hybrid routing under out-of-bound \
+         traffic\n\n",
+    );
+    out.push_str(&markdown_table(&rows));
+    out.push_str(&format!("\n(JSON: {path})\n"));
+    Ok(out)
+}
+
+/// Both ablations, concatenated (the `bench ablations` CLI target).
+pub fn run(ctx: &BenchContext) -> Result<String> {
+    let mut out = run_backends(ctx)?;
+    out.push('\n');
+    out.push_str(&run_routing(ctx)?);
+    Ok(out)
+}
+

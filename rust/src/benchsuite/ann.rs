@@ -1,0 +1,114 @@
+//! A3 — comparison with the ANN decision-function approximation of
+//! Kang & Cho [15] (paper §4.3): build time (distillation vs our
+//! closed-form approximation), prediction time and label fidelity.
+
+use crate::approx::builder::build_approx_model;
+use crate::data::synth::SynthProfile;
+use crate::linalg::MathBackend;
+use crate::svm::ann_approx::{AnnApprox, AnnParams};
+use crate::svm::predict::ExactPredictor;
+use crate::util::bench::{markdown_table, Bencher};
+use crate::util::stats::label_diff_fraction;
+use crate::util::Json;
+use crate::Result;
+
+use super::context::BenchContext;
+
+pub fn run(ctx: &BenchContext) -> Result<String> {
+    // Representative low-d profile (where both methods are applicable).
+    let case = ctx.trained(SynthProfile::ControlLike, 0.78)?;
+    let test = &case.test;
+    let cfg = ctx.scale.bench_config();
+    let mut bench = Bencher::new(cfg);
+
+    let exact = ExactPredictor::new(&case.model, MathBackend::Blocked)?;
+    let exact_dec = exact.decision_batch(&test.x)?;
+
+    // Ours: closed-form build + quadratic predict.
+    let t_build_ours = bench
+        .run("ours/build", || {
+            std::hint::black_box(
+                build_approx_model(&case.model, MathBackend::Blocked).unwrap(),
+            );
+        })
+        .mean();
+    let am = build_approx_model(&case.model, MathBackend::Blocked)?;
+    let t_pred_ours = bench
+        .run("ours/pred", || {
+            std::hint::black_box(
+                am.decision_batch(&test.x, MathBackend::Blocked).unwrap(),
+            );
+        })
+        .mean();
+    let (ours_dec, _) = am.decision_batch(&test.x, MathBackend::Blocked)?;
+    let diff_ours = label_diff_fraction(&exact_dec, &ours_dec);
+
+    // ANN: distillation (expensive build) + O(n_HN · d) predict.
+    let hidden_sizes: &[usize] = match ctx.scale {
+        super::Scale::Full => &[8, 32],
+        super::Scale::Quick => &[8],
+    };
+    let mut rows = vec![vec![
+        "method".to_string(),
+        "t_build (s)".to_string(),
+        "t_pred (s)".to_string(),
+        "label diff vs exact (%)".to_string(),
+    ]];
+    rows.push(vec![
+        "quadratic approx (ours)".into(),
+        format!("{t_build_ours:.4}"),
+        format!("{t_pred_ours:.4}"),
+        format!("{:.2}", diff_ours * 100.0),
+    ]);
+    let mut json_rows = vec![Json::obj(vec![
+        ("method", Json::str("quadratic")),
+        ("t_build", Json::num(t_build_ours)),
+        ("t_pred", Json::num(t_pred_ours)),
+        ("label_diff", Json::num(diff_ours)),
+    ])];
+    for &h in hidden_sizes {
+        let params = AnnParams {
+            hidden: h,
+            epochs: match ctx.scale {
+                super::Scale::Full => 40,
+                super::Scale::Quick => 10,
+            },
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let ann = AnnApprox::distill(&case.model, &case.train.x, params)?;
+        let t_build_ann = t0.elapsed().as_secs_f64(); // once: SGD is slow
+        let t_pred_ann = bench
+            .run(&format!("ann{h}/pred"), || {
+                std::hint::black_box(ann.decision_batch(&test.x));
+            })
+            .mean();
+        let ann_dec = ann.decision_batch(&test.x);
+        let diff_ann = label_diff_fraction(&exact_dec, &ann_dec);
+        rows.push(vec![
+            format!("ANN distill (h={h}) [15]"),
+            format!("{t_build_ann:.2}"),
+            format!("{t_pred_ann:.4}"),
+            format!("{:.2}", diff_ann * 100.0),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("method", Json::str(format!("ann_h{h}"))),
+            ("t_build", Json::num(t_build_ann)),
+            ("t_pred", Json::num(t_pred_ann)),
+            ("label_diff", Json::num(diff_ann)),
+        ]));
+    }
+    let path = super::write_results_json("ann_comp", &Json::Arr(json_rows))?;
+    let mut out = String::from(
+        "## Comparator — quadratic approximation vs ANN distillation \
+         (Kang & Cho [15])\n\n",
+    );
+    out.push_str(&markdown_table(&rows));
+    out.push_str(&format!(
+        "\nn_SV={} d={} n_test={}  (JSON: {path})\n",
+        case.model.n_sv(),
+        case.model.dim(),
+        test.len()
+    ));
+    Ok(out)
+}

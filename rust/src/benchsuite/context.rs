@@ -1,0 +1,169 @@
+//! Shared benchmark context: deterministic dataset generation, model
+//! training with an on-disk cache (results/models/) so the five
+//! profiles are trained once per (profile, γ) and reused across tables.
+
+use std::path::PathBuf;
+
+use crate::approx::bounds::gamma_max_for_data;
+use crate::log_info;
+use crate::data::{Dataset, SynthProfile};
+use crate::svm::smo::{train_csvc, SmoParams};
+use crate::svm::{Kernel, SvmModel};
+use crate::util::bench::BenchConfig;
+use crate::Result;
+
+/// Workload scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// EXPERIMENTS.md configuration (default profile sizes).
+    Full,
+    /// Shrunk ~10× for tests / smoke runs.
+    Quick,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "full" => Ok(Scale::Full),
+            "quick" => Ok(Scale::Quick),
+            other => Err(crate::Error::InvalidArg(format!(
+                "unknown scale '{other}' (full|quick)"
+            ))),
+        }
+    }
+
+    pub fn sizes(&self, profile: SynthProfile) -> (usize, usize) {
+        let (tr, te) = profile.default_sizes();
+        match self {
+            Scale::Full => (tr, te),
+            Scale::Quick => ((tr / 10).max(200), (te / 10).max(200)),
+        }
+    }
+
+    pub fn bench_config(&self) -> BenchConfig {
+        match self {
+            Scale::Full => BenchConfig { warmup: 1, samples: 8, max_seconds: 25.0 },
+            Scale::Quick => BenchConfig::quick(),
+        }
+    }
+}
+
+/// Per-profile γ multipliers (γ = mult · γ_MAX) mirroring the ratios the
+/// paper's Table 1 actually used (e.g. a9a at 0.55×, 1.1×, 5.5× γ_MAX).
+pub fn gamma_multipliers(profile: SynthProfile) -> &'static [f64] {
+    match profile {
+        SynthProfile::AdultLike => &[0.55, 1.1, 5.5],
+        SynthProfile::DigitsLike => &[0.1],
+        SynthProfile::ControlLike => &[0.78],
+        SynthProfile::VehicleLike => &[1.2],
+        SynthProfile::WideLike => &[1.4],
+    }
+}
+
+/// A trained benchmark case.
+pub struct BenchCase {
+    pub profile: SynthProfile,
+    pub gamma: f32,
+    pub gamma_max: f32,
+    pub model: SvmModel,
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Context with a model cache.
+pub struct BenchContext {
+    pub scale: Scale,
+    pub seed: u64,
+    cache_dir: PathBuf,
+}
+
+impl BenchContext {
+    pub fn new(scale: Scale, seed: u64) -> Self {
+        BenchContext {
+            scale,
+            seed,
+            cache_dir: PathBuf::from("results/models"),
+        }
+    }
+
+    /// Deterministic (train, test) for a profile at this scale.
+    pub fn data(&self, profile: SynthProfile) -> (Dataset, Dataset) {
+        let (ntr, nte) = self.scale.sizes(profile);
+        profile.generate(self.seed, ntr, nte)
+    }
+
+    /// Train (or load from results/models/) the exact model for
+    /// (profile, γ-multiplier).
+    pub fn trained(
+        &self,
+        profile: SynthProfile,
+        gamma_mult: f64,
+    ) -> Result<BenchCase> {
+        let (train, test) = self.data(profile);
+        let gamma_max = gamma_max_for_data(&train);
+        let gamma = (f64::from(gamma_max) * gamma_mult) as f32;
+        let tag = format!(
+            "{}_s{}_{}_g{:.5}",
+            profile.name(),
+            self.seed,
+            match self.scale {
+                Scale::Full => "full",
+                Scale::Quick => "quick",
+            },
+            gamma
+        );
+        let path = self.cache_dir.join(format!("{tag}.model"));
+        let model = if path.exists() {
+            SvmModel::load(&path)?
+        } else {
+            let t0 = std::time::Instant::now();
+            let (model, stats) = train_csvc(
+                &train,
+                Kernel::Rbf { gamma },
+                SmoParams {
+                    c: profile.default_cost(),
+                    ..Default::default()
+                },
+            )?;
+            log_info!(
+                "trained {tag}: n_sv={} iters={} in {:.1}s",
+                stats.n_sv,
+                stats.iterations,
+                t0.elapsed().as_secs_f64()
+            );
+            std::fs::create_dir_all(&self.cache_dir)?;
+            model.save(&path)?;
+            model
+        };
+        Ok(BenchCase { profile, gamma, gamma_max, model, train, test })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sizes_shrink() {
+        let p = SynthProfile::ControlLike;
+        let (f, _) = Scale::Full.sizes(p);
+        let (q, _) = Scale::Quick.sizes(p);
+        assert!(q < f);
+        assert!(q >= 200);
+    }
+
+    #[test]
+    fn multipliers_cover_all_profiles() {
+        for p in crate::data::synth::ALL_PROFILES {
+            assert!(!gamma_multipliers(p).is_empty());
+        }
+    }
+
+    #[test]
+    fn context_data_deterministic() {
+        let ctx = BenchContext::new(Scale::Quick, 42);
+        let (a, _) = ctx.data(SynthProfile::ControlLike);
+        let (b, _) = ctx.data(SynthProfile::ControlLike);
+        assert_eq!(a.x.max_abs_diff(&b.x), 0.0);
+    }
+}

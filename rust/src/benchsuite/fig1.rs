@@ -1,0 +1,81 @@
+//! Figure 1: absolute relative error of the second-order Maclaurin
+//! approximation of e^x over x ∈ [−2, 2], with the Eq. (A.2) assertion
+//! (error < 3.05% inside |x| < ½). Rendered as an ASCII plot + JSON.
+
+use crate::approx::maclaurin;
+use crate::util::Json;
+use crate::Result;
+
+pub fn run() -> Result<String> {
+    let curve = maclaurin::error_curve(-2.0, 2.0, 201);
+    let in_bound = maclaurin::error_curve(
+        -maclaurin::EXPONENT_BOUND,
+        maclaurin::EXPONENT_BOUND,
+        1001,
+    );
+    let max_in_bound = in_bound.iter().map(|&(_, y)| y).fold(0.0, f64::max);
+    assert!(
+        max_in_bound < maclaurin::MAX_REL_ERROR_IN_BOUND,
+        "Eq. (A.2) violated: {max_in_bound}"
+    );
+
+    // ASCII rendering: 61 columns × 20 rows, log-ish y clamped at 1.0.
+    const W: usize = 61;
+    const H: usize = 20;
+    let mut grid = vec![vec![b' '; W]; H];
+    for i in 0..W {
+        let x = -2.0 + 4.0 * i as f64 / (W - 1) as f64;
+        let y = maclaurin::rel_error(x).min(1.0);
+        let row = ((1.0 - y) * (H - 1) as f64).round() as usize;
+        grid[row][i] = b'*';
+    }
+    let mut plot = String::new();
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            "1.00 |"
+        } else if r == H - 1 {
+            "0.00 |"
+        } else {
+            "     |"
+        };
+        plot.push_str(label);
+        plot.push_str(std::str::from_utf8(row).unwrap());
+        plot.push('\n');
+    }
+    plot.push_str("      ");
+    plot.push_str(&"-".repeat(W));
+    plot.push('\n');
+    plot.push_str("      x = -2                    0                    +2\n");
+
+    let json = Json::obj(vec![
+        (
+            "curve",
+            Json::Arr(
+                curve
+                    .iter()
+                    .map(|&(x, y)| {
+                        Json::Arr(vec![Json::num(x), Json::num(y)])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("max_rel_error_in_bound", Json::num(max_in_bound)),
+        ("bound", Json::num(maclaurin::MAX_REL_ERROR_IN_BOUND)),
+    ]);
+    let path = super::write_results_json("fig1", &json)?;
+    Ok(format!(
+        "## Figure 1 — |e^x − (1+x+x²/2)| / e^x on [−2, 2]\n\n```\n{plot}```\n\
+         max relative error on |x| < 1/2: {max_in_bound:.4} \
+         (paper bound: {:.4})\n(JSON: {path})\n",
+        maclaurin::MAX_REL_ERROR_IN_BOUND
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig1_runs_and_asserts_bound() {
+        let out = super::run().unwrap();
+        assert!(out.contains("max relative error"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Benchmark suite: regenerates every table and figure of the paper's
+//! evaluation (§4) plus the ablations called out in DESIGN.md §6.
+//!
+//! Each `run_*` function returns a rendered markdown table (printed by
+//! the CLI) and writes machine-readable JSON under `results/`.
+//! `Scale::Quick` shrinks workloads for CI/tests; `Scale::Full` is the
+//! EXPERIMENTS.md configuration.
+
+pub mod ablations;
+pub mod ann;
+pub mod context;
+pub mod fig1;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use context::{BenchContext, Scale};
+
+/// Ensure `results/` exists and write a JSON document into it.
+pub fn write_results_json(
+    name: &str,
+    json: &crate::util::Json,
+) -> crate::Result<String> {
+    std::fs::create_dir_all("results")?;
+    let path = format!("results/{name}.json");
+    std::fs::write(&path, json.to_string_pretty())?;
+    Ok(path)
+}

@@ -1,0 +1,70 @@
+//! Table 1: per-dataset accuracy of the exact model and the fraction of
+//! labels that differ under the approximation, across γ/γ_MAX ratios.
+//!
+//! Paper columns: data set, d, γ_MAX, γ, n_test, n_SV, acc (%), diff (%).
+
+use crate::approx::builder::build_approx_model;
+use crate::approx::error_analysis;
+use crate::data::synth::ALL_PROFILES;
+use crate::linalg::MathBackend;
+use crate::util::bench::markdown_table;
+use crate::util::Json;
+use crate::Result;
+
+use super::context::{gamma_multipliers, BenchContext};
+
+pub fn run(ctx: &BenchContext) -> Result<String> {
+    let mut rows = vec![vec![
+        "data set".to_string(),
+        "d".to_string(),
+        "gamma_MAX".to_string(),
+        "gamma".to_string(),
+        "n_test".to_string(),
+        "n_SV".to_string(),
+        "acc (%)".to_string(),
+        "diff (%)".to_string(),
+        "in-bound (%)".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    for profile in ALL_PROFILES {
+        for &mult in gamma_multipliers(profile) {
+            let case = ctx.trained(profile, mult)?;
+            let am = build_approx_model(&case.model, MathBackend::Blocked)?;
+            let rep =
+                error_analysis::compare(&case.model, &am, &case.test)?;
+            rows.push(vec![
+                format!("{} ({})", profile.name(), profile.mirrors()),
+                format!("{}", case.test.dim()),
+                format!("{:.4}", case.gamma_max),
+                format!("{:.4}", case.gamma),
+                format!("{}", case.test.len()),
+                format!("{}", case.model.n_sv()),
+                format!("{:.1}", rep.exact_acc * 100.0),
+                format!("{:.2}", rep.label_diff * 100.0),
+                format!("{:.1}", rep.in_bound_fraction * 100.0),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("profile", Json::str(profile.name())),
+                ("mirrors", Json::str(profile.mirrors())),
+                ("d", Json::num(case.test.dim() as f64)),
+                ("gamma_max", Json::num(f64::from(case.gamma_max))),
+                ("gamma", Json::num(f64::from(case.gamma))),
+                ("gamma_ratio", Json::num(mult)),
+                ("n_test", Json::num(case.test.len() as f64)),
+                ("n_sv", Json::num(case.model.n_sv() as f64)),
+                ("exact_acc", Json::num(rep.exact_acc)),
+                ("approx_acc", Json::num(rep.approx_acc)),
+                ("label_diff", Json::num(rep.label_diff)),
+                ("in_bound_fraction", Json::num(rep.in_bound_fraction)),
+                ("mean_abs_err", Json::num(rep.abs_err.mean)),
+            ]));
+        }
+    }
+    let path = super::write_results_json("table1", &Json::Arr(json_rows))?;
+    let mut out = String::from(
+        "## Table 1 — exact accuracy vs approximation label diff\n\n",
+    );
+    out.push_str(&markdown_table(&rows));
+    out.push_str(&format!("\n(JSON: {path})\n"));
+    Ok(out)
+}

@@ -1,0 +1,214 @@
+//! Table 2: prediction speed, exact vs approximated, across math
+//! backends and SIMD configurations, plus approximation-build time.
+//!
+//! Mapping of the paper's axes onto this environment (DESIGN.md §4):
+//!   LOOPS            → MathBackend::Loops (naive loops)
+//!   BLAS / ATLAS     → MathBackend::Blocked (tiled + threaded + autovec)
+//!   vendor library   → XLA/PJRT artifacts (when available)
+//!   SIMD off / on    → scalar vs 8-lane evaluators
+//!
+//! Columns: t_approx (build), t_pred, ratio1 = t_exact/t_pred and
+//! ratio2 = t_exact/(t_pred + t_approx) — the paper's last two columns.
+
+use std::path::Path;
+
+use crate::approx::builder::build_approx_model;
+use crate::data::synth::ALL_PROFILES;
+use crate::linalg::MathBackend;
+use crate::runtime::Engine;
+use crate::svm::predict::ExactPredictor;
+use crate::util::bench::{markdown_table, Bencher};
+use crate::util::Json;
+use crate::Result;
+
+use super::context::BenchContext;
+
+pub fn run(ctx: &BenchContext, artifacts_dir: Option<&Path>) -> Result<String> {
+    let mut rows = vec![vec![
+        "data set".to_string(),
+        "approach".to_string(),
+        "math".to_string(),
+        "t_approx (s)".to_string(),
+        "SIMD".to_string(),
+        "t_pred (s)".to_string(),
+        "ratio 1".to_string(),
+        "ratio 2".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    let cfg = ctx.scale.bench_config();
+    // Engine is constructed once (single-threaded benches).
+    let engine = match artifacts_dir {
+        Some(dir) if dir.join("manifest.txt").exists() => {
+            Some(Engine::load(dir)?)
+        }
+        _ => None,
+    };
+
+    for profile in ALL_PROFILES {
+        // γ at the paper's primary setting for the profile.
+        let mult = super::context::gamma_multipliers(profile)[0];
+        let case = ctx.trained(profile, mult)?;
+        let test = &case.test;
+        let mut bench = Bencher::new(cfg.clone());
+
+        // ---- exact baseline (per paper: LIBSVM-style loops) ----
+        let exact_loops = ExactPredictor::new(&case.model, MathBackend::Loops)?;
+        let t_exact = bench
+            .run(&format!("{}/exact/loops", profile.name()), || {
+                std::hint::black_box(
+                    exact_loops.decision_batch(&test.x).unwrap(),
+                );
+            })
+            .mean();
+        rows.push(vec![
+            format!("{} ({})", profile.name(), profile.mirrors()),
+            "exact".into(),
+            "loops".into(),
+            "/".into(),
+            "/".into(),
+            format!("{t_exact:.4}"),
+            "1".into(),
+            "1".into(),
+        ]);
+        // Exact with the blocked backend (how fast exact *can* be here).
+        let exact_blocked =
+            ExactPredictor::new(&case.model, MathBackend::Blocked)?;
+        let t_exact_blocked = bench
+            .run(&format!("{}/exact/blocked", profile.name()), || {
+                std::hint::black_box(
+                    exact_blocked.decision_batch(&test.x).unwrap(),
+                );
+            })
+            .mean();
+        rows.push(vec![
+            String::new(),
+            "exact".into(),
+            "blocked".into(),
+            "/".into(),
+            "✓".into(),
+            format!("{t_exact_blocked:.4}"),
+            format!("{:.1}", t_exact / t_exact_blocked),
+            "/".into(),
+        ]);
+
+        // ---- approximation build times (t_approx) per backend ----
+        let t_build_loops = bench
+            .run(&format!("{}/build/loops", profile.name()), || {
+                std::hint::black_box(
+                    build_approx_model(&case.model, MathBackend::Loops)
+                        .unwrap(),
+                );
+            })
+            .mean();
+        let t_build_blocked = bench
+            .run(&format!("{}/build/blocked", profile.name()), || {
+                std::hint::black_box(
+                    build_approx_model(&case.model, MathBackend::Blocked)
+                        .unwrap(),
+                );
+            })
+            .mean();
+        let t_build_xla = match &engine {
+            Some(e) => {
+                // One warm call compiles; then steady-state timing.
+                let t = bench
+                    .run(&format!("{}/build/xla", profile.name()), || {
+                        std::hint::black_box(
+                            e.build_approx(&case.model).unwrap(),
+                        );
+                    })
+                    .mean();
+                Some(t)
+            }
+            None => None,
+        };
+
+        // ---- approx prediction (SIMD off/on, then XLA) ----
+        let am = build_approx_model(&case.model, MathBackend::Blocked)?;
+        let t_pred_scalar = bench
+            .run(&format!("{}/approx/scalar", profile.name()), || {
+                std::hint::black_box(
+                    am.decision_batch(&test.x, MathBackend::Loops).unwrap(),
+                );
+            })
+            .mean();
+        let t_pred_simd = bench
+            .run(&format!("{}/approx/blocked", profile.name()), || {
+                std::hint::black_box(
+                    am.decision_batch(&test.x, MathBackend::Blocked).unwrap(),
+                );
+            })
+            .mean();
+        let t_pred_xla = match &engine {
+            Some(e) => {
+                // Bulk bucket (§Perf L3-P3): offline prediction.
+                let prep = e.prepare_approx_bulk(&am, test.len())?;
+                let t = bench
+                    .run(&format!("{}/approx/xla", profile.name()), || {
+                        std::hint::black_box(
+                            e.approx_predict(&prep, &test.x).unwrap(),
+                        );
+                    })
+                    .mean();
+                Some(t)
+            }
+            None => None,
+        };
+
+        // Paper-style rows: approx with (build backend, SIMD flag).
+        let fmt_ratio = |r: f64| {
+            if r >= 10.0 {
+                format!("{r:.0}")
+            } else {
+                format!("{r:.2}")
+            }
+        };
+        let mut push_approx =
+            |math: &str, t_build: f64, simd: &str, t_pred: f64| {
+                rows.push(vec![
+                    String::new(),
+                    "approx".into(),
+                    math.into(),
+                    format!("{t_build:.4}"),
+                    simd.into(),
+                    format!("{t_pred:.4}"),
+                    fmt_ratio(t_exact / t_pred),
+                    fmt_ratio(t_exact / (t_pred + t_build)),
+                ]);
+            };
+        push_approx("loops", t_build_loops, "×", t_pred_scalar);
+        push_approx("blocked", t_build_blocked, "✓", t_pred_simd);
+        if let (Some(tb), Some(tp)) = (t_build_xla, t_pred_xla) {
+            push_approx("xla", tb, "✓", tp);
+        }
+
+        json_rows.push(Json::obj(vec![
+            ("profile", Json::str(profile.name())),
+            ("n_test", Json::num(test.len() as f64)),
+            ("n_sv", Json::num(case.model.n_sv() as f64)),
+            ("d", Json::num(test.dim() as f64)),
+            ("t_exact_loops", Json::num(t_exact)),
+            ("t_exact_blocked", Json::num(t_exact_blocked)),
+            ("t_build_loops", Json::num(t_build_loops)),
+            ("t_build_blocked", Json::num(t_build_blocked)),
+            (
+                "t_build_xla",
+                t_build_xla.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("t_pred_scalar", Json::num(t_pred_scalar)),
+            ("t_pred_simd", Json::num(t_pred_simd)),
+            (
+                "t_pred_xla",
+                t_pred_xla.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("ratio1_best", Json::num(t_exact / t_pred_simd.min(t_pred_xla.unwrap_or(f64::INFINITY)))),
+        ]));
+    }
+    let path = super::write_results_json("table2", &Json::Arr(json_rows))?;
+    let mut out = String::from(
+        "## Table 2 — prediction speed: exact vs approximated\n\n",
+    );
+    out.push_str(&markdown_table(&rows));
+    out.push_str(&format!("\n(JSON: {path})\n"));
+    Ok(out)
+}

@@ -1,0 +1,95 @@
+//! Table 3: model sizes (text format), exact vs approximated, plus the
+//! LS-SVM ablation the paper calls out in §5 ("compression ratios would
+//! be even larger" because LS-SVM models are non-sparse).
+
+use crate::approx::builder::build_approx_model;
+use crate::data::synth::{SynthProfile, ALL_PROFILES};
+use crate::linalg::MathBackend;
+use crate::svm::lssvm::{train_lssvm, LssvmParams};
+use crate::svm::Kernel;
+use crate::util::bench::markdown_table;
+use crate::util::Json;
+use crate::Result;
+
+use super::context::BenchContext;
+
+fn human(bytes: usize) -> String {
+    if bytes >= 1 << 30 {
+        format!("{:.1} GB", bytes as f64 / (1u64 << 30) as f64)
+    } else if bytes >= 1 << 20 {
+        format!("{:.1} MB", bytes as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.1} KB", bytes as f64 / 1024.0)
+    }
+}
+
+pub fn run(ctx: &BenchContext) -> Result<String> {
+    let mut rows = vec![vec![
+        "data set".to_string(),
+        "d".to_string(),
+        "n_SV".to_string(),
+        "exact".to_string(),
+        "approx".to_string(),
+        "ratio".to_string(),
+    ]];
+    let mut json_rows = Vec::new();
+    for profile in ALL_PROFILES {
+        let mult = super::context::gamma_multipliers(profile)[0];
+        let case = ctx.trained(profile, mult)?;
+        let am = build_approx_model(&case.model, MathBackend::Blocked)?;
+        let exact_sz = case.model.text_size_bytes();
+        let approx_sz = am.text_size_bytes();
+        let ratio = exact_sz as f64 / approx_sz as f64;
+        rows.push(vec![
+            format!("{} ({})", profile.name(), profile.mirrors()),
+            format!("{}", case.model.dim()),
+            format!("{}", case.model.n_sv()),
+            human(exact_sz),
+            human(approx_sz),
+            format!("{ratio:.2}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("profile", Json::str(profile.name())),
+            ("d", Json::num(case.model.dim() as f64)),
+            ("n_sv", Json::num(case.model.n_sv() as f64)),
+            ("exact_bytes", Json::num(exact_sz as f64)),
+            ("approx_bytes", Json::num(approx_sz as f64)),
+            ("ratio", Json::num(ratio)),
+        ]));
+    }
+
+    // LS-SVM ablation (§5): every training point is an SV, so the
+    // exact model balloons while the approx model stays d².
+    let (train, _) = {
+        let (tr, te) = ctx.data(SynthProfile::ControlLike);
+        // LS-SVM is dense O(n²); cap the ablation size.
+        (tr.split_at(tr.len().min(1500)).0, te)
+    };
+    let gamma = crate::approx::bounds::gamma_max_for_data(&train) * 0.8;
+    let ls = train_lssvm(&train, Kernel::Rbf { gamma }, LssvmParams::default())?;
+    let ls_am = build_approx_model(&ls, MathBackend::Blocked)?;
+    let (e, a) = (ls.text_size_bytes(), ls_am.text_size_bytes());
+    rows.push(vec![
+        "control-like LS-SVM".to_string(),
+        format!("{}", ls.dim()),
+        format!("{} (=n)", ls.n_sv()),
+        human(e),
+        human(a),
+        format!("{:.2}", e as f64 / a as f64),
+    ]);
+    json_rows.push(Json::obj(vec![
+        ("profile", Json::str("control-like-lssvm")),
+        ("d", Json::num(ls.dim() as f64)),
+        ("n_sv", Json::num(ls.n_sv() as f64)),
+        ("exact_bytes", Json::num(e as f64)),
+        ("approx_bytes", Json::num(a as f64)),
+        ("ratio", Json::num(e as f64 / a as f64)),
+    ]));
+
+    let path = super::write_results_json("table3", &Json::Arr(json_rows))?;
+    let mut out =
+        String::from("## Table 3 — model sizes (text format)\n\n");
+    out.push_str(&markdown_table(&rows));
+    out.push_str(&format!("\n(JSON: {path})\n"));
+    Ok(out)
+}

@@ -1,0 +1,206 @@
+//! Dynamic batcher: a bounded ingress queue drained by a batching loop
+//! that flushes on `max_batch` or `max_wait`, whichever first — the
+//! standard latency/throughput knob of serving systems. Backpressure is
+//! a hard queue cap: `submit` blocks until space frees (admission
+//! control rather than unbounded memory growth).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::PredictRequest;
+
+/// Bounded MPMC ingress queue (Mutex + Condvar; std-only).
+pub struct IngressQueue {
+    q: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueState {
+    items: VecDeque<PredictRequest>,
+    closed: bool,
+}
+
+impl IngressQueue {
+    pub fn new(capacity: usize) -> Self {
+        IngressQueue {
+            q: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking push (backpressure). Returns false if the queue closed.
+    pub fn push(&self, req: PredictRequest) -> bool {
+        let mut g = self.q.lock().unwrap();
+        while g.items.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(req);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Pop up to `max` items, waiting up to `max_wait` for the *first*
+    /// item and then collecting whatever arrived. Returns `None` when
+    /// closed and drained.
+    pub fn pop_batch(
+        &self,
+        max: usize,
+        max_wait: Duration,
+    ) -> Option<Vec<PredictRequest>> {
+        let mut g = self.q.lock().unwrap();
+        let deadline = Instant::now() + max_wait;
+        while g.items.is_empty() && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(Vec::new()); // timed out: empty batch
+            }
+            let (guard, _) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        if g.items.is_empty() && g.closed {
+            return None;
+        }
+        // First item arrived; linger briefly to fill the batch (half the
+        // remaining wait), then take up to `max`.
+        let linger_deadline =
+            (Instant::now() + max_wait / 2).min(deadline);
+        while g.items.len() < max && !g.closed {
+            let now = Instant::now();
+            if now >= linger_deadline {
+                break;
+            }
+            let (guard, timeout) = self
+                .not_empty
+                .wait_timeout(g, linger_deadline - now)
+                .unwrap();
+            g = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = g.items.len().min(max);
+        let batch: Vec<PredictRequest> = g.items.drain(..take).collect();
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Close the queue: pushes fail, pops drain then return None.
+    pub fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn req(id: u64) -> PredictRequest {
+        PredictRequest { id, features: vec![0.0], enqueued_at: Instant::now() }
+    }
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let q = IngressQueue::new(10);
+        assert!(q.push(req(1)));
+        assert!(q.push(req(2)));
+        let batch = q.pop_batch(10, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn batch_size_cap_respected() {
+        let q = IngressQueue::new(100);
+        for i in 0..10 {
+            q.push(req(i));
+        }
+        let batch = q.pop_batch(4, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn timeout_returns_empty() {
+        let q = IngressQueue::new(4);
+        let t0 = Instant::now();
+        let batch = q.pop_batch(4, Duration::from_millis(20)).unwrap();
+        assert!(batch.is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(18));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = IngressQueue::new(4);
+        q.push(req(1));
+        q.close();
+        assert!(!q.push(req(2)), "push after close must fail");
+        let batch = q.pop_batch(4, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(q.pop_batch(4, Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        let q = Arc::new(IngressQueue::new(2));
+        q.push(req(1));
+        q.push(req(2));
+        let q2 = q.clone();
+        let handle = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            assert!(q2.push(req(3))); // blocks until a pop frees space
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let batch = q.pop_batch(1, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 1);
+        let blocked_for = handle.join().unwrap();
+        assert!(blocked_for >= Duration::from_millis(25), "{blocked_for:?}");
+    }
+
+    #[test]
+    fn concurrent_producers_all_delivered() {
+        let q = Arc::new(IngressQueue::new(64));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    q.push(req(t * 100 + i));
+                }
+            }));
+        }
+        let mut got = 0;
+        while got < 200 {
+            got += q
+                .pop_batch(32, Duration::from_millis(50))
+                .unwrap()
+                .len();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(got, 200);
+    }
+}

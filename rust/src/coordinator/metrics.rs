@@ -1,0 +1,201 @@
+//! Serving metrics: per-route counters, latency distribution (log-scale
+//! histogram + Welford moments), bound-violation counts, throughput.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Welford;
+
+use super::request::Route;
+
+/// Log-scale latency histogram: bucket i covers [10^(i/4 - 7), …) s,
+/// i.e. 100ns … ~100s in quarter-decade steps.
+const BUCKETS: usize = 40;
+
+#[derive(Debug)]
+struct Inner {
+    started: Option<Instant>,
+    served_approx: u64,
+    served_exact: u64,
+    out_of_bound: u64,
+    batches: u64,
+    batch_sizes: Welford,
+    latency: Welford,
+    histogram: [u64; BUCKETS],
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        Inner {
+            started: None,
+            served_approx: 0,
+            served_exact: 0,
+            out_of_bound: 0,
+            batches: 0,
+            batch_sizes: Welford::new(),
+            latency: Welford::new(),
+            histogram: [0; BUCKETS],
+        }
+    }
+}
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub served_approx: u64,
+    pub served_exact: u64,
+    pub out_of_bound: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub mean_latency_s: f64,
+    pub p_latency_s: Vec<(f64, f64)>,
+    pub throughput_rps: f64,
+}
+
+fn bucket_of(lat: Duration) -> usize {
+    let s = lat.as_secs_f64().max(1e-9);
+    let idx = (s.log10() + 7.0) * 4.0;
+    (idx.max(0.0) as usize).min(BUCKETS - 1)
+}
+
+fn bucket_lo(i: usize) -> f64 {
+    10f64.powf(i as f64 / 4.0 - 7.0)
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, route: Route, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.started.get_or_insert_with(Instant::now);
+        g.batches += 1;
+        g.batch_sizes.push(n as f64);
+        match route {
+            Route::Approx => g.served_approx += n as u64,
+            Route::Exact => g.served_exact += n as u64,
+        }
+    }
+
+    pub fn record_response(&self, latency: Duration, in_bound: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.latency.push(latency.as_secs_f64());
+        g.histogram[bucket_of(latency)] += 1;
+        if !in_bound {
+            g.out_of_bound += 1;
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = g
+            .started
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        let total = g.served_approx + g.served_exact;
+        // Percentiles from the histogram (bucket lower edges).
+        let mut p_latency = Vec::new();
+        let served = g.latency.count();
+        if served > 0 {
+            for target in [50.0f64, 95.0, 99.0] {
+                let want = (target / 100.0 * served as f64).ceil() as u64;
+                let mut acc = 0u64;
+                let mut val = bucket_lo(BUCKETS - 1);
+                for (i, &h) in g.histogram.iter().enumerate() {
+                    acc += h;
+                    if acc >= want {
+                        val = bucket_lo(i);
+                        break;
+                    }
+                }
+                p_latency.push((target, val));
+            }
+        }
+        MetricsSnapshot {
+            served_approx: g.served_approx,
+            served_exact: g.served_exact,
+            out_of_bound: g.out_of_bound,
+            batches: g.batches,
+            mean_batch_size: g.batch_sizes.mean(),
+            mean_latency_s: g.latency.mean(),
+            p_latency_s: p_latency,
+            throughput_rps: total as f64 / elapsed,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served_approx", Json::num(self.served_approx as f64)),
+            ("served_exact", Json::num(self.served_exact as f64)),
+            ("out_of_bound", Json::num(self.out_of_bound as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_batch_size", Json::num(self.mean_batch_size)),
+            ("mean_latency_s", Json::num(self.mean_latency_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            (
+                "latency_percentiles",
+                Json::Arr(
+                    self.p_latency_s
+                        .iter()
+                        .map(|&(p, v)| {
+                            Json::obj(vec![
+                                ("p", Json::num(p)),
+                                ("seconds", Json::num(v)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let m = Metrics::new();
+        m.record_batch(Route::Approx, 10);
+        m.record_batch(Route::Exact, 3);
+        m.record_response(Duration::from_micros(50), true);
+        m.record_response(Duration::from_micros(150), false);
+        let s = m.snapshot();
+        assert_eq!(s.served_approx, 10);
+        assert_eq!(s.served_exact, 3);
+        assert_eq!(s.out_of_bound, 1);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_size - 6.5).abs() < 1e-9);
+        assert!(s.mean_latency_s > 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_monotone() {
+        assert!(bucket_of(Duration::from_nanos(100)) <= bucket_of(Duration::from_micros(1)));
+        assert!(bucket_of(Duration::from_micros(1)) < bucket_of(Duration::from_millis(1)));
+        assert!(bucket_of(Duration::from_millis(1)) < bucket_of(Duration::from_secs(1)));
+        assert_eq!(bucket_of(Duration::from_secs(10_000)), BUCKETS - 1);
+    }
+
+    #[test]
+    fn snapshot_json_has_fields() {
+        let m = Metrics::new();
+        m.record_batch(Route::Approx, 1);
+        m.record_response(Duration::from_micros(10), true);
+        let j = m.snapshot().to_json().to_string_compact();
+        assert!(j.contains("served_approx"));
+        assert!(j.contains("latency_percentiles"));
+    }
+}

@@ -1,0 +1,38 @@
+//! L3 coordinator: the serving system around the paper's approximation.
+//!
+//! Architecture (vLLM-router-like, std-only threads):
+//!
+//! ```text
+//!  submit() ──▶ bounded ingress queue ──▶ batcher thread
+//!                                           │  (dynamic batching:
+//!                                           │   max_batch / max_wait)
+//!                                           │  per-instance ‖z‖² +
+//!                                           │  Eq. 3.11 bound check
+//!                                           ▼
+//!                             ┌─── approx batch ───┐ ┌── exact batch ──┐
+//!                             ▼                    ▼ ▼                 ▼
+//!                          executor thread (owns the predictors:
+//!                          native Loops/Blocked or the PJRT engine)
+//!                                           │
+//!                                           ▼
+//!                                response channel ──▶ recv() / wait_all()
+//! ```
+//!
+//! The router turns the paper's run-time validity check (§3.1: "this
+//! bound can be verified during prediction at no extra cost") into an
+//! operational guarantee: with [`RoutePolicy::Hybrid`], instances whose
+//! ‖z‖² violates Eq. (3.11) are escorted to the exact model, so served
+//! accuracy never silently degrades outside the approximation's
+//! validity region.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{PredictRequest, PredictResponse, Route};
+pub use router::RoutePolicy;
+pub use server::{Coordinator, CoordinatorConfig, ExecSpec};

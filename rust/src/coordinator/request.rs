@@ -1,0 +1,64 @@
+//! Request/response types flowing through the coordinator.
+
+use std::time::{Duration, Instant};
+
+/// Which execution path served an instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Route {
+    /// O(d²) approximated model (Eq. 3.8).
+    Approx,
+    /// O(n_SV·d) exact model.
+    Exact,
+}
+
+impl Route {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Route::Approx => "approx",
+            Route::Exact => "exact",
+        }
+    }
+}
+
+/// An inference request (one instance).
+#[derive(Clone, Debug)]
+pub struct PredictRequest {
+    pub id: u64,
+    pub features: Vec<f32>,
+    pub enqueued_at: Instant,
+}
+
+/// A served prediction.
+#[derive(Clone, Debug)]
+pub struct PredictResponse {
+    pub id: u64,
+    /// Decision value f(z) or f̂(z).
+    pub decision: f32,
+    /// sign(decision) as ±1.
+    pub label: f32,
+    pub route: Route,
+    /// ‖z‖² (the bound-check quantity; free by-product).
+    pub znorm_sq: f32,
+    /// True iff Eq. (3.11) held for this instance.
+    pub in_bound: bool,
+    /// Queue + batch + execute latency.
+    pub latency: Duration,
+}
+
+/// A routed batch handed to the executor.
+#[derive(Debug)]
+pub(crate) enum WorkItem {
+    Batch { route: Route, requests: Vec<PredictRequest> },
+    Shutdown,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_names() {
+        assert_eq!(Route::Approx.name(), "approx");
+        assert_eq!(Route::Exact.name(), "exact");
+    }
+}

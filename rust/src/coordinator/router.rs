@@ -1,0 +1,108 @@
+//! Bound-aware routing (the paper's Eq. 3.11 made operational).
+
+use crate::linalg::vecops;
+
+use super::request::Route;
+
+/// Routing policy for incoming instances.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Everything through the approximated model (paper's Table 2
+    /// "approx" rows; guarantees abandoned when out of bound).
+    AlwaysApprox,
+    /// Everything through the exact model (Table 2 "exact" rows).
+    AlwaysExact,
+    /// Approx when Eq. (3.11) holds, exact otherwise: served accuracy
+    /// keeps the 3.05% term-wise guarantee on every instance.
+    Hybrid,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "approx" | "always-approx" => Ok(RoutePolicy::AlwaysApprox),
+            "exact" | "always-exact" => Ok(RoutePolicy::AlwaysExact),
+            "hybrid" | "bound" => Ok(RoutePolicy::Hybrid),
+            other => Err(crate::Error::InvalidArg(format!(
+                "unknown policy '{other}' (approx|exact|hybrid)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::AlwaysApprox => "approx",
+            RoutePolicy::AlwaysExact => "exact",
+            RoutePolicy::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Stateless router: decides the route for one instance.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    pub policy: RoutePolicy,
+    /// ‖z‖² budget from [`crate::approx::ApproxModel::znorm_sq_budget`].
+    pub znorm_sq_budget: f32,
+}
+
+impl Router {
+    /// Route an instance; returns (route, ‖z‖², in_bound).
+    /// ‖z‖² costs O(d) — the same quantity the approx evaluator needs,
+    /// so the check is free in the approx path (paper §3.1).
+    pub fn route(&self, features: &[f32]) -> (Route, f32, bool) {
+        let zn = vecops::norm_sq(features);
+        let in_bound = zn < self.znorm_sq_budget;
+        let route = match self.policy {
+            RoutePolicy::AlwaysApprox => Route::Approx,
+            RoutePolicy::AlwaysExact => Route::Exact,
+            RoutePolicy::Hybrid => {
+                if in_bound {
+                    Route::Approx
+                } else {
+                    Route::Exact
+                }
+            }
+        };
+        (route, zn, in_bound)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hybrid_routes_by_bound() {
+        let r = Router { policy: RoutePolicy::Hybrid, znorm_sq_budget: 1.0 };
+        let (route, zn, ok) = r.route(&[0.5, 0.5]); // ‖z‖² = 0.5 < 1
+        assert_eq!(route, Route::Approx);
+        assert!((zn - 0.5).abs() < 1e-6);
+        assert!(ok);
+        let (route, _, ok) = r.route(&[1.0, 1.0]); // ‖z‖² = 2 ≥ 1
+        assert_eq!(route, Route::Exact);
+        assert!(!ok);
+    }
+
+    #[test]
+    fn fixed_policies_ignore_bound() {
+        let a =
+            Router { policy: RoutePolicy::AlwaysApprox, znorm_sq_budget: 0.0 };
+        assert_eq!(a.route(&[9.0]).0, Route::Approx);
+        let e = Router {
+            policy: RoutePolicy::AlwaysExact,
+            znorm_sq_budget: f32::INFINITY,
+        };
+        assert_eq!(e.route(&[0.0]).0, Route::Exact);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(RoutePolicy::parse("hybrid").unwrap(), RoutePolicy::Hybrid);
+        assert_eq!(
+            RoutePolicy::parse("EXACT").unwrap(),
+            RoutePolicy::AlwaysExact
+        );
+        assert!(RoutePolicy::parse("x").is_err());
+    }
+}

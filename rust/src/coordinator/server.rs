@@ -1,0 +1,406 @@
+//! The coordinator: wires ingress queue → batcher → router → executor →
+//! response channel, owns the threads, and exposes the public serving
+//! API ([`Coordinator::submit`] / [`Coordinator::recv`] /
+//! [`Coordinator::predict_all`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::approx::ApproxModel;
+use crate::log_warn;
+use crate::linalg::Mat;
+use crate::svm::SvmModel;
+use crate::{Error, Result};
+
+use super::batcher::IngressQueue;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{PredictRequest, PredictResponse, Route, WorkItem};
+use super::router::{RoutePolicy, Router};
+pub use super::worker::ExecSpec;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub policy: RoutePolicy,
+    pub exec: ExecSpec,
+    /// Max instances per routed batch.
+    pub max_batch: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Ingress queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            policy: RoutePolicy::Hybrid,
+            exec: ExecSpec::Native(crate::linalg::MathBackend::Blocked),
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 4096,
+        }
+    }
+}
+
+/// A running serving instance over one (exact, approx) model pair.
+pub struct Coordinator {
+    ingress: Arc<IngressQueue>,
+    resp_rx: Mutex<Receiver<PredictResponse>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    dim: usize,
+    batcher: Option<JoinHandle<()>>,
+    worker: Option<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Spawn the serving threads. `exact` and `approx` must describe the
+    /// same underlying model (the builder guarantees this).
+    pub fn start(
+        exact: SvmModel,
+        approx: ApproxModel,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        if exact.dim() != approx.dim() {
+            return Err(Error::Shape(format!(
+                "exact dim {} vs approx dim {}",
+                exact.dim(),
+                approx.dim()
+            )));
+        }
+        let dim = exact.dim();
+        // The router only needs the scalar budget; capture it before the
+        // models move into the executor thread.
+        let router = Router {
+            policy: config.policy,
+            znorm_sq_budget: approx.znorm_sq_budget(),
+        };
+        let ingress = Arc::new(IngressQueue::new(config.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let (work_tx, work_rx): (Sender<WorkItem>, Receiver<WorkItem>) =
+            mpsc::channel();
+        let (resp_tx, resp_rx) = mpsc::channel();
+
+        // Executor thread (owns predictors / PJRT engine).
+        let worker_metrics = metrics.clone();
+        let spec = config.exec.clone();
+        let worker = std::thread::Builder::new()
+            .name("approxrbf-executor".into())
+            .spawn(move || {
+                let out = super::worker::run_worker(
+                    spec,
+                    exact,
+                    approx,
+                    work_rx,
+                    resp_tx,
+                    worker_metrics,
+                );
+                if let Err(ref e) = out {
+                    log_warn!("executor exited with error: {e}");
+                }
+                out
+            })
+            .map_err(|e| Error::Other(format!("spawn executor: {e}")))?;
+
+        // Batcher thread (drains ingress, routes, forwards).
+        let b_ingress = ingress.clone();
+        let (max_batch, max_wait) = (config.max_batch, config.max_wait);
+        let batcher = std::thread::Builder::new()
+            .name("approxrbf-batcher".into())
+            .spawn(move || {
+                loop {
+                    match b_ingress.pop_batch(max_batch, max_wait) {
+                        None => {
+                            let _ = work_tx.send(WorkItem::Shutdown);
+                            break;
+                        }
+                        Some(batch) if batch.is_empty() => continue,
+                        Some(batch) => {
+                            let mut approx_reqs = Vec::new();
+                            let mut exact_reqs = Vec::new();
+                            for req in batch {
+                                let (route, _, _) =
+                                    router.route(&req.features);
+                                match route {
+                                    Route::Approx => approx_reqs.push(req),
+                                    Route::Exact => exact_reqs.push(req),
+                                }
+                            }
+                            if !approx_reqs.is_empty()
+                                && work_tx
+                                    .send(WorkItem::Batch {
+                                        route: Route::Approx,
+                                        requests: approx_reqs,
+                                    })
+                                    .is_err()
+                            {
+                                break;
+                            }
+                            if !exact_reqs.is_empty()
+                                && work_tx
+                                    .send(WorkItem::Batch {
+                                        route: Route::Exact,
+                                        requests: exact_reqs,
+                                    })
+                                    .is_err()
+                            {
+                                break;
+                            }
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Other(format!("spawn batcher: {e}")))?;
+
+        Ok(Coordinator {
+            ingress,
+            resp_rx: Mutex::new(resp_rx),
+            metrics,
+            next_id: AtomicU64::new(0),
+            dim,
+            batcher: Some(batcher),
+            worker: Some(worker),
+        })
+    }
+
+    /// Enqueue one instance; returns its request id. Blocks when the
+    /// ingress queue is full (backpressure).
+    pub fn submit(&self, features: Vec<f32>) -> Result<u64> {
+        if features.len() != self.dim {
+            return Err(Error::Shape(format!(
+                "instance dim {} vs model dim {}",
+                features.len(),
+                self.dim
+            )));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let ok = self.ingress.push(PredictRequest {
+            id,
+            features,
+            enqueued_at: Instant::now(),
+        });
+        if ok {
+            Ok(id)
+        } else {
+            Err(Error::Other("coordinator is shut down".into()))
+        }
+    }
+
+    /// Receive the next completed response (any order across batches).
+    pub fn recv(&self, timeout: Duration) -> Option<PredictResponse> {
+        self.recv_inner(timeout).ok()
+    }
+
+    fn recv_inner(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<PredictResponse, RecvTimeoutError> {
+        self.resp_rx.lock().unwrap().recv_timeout(timeout)
+    }
+
+    /// Convenience synchronous API: submit every row of `z`, wait for
+    /// all responses, return them ordered by row.
+    pub fn predict_all(&self, z: &Mat) -> Result<Vec<PredictResponse>> {
+        let n = z.rows();
+        let mut first_id = None;
+        for r in 0..n {
+            let id = self.submit(z.row(r).to_vec())?;
+            if r == 0 {
+                first_id = Some(id);
+            }
+        }
+        let first_id = first_id.ok_or_else(|| {
+            Error::InvalidArg("empty batch".into())
+        })?;
+        let mut out: Vec<Option<PredictResponse>> = vec![None; n];
+        let mut got = 0;
+        let deadline = Instant::now() + Duration::from_secs(600);
+        while got < n {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| Error::Other("predict_all timed out".into()))?;
+            // Poll in short steps so a slow first batch (e.g. lazy XLA
+            // compilation) is not misread as a dead executor; a truly
+            // disconnected channel (executor died) errors immediately.
+            let resp = match self
+                .recv_inner(remaining.min(Duration::from_millis(200)))
+            {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Other(
+                        "executor thread terminated".into(),
+                    ))
+                }
+            };
+            let idx = (resp.id - first_id) as usize;
+            if idx < n && out[idx].is_none() {
+                out[idx] = Some(resp);
+                got += 1;
+            }
+        }
+        Ok(out.into_iter().map(Option::unwrap).collect())
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// Graceful shutdown: drain, stop threads, surface executor errors.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown_inner()
+    }
+
+    fn shutdown_inner(&mut self) -> Result<()> {
+        self.ingress.close();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.worker.take() {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => return Err(Error::Other("executor panicked".into())),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::builder::build_approx_model;
+    use crate::data::synth;
+    use crate::linalg::MathBackend;
+    use crate::svm::smo::{train_csvc, SmoParams};
+    use crate::svm::Kernel;
+
+    fn setup(gamma: f32) -> (SvmModel, ApproxModel, crate::data::Dataset) {
+        let ds = synth::two_gaussians(71, 250, 6, 1.5);
+        let scaled = crate::data::UnitNormScaler.apply_dataset(&ds);
+        let (model, _) =
+            train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
+                .unwrap();
+        let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+        (model, am, scaled)
+    }
+
+    #[test]
+    fn serves_all_requests_and_matches_direct_eval() {
+        let (model, am, ds) = setup(0.2);
+        let coord = Coordinator::start(
+            model.clone(),
+            am.clone(),
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let responses = coord.predict_all(&ds.x).unwrap();
+        assert_eq!(responses.len(), ds.len());
+        for (r, resp) in responses.iter().enumerate() {
+            // γ in bound ⇒ hybrid routes to approx; value must match the
+            // direct approx evaluation.
+            let (want, _) = am.decision_one(ds.x.row(r));
+            assert_eq!(resp.route, Route::Approx);
+            assert!(
+                (resp.decision - want).abs() < 1e-4,
+                "row {r}: {} vs {want}",
+                resp.decision
+            );
+        }
+        let m = coord.metrics();
+        assert_eq!(m.served_approx as usize, ds.len());
+        assert_eq!(m.served_exact, 0);
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn hybrid_escorts_out_of_bound_to_exact() {
+        let (model, am, ds) = setup(1.5); // γ = 6× γ_max: all out of bound
+        let coord =
+            Coordinator::start(model.clone(), am, CoordinatorConfig::default())
+                .unwrap();
+        let responses = coord.predict_all(&ds.x).unwrap();
+        for (r, resp) in responses.iter().enumerate() {
+            assert_eq!(resp.route, Route::Exact, "row {r}");
+            assert!(!resp.in_bound);
+            let want = model.decision_one(ds.x.row(r));
+            assert!((resp.decision - want).abs() < 1e-3);
+        }
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn always_policies_force_route() {
+        let (model, am, ds) = setup(0.2);
+        for (policy, want) in [
+            (RoutePolicy::AlwaysExact, Route::Exact),
+            (RoutePolicy::AlwaysApprox, Route::Approx),
+        ] {
+            let coord = Coordinator::start(
+                model.clone(),
+                am.clone(),
+                CoordinatorConfig { policy, ..Default::default() },
+            )
+            .unwrap();
+            let responses =
+                coord.predict_all(&ds.x.rows_slice(0, 20)).unwrap();
+            assert!(responses.iter().all(|r| r.route == want));
+            coord.shutdown().unwrap();
+        }
+    }
+
+    #[test]
+    fn dim_mismatch_rejected_at_submit() {
+        let (model, am, _) = setup(0.2);
+        let coord =
+            Coordinator::start(model, am, CoordinatorConfig::default())
+                .unwrap();
+        assert!(coord.submit(vec![0.0; 99]).is_err());
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let (model, am, ds) = setup(0.2);
+        let coord = Coordinator::start(model, am, CoordinatorConfig::default())
+            .unwrap();
+        coord.ingress.close();
+        assert!(coord.submit(ds.x.row(0).to_vec()).is_err());
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let (model, am, ds) = setup(0.2);
+        let coord = Coordinator::start(
+            model,
+            am,
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(20),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let _ = coord.predict_all(&ds.x).unwrap();
+        let m = coord.metrics();
+        assert!(
+            m.mean_batch_size > 1.5,
+            "expected dynamic batching, mean batch {}",
+            m.mean_batch_size
+        );
+        coord.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! Executor thread: owns the predictors (native Rust backends or the
+//! PJRT engine — the engine is `!Send`, so it is constructed *inside*
+//! the thread) and turns routed batches into responses.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+use crate::approx::ApproxModel;
+use crate::linalg::{vecops, Mat, MathBackend};
+use crate::svm::predict::ExactPredictor;
+use crate::svm::SvmModel;
+use crate::Result;
+
+use super::metrics::Metrics;
+use super::request::{PredictRequest, PredictResponse, Route, WorkItem};
+
+/// Which execution substrate the worker uses.
+#[derive(Clone, Debug)]
+pub enum ExecSpec {
+    /// Pure-Rust predictors with the given math backend.
+    Native(MathBackend),
+    /// PJRT engine over AOT artifacts (`make artifacts`).
+    Xla { artifacts_dir: PathBuf },
+}
+
+/// Run the executor loop until a `Shutdown` item arrives.
+/// Called on a dedicated thread by [`super::server::Coordinator`].
+pub(crate) fn run_worker(
+    spec: ExecSpec,
+    exact_model: SvmModel,
+    approx_model: ApproxModel,
+    work_rx: Receiver<WorkItem>,
+    resp_tx: Sender<PredictResponse>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let budget = approx_model.znorm_sq_budget();
+    // Executor closures per route. The XLA engine must be created on
+    // this thread (PJRT handles are not Send).
+    match spec {
+        ExecSpec::Native(backend) => {
+            let exact_pred = ExactPredictor::new(&exact_model, backend)?;
+            serve_loop(
+                work_rx,
+                resp_tx,
+                metrics,
+                budget,
+                |z| approx_model.decision_batch(z, backend).map(|(d, n)| (d, Some(n))),
+                |z| exact_pred.decision_batch(z),
+            )
+        }
+        ExecSpec::Xla { artifacts_dir } => {
+            let engine = crate::runtime::Engine::load(&artifacts_dir)?;
+            let prep_a = engine.prepare_approx(&approx_model)?;
+            let prep_e = engine.prepare_exact(&exact_model)?;
+            serve_loop(
+                work_rx,
+                resp_tx,
+                metrics,
+                budget,
+                |z| engine.approx_predict(&prep_a, z).map(|(d, n)| (d, Some(n))),
+                |z| engine.exact_predict(&prep_e, z),
+            )
+        }
+    }
+}
+
+fn serve_loop<FA, FE>(
+    work_rx: Receiver<WorkItem>,
+    resp_tx: Sender<PredictResponse>,
+    metrics: Arc<Metrics>,
+    znorm_sq_budget: f32,
+    approx_fn: FA,
+    exact_fn: FE,
+) -> Result<()>
+where
+    FA: Fn(&Mat) -> Result<(Vec<f32>, Option<Vec<f32>>)>,
+    FE: Fn(&Mat) -> Result<Vec<f32>>,
+{
+    while let Ok(item) = work_rx.recv() {
+        let (route, requests) = match item {
+            WorkItem::Shutdown => break,
+            WorkItem::Batch { route, requests } => (route, requests),
+        };
+        if requests.is_empty() {
+            continue;
+        }
+        metrics.record_batch(route, requests.len());
+        let z = batch_matrix(&requests);
+        let (decisions, norms) = match route {
+            Route::Approx => {
+                let (d, n) = approx_fn(&z)?;
+                (d, n)
+            }
+            Route::Exact => (exact_fn(&z)?, None),
+        };
+        let norms = norms.unwrap_or_else(|| {
+            (0..z.rows()).map(|r| vecops::norm_sq(z.row(r))).collect()
+        });
+        for (i, req) in requests.into_iter().enumerate() {
+            let in_bound = norms[i] < znorm_sq_budget;
+            let latency = req.enqueued_at.elapsed();
+            metrics.record_response(latency, in_bound);
+            let resp = PredictResponse {
+                id: req.id,
+                decision: decisions[i],
+                label: if decisions[i] >= 0.0 { 1.0 } else { -1.0 },
+                route,
+                znorm_sq: norms[i],
+                in_bound,
+                latency,
+            };
+            if resp_tx.send(resp).is_err() {
+                // Receiver dropped: coordinator is shutting down.
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn batch_matrix(requests: &[PredictRequest]) -> Mat {
+    let d = requests[0].features.len();
+    let mut z = Mat::zeros(requests.len(), d);
+    for (r, req) in requests.iter().enumerate() {
+        z.row_mut(r).copy_from_slice(&req.features);
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn batch_matrix_layout() {
+        let reqs = vec![
+            PredictRequest {
+                id: 1,
+                features: vec![1.0, 2.0],
+                enqueued_at: Instant::now(),
+            },
+            PredictRequest {
+                id: 2,
+                features: vec![3.0, 4.0],
+                enqueued_at: Instant::now(),
+            },
+        ];
+        let m = batch_matrix(&reqs);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Dense labeled dataset: an `(n × d)` feature matrix plus ±1 labels.
+//! LIBSVM sparse files are densified on load — every algorithm here
+//! (SMO with dense kernel rows, the approximation builder, the serving
+//! hot path) operates on dense rows, exactly like the paper's C++
+//! implementation after parsing.
+
+use crate::linalg::Mat;
+use crate::{Error, Result};
+
+/// Labeled dataset with ±1 labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(x: Mat, y: Vec<f32>) -> Result<Dataset> {
+        if x.rows() != y.len() {
+            return Err(Error::Shape(format!(
+                "{} rows vs {} labels",
+                x.rows(),
+                y.len()
+            )));
+        }
+        if let Some(bad) = y.iter().find(|&&v| v != 1.0 && v != -1.0) {
+            return Err(Error::InvalidArg(format!(
+                "labels must be +1/-1, got {bad}"
+            )));
+        }
+        Ok(Dataset { x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Maximum squared row norm — the `‖x_M‖²` of Eq. (3.11).
+    pub fn max_norm_sq(&self) -> f32 {
+        self.x.row_norms_sq().into_iter().fold(0.0, f32::max)
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_fraction(&self) -> f64 {
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64
+            / self.len().max(1) as f64
+    }
+
+    /// Split into (head, tail) at `count` rows.
+    pub fn split_at(&self, count: usize) -> (Dataset, Dataset) {
+        assert!(count <= self.len());
+        let head = Dataset {
+            x: self.x.rows_slice(0, count),
+            y: self.y[..count].to_vec(),
+        };
+        let tail = Dataset {
+            x: self.x.rows_slice(count, self.len() - count),
+            y: self.y[count..].to_vec(),
+        };
+        (head, tail)
+    }
+
+    /// Deterministically shuffle rows.
+    pub fn shuffled(&self, rng: &mut crate::util::Rng) -> Dataset {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        Dataset {
+            x: self.x.gather_rows(&idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+
+    /// Subset by row indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            Mat::from_vec(4, 2, vec![0., 0., 1., 0., 0., 3., 1., 1.]).unwrap(),
+            vec![1.0, -1.0, 1.0, -1.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn constructor_validates() {
+        assert!(Dataset::new(Mat::zeros(3, 2), vec![1.0, -1.0]).is_err());
+        assert!(Dataset::new(Mat::zeros(2, 2), vec![1.0, 0.5]).is_err());
+    }
+
+    #[test]
+    fn max_norm_and_balance() {
+        let d = tiny();
+        assert_eq!(d.max_norm_sq(), 9.0);
+        assert!((d.positive_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_and_subset() {
+        let d = tiny();
+        let (a, b) = d.split_at(1);
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.y, vec![-1.0, 1.0, -1.0]);
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.x.row(0), &[1., 1.]);
+        assert_eq!(s.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let d = tiny();
+        let mut rng = crate::util::Rng::new(1);
+        let s = d.shuffled(&mut rng);
+        // Every (row, label) pair of the original must appear once.
+        for i in 0..d.len() {
+            let found = (0..s.len()).any(|j| {
+                s.x.row(j) == d.x.row(i) && s.y[j] == d.y[i]
+            });
+            assert!(found);
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! LIBSVM sparse text format I/O (the format of every dataset the paper
+//! uses): `label idx:val idx:val ...` with 1-based, strictly-increasing
+//! indices. Densified on read; sparse-written (zeros elided) so model
+//! and dataset sizes are comparable to the paper's Table 3 accounting.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::{Error, Result};
+
+/// Parse LIBSVM-format text. `dim_hint` forces the dimensionality
+/// (features past it are rejected); with `None` the max seen index wins.
+pub fn parse(text: &str, dim_hint: Option<usize>) -> Result<Dataset> {
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let label: f32 = it
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|_| bad(lineno, "label"))?;
+        let label = if label > 0.0 { 1.0 } else { -1.0 };
+        let mut feats = Vec::new();
+        let mut prev = 0usize;
+        for tok in it {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| bad(lineno, "feature (idx:val)"))?;
+            let idx: usize = i.parse().map_err(|_| bad(lineno, "index"))?;
+            let val: f32 = v.parse().map_err(|_| bad(lineno, "value"))?;
+            if idx == 0 || idx <= prev {
+                return Err(bad(lineno, "indices must be 1-based increasing"));
+            }
+            prev = idx;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push((label, feats));
+    }
+    let d = match dim_hint {
+        Some(d) => {
+            if max_idx > d {
+                return Err(Error::Parse(format!(
+                    "feature index {max_idx} exceeds dim hint {d}"
+                )));
+            }
+            d
+        }
+        None => max_idx,
+    };
+    let mut x = Mat::zeros(rows.len(), d);
+    let mut y = Vec::with_capacity(rows.len());
+    for (r, (label, feats)) in rows.into_iter().enumerate() {
+        y.push(label);
+        for (c, v) in feats {
+            *x.at_mut(r, c) = v;
+        }
+    }
+    Dataset::new(x, y)
+}
+
+fn bad(lineno: usize, what: &str) -> Error {
+    Error::Parse(format!("line {}: bad {what}", lineno + 1))
+}
+
+/// Serialize a dataset as LIBSVM sparse text (zeros elided).
+pub fn to_string(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for r in 0..ds.len() {
+        out.push_str(if ds.y[r] > 0.0 { "+1" } else { "-1" });
+        for (c, &v) in ds.x.row(r).iter().enumerate() {
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{}", c + 1, fmt_f32(v)));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Shortest f32 text that round-trips (paper stores models/data as text;
+/// Table 3 sizes depend on this).
+pub fn fmt_f32(v: f32) -> String {
+    let s = format!("{v}");
+    debug_assert_eq!(s.parse::<f32>().ok(), Some(v));
+    s
+}
+
+pub fn load(path: &Path, dim_hint: Option<usize>) -> Result<Dataset> {
+    let file = std::fs::File::open(path)?;
+    let mut text = String::new();
+    let mut reader = std::io::BufReader::new(file);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            break;
+        }
+        text.push_str(&line);
+    }
+    parse(&text, dim_hint)
+}
+
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(to_string(ds).as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+
+    #[test]
+    fn parse_basic() {
+        let ds =
+            parse("+1 1:0.5 3:2\n-1 2:1 # comment\n\n+1 1:-3\n", None).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.dim(), 3);
+        assert_eq!(ds.x.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.x.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn labels_coerced_to_sign() {
+        let ds = parse("3 1:1\n0 1:1\n", None).unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("+1 0:1\n", None).is_err()); // 0-based
+        assert!(parse("+1 2:1 1:1\n", None).is_err()); // not increasing
+        assert!(parse("+1 1\n", None).is_err()); // missing colon
+        assert!(parse("abc 1:1\n", None).is_err()); // bad label
+        assert!(parse("+1 5:1\n", Some(3)).is_err()); // beyond hint
+    }
+
+    #[test]
+    fn dim_hint_pads() {
+        let ds = parse("+1 1:1\n", Some(10)).unwrap();
+        assert_eq!(ds.dim(), 10);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "+1 1:0.25 4:-3.5\n-1 2:1000\n+1 1:1 2:2 3:3 4:4\n";
+        let ds = parse(src, None).unwrap();
+        let back = parse(&to_string(&ds), Some(ds.dim())).unwrap();
+        assert_eq!(ds.y, back.y);
+        assert_eq!(ds.x.max_abs_diff(&back.x), 0.0);
+    }
+
+    #[test]
+    fn fmt_f32_roundtrips() {
+        for v in [0.1f32, -1e-8, 3.4e38, 1.0, -0.0, 123456.78] {
+            assert_eq!(fmt_f32(v).parse::<f32>().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random_sparse() {
+        prop_cases!("libsvm-roundtrip", 8, |rng| {
+            let n = 1 + rng.below(20);
+            let d = 1 + rng.below(30);
+            let mut x = Mat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.chance(0.3) {
+                        *x.at_mut(r, c) = rng.normal() as f32;
+                    }
+                }
+            }
+            // Ensure the max column is populated so dims survive.
+            *x.at_mut(0, d - 1) = 1.0;
+            let y: Vec<f32> = (0..n)
+                .map(|_| if rng.chance(0.5) { 1.0 } else { -1.0 })
+                .collect();
+            let ds = Dataset::new(x, y).unwrap();
+            let back = parse(&to_string(&ds), Some(d)).unwrap();
+            assert_eq!(back.y, ds.y);
+            assert_eq!(ds.x.max_abs_diff(&back.x), 0.0);
+        });
+    }
+}

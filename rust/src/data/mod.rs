@@ -1,0 +1,13 @@
+//! Data substrate: dense dataset container, LIBSVM-format I/O, feature
+//! scaling and the synthetic generators that stand in for the paper's
+//! five benchmark datasets (a9a / mnist / ijcnn1 / sensit / epsilon);
+//! see DESIGN.md §4–5 for the substitution rationale.
+
+pub mod dataset;
+pub mod libsvm_format;
+pub mod scale;
+pub mod synth;
+
+pub use dataset::Dataset;
+pub use scale::{MinMaxScaler, UnitNormScaler};
+pub use synth::SynthProfile;

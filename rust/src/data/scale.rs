@@ -1,0 +1,116 @@
+//! Feature scaling. The paper's bound (Eq. 3.11) is driven by data
+//! norms, so scaling is part of the method's operating envelope: the
+//! paper computes `γ_MAX` *after* normalization (Table 1 caption).
+//! `MinMaxScaler` mirrors `svm-scale`; `UnitNormScaler` produces the
+//! ‖x‖=1 regime of Cao et al. that the paper generalizes away from.
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+
+/// Per-feature affine scaling to `[lo, hi]` (like `svm-scale`).
+#[derive(Clone, Debug)]
+pub struct MinMaxScaler {
+    pub lo: f32,
+    pub hi: f32,
+    mins: Vec<f32>,
+    maxs: Vec<f32>,
+}
+
+impl MinMaxScaler {
+    /// Fit feature ranges on a training set.
+    pub fn fit(x: &Mat, lo: f32, hi: f32) -> MinMaxScaler {
+        let d = x.cols();
+        let mut mins = vec![f32::INFINITY; d];
+        let mut maxs = vec![f32::NEG_INFINITY; d];
+        for r in 0..x.rows() {
+            for (c, &v) in x.row(r).iter().enumerate() {
+                mins[c] = mins[c].min(v);
+                maxs[c] = maxs[c].max(v);
+            }
+        }
+        MinMaxScaler { lo, hi, mins, maxs }
+    }
+
+    /// Apply to a matrix (constant features map to `lo`).
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for r in 0..x.rows() {
+            let row = out.row_mut(r);
+            for c in 0..row.len() {
+                let range = self.maxs[c] - self.mins[c];
+                row[c] = if range > 0.0 {
+                    self.lo
+                        + (self.hi - self.lo) * (row[c] - self.mins[c]) / range
+                } else {
+                    self.lo
+                };
+            }
+        }
+        out
+    }
+
+    pub fn apply_dataset(&self, ds: &Dataset) -> Dataset {
+        Dataset { x: self.apply(&ds.x), y: ds.y.clone() }
+    }
+}
+
+/// Row-wise scaling to unit L2 norm (zero rows left untouched).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UnitNormScaler;
+
+impl UnitNormScaler {
+    pub fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for r in 0..x.rows() {
+            let row = out.row_mut(r);
+            let n = crate::linalg::vecops::norm_sq(row).sqrt();
+            if n > 0.0 {
+                crate::linalg::vecops::scale(1.0 / n, row);
+            }
+        }
+        out
+    }
+
+    pub fn apply_dataset(&self, ds: &Dataset) -> Dataset {
+        Dataset { x: self.apply(&ds.x), y: ds.y.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minmax_maps_to_range() {
+        let x = Mat::from_vec(3, 2, vec![0., 10., 5., 20., 10., 30.]).unwrap();
+        let s = MinMaxScaler::fit(&x, 0.0, 1.0);
+        let y = s.apply(&x);
+        assert_eq!(y.row(0), &[0.0, 0.0]);
+        assert_eq!(y.row(1), &[0.5, 0.5]);
+        assert_eq!(y.row(2), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn minmax_constant_feature() {
+        let x = Mat::from_vec(2, 1, vec![5.0, 5.0]).unwrap();
+        let s = MinMaxScaler::fit(&x, -1.0, 1.0);
+        assert_eq!(s.apply(&x).row(0), &[-1.0]);
+    }
+
+    #[test]
+    fn minmax_test_set_can_exceed_range() {
+        // svm-scale semantics: apply training ranges verbatim.
+        let train = Mat::from_vec(2, 1, vec![0.0, 10.0]).unwrap();
+        let s = MinMaxScaler::fit(&train, 0.0, 1.0);
+        let test = Mat::from_vec(1, 1, vec![20.0]).unwrap();
+        assert_eq!(s.apply(&test).at(0, 0), 2.0);
+    }
+
+    #[test]
+    fn unit_norm_rows() {
+        let x = Mat::from_vec(2, 2, vec![3., 4., 0., 0.]).unwrap();
+        let y = UnitNormScaler.apply(&x);
+        assert!((crate::linalg::vecops::norm_sq(y.row(0)) - 1.0).abs() < 1e-6);
+        assert_eq!(y.row(1), &[0.0, 0.0]); // zero row untouched
+    }
+}

@@ -1,0 +1,429 @@
+//! Synthetic dataset generators standing in for the paper's five LIBSVM
+//! benchmark datasets (no network in this environment — DESIGN.md §4).
+//!
+//! Each profile matches the original on the axes the approximation is
+//! sensitive to: dimensionality `d`, feature support/sparsity (⇒ the
+//! norm distribution ⇒ `γ_MAX` of Eq. 3.11), class geometry (mixture
+//! complexity ⇒ realistic support-vector fractions) and class balance.
+//! Sizes are scaled down ~5–10× so SMO training fits the session budget;
+//! every phenomenon reproduced in EXPERIMENTS.md is a function of
+//! `(d, n_SV, γ‖x‖²)`, not of absolute dataset size.
+//!
+//! All generators are deterministic in the seed.
+
+use crate::data::Dataset;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// The five dataset profiles (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SynthProfile {
+    /// a9a-like: binary dummy variables, heavy class overlap, d=123.
+    AdultLike,
+    /// mnist-like: sparse non-negative [0,1], ~19% density, d=780.
+    DigitsLike,
+    /// ijcnn1-like: dense low-d well-separated, d=22.
+    ControlLike,
+    /// sensit-like: dense unit-scaled, noisy 1-vs-rest, d=100.
+    VehicleLike,
+    /// epsilon-like: dense high-d, d=2000.
+    WideLike,
+}
+
+pub const ALL_PROFILES: [SynthProfile; 5] = [
+    SynthProfile::AdultLike,
+    SynthProfile::DigitsLike,
+    SynthProfile::ControlLike,
+    SynthProfile::VehicleLike,
+    SynthProfile::WideLike,
+];
+
+impl SynthProfile {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "adult" | "adult-like" | "a9a" => Ok(SynthProfile::AdultLike),
+            "digits" | "digits-like" | "mnist" => Ok(SynthProfile::DigitsLike),
+            "control" | "control-like" | "ijcnn1" => {
+                Ok(SynthProfile::ControlLike)
+            }
+            "vehicle" | "vehicle-like" | "sensit" => {
+                Ok(SynthProfile::VehicleLike)
+            }
+            "wide" | "wide-like" | "epsilon" => Ok(SynthProfile::WideLike),
+            other => Err(crate::Error::InvalidArg(format!(
+                "unknown profile '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SynthProfile::AdultLike => "adult-like",
+            SynthProfile::DigitsLike => "digits-like",
+            SynthProfile::ControlLike => "control-like",
+            SynthProfile::VehicleLike => "vehicle-like",
+            SynthProfile::WideLike => "wide-like",
+        }
+    }
+
+    /// Which paper dataset this mirrors.
+    pub fn mirrors(&self) -> &'static str {
+        match self {
+            SynthProfile::AdultLike => "a9a",
+            SynthProfile::DigitsLike => "mnist",
+            SynthProfile::ControlLike => "ijcnn1",
+            SynthProfile::VehicleLike => "sensit",
+            SynthProfile::WideLike => "epsilon",
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            SynthProfile::AdultLike => 123,
+            SynthProfile::DigitsLike => 780,
+            SynthProfile::ControlLike => 22,
+            SynthProfile::VehicleLike => 100,
+            SynthProfile::WideLike => 2000,
+        }
+    }
+
+    /// Scaled-down (n_train, n_test) defaults.
+    pub fn default_sizes(&self) -> (usize, usize) {
+        match self {
+            SynthProfile::AdultLike => (6000, 4000),
+            SynthProfile::DigitsLike => (3000, 2000),
+            SynthProfile::ControlLike => (8000, 10000),
+            SynthProfile::VehicleLike => (8000, 5000),
+            SynthProfile::WideLike => (1500, 1500),
+        }
+    }
+
+    /// SVM cost parameter that yields paper-like SV fractions.
+    pub fn default_cost(&self) -> f32 {
+        match self {
+            SynthProfile::AdultLike => 1.0,
+            SynthProfile::DigitsLike => 2.0,
+            SynthProfile::ControlLike => 2.0,
+            SynthProfile::VehicleLike => 1.0,
+            SynthProfile::WideLike => 1.0,
+        }
+    }
+
+    /// Generate (train, test) with default sizes.
+    pub fn generate_default(&self, seed: u64) -> (Dataset, Dataset) {
+        let (ntr, nte) = self.default_sizes();
+        self.generate(seed, ntr, nte)
+    }
+
+    /// Generate (train, test) deterministically from `seed`.
+    pub fn generate(
+        &self,
+        seed: u64,
+        n_train: usize,
+        n_test: usize,
+    ) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed ^ 0xDA7A_5E7);
+        let total = n_train + n_test;
+        let ds = match self {
+            SynthProfile::AdultLike => gen_binary_dummies(&mut rng, total, 123),
+            SynthProfile::DigitsLike => {
+                gen_sparse_nonneg(&mut rng, total, 780, 0.19)
+            }
+            SynthProfile::ControlLike => {
+                gen_gaussian_mixture(&mut rng, total, 22, 6, 1.7, 0.8)
+            }
+            SynthProfile::VehicleLike => {
+                gen_gaussian_mixture(&mut rng, total, 100, 3, 0.75, 1.25)
+            }
+            SynthProfile::WideLike => {
+                gen_gaussian_mixture(&mut rng, total, 2000, 3, 0.85, 1.3)
+            }
+        };
+        let shuffled = ds.shuffled(&mut rng);
+        shuffled.split_at(n_train)
+    }
+}
+
+/// Dense Gaussian mixture: `k` clusters per class on a scaled simplex,
+/// class separation `sep`, within-cluster std `noise`. Features are
+/// finally squashed to roughly unit scale (x / sqrt(d) style) so norms
+/// are d-independent-ish, like unit-scaled real data.
+fn gen_gaussian_mixture(
+    rng: &mut Rng,
+    n: usize,
+    d: usize,
+    k: usize,
+    sep: f64,
+    noise: f64,
+) -> Dataset {
+    // Cluster centers: random directions of length `sep`, mirrored per
+    // class with a per-cluster offset so the boundary is multi-modal.
+    let latent = d.min(24);
+    let mut centers = Vec::new(); // (class, center)
+    for class in [1.0f32, -1.0] {
+        for _ in 0..k {
+            let mut c = vec![0.0f32; d];
+            for j in 0..latent {
+                c[j] = (rng.normal() * sep * f64::from(class)) as f32;
+            }
+            // Scatter the remaining dims weakly so high-d profiles are
+            // not trivially separable on a low-d subspace.
+            for item in c.iter_mut().take(d).skip(latent) {
+                *item = (rng.normal() * 0.2) as f32;
+            }
+            centers.push((class, c));
+        }
+    }
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let (class, center) = &centers[rng.below(centers.len())];
+        y.push(*class);
+        let row = x.row_mut(r);
+        for j in 0..d {
+            row[j] =
+                ((f64::from(center[j]) + rng.normal() * noise) * scale) as f32;
+        }
+    }
+    Dataset::new(x, y).expect("valid synth dataset")
+}
+
+/// Binary dummy variables (a9a-like): per class, `k` prototype Bernoulli
+/// probability vectors; a sample draws its bits from one prototype.
+/// Groups of features are one-hot (like a9a's categorical encodings).
+fn gen_binary_dummies(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    const K: usize = 4;
+    const GROUP: usize = 8; // one-hot group width
+    let groups = d / GROUP;
+    // Prototypes: per class, per group a categorical distribution.
+    let mut protos: Vec<(f32, Vec<Vec<f64>>)> = Vec::new();
+    for class in [1.0f32, -1.0] {
+        for _ in 0..K {
+            let mut dist = Vec::with_capacity(groups);
+            for _ in 0..groups {
+                let mut p: Vec<f64> =
+                    (0..GROUP).map(|_| rng.uniform().powi(2) + 0.02).collect();
+                let s: f64 = p.iter().sum();
+                for v in &mut p {
+                    *v /= s;
+                }
+                dist.push(p);
+            }
+            protos.push((class, dist));
+        }
+    }
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let (class, dist) = &protos[rng.below(protos.len())];
+        y.push(*class);
+        let row = x.row_mut(r);
+        for (g, p) in dist.iter().enumerate() {
+            // Sample one-hot index from the categorical; 10% noise flip.
+            let idx = if rng.chance(0.18) {
+                rng.below(GROUP)
+            } else {
+                let u = rng.uniform();
+                let mut acc = 0.0;
+                let mut pick = GROUP - 1;
+                for (i, &pi) in p.iter().enumerate() {
+                    acc += pi;
+                    if u < acc {
+                        pick = i;
+                        break;
+                    }
+                }
+                pick
+            };
+            row[g * GROUP + idx] = 1.0;
+        }
+        // Trailing features (d % GROUP) stay mostly zero with noise.
+        for j in groups * GROUP..d {
+            if rng.chance(0.05) {
+                row[j] = 1.0;
+            }
+        }
+    }
+    Dataset::new(x, y).expect("valid synth dataset")
+}
+
+/// Sparse non-negative [0,1] features (mnist-like): per class prototype
+/// supports of the target density; values are prototype + noise, clipped.
+fn gen_sparse_nonneg(rng: &mut Rng, n: usize, d: usize, density: f64) -> Dataset {
+    const K: usize = 8;
+    struct Proto {
+        class: f32,
+        support: Vec<usize>,
+        values: Vec<f32>,
+    }
+    let nsup = ((d as f64) * density) as usize;
+    let mut protos = Vec::new();
+    for class in [1.0f32, -1.0] {
+        // The negative class ("rest") gets more prototypes: it aggregates
+        // 9 digits in the original 1-vs-rest task.
+        let kk = if class > 0.0 { K / 2 } else { K };
+        for _ in 0..kk {
+            let support = rng.sample_indices(d, nsup);
+            let values =
+                (0..nsup).map(|_| rng.range(0.3, 1.0) as f32).collect();
+            protos.push(Proto { class, support, values });
+        }
+    }
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for r in 0..n {
+        let p = &protos[rng.below(protos.len())];
+        y.push(p.class);
+        let row = x.row_mut(r);
+        for (s, &j) in p.support.iter().enumerate() {
+            if rng.chance(0.85) {
+                let v = f64::from(p.values[s]) + rng.normal() * 0.22;
+                row[j] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+        // Cross-class bleed: like confusable digit pairs (4/9, 3/8), a
+        // third of samples mix in half of another class's prototype —
+        // this drives realistic SV fractions (mnist: ~2k SVs).
+        if rng.chance(0.35) {
+            let q = &protos[rng.below(protos.len())];
+            if q.class != p.class {
+                for (s, &j) in q.support.iter().enumerate() {
+                    if rng.chance(0.5) {
+                        let v = f64::from(q.values[s]) * 0.55
+                            + rng.normal() * 0.1;
+                        row[j] =
+                            (f64::from(row[j]) + v).clamp(0.0, 1.0) as f32;
+                    }
+                }
+            }
+        }
+        // Background speckle.
+        for _ in 0..d / 50 {
+            let j = rng.below(d);
+            if row[j] == 0.0 && rng.chance(0.3) {
+                row[j] = rng.range(0.0, 0.4) as f32;
+            }
+        }
+    }
+    Dataset::new(x, y).expect("valid synth dataset")
+}
+
+/// Simple two-Gaussian testing helper (not a paper profile).
+pub fn two_gaussians(seed: u64, n: usize, d: usize, sep: f64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    gen_gaussian_mixture(&mut rng, n, d, 1, sep, 0.6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (a, _) = SynthProfile::ControlLike.generate(7, 100, 50);
+        let (b, _) = SynthProfile::ControlLike.generate(7, 100, 50);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.max_abs_diff(&b.x), 0.0);
+        let (c, _) = SynthProfile::ControlLike.generate(8, 100, 50);
+        assert!(a.x.max_abs_diff(&c.x) > 0.0);
+    }
+
+    #[test]
+    fn dims_and_sizes_match_profile() {
+        for p in ALL_PROFILES {
+            let (tr, te) = p.generate(1, 200, 100);
+            assert_eq!(tr.dim(), p.dim(), "{}", p.name());
+            assert_eq!(tr.len(), 200);
+            assert_eq!(te.len(), 100);
+        }
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        for p in [SynthProfile::ControlLike, SynthProfile::AdultLike] {
+            let (tr, _) = p.generate(3, 2000, 10);
+            let frac = tr.positive_fraction();
+            assert!((0.3..0.7).contains(&frac), "{}: {frac}", p.name());
+        }
+    }
+
+    #[test]
+    fn adult_like_is_binary() {
+        let (tr, _) = SynthProfile::AdultLike.generate(2, 300, 10);
+        for r in 0..tr.len() {
+            for &v in tr.x.row(r) {
+                assert!(v == 0.0 || v == 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn digits_like_density_near_target() {
+        let (tr, _) = SynthProfile::DigitsLike.generate(2, 300, 10);
+        let nz: usize = (0..tr.len())
+            .map(|r| tr.x.row(r).iter().filter(|&&v| v != 0.0).count())
+            .sum();
+        let density = nz as f64 / (tr.len() * tr.dim()) as f64;
+        assert!((0.10..0.30).contains(&density), "density={density}");
+        for r in 0..tr.len() {
+            for &v in tr.x.row(r) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn mixture_classes_separable_better_than_chance() {
+        // Nearest-centroid on the control profile must beat chance by a
+        // wide margin; guards against degenerate geometry.
+        let (tr, te) = SynthProfile::ControlLike.generate(5, 1000, 500);
+        let d = tr.dim();
+        let mut cpos = vec![0.0f64; d];
+        let mut cneg = vec![0.0f64; d];
+        let (mut npos, mut nneg) = (0.0f64, 0.0f64);
+        for r in 0..tr.len() {
+            let row = tr.x.row(r);
+            if tr.y[r] > 0.0 {
+                npos += 1.0;
+                for j in 0..d {
+                    cpos[j] += f64::from(row[j]);
+                }
+            } else {
+                nneg += 1.0;
+                for j in 0..d {
+                    cneg[j] += f64::from(row[j]);
+                }
+            }
+        }
+        for j in 0..d {
+            cpos[j] /= npos;
+            cneg[j] /= nneg;
+        }
+        let mut hits = 0;
+        for r in 0..te.len() {
+            let row = te.x.row(r);
+            let dp: f64 = (0..d)
+                .map(|j| (f64::from(row[j]) - cpos[j]).powi(2))
+                .sum();
+            let dn: f64 = (0..d)
+                .map(|j| (f64::from(row[j]) - cneg[j]).powi(2))
+                .sum();
+            let pred = if dp < dn { 1.0 } else { -1.0 };
+            if pred == f64::from(te.y[r]) {
+                hits += 1;
+            }
+        }
+        let acc = f64::from(hits) / te.len() as f64;
+        assert!(acc > 0.7, "nearest-centroid acc {acc}");
+    }
+
+    #[test]
+    fn profile_parse_aliases() {
+        assert_eq!(
+            SynthProfile::parse("mnist").unwrap(),
+            SynthProfile::DigitsLike
+        );
+        assert!(SynthProfile::parse("nope").is_err());
+    }
+}

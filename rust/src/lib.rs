@@ -1,0 +1,80 @@
+//! # approxrbf
+//!
+//! Production-grade reproduction of *“Fast Prediction with SVM Models
+//! Containing RBF Kernels”* (Claesen, De Smet, Suykens, De Moor; stat.ML
+//! 2014): a second-order Maclaurin approximation of RBF-kernel decision
+//! functions that replaces the `O(n_SV · d)` sum over support vectors
+//! with a fixed `O(d²)` quadratic form
+//!
+//! ```text
+//! f̂(z) = exp(-γ‖z‖²) · (c + vᵀz + zᵀMz) + b
+//! ```
+//!
+//! plus the paper's run-time validity bound (Eq. 3.11) made operational
+//! as a *bound-aware hybrid router* in the serving layer.
+//!
+//! ## Architecture (three layers, Python never on the request path)
+//!
+//! * **L1/L2** — JAX + Pallas kernels (`python/compile/`) AOT-lowered to
+//!   HLO text (`make artifacts`).
+//! * **Runtime** — [`runtime::Engine`] loads the artifacts via PJRT
+//!   (the `xla` crate) and executes them from the Rust hot loop; pure
+//!   Rust fallback executors ([`linalg`], [`svm::predict`]) provide the
+//!   paper's LOOPS/“BLAS” axes and run without artifacts.
+//! * **L3** — [`coordinator`]: request router, dynamic batcher,
+//!   bound-aware approx/exact hybrid routing, metrics.
+//!
+//! ## Substrates
+//!
+//! Everything the paper depends on is implemented here from scratch:
+//! an SMO trainer ([`svm::smo`], the LIBSVM role), LS-SVM ([`svm::lssvm`]),
+//! LIBSVM-format data/model I/O ([`data::libsvm_format`], [`svm::model`]),
+//! dense linear algebra with naive/blocked backends ([`linalg`]),
+//! synthetic dataset generators matched to the paper's five benchmark
+//! sets ([`data::synth`]), an ANN comparator ([`svm::ann_approx`]), and a
+//! statistics/benchmark harness ([`util::bench`]).
+
+pub mod approx;
+pub mod benchsuite;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod runtime;
+pub mod svm;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Convenience re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::approx::{ApproxModel, BoundReport};
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+    pub use crate::data::{Dataset, SynthProfile};
+    pub use crate::linalg::{Mat, MathBackend};
+    pub use crate::runtime::Engine;
+    pub use crate::svm::{Kernel, SmoParams, SvmModel};
+    pub use crate::{Error, Result};
+}

@@ -1,0 +1,196 @@
+//! GEMM kernels: `C = A · Bᵀ` with both matrices row-major.
+//!
+//! The `A·Bᵀ` shape is what every hot path here needs — the cross-term
+//! `Z·Xᵀ` of the exact RBF kernel and `Z·M` of the quadratic form (M is
+//! symmetric, so `Z·Mᵀ = Z·M`) — and it is the cache-friendliest layout
+//! for row-major data: every inner product walks two contiguous rows.
+//!
+//! Two implementations mirror the paper's math axis:
+//! * [`gemm_nt_loops`] — naive triple loop (paper: LOOPS).
+//! * [`gemm_nt_blocked`] — row/col tiling + 8-lane dots + threads
+//!   (paper: BLAS/ATLAS role).
+
+use super::matrix::Mat;
+use super::vecops;
+
+/// Naive `C = A · Bᵀ`: textbook triple loop with scalar accumulation.
+pub fn gemm_nt_loops(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "inner dims");
+    let (m, n, k) = (a.rows(), b.rows(), a.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a.at(i, p) * b.at(j, p);
+            }
+            *c.at_mut(i, j) = acc;
+        }
+    }
+    c
+}
+
+/// Blocked `C = A · Bᵀ`: tile rows/cols for L2 residency, 8-lane
+/// autovectorized inner dots, and parallelize across row panels with
+/// scoped threads.
+pub fn gemm_nt_blocked(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "inner dims");
+    let (m, n) = (a.rows(), b.rows());
+    let mut c = Mat::zeros(m, n);
+    let threads = effective_threads(m);
+    const JB: usize = 64; // column tile (rows of B)
+
+    // Split C into contiguous row panels, one per thread.
+    let rows_per = m.div_ceil(threads);
+    let c_cols = n;
+    let panels: Vec<(usize, &mut [f32])> = {
+        let mut out = Vec::new();
+        let mut rest = c.as_mut_slice();
+        let mut row0 = 0;
+        while row0 < m {
+            let take = rows_per.min(m - row0);
+            let (head, tail) = rest.split_at_mut(take * c_cols);
+            out.push((row0, head));
+            rest = tail;
+            row0 += take;
+        }
+        out
+    };
+
+    std::thread::scope(|scope| {
+        for (row0, panel) in panels {
+            scope.spawn(move || {
+                let rows = panel.len() / c_cols;
+                for j0 in (0..n).step_by(JB) {
+                    let j1 = (j0 + JB).min(n);
+                    for i in 0..rows {
+                        let arow = a.row(row0 + i);
+                        let crow = &mut panel[i * c_cols..(i + 1) * c_cols];
+                        // Plain 8-lane dots: measured FASTER than a
+                        // 1x4 multi-row micro-kernel here (register
+                        // spills) — EXPERIMENTS.md §Perf L3-P2.
+                        for j in j0..j1 {
+                            crow[j] = vecops::dot(arow, b.row(j));
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Matrix–vector product `y = A·x` (row-major, autovectorized dots).
+pub fn gemv(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| vecops::dot(a.row(i), x)).collect()
+}
+
+/// Choose a thread count: respect `APPROXRBF_THREADS`, default to
+/// available parallelism, never more than one thread per 32 rows.
+pub fn effective_threads(rows: usize) -> usize {
+    let max = std::env::var("APPROXRBF_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    max.clamp(1, (rows / 32).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+    use crate::util::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_vec(
+            r,
+            c,
+            (0..r * c).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn blocked_matches_loops() {
+        let mut rng = Rng::new(3);
+        for (m, n, k) in [(5, 7, 3), (64, 64, 64), (130, 70, 33), (1, 1, 1)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, n, k);
+            let c1 = gemm_nt_loops(&a, &b);
+            let c2 = gemm_nt_blocked(&a, &b);
+            assert!(
+                c1.max_abs_diff(&c2) < 1e-3,
+                "({m},{n},{k}): {}",
+                c1.max_abs_diff(&c2)
+            );
+        }
+    }
+
+    #[test]
+    fn known_product() {
+        // A = [[1,2],[3,4]], B = [[1,0],[0,1]] => A·Bᵀ = A.
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = Mat::from_vec(2, 2, vec![1., 0., 0., 1.]).unwrap();
+        assert_eq!(gemm_nt_loops(&a, &b), a);
+        assert_eq!(gemm_nt_blocked(&a, &b), a);
+    }
+
+    #[test]
+    fn gemv_matches_gemm() {
+        let mut rng = Rng::new(4);
+        let a = random_mat(&mut rng, 13, 9);
+        let x: Vec<f32> = (0..9).map(|_| rng.normal() as f32).collect();
+        let bx = Mat::from_vec(1, 9, x.clone()).unwrap();
+        let via_gemm = gemm_nt_loops(&a, &bx);
+        let via_gemv = gemv(&a, &x);
+        for i in 0..13 {
+            assert!((via_gemm.at(i, 0) - via_gemv[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn thread_heuristic_sane() {
+        assert_eq!(effective_threads(1), 1);
+        assert!(effective_threads(10_000) >= 1);
+    }
+
+    #[test]
+    fn property_gemm_linearity() {
+        // (A1 + A2)·Bᵀ == A1·Bᵀ + A2·Bᵀ
+        prop_cases!("gemm-linearity", 8, |rng| {
+            let m = 3 + rng.below(20);
+            let n = 3 + rng.below(20);
+            let k = 1 + rng.below(30);
+            let mk: Vec<f32> =
+                (0..m * k).map(|_| rng.normal() as f32).collect();
+            let mk2: Vec<f32> =
+                (0..m * k).map(|_| rng.normal() as f32).collect();
+            let nk: Vec<f32> =
+                (0..n * k).map(|_| rng.normal() as f32).collect();
+            let a1 = Mat::from_vec(m, k, mk.clone()).unwrap();
+            let a2 = Mat::from_vec(m, k, mk2.clone()).unwrap();
+            let sum = Mat::from_vec(
+                m,
+                k,
+                mk.iter().zip(&mk2).map(|(x, y)| x + y).collect(),
+            )
+            .unwrap();
+            let b = Mat::from_vec(n, k, nk).unwrap();
+            let lhs = gemm_nt_blocked(&sum, &b);
+            let c1 = gemm_nt_blocked(&a1, &b);
+            let c2 = gemm_nt_blocked(&a2, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    let rhs = c1.at(i, j) + c2.at(i, j);
+                    assert!(
+                        (lhs.at(i, j) - rhs).abs()
+                            < 1e-3 * (1.0 + rhs.abs())
+                    );
+                }
+            }
+        });
+    }
+}

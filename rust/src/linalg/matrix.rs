@@ -1,0 +1,205 @@
+//! Row-major dense f32 matrix. The single storage type shared by the
+//! dataset, SVM and approximation layers — deliberately simple so the
+//! hot paths in [`super::gemm`]/[`super::quadform`] can work on plain
+//! slices.
+
+use crate::{Error, Result};
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Mat> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "data len {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Build from row slices (all must share a length).
+    pub fn from_rows(rows: &[&[f32]]) -> Result<Mat> {
+        if rows.is_empty() {
+            return Ok(Mat::zeros(0, 0));
+        }
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            if r.len() != cols {
+                return Err(Error::Shape("ragged rows".into()));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Mat { rows: rows.len(), cols, data })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Copy a contiguous block of rows.
+    pub fn rows_slice(&self, start: usize, count: usize) -> Mat {
+        assert!(start + count <= self.rows);
+        Mat {
+            rows: count,
+            cols: self.cols,
+            data: self.data
+                [start * self.cols..(start + count) * self.cols]
+                .to_vec(),
+        }
+    }
+
+    /// Gather a subset of rows by index.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Pad to `(new_rows, new_cols)` with zeros (never shrinks).
+    pub fn pad_to(&self, new_rows: usize, new_cols: usize) -> Mat {
+        assert!(new_rows >= self.rows && new_cols >= self.cols);
+        let mut out = Mat::zeros(new_rows, new_cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Max absolute element-wise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Squared L2 norm of every row.
+    pub fn row_norms_sq(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| super::vecops::dot(self.row(r), self.row(r)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn from_vec_shape_checked() {
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        assert!(Mat::from_rows(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::from_vec(2, 3, (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(2, 1), m.at(1, 2));
+    }
+
+    #[test]
+    fn pad_and_gather() {
+        let m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let p = m.pad_to(3, 4);
+        assert_eq!(p.at(0, 1), 2.0);
+        assert_eq!(p.at(2, 3), 0.0);
+        let g = m.gather_rows(&[1, 0, 1]);
+        assert_eq!(g.row(0), &[3., 4.]);
+        assert_eq!(g.row(2), &[3., 4.]);
+    }
+
+    #[test]
+    fn row_norms() {
+        let m = Mat::from_vec(2, 2, vec![3., 4., 0., 2.]).unwrap();
+        assert_eq!(m.row_norms_sq(), vec![25.0, 4.0]);
+    }
+}

@@ -1,0 +1,68 @@
+//! Dense linear-algebra substrate.
+//!
+//! The paper benchmarks three math configurations (LOOPS / BLAS / ATLAS)
+//! plus a SIMD on/off axis. This module provides the equivalents:
+//!
+//! * [`MathBackend::Loops`] — textbook triple loops, deliberately naive
+//!   (the paper's LOOPS baseline).
+//! * [`MathBackend::Blocked`] — cache-blocked, multi-threaded, 8-lane
+//!   accumulator kernels that LLVM autovectorizes (the BLAS/ATLAS role).
+//! * The XLA/PJRT path lives in [`crate::runtime`] and plays the role of
+//!   a vendor library (fused, compiler-optimized).
+//!
+//! The SIMD axis maps to the scalar vs chunked dot/quadratic-form
+//! evaluators in [`vecops`] / [`quadform`].
+
+pub mod gemm;
+pub mod matrix;
+pub mod quadform;
+pub mod syrk;
+pub mod vecops;
+
+pub use matrix::Mat;
+
+/// Math backend selector mirrored on the paper's LOOPS/BLAS/ATLAS axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MathBackend {
+    /// Naive loops (paper: LOOPS).
+    Loops,
+    /// Cache-blocked + threaded + autovectorized (paper: BLAS/ATLAS).
+    Blocked,
+    /// AOT-compiled XLA executable via PJRT (vendor-library role).
+    Xla,
+}
+
+impl MathBackend {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "loops" => Ok(MathBackend::Loops),
+            "blocked" | "blas" => Ok(MathBackend::Blocked),
+            "xla" => Ok(MathBackend::Xla),
+            other => Err(crate::Error::InvalidArg(format!(
+                "unknown backend '{other}' (loops|blocked|xla)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MathBackend::Loops => "loops",
+            MathBackend::Blocked => "blocked",
+            MathBackend::Xla => "xla",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [MathBackend::Loops, MathBackend::Blocked, MathBackend::Xla] {
+            assert_eq!(MathBackend::parse(b.name()).unwrap(), b);
+        }
+        assert_eq!(MathBackend::parse("BLAS").unwrap(), MathBackend::Blocked);
+        assert!(MathBackend::parse("atlas9").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Quadratic-form evaluators `zᵀMz` — the per-instance hot path of the
+//! approximated model (paper §3.3 "Prediction Speed"). Scalar vs
+//! chunked evaluators are the SIMD off/on axis; the batched variant
+//! reuses the blocked GEMM for throughput serving.
+
+use super::gemm;
+use super::matrix::Mat;
+use super::vecops;
+
+/// `zᵀMz` with naive scalar loops (SIMD off).
+pub fn quadform_scalar(m: &Mat, z: &[f32]) -> f32 {
+    let d = z.len();
+    assert_eq!((m.rows(), m.cols()), (d, d));
+    let mut acc = 0.0f32;
+    for a in 0..d {
+        let mut inner = 0.0f32;
+        let row = m.row(a);
+        for b in 0..d {
+            inner += row[b] * z[b];
+        }
+        acc += z[a] * inner;
+    }
+    acc
+}
+
+/// `zᵀMz` with 8-lane autovectorized row dots (SIMD on).
+pub fn quadform(m: &Mat, z: &[f32]) -> f32 {
+    let d = z.len();
+    assert_eq!((m.rows(), m.cols()), (d, d));
+    let mut acc = 0.0f32;
+    for a in 0..d {
+        acc += z[a] * vecops::dot(m.row(a), z);
+    }
+    acc
+}
+
+/// `zᵀMz` exploiting symmetry: only the upper triangle is touched,
+/// halving memory traffic: `zᵀMz = Σ_a M_aa z_a² + 2 Σ_{a<b} M_ab z_a z_b`.
+pub fn quadform_symmetric(m: &Mat, z: &[f32]) -> f32 {
+    let d = z.len();
+    assert_eq!((m.rows(), m.cols()), (d, d));
+    let mut diag = 0.0f32;
+    let mut off = 0.0f32;
+    for a in 0..d {
+        let row = m.row(a);
+        diag += row[a] * z[a] * z[a];
+        off += z[a] * vecops::dot(&row[a + 1..], &z[a + 1..]);
+    }
+    diag + 2.0 * off
+}
+
+/// Batched quadratic forms for a row-major batch `Z (B × d)`:
+/// returns `q_i = z_iᵀ M z_i` for every row. Uses the blocked GEMM for
+/// `Z·M` (M symmetric ⇒ `Z·Mᵀ = Z·M`) then a fused row-dot, which is
+/// exactly the shape the Pallas kernel uses on TPU (DESIGN.md §7).
+pub fn quadform_batch(m: &Mat, z: &Mat) -> Vec<f32> {
+    assert_eq!(z.cols(), m.rows());
+    let zm = gemm::gemm_nt_blocked(z, m); // (B × d)
+    (0..z.rows())
+        .map(|i| vecops::dot(zm.row(i), z.row(i)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+    use crate::util::Rng;
+
+    fn random_sym(rng: &mut Rng, d: usize) -> Mat {
+        let mut m = Mat::zeros(d, d);
+        for a in 0..d {
+            for b in a..d {
+                let v = rng.normal() as f32;
+                *m.at_mut(a, b) = v;
+                *m.at_mut(b, a) = v;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn evaluators_agree() {
+        let mut rng = Rng::new(7);
+        for d in [1usize, 2, 7, 16, 33, 100] {
+            let m = random_sym(&mut rng, d);
+            let z: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let a = quadform_scalar(&m, &z);
+            let b = quadform(&m, &z);
+            let c = quadform_symmetric(&m, &z);
+            let tol = 1e-3 * (1.0 + a.abs());
+            assert!((a - b).abs() < tol, "d={d}");
+            assert!((a - c).abs() < tol, "d={d}");
+        }
+    }
+
+    #[test]
+    fn identity_matrix_gives_norm() {
+        let d = 9;
+        let mut m = Mat::zeros(d, d);
+        for a in 0..d {
+            *m.at_mut(a, a) = 1.0;
+        }
+        let z: Vec<f32> = (1..=d).map(|x| x as f32).collect();
+        let expect = vecops::norm_sq(&z);
+        assert!((quadform(&m, &z) - expect).abs() < 1e-3);
+        assert!((quadform_symmetric(&m, &z) - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let mut rng = Rng::new(8);
+        let d = 24;
+        let m = random_sym(&mut rng, d);
+        let z = Mat::from_vec(
+            10,
+            d,
+            (0..10 * d).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap();
+        let batch = quadform_batch(&m, &z);
+        for i in 0..10 {
+            let single = quadform(&m, z.row(i));
+            assert!(
+                (batch[i] - single).abs() < 1e-3 * (1.0 + single.abs()),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn property_psd_quadform_nonnegative() {
+        // M = XᵀX is PSD, so zᵀMz >= 0 for every z.
+        prop_cases!("quadform-psd", 8, |rng| {
+            let n = 2 + rng.below(10);
+            let d = 1 + rng.below(16);
+            let x = Mat::from_vec(
+                n,
+                d,
+                (0..n * d).map(|_| rng.normal() as f32).collect(),
+            )
+            .unwrap();
+            let m = super::super::syrk::syrk_weighted_loops(
+                &x,
+                &vec![1.0; n],
+            );
+            let z: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32).collect();
+            assert!(quadform_symmetric(&m, &z) >= -1e-3);
+        });
+    }
+}

@@ -1,0 +1,203 @@
+//! Weighted symmetric rank-k update: `M = Xᵀ · diag(w) · X` for a row-
+//! major `X (n × d)` — the dominant cost of the paper's approximation
+//! stage (Table 2, t_approx; `M = X D Xᵀ` in the paper's column-major
+//! notation). Loops and Blocked backends mirror the LOOPS vs BLAS axis.
+
+use super::matrix::Mat;
+
+/// Naive: for every SV, rank-1 update of the full d×d matrix.
+pub fn syrk_weighted_loops(x: &Mat, w: &[f32]) -> Mat {
+    assert_eq!(x.rows(), w.len());
+    let d = x.cols();
+    let mut m = Mat::zeros(d, d);
+    for i in 0..x.rows() {
+        let xi = x.row(i);
+        let wi = w[i];
+        for a in 0..d {
+            let s = wi * xi[a];
+            for b in 0..d {
+                *m.at_mut(a, b) += s * xi[b];
+            }
+        }
+    }
+    m
+}
+
+/// Blocked: compute only the upper triangle in column tiles with 8-lane
+/// accumulation over SV panels, parallelized across row blocks of M,
+/// then mirror. Arithmetic is reassociated (panel-major) so results can
+/// differ from the naive order by f32 rounding only.
+pub fn syrk_weighted_blocked(x: &Mat, w: &[f32]) -> Mat {
+    assert_eq!(x.rows(), w.len());
+    let d = x.cols();
+    let n = x.rows();
+    let mut m = Mat::zeros(d, d);
+    const AB: usize = 32; // row block of M
+
+    // Pre-scale panels: y = diag(w)·X, so M = Xᵀ·Y (one pass, then GEMM-
+    // like tiling). Trades n·d extra memory for a clean inner kernel.
+    let mut y = x.clone();
+    for i in 0..n {
+        let wi = w[i];
+        for v in y.row_mut(i) {
+            *v *= wi;
+        }
+    }
+
+    let threads = super::gemm::effective_threads(d);
+    let blocks: Vec<usize> = (0..d).step_by(AB).collect();
+    let results: Vec<(usize, Vec<f32>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for chunk in blocks.chunks(blocks.len().div_ceil(threads)) {
+            let chunk = chunk.to_vec();
+            let xr = &x;
+            let yr = &y;
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                for a0 in chunk {
+                    let a1 = (a0 + AB).min(d);
+                    // Rows a0..a1 of M, columns a0..d (upper triangle).
+                    let mut block = vec![0.0f32; (a1 - a0) * d];
+                    for i in 0..n {
+                        let xi = xr.row(i);
+                        let yi = yr.row(i);
+                        for a in a0..a1 {
+                            let s = yi[a];
+                            if s == 0.0 {
+                                continue;
+                            }
+                            let row =
+                                &mut block[(a - a0) * d + a..(a - a0) * d + d];
+                            let xcol = &xi[a..];
+                            for (o, xv) in row.iter_mut().zip(xcol) {
+                                *o += s * xv;
+                            }
+                        }
+                    }
+                    out.push((a0, block));
+                }
+                out
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    for (a0, block) in results {
+        let a1 = (a0 + AB).min(d);
+        for a in a0..a1 {
+            for b in a..d {
+                let v = block[(a - a0) * d + b];
+                *m.at_mut(a, b) = v;
+                *m.at_mut(b, a) = v;
+            }
+        }
+    }
+    m
+}
+
+/// `v = Xᵀ · w` companion (gradient vector of the approximation).
+pub fn xt_w(x: &Mat, w: &[f32]) -> Vec<f32> {
+    assert_eq!(x.rows(), w.len());
+    let d = x.cols();
+    let mut v = vec![0.0f32; d];
+    for i in 0..x.rows() {
+        super::vecops::axpy(w[i], x.row(i), &mut v);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+    use crate::util::Rng;
+
+    fn random(rng: &mut Rng, n: usize, d: usize) -> (Mat, Vec<f32>) {
+        let x = Mat::from_vec(
+            n,
+            d,
+            (0..n * d).map(|_| rng.normal() as f32).collect(),
+        )
+        .unwrap();
+        let w = (0..n).map(|_| rng.normal() as f32).collect();
+        (x, w)
+    }
+
+    #[test]
+    fn blocked_matches_loops() {
+        let mut rng = Rng::new(5);
+        for (n, d) in [(1, 1), (10, 3), (100, 17), (257, 64), (64, 130)] {
+            let (x, w) = random(&mut rng, n, d);
+            let a = syrk_weighted_loops(&x, &w);
+            let b = syrk_weighted_blocked(&x, &w);
+            let scale = a.fro_norm().max(1.0) as f32;
+            assert!(
+                a.max_abs_diff(&b) < 1e-4 * scale,
+                "({n},{d}): {}",
+                a.max_abs_diff(&b)
+            );
+        }
+    }
+
+    #[test]
+    fn result_is_symmetric() {
+        let mut rng = Rng::new(6);
+        let (x, w) = random(&mut rng, 50, 20);
+        // Blocked mirrors explicitly (bit-exact); loops is symmetric
+        // up to f32 rounding (s = w·x_a is rounded before ·x_b).
+        let blocked = syrk_weighted_blocked(&x, &w);
+        let loops = syrk_weighted_loops(&x, &w);
+        for a in 0..20 {
+            for b in 0..20 {
+                assert_eq!(blocked.at(a, b), blocked.at(b, a));
+                assert!((loops.at(a, b) - loops.at(b, a)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_one_case() {
+        // Single row x, weight w: M = w · x xᵀ.
+        let x = Mat::from_vec(1, 3, vec![1., 2., 3.]).unwrap();
+        let m = syrk_weighted_loops(&x, &[2.0]);
+        assert_eq!(m.at(0, 0), 2.0);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.at(2, 1), 12.0);
+    }
+
+    #[test]
+    fn xt_w_matches_manual() {
+        let x = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let v = xt_w(&x, &[1.0, -1.0]);
+        assert_eq!(v, vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn property_zero_weights_are_noops() {
+        prop_cases!("syrk-zero-weights", 6, |rng| {
+            let n = 2 + rng.below(40);
+            let d = 1 + rng.below(24);
+            let x = Mat::from_vec(
+                n,
+                d,
+                (0..n * d).map(|_| rng.normal() as f32).collect(),
+            )
+            .unwrap();
+            let mut w: Vec<f32> =
+                (0..n).map(|_| rng.normal() as f32).collect();
+            // Zero half the weights; those rows must not contribute.
+            let idx = rng.sample_indices(n, n / 2);
+            for &i in &idx {
+                w[i] = 0.0;
+            }
+            let keep: Vec<usize> =
+                (0..n).filter(|i| !idx.contains(i)).collect();
+            let xs = x.gather_rows(&keep);
+            let ws: Vec<f32> = keep.iter().map(|&i| w[i]).collect();
+            let full = syrk_weighted_blocked(&x, &w);
+            let sub = syrk_weighted_blocked(&xs, &ws);
+            let scale = full.fro_norm().max(1.0) as f32;
+            assert!(full.max_abs_diff(&sub) < 1e-4 * scale);
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Vector kernels. The paper's SIMD on/off axis maps to
+//! [`dot_scalar`] (plain sequential accumulation, defeats vectorization
+//! via a single serial dependency chain) vs [`dot`] (8 independent
+//! accumulator lanes that LLVM turns into AVX code — the `-march`
+//! compiled equivalent of the paper's hand-enabled vector instructions).
+
+/// Scalar dot product: one accumulator, serial dependency chain.
+/// This is the "SIMD off" evaluator.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Vector-friendly dot product: 8 independent lanes, autovectorized.
+/// This is the "SIMD on" evaluator. (Perf note: 1×4 multi-row
+/// micro-kernels and 2×8 accumulator groups were both tried and
+/// measured SLOWER than this form under LLVM's autovectorizer —
+/// EXPERIMENTS.md §Perf L3-P2 records the A/B.)
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let ai = &a[i * 8..i * 8 + 8];
+        let bi = &b[i * 8..i * 8 + 8];
+        for l in 0..8 {
+            lanes[l] += ai[l] * bi[l];
+        }
+    }
+    let mut acc = lanes.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let ai = &a[i * 8..i * 8 + 8];
+        let bi = &b[i * 8..i * 8 + 8];
+        for l in 0..8 {
+            let d = ai[l] - bi[l];
+            lanes[l] += d * d;
+        }
+    }
+    let mut acc = lanes.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_variants_agree() {
+        let mut rng = Rng::new(1);
+        for len in [0usize, 1, 7, 8, 9, 64, 100, 1023] {
+            let a: Vec<f32> =
+                (0..len).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> =
+                (0..len).map(|_| rng.normal() as f32).collect();
+            let d1 = dot_scalar(&a, &b);
+            let d2 = dot(&a, &b);
+            assert!(
+                (d1 - d2).abs() <= 1e-3 * (1.0 + d1.abs()),
+                "len={len}: {d1} vs {d2}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_known_value() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        assert_eq!(dot_scalar(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0f32, 1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn dist_sq_matches_expansion() {
+        let mut rng = Rng::new(2);
+        let a: Vec<f32> = (0..37).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..37).map(|_| rng.normal() as f32).collect();
+        let expanded = norm_sq(&a) + norm_sq(&b) - 2.0 * dot(&a, &b);
+        assert!((dist_sq(&a, &b) - expanded).abs() < 1e-3);
+    }
+
+    #[test]
+    fn norm_and_scale() {
+        let mut v = vec![3.0f32, 4.0];
+        assert_eq!(norm_sq(&v), 25.0);
+        scale(2.0, &mut v);
+        assert_eq!(v, vec![6.0, 8.0]);
+    }
+}

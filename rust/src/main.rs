@@ -1,0 +1,364 @@
+//! approxrbf CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (svm-train/svm-predict-style workflow plus the serving
+//! and benchmark drivers):
+//!
+//! ```text
+//! approxrbf gen-data    --profile adult-like --out data.txt [--test out2]
+//! approxrbf train       --data data.txt --gamma 0.05 [--cost 1] --out m.model
+//! approxrbf approximate --model m.model --out m.approx [--backend blocked]
+//! approxrbf predict     --model m.model|--approx m.approx --data t.txt
+//! approxrbf bound-check --data data.txt [--gamma 0.05]
+//! approxrbf serve       --profile control-like [--policy hybrid] [--xla]
+//! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
+//!                       [--scale full|quick] [--artifacts artifacts]
+//! approxrbf inspect     --model m.model
+//! ```
+
+use std::path::Path;
+use std::time::Duration;
+
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::ApproxModel;
+use approxrbf::benchsuite::{self, BenchContext, Scale};
+use approxrbf::coordinator::{
+    Coordinator, CoordinatorConfig, ExecSpec, RoutePolicy,
+};
+use approxrbf::data::{libsvm_format, SynthProfile};
+use approxrbf::linalg::MathBackend;
+use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::{Kernel, SvmModel};
+use approxrbf::util::stats::accuracy;
+use approxrbf::util::Args;
+use approxrbf::{Error, Result};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has_flag("help") || args.subcommand.is_none() {
+        print!("{}", usage());
+        return;
+    }
+    let result = match args.subcommand.as_deref().unwrap() {
+        "gen-data" => cmd_gen_data(&args),
+        "train" => cmd_train(&args),
+        "approximate" => cmd_approximate(&args),
+        "predict" => cmd_predict(&args),
+        "bound-check" => cmd_bound_check(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "inspect" => cmd_inspect(&args),
+        other => Err(Error::InvalidArg(format!(
+            "unknown subcommand '{other}'\n{}",
+            usage()
+        ))),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    let doc = "approxrbf — fast prediction for RBF-kernel SVMs \
+               (Claesen et al., 2014)\n\n\
+               subcommands:\n  \
+               gen-data    generate a synthetic dataset profile\n  \
+               train       train a C-SVC with SMO (LIBSVM role)\n  \
+               approximate build the O(d²) approximated model (Eq. 3.8)\n  \
+               predict     predict with an exact or approximated model\n  \
+               bound-check report γ_MAX for a dataset (Eq. 3.11)\n  \
+               serve       run the bound-aware serving coordinator\n  \
+               bench       regenerate the paper's tables/figures\n  \
+               inspect     describe a model file\n";
+    doc.to_string()
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let profile = SynthProfile::parse(args.get_or("profile", "control-like"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let (dtr, dte) = profile.default_sizes();
+    let n_train = args.get_usize("train", dtr)?;
+    let n_test = args.get_usize("test", dte)?;
+    let out = args.require("out")?;
+    let (train, test) = profile.generate(seed, n_train, n_test);
+    libsvm_format::save(&train, Path::new(out))?;
+    println!(
+        "wrote {} train instances (d={}) to {out}",
+        train.len(),
+        train.dim()
+    );
+    if let Some(test_out) = args.get("test-out") {
+        libsvm_format::save(&test, Path::new(test_out))?;
+        println!("wrote {} test instances to {test_out}", test.len());
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = libsvm_format::load(Path::new(args.require("data")?), None)?;
+    let gamma = args.get_f64("gamma", f64::from(gamma_max_for_data(&data)))? as f32;
+    let cost = args.get_f64("cost", 1.0)? as f32;
+    let out = args.require("out")?;
+    let t0 = std::time::Instant::now();
+    let (model, stats) = train_csvc(
+        &data,
+        Kernel::Rbf { gamma },
+        SmoParams { c: cost, ..Default::default() },
+    )?;
+    model.save(Path::new(out))?;
+    println!(
+        "trained on {} instances (d={}): n_sv={} iters={} converged={} \
+         in {:.1}s -> {out}",
+        data.len(),
+        data.dim(),
+        stats.n_sv,
+        stats.iterations,
+        stats.converged,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_approximate(args: &Args) -> Result<()> {
+    let model = SvmModel::load(Path::new(args.require("model")?))?;
+    let backend = MathBackend::parse(args.get_or("backend", "blocked"))?;
+    let out = args.require("out")?;
+    let t0 = std::time::Instant::now();
+    let am = if backend == MathBackend::Xla {
+        let engine = approxrbf::runtime::Engine::load(Path::new(
+            args.get_or("artifacts", "artifacts"),
+        ))?;
+        engine.build_approx(&model)?
+    } else {
+        build_approx_model(&model, backend)?
+    };
+    am.save(Path::new(out))?;
+    println!(
+        "approximated {} SVs (d={}) in {:.3}s; sizes: exact {} B, \
+         approx {} B (ratio {:.1}) -> {out}",
+        model.n_sv(),
+        model.dim(),
+        t0.elapsed().as_secs_f64(),
+        model.text_size_bytes(),
+        am.text_size_bytes(),
+        model.text_size_bytes() as f64 / am.text_size_bytes() as f64
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let data = libsvm_format::load(Path::new(args.require("data")?), None)?;
+    let t0 = std::time::Instant::now();
+    let (dec, what) = if let Some(mp) = args.get("model") {
+        let model = SvmModel::load(Path::new(mp))?;
+        let backend = MathBackend::parse(args.get_or("backend", "blocked"))?;
+        let pred = ExactPredictor::new(&model, backend)?;
+        (pred.decision_batch(&data.x)?, "exact")
+    } else if let Some(ap) = args.get("approx") {
+        let am = ApproxModel::load(Path::new(ap))?;
+        let backend = MathBackend::parse(args.get_or("backend", "blocked"))?;
+        let (dec, norms) = am.decision_batch(&data.x, backend)?;
+        let budget = am.znorm_sq_budget();
+        let oob = norms.iter().filter(|&&n| n >= budget).count();
+        if oob > 0 {
+            eprintln!(
+                "warning: {oob}/{} instances violate the validity bound \
+                 (Eq. 3.11); their approximation error is unbounded",
+                norms.len()
+            );
+        }
+        (dec, "approx")
+    } else {
+        return Err(Error::InvalidArg("need --model or --approx".into()));
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    let labels = labels_from_decisions(&dec);
+    let acc = accuracy(&labels, &data.y);
+    println!(
+        "{what} prediction: {} instances in {dt:.3}s ({:.0}/s), acc {:.2}%",
+        data.len(),
+        data.len() as f64 / dt,
+        acc * 100.0
+    );
+    if let Some(out) = args.get("out") {
+        let text: String = dec
+            .iter()
+            .map(|d| format!("{d}\n"))
+            .collect();
+        std::fs::write(out, text)?;
+        println!("decision values -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_bound_check(args: &Args) -> Result<()> {
+    let data = libsvm_format::load(Path::new(args.require("data")?), None)?;
+    let gmax = gamma_max_for_data(&data);
+    println!(
+        "dataset: {} instances, d={}, max ‖x‖² = {:.4}",
+        data.len(),
+        data.dim(),
+        data.max_norm_sq()
+    );
+    println!("γ_MAX = {gmax:.6}  (Eq. 3.11; approximation guaranteed \
+              term-wise <3.05% error for γ below this)");
+    if let Some(g) = args.get("gamma") {
+        let g: f32 = g
+            .parse()
+            .map_err(|_| Error::InvalidArg("bad --gamma".into()))?;
+        let rep = approxrbf::approx::BoundReport::evaluate(
+            &data,
+            g,
+            data.max_norm_sq(),
+        );
+        println!(
+            "at γ = {g}: γ/γ_MAX = {:.2}; {:.1}% of instances in bound",
+            rep.gamma_ratio,
+            rep.fraction_in_bound() * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let profile = SynthProfile::parse(args.get_or("profile", "control-like"))?;
+    let policy = RoutePolicy::parse(args.get_or("policy", "hybrid"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let requests = args.get_usize("requests", 20_000)?;
+    let scale = Scale::parse(args.get_or("scale", "quick"))?;
+    let ctx = BenchContext::new(scale, seed);
+    let mult = benchsuite::context::gamma_multipliers(profile)[0];
+    println!("training {} model (scale={scale:?})…", profile.name());
+    let case = ctx.trained(profile, mult)?;
+    let am = build_approx_model(&case.model, MathBackend::Blocked)?;
+    let exec = if args.has_flag("xla") {
+        ExecSpec::Xla {
+            artifacts_dir: Path::new(args.get_or("artifacts", "artifacts"))
+                .to_path_buf(),
+        }
+    } else {
+        ExecSpec::Native(MathBackend::Blocked)
+    };
+    let coord = Coordinator::start(
+        case.model.clone(),
+        am,
+        CoordinatorConfig { policy, exec, ..Default::default() },
+    )?;
+    println!(
+        "serving {requests} requests through policy={} …",
+        policy.name()
+    );
+    let mut served = 0usize;
+    let t0 = std::time::Instant::now();
+    let mut row = 0usize;
+    while served < requests {
+        coord.submit(case.test.x.row(row % case.test.len()).to_vec())?;
+        row += 1;
+        // Drain opportunistically to keep the pipeline flowing.
+        while coord.recv(Duration::from_micros(0)).is_some() {
+            served += 1;
+        }
+        if row >= requests {
+            while served < requests {
+                if coord.recv(Duration::from_millis(100)).is_none() {
+                    return Err(Error::Other("lost responses".into()));
+                }
+                served += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!(
+        "done in {wall:.2}s: {:.0} req/s, approx/exact = {}/{}, \
+         mean batch {:.1}, out-of-bound {}",
+        requests as f64 / wall,
+        m.served_approx,
+        m.served_exact,
+        m.mean_batch_size,
+        m.out_of_bound
+    );
+    println!("{}", m.to_json().to_string_pretty());
+    coord.shutdown()
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let which = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let scale = Scale::parse(args.get_or("scale", "full"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let artifacts = Path::new(args.get_or("artifacts", "artifacts"));
+    let ctx = BenchContext::new(scale, seed);
+    let mut outputs = Vec::new();
+    match which {
+        "table1" => outputs.push(benchsuite::table1::run(&ctx)?),
+        "table2" => {
+            outputs.push(benchsuite::table2::run(&ctx, Some(artifacts))?)
+        }
+        "table3" => outputs.push(benchsuite::table3::run(&ctx)?),
+        "fig1" => outputs.push(benchsuite::fig1::run()?),
+        "ablations" => outputs.push(benchsuite::ablations::run(&ctx)?),
+        "ann" => outputs.push(benchsuite::ann::run(&ctx)?),
+        "all" => {
+            outputs.push(benchsuite::fig1::run()?);
+            outputs.push(benchsuite::table1::run(&ctx)?);
+            outputs.push(benchsuite::table2::run(&ctx, Some(artifacts))?);
+            outputs.push(benchsuite::table3::run(&ctx)?);
+            outputs.push(benchsuite::ablations::run(&ctx)?);
+            outputs.push(benchsuite::ann::run(&ctx)?);
+        }
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "unknown bench '{other}' \
+                 (table1|table2|table3|fig1|ablations|ann|all)"
+            )))
+        }
+    }
+    for o in outputs {
+        println!("{o}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    if let Some(mp) = args.get("model") {
+        let m = SvmModel::load(Path::new(mp))?;
+        println!(
+            "exact SVM model: kernel={} d={} n_sv={} b={:.4} \
+             max‖x‖²={:.4} text={} B",
+            m.kernel.name(),
+            m.dim(),
+            m.n_sv(),
+            m.b,
+            m.max_sv_norm_sq(),
+            m.text_size_bytes()
+        );
+    } else if let Some(ap) = args.get("approx") {
+        let a = ApproxModel::load(Path::new(ap))?;
+        println!(
+            "approx model: d={} γ={:.4} b={:.4} c={:.4} ‖x_M‖²={:.4} \
+             ‖z‖² budget={:.4} text={} B",
+            a.dim(),
+            a.gamma,
+            a.b,
+            a.c,
+            a.max_sv_norm_sq,
+            a.znorm_sq_budget(),
+            a.text_size_bytes()
+        );
+    } else {
+        return Err(Error::InvalidArg("need --model or --approx".into()));
+    }
+    Ok(())
+}

@@ -1,0 +1,339 @@
+//! PJRT execution engine.
+//!
+//! Loads HLO-text artifacts (see module docs in [`super::manifest`]),
+//! compiles each shape bucket once (lazily, cached), pads request
+//! tensors to the bucket shape, executes, and unpads the results.
+//!
+//! Thread model: PJRT handles are not `Send`, so the [`Engine`] is
+//! deliberately single-threaded; the coordinator dedicates one executor
+//! thread to it and feeds it via channels (see `coordinator::worker`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use crate::approx::ApproxModel;
+use crate::log_debug;
+use crate::linalg::Mat;
+use crate::svm::{Kernel, SvmModel};
+use crate::{Error, Result};
+
+use super::manifest::{ArtifactEntry, ArtifactKind, ImplKind, Manifest};
+
+/// PJRT engine over an artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Preferred L2 implementation (jnp = performance, pallas = the
+    /// paper-faithful tiled kernels).
+    pub impl_kind: ImplKind,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// An approx model padded + uploaded once, reusable across batches:
+/// the serving hot path never re-pads `M`.
+pub struct PreparedApprox {
+    entry: ArtifactEntry,
+    m_lit: xla::Literal,
+    v_lit: xla::Literal,
+    s_lit: xla::Literal,
+    pub d: usize,
+    pub d_pad: usize,
+    pub batch: usize,
+}
+
+/// An exact model padded + uploaded once (SVs, coefs, scalars).
+pub struct PreparedExact {
+    entry: ArtifactEntry,
+    x_lit: xla::Literal,
+    coef_lit: xla::Literal,
+    s_lit: xla::Literal,
+    pub d: usize,
+    pub d_pad: usize,
+    pub batch: usize,
+}
+
+impl Engine {
+    /// Load the manifest and connect the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        log_debug!(
+            "pjrt: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.entries.len()
+        );
+        let impl_kind = match std::env::var("APPROXRBF_IMPL").ok().as_deref() {
+            Some("pallas") => ImplKind::Pallas,
+            _ => ImplKind::Jnp,
+        };
+        Ok(Engine { client, manifest, impl_kind, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    fn executable(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&entry.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Other("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        log_debug!(
+            "compiled {} in {:.1} ms",
+            entry.file,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.cache.borrow_mut().insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn select(
+        &self,
+        kind: ArtifactKind,
+        d: usize,
+        nsv: usize,
+    ) -> Result<ArtifactEntry> {
+        self.manifest
+            .select(kind, self.impl_kind, d, nsv)
+            .cloned()
+            .ok_or_else(|| {
+                Error::Other(format!(
+                    "no {kind:?}/{:?} artifact for d={d} nsv={nsv} \
+                     (re-run `make artifacts` with larger buckets)",
+                    self.impl_kind
+                ))
+            })
+    }
+
+    // ---------- approx predict ----------
+
+    /// Pad + upload an approx model once (latency bucket, batch=256).
+    pub fn prepare_approx(&self, am: &ApproxModel) -> Result<PreparedApprox> {
+        let d = am.dim();
+        let entry = self.select(ArtifactKind::Approx, d, 0)?;
+        self.prepare_approx_entry(am, entry)
+    }
+
+    /// Bulk variant: prefers the largest batch bucket ≤ `batch_hint`,
+    /// amortizing per-execute overhead for offline prediction
+    /// (EXPERIMENTS.md §Perf L3-P3).
+    pub fn prepare_approx_bulk(
+        &self,
+        am: &ApproxModel,
+        batch_hint: usize,
+    ) -> Result<PreparedApprox> {
+        let d = am.dim();
+        let entry = self
+            .manifest
+            .select_bulk(ArtifactKind::Approx, self.impl_kind, d, 0, batch_hint)
+            .cloned()
+            .ok_or_else(|| {
+                Error::Other(format!("no approx artifact for d={d}"))
+            })?;
+        self.prepare_approx_entry(am, entry)
+    }
+
+    fn prepare_approx_entry(
+        &self,
+        am: &ApproxModel,
+        entry: ArtifactEntry,
+    ) -> Result<PreparedApprox> {
+        let d = am.dim();
+        let dp = entry.d;
+        let m_pad = am.m.pad_to(dp, dp);
+        let mut v_pad = am.v.clone();
+        v_pad.resize(dp, 0.0);
+        let m_lit =
+            xla::Literal::vec1(m_pad.as_slice()).reshape(&[dp as i64, dp as i64])?;
+        let v_lit = xla::Literal::vec1(&v_pad);
+        let s_lit = xla::Literal::vec1(&[am.c, am.gamma, am.b]);
+        Ok(PreparedApprox {
+            batch: entry.batch,
+            entry,
+            m_lit,
+            v_lit,
+            s_lit,
+            d,
+            d_pad: dp,
+        })
+    }
+
+    /// Approximated decisions for a batch. Returns (decisions, ‖z‖²).
+    pub fn approx_predict(
+        &self,
+        prep: &PreparedApprox,
+        z: &Mat,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if z.cols() != prep.d {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs prepared dim {}",
+                z.cols(),
+                prep.d
+            )));
+        }
+        let exe = self.executable(&prep.entry)?;
+        let bt = prep.batch;
+        let mut dec = Vec::with_capacity(z.rows());
+        let mut norms = Vec::with_capacity(z.rows());
+        let mut row0 = 0;
+        while row0 < z.rows() {
+            let take = bt.min(z.rows() - row0);
+            let chunk = z.rows_slice(row0, take).pad_to(bt, prep.d_pad);
+            let z_lit = xla::Literal::vec1(chunk.as_slice())
+                .reshape(&[bt as i64, prep.d_pad as i64])?;
+            let result = exe.execute::<&xla::Literal>(&[
+                &z_lit,
+                &prep.m_lit,
+                &prep.v_lit,
+                &prep.s_lit,
+            ])?[0][0]
+                .to_literal_sync()?;
+            let (d_out, n_out) = result.to_tuple2()?;
+            let d_vec = d_out.to_vec::<f32>()?;
+            let n_vec = n_out.to_vec::<f32>()?;
+            dec.extend_from_slice(&d_vec[..take]);
+            norms.extend_from_slice(&n_vec[..take]);
+            row0 += take;
+        }
+        Ok((dec, norms))
+    }
+
+    // ---------- exact predict ----------
+
+    /// Pad + upload an exact RBF model once. Padded SVs carry coef = 0
+    /// (exact no-ops per the padding contract).
+    pub fn prepare_exact(&self, model: &SvmModel) -> Result<PreparedExact> {
+        let gamma = match model.kernel {
+            Kernel::Rbf { gamma } => gamma,
+            ref k => {
+                return Err(Error::InvalidArg(format!(
+                    "exact artifacts are RBF-only, got {}",
+                    k.name()
+                )))
+            }
+        };
+        let d = model.dim();
+        let n = model.n_sv();
+        let entry = self.select(ArtifactKind::Exact, d, n)?;
+        let (dp, np) = (entry.d, entry.nsv);
+        let x_pad = model.sv.pad_to(np, dp);
+        let mut coef_pad = model.coef.clone();
+        coef_pad.resize(np, 0.0);
+        let x_lit = xla::Literal::vec1(x_pad.as_slice())
+            .reshape(&[np as i64, dp as i64])?;
+        let coef_lit = xla::Literal::vec1(&coef_pad);
+        let s_lit = xla::Literal::vec1(&[gamma, model.b]);
+        Ok(PreparedExact {
+            batch: entry.batch,
+            entry,
+            x_lit,
+            coef_lit,
+            s_lit,
+            d,
+            d_pad: dp,
+        })
+    }
+
+    /// Exact decisions for a batch.
+    pub fn exact_predict(
+        &self,
+        prep: &PreparedExact,
+        z: &Mat,
+    ) -> Result<Vec<f32>> {
+        if z.cols() != prep.d {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs prepared dim {}",
+                z.cols(),
+                prep.d
+            )));
+        }
+        let exe = self.executable(&prep.entry)?;
+        let bt = prep.batch;
+        let mut dec = Vec::with_capacity(z.rows());
+        let mut row0 = 0;
+        while row0 < z.rows() {
+            let take = bt.min(z.rows() - row0);
+            let chunk = z.rows_slice(row0, take).pad_to(bt, prep.d_pad);
+            let z_lit = xla::Literal::vec1(chunk.as_slice())
+                .reshape(&[bt as i64, prep.d_pad as i64])?;
+            let result = exe.execute::<&xla::Literal>(&[
+                &z_lit,
+                &prep.x_lit,
+                &prep.coef_lit,
+                &prep.s_lit,
+            ])?[0][0]
+                .to_literal_sync()?;
+            let d_out = result.to_tuple1()?;
+            let d_vec = d_out.to_vec::<f32>()?;
+            dec.extend_from_slice(&d_vec[..take]);
+            row0 += take;
+        }
+        Ok(dec)
+    }
+
+    // ---------- build ----------
+
+    /// Build an [`ApproxModel`] on the XLA backend (the paper's t_approx
+    /// stage executed as the AOT `build` artifact).
+    pub fn build_approx(&self, model: &SvmModel) -> Result<ApproxModel> {
+        let gamma = match model.kernel {
+            Kernel::Rbf { gamma } => gamma,
+            ref k => {
+                return Err(Error::InvalidArg(format!(
+                    "approximation requires RBF, got {}",
+                    k.name()
+                )))
+            }
+        };
+        let d = model.dim();
+        let n = model.n_sv();
+        let entry = self.select(ArtifactKind::Build, d, n)?;
+        let (dp, np) = (entry.d, entry.nsv);
+        let exe = self.executable(&entry)?;
+        let x_pad = model.sv.pad_to(np, dp);
+        let mut coef_pad = model.coef.clone();
+        coef_pad.resize(np, 0.0);
+        let x_lit = xla::Literal::vec1(x_pad.as_slice())
+            .reshape(&[np as i64, dp as i64])?;
+        let coef_lit = xla::Literal::vec1(&coef_pad);
+        let g_lit = xla::Literal::vec1(&[gamma]);
+        let result = exe.execute::<&xla::Literal>(&[&x_lit, &coef_lit, &g_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        let (c_out, v_out, m_out) = result.to_tuple3()?;
+        let c = c_out.to_vec::<f32>()?[0];
+        let v_full = v_out.to_vec::<f32>()?;
+        let m_full = m_out.to_vec::<f32>()?;
+        // Unpad: take the leading d×d block / d prefix.
+        let mut m = Mat::zeros(d, d);
+        for r in 0..d {
+            m.row_mut(r).copy_from_slice(&m_full[r * dp..r * dp + d]);
+        }
+        Ok(ApproxModel {
+            gamma,
+            b: model.b,
+            c,
+            v: v_full[..d].to_vec(),
+            m,
+            max_sv_norm_sq: model.max_sv_norm_sq(),
+        })
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

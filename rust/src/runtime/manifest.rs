@@ -1,0 +1,265 @@
+//! Artifact manifest: `artifacts/manifest.txt`, one line per AOT-lowered
+//! executable, written by `python/compile/aot.py`:
+//!
+//! ```text
+//! kind=approx impl=jnp d=128 nsv=0 batch=256 outputs=2 file=approx_jnp_d128_b256.hlo.txt
+//! ```
+//!
+//! The Rust side selects the smallest shape bucket that fits a request
+//! and pads inputs (see `python/compile/kernels/ref.py` for the padding
+//! contract: zero-coef SVs and zero feature columns are exact no-ops).
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+/// What a compiled artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// f̂(z) via (c, v, M): outputs (decisions, ‖z‖²).
+    Approx,
+    /// f(z) via the SVs: outputs (decisions,).
+    Exact,
+    /// (c, v, M) from the SVs: outputs 3.
+    Build,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "approx" => Ok(ArtifactKind::Approx),
+            "exact" => Ok(ArtifactKind::Exact),
+            "build" => Ok(ArtifactKind::Build),
+            other => Err(Error::Parse(format!("unknown kind '{other}'"))),
+        }
+    }
+}
+
+/// Which L2 implementation produced the artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ImplKind {
+    /// Pure-jnp lowering (XLA-fused; the performance artifact).
+    Jnp,
+    /// Pallas interpret-mode lowering (structure/correctness artifact).
+    Pallas,
+}
+
+impl ImplKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "jnp" => Ok(ImplKind::Jnp),
+            "pallas" => Ok(ImplKind::Pallas),
+            other => Err(Error::Parse(format!("unknown impl '{other}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ImplKind::Jnp => "jnp",
+            ImplKind::Pallas => "pallas",
+        }
+    }
+}
+
+/// One manifest line.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    pub impl_kind: ImplKind,
+    pub d: usize,
+    pub nsv: usize,
+    pub batch: usize,
+    pub outputs: usize,
+    pub file: String,
+}
+
+/// Parsed manifest with bucket selection.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Other(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut kind = None;
+            let mut impl_kind = None;
+            let (mut d, mut nsv, mut batch, mut outputs) = (0, 0, 0, 0);
+            let mut file = String::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    Error::Parse(format!("bad manifest token '{tok}'"))
+                })?;
+                match k {
+                    "kind" => kind = Some(ArtifactKind::parse(v)?),
+                    "impl" => impl_kind = Some(ImplKind::parse(v)?),
+                    "d" => d = parse_usize(v)?,
+                    "nsv" => nsv = parse_usize(v)?,
+                    "batch" => batch = parse_usize(v)?,
+                    "outputs" => outputs = parse_usize(v)?,
+                    "file" => file = v.to_string(),
+                    other => {
+                        return Err(Error::Parse(format!(
+                            "unknown manifest key '{other}'"
+                        )))
+                    }
+                }
+            }
+            entries.push(ArtifactEntry {
+                kind: kind
+                    .ok_or_else(|| Error::Parse("missing kind".into()))?,
+                impl_kind: impl_kind
+                    .ok_or_else(|| Error::Parse("missing impl".into()))?,
+                d,
+                nsv,
+                batch,
+                outputs,
+                file,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Smallest bucket of `kind`/`impl_kind` with `d ≥ need_d` and
+    /// (when applicable) `nsv ≥ need_nsv`. Ties break toward smaller
+    /// padding waste, then toward the smallest batch.
+    pub fn select(
+        &self,
+        kind: ArtifactKind,
+        impl_kind: ImplKind,
+        need_d: usize,
+        need_nsv: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.impl_kind == impl_kind
+                    && e.d >= need_d
+                    && (kind == ArtifactKind::Approx || e.nsv >= need_nsv)
+            })
+            .min_by_key(|e| (e.d, e.nsv, e.batch))
+    }
+
+    /// Like [`Manifest::select`] but preferring the largest batch
+    /// bucket ≤ `batch_hint` (falling back to the smallest available).
+    /// Bulk offline prediction uses this to amortize per-execute
+    /// overhead (§Perf L3-P3); latency-sensitive serving keeps the
+    /// small bucket.
+    pub fn select_bulk(
+        &self,
+        kind: ArtifactKind,
+        impl_kind: ImplKind,
+        need_d: usize,
+        need_nsv: usize,
+        batch_hint: usize,
+    ) -> Option<&ArtifactEntry> {
+        let candidates: Vec<&ArtifactEntry> = self
+            .entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.impl_kind == impl_kind
+                    && e.d >= need_d
+                    && (kind == ArtifactKind::Approx || e.nsv >= need_nsv)
+            })
+            .collect();
+        let min_d = candidates.iter().map(|e| e.d).min()?;
+        candidates
+            .into_iter()
+            .filter(|e| e.d == min_d)
+            .filter(|e| e.batch <= batch_hint.max(1))
+            .max_by_key(|e| e.batch)
+            .or_else(|| self.select(kind, impl_kind, need_d, need_nsv))
+    }
+
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn parse_usize(s: &str) -> Result<usize> {
+    s.parse()
+        .map_err(|_| Error::Parse(format!("bad manifest integer '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+kind=approx impl=jnp d=32 nsv=0 batch=256 outputs=2 file=a32.hlo.txt
+kind=approx impl=jnp d=128 nsv=0 batch=256 outputs=2 file=a128.hlo.txt
+kind=exact impl=jnp d=32 nsv=1024 batch=256 outputs=1 file=e32_1k.hlo.txt
+kind=exact impl=jnp d=32 nsv=4096 batch=256 outputs=1 file=e32_4k.hlo.txt
+kind=build impl=pallas d=32 nsv=1024 batch=0 outputs=3 file=b32.hlo.txt
+";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(Path::new("/tmp/art"), SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn parse_all_lines() {
+        let m = manifest();
+        assert_eq!(m.entries.len(), 5);
+        assert_eq!(m.entries[0].kind, ArtifactKind::Approx);
+        assert_eq!(m.entries[4].impl_kind, ImplKind::Pallas);
+        assert_eq!(m.entries[3].nsv, 4096);
+    }
+
+    #[test]
+    fn select_smallest_fitting_bucket() {
+        let m = manifest();
+        let e = m
+            .select(ArtifactKind::Approx, ImplKind::Jnp, 22, 0)
+            .unwrap();
+        assert_eq!(e.d, 32);
+        let e = m
+            .select(ArtifactKind::Approx, ImplKind::Jnp, 33, 0)
+            .unwrap();
+        assert_eq!(e.d, 128);
+        let e = m
+            .select(ArtifactKind::Exact, ImplKind::Jnp, 22, 2000)
+            .unwrap();
+        assert_eq!(e.nsv, 4096);
+        assert!(m.select(ArtifactKind::Approx, ImplKind::Jnp, 999, 0).is_none());
+        assert!(m
+            .select(ArtifactKind::Exact, ImplKind::Jnp, 22, 9999)
+            .is_none());
+    }
+
+    #[test]
+    fn approx_selection_ignores_nsv() {
+        let m = manifest();
+        assert!(m
+            .select(ArtifactKind::Approx, ImplKind::Jnp, 22, 123_456)
+            .is_some());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "kind=approx junk").is_err());
+        assert!(Manifest::parse(Path::new("."), "kind=wat impl=jnp").is_err());
+        assert!(
+            Manifest::parse(Path::new("."), "impl=jnp d=1 file=x").is_err()
+        );
+    }
+}

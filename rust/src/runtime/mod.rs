@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the HLO-text artifacts emitted by
+//! `python/compile/aot.py` (`make artifacts`) and executes them from the
+//! Rust hot path. This is the "vendor math library" slot of the paper's
+//! LOOPS/BLAS/ATLAS axis, and the only place the compiled L1/L2 compute
+//! graphs are touched at run time — Python is never invoked.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, PreparedApprox, PreparedExact};
+pub use manifest::{ArtifactEntry, ArtifactKind, ImplKind, Manifest};

@@ -1,0 +1,206 @@
+//! ANN decision-function approximation — the competing method the paper
+//! benchmarks against (Kang & Cho [15], §4.3): distill `f(z)` into a
+//! single-hidden-layer tanh network by regressing on the exact model's
+//! decision values. Prediction complexity O(n_HN · d); the paper's
+//! argument is that complex boundaries (many SVs) need many hidden
+//! nodes, while the quadratic approximation stays O(d²) regardless.
+
+use crate::linalg::{vecops, Mat};
+use crate::svm::SvmModel;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Single-hidden-layer regression network: f̂(z) = w2ᵀ tanh(W1 z + b1) + b2.
+#[derive(Clone, Debug)]
+pub struct AnnApprox {
+    /// (n_hidden × d) input weights.
+    pub w1: Mat,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: f32,
+}
+
+/// Distillation hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AnnParams {
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for AnnParams {
+    fn default() -> Self {
+        AnnParams { hidden: 32, epochs: 60, lr: 0.02, seed: 0xA77 }
+    }
+}
+
+impl AnnApprox {
+    /// Distill `model`'s decision function on the rows of `x`
+    /// (typically the training inputs, per Kang & Cho).
+    pub fn distill(
+        model: &SvmModel,
+        x: &Mat,
+        params: AnnParams,
+    ) -> Result<AnnApprox> {
+        if x.cols() != model.dim() {
+            return Err(Error::Shape("distillation data dim".into()));
+        }
+        // Teacher targets (exact decisions), standardized for stable SGD.
+        let pred = crate::svm::predict::ExactPredictor::new(
+            model,
+            crate::linalg::MathBackend::Blocked,
+        )?;
+        let targets = pred.decision_batch(x)?;
+        let t_mean =
+            targets.iter().map(|&t| f64::from(t)).sum::<f64>() / targets.len() as f64;
+        let t_std = (targets
+            .iter()
+            .map(|&t| (f64::from(t) - t_mean).powi(2))
+            .sum::<f64>()
+            / targets.len() as f64)
+            .sqrt()
+            .max(1e-6);
+        let norm_t: Vec<f32> = targets
+            .iter()
+            .map(|&t| ((f64::from(t) - t_mean) / t_std) as f32)
+            .collect();
+
+        let (n, d) = (x.rows(), x.cols());
+        let h = params.hidden;
+        let mut rng = Rng::new(params.seed);
+        let xavier = (1.0 / d as f64).sqrt();
+        let mut w1 = Mat::from_vec(
+            h,
+            d,
+            (0..h * d).map(|_| (rng.normal() * xavier) as f32).collect(),
+        )?;
+        let mut b1 = vec![0.0f32; h];
+        let mut w2: Vec<f32> =
+            (0..h).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let mut b2 = 0.0f32;
+
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut hidden = vec![0.0f32; h];
+        for epoch in 0..params.epochs {
+            // 1/sqrt decay keeps late epochs from thrashing.
+            let lr = params.lr / (1.0 + epoch as f32 / 10.0);
+            rng.shuffle(&mut order);
+            for &r in &order {
+                let z = x.row(r);
+                for j in 0..h {
+                    hidden[j] = (vecops::dot(w1.row(j), z) + b1[j]).tanh();
+                }
+                let out = vecops::dot(&w2, &hidden) + b2;
+                let err = out - norm_t[r];
+                // Backprop.
+                b2 -= lr * err;
+                for j in 0..h {
+                    let gw2 = err * hidden[j];
+                    let gh = err * w2[j] * (1.0 - hidden[j] * hidden[j]);
+                    w2[j] -= lr * gw2;
+                    b1[j] -= lr * gh;
+                    vecops::axpy(-lr * gh, z, w1.row_mut(j));
+                }
+            }
+        }
+        // Fold the target standardization back into the output layer.
+        for w in &mut w2 {
+            *w *= t_std as f32;
+        }
+        b2 = b2 * t_std as f32 + t_mean as f32;
+        Ok(AnnApprox { w1, b1, w2, b2 })
+    }
+
+    /// Decision value for one instance — O(hidden · d).
+    pub fn decision_one(&self, z: &[f32]) -> f32 {
+        let mut acc = self.b2;
+        for j in 0..self.w2.len() {
+            acc += self.w2[j]
+                * (vecops::dot(self.w1.row(j), z) + self.b1[j]).tanh();
+        }
+        acc
+    }
+
+    pub fn decision_batch(&self, z: &Mat) -> Vec<f32> {
+        (0..z.rows()).map(|r| self.decision_one(z.row(r))).collect()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.w2.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::svm::smo::{train_csvc, SmoParams};
+    use crate::svm::Kernel;
+    use crate::util::stats::label_diff_fraction;
+
+    #[test]
+    fn distillation_tracks_teacher_labels() {
+        let ds = synth::two_gaussians(31, 400, 6, 2.0);
+        let (model, _) = train_csvc(
+            &ds,
+            Kernel::Rbf { gamma: 0.4 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let ann = AnnApprox::distill(&model, &ds.x, AnnParams::default())
+            .unwrap();
+        let teacher: Vec<f32> =
+            (0..ds.len()).map(|r| model.decision_one(ds.x.row(r))).collect();
+        let student = ann.decision_batch(&ds.x);
+        let diff = label_diff_fraction(&teacher, &student);
+        assert!(diff < 0.08, "label diff {diff}");
+    }
+
+    #[test]
+    fn more_hidden_units_fit_better() {
+        let ds = synth::two_gaussians(32, 300, 5, 1.0);
+        let (model, _) = train_csvc(
+            &ds,
+            Kernel::Rbf { gamma: 0.8 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let teacher: Vec<f32> =
+            (0..ds.len()).map(|r| model.decision_one(ds.x.row(r))).collect();
+        let mse = |ann: &AnnApprox| {
+            let s = ann.decision_batch(&ds.x);
+            s.iter()
+                .zip(&teacher)
+                .map(|(a, b)| f64::from((a - b) * (a - b)))
+                .sum::<f64>()
+                / s.len() as f64
+        };
+        let small = AnnApprox::distill(&model, &ds.x, AnnParams {
+            hidden: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let large = AnnApprox::distill(&model, &ds.x, AnnParams {
+            hidden: 48,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(
+            mse(&large) < mse(&small),
+            "large {} vs small {}",
+            mse(&large),
+            mse(&small)
+        );
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let ds = synth::two_gaussians(33, 50, 4, 2.0);
+        let (model, _) =
+            train_csvc(&ds, Kernel::Rbf { gamma: 0.5 }, SmoParams::default())
+                .unwrap();
+        let bad = Mat::zeros(10, model.dim() + 2);
+        assert!(AnnApprox::distill(&model, &bad, Default::default()).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Kernel functions. The paper's method targets [`Kernel::Rbf`];
+//! [`Kernel::Poly2`] implements the degree-2 polynomial kernel of §3.2
+//! (the exact quadratic model the approximation is contrasted with) and
+//! [`Kernel::Linear`] is the fast-but-less-accurate baseline the
+//! introduction motivates against.
+
+use crate::linalg::vecops;
+
+/// A kernel function κ(x, y).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// κ(x,y) = exp(-γ‖x−y‖²)  (Eq. 1.1)
+    Rbf { gamma: f32 },
+    /// κ(x,y) = xᵀy
+    Linear,
+    /// κ(x,y) = (γ xᵀy + β)²  (Eq. 3.12)
+    Poly2 { gamma: f32, beta: f32 },
+}
+
+impl Kernel {
+    #[inline]
+    pub fn eval(&self, x: &[f32], y: &[f32]) -> f32 {
+        match *self {
+            Kernel::Rbf { gamma } => (-gamma * vecops::dist_sq(x, y)).exp(),
+            Kernel::Linear => vecops::dot(x, y),
+            Kernel::Poly2 { gamma, beta } => {
+                let u = gamma * vecops::dot(x, y) + beta;
+                u * u
+            }
+        }
+    }
+
+    /// Scalar-arithmetic evaluation (single serial accumulator): the
+    /// paper's LOOPS / SIMD-off configuration. [`Kernel::eval`] is the
+    /// vectorized counterpart.
+    #[inline]
+    pub fn eval_scalar(&self, x: &[f32], y: &[f32]) -> f32 {
+        match *self {
+            Kernel::Rbf { gamma } => {
+                let mut acc = 0.0f32;
+                for i in 0..x.len() {
+                    let d = x[i] - y[i];
+                    acc += d * d;
+                }
+                (-gamma * acc).exp()
+            }
+            Kernel::Linear => vecops::dot_scalar(x, y),
+            Kernel::Poly2 { gamma, beta } => {
+                let u = gamma * vecops::dot_scalar(x, y) + beta;
+                u * u
+            }
+        }
+    }
+
+    /// Kernel value from precomputed norms and inner product — the form
+    /// used by row-wise evaluation with cached ‖x‖².
+    #[inline]
+    pub fn eval_precomp(&self, xn: f32, yn: f32, xy: f32) -> f32 {
+        match *self {
+            Kernel::Rbf { gamma } => (-gamma * (xn + yn - 2.0 * xy)).exp(),
+            Kernel::Linear => xy,
+            Kernel::Poly2 { gamma, beta } => {
+                let u = gamma * xy + beta;
+                u * u
+            }
+        }
+    }
+
+    pub fn gamma(&self) -> Option<f32> {
+        match *self {
+            Kernel::Rbf { gamma } | Kernel::Poly2 { gamma, .. } => Some(gamma),
+            Kernel::Linear => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Linear => "linear",
+            Kernel::Poly2 { .. } => "poly2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+
+    #[test]
+    fn rbf_identity_is_one() {
+        let k = Kernel::Rbf { gamma: 0.7 };
+        let x = [1.0f32, -2.0, 3.0];
+        assert!((k.eval(&x, &x) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rbf_known_value() {
+        let k = Kernel::Rbf { gamma: 0.5 };
+        // ||x-y||^2 = 2 => exp(-1)
+        let v = k.eval(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!((v - (-1.0f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn precomp_matches_direct() {
+        let mut rng = crate::util::Rng::new(10);
+        let x: Vec<f32> = (0..13).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..13).map(|_| rng.normal() as f32).collect();
+        let xn = vecops::norm_sq(&x);
+        let yn = vecops::norm_sq(&y);
+        let xy = vecops::dot(&x, &y);
+        for k in [
+            Kernel::Rbf { gamma: 0.3 },
+            Kernel::Linear,
+            Kernel::Poly2 { gamma: 0.3, beta: 1.0 },
+        ] {
+            assert!(
+                (k.eval(&x, &y) - k.eval_precomp(xn, yn, xy)).abs() < 1e-4,
+                "{}",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn rbf_bounded_and_symmetric() {
+        prop_cases!("rbf-bounds", 8, |rng| {
+            let d = 1 + rng.below(20);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let k = Kernel::Rbf { gamma: rng.range(1e-3, 2.0) as f32 };
+            let v = k.eval(&x, &y);
+            assert!((0.0..=1.0 + 1e-6).contains(&v));
+            assert!((v - k.eval(&y, &x)).abs() < 1e-6);
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! SVM substrate: kernel functions, the C-SVC SMO trainer (the LIBSVM
+//! role in the paper's pipeline), LS-SVM (the LS-SVMlab role), exact
+//! predictors with swappable math backends, a LIBSVM-compatible text
+//! model format, and the ANN decision-function comparator of Kang & Cho
+//! [15] that the paper benchmarks against in §4.3.
+
+pub mod ann_approx;
+pub mod kernel;
+pub mod lssvm;
+pub mod model;
+pub mod multiclass;
+pub mod predict;
+pub mod smo;
+
+pub use kernel::Kernel;
+pub use model::SvmModel;
+pub use predict::ExactPredictor;
+pub use smo::{SmoParams, train_csvc};

@@ -1,0 +1,300 @@
+//! SVM model container + LIBSVM-compatible text format.
+//!
+//! The decision function follows the representer theorem (Eq. 3.2):
+//! `f(z) = Σ_i coef_i κ(x_i, z) + b` with `coef_i = α_i y_i`. LIBSVM
+//! stores `rho = -b`; the text I/O honours that so models written here
+//! load in LIBSVM and vice versa (the subset used by the paper:
+//! binary c_svc, rbf/linear/poly kernels).
+//!
+//! Model *text size* matters: Table 3 of the paper compares text-format
+//! model sizes, so [`SvmModel::to_text`] mirrors LIBSVM's sparse SV
+//! encoding and [`SvmModel::text_size_bytes`] is the Table 3 metric.
+
+use std::path::Path;
+
+use crate::data::libsvm_format::fmt_f32;
+use crate::linalg::Mat;
+use crate::svm::Kernel;
+use crate::{Error, Result};
+
+/// A trained (binary) kernel SVM model.
+#[derive(Clone, Debug)]
+pub struct SvmModel {
+    pub kernel: Kernel,
+    /// Support vectors, one per row (n_SV × d).
+    pub sv: Mat,
+    /// coef_i = α_i y_i.
+    pub coef: Vec<f32>,
+    /// Bias term b (LIBSVM's −rho).
+    pub b: f32,
+}
+
+impl SvmModel {
+    pub fn new(kernel: Kernel, sv: Mat, coef: Vec<f32>, b: f32) -> Result<Self> {
+        if sv.rows() != coef.len() {
+            return Err(Error::Shape(format!(
+                "{} SVs vs {} coefficients",
+                sv.rows(),
+                coef.len()
+            )));
+        }
+        Ok(SvmModel { kernel, sv, coef, b })
+    }
+
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sv.cols()
+    }
+
+    /// Max squared SV norm — `‖x_M‖²` of Eq. (3.11).
+    pub fn max_sv_norm_sq(&self) -> f32 {
+        self.sv.row_norms_sq().into_iter().fold(0.0, f32::max)
+    }
+
+    /// Exact decision value for one instance (naive reference path).
+    pub fn decision_one(&self, z: &[f32]) -> f32 {
+        let mut acc = self.b;
+        for i in 0..self.n_sv() {
+            acc += self.coef[i] * self.kernel.eval(self.sv.row(i), z);
+        }
+        acc
+    }
+
+    /// LIBSVM-compatible text encoding.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("svm_type c_svc\n");
+        match self.kernel {
+            Kernel::Rbf { gamma } => {
+                out.push_str("kernel_type rbf\n");
+                out.push_str(&format!("gamma {}\n", fmt_f32(gamma)));
+            }
+            Kernel::Linear => out.push_str("kernel_type linear\n"),
+            Kernel::Poly2 { gamma, beta } => {
+                out.push_str("kernel_type polynomial\ndegree 2\n");
+                out.push_str(&format!("gamma {}\n", fmt_f32(gamma)));
+                out.push_str(&format!("coef0 {}\n", fmt_f32(beta)));
+            }
+        }
+        out.push_str("nr_class 2\n");
+        out.push_str(&format!("total_sv {}\n", self.n_sv()));
+        out.push_str(&format!("rho {}\n", fmt_f32(-self.b)));
+        out.push_str("label 1 -1\n");
+        let npos = self.coef.iter().filter(|&&c| c > 0.0).count();
+        out.push_str(&format!("nr_sv {} {}\n", npos, self.n_sv() - npos));
+        out.push_str("SV\n");
+        for i in 0..self.n_sv() {
+            out.push_str(&fmt_f32(self.coef[i]));
+            for (j, &v) in self.sv.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    out.push_str(&format!(" {}:{}", j + 1, fmt_f32(v)));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Text-format size in bytes (Table 3's "exact" column).
+    pub fn text_size_bytes(&self) -> usize {
+        self.to_text().len()
+    }
+
+    /// Parse the LIBSVM text format (subset: binary c_svc).
+    pub fn from_text(text: &str) -> Result<SvmModel> {
+        let mut kernel_type = "";
+        let mut gamma = 0.0f32;
+        let mut coef0 = 0.0f32;
+        let mut degree = 0usize;
+        let mut rho = 0.0f32;
+        let mut dim_hint = 0usize;
+        let mut lines = text.lines();
+        for line in lines.by_ref() {
+            let line = line.trim();
+            if line == "SV" {
+                break;
+            }
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("svm_type") => {
+                    let t = it.next().unwrap_or("");
+                    if t != "c_svc" {
+                        return Err(Error::Parse(format!(
+                            "unsupported svm_type '{t}'"
+                        )));
+                    }
+                }
+                Some("kernel_type") => {
+                    kernel_type = match it.next() {
+                        Some("rbf") => "rbf",
+                        Some("linear") => "linear",
+                        Some("polynomial") => "polynomial",
+                        other => {
+                            return Err(Error::Parse(format!(
+                                "unsupported kernel_type {other:?}"
+                            )))
+                        }
+                    };
+                }
+                Some("gamma") => gamma = parse_f32(it.next())?,
+                Some("coef0") => coef0 = parse_f32(it.next())?,
+                Some("degree") => {
+                    degree = it
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| Error::Parse("bad degree".into()))?
+                }
+                Some("rho") => rho = parse_f32(it.next())?,
+                Some("nr_class") | Some("total_sv") | Some("label")
+                | Some("nr_sv") | None => {}
+                Some(other) => {
+                    return Err(Error::Parse(format!(
+                        "unknown model header '{other}'"
+                    )))
+                }
+            }
+        }
+        let kernel = match kernel_type {
+            "rbf" => Kernel::Rbf { gamma },
+            "linear" => Kernel::Linear,
+            "polynomial" => {
+                if degree != 2 {
+                    return Err(Error::Parse(format!(
+                        "only degree-2 polynomial supported, got {degree}"
+                    )));
+                }
+                Kernel::Poly2 { gamma, beta: coef0 }
+            }
+            _ => return Err(Error::Parse("missing kernel_type".into())),
+        };
+        // SV block: "coef idx:val ..."
+        let mut coefs = Vec::new();
+        let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            coefs.push(parse_f32(it.next())?);
+            let mut feats = Vec::new();
+            for tok in it {
+                let (i, v) = tok
+                    .split_once(':')
+                    .ok_or_else(|| Error::Parse("bad SV feature".into()))?;
+                let idx: usize = i
+                    .parse()
+                    .map_err(|_| Error::Parse("bad SV index".into()))?;
+                let val: f32 = v
+                    .parse()
+                    .map_err(|_| Error::Parse("bad SV value".into()))?;
+                if idx == 0 {
+                    return Err(Error::Parse("SV indices are 1-based".into()));
+                }
+                dim_hint = dim_hint.max(idx);
+                feats.push((idx - 1, val));
+            }
+            rows.push(feats);
+        }
+        let mut sv = Mat::zeros(rows.len(), dim_hint);
+        for (r, feats) in rows.into_iter().enumerate() {
+            for (c, v) in feats {
+                *sv.at_mut(r, c) = v;
+            }
+        }
+        SvmModel::new(kernel, sv, coefs, -rho)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SvmModel> {
+        SvmModel::from_text(&std::fs::read_to_string(path)?)
+    }
+}
+
+fn parse_f32(tok: Option<&str>) -> Result<f32> {
+    tok.and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Parse("bad float in model".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> SvmModel {
+        SvmModel::new(
+            Kernel::Rbf { gamma: 0.25 },
+            Mat::from_vec(3, 2, vec![1., 0., 0., 2., -1., 1.]).unwrap(),
+            vec![0.5, -1.0, 0.75],
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn decision_matches_manual() {
+        let m = toy_model();
+        let z = [0.5f32, 0.5];
+        let manual: f32 = m.b
+            + m.coef[0] * (-0.25f32 * (0.25 + 0.25)).exp()
+            + m.coef[1] * (-0.25f32 * (0.25 + 2.25)).exp()
+            + m.coef[2] * (-0.25f32 * (2.25 + 0.25)).exp();
+        assert!((m.decision_one(&z) - manual).abs() < 1e-6);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let m = toy_model();
+        let back = SvmModel::from_text(&m.to_text()).unwrap();
+        assert_eq!(back.n_sv(), 3);
+        assert_eq!(back.dim(), 2);
+        assert_eq!(back.coef, m.coef);
+        assert!((back.b - m.b).abs() < 1e-6);
+        assert_eq!(back.kernel, m.kernel);
+        assert_eq!(back.sv.max_abs_diff(&m.sv), 0.0);
+    }
+
+    #[test]
+    fn poly2_roundtrip() {
+        let m = SvmModel::new(
+            Kernel::Poly2 { gamma: 0.5, beta: 1.0 },
+            Mat::from_vec(1, 2, vec![1., 2.]).unwrap(),
+            vec![1.0],
+            -0.3,
+        )
+        .unwrap();
+        let back = SvmModel::from_text(&m.to_text()).unwrap();
+        assert_eq!(back.kernel, m.kernel);
+    }
+
+    #[test]
+    fn rejects_unsupported() {
+        assert!(SvmModel::from_text("svm_type nu_svc\nSV\n").is_err());
+        assert!(SvmModel::from_text(
+            "svm_type c_svc\nkernel_type sigmoid\nSV\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn max_sv_norm() {
+        let m = toy_model();
+        assert_eq!(m.max_sv_norm_sq(), 4.0);
+    }
+
+    #[test]
+    fn rho_sign_convention() {
+        // LIBSVM: f(z) = sum coef K - rho. We store b = -rho.
+        let text = "svm_type c_svc\nkernel_type linear\nrho 0.5\nSV\n1 1:1\n";
+        let m = SvmModel::from_text(text).unwrap();
+        assert!((m.b + 0.5).abs() < 1e-6);
+        // f([0]) = coef*<1,0> + b = -0.5
+        assert!((m.decision_one(&[0.0]) + 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,273 @@
+//! One-vs-rest multiclass SVM — the setting behind the paper's mnist
+//! experiment ("10 classes — we classified class 1 versus others").
+//!
+//! Trains one binary C-SVC per class and predicts by argmax of decision
+//! values. Each binary model approximates independently (Eq. 3.8), so a
+//! K-class approximated ensemble costs `K·O(d²)` per instance — still
+//! independent of the SV counts, preserving the paper's headline
+//! property across the multiclass reduction.
+
+use crate::approx::builder::build_approx_model;
+use crate::approx::ApproxModel;
+use crate::data::Dataset;
+use crate::linalg::{Mat, MathBackend};
+use crate::svm::smo::{train_csvc, SmoParams};
+use crate::svm::{Kernel, SvmModel};
+use crate::{Error, Result};
+
+/// Multiclass labeled dataset (labels are arbitrary integers).
+#[derive(Clone, Debug)]
+pub struct MulticlassDataset {
+    pub x: Mat,
+    pub y: Vec<i32>,
+}
+
+impl MulticlassDataset {
+    pub fn new(x: Mat, y: Vec<i32>) -> Result<Self> {
+        if x.rows() != y.len() {
+            return Err(Error::Shape("rows vs labels".into()));
+        }
+        Ok(MulticlassDataset { x, y })
+    }
+
+    /// Distinct labels in ascending order.
+    pub fn classes(&self) -> Vec<i32> {
+        let mut c = self.y.clone();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// Binary view: `class` vs rest (+1 / −1).
+    pub fn one_vs_rest(&self, class: i32) -> Result<Dataset> {
+        let y = self
+            .y
+            .iter()
+            .map(|&l| if l == class { 1.0 } else { -1.0 })
+            .collect();
+        Dataset::new(self.x.clone(), y)
+    }
+}
+
+/// One-vs-rest ensemble of exact binary models.
+pub struct OvrModel {
+    pub classes: Vec<i32>,
+    pub models: Vec<SvmModel>,
+}
+
+impl OvrModel {
+    /// Train one C-SVC per class.
+    pub fn train(
+        ds: &MulticlassDataset,
+        kernel: Kernel,
+        params: SmoParams,
+    ) -> Result<OvrModel> {
+        let classes = ds.classes();
+        if classes.len() < 2 {
+            return Err(Error::InvalidArg("need ≥2 classes".into()));
+        }
+        let mut models = Vec::with_capacity(classes.len());
+        for &c in &classes {
+            let binary = ds.one_vs_rest(c)?;
+            let (m, _) = train_csvc(&binary, kernel, params)?;
+            models.push(m);
+        }
+        Ok(OvrModel { classes, models })
+    }
+
+    /// Predicted class labels (argmax of decision values).
+    pub fn predict(&self, z: &Mat, backend: MathBackend) -> Result<Vec<i32>> {
+        let mut scores = vec![f32::NEG_INFINITY; z.rows()];
+        let mut labels = vec![self.classes[0]; z.rows()];
+        for (k, model) in self.models.iter().enumerate() {
+            let pred =
+                crate::svm::predict::ExactPredictor::new(model, backend)?;
+            let dec = pred.decision_batch(z)?;
+            for r in 0..z.rows() {
+                if dec[r] > scores[r] {
+                    scores[r] = dec[r];
+                    labels[r] = self.classes[k];
+                }
+            }
+        }
+        Ok(labels)
+    }
+
+    /// Approximate every binary member (Eq. 3.8).
+    pub fn approximate(&self, backend: MathBackend) -> Result<OvrApprox> {
+        let mut approx = Vec::with_capacity(self.models.len());
+        for m in &self.models {
+            approx.push(build_approx_model(m, backend)?);
+        }
+        Ok(OvrApprox { classes: self.classes.clone(), models: approx })
+    }
+
+    pub fn total_text_size(&self) -> usize {
+        self.models.iter().map(|m| m.text_size_bytes()).sum()
+    }
+}
+
+/// One-vs-rest ensemble of approximated models: `K·O(d²)` prediction.
+pub struct OvrApprox {
+    pub classes: Vec<i32>,
+    pub models: Vec<ApproxModel>,
+}
+
+impl OvrApprox {
+    /// Predicted class labels; also reports the fraction of instances
+    /// within the validity bound of *every* member (the ensemble-level
+    /// Eq. 3.11 check: the argmax is guaranteed only when all member
+    /// decisions are accurate).
+    pub fn predict(
+        &self,
+        z: &Mat,
+        backend: MathBackend,
+    ) -> Result<(Vec<i32>, f64)> {
+        let mut scores = vec![f32::NEG_INFINITY; z.rows()];
+        let mut labels = vec![self.classes[0]; z.rows()];
+        // The bound is per-model (each has its own ‖x_M‖² and γ); the
+        // tightest member budget governs the ensemble guarantee.
+        let min_budget = self
+            .models
+            .iter()
+            .map(|m| m.znorm_sq_budget())
+            .fold(f32::INFINITY, f32::min);
+        let mut in_bound = 0usize;
+        for (k, model) in self.models.iter().enumerate() {
+            let (dec, norms) = model.decision_batch(z, backend)?;
+            if k == 0 {
+                in_bound =
+                    norms.iter().filter(|&&n| n < min_budget).count();
+            }
+            for r in 0..z.rows() {
+                if dec[r] > scores[r] {
+                    scores[r] = dec[r];
+                    labels[r] = self.classes[k];
+                }
+            }
+        }
+        Ok((labels, in_bound as f64 / z.rows().max(1) as f64))
+    }
+
+    pub fn total_text_size(&self) -> usize {
+        self.models.iter().map(|m| m.text_size_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// 3-class Gaussian blobs.
+    fn three_blobs(seed: u64, n: usize, d: usize) -> MulticlassDataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Mat::zeros(n, d);
+        let mut y = Vec::with_capacity(n);
+        for r in 0..n {
+            let class = (r % 3) as i32;
+            let center = match class {
+                0 => 2.0,
+                1 => -2.0,
+                _ => 0.0,
+            };
+            let row = x.row_mut(r);
+            for (j, item) in row.iter_mut().enumerate() {
+                let mu = if j == 0 { center } else { 0.3 * center };
+                *item = (mu + rng.normal() * 0.6) as f32;
+            }
+            y.push(class);
+        }
+        MulticlassDataset::new(x, y).unwrap()
+    }
+
+    #[test]
+    fn classes_and_binary_view() {
+        let ds = three_blobs(1, 30, 4);
+        assert_eq!(ds.classes(), vec![0, 1, 2]);
+        let bin = ds.one_vs_rest(1).unwrap();
+        let pos = bin.y.iter().filter(|&&v| v > 0.0).count();
+        assert_eq!(pos, 10);
+    }
+
+    #[test]
+    fn ovr_learns_three_blobs() {
+        let train = three_blobs(2, 300, 6);
+        let test = three_blobs(3, 150, 6);
+        let ovr = OvrModel::train(
+            &train,
+            Kernel::Rbf { gamma: 0.2 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        assert_eq!(ovr.models.len(), 3);
+        let pred = ovr.predict(&test.x, MathBackend::Blocked).unwrap();
+        let acc = pred
+            .iter()
+            .zip(&test.y)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / test.y.len() as f64;
+        assert!(acc > 0.9, "multiclass acc {acc}");
+    }
+
+    #[test]
+    fn approximated_ensemble_matches_exact() {
+        let train = three_blobs(4, 240, 5);
+        let test = three_blobs(5, 120, 5);
+        // γ inside the bound for this data scale.
+        let max_norm = train.x.row_norms_sq().into_iter().fold(0.0, f32::max);
+        let gamma = 1.0 / (4.0 * max_norm);
+        let ovr = OvrModel::train(
+            &train,
+            Kernel::Rbf { gamma },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let approx = ovr.approximate(MathBackend::Blocked).unwrap();
+        let exact = ovr.predict(&test.x, MathBackend::Blocked).unwrap();
+        let (fast, in_bound) =
+            approx.predict(&test.x, MathBackend::Blocked).unwrap();
+        let agree = exact
+            .iter()
+            .zip(&fast)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / exact.len() as f64;
+        assert!(agree > 0.97, "exact/approx agreement {agree}");
+        assert!(in_bound > 0.9, "in-bound fraction {in_bound}");
+    }
+
+    #[test]
+    fn size_independent_of_svs_across_members() {
+        let train = three_blobs(6, 300, 5);
+        let ovr = OvrModel::train(
+            &train,
+            Kernel::Rbf { gamma: 0.1 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let approx = ovr.approximate(MathBackend::Blocked).unwrap();
+        // K approx models of the same d have near-identical sizes even
+        // though their SV counts differ.
+        let sizes: Vec<usize> =
+            approx.models.iter().map(|m| m.text_size_bytes()).collect();
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        let spread = (max - min) as f64 / max as f64;
+        assert!(spread < 0.2, "{sizes:?}");
+    }
+
+    #[test]
+    fn single_class_rejected() {
+        let ds = MulticlassDataset::new(Mat::zeros(4, 2), vec![7; 4]).unwrap();
+        assert!(OvrModel::train(
+            &ds,
+            Kernel::Linear,
+            SmoParams::default()
+        )
+        .is_err());
+    }
+}

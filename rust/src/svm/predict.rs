@@ -1,0 +1,180 @@
+//! Exact prediction with swappable math backends — the paper's Table 2
+//! "exact" rows. `Loops` evaluates per-SV scalar kernels (the paper's
+//! LOOPS + no-SIMD config); `Blocked` batches the cross-term `Z·Xᵀ`
+//! through the blocked GEMM with cached SV norms (the BLAS role); the
+//! XLA path lives in [`crate::runtime`] and is selected by the
+//! coordinator when artifacts are loaded.
+
+use crate::linalg::{gemm, vecops, Mat, MathBackend};
+use crate::svm::SvmModel;
+use crate::{Error, Result};
+
+/// Batched exact predictor with precomputed SV norms.
+pub struct ExactPredictor<'m> {
+    pub model: &'m SvmModel,
+    sv_norms: Vec<f32>,
+    backend: MathBackend,
+}
+
+impl<'m> ExactPredictor<'m> {
+    pub fn new(model: &'m SvmModel, backend: MathBackend) -> Result<Self> {
+        if backend == MathBackend::Xla {
+            return Err(Error::InvalidArg(
+                "use runtime::Engine for the XLA backend".into(),
+            ));
+        }
+        Ok(ExactPredictor {
+            model,
+            sv_norms: model.sv.row_norms_sq(),
+            backend,
+        })
+    }
+
+    /// Decision values for a batch of rows.
+    pub fn decision_batch(&self, z: &Mat) -> Result<Vec<f32>> {
+        if z.cols() != self.model.dim() {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs model dim {}",
+                z.cols(),
+                self.model.dim()
+            )));
+        }
+        match self.backend {
+            MathBackend::Loops => Ok(self.decision_loops(z)),
+            MathBackend::Blocked => Ok(self.decision_blocked(z)),
+            MathBackend::Xla => unreachable!("rejected in constructor"),
+        }
+    }
+
+    /// Naive per-SV loop, scalar arithmetic (paper: LOOPS, SIMD off).
+    fn decision_loops(&self, z: &Mat) -> Vec<f32> {
+        let m = self.model;
+        (0..z.rows())
+            .map(|r| {
+                let zr = z.row(r);
+                let mut acc = m.b;
+                for i in 0..m.n_sv() {
+                    acc += m.coef[i] * m.kernel.eval_scalar(m.sv.row(i), zr);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Blocked: fused streaming evaluation (paper: exact + BLAS role).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf, L3-P1): the first version
+    /// materialized the full `(B × n_SV)` cross-term via GEMM and then
+    /// re-walked it — 54 MB of traffic for vehicle-like, making
+    /// "blocked" no faster than naive loops. This version streams SV
+    /// panels and fuses kernel+accumulate into the panel pass,
+    /// parallelized over batch rows with scoped threads.
+    fn decision_blocked(&self, z: &Mat) -> Vec<f32> {
+        let m = self.model;
+        let n_sv = m.n_sv();
+        const PANEL: usize = 256; // SV rows per panel (~d·256·4B ≤ L2)
+        let threads = gemm::effective_threads(z.rows());
+        let rows_per = z.rows().div_ceil(threads);
+        let mut out = vec![0.0f32; z.rows()];
+        let chunks: Vec<(usize, &mut [f32])> = {
+            let mut v = Vec::new();
+            let mut rest = out.as_mut_slice();
+            let mut row0 = 0;
+            while row0 < z.rows() {
+                let take = rows_per.min(z.rows() - row0);
+                let (head, tail) = rest.split_at_mut(take);
+                v.push((row0, head));
+                rest = tail;
+                row0 += take;
+            }
+            v
+        };
+        std::thread::scope(|scope| {
+            for (row0, chunk) in chunks {
+                scope.spawn(move || {
+                    for (i, acc_out) in chunk.iter_mut().enumerate() {
+                        let zr = z.row(row0 + i);
+                        let zn = vecops::norm_sq(zr);
+                        let mut acc = f64::from(m.b);
+                        for p0 in (0..n_sv).step_by(PANEL) {
+                            let p1 = (p0 + PANEL).min(n_sv);
+                            let mut panel_acc = 0.0f32;
+                            for s in p0..p1 {
+                                let cross = vecops::dot(m.sv.row(s), zr);
+                                panel_acc += m.coef[s]
+                                    * m.kernel.eval_precomp(
+                                        self.sv_norms[s],
+                                        zn,
+                                        cross,
+                                    );
+                            }
+                            acc += f64::from(panel_acc);
+                        }
+                        *acc_out = acc as f32;
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+/// Predicted ±1 labels from decision values.
+pub fn labels_from_decisions(dec: &[f32]) -> Vec<f32> {
+    dec.iter().map(|&d| if d >= 0.0 { 1.0 } else { -1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::svm::smo::{train_csvc, SmoParams};
+    use crate::svm::Kernel;
+
+    fn trained() -> (SvmModel, crate::data::Dataset) {
+        let ds = synth::two_gaussians(21, 150, 6, 1.5);
+        let (m, _) = train_csvc(
+            &ds,
+            Kernel::Rbf { gamma: 0.4 },
+            SmoParams::default(),
+        )
+        .unwrap();
+        (m, ds)
+    }
+
+    #[test]
+    fn backends_agree_with_reference() {
+        let (m, ds) = trained();
+        let loops = ExactPredictor::new(&m, MathBackend::Loops).unwrap();
+        let blocked = ExactPredictor::new(&m, MathBackend::Blocked).unwrap();
+        let dl = loops.decision_batch(&ds.x).unwrap();
+        let db = blocked.decision_batch(&ds.x).unwrap();
+        for r in 0..ds.len() {
+            let reference = m.decision_one(ds.x.row(r));
+            assert!((dl[r] - reference).abs() < 1e-4);
+            assert!((db[r] - reference).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn xla_backend_rejected_here() {
+        let (m, _) = trained();
+        assert!(ExactPredictor::new(&m, MathBackend::Xla).is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (m, _) = trained();
+        let p = ExactPredictor::new(&m, MathBackend::Loops).unwrap();
+        let bad = Mat::zeros(2, m.dim() + 1);
+        assert!(p.decision_batch(&bad).is_err());
+    }
+
+    #[test]
+    fn labels_sign() {
+        assert_eq!(
+            labels_from_decisions(&[0.5, -0.1, 0.0]),
+            vec![1.0, -1.0, 1.0]
+        );
+    }
+}

@@ -1,0 +1,447 @@
+//! C-SVC trainer: SMO with second-order working-set selection (WSS2,
+//! Fan/Chen/Lin — the algorithm inside LIBSVM, which the paper uses to
+//! produce all of its exact models). Dense kernel rows are memoized in
+//! an LRU cache keyed by example index.
+//!
+//! Dual problem:
+//! ```text
+//! min ½ αᵀQα − eᵀα   s.t. 0 ≤ α_i ≤ C,  yᵀα = 0,   Q_ij = y_i y_j κ(x_i, x_j)
+//! ```
+//! Gradient `G_i = Σ_j Q_ij α_j − 1`. Selection:
+//! `i = argmax_{t ∈ I_up} −y_t G_t`, then `j` minimizing the second-order
+//! objective `−b_t²/a_t` over violating `t ∈ I_low`. Convergence when the
+//! max violation `m − M < ε`.
+
+use crate::data::Dataset;
+use crate::log_debug;
+use crate::linalg::vecops;
+use crate::svm::{Kernel, SvmModel};
+use crate::{Error, Result};
+
+/// SMO hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SmoParams {
+    /// Soft-margin cost C.
+    pub c: f32,
+    /// Stopping tolerance ε on the max KKT violation.
+    pub eps: f32,
+    /// Hard iteration cap (safety; LIBSVM uses a similar guard).
+    pub max_iter: usize,
+    /// Kernel-row cache size in rows.
+    pub cache_rows: usize,
+}
+
+impl Default for SmoParams {
+    fn default() -> Self {
+        SmoParams { c: 1.0, eps: 1e-3, max_iter: 2_000_000, cache_rows: 4096 }
+    }
+}
+
+/// Training statistics for logs / EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct TrainStats {
+    pub iterations: usize,
+    pub n_sv: usize,
+    pub n_bounded_sv: usize,
+    pub objective: f64,
+    pub converged: bool,
+}
+
+/// LRU cache of dense kernel rows.
+struct RowCache {
+    rows: std::collections::HashMap<usize, (u64, Vec<f32>)>,
+    capacity: usize,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RowCache {
+    fn new(capacity: usize) -> Self {
+        RowCache {
+            rows: std::collections::HashMap::new(),
+            capacity: capacity.max(2),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Fetch row `i`, computing via `make` on miss.
+    fn get<F: FnOnce() -> Vec<f32>>(&mut self, i: usize, make: F) -> &[f32] {
+        self.clock += 1;
+        let clock = self.clock;
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            let e = self.rows.get_mut(&i).unwrap();
+            e.0 = clock;
+            return &self.rows[&i].1;
+        }
+        self.misses += 1;
+        if self.rows.len() >= self.capacity {
+            // Evict least-recently-used.
+            let oldest = *self
+                .rows
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| k)
+                .unwrap();
+            self.rows.remove(&oldest);
+        }
+        self.rows.insert(i, (clock, make()));
+        &self.rows[&i].1
+    }
+}
+
+/// Train a binary C-SVC. Labels must be ±1.
+pub fn train_csvc(
+    ds: &Dataset,
+    kernel: Kernel,
+    params: SmoParams,
+) -> Result<(SvmModel, TrainStats)> {
+    let n = ds.len();
+    if n == 0 {
+        return Err(Error::InvalidArg("empty training set".into()));
+    }
+    let c = params.c;
+    let y = &ds.y;
+    // Precompute norms once; kernel rows use the precomp form.
+    let norms = ds.x.row_norms_sq();
+    // Kernel diagonal: κ(x_t, x_t) = eval_precomp(n_t, n_t, n_t).
+    let kdiag: Vec<f32> = norms
+        .iter()
+        .map(|&nt| kernel.eval_precomp(nt, nt, nt))
+        .collect();
+    let mut cache = RowCache::new(params.cache_rows);
+    let kernel_row = |t: usize, norms: &[f32]| -> Vec<f32> {
+        let xt = ds.x.row(t);
+        let nt = norms[t];
+        (0..n)
+            .map(|u| {
+                kernel.eval_precomp(nt, norms[u], vecops::dot(xt, ds.x.row(u)))
+            })
+            .collect()
+    };
+
+    let mut alpha = vec![0.0f32; n];
+    let mut grad = vec![-1.0f32; n]; // G_i = Σ Q α − 1, α = 0 initially
+    let tau = 1e-12f64;
+
+    let in_up = |t: usize, alpha: &[f32]| {
+        (y[t] > 0.0 && alpha[t] < c) || (y[t] < 0.0 && alpha[t] > 0.0)
+    };
+    let in_low = |t: usize, alpha: &[f32]| {
+        (y[t] > 0.0 && alpha[t] > 0.0) || (y[t] < 0.0 && alpha[t] < c)
+    };
+
+    let mut iterations = 0usize;
+    let mut converged = false;
+    while iterations < params.max_iter {
+        // --- selection: first order for i, second order for j ---
+        let mut m = f64::NEG_INFINITY;
+        let mut i = usize::MAX;
+        for t in 0..n {
+            if in_up(t, &alpha) {
+                let v = f64::from(-y[t] * grad[t]);
+                if v > m {
+                    m = v;
+                    i = t;
+                }
+            }
+        }
+        let mut big_m = f64::INFINITY;
+        for t in 0..n {
+            if in_low(t, &alpha) {
+                big_m = big_m.min(f64::from(-y[t] * grad[t]));
+            }
+        }
+        if i == usize::MAX || m - big_m < f64::from(params.eps) {
+            converged = true;
+            break;
+        }
+        // Kernel row for i (borrow ends before we mutate).
+        let ki: Vec<f32> = cache.get(i, || kernel_row(i, &norms)).to_vec();
+        let kii = f64::from(ki[i]);
+        let mut j = usize::MAX;
+        let mut best = f64::INFINITY;
+        for t in 0..n {
+            if !in_low(t, &alpha) {
+                continue;
+            }
+            let gt = f64::from(-y[t] * grad[t]);
+            let bdiff = m - gt;
+            if bdiff <= 0.0 {
+                continue;
+            }
+            let ktt = f64::from(kdiag[t]);
+            let kit = f64::from(ki[t]);
+            let a = (kii + ktt - 2.0 * kit).max(tau);
+            let obj = -(bdiff * bdiff) / a;
+            if obj < best {
+                best = obj;
+                j = t;
+            }
+        }
+        if j == usize::MAX {
+            converged = true;
+            break;
+        }
+        let kj: Vec<f32> = cache.get(j, || kernel_row(j, &norms)).to_vec();
+
+        // --- two-variable analytic update (LIBSVM conventions) ---
+        let (yi, yj) = (y[i], y[j]);
+        let qii = f64::from(ki[i]); // y_i y_i K_ii = K_ii
+        let qjj = f64::from(kj[j]);
+        let qij = f64::from(yi * yj * ki[j]);
+        let (old_ai, old_aj) = (f64::from(alpha[i]), f64::from(alpha[j]));
+        let cf = f64::from(c);
+        let (mut ai, mut aj);
+        if yi != yj {
+            let quad = (qii + qjj + 2.0 * qij).max(tau);
+            let delta = f64::from(-grad[i] - grad[j]) / quad;
+            let diff = old_ai - old_aj;
+            ai = old_ai + delta;
+            aj = old_aj + delta;
+            if diff > 0.0 && aj < 0.0 {
+                aj = 0.0;
+                ai = diff;
+            } else if diff <= 0.0 && ai < 0.0 {
+                ai = 0.0;
+                aj = -diff;
+            }
+            if diff > 0.0 {
+                if ai > cf {
+                    ai = cf;
+                    aj = cf - diff;
+                }
+            } else if aj > cf {
+                aj = cf;
+                ai = cf + diff;
+            }
+        } else {
+            let quad = (qii + qjj - 2.0 * qij).max(tau);
+            let delta = f64::from(grad[i] - grad[j]) / quad;
+            let sum = old_ai + old_aj;
+            ai = old_ai - delta;
+            aj = old_aj + delta;
+            if sum > cf {
+                if ai > cf {
+                    ai = cf;
+                    aj = sum - cf;
+                }
+                if aj > cf {
+                    aj = cf;
+                    ai = sum - cf;
+                }
+            } else {
+                if aj < 0.0 {
+                    aj = 0.0;
+                    ai = sum;
+                }
+                if ai < 0.0 {
+                    ai = 0.0;
+                    aj = sum;
+                }
+            }
+        }
+        let dai = (ai - old_ai) as f32;
+        let daj = (aj - old_aj) as f32;
+        if dai.abs() < 1e-12 && daj.abs() < 1e-12 {
+            converged = true;
+            break;
+        }
+        alpha[i] = ai as f32;
+        alpha[j] = aj as f32;
+        // Gradient update: G_t += Q_ti Δα_i + Q_tj Δα_j.
+        for t in 0..n {
+            grad[t] += y[t] * (yi * dai * ki[t] + yj * daj * kj[t]);
+        }
+        iterations += 1;
+    }
+
+    // rho/b from free SVs (or the violation midpoint when none free).
+    let mut free_sum = 0.0f64;
+    let mut free_count = 0usize;
+    for t in 0..n {
+        if alpha[t] > 0.0 && alpha[t] < c {
+            free_sum += f64::from(y[t] * grad[t]);
+            free_count += 1;
+        }
+    }
+    let b = if free_count > 0 {
+        (-free_sum / free_count as f64) as f32
+    } else {
+        let mut m = f64::NEG_INFINITY;
+        let mut big_m = f64::INFINITY;
+        for t in 0..n {
+            let v = f64::from(-y[t] * grad[t]);
+            if in_up(t, &alpha) {
+                m = m.max(v);
+            }
+            if in_low(t, &alpha) {
+                big_m = big_m.min(v);
+            }
+        }
+        ((m + big_m) / 2.0) as f32
+    };
+
+    // Dual objective ½αᵀQα − eᵀα = ½ Σ α_i(G_i − 1)  (since G = Qα − e).
+    let objective: f64 = 0.5
+        * alpha
+            .iter()
+            .zip(&grad)
+            .map(|(&a, &g)| f64::from(a) * (f64::from(g) - 1.0))
+            .sum::<f64>();
+
+    // Extract SVs.
+    let sv_idx: Vec<usize> =
+        (0..n).filter(|&t| alpha[t] > 1e-8).collect();
+    let coef: Vec<f32> = sv_idx.iter().map(|&t| alpha[t] * y[t]).collect();
+    let sv = ds.x.gather_rows(&sv_idx);
+    let n_bounded = sv_idx.iter().filter(|&&t| alpha[t] >= c - 1e-8).count();
+    let stats = TrainStats {
+        iterations,
+        n_sv: sv_idx.len(),
+        n_bounded_sv: n_bounded,
+        objective,
+        converged,
+    };
+    log_debug!(
+        "smo: iters={} n_sv={} bounded={} obj={:.4} converged={} cache h/m={}/{}",
+        stats.iterations,
+        stats.n_sv,
+        stats.n_bounded_sv,
+        stats.objective,
+        stats.converged,
+        cache.hits,
+        cache.misses
+    );
+    Ok((SvmModel::new(kernel, sv, coef, b)?, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::util::stats::accuracy;
+
+    fn predict_all(m: &SvmModel, ds: &Dataset) -> Vec<f32> {
+        (0..ds.len()).map(|r| m.decision_one(ds.x.row(r))).collect()
+    }
+
+    #[test]
+    fn separable_case_trains_clean() {
+        let ds = synth::two_gaussians(1, 300, 8, 3.0);
+        let (model, stats) = train_csvc(
+            &ds,
+            Kernel::Rbf { gamma: 0.5 },
+            SmoParams { c: 10.0, ..Default::default() },
+        )
+        .unwrap();
+        assert!(stats.converged);
+        let acc = accuracy(&predict_all(&model, &ds), &ds.y);
+        assert!(acc > 0.97, "train acc {acc}");
+        // Well-separated data ⇒ few SVs.
+        assert!(model.n_sv() < ds.len() / 2);
+    }
+
+    #[test]
+    fn generalizes_on_holdout() {
+        let (tr, te) = synth::SynthProfile::ControlLike.generate(3, 800, 400);
+        let (model, stats) =
+            train_csvc(&tr, Kernel::Rbf { gamma: 1.0 }, SmoParams {
+                c: 2.0,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(stats.converged);
+        let acc = accuracy(&predict_all(&model, &te), &te.y);
+        assert!(acc > 0.85, "test acc {acc}");
+    }
+
+    #[test]
+    fn dual_constraints_hold() {
+        let ds = synth::two_gaussians(5, 200, 4, 1.0);
+        let c = 1.5f32;
+        let (model, _) = train_csvc(&ds, Kernel::Rbf { gamma: 0.8 }, SmoParams {
+            c,
+            ..Default::default()
+        })
+        .unwrap();
+        // 0 <= alpha <= C  (coef = alpha*y so |coef| <= C)
+        for &co in &model.coef {
+            assert!(co.abs() <= c + 1e-4);
+        }
+        // Σ α y = Σ coef ≈ 0 (equality constraint).
+        let s: f32 = model.coef.iter().sum();
+        assert!(s.abs() < 1e-2 * c * model.n_sv() as f32 + 1e-3, "sum={s}");
+    }
+
+    #[test]
+    fn kkt_conditions_approximately_hold() {
+        let ds = synth::two_gaussians(6, 150, 3, 1.2);
+        let c = 1.0f32;
+        let (model, _) = train_csvc(&ds, Kernel::Rbf { gamma: 0.6 }, SmoParams {
+            c,
+            eps: 1e-4,
+            ..Default::default()
+        })
+        .unwrap();
+        // Free SVs must satisfy y f(x) ≈ 1.
+        for i in 0..model.n_sv() {
+            let a = model.coef[i].abs();
+            if a > 1e-5 && a < c - 1e-5 {
+                let yi = model.coef[i].signum();
+                let margin = yi * model.decision_one(model.sv.row(i));
+                assert!(
+                    (margin - 1.0).abs() < 0.05,
+                    "free SV margin {margin}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn harder_data_yields_more_svs() {
+        let easy = synth::two_gaussians(7, 300, 6, 3.0);
+        let hard = synth::two_gaussians(7, 300, 6, 0.5);
+        let p = SmoParams::default();
+        let k = Kernel::Rbf { gamma: 0.5 };
+        let (me, _) = train_csvc(&easy, k, p).unwrap();
+        let (mh, _) = train_csvc(&hard, k, p).unwrap();
+        assert!(
+            mh.n_sv() > me.n_sv(),
+            "hard {} <= easy {}",
+            mh.n_sv(),
+            me.n_sv()
+        );
+    }
+
+    #[test]
+    fn linear_kernel_trains() {
+        let ds = synth::two_gaussians(8, 200, 5, 2.5);
+        let (model, stats) =
+            train_csvc(&ds, Kernel::Linear, SmoParams::default()).unwrap();
+        assert!(stats.converged);
+        let acc = accuracy(&predict_all(&model, &ds), &ds.y);
+        assert!(acc > 0.9, "linear acc {acc}");
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let ds = Dataset::new(crate::linalg::Mat::zeros(0, 3), vec![]).unwrap();
+        assert!(train_csvc(&ds, Kernel::Linear, SmoParams::default()).is_err());
+    }
+
+    #[test]
+    fn row_cache_evicts_and_hits() {
+        let mut cache = RowCache::new(2);
+        cache.get(0, || vec![0.0]);
+        cache.get(1, || vec![1.0]);
+        cache.get(0, || panic!("should hit"));
+        cache.get(2, || vec![2.0]); // evicts 1 (LRU)
+        cache.get(1, || vec![1.5]); // miss again
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 4);
+    }
+}

@@ -1,0 +1,219 @@
+//! Benchmark harness substrate ("mini-criterion": no criterion crate
+//! offline). Same statistical discipline as the paper's Table 2 rows:
+//! warmup, N timed samples, mean ± σ. Used both by `cargo bench` targets
+//! (`harness = false`) and by the `bench` CLI subcommand that regenerates
+//! the paper's tables.
+
+use std::time::Instant;
+
+use super::json::Json;
+use super::stats::Summary;
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Untimed warmup iterations (JIT caches, page faults, turbo).
+    pub warmup: usize,
+    /// Timed samples.
+    pub samples: usize,
+    /// Optional wall-clock budget; sampling stops early when exceeded.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 3, samples: 30, max_seconds: 20.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick configuration used by smoke tests / CI.
+    pub fn quick() -> Self {
+        BenchConfig { warmup: 1, samples: 5, max_seconds: 5.0 }
+    }
+}
+
+/// Result of one benchmark: timing summary in seconds.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl Sample {
+    pub fn mean(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        self.summary.std
+    }
+
+    /// `12.345 ms ± 0.678` style human rendering.
+    pub fn human(&self) -> String {
+        format!(
+            "{} ± {}",
+            humanize_seconds(self.summary.mean),
+            humanize_seconds(self.summary.std)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("n", Json::num(self.summary.n as f64)),
+            ("mean_s", Json::num(self.summary.mean)),
+            ("std_s", Json::num(self.summary.std)),
+            ("min_s", Json::num(self.summary.min)),
+            ("p50_s", Json::num(self.summary.p50)),
+            ("max_s", Json::num(self.summary.max)),
+        ])
+    }
+}
+
+/// Render seconds at an appropriate scale.
+pub fn humanize_seconds(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner.
+pub struct Bencher {
+    pub config: BenchConfig,
+    pub results: Vec<Sample>,
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Self {
+        Bencher { config, results: Vec::new() }
+    }
+
+    /// Time `f` (which should perform one complete unit of work) and
+    /// record the summary under `name`. Returns the recorded sample.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Sample {
+        for _ in 0..self.config.warmup {
+            f();
+        }
+        let started = Instant::now();
+        let mut times = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+            if started.elapsed().as_secs_f64() > self.config.max_seconds
+                && times.len() >= 3
+            {
+                break;
+            }
+        }
+        let sample =
+            Sample { name: name.to_string(), summary: Summary::from(&times) };
+        self.results.push(sample.clone());
+        sample
+    }
+
+    /// Emit all recorded samples as a JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.results.iter().map(|s| s.to_json()).collect())
+    }
+
+    /// Write results to `path` as pretty JSON.
+    pub fn write_json(&self, path: &str) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Render a markdown table from rows of cells (first row = header).
+pub fn markdown_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows[0].len();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for (i, cell) in row.iter().enumerate() {
+            out.push(' ');
+            out.push_str(cell);
+            for _ in cell.chars().count()..widths[i] {
+                out.push(' ');
+            }
+            out.push_str(" |");
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push('|');
+            for w in &widths {
+                out.push_str(&"-".repeat(w + 2));
+                out.push('|');
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_samples() {
+        let mut b = Bencher::new(BenchConfig { warmup: 1, samples: 5, max_seconds: 10.0 });
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.summary.n, 5);
+        assert!(s.mean() >= 0.0);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let mut b = Bencher::new(BenchConfig { warmup: 0, samples: 1000, max_seconds: 0.05 });
+        let s = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(s.summary.n < 1000);
+        assert!(s.summary.n >= 3);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(humanize_seconds(2.5), "2.500 s");
+        assert_eq!(humanize_seconds(0.0025), "2.500 ms");
+        assert_eq!(humanize_seconds(2.5e-6), "2.500 µs");
+        assert_eq!(humanize_seconds(5e-9), "5.0 ns");
+    }
+
+    #[test]
+    fn markdown_renders() {
+        let t = markdown_table(&[
+            vec!["a".into(), "bb".into()],
+            vec!["ccc".into(), "d".into()],
+        ]);
+        assert!(t.contains("| a   | bb |"));
+        assert!(t.contains("| ccc | d  |"));
+        assert!(t.lines().count() == 3);
+    }
+
+    #[test]
+    fn json_emission() {
+        let mut b = Bencher::new(BenchConfig::quick());
+        b.run("x", || {});
+        let j = b.to_json().to_string_compact();
+        assert!(j.contains("\"name\":\"x\""));
+    }
+}

@@ -1,0 +1,170 @@
+//! Tiny CLI argument substrate (no clap offline).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags and options may be interleaved; `--key=value` is accepted too.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand if it
+    /// doesn't start with `-`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut tokens = it.into_iter().peekable();
+        if let Some(first) = tokens.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = tokens.next();
+            }
+        }
+        while let Some(tok) = tokens.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` ends option parsing.
+                    out.positionals.extend(tokens);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if tokens
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = tokens.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::InvalidArg(format!("--{name} expects a number, got '{s}'"))
+            }),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::InvalidArg(format!(
+                    "--{name} expects an integer, got '{s}'"
+                ))
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                Error::InvalidArg(format!(
+                    "--{name} expects an integer, got '{s}'"
+                ))
+            }),
+        }
+    }
+
+    /// Required string option.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::InvalidArg(format!("missing --{name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare flag directly before a positional is ambiguous in
+        // a registry-less parser; flags go last or use `--`.
+        let a = parse("train --data foo.txt --gamma 0.05 out.model --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("data"), Some("foo.txt"));
+        assert_eq!(a.get_f64("gamma", 1.0).unwrap(), 0.05);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.positionals, vec!["out.model"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --table=2 --samples=30");
+        assert_eq!(a.get("table"), Some("2"));
+        assert_eq!(a.get_usize("samples", 0).unwrap(), 30);
+    }
+
+    #[test]
+    fn flag_before_end_and_defaults() {
+        let a = parse("serve --verbose");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_or("policy", "hybrid"), "hybrid");
+        assert_eq!(a.get_usize("batch", 256).unwrap(), 256);
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run --x 1 -- --not-an-option");
+        assert_eq!(a.positionals, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --gamma abc");
+        assert!(a.get_f64("gamma", 0.0).is_err());
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = parse("x");
+        assert!(a.require("data").is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_flag("help"));
+    }
+}

@@ -1,0 +1,100 @@
+//! Minimal leveled logger (no env_logger offline). Level comes from the
+//! `APPROXRBF_LOG` environment variable (`error|warn|info|debug|trace`),
+//! defaulting to `info`. Messages go to stderr so stdout stays clean for
+//! table/JSON output consumed by scripts.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 1;
+pub const WARN: u8 = 2;
+pub const INFO: u8 = 3;
+pub const DEBUG: u8 = 4;
+pub const TRACE: u8 = 5;
+
+static LEVEL: AtomicU8 = AtomicU8::new(0); // 0 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("APPROXRBF_LOG").ok().as_deref() {
+        Some("error") => ERROR,
+        Some("warn") => WARN,
+        Some("debug") => DEBUG,
+        Some("trace") => TRACE,
+        Some("off") => 0xFE,
+        _ => INFO,
+    };
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current level, lazily initialized from the environment.
+pub fn level() -> u8 {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => init_from_env(),
+        l => l,
+    }
+}
+
+/// Override the level programmatically (tests, `--verbose`).
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}
+
+pub fn enabled(l: u8) -> bool {
+    l <= level() && level() != 0xFE
+}
+
+#[doc(hidden)]
+pub fn log(l: u8, tag: &str, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::INFO, "info", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::WARN, "warn", format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::DEBUG, "debug", format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        set_level(INFO);
+        assert!(enabled(ERROR));
+        assert!(enabled(INFO));
+        assert!(!enabled(DEBUG));
+        set_level(TRACE);
+        assert!(enabled(DEBUG));
+        set_level(INFO);
+    }
+
+    #[test]
+    fn macros_compile() {
+        set_level(0xFE);
+        log_info!("hello {}", 1);
+        log_warn!("warn {}", 2);
+        log_debug!("debug {}", 3);
+        set_level(INFO);
+    }
+}

@@ -1,0 +1,17 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, statistics, benchmark harness, logging and a
+//! lightweight property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use bench::{BenchConfig, Bencher, Sample};
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,72 @@
+//! Lightweight property-testing substrate (no proptest crate offline).
+//!
+//! `prop_cases!(N, |rng| { ... })` runs the body N times with forked
+//! deterministic RNG streams; on failure the macro reports the case
+//! index and seed so the case can be replayed exactly. No shrinking —
+//! generators in this repo are parameterized tightly enough that raw
+//! counterexamples are readable.
+
+/// Run `n` randomized cases. The closure receives a fresh deterministic
+/// [`crate::util::Rng`] per case. Panics propagate with case context.
+pub fn run_cases<F: FnMut(&mut crate::util::Rng)>(
+    name: &str,
+    n: usize,
+    base_seed: u64,
+    mut body: F,
+) {
+    for case in 0..n {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = crate::util::Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || body(&mut rng),
+        ));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}/{n} (seed={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Property-test macro: `prop_cases!("name", 32, |rng| { ... });`
+#[macro_export]
+macro_rules! prop_cases {
+    ($name:expr, $n:expr, $body:expr) => {
+        $crate::util::proptest::run_cases($name, $n, 0xA11CE, $body)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        prop_cases!("counting", 17, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn rng_streams_differ_between_cases() {
+        let mut seen = Vec::new();
+        prop_cases!("distinct", 8, |rng| {
+            seen.push(rng.next_u64());
+        });
+        let mut dedup = seen.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seen.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        prop_cases!("failing", 4, |_rng| {
+            panic!("boom");
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Coordinator integration: serving through the full L3 stack with both
+//! native and (when artifacts exist) XLA executors, plus crate-level
+//! property tests on routing invariants.
+
+use std::path::Path;
+use std::time::Duration;
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::coordinator::{
+    Coordinator, CoordinatorConfig, ExecSpec, Route,
+};
+use approxrbf::data::{Dataset, SynthProfile, UnitNormScaler};
+use approxrbf::linalg::MathBackend;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::{Kernel, SvmModel};
+use approxrbf::util::Rng;
+
+fn setup(
+    gamma_mult: f32,
+) -> (SvmModel, approxrbf::approx::ApproxModel, Dataset) {
+    let (raw_train, raw_test) = SynthProfile::ControlLike.generate(5, 500, 400);
+    let train = UnitNormScaler.apply_dataset(&raw_train);
+    let test = UnitNormScaler.apply_dataset(&raw_test);
+    let gamma = gamma_max_for_data(&train) * gamma_mult;
+    let (model, _) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    (model, am, test)
+}
+
+#[test]
+fn hybrid_serving_accuracy_equals_best_of_both() {
+    let (model, am, test) = setup(0.8);
+    let coord = Coordinator::start(
+        model.clone(),
+        am.clone(),
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let responses = coord.predict_all(&test.x).unwrap();
+    // All in-bound (unit-norm data, γ < γ_max) ⇒ all approx-routed and
+    // every decision equals the approx model's direct evaluation.
+    for (r, resp) in responses.iter().enumerate() {
+        assert!(resp.in_bound);
+        assert_eq!(resp.route, Route::Approx);
+        let (want, _) = am.decision_one(test.x.row(r));
+        assert!((resp.decision - want).abs() < 1e-4);
+    }
+    let snap = coord.metrics();
+    assert_eq!(snap.served_approx as usize, test.len());
+    assert!(snap.throughput_rps > 0.0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn xla_executor_serves_identically_to_native() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let (model, am, test) = setup(0.8);
+    let native = Coordinator::start(
+        model.clone(),
+        am.clone(),
+        CoordinatorConfig::default(),
+    )
+    .unwrap();
+    let xla = Coordinator::start(
+        model,
+        am,
+        CoordinatorConfig {
+            exec: ExecSpec::Xla { artifacts_dir: "artifacts".into() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let sub = test.x.rows_slice(0, 64);
+    let rn = native.predict_all(&sub).unwrap();
+    let rx = xla.predict_all(&sub).unwrap();
+    for (a, b) in rn.iter().zip(&rx) {
+        assert_eq!(a.route, b.route);
+        assert!(
+            (a.decision - b.decision).abs() < 2e-3 * (1.0 + a.decision.abs()),
+            "native {} vs xla {}",
+            a.decision,
+            b.decision
+        );
+    }
+    native.shutdown().unwrap();
+    xla.shutdown().unwrap();
+}
+
+#[test]
+fn property_hybrid_never_serves_out_of_bound_via_approx() {
+    // Crate-level routing invariant, randomized over traffic patterns:
+    // under Hybrid, every response served by the approx route must
+    // satisfy the Eq. (3.11) bound.
+    let (model, am, test) = setup(0.9);
+    let coord =
+        Coordinator::start(model, am, CoordinatorConfig::default()).unwrap();
+    let mut rng = Rng::new(0xBEEF);
+    for _case in 0..4 {
+        let mut traffic = test.x.rows_slice(0, 100);
+        // Random subset pushed out of bound by large scaling.
+        for r in 0..traffic.rows() {
+            if rng.chance(0.3) {
+                for v in traffic.row_mut(r) {
+                    *v *= rng.range(2.5, 6.0) as f32;
+                }
+            }
+        }
+        let responses = coord.predict_all(&traffic).unwrap();
+        for resp in &responses {
+            if resp.route == Route::Approx {
+                assert!(
+                    resp.in_bound,
+                    "approx-routed response out of bound (id {})",
+                    resp.id
+                );
+            } else {
+                assert!(!resp.in_bound);
+            }
+        }
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn property_all_submitted_ids_answered_exactly_once() {
+    let (model, am, test) = setup(0.8);
+    let coord = Coordinator::start(
+        model,
+        am,
+        CoordinatorConfig {
+            max_batch: 17, // odd size to stress chunk boundaries
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let n = 333;
+    let mut ids = Vec::new();
+    for r in 0..n {
+        ids.push(coord.submit(test.x.row(r % test.len()).to_vec()).unwrap());
+    }
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..n {
+        let resp = coord.recv(Duration::from_secs(10)).expect("response");
+        assert!(seen.insert(resp.id), "duplicate id {}", resp.id);
+    }
+    for id in ids {
+        assert!(seen.contains(&id), "lost id {id}");
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn throughput_scales_with_batching() {
+    // Larger max_batch must not reduce throughput on bulk traffic
+    // (sanity check on the batching design, not a strict perf bound).
+    let (model, am, test) = setup(0.8);
+    let mut rates = Vec::new();
+    for max_batch in [1usize, 128] {
+        let coord = Coordinator::start(
+            model.clone(),
+            am.clone(),
+            CoordinatorConfig {
+                max_batch,
+                max_wait: Duration::from_micros(500),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let _ = coord.predict_all(&test.x).unwrap();
+        rates.push(test.len() as f64 / t0.elapsed().as_secs_f64());
+        coord.shutdown().unwrap();
+    }
+    assert!(
+        rates[1] > rates[0] * 0.5,
+        "batched serving collapsed: {rates:?}"
+    );
+}

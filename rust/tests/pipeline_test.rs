@@ -1,0 +1,139 @@
+//! End-to-end pipeline integration: generate → train → approximate →
+//! serialize → reload → predict, asserting the paper's accuracy claims
+//! hold across module boundaries (no PJRT required).
+
+use std::path::Path;
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::error_analysis;
+use approxrbf::approx::ApproxModel;
+use approxrbf::data::{libsvm_format, SynthProfile, UnitNormScaler};
+use approxrbf::linalg::MathBackend;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::{Kernel, SvmModel};
+
+#[test]
+fn full_pipeline_roundtrip_through_files() {
+    let dir = std::env::temp_dir().join("approxrbf_pipeline_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    // 1. Generate + persist data in LIBSVM format.
+    let (train, test) = SynthProfile::ControlLike.generate(99, 600, 300);
+    let train_path = dir.join("train.txt");
+    libsvm_format::save(&train, &train_path).unwrap();
+    let train2 = libsvm_format::load(&train_path, Some(train.dim())).unwrap();
+    assert_eq!(train2.len(), train.len());
+
+    // 2. Train within the validity bound.
+    let gamma = gamma_max_for_data(&train2) * 0.8;
+    let (model, stats) = train_csvc(
+        &train2,
+        Kernel::Rbf { gamma },
+        SmoParams::default(),
+    )
+    .unwrap();
+    assert!(stats.converged);
+
+    // 3. Model file roundtrip (LIBSVM text format).
+    let model_path = dir.join("m.model");
+    model.save(&model_path).unwrap();
+    let model2 = SvmModel::load(&model_path).unwrap();
+    assert_eq!(model2.n_sv(), model.n_sv());
+
+    // 4. Approximate + approx-model file roundtrip.
+    let am = build_approx_model(&model2, MathBackend::Blocked).unwrap();
+    let approx_path = dir.join("m.approx");
+    am.save(&approx_path).unwrap();
+    let am2 = ApproxModel::load(&approx_path).unwrap();
+    assert!((am2.c - am.c).abs() < 1e-6);
+
+    // 5. Compare predictions end-to-end: reloaded approx vs reloaded
+    //    exact on the test set.
+    let rep = error_analysis::compare(&model2, &am2, &test).unwrap();
+    assert!(
+        rep.label_diff < 0.02,
+        "label diff {} too high for in-bound gamma",
+        rep.label_diff
+    );
+    assert!(rep.exact_acc > 0.8, "exact acc {}", rep.exact_acc);
+}
+
+#[test]
+fn table1_phenomenon_diff_grows_with_gamma() {
+    // The paper's Table 1 trend: diff% increases as γ/γ_MAX grows.
+    let (raw, test) = SynthProfile::ControlLike.generate(7, 800, 400);
+    let train = UnitNormScaler.apply_dataset(&raw);
+    let test = UnitNormScaler.apply_dataset(&test);
+    let gmax = gamma_max_for_data(&train);
+    let mut diffs = Vec::new();
+    for mult in [0.5f32, 2.0, 8.0] {
+        let (model, _) = train_csvc(
+            &train,
+            Kernel::Rbf { gamma: gmax * mult },
+            SmoParams::default(),
+        )
+        .unwrap();
+        let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+        let rep = error_analysis::compare(&model, &am, &test).unwrap();
+        diffs.push(rep.label_diff);
+    }
+    assert!(
+        diffs[0] <= diffs[2],
+        "diff should grow with gamma ratio: {diffs:?}"
+    );
+    assert!(diffs[0] < 0.02, "in-bound diff too large: {diffs:?}");
+}
+
+#[test]
+fn table3_phenomenon_compression_scales_with_nsv_over_d() {
+    // Table 3's trend: compression ratio ~ n_SV/d; low-d many-SV models
+    // compress hugely, wide models with few SVs can even grow.
+    let (low_d, _) = SynthProfile::ControlLike.generate(11, 900, 10);
+    let gamma = gamma_max_for_data(&low_d) * 0.8;
+    let (m_low, _) = train_csvc(
+        &low_d,
+        Kernel::Rbf { gamma },
+        SmoParams::default(),
+    )
+    .unwrap();
+    let am_low = build_approx_model(&m_low, MathBackend::Blocked).unwrap();
+    let ratio_low =
+        m_low.text_size_bytes() as f64 / am_low.text_size_bytes() as f64;
+    assert!(
+        ratio_low > 3.0,
+        "low-d/many-SV should compress well: {ratio_low}"
+    );
+}
+
+#[test]
+fn artifacts_manifest_parses_when_present() {
+    // Keeps the aot.py contract honest without requiring PJRT.
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let manifest = approxrbf::runtime::Manifest::load(dir).unwrap();
+    assert!(manifest.entries.len() >= 10);
+    // Every referenced file exists and is non-trivial HLO text.
+    for e in &manifest.entries {
+        let p = manifest.path_of(e);
+        let meta = std::fs::metadata(&p)
+            .unwrap_or_else(|_| panic!("missing artifact {}", p.display()));
+        assert!(meta.len() > 200, "{} suspiciously small", p.display());
+    }
+    // All five profiles' dims are covered by approx buckets.
+    for d in [22usize, 100, 123, 780, 2000] {
+        assert!(
+            manifest
+                .select(
+                    approxrbf::runtime::ArtifactKind::Approx,
+                    approxrbf::runtime::ImplKind::Jnp,
+                    d,
+                    0
+                )
+                .is_some(),
+            "no approx bucket for d={d}"
+        );
+    }
+}

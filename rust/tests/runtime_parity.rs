@@ -1,0 +1,153 @@
+//! Runtime parity: the PJRT-executed artifacts must agree with the
+//! native Rust evaluators to f32 tolerance — the cross-language
+//! correctness contract of the three-layer stack (L1/L2 pytest checks
+//! Pallas vs jnp; this checks compiled-HLO-via-Rust vs native Rust).
+//!
+//! Skips (with a message) when `artifacts/` is absent.
+
+use std::path::Path;
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::data::SynthProfile;
+use approxrbf::linalg::MathBackend;
+use approxrbf::runtime::Engine;
+use approxrbf::svm::predict::ExactPredictor;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::Kernel;
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine load"))
+}
+
+fn tolerance(scale: f32) -> f32 {
+    2e-3 * (1.0 + scale.abs())
+}
+
+#[test]
+fn xla_approx_predict_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (train, test) = SynthProfile::ControlLike.generate(123, 500, 300);
+    let gamma = gamma_max_for_data(&train) * 0.8;
+    let (model, _) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    let prep = engine.prepare_approx(&am).unwrap();
+    let (dec_xla, zn_xla) = engine.approx_predict(&prep, &test.x).unwrap();
+    let (dec_nat, zn_nat) =
+        am.decision_batch(&test.x, MathBackend::Blocked).unwrap();
+    assert_eq!(dec_xla.len(), test.len());
+    for r in 0..test.len() {
+        assert!(
+            (dec_xla[r] - dec_nat[r]).abs() < tolerance(dec_nat[r]),
+            "row {r}: xla {} vs native {}",
+            dec_xla[r],
+            dec_nat[r]
+        );
+        assert!((zn_xla[r] - zn_nat[r]).abs() < tolerance(zn_nat[r]));
+    }
+}
+
+#[test]
+fn xla_exact_predict_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (train, test) = SynthProfile::ControlLike.generate(124, 400, 250);
+    let gamma = gamma_max_for_data(&train) * 0.9;
+    let (model, _) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let prep = engine.prepare_exact(&model).unwrap();
+    let dec_xla = engine.exact_predict(&prep, &test.x).unwrap();
+    let dec_nat = ExactPredictor::new(&model, MathBackend::Blocked)
+        .unwrap()
+        .decision_batch(&test.x)
+        .unwrap();
+    for r in 0..test.len() {
+        assert!(
+            (dec_xla[r] - dec_nat[r]).abs() < tolerance(dec_nat[r]),
+            "row {r}: xla {} vs native {}",
+            dec_xla[r],
+            dec_nat[r]
+        );
+    }
+}
+
+#[test]
+fn xla_build_matches_native() {
+    let Some(engine) = engine() else { return };
+    let (train, _) = SynthProfile::ControlLike.generate(125, 400, 10);
+    let gamma = gamma_max_for_data(&train) * 0.8;
+    let (model, _) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am_xla = engine.build_approx(&model).unwrap();
+    let am_nat = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    assert!((am_xla.c - am_nat.c).abs() < tolerance(am_nat.c));
+    for (a, b) in am_xla.v.iter().zip(&am_nat.v) {
+        assert!((a - b).abs() < tolerance(*b));
+    }
+    let scale = am_nat.m.fro_norm() as f32;
+    assert!(
+        am_xla.m.max_abs_diff(&am_nat.m) < tolerance(scale),
+        "M diff {}",
+        am_xla.m.max_abs_diff(&am_nat.m)
+    );
+    // And the two approx models predict identically on fresh data.
+    let (_, test) = SynthProfile::ControlLike.generate(126, 10, 100);
+    let (dx, _) = am_xla.decision_batch(&test.x, MathBackend::Blocked).unwrap();
+    let (dn, _) = am_nat.decision_batch(&test.x, MathBackend::Blocked).unwrap();
+    for r in 0..test.len() {
+        assert!((dx[r] - dn[r]).abs() < tolerance(dn[r]));
+    }
+}
+
+#[test]
+fn pallas_artifacts_match_jnp_artifacts() {
+    // The interpret-mode Pallas lowering and the jnp lowering of the
+    // same L2 function must agree when executed through PJRT.
+    let Some(_engine) = engine() else { return };
+    let dir = Path::new("artifacts");
+    let (train, test) = SynthProfile::ControlLike.generate(127, 300, 128);
+    let gamma = gamma_max_for_data(&train) * 0.8;
+    let (model, _) =
+        train_csvc(&train, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+
+    // jnp engine (default) vs pallas engine (env-independent: construct
+    // by flipping the preference field).
+    let eng_jnp = Engine::load(dir).unwrap();
+    let mut eng_pal = Engine::load(dir).unwrap();
+    eng_pal.impl_kind = approxrbf::runtime::ImplKind::Pallas;
+    if eng_pal
+        .manifest()
+        .select(
+            approxrbf::runtime::ArtifactKind::Approx,
+            approxrbf::runtime::ImplKind::Pallas,
+            am.dim(),
+            0,
+        )
+        .is_none()
+    {
+        eprintln!("skipping: no pallas artifacts for d={}", am.dim());
+        return;
+    }
+    let prep_j = eng_jnp.prepare_approx(&am).unwrap();
+    let prep_p = eng_pal.prepare_approx(&am).unwrap();
+    let (dj, _) = eng_jnp.approx_predict(&prep_j, &test.x).unwrap();
+    let (dp, _) = eng_pal.approx_predict(&prep_p, &test.x).unwrap();
+    for r in 0..test.len() {
+        assert!(
+            (dj[r] - dp[r]).abs() < tolerance(dj[r]),
+            "row {r}: jnp {} vs pallas {}",
+            dj[r],
+            dp[r]
+        );
+    }
+}
