@@ -1,0 +1,25 @@
+# Developer entry points. `make tier1` mirrors .github/workflows/ci.yml.
+
+CARGO_DIR := rust
+
+.PHONY: tier1 fmt lint build test artifacts
+
+tier1: fmt lint build test
+
+fmt:
+	cd $(CARGO_DIR) && cargo fmt --check
+
+lint:
+	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+build:
+	cd $(CARGO_DIR) && cargo build --release
+
+test:
+	cd $(CARGO_DIR) && cargo test -q
+
+# AOT-lower the L1/L2 kernels to HLO text for the PJRT runtime
+# (requires JAX; consumed by builds with `--features pjrt`).
+artifacts:
+	python3 python/compile/aot.py --out artifacts
+

@@ -17,7 +17,6 @@
 //!
 //! Run: `make artifacts && cargo run --release --example hybrid_serving`
 
-use std::path::Path;
 use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
@@ -34,6 +33,16 @@ use approxrbf::util::Rng;
 
 const REQUESTS: usize = 20_000;
 const OOB_FRACTION: f64 = 0.10;
+
+/// XLA executor spec, when compiled in (`--features pjrt`) and the AOT
+/// artifacts exist.
+fn xla_exec() -> Option<ExecSpec> {
+    #[cfg(feature = "pjrt")]
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        return Some(ExecSpec::Xla { artifacts_dir: "artifacts".into() });
+    }
+    None
+}
 
 fn main() -> approxrbf::Result<()> {
     // ---------- build phase (offline; python already ran via make) ----------
@@ -57,15 +66,20 @@ fn main() -> approxrbf::Result<()> {
     );
     let am = build_approx_model(&model, MathBackend::Blocked)?;
 
-    let exec = if Path::new("artifacts/manifest.txt").exists() {
-        println!("[build] artifacts found: serving on the XLA/PJRT executor");
-        ExecSpec::Xla { artifacts_dir: "artifacts".into() }
-    } else {
-        println!(
-            "[build] NOTE: artifacts/ missing (run `make artifacts`); \
-             falling back to the native executor"
-        );
-        ExecSpec::Native(MathBackend::Blocked)
+    let exec = match xla_exec() {
+        Some(exec) => {
+            println!(
+                "[build] artifacts found: serving on the XLA/PJRT executor"
+            );
+            exec
+        }
+        None => {
+            println!(
+                "[build] NOTE: no XLA executor (missing artifacts/ or built \
+                 without `--features pjrt`); using the native executor"
+            );
+            ExecSpec::Native(MathBackend::Blocked)
+        }
     };
 
     // ---------- traffic: 10% adversarially out-of-bound ----------

@@ -4,7 +4,6 @@
 //!
 //! Run: `cargo bench --bench serving_bench`
 
-use std::path::Path;
 use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
@@ -36,9 +35,11 @@ fn main() {
         REQUESTS
     );
 
+    #[allow(unused_mut)]
     let mut execs: Vec<(&str, ExecSpec)> =
         vec![("native", ExecSpec::Native(MathBackend::Blocked))];
-    if Path::new("artifacts/manifest.txt").exists() {
+    #[cfg(feature = "pjrt")]
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
         execs.push((
             "xla",
             ExecSpec::Xla { artifacts_dir: "artifacts".into() },
@@ -93,6 +94,11 @@ fn main() {
                 REQUESTS as f64 / wall,
                 m.mean_batch_size
             );
+            // Per-tenant breakdown (single tenant here; the registry
+            // path in examples/multi_tenant_serving.rs shows several).
+            for line in m.per_model_table().lines().skip(1) {
+                println!("    {line}");
+            }
             coord.shutdown().unwrap();
         }
     }

@@ -27,6 +27,45 @@ impl ApproxModel {
         self.v.len()
     }
 
+    /// Shared validation behind every codec (text and `.arbf` binary):
+    /// shapes must agree and every parameter must be finite — a NaN/Inf
+    /// smuggled through a model file would silently poison all served
+    /// decisions. Returns a human-readable defect description.
+    pub fn check_finite(&self) -> std::result::Result<(), String> {
+        let d = self.v.len();
+        if self.m.rows() != d || self.m.cols() != d {
+            return Err(format!(
+                "M is {}x{} but v has dim {d}",
+                self.m.rows(),
+                self.m.cols()
+            ));
+        }
+        for (name, val) in [
+            ("gamma", self.gamma),
+            ("b", self.b),
+            ("c", self.c),
+            ("max_sv_norm_sq", self.max_sv_norm_sq),
+        ] {
+            if !val.is_finite() {
+                return Err(format!("non-finite {name}: {val}"));
+            }
+        }
+        if self.max_sv_norm_sq < 0.0 {
+            return Err(format!(
+                "negative max_sv_norm_sq: {}",
+                self.max_sv_norm_sq
+            ));
+        }
+        if let Some(i) = self.v.iter().position(|x| !x.is_finite()) {
+            return Err(format!("non-finite v[{i}]"));
+        }
+        if let Some(i) = self.m.as_slice().iter().position(|x| !x.is_finite())
+        {
+            return Err(format!("non-finite M entry (flat index {i})"));
+        }
+        Ok(())
+    }
+
     /// The run-time bound threshold on ‖z‖²: the approximation is
     /// guaranteed term-wise accurate iff `‖z‖² < 1/(16 γ² ‖x_M‖²)`.
     pub fn znorm_sq_budget(&self) -> f32 {
@@ -210,7 +249,7 @@ impl ApproxModel {
                 *m.at_mut(r + k, r) = val;
             }
         }
-        Ok(ApproxModel {
+        let model = ApproxModel {
             gamma: gamma.ok_or_else(|| Error::Parse("missing gamma".into()))?,
             b: b.ok_or_else(|| Error::Parse("missing b".into()))?,
             c: c.ok_or_else(|| Error::Parse("missing c".into()))?,
@@ -218,7 +257,11 @@ impl ApproxModel {
             m,
             max_sv_norm_sq: max_norm
                 .ok_or_else(|| Error::Parse("missing max_sv_norm_sq".into()))?,
-        })
+        };
+        // Rust's f32 parser accepts "nan"/"inf"; reject them here so a
+        // damaged model file cannot silently poison every decision.
+        model.check_finite().map_err(Error::Parse)?;
+        Ok(model)
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -307,5 +350,30 @@ mod tests {
         let m = toy();
         let text = m.to_text().replace("M upper", "M full");
         assert!(ApproxModel::from_text(&text).is_err());
+    }
+
+    #[test]
+    fn non_finite_text_rejected() {
+        // `"nan".parse::<f32>()` succeeds, so the codec must check.
+        let m = toy();
+        for (field, bad) in
+            [("gamma 0.1", "gamma nan"), ("b -0.2", "b inf"), ("c 0.5", "c -inf")]
+        {
+            let text = m.to_text().replace(field, bad);
+            let err = ApproxModel::from_text(&text).unwrap_err();
+            assert!(
+                matches!(err, Error::Parse(ref msg) if msg.contains("non-finite")),
+                "{bad}: {err}"
+            );
+        }
+        let text = m.to_text().replace("1 -2", "1 nan");
+        assert!(ApproxModel::from_text(&text).is_err());
+    }
+
+    #[test]
+    fn check_finite_catches_shape_drift() {
+        let mut m = toy();
+        m.v.push(0.0);
+        assert!(m.check_finite().is_err());
     }
 }

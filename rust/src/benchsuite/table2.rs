@@ -15,6 +15,7 @@ use std::path::Path;
 use crate::approx::builder::build_approx_model;
 use crate::data::synth::ALL_PROFILES;
 use crate::linalg::MathBackend;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::svm::predict::ExactPredictor;
 use crate::util::bench::{markdown_table, Bencher};
@@ -37,12 +38,15 @@ pub fn run(ctx: &BenchContext, artifacts_dir: Option<&Path>) -> Result<String> {
     let mut json_rows = Vec::new();
     let cfg = ctx.scale.bench_config();
     // Engine is constructed once (single-threaded benches).
+    #[cfg(feature = "pjrt")]
     let engine = match artifacts_dir {
         Some(dir) if dir.join("manifest.txt").exists() => {
             Some(Engine::load(dir)?)
         }
         _ => None,
     };
+    #[cfg(not(feature = "pjrt"))]
+    let _ = artifacts_dir;
 
     for profile in ALL_PROFILES {
         // γ at the paper's primary setting for the profile.
@@ -108,6 +112,9 @@ pub fn run(ctx: &BenchContext, artifacts_dir: Option<&Path>) -> Result<String> {
                 );
             })
             .mean();
+        #[cfg(not(feature = "pjrt"))]
+        let t_build_xla: Option<f64> = None;
+        #[cfg(feature = "pjrt")]
         let t_build_xla = match &engine {
             Some(e) => {
                 // One warm call compiles; then steady-state timing.
@@ -139,6 +146,9 @@ pub fn run(ctx: &BenchContext, artifacts_dir: Option<&Path>) -> Result<String> {
                 );
             })
             .mean();
+        #[cfg(not(feature = "pjrt"))]
+        let t_pred_xla: Option<f64> = None;
+        #[cfg(feature = "pjrt")]
         let t_pred_xla = match &engine {
             Some(e) => {
                 // Bulk bucket (§Perf L3-P3): offline prediction.

@@ -117,7 +117,12 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> PredictRequest {
-        PredictRequest { id, features: vec![0.0], enqueued_at: Instant::now() }
+        PredictRequest {
+            id,
+            model: super::super::request::default_model_id(),
+            features: vec![0.0],
+            enqueued_at: Instant::now(),
+        }
     }
 
     #[test]

@@ -1,17 +1,41 @@
 //! Serving metrics: per-route counters, latency distribution (log-scale
-//! histogram + Welford moments), bound-violation counts, throughput.
+//! histogram + Welford moments), bound-violation counts, throughput —
+//! globally and broken down per model id, so multi-tenant operators can
+//! see each tenant's route mix and latency.
 
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 use crate::util::stats::Welford;
 
-use super::request::Route;
+use super::request::{ModelId, Route};
 
 /// Log-scale latency histogram: bucket i covers [10^(i/4 - 7), …) s,
 /// i.e. 100ns … ~100s in quarter-decade steps.
 const BUCKETS: usize = 40;
+
+#[derive(Debug)]
+struct PerModel {
+    served_approx: u64,
+    served_exact: u64,
+    out_of_bound: u64,
+    dropped: u64,
+    latency: Welford,
+}
+
+impl PerModel {
+    fn new() -> Self {
+        PerModel {
+            served_approx: 0,
+            served_exact: 0,
+            out_of_bound: 0,
+            dropped: 0,
+            latency: Welford::new(),
+        }
+    }
+}
 
 #[derive(Debug)]
 struct Inner {
@@ -19,10 +43,12 @@ struct Inner {
     served_approx: u64,
     served_exact: u64,
     out_of_bound: u64,
+    dropped: u64,
     batches: u64,
     batch_sizes: Welford,
     latency: Welford,
     histogram: [u64; BUCKETS],
+    per_model: HashMap<ModelId, PerModel>,
 }
 
 impl Default for Inner {
@@ -32,10 +58,12 @@ impl Default for Inner {
             served_approx: 0,
             served_exact: 0,
             out_of_bound: 0,
+            dropped: 0,
             batches: 0,
             batch_sizes: Welford::new(),
             latency: Welford::new(),
             histogram: [0; BUCKETS],
+            per_model: HashMap::new(),
         }
     }
 }
@@ -46,17 +74,52 @@ pub struct Metrics {
     inner: Mutex<Inner>,
 }
 
+/// Per-model slice of a snapshot.
+#[derive(Clone, Debug)]
+pub struct ModelMetricsSnapshot {
+    pub id: String,
+    pub served_approx: u64,
+    pub served_exact: u64,
+    pub out_of_bound: u64,
+    /// Requests the executor had to drop (unresolvable model or
+    /// per-batch execution failure) — these never got a response.
+    pub dropped: u64,
+    pub mean_latency_s: f64,
+}
+
+impl ModelMetricsSnapshot {
+    pub fn served_total(&self) -> u64 {
+        self.served_approx + self.served_exact
+    }
+
+    /// Fraction of this model's traffic that took the O(d²) fast path.
+    pub fn approx_fraction(&self) -> f64 {
+        let total = self.served_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.served_approx as f64 / total as f64
+        }
+    }
+}
+
 /// Point-in-time snapshot.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     pub served_approx: u64,
     pub served_exact: u64,
     pub out_of_bound: u64,
+    /// Requests dropped without a response (see
+    /// [`ModelMetricsSnapshot::dropped`]); nonzero means callers
+    /// waiting synchronously on those ids will time out.
+    pub dropped: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
     pub mean_latency_s: f64,
     pub p_latency_s: Vec<(f64, f64)>,
     pub throughput_rps: f64,
+    /// Breakdown keyed by model id, sorted by id.
+    pub per_model: Vec<ModelMetricsSnapshot>,
 }
 
 fn bucket_of(lat: Duration) -> usize {
@@ -74,7 +137,7 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_batch(&self, route: Route, n: usize) {
+    pub fn record_batch(&self, model: &ModelId, route: Route, n: usize) {
         let mut g = self.inner.lock().unwrap();
         g.started.get_or_insert_with(Instant::now);
         g.batches += 1;
@@ -83,14 +146,45 @@ impl Metrics {
             Route::Approx => g.served_approx += n as u64,
             Route::Exact => g.served_exact += n as u64,
         }
+        let pm = g
+            .per_model
+            .entry(model.clone())
+            .or_insert_with(PerModel::new);
+        match route {
+            Route::Approx => pm.served_approx += n as u64,
+            Route::Exact => pm.served_exact += n as u64,
+        }
     }
 
-    pub fn record_response(&self, latency: Duration, in_bound: bool) {
+    /// Account for requests that were dropped without a response.
+    pub fn record_dropped(&self, model: &ModelId, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.dropped += n as u64;
+        g.per_model
+            .entry(model.clone())
+            .or_insert_with(PerModel::new)
+            .dropped += n as u64;
+    }
+
+    pub fn record_response(
+        &self,
+        model: &ModelId,
+        latency: Duration,
+        in_bound: bool,
+    ) {
         let mut g = self.inner.lock().unwrap();
         g.latency.push(latency.as_secs_f64());
         g.histogram[bucket_of(latency)] += 1;
         if !in_bound {
             g.out_of_bound += 1;
+        }
+        let pm = g
+            .per_model
+            .entry(model.clone())
+            .or_insert_with(PerModel::new);
+        pm.latency.push(latency.as_secs_f64());
+        if !in_bound {
+            pm.out_of_bound += 1;
         }
     }
 
@@ -120,25 +214,58 @@ impl Metrics {
                 p_latency.push((target, val));
             }
         }
+        let mut per_model: Vec<ModelMetricsSnapshot> = g
+            .per_model
+            .iter()
+            .map(|(id, pm)| ModelMetricsSnapshot {
+                id: id.to_string(),
+                served_approx: pm.served_approx,
+                served_exact: pm.served_exact,
+                out_of_bound: pm.out_of_bound,
+                dropped: pm.dropped,
+                mean_latency_s: pm.latency.mean(),
+            })
+            .collect();
+        per_model.sort_by(|a, b| a.id.cmp(&b.id));
         MetricsSnapshot {
             served_approx: g.served_approx,
             served_exact: g.served_exact,
             out_of_bound: g.out_of_bound,
+            dropped: g.dropped,
             batches: g.batches,
             mean_batch_size: g.batch_sizes.mean(),
             mean_latency_s: g.latency.mean(),
             p_latency_s: p_latency,
             throughput_rps: total as f64 / elapsed,
+            per_model,
         }
     }
 }
 
 impl MetricsSnapshot {
     pub fn to_json(&self) -> Json {
+        let models: BTreeMap<String, Json> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                (
+                    m.id.clone(),
+                    Json::obj(vec![
+                        ("served_approx", Json::num(m.served_approx as f64)),
+                        ("served_exact", Json::num(m.served_exact as f64)),
+                        ("out_of_bound", Json::num(m.out_of_bound as f64)),
+                        ("dropped", Json::num(m.dropped as f64)),
+                        ("approx_fraction", Json::num(m.approx_fraction())),
+                        ("mean_latency_s", Json::num(m.mean_latency_s)),
+                    ]),
+                )
+            })
+            .collect();
         Json::obj(vec![
             ("served_approx", Json::num(self.served_approx as f64)),
             ("served_exact", Json::num(self.served_exact as f64)),
             ("out_of_bound", Json::num(self.out_of_bound as f64)),
+            ("dropped_requests", Json::num(self.dropped as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("mean_batch_size", Json::num(self.mean_batch_size)),
             ("mean_latency_s", Json::num(self.mean_latency_s)),
@@ -157,7 +284,30 @@ impl MetricsSnapshot {
                         .collect(),
                 ),
             ),
+            ("models", Json::Obj(models)),
         ])
+    }
+
+    /// Render the per-model breakdown as an aligned text table (used by
+    /// the CLI, `serving_bench` and the multi-tenant example).
+    pub fn per_model_table(&self) -> String {
+        let mut out = String::from(
+            "model                     served   approx    exact  oob drop \
+             mean lat\n",
+        );
+        for m in &self.per_model {
+            out.push_str(&format!(
+                "{:<24} {:>7} {:>8} {:>8} {:>4} {:>4} {:>9.1} µs\n",
+                m.id,
+                m.served_total(),
+                m.served_approx,
+                m.served_exact,
+                m.out_of_bound,
+                m.dropped,
+                m.mean_latency_s * 1e6
+            ));
+        }
+        out
     }
 }
 
@@ -165,20 +315,49 @@ impl MetricsSnapshot {
 mod tests {
     use super::*;
 
+    fn mid(s: &str) -> ModelId {
+        std::sync::Arc::from(s)
+    }
+
     #[test]
     fn counts_accumulate() {
         let m = Metrics::new();
-        m.record_batch(Route::Approx, 10);
-        m.record_batch(Route::Exact, 3);
-        m.record_response(Duration::from_micros(50), true);
-        m.record_response(Duration::from_micros(150), false);
+        let a = mid("default");
+        m.record_batch(&a, Route::Approx, 10);
+        m.record_batch(&a, Route::Exact, 3);
+        m.record_response(&a, Duration::from_micros(50), true);
+        m.record_response(&a, Duration::from_micros(150), false);
+        m.record_dropped(&a, 4);
         let s = m.snapshot();
         assert_eq!(s.served_approx, 10);
         assert_eq!(s.served_exact, 3);
         assert_eq!(s.out_of_bound, 1);
+        assert_eq!(s.dropped, 4);
+        assert_eq!(s.per_model[0].dropped, 4);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch_size - 6.5).abs() < 1e-9);
         assert!(s.mean_latency_s > 0.0);
+    }
+
+    #[test]
+    fn per_model_breakdown_separates_tenants() {
+        let m = Metrics::new();
+        let (a, b) = (mid("alpha"), mid("bravo"));
+        m.record_batch(&a, Route::Approx, 5);
+        m.record_batch(&b, Route::Exact, 2);
+        m.record_response(&a, Duration::from_micros(10), true);
+        m.record_response(&b, Duration::from_micros(20), false);
+        let s = m.snapshot();
+        assert_eq!(s.per_model.len(), 2);
+        assert_eq!(s.per_model[0].id, "alpha");
+        assert_eq!(s.per_model[0].served_approx, 5);
+        assert_eq!(s.per_model[0].served_exact, 0);
+        assert!((s.per_model[0].approx_fraction() - 1.0).abs() < 1e-12);
+        assert_eq!(s.per_model[1].id, "bravo");
+        assert_eq!(s.per_model[1].served_exact, 2);
+        assert_eq!(s.per_model[1].out_of_bound, 1);
+        let table = s.per_model_table();
+        assert!(table.contains("alpha") && table.contains("bravo"));
     }
 
     #[test]
@@ -192,10 +371,12 @@ mod tests {
     #[test]
     fn snapshot_json_has_fields() {
         let m = Metrics::new();
-        m.record_batch(Route::Approx, 1);
-        m.record_response(Duration::from_micros(10), true);
+        m.record_batch(&mid("default"), Route::Approx, 1);
+        m.record_response(&mid("default"), Duration::from_micros(10), true);
         let j = m.snapshot().to_json().to_string_compact();
         assert!(j.contains("served_approx"));
         assert!(j.contains("latency_percentiles"));
+        assert!(j.contains("\"models\""));
+        assert!(j.contains("\"default\""));
     }
 }

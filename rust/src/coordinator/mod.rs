@@ -3,19 +3,19 @@
 //! Architecture (vLLM-router-like, std-only threads):
 //!
 //! ```text
-//!  submit() ──▶ bounded ingress queue ──▶ batcher thread
-//!                                           │  (dynamic batching:
-//!                                           │   max_batch / max_wait)
-//!                                           │  per-instance ‖z‖² +
-//!                                           │  Eq. 3.11 bound check
-//!                                           ▼
-//!                             ┌─── approx batch ───┐ ┌── exact batch ──┐
-//!                             ▼                    ▼ ▼                 ▼
-//!                          executor thread (owns the predictors:
-//!                          native Loops/Blocked or the PJRT engine)
-//!                                           │
-//!                                           ▼
-//!                                response channel ──▶ recv() / wait_all()
+//!  submit_to(id) ──▶ bounded ingress queue ──▶ batcher thread
+//!                                                │ (dynamic batching:
+//!                                                │  max_batch / max_wait;
+//!                                                │  groups by model id)
+//!                                                ▼
+//!                                executor thread (owns the predictors —
+//!                                native Loops/Blocked or the PJRT
+//!                                engine — resolves per-model state via
+//!                                the registry, applies each model's
+//!                                Eq. 3.11 budget, splits approx/exact)
+//!                                                │
+//!                                                ▼
+//!                                 response channel ──▶ recv() / wait_all()
 //! ```
 //!
 //! The router turns the paper's run-time validity check (§3.1: "this
@@ -24,6 +24,12 @@
 //! ‖z‖² violates Eq. (3.11) are escorted to the exact model, so served
 //! accuracy never silently degrades outside the approximation's
 //! validity region.
+//!
+//! Multi-tenant serving: [`Coordinator::start_registry`] serves every
+//! model published in a [`crate::registry::ModelStore`]. Requests carry
+//! a model id, metrics are broken down per model, and republishing a
+//! bundle hot-swaps the served version between batches without dropping
+//! in-flight requests (see [`crate::registry`]).
 
 pub mod batcher;
 pub mod metrics;
@@ -32,7 +38,9 @@ pub mod router;
 pub mod server;
 pub mod worker;
 
-pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{PredictRequest, PredictResponse, Route};
+pub use metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
+pub use request::{
+    ModelId, PredictRequest, PredictResponse, Route, DEFAULT_MODEL,
+};
 pub use router::RoutePolicy;
 pub use server::{Coordinator, CoordinatorConfig, ExecSpec};

@@ -2,6 +2,16 @@
 
 use std::time::{Duration, Instant};
 
+pub use crate::registry::ModelId;
+
+/// Model id used by the single-model [`super::Coordinator::start`] path
+/// and by [`super::Coordinator::submit`].
+pub const DEFAULT_MODEL: &str = "default";
+
+pub(crate) fn default_model_id() -> ModelId {
+    std::sync::Arc::from(DEFAULT_MODEL)
+}
+
 /// Which execution path served an instance.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Route {
@@ -20,10 +30,12 @@ impl Route {
     }
 }
 
-/// An inference request (one instance).
+/// An inference request (one instance, addressed to one model).
 #[derive(Clone, Debug)]
 pub struct PredictRequest {
     pub id: u64,
+    /// Which registered model serves this instance.
+    pub model: ModelId,
     pub features: Vec<f32>,
     pub enqueued_at: Instant,
 }
@@ -32,6 +44,11 @@ pub struct PredictRequest {
 #[derive(Clone, Debug)]
 pub struct PredictResponse {
     pub id: u64,
+    /// Model that served the request.
+    pub model: ModelId,
+    /// Publish generation of the model version that served it (0 for
+    /// coordinators started from in-memory models).
+    pub generation: u64,
     /// Decision value f(z) or f̂(z).
     pub decision: f32,
     /// sign(decision) as ±1.
@@ -45,10 +62,11 @@ pub struct PredictResponse {
     pub latency: Duration,
 }
 
-/// A routed batch handed to the executor.
+/// A batch handed to the executor: same model, not yet routed (the
+/// executor routes with the model's own Eq. 3.11 budget).
 #[derive(Debug)]
 pub(crate) enum WorkItem {
-    Batch { route: Route, requests: Vec<PredictRequest> },
+    Batch { model: ModelId, requests: Vec<PredictRequest> },
     Shutdown,
 }
 
@@ -60,5 +78,13 @@ mod tests {
     fn route_names() {
         assert_eq!(Route::Approx.name(), "approx");
         assert_eq!(Route::Exact.name(), "exact");
+    }
+
+    #[test]
+    fn model_ids_compare_by_content() {
+        let a: ModelId = std::sync::Arc::from("tenant-1");
+        let b: ModelId = std::sync::Arc::from(String::from("tenant-1"));
+        assert_eq!(a, b);
+        assert_eq!(default_model_id(), std::sync::Arc::from(DEFAULT_MODEL));
     }
 }

@@ -1,8 +1,20 @@
-//! The coordinator: wires ingress queue → batcher → router → executor →
-//! response channel, owns the threads, and exposes the public serving
-//! API ([`Coordinator::submit`] / [`Coordinator::recv`] /
-//! [`Coordinator::predict_all`]).
+//! The coordinator: wires ingress queue → batcher → executor → response
+//! channel, owns the threads, and exposes the public serving API
+//! ([`Coordinator::submit`] / [`Coordinator::submit_to`] /
+//! [`Coordinator::recv`] / [`Coordinator::predict_all`]).
+//!
+//! Two ways to start one:
+//!
+//! * [`Coordinator::start`] — a single in-memory (exact, approx) pair
+//!   served under the id [`DEFAULT_MODEL`] (the original single-tenant
+//!   path; unchanged semantics).
+//! * [`Coordinator::start_registry`] — multi-tenant serving over a
+//!   [`ModelStore`]: requests address models by id, state is resolved
+//!   lazily, and republished bundles hot-swap without dropping
+//!   in-flight requests ([`Coordinator::refresh`] forces the check;
+//!   `swap_poll` bounds how stale a tenant can get otherwise).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -10,15 +22,19 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::approx::ApproxModel;
-use crate::log_warn;
 use crate::linalg::Mat;
+use crate::log_warn;
+use crate::registry::ModelStore;
 use crate::svm::SvmModel;
 use crate::{Error, Result};
 
 use super::batcher::IngressQueue;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{PredictRequest, PredictResponse, Route, WorkItem};
-use super::router::{RoutePolicy, Router};
+use super::request::{
+    ModelId, PredictRequest, PredictResponse, WorkItem, DEFAULT_MODEL,
+};
+use super::router::RoutePolicy;
+use super::worker::{ModelSource, WorkerParams};
 pub use super::worker::ExecSpec;
 
 /// Coordinator configuration.
@@ -32,6 +48,12 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Ingress queue capacity (backpressure threshold).
     pub queue_capacity: usize,
+    /// Registry mode: how often the executor revalidates a model's
+    /// on-disk generation without an explicit [`Coordinator::refresh`].
+    pub swap_poll: Duration,
+    /// Registry mode: LRU bound on models fully resident in the
+    /// executor (evicted tenants reload lazily from the store).
+    pub max_resident_models: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -42,23 +64,37 @@ impl Default for CoordinatorConfig {
             max_batch: 256,
             max_wait: Duration::from_millis(2),
             queue_capacity: 4096,
+            swap_poll: Duration::from_millis(200),
+            max_resident_models: 512,
         }
     }
 }
 
-/// A running serving instance over one (exact, approx) model pair.
+/// Per-model dimension checking at the submit boundary.
+enum DimCheck {
+    /// Single static model: one known dimension.
+    Static(usize),
+    /// Registry: dimensions read from bundle headers, cached.
+    Registry { store: Arc<ModelStore>, cache: Mutex<HashMap<String, usize>> },
+}
+
+/// A running serving instance over one model or a whole registry.
 pub struct Coordinator {
     ingress: Arc<IngressQueue>,
     resp_rx: Mutex<Receiver<PredictResponse>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    dim: usize,
+    dims: DimCheck,
+    /// Bumped by [`Coordinator::refresh`]; the executor revalidates
+    /// every tenant it touches after a bump.
+    epoch: Arc<AtomicU64>,
     batcher: Option<JoinHandle<()>>,
     worker: Option<JoinHandle<Result<()>>>,
 }
 
 impl Coordinator {
-    /// Spawn the serving threads. `exact` and `approx` must describe the
+    /// Spawn the serving threads over one in-memory model pair, served
+    /// as [`DEFAULT_MODEL`]. `exact` and `approx` must describe the
     /// same underlying model (the builder guarantees this).
     pub fn start(
         exact: SvmModel,
@@ -73,28 +109,56 @@ impl Coordinator {
             )));
         }
         let dim = exact.dim();
-        // The router only needs the scalar budget; capture it before the
-        // models move into the executor thread.
-        let router = Router {
-            policy: config.policy,
-            znorm_sq_budget: approx.znorm_sq_budget(),
-        };
+        Coordinator::start_inner(
+            ModelSource::Static { exact, approx },
+            DimCheck::Static(dim),
+            config,
+        )
+    }
+
+    /// Spawn the serving threads over a model registry: any id stored
+    /// in `store` can be addressed via [`Coordinator::submit_to`], and
+    /// republishing a bundle hot-swaps it.
+    pub fn start_registry(
+        store: Arc<ModelStore>,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        Coordinator::start_inner(
+            ModelSource::Registry { store: store.clone() },
+            DimCheck::Registry { store, cache: Mutex::new(HashMap::new()) },
+            config,
+        )
+    }
+
+    fn start_inner(
+        source: ModelSource,
+        dims: DimCheck,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
         let ingress = Arc::new(IngressQueue::new(config.queue_capacity));
         let metrics = Arc::new(Metrics::new());
+        let epoch = Arc::new(AtomicU64::new(0));
         let (work_tx, work_rx): (Sender<WorkItem>, Receiver<WorkItem>) =
             mpsc::channel();
         let (resp_tx, resp_rx) = mpsc::channel();
 
-        // Executor thread (owns predictors / PJRT engine).
+        // Executor thread (owns predictors / PJRT engine / tenants).
         let worker_metrics = metrics.clone();
+        let worker_epoch = epoch.clone();
         let spec = config.exec.clone();
+        let params = WorkerParams {
+            policy: config.policy,
+            swap_poll: config.swap_poll,
+            max_resident: config.max_resident_models,
+        };
         let worker = std::thread::Builder::new()
             .name("approxrbf-executor".into())
             .spawn(move || {
                 let out = super::worker::run_worker(
                     spec,
-                    exact,
-                    approx,
+                    source,
+                    params,
+                    worker_epoch,
                     work_rx,
                     resp_tx,
                     worker_metrics,
@@ -106,13 +170,15 @@ impl Coordinator {
             })
             .map_err(|e| Error::Other(format!("spawn executor: {e}")))?;
 
-        // Batcher thread (drains ingress, routes, forwards).
+        // Batcher thread: drains ingress, groups by model id, forwards.
+        // Routing happens in the executor, which owns each model's
+        // Eq. 3.11 budget.
         let b_ingress = ingress.clone();
         let (max_batch, max_wait) = (config.max_batch, config.max_wait);
         let batcher = std::thread::Builder::new()
             .name("approxrbf-batcher".into())
             .spawn(move || {
-                loop {
+                'run: loop {
                     match b_ingress.pop_batch(max_batch, max_wait) {
                         None => {
                             let _ = work_tx.send(WorkItem::Shutdown);
@@ -120,35 +186,29 @@ impl Coordinator {
                         }
                         Some(batch) if batch.is_empty() => continue,
                         Some(batch) => {
-                            let mut approx_reqs = Vec::new();
-                            let mut exact_reqs = Vec::new();
+                            // Stable grouping by model id (a popped batch
+                            // holds a handful of tenants at most).
+                            let mut groups: Vec<(
+                                ModelId,
+                                Vec<PredictRequest>,
+                            )> = Vec::new();
                             for req in batch {
-                                let (route, _, _) =
-                                    router.route(&req.features);
-                                match route {
-                                    Route::Approx => approx_reqs.push(req),
-                                    Route::Exact => exact_reqs.push(req),
+                                match groups
+                                    .iter_mut()
+                                    .find(|(m, _)| *m == req.model)
+                                {
+                                    Some((_, v)) => v.push(req),
+                                    None => groups
+                                        .push((req.model.clone(), vec![req])),
                                 }
                             }
-                            if !approx_reqs.is_empty()
-                                && work_tx
-                                    .send(WorkItem::Batch {
-                                        route: Route::Approx,
-                                        requests: approx_reqs,
-                                    })
+                            for (model, requests) in groups {
+                                if work_tx
+                                    .send(WorkItem::Batch { model, requests })
                                     .is_err()
-                            {
-                                break;
-                            }
-                            if !exact_reqs.is_empty()
-                                && work_tx
-                                    .send(WorkItem::Batch {
-                                        route: Route::Exact,
-                                        requests: exact_reqs,
-                                    })
-                                    .is_err()
-                            {
-                                break;
+                                {
+                                    break 'run;
+                                }
                             }
                         }
                     }
@@ -161,25 +221,61 @@ impl Coordinator {
             resp_rx: Mutex::new(resp_rx),
             metrics,
             next_id: AtomicU64::new(0),
-            dim,
+            dims,
+            epoch,
             batcher: Some(batcher),
             worker: Some(worker),
         })
     }
 
-    /// Enqueue one instance; returns its request id. Blocks when the
-    /// ingress queue is full (backpressure).
+    /// Expected feature dimension for `model` (validated at submit so
+    /// shape errors surface to the caller, not inside the executor).
+    fn dim_of(&self, model: &str) -> Result<usize> {
+        match &self.dims {
+            DimCheck::Static(d) => {
+                if model == DEFAULT_MODEL {
+                    Ok(*d)
+                } else {
+                    Err(Error::InvalidArg(format!(
+                        "unknown model '{model}': this coordinator serves \
+                         only '{DEFAULT_MODEL}' (use start_registry for \
+                         multi-tenant serving)"
+                    )))
+                }
+            }
+            DimCheck::Registry { store, cache } => {
+                if let Some(&d) = cache.lock().unwrap().get(model) {
+                    return Ok(d);
+                }
+                let info = store.peek(model)?;
+                cache
+                    .lock()
+                    .unwrap()
+                    .insert(model.to_string(), info.dim);
+                Ok(info.dim)
+            }
+        }
+    }
+
+    /// Enqueue one instance for [`DEFAULT_MODEL`]; returns its request
+    /// id. Blocks when the ingress queue is full (backpressure).
     pub fn submit(&self, features: Vec<f32>) -> Result<u64> {
-        if features.len() != self.dim {
+        self.submit_to(DEFAULT_MODEL, features)
+    }
+
+    /// Enqueue one instance for a named model.
+    pub fn submit_to(&self, model: &str, features: Vec<f32>) -> Result<u64> {
+        let dim = self.dim_of(model)?;
+        if features.len() != dim {
             return Err(Error::Shape(format!(
-                "instance dim {} vs model dim {}",
-                features.len(),
-                self.dim
+                "instance dim {} vs model '{model}' dim {dim}",
+                features.len()
             )));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let ok = self.ingress.push(PredictRequest {
             id,
+            model: Arc::from(model),
             features,
             enqueued_at: Instant::now(),
         });
@@ -188,6 +284,16 @@ impl Coordinator {
         } else {
             Err(Error::Other("coordinator is shut down".into()))
         }
+    }
+
+    /// Force the executor to revalidate model generations before the
+    /// next batch of each tenant (hot-swap without waiting out
+    /// `swap_poll`). Also drops cached dimension checks.
+    pub fn refresh(&self) {
+        if let DimCheck::Registry { cache, .. } = &self.dims {
+            cache.lock().unwrap().clear();
+        }
+        self.epoch.fetch_add(1, Ordering::AcqRel);
     }
 
     /// Receive the next completed response (any order across batches).
@@ -202,13 +308,23 @@ impl Coordinator {
         self.resp_rx.lock().unwrap().recv_timeout(timeout)
     }
 
-    /// Convenience synchronous API: submit every row of `z`, wait for
-    /// all responses, return them ordered by row.
+    /// Convenience synchronous API: submit every row of `z` to
+    /// [`DEFAULT_MODEL`], wait for all responses, return them ordered
+    /// by row.
     pub fn predict_all(&self, z: &Mat) -> Result<Vec<PredictResponse>> {
+        self.predict_all_for(DEFAULT_MODEL, z)
+    }
+
+    /// [`Coordinator::predict_all`] addressed to a named model.
+    pub fn predict_all_for(
+        &self,
+        model: &str,
+        z: &Mat,
+    ) -> Result<Vec<PredictResponse>> {
         let n = z.rows();
         let mut first_id = None;
         for r in 0..n {
-            let id = self.submit(z.row(r).to_vec())?;
+            let id = self.submit_to(model, z.row(r).to_vec())?;
             if r == 0 {
                 first_id = Some(id);
             }
@@ -284,6 +400,7 @@ impl Drop for Coordinator {
 mod tests {
     use super::*;
     use crate::approx::builder::build_approx_model;
+    use crate::coordinator::Route;
     use crate::data::synth;
     use crate::linalg::MathBackend;
     use crate::svm::smo::{train_csvc, SmoParams};
@@ -315,6 +432,8 @@ mod tests {
             // direct approx evaluation.
             let (want, _) = am.decision_one(ds.x.row(r));
             assert_eq!(resp.route, Route::Approx);
+            assert_eq!(&*resp.model, DEFAULT_MODEL);
+            assert_eq!(resp.generation, 0);
             assert!(
                 (resp.decision - want).abs() < 1e-4,
                 "row {r}: {} vs {want}",
@@ -324,6 +443,9 @@ mod tests {
         let m = coord.metrics();
         assert_eq!(m.served_approx as usize, ds.len());
         assert_eq!(m.served_exact, 0);
+        assert_eq!(m.per_model.len(), 1);
+        assert_eq!(m.per_model[0].id, DEFAULT_MODEL);
+        assert_eq!(m.per_model[0].served_approx as usize, ds.len());
         coord.shutdown().unwrap();
     }
 
@@ -374,6 +496,18 @@ mod tests {
     }
 
     #[test]
+    fn unknown_model_rejected_on_static_coordinator() {
+        let (model, am, ds) = setup(0.2);
+        let coord =
+            Coordinator::start(model, am, CoordinatorConfig::default())
+                .unwrap();
+        let err =
+            coord.submit_to("ghost", ds.x.row(0).to_vec()).unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
     fn submit_after_shutdown_fails() {
         let (model, am, ds) = setup(0.2);
         let coord = Coordinator::start(model, am, CoordinatorConfig::default())
@@ -401,6 +535,46 @@ mod tests {
             "expected dynamic batching, mean batch {}",
             m.mean_batch_size
         );
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn registry_coordinator_serves_multiple_tenants() {
+        let dir = std::env::temp_dir().join(format!(
+            "approxrbf_server_registry_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(ModelStore::open(dir).unwrap());
+        let (m_a, am_a, ds_a) = setup(0.2);
+        let (m_b, am_b, ds_b) = setup(0.25);
+        store.publish("alpha", &m_a, &am_a).unwrap();
+        store.publish("bravo", &m_b, &am_b).unwrap();
+        let coord = Coordinator::start_registry(
+            store,
+            CoordinatorConfig::default(),
+        )
+        .unwrap();
+        let sub_a = ds_a.x.rows_slice(0, 40);
+        let sub_b = ds_b.x.rows_slice(0, 30);
+        let ra = coord.predict_all_for("alpha", &sub_a).unwrap();
+        let rb = coord.predict_all_for("bravo", &sub_b).unwrap();
+        for (r, resp) in ra.iter().enumerate() {
+            let (want, _) = am_a.decision_one(sub_a.row(r));
+            assert!((resp.decision - want).abs() < 1e-4);
+            assert_eq!(&*resp.model, "alpha");
+            assert_eq!(resp.generation, 1);
+        }
+        for (r, resp) in rb.iter().enumerate() {
+            let (want, _) = am_b.decision_one(sub_b.row(r));
+            assert!((resp.decision - want).abs() < 1e-4);
+        }
+        assert!(coord.submit_to("ghost", vec![0.0; 6]).is_err());
+        let snap = coord.metrics();
+        assert_eq!(snap.per_model.len(), 2);
+        assert_eq!(snap.per_model[0].id, "alpha");
+        assert_eq!(snap.per_model[0].served_total(), 40);
+        assert_eq!(snap.per_model[1].served_total(), 30);
         coord.shutdown().unwrap();
     }
 }

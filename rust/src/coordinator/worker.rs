@@ -1,122 +1,390 @@
 //! Executor thread: owns the predictors (native Rust backends or the
 //! PJRT engine — the engine is `!Send`, so it is constructed *inside*
-//! the thread) and turns routed batches into responses.
+//! the thread), resolves per-model state through the registry, routes
+//! each batch with that model's Eq. 3.11 budget, and turns routed
+//! sub-batches into responses.
+//!
+//! Hot-swap protocol: for registry-backed coordinators the worker
+//! revalidates a model's on-disk generation when the coordinator's
+//! refresh epoch ticks, or at most every `swap_poll` otherwise (a
+//! 32-byte header read). A republished bundle swaps the resident
+//! `Arc<ModelEntry>` between batches; requests already in flight finish
+//! on whichever generation they resolved — nothing errors, nothing is
+//! dropped. If a reload fails, the worker keeps serving the generation
+//! it has (availability beats freshness for a serving node).
 
-use std::path::PathBuf;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::approx::ApproxModel;
-use crate::linalg::{vecops, Mat, MathBackend};
+use crate::linalg::{Mat, MathBackend};
+use crate::log_warn;
+use crate::registry::{ModelEntry, ModelStore};
 use crate::svm::predict::ExactPredictor;
 use crate::svm::SvmModel;
 use crate::Result;
 
 use super::metrics::Metrics;
-use super::request::{PredictRequest, PredictResponse, Route, WorkItem};
+use super::request::{
+    default_model_id, ModelId, PredictRequest, PredictResponse, Route,
+    WorkItem,
+};
+use super::router::{RoutePolicy, Router};
 
 /// Which execution substrate the worker uses.
 #[derive(Clone, Debug)]
 pub enum ExecSpec {
     /// Pure-Rust predictors with the given math backend.
     Native(MathBackend),
-    /// PJRT engine over AOT artifacts (`make artifacts`).
-    Xla { artifacts_dir: PathBuf },
+    /// PJRT engine over AOT artifacts (`make artifacts`). Requires the
+    /// `pjrt` feature (and a real `xla` crate underneath it).
+    #[cfg(feature = "pjrt")]
+    Xla { artifacts_dir: std::path::PathBuf },
+}
+
+/// Where the worker gets model state from.
+pub(crate) enum ModelSource {
+    /// One fixed (exact, approx) pair under [`super::request::DEFAULT_MODEL`].
+    Static { exact: SvmModel, approx: ApproxModel },
+    /// Lazy per-id resolution through a shared registry.
+    Registry { store: Arc<ModelStore> },
+}
+
+#[cfg(feature = "pjrt")]
+struct PreparedPair {
+    approx: crate::runtime::PreparedApprox,
+    exact: crate::runtime::PreparedExact,
+}
+
+/// Tuning knobs forwarded from [`super::server::CoordinatorConfig`].
+pub(crate) struct WorkerParams {
+    pub policy: RoutePolicy,
+    pub swap_poll: Duration,
+    /// LRU bound on fully resident tenants in this executor.
+    pub max_resident: usize,
+}
+
+/// Per-model serving state resident in the executor.
+struct Tenant {
+    entry: Arc<ModelEntry>,
+    /// SV norms of the exact model, cached per generation so the
+    /// native exact path skips the O(n_SV·d) precompute per batch.
+    sv_norms: Vec<f32>,
+    /// Refresh epoch this tenant last revalidated against.
+    epoch_seen: u64,
+    last_check: Instant,
+    /// Monotone use counter for LRU eviction.
+    last_used: u64,
+    /// Lazily (re)built per generation on the XLA path.
+    #[cfg(feature = "pjrt")]
+    prepared: Option<PreparedPair>,
+}
+
+impl Tenant {
+    fn new(entry: Arc<ModelEntry>, epoch: u64) -> Tenant {
+        let sv_norms = entry.exact.sv.row_norms_sq();
+        Tenant {
+            entry,
+            sv_norms,
+            epoch_seen: epoch,
+            last_check: Instant::now(),
+            last_used: 0,
+            #[cfg(feature = "pjrt")]
+            prepared: None,
+        }
+    }
+
+    fn swap(&mut self, entry: Arc<ModelEntry>) {
+        self.sv_norms = entry.exact.sv.row_norms_sq();
+        self.entry = entry;
+        #[cfg(feature = "pjrt")]
+        {
+            self.prepared = None;
+        }
+    }
+}
+
+enum Exec {
+    Native(MathBackend),
+    #[cfg(feature = "pjrt")]
+    Xla(crate::runtime::Engine),
 }
 
 /// Run the executor loop until a `Shutdown` item arrives.
 /// Called on a dedicated thread by [`super::server::Coordinator`].
 pub(crate) fn run_worker(
     spec: ExecSpec,
-    exact_model: SvmModel,
-    approx_model: ApproxModel,
+    source: ModelSource,
+    params: WorkerParams,
+    epoch: Arc<AtomicU64>,
     work_rx: Receiver<WorkItem>,
     resp_tx: Sender<PredictResponse>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
-    let budget = approx_model.znorm_sq_budget();
-    // Executor closures per route. The XLA engine must be created on
-    // this thread (PJRT handles are not Send).
-    match spec {
-        ExecSpec::Native(backend) => {
-            let exact_pred = ExactPredictor::new(&exact_model, backend)?;
-            serve_loop(
-                work_rx,
-                resp_tx,
-                metrics,
-                budget,
-                |z| approx_model.decision_batch(z, backend).map(|(d, n)| (d, Some(n))),
-                |z| exact_pred.decision_batch(z),
-            )
-        }
+    // The XLA engine must be created on this thread (PJRT handles are
+    // not Send).
+    let exec = match spec {
+        ExecSpec::Native(backend) => Exec::Native(backend),
+        #[cfg(feature = "pjrt")]
         ExecSpec::Xla { artifacts_dir } => {
-            let engine = crate::runtime::Engine::load(&artifacts_dir)?;
-            let prep_a = engine.prepare_approx(&approx_model)?;
-            let prep_e = engine.prepare_exact(&exact_model)?;
-            serve_loop(
-                work_rx,
-                resp_tx,
-                metrics,
-                budget,
-                |z| engine.approx_predict(&prep_a, z).map(|(d, n)| (d, Some(n))),
-                |z| engine.exact_predict(&prep_e, z),
-            )
+            Exec::Xla(crate::runtime::Engine::load(&artifacts_dir)?)
         }
-    }
-}
+    };
+    let mut tenants: HashMap<ModelId, Tenant> = HashMap::new();
+    let store = match source {
+        ModelSource::Static { exact, approx } => {
+            let id = default_model_id();
+            let entry = Arc::new(ModelEntry {
+                id: id.clone(),
+                generation: 0,
+                exact,
+                approx,
+            });
+            tenants.insert(
+                id,
+                Tenant::new(entry, epoch.load(Ordering::Acquire)),
+            );
+            None
+        }
+        ModelSource::Registry { store } => Some(store),
+    };
 
-fn serve_loop<FA, FE>(
-    work_rx: Receiver<WorkItem>,
-    resp_tx: Sender<PredictResponse>,
-    metrics: Arc<Metrics>,
-    znorm_sq_budget: f32,
-    approx_fn: FA,
-    exact_fn: FE,
-) -> Result<()>
-where
-    FA: Fn(&Mat) -> Result<(Vec<f32>, Option<Vec<f32>>)>,
-    FE: Fn(&Mat) -> Result<Vec<f32>>,
-{
+    let mut tick: u64 = 0;
     while let Ok(item) = work_rx.recv() {
-        let (route, requests) = match item {
+        let (model, requests) = match item {
             WorkItem::Shutdown => break,
-            WorkItem::Batch { route, requests } => (route, requests),
+            WorkItem::Batch { model, requests } => (model, requests),
         };
         if requests.is_empty() {
             continue;
         }
-        metrics.record_batch(route, requests.len());
-        let z = batch_matrix(&requests);
-        let (decisions, norms) = match route {
-            Route::Approx => {
-                let (d, n) = approx_fn(&z)?;
-                (d, n)
-            }
-            Route::Exact => (exact_fn(&z)?, None),
+        let now_epoch = epoch.load(Ordering::Acquire);
+        tick += 1;
+        let Some(tenant) = resolve(
+            &mut tenants,
+            store.as_deref(),
+            &model,
+            &params,
+            now_epoch,
+            tick,
+        ) else {
+            // Unresolvable model (deleted between submit and execution):
+            // drop the batch with a warning rather than killing every
+            // other tenant on this executor.
+            metrics.record_dropped(&model, requests.len());
+            log_warn!(
+                "executor: dropping {} request(s) for unresolvable model \
+                 '{model}'",
+                requests.len()
+            );
+            continue;
         };
-        let norms = norms.unwrap_or_else(|| {
-            (0..z.rows()).map(|r| vecops::norm_sq(z.row(r))).collect()
-        });
-        for (i, req) in requests.into_iter().enumerate() {
-            let in_bound = norms[i] < znorm_sq_budget;
-            let latency = req.enqueued_at.elapsed();
-            metrics.record_response(latency, in_bound);
-            let resp = PredictResponse {
-                id: req.id,
-                decision: decisions[i],
-                label: if decisions[i] >= 0.0 { 1.0 } else { -1.0 },
-                route,
-                znorm_sq: norms[i],
-                in_bound,
-                latency,
+        let generation = tenant.entry.generation;
+        let budget = tenant.entry.approx.znorm_sq_budget();
+        let router = Router { policy: params.policy, znorm_sq_budget: budget };
+        // Routing already computes each ‖z‖²; keep it alongside the
+        // request so no path pays a second O(batch·d) norm pass.
+        let mut approx_reqs = Vec::new();
+        let mut approx_norms = Vec::new();
+        let mut exact_reqs = Vec::new();
+        let mut exact_norms = Vec::new();
+        for req in requests {
+            let (route, zn, _) = router.route(&req.features);
+            match route {
+                Route::Approx => {
+                    approx_reqs.push(req);
+                    approx_norms.push(zn);
+                }
+                Route::Exact => {
+                    exact_reqs.push(req);
+                    exact_norms.push(zn);
+                }
+            }
+        }
+        for (route, reqs, routed_norms) in [
+            (Route::Approx, approx_reqs, approx_norms),
+            (Route::Exact, exact_reqs, exact_norms),
+        ] {
+            if reqs.is_empty() {
+                continue;
+            }
+            let z = batch_matrix(&reqs);
+            let (decisions, norms) = match execute(&exec, tenant, route, &z) {
+                Ok(out) => out,
+                Err(e) => {
+                    // A per-batch failure (shape drift across a swap,
+                    // artifact gaps on the XLA path) must not take the
+                    // executor down for every other tenant.
+                    metrics.record_dropped(&model, reqs.len());
+                    log_warn!(
+                        "executor: dropping {} request(s) for '{model}' \
+                         ({route:?}): {e}",
+                        reqs.len()
+                    );
+                    continue;
+                }
             };
-            if resp_tx.send(resp).is_err() {
-                // Receiver dropped: coordinator is shutting down.
-                return Ok(());
+            // Recorded only after a successful execute so served counts
+            // and throughput never include dropped work.
+            metrics.record_batch(&model, route, reqs.len());
+            let norms = norms.unwrap_or(routed_norms);
+            for (i, req) in reqs.into_iter().enumerate() {
+                let in_bound = norms[i] < budget;
+                let latency = req.enqueued_at.elapsed();
+                metrics.record_response(&model, latency, in_bound);
+                let resp = PredictResponse {
+                    id: req.id,
+                    model: req.model,
+                    generation,
+                    decision: decisions[i],
+                    label: if decisions[i] >= 0.0 { 1.0 } else { -1.0 },
+                    route,
+                    znorm_sq: norms[i],
+                    in_bound,
+                    latency,
+                };
+                if resp_tx.send(resp).is_err() {
+                    // Receiver dropped: coordinator is shutting down.
+                    return Ok(());
+                }
             }
         }
     }
     Ok(())
+}
+
+/// Fetch (and, when due, revalidate) the tenant state for `model`.
+/// Resident tenants are LRU-bounded by `params.max_resident`: evicted
+/// ones reload through the store (which has its own bounded cache) on
+/// their next batch, so executor memory tracks the hot set, not every
+/// id ever served.
+fn resolve<'t>(
+    tenants: &'t mut HashMap<ModelId, Tenant>,
+    store: Option<&ModelStore>,
+    model: &ModelId,
+    params: &WorkerParams,
+    now_epoch: u64,
+    tick: u64,
+) -> Option<&'t mut Tenant> {
+    if !tenants.contains_key(model) {
+        let store = store?;
+        match store.load(model) {
+            Ok(entry) => {
+                if tenants.len() >= params.max_resident.max(1) {
+                    if let Some(victim) = tenants
+                        .iter()
+                        .min_by_key(|(_, t)| t.last_used)
+                        .map(|(k, _)| k.clone())
+                    {
+                        tenants.remove(&victim);
+                    }
+                }
+                tenants.insert(model.clone(), Tenant::new(entry, now_epoch));
+            }
+            Err(e) => {
+                log_warn!("executor: cannot load '{model}': {e}");
+                return None;
+            }
+        }
+    }
+    let tenant = tenants.get_mut(model).expect("resident by construction");
+    tenant.last_used = tick;
+    if let Some(store) = store {
+        let due = tenant.epoch_seen != now_epoch
+            || tenant.last_check.elapsed() >= params.swap_poll;
+        if due {
+            tenant.epoch_seen = now_epoch;
+            tenant.last_check = Instant::now();
+            // Header-only peek (~32 bytes of I/O) so the steady-state
+            // poll never re-decodes an unchanged bundle; the full load
+            // happens only when the generation actually moved.
+            match store.peek(model) {
+                Ok(info) if info.generation != tenant.entry.generation => {
+                    if info.dim != tenant.entry.dim() {
+                        // Submit-side dim checks may be cached in other
+                        // processes; never swap across a dim change
+                        // (publish() refuses it in-process, but an
+                        // out-of-band remove()+republish can do this).
+                        log_warn!(
+                            "executor: refusing to hot-swap '{model}' to \
+                             generation {} with dim {} (serving dim {}); \
+                             keeping generation {}",
+                            info.generation,
+                            info.dim,
+                            tenant.entry.dim(),
+                            tenant.entry.generation
+                        );
+                    } else {
+                        match store.load(model) {
+                            Ok(entry) => tenant.swap(entry),
+                            Err(e) => log_warn!(
+                                "executor: keeping '{model}' generation {} \
+                                 (reload failed: {e})",
+                                tenant.entry.generation
+                            ),
+                        }
+                    }
+                }
+                Ok(_) => {}
+                Err(e) => log_warn!(
+                    "executor: keeping '{model}' generation {} \
+                     (revalidation failed: {e})",
+                    tenant.entry.generation
+                ),
+            }
+        }
+    }
+    Some(tenant)
+}
+
+/// Execute one routed sub-batch on the selected substrate.
+fn execute(
+    exec: &Exec,
+    tenant: &mut Tenant,
+    route: Route,
+    z: &Mat,
+) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+    match exec {
+        Exec::Native(backend) => match route {
+            Route::Approx => tenant
+                .entry
+                .approx
+                .decision_batch(z, *backend)
+                .map(|(d, n)| (d, Some(n))),
+            Route::Exact => {
+                // Norms are cached per generation on the tenant; the
+                // clone is an O(n_SV) memcpy, noise next to the
+                // O(batch·n_SV·d) evaluation.
+                let pred = ExactPredictor::with_norms(
+                    &tenant.entry.exact,
+                    tenant.sv_norms.clone(),
+                    *backend,
+                )?;
+                pred.decision_batch(z).map(|d| (d, None))
+            }
+        },
+        #[cfg(feature = "pjrt")]
+        Exec::Xla(engine) => {
+            if tenant.prepared.is_none() {
+                tenant.prepared = Some(PreparedPair {
+                    approx: engine.prepare_approx(&tenant.entry.approx)?,
+                    exact: engine.prepare_exact(&tenant.entry.exact)?,
+                });
+            }
+            let prep = tenant.prepared.as_ref().unwrap();
+            match route {
+                Route::Approx => engine
+                    .approx_predict(&prep.approx, z)
+                    .map(|(d, n)| (d, Some(n))),
+                Route::Exact => {
+                    engine.exact_predict(&prep.exact, z).map(|d| (d, None))
+                }
+            }
+        }
+    }
 }
 
 fn batch_matrix(requests: &[PredictRequest]) -> Mat {
@@ -138,11 +406,13 @@ mod tests {
         let reqs = vec![
             PredictRequest {
                 id: 1,
+                model: default_model_id(),
                 features: vec![1.0, 2.0],
                 enqueued_at: Instant::now(),
             },
             PredictRequest {
                 id: 2,
+                model: default_model_id(),
                 features: vec![3.0, 4.0],
                 enqueued_at: Instant::now(),
             },

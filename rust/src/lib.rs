@@ -17,12 +17,18 @@
 //!
 //! * **L1/L2** — JAX + Pallas kernels (`python/compile/`) AOT-lowered to
 //!   HLO text (`make artifacts`).
-//! * **Runtime** — [`runtime::Engine`] loads the artifacts via PJRT
-//!   (the `xla` crate) and executes them from the Rust hot loop; pure
-//!   Rust fallback executors ([`linalg`], [`svm::predict`]) provide the
-//!   paper's LOOPS/“BLAS” axes and run without artifacts.
+//! * **Runtime** — with the `pjrt` feature, [`runtime`]'s engine loads
+//!   the artifacts via PJRT (the `xla` crate) and executes them from the
+//!   Rust hot loop; pure Rust fallback executors ([`linalg`],
+//!   [`svm::predict`]) provide the paper's LOOPS/“BLAS” axes and run
+//!   without artifacts.
 //! * **L3** — [`coordinator`]: request router, dynamic batcher,
-//!   bound-aware approx/exact hybrid routing, metrics.
+//!   bound-aware approx/exact hybrid routing, per-model metrics.
+//! * **Registry** — [`registry`]: a versioned, checksummed binary model
+//!   format (`.arbf`, see `docs/FORMATS.md`) and a directory-backed
+//!   [`registry::ModelStore`] with atomic publish + generation counters,
+//!   so one coordinator can serve many tenants and hot-swap republished
+//!   models without dropping in-flight requests.
 //!
 //! ## Substrates
 //!
@@ -39,27 +45,61 @@ pub mod benchsuite;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod registry;
 pub mod runtime;
 pub mod svm;
 pub mod util;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse error: {0}")]
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Malformed text input (datasets, text model formats, JSON).
     Parse(String),
-    #[error("shape mismatch: {0}")]
+    /// Dimension disagreement between tensors/models.
     Shape(String),
-    #[error("xla/pjrt error: {0}")]
+    /// XLA/PJRT runtime failure.
     Xla(String),
-    #[error("invalid argument: {0}")]
+    /// Caller passed an unusable argument.
     InvalidArg(String),
-    #[error("{0}")]
+    /// Damaged binary artifact: bad magic, checksum mismatch,
+    /// truncation, or invalid (e.g. non-finite) payload values.
+    Corrupt(String),
+    /// Anything else.
     Other(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Corrupt(m) => write!(f, "corrupt model artifact: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -71,9 +111,13 @@ pub type Result<T> = std::result::Result<T, Error>;
 /// Convenience re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::approx::{ApproxModel, BoundReport};
-    pub use crate::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+    pub use crate::coordinator::{
+        Coordinator, CoordinatorConfig, RoutePolicy, DEFAULT_MODEL,
+    };
     pub use crate::data::{Dataset, SynthProfile};
     pub use crate::linalg::{Mat, MathBackend};
+    pub use crate::registry::{ModelStore, StoreEntryInfo};
+    #[cfg(feature = "pjrt")]
     pub use crate::runtime::Engine;
     pub use crate::svm::{Kernel, SmoParams, SvmModel};
     pub use crate::{Error, Result};

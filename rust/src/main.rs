@@ -10,12 +10,15 @@
 //! approxrbf predict     --model m.model|--approx m.approx --data t.txt
 //! approxrbf bound-check --data data.txt [--gamma 0.05]
 //! approxrbf serve       --profile control-like [--policy hybrid] [--xla]
+//! approxrbf registry    publish|list|serve --store dir [--id name]
+//!                       [--model m.model] [--approx m.approx]
 //! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
 //!                       [--scale full|quick] [--artifacts artifacts]
-//! approxrbf inspect     --model m.model
+//! approxrbf inspect     --model m.model|--approx m.approx|--arbf m.arbf
 //! ```
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use approxrbf::approx::bounds::gamma_max_for_data;
@@ -27,11 +30,13 @@ use approxrbf::coordinator::{
 };
 use approxrbf::data::{libsvm_format, SynthProfile};
 use approxrbf::linalg::MathBackend;
+use approxrbf::registry::{binfmt, ModelStore};
 use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
+use approxrbf::util::bench::markdown_table;
 use approxrbf::util::stats::accuracy;
-use approxrbf::util::Args;
+use approxrbf::util::{Args, Rng};
 use approxrbf::{Error, Result};
 
 fn main() {
@@ -53,6 +58,7 @@ fn main() {
         "predict" => cmd_predict(&args),
         "bound-check" => cmd_bound_check(&args),
         "serve" => cmd_serve(&args),
+        "registry" => cmd_registry(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
         other => Err(Error::InvalidArg(format!(
@@ -76,8 +82,10 @@ fn usage() -> String {
                predict     predict with an exact or approximated model\n  \
                bound-check report γ_MAX for a dataset (Eq. 3.11)\n  \
                serve       run the bound-aware serving coordinator\n  \
+               registry    publish/list/serve .arbf model bundles\n              \
+               (registry publish --store dir --id name --model m.model)\n  \
                bench       regenerate the paper's tables/figures\n  \
-               inspect     describe a model file\n";
+               inspect     describe a model file (text or .arbf)\n";
     doc.to_string()
 }
 
@@ -133,10 +141,7 @@ fn cmd_approximate(args: &Args) -> Result<()> {
     let out = args.require("out")?;
     let t0 = std::time::Instant::now();
     let am = if backend == MathBackend::Xla {
-        let engine = approxrbf::runtime::Engine::load(Path::new(
-            args.get_or("artifacts", "artifacts"),
-        ))?;
-        engine.build_approx(&model)?
+        build_approx_via_engine(&model, args.get_or("artifacts", "artifacts"))?
     } else {
         build_approx_model(&model, backend)?
     };
@@ -240,10 +245,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let case = ctx.trained(profile, mult)?;
     let am = build_approx_model(&case.model, MathBackend::Blocked)?;
     let exec = if args.has_flag("xla") {
-        ExecSpec::Xla {
-            artifacts_dir: Path::new(args.get_or("artifacts", "artifacts"))
-                .to_path_buf(),
-        }
+        xla_exec_spec(args.get_or("artifacts", "artifacts"))?
     } else {
         ExecSpec::Native(MathBackend::Blocked)
     };
@@ -357,8 +359,192 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             a.znorm_sq_budget(),
             a.text_size_bytes()
         );
+    } else if let Some(bp) = args.get("arbf") {
+        let bytes = std::fs::read(Path::new(bp))?;
+        let hdr = binfmt::peek_header(&bytes)?;
+        println!(
+            "arbf v{} bundle: {} record(s), generation {}, d={}, n_sv={}, \
+             {} B",
+            hdr.version,
+            hdr.n_records,
+            hdr.generation,
+            hdr.dim,
+            hdr.n_sv,
+            bytes.len()
+        );
+        for rec in binfmt::decode(&bytes)?.1 {
+            match rec {
+                binfmt::ModelRecord::Svm(m) => println!(
+                    "  exact : kernel={} n_sv={} b={:.4}",
+                    m.kernel.name(),
+                    m.n_sv(),
+                    m.b
+                ),
+                binfmt::ModelRecord::Approx(a) => println!(
+                    "  approx: γ={:.4} ‖z‖² budget={:.4}",
+                    a.gamma,
+                    a.znorm_sq_budget()
+                ),
+            }
+        }
     } else {
-        return Err(Error::InvalidArg("need --model or --approx".into()));
+        return Err(Error::InvalidArg(
+            "need --model, --approx or --arbf".into(),
+        ));
     }
     Ok(())
+}
+
+/// `registry publish|list|serve` — manage and serve `.arbf` bundles.
+fn cmd_registry(args: &Args) -> Result<()> {
+    let action = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("list");
+    let store = Arc::new(ModelStore::open(args.get_or("store", "registry"))?);
+    match action {
+        "publish" => {
+            let id = args.require("id")?;
+            let model = SvmModel::load(Path::new(args.require("model")?))?;
+            let am = match args.get("approx") {
+                Some(p) => ApproxModel::load(Path::new(p))?,
+                None => {
+                    println!("(no --approx given: building Eq. 3.8 model)");
+                    build_approx_model(&model, MathBackend::Blocked)?
+                }
+            };
+            let generation = store.publish(id, &model, &am)?;
+            let info = store.peek(id)?;
+            println!(
+                "published '{id}' generation {generation}: d={} n_sv={} \
+                 {} B -> {}",
+                info.dim,
+                info.n_sv,
+                info.size_bytes,
+                store.root().join(format!("{id}.arbf")).display()
+            );
+        }
+        "list" => {
+            let infos = store.list()?;
+            if infos.is_empty() {
+                println!("(registry at {} is empty)", store.root().display());
+                return Ok(());
+            }
+            let mut rows = vec![vec![
+                "id".to_string(),
+                "generation".to_string(),
+                "d".to_string(),
+                "n_sv".to_string(),
+                "bytes".to_string(),
+            ]];
+            for i in &infos {
+                rows.push(vec![
+                    i.id.clone(),
+                    i.generation.to_string(),
+                    i.dim.to_string(),
+                    i.n_sv.to_string(),
+                    i.size_bytes.to_string(),
+                ]);
+            }
+            print!("{}", markdown_table(&rows));
+        }
+        "serve" => {
+            let policy = RoutePolicy::parse(args.get_or("policy", "hybrid"))?;
+            let requests = args.get_usize("requests", 10_000)?;
+            let seed = args.get_u64("seed", 42)?;
+            let infos = store.list()?;
+            if infos.is_empty() {
+                return Err(Error::InvalidArg(
+                    "registry is empty: publish models first".into(),
+                ));
+            }
+            println!(
+                "serving {requests} synthetic requests across {} model(s), \
+                 policy={}…",
+                infos.len(),
+                policy.name()
+            );
+            let coord = Coordinator::start_registry(
+                store.clone(),
+                CoordinatorConfig { policy, ..Default::default() },
+            )?;
+            let mut rng = Rng::new(seed);
+            let t0 = std::time::Instant::now();
+            let mut submitted = 0usize;
+            let mut served = 0usize;
+            while served < requests {
+                if submitted < requests {
+                    let info = &infos[submitted % infos.len()];
+                    let scale = 1.0 / (info.dim as f64).sqrt();
+                    let z: Vec<f32> = (0..info.dim)
+                        .map(|_| (rng.normal() * scale) as f32)
+                        .collect();
+                    coord.submit_to(&info.id, z)?;
+                    submitted += 1;
+                }
+                while coord.recv(Duration::from_micros(0)).is_some() {
+                    served += 1;
+                }
+                if submitted >= requests {
+                    while served < requests {
+                        if coord.recv(Duration::from_millis(100)).is_none() {
+                            return Err(Error::Other(
+                                "lost responses".into(),
+                            ));
+                        }
+                        served += 1;
+                    }
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let m = coord.metrics();
+            println!(
+                "done in {wall:.2}s: {:.0} req/s, mean batch {:.1}\n",
+                requests as f64 / wall,
+                m.mean_batch_size
+            );
+            print!("{}", m.per_model_table());
+            coord.shutdown()?;
+        }
+        other => {
+            return Err(Error::InvalidArg(format!(
+                "unknown registry action '{other}' (publish|list|serve)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn build_approx_via_engine(
+    model: &SvmModel,
+    artifacts: &str,
+) -> Result<ApproxModel> {
+    let engine = approxrbf::runtime::Engine::load(Path::new(artifacts))?;
+    engine.build_approx(model)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_approx_via_engine(
+    _model: &SvmModel,
+    _artifacts: &str,
+) -> Result<ApproxModel> {
+    Err(Error::InvalidArg(
+        "the xla backend requires a build with `--features pjrt`".into(),
+    ))
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_exec_spec(artifacts: &str) -> Result<ExecSpec> {
+    Ok(ExecSpec::Xla {
+        artifacts_dir: Path::new(artifacts).to_path_buf(),
+    })
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_exec_spec(_artifacts: &str) -> Result<ExecSpec> {
+    Err(Error::InvalidArg(
+        "--xla requires a build with `--features pjrt`".into(),
+    ))
 }

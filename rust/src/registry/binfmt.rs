@@ -1,0 +1,602 @@
+//! `.arbf` — the approxrbf binary model artifact format.
+//!
+//! A compact, versioned, checksummed little-endian encoding for
+//! [`SvmModel`] and [`ApproxModel`], sitting alongside the text codecs
+//! (LIBSVM text / `approx_type maclaurin2_rbf`) that Table 3 measures.
+//! Design goals, in order: **integrity** (magic + version + per-record
+//! CRC-32, truncation-safe reads, strict non-finite rejection — every
+//! failure is a typed [`Error::Corrupt`]), **compactness** (4-byte f32
+//! payloads, upper-triangle-only `M`, LIBSVM-style sparse SV rows) and
+//! **cheap introspection** (generation/dim/n_sv live in the fixed
+//! 32-byte file header so the registry can poll for hot-swaps without
+//! deserializing payloads).
+//!
+//! Byte-exact layout: `docs/FORMATS.md`. Encoders refuse non-finite
+//! values with [`Error::InvalidArg`]; decoders re-run the same
+//! validation ([`SvmModel::check_finite`] /
+//! [`ApproxModel::check_finite`]) and report [`Error::Corrupt`].
+
+use crate::approx::ApproxModel;
+use crate::linalg::Mat;
+use crate::svm::{Kernel, SvmModel};
+use crate::util::crc32::crc32;
+use crate::{Error, Result};
+
+/// File magic: `ARBF`.
+pub const MAGIC: [u8; 4] = *b"ARBF";
+/// Current format version.
+pub const VERSION: u16 = 1;
+/// Fixed file header length in bytes.
+pub const FILE_HEADER_LEN: usize = 32;
+/// Fixed per-record header length in bytes.
+pub const RECORD_HEADER_LEN: usize = 16;
+
+const KIND_SVM: u16 = 1;
+const KIND_APPROX: u16 = 2;
+/// Sanity cap: a file holds at most this many records (bundles use 2).
+const MAX_RECORDS: u16 = 16;
+/// Sanity cap on the dense element count (`n_sv × d`) of a decoded SVM
+/// record. The sparse row encoding means `d` is not bounded by the
+/// payload size, so without this a crafted header could demand a
+/// multi-gigabyte allocation; 2²⁸ f32s (1 GiB) is far above any model
+/// this repo produces (wide profile: ~1500 × 2000 ≈ 3M).
+const MAX_MODEL_ELEMS: u64 = 1 << 28;
+
+/// Parsed fixed-size file header (the part [`peek_header`] reads
+/// without touching payloads).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArbfHeader {
+    pub version: u16,
+    pub n_records: u16,
+    /// Publish generation (0 for standalone single-model files).
+    pub generation: u64,
+    /// Feature dimension shared by every record in the file.
+    pub dim: u32,
+    /// Support-vector count of the exact record (0 if none).
+    pub n_sv: u32,
+}
+
+/// One decoded record.
+#[derive(Clone, Debug)]
+pub enum ModelRecord {
+    Svm(SvmModel),
+    Approx(ApproxModel),
+}
+
+// ---------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn svm_payload(model: &SvmModel) -> Result<Vec<u8>> {
+    model.check_finite().map_err(Error::InvalidArg)?;
+    let (tag, gamma, beta) = match model.kernel {
+        Kernel::Linear => (0u8, 0.0f32, 0.0f32),
+        Kernel::Rbf { gamma } => (1, gamma, 0.0),
+        Kernel::Poly2 { gamma, beta } => (2, gamma, beta),
+    };
+    let (n_sv, d) = (model.n_sv(), model.dim());
+    let mut out = Vec::new();
+    out.push(tag);
+    push_f32(&mut out, gamma);
+    push_f32(&mut out, beta);
+    push_f32(&mut out, model.b);
+    push_u32(&mut out, n_sv as u32);
+    push_u32(&mut out, d as u32);
+    for &c in &model.coef {
+        push_f32(&mut out, c);
+    }
+    // LIBSVM-style sparse rows: (nnz, then nnz × (0-based idx, value)).
+    for i in 0..n_sv {
+        let row = model.sv.row(i);
+        let nnz = row.iter().filter(|&&v| v != 0.0).count();
+        push_u32(&mut out, nnz as u32);
+        for (j, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                push_u32(&mut out, j as u32);
+                push_f32(&mut out, v);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn approx_payload(am: &ApproxModel) -> Result<Vec<u8>> {
+    am.check_finite().map_err(Error::InvalidArg)?;
+    let d = am.dim();
+    let mut out = Vec::new();
+    push_u32(&mut out, d as u32);
+    push_f32(&mut out, am.gamma);
+    push_f32(&mut out, am.b);
+    push_f32(&mut out, am.c);
+    push_f32(&mut out, am.max_sv_norm_sq);
+    for &v in &am.v {
+        push_f32(&mut out, v);
+    }
+    // M is symmetric: upper triangle, row-wise (matches the text codec).
+    for r in 0..d {
+        for c in r..d {
+            push_f32(&mut out, am.m.at(r, c));
+        }
+    }
+    Ok(out)
+}
+
+fn write_file(
+    generation: u64,
+    dim: usize,
+    n_sv: usize,
+    records: Vec<(u16, Vec<u8>)>,
+) -> Vec<u8> {
+    let total: usize = records
+        .iter()
+        .map(|(_, p)| RECORD_HEADER_LEN + p.len())
+        .sum();
+    let mut out = Vec::with_capacity(FILE_HEADER_LEN + total);
+    out.extend_from_slice(&MAGIC);
+    push_u16(&mut out, VERSION);
+    push_u16(&mut out, records.len() as u16);
+    push_u64(&mut out, generation);
+    push_u32(&mut out, dim as u32);
+    push_u32(&mut out, n_sv as u32);
+    push_u64(&mut out, 0); // reserved
+    for (kind, payload) in records {
+        push_u16(&mut out, kind);
+        push_u16(&mut out, 0); // reserved
+        push_u32(&mut out, crc32(&payload));
+        push_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+    }
+    out
+}
+
+/// Encode a standalone exact model (one record, generation 0).
+pub fn encode_svm(model: &SvmModel) -> Result<Vec<u8>> {
+    let payload = svm_payload(model)?;
+    Ok(write_file(
+        0,
+        model.dim(),
+        model.n_sv(),
+        vec![(KIND_SVM, payload)],
+    ))
+}
+
+/// Encode a standalone approximated model (one record, generation 0).
+pub fn encode_approx(am: &ApproxModel) -> Result<Vec<u8>> {
+    let payload = approx_payload(am)?;
+    Ok(write_file(0, am.dim(), 0, vec![(KIND_APPROX, payload)]))
+}
+
+/// Encode a registry bundle: the exact model followed by its
+/// approximation, stamped with a publish generation.
+pub fn encode_bundle(
+    generation: u64,
+    exact: &SvmModel,
+    approx: &ApproxModel,
+) -> Result<Vec<u8>> {
+    if exact.dim() != approx.dim() {
+        return Err(Error::Shape(format!(
+            "bundle: exact dim {} vs approx dim {}",
+            exact.dim(),
+            approx.dim()
+        )));
+    }
+    let sp = svm_payload(exact)?;
+    let ap = approx_payload(approx)?;
+    Ok(write_file(
+        generation,
+        exact.dim(),
+        exact.n_sv(),
+        vec![(KIND_SVM, sp), (KIND_APPROX, ap)],
+    ))
+}
+
+// ---------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------
+
+/// Truncation-safe little-endian reader: every read names what it was
+/// reading so corruption errors localize the damage.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(Error::Corrupt(format!(
+                "truncated: {what} needs {n} bytes at offset {}, only {} \
+                 in file",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
+            Error::Corrupt(format!("{what}: length overflow"))
+        })?, what)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Read and validate the fixed file header without touching payloads.
+/// Cheap enough for generation polling on the serving path.
+pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    let magic = r.take(4, "magic")?;
+    if magic != &MAGIC[..] {
+        return Err(Error::Corrupt(format!(
+            "bad magic {magic:02x?} (expected \"ARBF\")"
+        )));
+    }
+    let version = r.u16("version")?;
+    if version != VERSION {
+        return Err(Error::Corrupt(format!(
+            "unsupported format version {version} (this build reads \
+             version {VERSION})"
+        )));
+    }
+    let n_records = r.u16("record count")?;
+    if n_records == 0 || n_records > MAX_RECORDS {
+        return Err(Error::Corrupt(format!(
+            "implausible record count {n_records}"
+        )));
+    }
+    let generation = r.u64("generation")?;
+    let dim = r.u32("dim")?;
+    let n_sv = r.u32("n_sv")?;
+    let _reserved = r.u64("reserved header bytes")?;
+    Ok(ArbfHeader { version, n_records, generation, dim, n_sv })
+}
+
+fn decode_svm_payload(payload: &[u8], want_dim: u32) -> Result<SvmModel> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let tag = r.u8("kernel tag")?;
+    let gamma = r.f32("gamma")?;
+    let beta = r.f32("coef0")?;
+    let b = r.f32("bias")?;
+    let n_sv = r.u32("n_sv")? as usize;
+    let d = r.u32("dim")? as usize;
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "svm record dim {d} disagrees with header dim {want_dim}"
+        )));
+    }
+    let kernel = match tag {
+        0 => Kernel::Linear,
+        1 => Kernel::Rbf { gamma },
+        2 => Kernel::Poly2 { gamma, beta },
+        t => {
+            return Err(Error::Corrupt(format!("unknown kernel tag {t}")))
+        }
+    };
+    if (n_sv as u64) * (d as u64) > MAX_MODEL_ELEMS {
+        return Err(Error::Corrupt(format!(
+            "implausible svm record: n_sv={n_sv} × d={d} exceeds the \
+             {MAX_MODEL_ELEMS}-element cap"
+        )));
+    }
+    let coef = r.f32_vec(n_sv, "coefficients")?;
+    let mut sv = Mat::zeros(n_sv, d);
+    for i in 0..n_sv {
+        let nnz = r.u32("sv nnz")? as usize;
+        if nnz > d {
+            return Err(Error::Corrupt(format!(
+                "sv {i}: {nnz} nonzeros in dimension {d}"
+            )));
+        }
+        for _ in 0..nnz {
+            let idx = r.u32("sv index")? as usize;
+            let val = r.f32("sv value")?;
+            if idx >= d {
+                return Err(Error::Corrupt(format!(
+                    "sv {i}: feature index {idx} out of range (d={d})"
+                )));
+            }
+            *sv.at_mut(i, idx) = val;
+        }
+    }
+    if r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "svm record: {} trailing payload bytes",
+            payload.len() - r.pos
+        )));
+    }
+    let model = SvmModel::new(kernel, sv, coef, b)?;
+    model.check_finite().map_err(Error::Corrupt)?;
+    Ok(model)
+}
+
+fn decode_approx_payload(payload: &[u8], want_dim: u32) -> Result<ApproxModel> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let d = r.u32("dim")? as usize;
+    if d == 0 {
+        return Err(Error::Corrupt("approx record with dim 0".into()));
+    }
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "approx record dim {d} disagrees with header dim {want_dim}"
+        )));
+    }
+    let gamma = r.f32("gamma")?;
+    let b = r.f32("b")?;
+    let c = r.f32("c")?;
+    let max_sv_norm_sq = r.f32("max_sv_norm_sq")?;
+    let v = r.f32_vec(d, "v")?;
+    let upper = r.f32_vec(d * (d + 1) / 2, "M upper triangle")?;
+    if r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "approx record: {} trailing payload bytes",
+            payload.len() - r.pos
+        )));
+    }
+    let mut m = Mat::zeros(d, d);
+    let mut k = 0usize;
+    for row in 0..d {
+        for col in row..d {
+            let val = upper[k];
+            k += 1;
+            *m.at_mut(row, col) = val;
+            *m.at_mut(col, row) = val;
+        }
+    }
+    let am = ApproxModel { gamma, b, c, v, m, max_sv_norm_sq };
+    am.check_finite().map_err(Error::Corrupt)?;
+    Ok(am)
+}
+
+/// Decode a whole `.arbf` file into its records, verifying framing and
+/// per-record CRCs.
+pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
+    let hdr = peek_header(bytes)?;
+    let mut r = Reader { buf: bytes, pos: FILE_HEADER_LEN };
+    let mut records = Vec::with_capacity(hdr.n_records as usize);
+    for i in 0..hdr.n_records {
+        let kind = r.u16("record kind")?;
+        let _reserved = r.u16("record reserved")?;
+        let want_crc = r.u32("record crc")?;
+        let len = r.u64("record payload length")?;
+        let avail = (r.buf.len() - r.pos) as u64;
+        if len > avail {
+            return Err(Error::Corrupt(format!(
+                "record {i}: payload length {len} exceeds remaining file \
+                 size {avail}"
+            )));
+        }
+        let payload = r.take(len as usize, "record payload")?;
+        let got_crc = crc32(payload);
+        if got_crc != want_crc {
+            return Err(Error::Corrupt(format!(
+                "record {i}: CRC-32 mismatch (stored {want_crc:#010x}, \
+                 computed {got_crc:#010x})"
+            )));
+        }
+        records.push(match kind {
+            KIND_SVM => ModelRecord::Svm(decode_svm_payload(payload, hdr.dim)?),
+            KIND_APPROX => {
+                ModelRecord::Approx(decode_approx_payload(payload, hdr.dim)?)
+            }
+            k => {
+                return Err(Error::Corrupt(format!(
+                    "record {i}: unknown kind {k}"
+                )))
+            }
+        });
+    }
+    if r.pos != bytes.len() {
+        return Err(Error::Corrupt(format!(
+            "{} trailing bytes after final record",
+            bytes.len() - r.pos
+        )));
+    }
+    Ok((hdr, records))
+}
+
+/// Decode a standalone exact-model file.
+pub fn decode_svm(bytes: &[u8]) -> Result<SvmModel> {
+    match decode(bytes)?.1.into_iter().next() {
+        Some(ModelRecord::Svm(m)) => Ok(m),
+        _ => Err(Error::Corrupt("expected a single svm record".into())),
+    }
+}
+
+/// Decode a standalone approx-model file.
+pub fn decode_approx(bytes: &[u8]) -> Result<ApproxModel> {
+    match decode(bytes)?.1.into_iter().next() {
+        Some(ModelRecord::Approx(m)) => Ok(m),
+        _ => Err(Error::Corrupt("expected a single approx record".into())),
+    }
+}
+
+/// Decode a registry bundle: `(generation, exact, approx)`.
+pub fn decode_bundle(bytes: &[u8]) -> Result<(u64, SvmModel, ApproxModel)> {
+    let (hdr, records) = decode(bytes)?;
+    let mut it = records.into_iter();
+    match (it.next(), it.next()) {
+        (Some(ModelRecord::Svm(e)), Some(ModelRecord::Approx(a))) => {
+            Ok((hdr.generation, e, a))
+        }
+        _ => Err(Error::Corrupt(
+            "bundle must hold an svm record followed by an approx record"
+                .into(),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_approx() -> ApproxModel {
+        ApproxModel {
+            gamma: 0.1,
+            b: -0.2,
+            c: 0.5,
+            v: vec![1.0, -2.0, 0.25],
+            m: Mat::from_vec(
+                3,
+                3,
+                vec![0.5, 0.25, -1.0, 0.25, -0.75, 2.0, -1.0, 2.0, 0.125],
+            )
+            .unwrap(),
+            max_sv_norm_sq: 4.0,
+        }
+    }
+
+    fn toy_svm() -> SvmModel {
+        SvmModel::new(
+            Kernel::Rbf { gamma: 0.25 },
+            Mat::from_vec(3, 3, vec![1., 0., 2., 0., 2., 0., -1., 1., 0.5])
+                .unwrap(),
+            vec![0.5, -1.0, 0.75],
+            0.1,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn approx_binary_roundtrip_exact_bits() {
+        let am = toy_approx();
+        let bytes = encode_approx(&am).unwrap();
+        let back = decode_approx(&bytes).unwrap();
+        assert_eq!(back.v, am.v);
+        assert_eq!(back.m.max_abs_diff(&am.m), 0.0);
+        assert_eq!(back.gamma, am.gamma);
+        assert_eq!(back.b, am.b);
+        assert_eq!(back.c, am.c);
+        assert_eq!(back.max_sv_norm_sq, am.max_sv_norm_sq);
+        // Binary beats the text codec on size for this model.
+        assert!(bytes.len() < am.to_text().len());
+    }
+
+    #[test]
+    fn svm_binary_roundtrip_preserves_sparsity_and_dim() {
+        let m = toy_svm();
+        let bytes = encode_svm(&m).unwrap();
+        let back = decode_svm(&bytes).unwrap();
+        assert_eq!(back.coef, m.coef);
+        assert_eq!(back.sv.max_abs_diff(&m.sv), 0.0);
+        assert_eq!(back.kernel, m.kernel);
+        assert_eq!(back.b, m.b);
+        // Unlike the text codec, binary keeps explicit d even when the
+        // last column is all-zero.
+        assert_eq!(back.dim(), 3);
+    }
+
+    #[test]
+    fn bundle_roundtrip_carries_generation() {
+        let e = toy_svm();
+        let a = toy_approx();
+        let bytes = encode_bundle(7, &e, &a).unwrap();
+        let hdr = peek_header(&bytes).unwrap();
+        assert_eq!(hdr.generation, 7);
+        assert_eq!(hdr.n_records, 2);
+        assert_eq!(hdr.dim, 3);
+        assert_eq!(hdr.n_sv, 3);
+        let (generation, e2, a2) = decode_bundle(&bytes).unwrap();
+        assert_eq!(generation, 7);
+        assert_eq!(e2.n_sv(), e.n_sv());
+        assert_eq!(a2.v, a.v);
+    }
+
+    #[test]
+    fn bad_magic_is_corrupt() {
+        let mut bytes = encode_approx(&toy_approx()).unwrap();
+        bytes[0] = b'X';
+        assert!(matches!(
+            decode_approx(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("magic")
+        ));
+    }
+
+    #[test]
+    fn wrong_version_is_corrupt() {
+        let mut bytes = encode_approx(&toy_approx()).unwrap();
+        bytes[4] = 99;
+        assert!(matches!(
+            decode_approx(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("version")
+        ));
+    }
+
+    #[test]
+    fn payload_bitflip_fails_crc() {
+        let mut bytes = encode_bundle(1, &toy_svm(), &toy_approx()).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x40;
+        assert!(matches!(
+            decode_bundle(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("CRC-32")
+        ));
+    }
+
+    #[test]
+    fn truncation_is_typed_not_panic() {
+        let bytes = encode_bundle(1, &toy_svm(), &toy_approx()).unwrap();
+        for cut in [0, 3, FILE_HEADER_LEN - 1, FILE_HEADER_LEN + 5, bytes.len() - 1]
+        {
+            let err = decode_bundle(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt(_)),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn non_finite_rejected_on_encode() {
+        let mut am = toy_approx();
+        am.gamma = f32::NAN;
+        assert!(matches!(
+            encode_approx(&am),
+            Err(Error::InvalidArg(_))
+        ));
+        let mut sv = toy_svm();
+        sv.coef[1] = f32::INFINITY;
+        assert!(matches!(encode_svm(&sv), Err(Error::InvalidArg(_))));
+    }
+}

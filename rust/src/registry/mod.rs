@@ -1,0 +1,33 @@
+//! Model registry: compact binary model artifacts + a directory-backed
+//! multi-tenant store — the packaging layer that turns the paper's
+//! "smaller memory footprint" result (Table 3: the approximated model
+//! is `O(d²)` regardless of `n_SV`) into an operational property: one
+//! serving node can host thousands of approximated models and swap
+//! republished versions in place.
+//!
+//! Three pieces:
+//!
+//! * [`binfmt`] — the `.arbf` format: versioned little-endian records
+//!   for [`crate::svm::SvmModel`] and [`crate::approx::ApproxModel`]
+//!   with magic/CRC-32 framing, strict non-finite rejection and
+//!   truncation-safe decoding (every failure is a typed
+//!   [`crate::Error::Corrupt`]). Byte-exact layout: `docs/FORMATS.md`.
+//! * [`store`] — [`ModelStore`]: one `<id>.arbf` bundle (exact +
+//!   approx) per model id under a root directory, published atomically
+//!   (tmp file + rename) with a monotonically increasing generation
+//!   counter persisted in the file header, loaded lazily through an
+//!   LRU-bounded in-memory cache.
+//! * The serving integration lives in [`crate::coordinator`]: requests
+//!   carry a model id, the executor resolves per-model state through
+//!   the store and re-checks generations so a republish hot-swaps
+//!   without dropping in-flight requests.
+
+pub mod binfmt;
+pub mod store;
+
+/// Identifier a serving request uses to name a model. Cheap to clone;
+/// compared by content.
+pub type ModelId = std::sync::Arc<str>;
+
+pub use binfmt::{ArbfHeader, ModelRecord};
+pub use store::{ModelEntry, ModelStore, StoreEntryInfo};

@@ -1,0 +1,483 @@
+//! Directory-backed model store: one `<id>.arbf` bundle per model id.
+//!
+//! * **Atomic publish** — bundles are written to a temp file in the
+//!   same directory, fsync'd, then `rename(2)`d over the target, so
+//!   readers only ever observe a complete old or complete new file.
+//! * **Generation counters** — each publish stamps `previous + 1` into
+//!   the file header; generations survive process restarts because
+//!   they live in the artifact itself, and [`ModelStore::peek`] reads
+//!   them back from the fixed 32-byte header without deserializing
+//!   payloads (the serving layer polls this for hot-swap detection).
+//! * **Lazy load + LRU cache** — [`ModelStore::load`] decodes a bundle
+//!   at most once per generation and shares it behind an `Arc`; the
+//!   in-memory cache is bounded, evicting the least-recently-used
+//!   entry, so a node can *register* thousands of tenants while only
+//!   the hot set stays resident.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::approx::ApproxModel;
+use crate::log_warn;
+use crate::svm::SvmModel;
+use crate::{Error, Result};
+
+use super::binfmt;
+use super::ModelId;
+
+/// File extension used for bundles.
+pub const ARBF_EXT: &str = "arbf";
+
+/// Default LRU capacity of the in-memory entry cache.
+pub const DEFAULT_CACHE_CAPACITY: usize = 64;
+
+/// A loaded (exact, approx) pair at a specific generation. Shared
+/// immutably between the store cache and serving threads.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub id: ModelId,
+    pub generation: u64,
+    pub exact: SvmModel,
+    pub approx: ApproxModel,
+}
+
+impl ModelEntry {
+    /// Feature dimension (exact and approx agree by construction).
+    pub fn dim(&self) -> usize {
+        self.approx.dim()
+    }
+}
+
+/// Header-level facts about a stored model (no payload decode).
+#[derive(Clone, Debug)]
+pub struct StoreEntryInfo {
+    pub id: String,
+    pub generation: u64,
+    pub dim: usize,
+    pub n_sv: usize,
+    pub size_bytes: u64,
+}
+
+struct Cache {
+    capacity: usize,
+    tick: u64,
+    entries: HashMap<String, (u64, Arc<ModelEntry>)>,
+}
+
+/// The registry: a root directory of `.arbf` bundles plus a bounded
+/// in-memory cache. Cheap to share behind an `Arc` across coordinators.
+pub struct ModelStore {
+    root: PathBuf,
+    cache: Mutex<Cache>,
+    publish_lock: Mutex<()>,
+    tmp_counter: AtomicU64,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) a store rooted at `root` with the
+    /// default cache capacity.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ModelStore> {
+        ModelStore::with_capacity(root, DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Open with an explicit LRU cache capacity (≥ 1).
+    pub fn with_capacity(
+        root: impl Into<PathBuf>,
+        capacity: usize,
+    ) -> Result<ModelStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        Ok(ModelStore {
+            root,
+            cache: Mutex::new(Cache {
+                capacity: capacity.max(1),
+                tick: 0,
+                entries: HashMap::new(),
+            }),
+            publish_lock: Mutex::new(()),
+            tmp_counter: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Model ids become file names: restrict to a conservative charset.
+    pub fn validate_id(id: &str) -> Result<()> {
+        let ok = !id.is_empty()
+            && id.len() <= 128
+            && !id.starts_with('.')
+            && id
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || "._-".contains(c));
+        if ok {
+            Ok(())
+        } else {
+            Err(Error::InvalidArg(format!(
+                "invalid model id '{id}': use 1-128 chars from \
+                 [A-Za-z0-9._-], not starting with '.'"
+            )))
+        }
+    }
+
+    fn path_of(&self, id: &str) -> PathBuf {
+        self.root.join(format!("{id}.{ARBF_EXT}"))
+    }
+
+    /// Atomically publish a new generation of `id`. Returns the
+    /// generation number the bundle was stamped with (previous + 1, or
+    /// 1 for a new id). Readers holding the old generation keep it; the
+    /// next [`ModelStore::load`] observes the new one.
+    pub fn publish(
+        &self,
+        id: &str,
+        exact: &SvmModel,
+        approx: &ApproxModel,
+    ) -> Result<u64> {
+        Self::validate_id(id)?;
+        // Serialize publishers so read-increment-write of the
+        // generation counter is atomic within this process.
+        let _publishing = self.publish_lock.lock().unwrap();
+        let path = self.path_of(id);
+        let generation = if path.exists() {
+            match self.peek(id) {
+                Ok(info) => {
+                    // Submit-side dimension checks are cached per id, so
+                    // a republish must keep the feature space stable; a
+                    // dim change needs an explicit remove() first.
+                    if info.dim != exact.dim() {
+                        return Err(Error::InvalidArg(format!(
+                            "refusing to republish '{id}' with dim {} \
+                             (current generation {} has dim {}); remove() \
+                             the model first to change its feature space",
+                            exact.dim(),
+                            info.generation,
+                            info.dim
+                        )));
+                    }
+                    info.generation + 1
+                }
+                Err(e) => {
+                    log_warn!(
+                        "registry: replacing unreadable bundle for '{id}' \
+                         ({e}); restarting at generation 1"
+                    );
+                    1
+                }
+            }
+        } else {
+            1
+        };
+        let bytes = binfmt::encode_bundle(generation, exact, approx)?;
+        let tmp = self.root.join(format!(
+            "{id}.{ARBF_EXT}.tmp.{}.{}",
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        // Invalidate so the next load picks the new generation up.
+        self.cache.lock().unwrap().entries.remove(id);
+        Ok(generation)
+    }
+
+    /// Read header facts for `id` without decoding payloads. This is
+    /// the hot-swap poll: ~32 bytes of I/O.
+    pub fn peek(&self, id: &str) -> Result<StoreEntryInfo> {
+        Self::validate_id(id)?;
+        let path = self.path_of(id);
+        let bytes = read_prefix(&path, binfmt::FILE_HEADER_LEN)
+            .map_err(|e| not_found_to_invalid(e, id))?;
+        let size_bytes = std::fs::metadata(&path)?.len();
+        let hdr = binfmt::peek_header(&bytes)?;
+        Ok(StoreEntryInfo {
+            id: id.to_string(),
+            generation: hdr.generation,
+            dim: hdr.dim as usize,
+            n_sv: hdr.n_sv as usize,
+            size_bytes,
+        })
+    }
+
+    /// Load (lazily) the current generation of `id`. Revalidates the
+    /// on-disk generation against the cache, so a republished bundle is
+    /// picked up; otherwise this is a pure in-memory hit.
+    pub fn load(&self, id: &str) -> Result<Arc<ModelEntry>> {
+        let info = self.peek(id)?;
+        {
+            let mut g = self.cache.lock().unwrap();
+            g.tick += 1;
+            let tick = g.tick;
+            if let Some(slot) = g.entries.get_mut(id) {
+                if slot.1.generation == info.generation {
+                    slot.0 = tick;
+                    return Ok(slot.1.clone());
+                }
+            }
+        }
+        // Decode outside the lock: large bundles should not serialize
+        // unrelated tenants' cache hits.
+        let bytes = std::fs::read(self.path_of(id))
+            .map_err(|e| not_found_to_invalid(e.into(), id))?;
+        let (generation, exact, approx) = binfmt::decode_bundle(&bytes)?;
+        let entry = Arc::new(ModelEntry {
+            id: Arc::from(id),
+            generation,
+            exact,
+            approx,
+        });
+        let mut g = self.cache.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        if !g.entries.contains_key(id) && g.entries.len() >= g.capacity {
+            if let Some(victim) = g
+                .entries
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                g.entries.remove(&victim);
+            }
+        }
+        g.entries.insert(id.to_string(), (tick, entry.clone()));
+        Ok(entry)
+    }
+
+    /// Enumerate stored models (header facts only), sorted by id.
+    pub fn list(&self) -> Result<Vec<StoreEntryInfo>> {
+        let mut out = Vec::new();
+        for dirent in std::fs::read_dir(&self.root)? {
+            let path = dirent?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some(id) = name.strip_suffix(&format!(".{ARBF_EXT}")) else {
+                continue;
+            };
+            if Self::validate_id(id).is_err() {
+                continue; // tmp files and strays
+            }
+            match self.peek(id) {
+                Ok(info) => out.push(info),
+                Err(e) => log_warn!("registry: skipping '{id}': {e}"),
+            }
+        }
+        out.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(out)
+    }
+
+    /// Remove a model's bundle and drop it from the cache.
+    pub fn remove(&self, id: &str) -> Result<()> {
+        Self::validate_id(id)?;
+        std::fs::remove_file(self.path_of(id))
+            .map_err(|e| not_found_to_invalid(e.into(), id))?;
+        self.cache.lock().unwrap().entries.remove(id);
+        Ok(())
+    }
+
+    /// Number of entries currently resident in the cache (tests).
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().entries.len()
+    }
+}
+
+fn not_found_to_invalid(e: Error, id: &str) -> Error {
+    match e {
+        Error::Io(ref io) if io.kind() == std::io::ErrorKind::NotFound => {
+            Error::InvalidArg(format!("model '{id}' not found in registry"))
+        }
+        other => other,
+    }
+}
+
+fn read_prefix(path: &Path, n: usize) -> Result<Vec<u8>> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = vec![0u8; n];
+    let mut read = 0;
+    while read < n {
+        match f.read(&mut buf[read..])? {
+            0 => break,
+            k => read += k,
+        }
+    }
+    buf.truncate(read);
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::svm::Kernel;
+
+    fn pair(seed: f32) -> (SvmModel, ApproxModel) {
+        let exact = SvmModel::new(
+            Kernel::Rbf { gamma: 0.25 },
+            Mat::from_vec(2, 2, vec![1., seed, 0., 2.]).unwrap(),
+            vec![0.5, -1.0],
+            0.1,
+        )
+        .unwrap();
+        let approx = ApproxModel {
+            gamma: 0.25,
+            b: 0.1,
+            c: seed,
+            v: vec![1.0, -2.0],
+            m: Mat::from_vec(2, 2, vec![0.5, 0.25, 0.25, -0.75]).unwrap(),
+            max_sv_norm_sq: 4.0,
+        };
+        (exact, approx)
+    }
+
+    fn temp_store(tag: &str) -> ModelStore {
+        let dir = std::env::temp_dir()
+            .join(format!("approxrbf_store_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        ModelStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn publish_bumps_generation_and_load_follows() {
+        let store = temp_store("gen");
+        let (e, a) = pair(1.0);
+        assert_eq!(store.publish("alpha", &e, &a).unwrap(), 1);
+        let first = store.load("alpha").unwrap();
+        assert_eq!(first.generation, 1);
+        assert_eq!(first.dim(), 2);
+        let (e2, a2) = pair(2.0);
+        assert_eq!(store.publish("alpha", &e2, &a2).unwrap(), 2);
+        let second = store.load("alpha").unwrap();
+        assert_eq!(second.generation, 2);
+        assert_eq!(second.approx.c, 2.0);
+        // The old Arc is still intact (in-flight readers keep serving).
+        assert_eq!(first.approx.c, 1.0);
+    }
+
+    #[test]
+    fn load_is_cached_until_republish() {
+        let store = temp_store("cache");
+        let (e, a) = pair(1.0);
+        store.publish("m", &e, &a).unwrap();
+        let x = store.load("m").unwrap();
+        let y = store.load("m").unwrap();
+        assert!(Arc::ptr_eq(&x, &y));
+        store.publish("m", &e, &a).unwrap();
+        let z = store.load("m").unwrap();
+        assert!(!Arc::ptr_eq(&x, &z));
+        assert_eq!(z.generation, 2);
+    }
+
+    #[test]
+    fn lru_cache_is_bounded() {
+        let dir = std::env::temp_dir().join(format!(
+            "approxrbf_store_test_lru_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::with_capacity(dir, 2).unwrap();
+        let (e, a) = pair(1.0);
+        for id in ["a", "b", "c", "d"] {
+            store.publish(id, &e, &a).unwrap();
+            store.load(id).unwrap();
+        }
+        assert!(store.cached_count() <= 2);
+        // Evicted entries still load (from disk).
+        assert_eq!(store.load("a").unwrap().generation, 1);
+    }
+
+    #[test]
+    fn list_and_remove() {
+        let store = temp_store("list");
+        let (e, a) = pair(1.0);
+        store.publish("beta", &e, &a).unwrap();
+        store.publish("alpha", &e, &a).unwrap();
+        let infos = store.list().unwrap();
+        assert_eq!(
+            infos.iter().map(|i| i.id.as_str()).collect::<Vec<_>>(),
+            vec!["alpha", "beta"]
+        );
+        assert!(infos.iter().all(|i| i.n_sv == 2 && i.dim == 2));
+        store.remove("alpha").unwrap();
+        assert_eq!(store.list().unwrap().len(), 1);
+        assert!(store.load("alpha").is_err());
+    }
+
+    #[test]
+    fn dim_change_requires_remove() {
+        let store = temp_store("dimchange");
+        let (e2, a2) = pair(1.0);
+        store.publish("m", &e2, &a2).unwrap();
+        // A 3-dim republish under the same id must be refused…
+        let e3 = SvmModel::new(
+            Kernel::Rbf { gamma: 0.25 },
+            Mat::from_vec(1, 3, vec![1., 0., 2.]).unwrap(),
+            vec![0.5],
+            0.1,
+        )
+        .unwrap();
+        let a3 = ApproxModel {
+            gamma: 0.25,
+            b: 0.1,
+            c: 0.0,
+            v: vec![1.0, -2.0, 0.5],
+            m: Mat::zeros(3, 3),
+            max_sv_norm_sq: 4.0,
+        };
+        assert!(matches!(
+            store.publish("m", &e3, &a3),
+            Err(Error::InvalidArg(_))
+        ));
+        // …but allowed after an explicit remove.
+        store.remove("m").unwrap();
+        assert_eq!(store.publish("m", &e3, &a3).unwrap(), 1);
+        assert_eq!(store.peek("m").unwrap().dim, 3);
+    }
+
+    #[test]
+    fn bad_ids_rejected() {
+        let store = temp_store("ids");
+        let (e, a) = pair(1.0);
+        let too_long = "x".repeat(200);
+        for id in ["", "a/b", "..", ".hidden", "sp ace", too_long.as_str()] {
+            assert!(store.publish(id, &e, &a).is_err(), "id '{id}'");
+        }
+    }
+
+    #[test]
+    fn peek_reports_without_decoding() {
+        let store = temp_store("peek");
+        let (e, a) = pair(1.0);
+        store.publish("m", &e, &a).unwrap();
+        let info = store.peek("m").unwrap();
+        assert_eq!(info.generation, 1);
+        assert_eq!(info.dim, 2);
+        assert!(info.size_bytes > binfmt::FILE_HEADER_LEN as u64);
+        assert_eq!(store.cached_count(), 0, "peek must not populate cache");
+    }
+
+    #[test]
+    fn missing_model_is_invalid_arg() {
+        let store = temp_store("missing");
+        assert!(matches!(
+            store.load("ghost"),
+            Err(Error::InvalidArg(_))
+        ));
+    }
+}

@@ -3,9 +3,15 @@
 //! Rust hot path. This is the "vendor math library" slot of the paper's
 //! LOOPS/BLAS/ATLAS axis, and the only place the compiled L1/L2 compute
 //! graphs are touched at run time — Python is never invoked.
+//!
+//! The engine (and its `xla` dependency) only compiles with the `pjrt`
+//! feature, so tier-1 builds work on machines without PJRT; the
+//! artifact [`Manifest`] stays available unconditionally for tooling.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, PreparedApprox, PreparedExact};
 pub use manifest::{ArtifactEntry, ArtifactKind, ImplKind, Manifest};

@@ -45,6 +45,39 @@ impl SvmModel {
         self.coef.len()
     }
 
+    /// Shared validation behind every codec (text and `.arbf` binary):
+    /// shapes must agree and every parameter must be finite. Returns a
+    /// human-readable defect description.
+    pub fn check_finite(&self) -> std::result::Result<(), String> {
+        if self.sv.rows() != self.coef.len() {
+            return Err(format!(
+                "{} SVs vs {} coefficients",
+                self.sv.rows(),
+                self.coef.len()
+            ));
+        }
+        let (gamma, beta) = match self.kernel {
+            Kernel::Linear => (0.0, 0.0),
+            Kernel::Rbf { gamma } => (gamma, 0.0),
+            Kernel::Poly2 { gamma, beta } => (gamma, beta),
+        };
+        for (name, val) in
+            [("gamma", gamma), ("coef0", beta), ("b", self.b)]
+        {
+            if !val.is_finite() {
+                return Err(format!("non-finite {name}: {val}"));
+            }
+        }
+        if let Some(i) = self.coef.iter().position(|x| !x.is_finite()) {
+            return Err(format!("non-finite coefficient for SV {i}"));
+        }
+        if let Some(i) = self.sv.as_slice().iter().position(|x| !x.is_finite())
+        {
+            return Err(format!("non-finite SV feature (flat index {i})"));
+        }
+        Ok(())
+    }
+
     pub fn dim(&self) -> usize {
         self.sv.cols()
     }
@@ -205,7 +238,11 @@ impl SvmModel {
                 *sv.at_mut(r, c) = v;
             }
         }
-        SvmModel::new(kernel, sv, coefs, -rho)
+        let model = SvmModel::new(kernel, sv, coefs, -rho)?;
+        // Rust's f32 parser accepts "nan"/"inf"; reject them here so a
+        // damaged model file cannot silently poison every decision.
+        model.check_finite().map_err(Error::Parse)?;
+        Ok(model)
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -271,6 +308,33 @@ mod tests {
         .unwrap();
         let back = SvmModel::from_text(&m.to_text()).unwrap();
         assert_eq!(back.kernel, m.kernel);
+    }
+
+    #[test]
+    fn non_finite_text_rejected() {
+        // gamma / rho / coefficients / SV values: "nan" parses as f32,
+        // so the codec must check finiteness explicitly.
+        let cases = [
+            "svm_type c_svc\nkernel_type rbf\ngamma nan\nrho 0\nSV\n1 1:1\n",
+            "svm_type c_svc\nkernel_type rbf\ngamma 0.5\nrho inf\nSV\n1 1:1\n",
+            "svm_type c_svc\nkernel_type rbf\ngamma 0.5\nrho 0\nSV\nnan 1:1\n",
+            "svm_type c_svc\nkernel_type rbf\ngamma 0.5\nrho 0\nSV\n1 1:inf\n",
+        ];
+        for text in cases {
+            let err = SvmModel::from_text(text).unwrap_err();
+            assert!(
+                matches!(err, Error::Parse(ref m) if m.contains("non-finite")),
+                "{text:?}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_sv_rows_rejected() {
+        let bad = "svm_type c_svc\nkernel_type linear\nrho 0\nSV\n1 0:2\n";
+        assert!(SvmModel::from_text(bad).is_err(), "0-based index");
+        let bad = "svm_type c_svc\nkernel_type linear\nrho 0\nSV\n1 7\n";
+        assert!(SvmModel::from_text(bad).is_err(), "feature without ':'");
     }
 
     #[test]

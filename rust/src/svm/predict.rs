@@ -18,16 +18,30 @@ pub struct ExactPredictor<'m> {
 
 impl<'m> ExactPredictor<'m> {
     pub fn new(model: &'m SvmModel, backend: MathBackend) -> Result<Self> {
+        Self::with_norms(model, model.sv.row_norms_sq(), backend)
+    }
+
+    /// Construct with precomputed SV norms, skipping the O(n_SV·d)
+    /// pass — the serving executor caches the norms per model
+    /// generation and rebuilds the (cheap) predictor per batch.
+    pub fn with_norms(
+        model: &'m SvmModel,
+        sv_norms: Vec<f32>,
+        backend: MathBackend,
+    ) -> Result<Self> {
         if backend == MathBackend::Xla {
             return Err(Error::InvalidArg(
                 "use runtime::Engine for the XLA backend".into(),
             ));
         }
-        Ok(ExactPredictor {
-            model,
-            sv_norms: model.sv.row_norms_sq(),
-            backend,
-        })
+        if sv_norms.len() != model.n_sv() {
+            return Err(Error::Shape(format!(
+                "{} SV norms vs {} SVs",
+                sv_norms.len(),
+                model.n_sv()
+            )));
+        }
+        Ok(ExactPredictor { model, sv_norms, backend })
     }
 
     /// Decision values for a batch of rows.

@@ -2,14 +2,11 @@
 //! native and (when artifacts exist) XLA executors, plus crate-level
 //! property tests on routing invariants.
 
-use std::path::Path;
 use std::time::Duration;
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::coordinator::{
-    Coordinator, CoordinatorConfig, ExecSpec, Route,
-};
+use approxrbf::coordinator::{Coordinator, CoordinatorConfig, Route};
 use approxrbf::data::{Dataset, SynthProfile, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
 use approxrbf::svm::smo::{train_csvc, SmoParams};
@@ -54,9 +51,11 @@ fn hybrid_serving_accuracy_equals_best_of_both() {
     coord.shutdown().unwrap();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn xla_executor_serves_identically_to_native() {
-    if !Path::new("artifacts/manifest.txt").exists() {
+    use approxrbf::coordinator::ExecSpec;
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
         eprintln!("skipping: no artifacts");
         return;
     }

@@ -5,6 +5,8 @@
 //!
 //! Skips (with a message) when `artifacts/` is absent.
 
+#![cfg(feature = "pjrt")]
+
 use std::path::Path;
 
 use approxrbf::approx::builder::build_approx_model;

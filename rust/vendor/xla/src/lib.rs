@@ -1,0 +1,137 @@
+//! Stub of the `xla` (xla-rs) crate API surface used by `approxrbf`.
+//!
+//! This crate exists so the `pjrt` feature of `approxrbf` always
+//! *compiles*, even on machines without the PJRT runtime or the real
+//! xla-rs bindings. Every entry point fails fast at run time with a
+//! clear message from [`PjRtClient::cpu`] — the only constructor — so
+//! no stubbed compute path can ever be silently exercised.
+//!
+//! To run on real PJRT, replace the `xla = { path = "vendor/xla" }`
+//! dependency in `rust/Cargo.toml` with the actual xla-rs crate (same
+//! API) and rebuild with `--features pjrt`.
+
+use std::borrow::Borrow;
+
+/// Error type mirroring `xla::Error` (approxrbf only calls
+/// `to_string()` on it).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT is unavailable: approxrbf was built against the in-tree \
+         `xla` stub (rust/vendor/xla). Install the real xla-rs crate + \
+         PJRT plugin and point rust/Cargo.toml at it to enable the XLA \
+         execution path."
+            .into(),
+    ))
+}
+
+/// Host-side tensor value.
+#[derive(Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unavailable()
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// Compilable computation.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Always fails in the stub — see the crate docs.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
