@@ -2,9 +2,17 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test artifacts
+.PHONY: tier1 fmt lint build test doc check-pjrt artifacts
 
 tier1: fmt lint build test
+
+# Mirror the extra CI jobs: rustdoc with warnings denied, and the
+# pjrt feature path against the vendored stub.
+doc:
+	cd $(CARGO_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+check-pjrt:
+	cd $(CARGO_DIR) && cargo check --features pjrt --all-targets
 
 fmt:
 	cd $(CARGO_DIR) && cargo fmt --check

@@ -21,11 +21,9 @@ use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::coordinator::{
-    Coordinator, CoordinatorConfig, ExecSpec, Route, RoutePolicy,
-};
+use approxrbf::coordinator::{Coordinator, ExecSpec, Route, RoutePolicy};
 use approxrbf::data::{SynthProfile, UnitNormScaler};
-use approxrbf::linalg::{MathBackend};
+use approxrbf::linalg::MathBackend;
 use approxrbf::svm::predict::ExactPredictor;
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::Kernel;
@@ -104,17 +102,13 @@ fn main() -> approxrbf::Result<()> {
     let exact_pred = ExactPredictor::new(&model, MathBackend::Blocked)?;
 
     // ---------- serve ----------
-    let coord = Coordinator::start(
-        model.clone(),
-        am.clone(),
-        CoordinatorConfig {
-            policy: RoutePolicy::Hybrid,
-            exec,
-            max_batch: 256,
-            max_wait: Duration::from_micros(500),
-            ..Default::default()
-        },
-    )?;
+    let coord = Coordinator::builder()
+        .policy(RoutePolicy::Hybrid)
+        .exec(exec)
+        .max_batch(256)
+        .max_wait(Duration::from_micros(500))
+        .start(model.clone(), am.clone())?;
+    let client = coord.client();
     println!("[serve] submitting {REQUESTS} requests…");
     // Closed-loop client with a bounded in-flight window so reported
     // latency reflects service time, not a 20k-deep client queue. The
@@ -130,15 +124,17 @@ fn main() -> approxrbf::Result<()> {
             let burst =
                 (INFLIGHT - inflight).min(REQUESTS - submitted);
             for _ in 0..burst {
-                coord.submit(traffic[submitted].clone())?;
+                client.submit(traffic[submitted].clone())?;
                 submitted += 1;
             }
         }
-        if let Some(r) = coord.recv(Duration::from_millis(200)) {
-            responses.push(r);
+        // Completions are typed: a request the executor cannot serve
+        // surfaces as Err(PredictError) here instead of a timeout.
+        if let Some(c) = client.recv(Duration::from_millis(200)) {
+            responses.push(c?);
         }
-        while let Some(r) = coord.recv(Duration::from_micros(0)) {
-            responses.push(r);
+        while let Some(c) = client.recv(Duration::from_micros(0)) {
+            responses.push(c?);
         }
     }
     let wall = t0.elapsed().as_secs_f64();

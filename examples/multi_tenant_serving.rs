@@ -6,13 +6,15 @@
 //! This example:
 //!   1. trains three tenants on different synthetic profiles / γ
 //!      settings and publishes each as an `.arbf` bundle into a
-//!      directory-backed [`ModelStore`];
+//!      directory-backed [`ModelStore`] — `control-a` ships with a
+//!      [`TenantPolicy`] pinning it to the exact path, `adult` is
+//!      published warm (cache pre-seeded before its first request);
 //!   2. serves a mixed-tenant workload through one hybrid-routing
-//!      coordinator on the native executor — each tenant is routed with
-//!      its *own* Eq. 3.11 budget;
-//!   3. republishes one tenant mid-stream (hot swap) and shows the
-//!      generation change taking effect without a single dropped or
-//!      failed in-flight request;
+//!      coordinator via the cloneable [`Client`] API — each tenant is
+//!      routed with its *own* Eq. 3.11 budget and policy;
+//!   3. republishes `control-a` mid-stream *without* the policy (hot
+//!      swap): its served route mix flips from all-exact to all-approx
+//!      with zero dropped or failed in-flight requests;
 //!   4. prints the per-model route mix / latency table from the metrics
 //!      snapshot.
 //!
@@ -22,15 +24,13 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::ApproxModel;
-use approxrbf::coordinator::{
-    Coordinator, CoordinatorConfig, Route, RoutePolicy,
-};
+use approxrbf::coordinator::{Coordinator, Route, RoutePolicy, TenantPolicy};
 use approxrbf::data::{Dataset, SynthProfile, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
-use approxrbf::registry::ModelStore;
+use approxrbf::registry::{ModelStore, PublishOptions};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::Rng;
@@ -107,25 +107,45 @@ fn main() -> approxrbf::Result<()> {
     let mut tests: HashMap<&'static str, Dataset> = HashMap::new();
     for spec in &TENANTS {
         let (model, am, test) = train_tenant(spec, spec.seed)?;
-        let generation = store.publish(spec.id, &model, &am)?;
+        // Per-tenant policy travels inside the bundle: 'control-a' is
+        // pinned to the exact path (e.g. a tenant whose SLA forbids
+        // any approximation), 'adult' is published warm so its first
+        // request skips the cold decode.
+        let opts = match spec.id {
+            "control-a" => PublishOptions {
+                policy: Some(TenantPolicy {
+                    route: Some(RoutePolicy::AlwaysExact),
+                    ..Default::default()
+                }),
+                warm: false,
+            },
+            "adult" => PublishOptions { policy: None, warm: true },
+            _ => PublishOptions::default(),
+        };
+        let described = if opts.policy.is_some() {
+            " policy=always-exact"
+        } else if opts.warm {
+            " (warm)"
+        } else {
+            ""
+        };
+        let generation = store.publish_with(spec.id, &model, &am, opts)?;
         let info = store.peek(spec.id)?;
         println!(
-            "  published '{}' generation {generation} ({} B binary bundle)",
+            "  published '{}' generation {generation} ({} B binary \
+             bundle){described}",
             spec.id, info.size_bytes
         );
         tests.insert(spec.id, test);
     }
 
     // ---------- serve a mixed-tenant workload ----------
-    let coord = Coordinator::start_registry(
-        store.clone(),
-        CoordinatorConfig {
-            policy: RoutePolicy::Hybrid,
-            max_wait: Duration::from_micros(500),
-            swap_poll: Duration::from_millis(20),
-            ..Default::default()
-        },
-    )?;
+    let coord = Coordinator::builder()
+        .policy(RoutePolicy::Hybrid)
+        .max_wait(Duration::from_micros(500))
+        .swap_poll(Duration::from_millis(20))
+        .start_registry(store.clone())?;
+    let client = coord.client();
     println!(
         "\n[serve] {REQUESTS} requests round-robin across {} tenants…",
         TENANTS.len()
@@ -147,11 +167,12 @@ fn main() -> approxrbf::Result<()> {
                     *v *= s; // push ‖z‖² past the tenant's budget
                 }
             }
-            coord.submit_to(spec.id, z)?;
+            client.submit_to(spec.id, z)?;
             submitted += 1;
         }
-        // Mid-stream: republish tenant 'control-a' (a retrain) and ask
-        // the coordinator to pick it up — the hot swap.
+        // Mid-stream: republish tenant 'control-a' (a retrain, this
+        // time with no pinned policy) and ask the coordinator to pick
+        // it up — the hot swap changes weights AND route policy.
         if !swapped && submitted == REQUESTS / 2 {
             let spec = &TENANTS[0];
             let (model2, am2, _) = train_tenant(spec, spec.seed + 1000)?;
@@ -159,19 +180,21 @@ fn main() -> approxrbf::Result<()> {
             coord.refresh();
             println!(
                 "[swap] republished '{}' as generation {generation} \
-                 mid-stream ({} requests in flight)",
+                 (policy dropped) mid-stream ({} requests in flight)",
                 spec.id,
                 submitted - responses.len()
             );
             swapped = true;
         }
-        while let Some(r) = coord.recv(Duration::from_micros(0)) {
-            responses.push(r);
+        // Completions are typed; any fail-fast error aborts the demo
+        // with its cause instead of a silent drop.
+        while let Some(c) = client.recv(Duration::from_micros(0)) {
+            responses.push(c?);
         }
         if submitted >= REQUESTS {
             while responses.len() < REQUESTS {
-                match coord.recv(Duration::from_millis(200)) {
-                    Some(r) => responses.push(r),
+                match client.recv(Duration::from_millis(200)) {
+                    Some(c) => responses.push(c?),
                     None => {
                         return Err(approxrbf::Error::Other(
                             "lost responses".into(),
@@ -185,11 +208,30 @@ fn main() -> approxrbf::Result<()> {
 
     // ---------- report ----------
     // Invariants: every request answered exactly once; under Hybrid no
-    // approx-routed response may violate its tenant's bound.
+    // approx-routed response may violate its tenant's bound; and the
+    // published policy controlled 'control-a's route mix: all-exact
+    // while generation 1 (pinned) served, all-approx after the swap
+    // dropped the pin (its traffic is in-bound).
     assert_eq!(responses.len(), REQUESTS);
     assert!(responses
         .iter()
         .all(|r| r.route != Route::Approx || r.in_bound));
+    for r in &responses {
+        if &*r.model == "control-a" {
+            match r.generation {
+                1 => assert_eq!(
+                    r.route,
+                    Route::Exact,
+                    "generation 1 is policy-pinned to exact"
+                ),
+                _ => assert_eq!(
+                    r.route,
+                    Route::Approx,
+                    "post-swap control-a is hybrid and in-bound"
+                ),
+            }
+        }
+    }
     let mut generations: HashMap<(String, u64), usize> = HashMap::new();
     for r in &responses {
         *generations.entry((r.model.to_string(), r.generation)).or_insert(0) +=
@@ -209,9 +251,10 @@ fn main() -> approxrbf::Result<()> {
         println!("  {model:<12} gen {generation}: {count} responses");
     }
     println!(
-        "\n'control-a' traffic was served by generation 1 before the \
-         republish and generation 2 after it — no request was dropped \
-         or failed across the swap."
+        "\n'control-a' was served exact-only by generation 1 (its \
+         published TenantPolicy) and approx by generation 2 (policy \
+         dropped at republish) — the route mix followed the bundle, \
+         and no request was dropped or failed across the swap."
     );
     coord.shutdown()?;
     Ok(())

@@ -11,6 +11,7 @@ use approxrbf::approx::bounds::gamma_max_for_data;
 use approxrbf::approx::error_analysis;
 use approxrbf::data::SynthProfile;
 use approxrbf::linalg::MathBackend;
+use approxrbf::predictor::{ApproxPredictor, Predictor};
 use approxrbf::svm::predict::ExactPredictor;
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::Kernel;
@@ -78,5 +79,15 @@ fn main() -> approxrbf::Result<()> {
         am.text_size_bytes(),
         model.text_size_bytes() as f64 / am.text_size_bytes() as f64
     );
+
+    // 6. One evaluation surface over every backend: the Predictor
+    //    trait (the serving layer drives exact, approx and the XLA
+    //    engine through exactly this interface).
+    let approx_pred = ApproxPredictor::new(&am, MathBackend::Blocked)?;
+    println!("\n== unified Predictor surface ==");
+    for p in [&exact as &dyn Predictor, &approx_pred] {
+        let f0 = p.predict_one(test.x.row(0))?;
+        println!("{:<14} d={}  f(z_0) = {f0:.4}", p.kind(), p.dim());
+    }
     Ok(())
 }

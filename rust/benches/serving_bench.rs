@@ -8,9 +8,7 @@ use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::coordinator::{
-    Coordinator, CoordinatorConfig, ExecSpec, RoutePolicy,
-};
+use approxrbf::coordinator::{Coordinator, ExecSpec, RoutePolicy};
 use approxrbf::data::{SynthProfile, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
 use approxrbf::svm::smo::{train_csvc, SmoParams};
@@ -54,19 +52,15 @@ fn main() {
             RoutePolicy::AlwaysApprox,
             RoutePolicy::Hybrid,
         ] {
-            let coord = Coordinator::start(
-                model.clone(),
-                am.clone(),
-                CoordinatorConfig {
-                    policy,
-                    exec: exec.clone(),
-                    max_wait: Duration::from_micros(200),
-                    ..Default::default()
-                },
-            )
-            .unwrap();
+            let coord = Coordinator::builder()
+                .policy(policy)
+                .exec(exec.clone())
+                .max_wait(Duration::from_micros(200))
+                .start(model.clone(), am.clone())
+                .unwrap();
+            let client = coord.client();
             // Warm (compiles XLA executables on first batch).
-            let _ = coord
+            let _ = client
                 .predict_all(&test.x.rows_slice(0, 64))
                 .unwrap();
             let t0 = Instant::now();
@@ -74,14 +68,14 @@ fn main() {
             let mut received = 0usize;
             while received < REQUESTS {
                 if submitted < REQUESTS {
-                    coord
+                    client
                         .submit(test.x.row(submitted % test.len()).to_vec())
                         .unwrap();
                     submitted += 1;
-                    while coord.recv(Duration::from_micros(0)).is_some() {
+                    while client.recv(Duration::from_micros(0)).is_some() {
                         received += 1;
                     }
-                } else if coord.recv(Duration::from_millis(100)).is_some() {
+                } else if client.recv(Duration::from_millis(100)).is_some() {
                     received += 1;
                 }
             }

@@ -1,14 +1,19 @@
 //! Dynamic batcher: a bounded ingress queue drained by a batching loop
-//! that flushes on `max_batch` or `max_wait`, whichever first — the
-//! standard latency/throughput knob of serving systems. Backpressure is
-//! a hard queue cap: `submit` blocks until space frees (admission
-//! control rather than unbounded memory growth).
+//! that groups requests per model and flushes each tenant's group on
+//! *its* `max_batch` / `max_wait` (from the tenant's
+//! [`super::policy::TenantPolicy`], falling back to the coordinator
+//! defaults) — the standard latency/throughput knob of serving systems,
+//! made per-tenant. Backpressure is a hard queue cap: `submit` blocks
+//! until space frees (admission control rather than unbounded memory
+//! growth).
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::PredictRequest;
+use super::policy::PolicyTable;
+use super::request::{ModelId, PredictErrorKind, PredictRequest, WorkItem};
 
 /// Bounded MPMC ingress queue (Mutex + Condvar; std-only).
 pub struct IngressQueue {
@@ -110,6 +115,125 @@ impl IngressQueue {
     }
 }
 
+/// A tenant's requests waiting for their batch to fill.
+struct PendingGroup {
+    model: ModelId,
+    reqs: Vec<PredictRequest>,
+}
+
+impl PendingGroup {
+    /// Age of the oldest waiting request (drives the max_wait flush).
+    fn oldest_age(&self) -> Duration {
+        self.reqs
+            .first()
+            .map(|r| r.enqueued_at.elapsed())
+            .unwrap_or(Duration::ZERO)
+    }
+}
+
+/// The batcher loop: drain the ingress queue, group by model id, and
+/// flush each group when it reaches the tenant's `max_batch` or its
+/// oldest request has waited the tenant's `max_wait` — per-tenant
+/// limits come from `policies` (populated by the executor from each
+/// bundle's policy record), defaults from the coordinator config.
+///
+/// Runs on a dedicated thread until the ingress queue closes; then it
+/// flushes everything pending and forwards `Shutdown`.
+pub(crate) fn run_batcher(
+    ingress: Arc<IngressQueue>,
+    work_tx: Sender<WorkItem>,
+    policies: Arc<PolicyTable>,
+    default_max_batch: usize,
+    default_max_wait: Duration,
+) {
+    let mut pending: Vec<PendingGroup> = Vec::new();
+    loop {
+        // Wake for whichever pending group's max_wait expires first
+        // (or max_wait from idle, matching the pre-policy batcher).
+        let wait = pending
+            .iter()
+            .map(|g| {
+                policies
+                    .get(&g.model)
+                    .max_wait_or(default_max_wait)
+                    .saturating_sub(g.oldest_age())
+            })
+            .min()
+            .unwrap_or(default_max_wait)
+            .min(default_max_wait);
+        let popped = ingress.pop_batch(default_max_batch, wait);
+        let closed = popped.is_none();
+        if let Some(batch) = popped {
+            for req in batch {
+                match pending.iter_mut().find(|g| g.model == req.model) {
+                    Some(g) => g.reqs.push(req),
+                    None => pending.push(PendingGroup {
+                        model: req.model.clone(),
+                        reqs: vec![req],
+                    }),
+                }
+            }
+        }
+        let mut executor_gone = false;
+        let mut i = 0;
+        'flush: while i < pending.len() {
+            let policy = policies.get(&pending[i].model);
+            let max_batch = policy.max_batch_or(default_max_batch);
+            let max_wait = policy.max_wait_or(default_max_wait);
+            // Flush full chunks, then the remainder once it has aged
+            // out (or unconditionally on shutdown).
+            while pending[i].reqs.len() >= max_batch
+                || (!pending[i].reqs.is_empty()
+                    && (closed || pending[i].oldest_age() >= max_wait))
+            {
+                let take = pending[i].reqs.len().min(max_batch);
+                let chunk: Vec<PredictRequest> =
+                    pending[i].reqs.drain(..take).collect();
+                let item = WorkItem::Batch {
+                    model: pending[i].model.clone(),
+                    requests: chunk,
+                };
+                if work_tx.send(item).is_err() {
+                    executor_gone = true;
+                    break 'flush;
+                }
+            }
+            if pending[i].reqs.is_empty() {
+                pending.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if executor_gone {
+            fail_everything(&ingress, pending);
+            return;
+        }
+        if closed {
+            let _ = work_tx.send(WorkItem::Shutdown);
+            return;
+        }
+    }
+}
+
+/// The executor is gone (its work channel disconnected): close the
+/// ingress so producers stop blocking on a queue nobody drains, and
+/// fail every request still reachable — pending groups and anything
+/// left in the queue — with a [`Shutdown`](PredictErrorKind::Shutdown)
+/// completion so no caller hangs.
+fn fail_everything(ingress: &IngressQueue, pending: Vec<PendingGroup>) {
+    ingress.close();
+    for group in pending {
+        for req in group.reqs {
+            req.fail(PredictErrorKind::Shutdown);
+        }
+    }
+    while let Some(batch) = ingress.pop_batch(usize::MAX, Duration::ZERO) {
+        for req in batch {
+            req.fail(PredictErrorKind::Shutdown);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,11 +241,17 @@ mod tests {
     use std::time::Instant;
 
     fn req(id: u64) -> PredictRequest {
+        req_for(id, super::super::request::default_model_id())
+    }
+
+    fn req_for(id: u64, model: ModelId) -> PredictRequest {
+        let (reply, _rx) = std::sync::mpsc::channel();
         PredictRequest {
             id,
-            model: super::super::request::default_model_id(),
+            model,
             features: vec![0.0],
             enqueued_at: Instant::now(),
+            reply,
         }
     }
 
@@ -182,6 +312,87 @@ mod tests {
         assert_eq!(batch.len(), 1);
         let blocked_for = handle.join().unwrap();
         assert!(blocked_for >= Duration::from_millis(25), "{blocked_for:?}");
+    }
+
+    #[test]
+    fn run_batcher_groups_by_model_and_respects_policy_max_batch() {
+        use super::super::policy::TenantPolicy;
+        let ingress = Arc::new(IngressQueue::new(64));
+        let policies = Arc::new(PolicyTable::new());
+        let small: ModelId = Arc::from("small-batches");
+        policies.set(
+            small.clone(),
+            TenantPolicy { max_batch: Some(2), ..Default::default() },
+        );
+        let other: ModelId = Arc::from("default-batches");
+        for i in 0..6 {
+            ingress.push(req_for(i, small.clone()));
+        }
+        for i in 6..10 {
+            ingress.push(req_for(i, other.clone()));
+        }
+        let (work_tx, work_rx) = std::sync::mpsc::channel();
+        let b_ingress = ingress.clone();
+        let b_policies = policies.clone();
+        let handle = std::thread::spawn(move || {
+            run_batcher(
+                b_ingress,
+                work_tx,
+                b_policies,
+                256,
+                Duration::from_millis(5),
+            )
+        });
+        ingress.close();
+        let mut small_batches = Vec::new();
+        let mut other_batches = Vec::new();
+        loop {
+            match work_rx.recv().unwrap() {
+                WorkItem::Shutdown => break,
+                WorkItem::Batch { model, requests } => {
+                    assert!(
+                        requests.iter().all(|r| r.model == model),
+                        "mixed-model batch"
+                    );
+                    if model == small {
+                        small_batches.push(requests.len());
+                    } else {
+                        other_batches.push(requests.len());
+                    }
+                }
+            }
+        }
+        handle.join().unwrap();
+        // The policy capped the small tenant at 2 per batch; the other
+        // tenant flushed at the default (one batch of 4 on shutdown).
+        assert_eq!(small_batches, vec![2, 2, 2]);
+        assert_eq!(other_batches, vec![4]);
+    }
+
+    #[test]
+    fn run_batcher_flushes_all_pending_on_close() {
+        let ingress = Arc::new(IngressQueue::new(16));
+        let policies = Arc::new(PolicyTable::new());
+        for i in 0..3 {
+            ingress.push(req(i));
+        }
+        let (work_tx, work_rx) = std::sync::mpsc::channel();
+        let b = ingress.clone();
+        let handle = std::thread::spawn(move || {
+            run_batcher(b, work_tx, policies, 256, Duration::from_secs(5))
+        });
+        // Even with a huge max_wait, closing must flush what's pending.
+        std::thread::sleep(Duration::from_millis(20));
+        ingress.close();
+        let mut total = 0;
+        loop {
+            match work_rx.recv().unwrap() {
+                WorkItem::Shutdown => break,
+                WorkItem::Batch { requests, .. } => total += requests.len(),
+            }
+        }
+        handle.join().unwrap();
+        assert_eq!(total, 3);
     }
 
     #[test]

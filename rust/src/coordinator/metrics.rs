@@ -81,8 +81,10 @@ pub struct ModelMetricsSnapshot {
     pub served_approx: u64,
     pub served_exact: u64,
     pub out_of_bound: u64,
-    /// Requests the executor had to drop (unresolvable model or
-    /// per-batch execution failure) — these never got a response.
+    /// Requests the executor could not serve (unresolvable model,
+    /// dimension drift, per-batch execution failure). Each one was
+    /// completed with a fail-fast `Err(PredictError)` on its client's
+    /// channel; this counter is the operational aggregate.
     pub dropped: u64,
     pub mean_latency_s: f64,
 }
@@ -109,9 +111,8 @@ pub struct MetricsSnapshot {
     pub served_approx: u64,
     pub served_exact: u64,
     pub out_of_bound: u64,
-    /// Requests dropped without a response (see
-    /// [`ModelMetricsSnapshot::dropped`]); nonzero means callers
-    /// waiting synchronously on those ids will time out.
+    /// Requests failed fast with an `Err(PredictError)` completion
+    /// (see [`ModelMetricsSnapshot::dropped`]) instead of being served.
     pub dropped: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
@@ -156,7 +157,8 @@ impl Metrics {
         }
     }
 
-    /// Account for requests that were dropped without a response.
+    /// Account for requests completed with a fail-fast error instead
+    /// of a served prediction.
     pub fn record_dropped(&self, model: &ModelId, n: usize) {
         let mut g = self.inner.lock().unwrap();
         g.dropped += n as u64;

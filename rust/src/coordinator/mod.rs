@@ -3,19 +3,22 @@
 //! Architecture (vLLM-router-like, std-only threads):
 //!
 //! ```text
-//!  submit_to(id) ──▶ bounded ingress queue ──▶ batcher thread
-//!                                                │ (dynamic batching:
-//!                                                │  max_batch / max_wait;
-//!                                                │  groups by model id)
+//!  Client/Session ──▶ bounded ingress queue ──▶ batcher thread
+//!  (typed submit,                                │ (groups by model id;
+//!   per-client                                   │  flushes each tenant on
+//!   completion                                   │  ITS max_batch/max_wait —
+//!   channels)                                    │  TenantPolicy or default)
 //!                                                ▼
-//!                                executor thread (owns the predictors —
-//!                                native Loops/Blocked or the PJRT
-//!                                engine — resolves per-model state via
+//!                                executor thread (drives every substrate
+//!                                through the Predictor trait — native
+//!                                Loops/Blocked or the PJRT engine —
+//!                                resolves per-model state + policy via
 //!                                the registry, applies each model's
 //!                                Eq. 3.11 budget, splits approx/exact)
 //!                                                │
 //!                                                ▼
-//!                                 response channel ──▶ recv() / wait_all()
+//!                          per-request Completion: Ok(PredictResponse)
+//!                          or fail-fast Err(PredictError)
 //! ```
 //!
 //! The router turns the paper's run-time validity check (§3.1: "this
@@ -25,22 +28,37 @@
 //! accuracy never silently degrades outside the approximation's
 //! validity region.
 //!
-//! Multi-tenant serving: [`Coordinator::start_registry`] serves every
-//! model published in a [`crate::registry::ModelStore`]. Requests carry
-//! a model id, metrics are broken down per model, and republishing a
-//! bundle hot-swaps the served version between batches without dropping
-//! in-flight requests (see [`crate::registry`]).
+//! Multi-tenant serving: [`CoordinatorBuilder::start_registry`] serves
+//! every model published in a [`crate::registry::ModelStore`]. Requests
+//! carry a model id, metrics are broken down per model, each tenant can
+//! carry its own [`TenantPolicy`] (route pin, batch shape, residency
+//! hint) inside its `.arbf` bundle, and republishing a bundle hot-swaps
+//! the served version — weights and policy — between batches without
+//! dropping in-flight requests (see [`crate::registry`]).
+//!
+//! Error model: every submitted request is answered with exactly one
+//! [`Completion`]. Executor-side failures (unknown model, dimension
+//! drift across an out-of-band republish, a failing batch, shutdown)
+//! are delivered as typed [`PredictError`]s on the submitting client's
+//! channel — synchronous callers fail fast instead of waiting out a
+//! timeout.
 
 pub mod batcher;
 pub mod metrics;
+pub mod policy;
 pub mod request;
 pub mod router;
 pub mod server;
 pub mod worker;
 
 pub use metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
+pub use policy::TenantPolicy;
 pub use request::{
-    ModelId, PredictRequest, PredictResponse, Route, DEFAULT_MODEL,
+    Completion, ModelId, PredictError, PredictErrorKind, PredictRequest,
+    PredictResponse, Route, DEFAULT_MODEL,
 };
 pub use router::RoutePolicy;
-pub use server::{Coordinator, CoordinatorConfig, ExecSpec};
+pub use server::{
+    Client, Coordinator, CoordinatorBuilder, CoordinatorConfig, ExecSpec,
+    Session,
+};

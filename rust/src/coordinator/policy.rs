@@ -1,0 +1,145 @@
+//! Per-tenant serving policies.
+//!
+//! A [`TenantPolicy`] travels *with the model*: it is persisted as a
+//! kind-3 record inside the tenant's `.arbf` bundle (see
+//! `docs/FORMATS.md`), published via
+//! [`crate::registry::ModelStore::publish_with`] (or `registry publish
+//! --route …` on the CLI), resolved by the executor when it loads the
+//! tenant, and applied by both the batcher (batch shape) and the router
+//! (route choice). Republishing a bundle hot-swaps its policy exactly
+//! like it hot-swaps its weights.
+//!
+//! Every field is optional: an unset field falls back to the
+//! coordinator-wide default from
+//! [`crate::coordinator::CoordinatorConfig`], so a bundle with no
+//! policy record serves exactly as before.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+use std::time::Duration;
+
+use super::request::ModelId;
+use super::router::RoutePolicy;
+
+/// Per-model serving knobs, persisted in the model's `.arbf` bundle.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantPolicy {
+    /// Route override (`None` → the coordinator's policy). E.g. a tenant
+    /// that must never lose the exactness guarantee pins `AlwaysExact`.
+    pub route: Option<RoutePolicy>,
+    /// Max instances per executed batch for this tenant (`None` → the
+    /// coordinator's `max_batch`).
+    pub max_batch: Option<usize>,
+    /// Max time this tenant's requests wait for a batch to fill
+    /// (`None` → the coordinator's `max_wait`). Lower = lower latency,
+    /// smaller batches.
+    pub max_wait: Option<Duration>,
+    /// Executor-residency priority hint: when the executor's resident
+    /// set overflows `max_resident_models`, tenants with a *lower* hint
+    /// are evicted first (ties broken least-recently-used). 0 = default.
+    pub max_resident_hint: u32,
+}
+
+impl TenantPolicy {
+    /// True iff every field is unset (serving behavior identical to a
+    /// bundle with no policy record).
+    pub fn is_default(&self) -> bool {
+        *self == TenantPolicy::default()
+    }
+
+    pub fn route_or(&self, default: RoutePolicy) -> RoutePolicy {
+        self.route.unwrap_or(default)
+    }
+
+    pub fn max_batch_or(&self, default: usize) -> usize {
+        self.max_batch.unwrap_or(default).max(1)
+    }
+
+    pub fn max_wait_or(&self, default: Duration) -> Duration {
+        self.max_wait.unwrap_or(default)
+    }
+}
+
+/// Shared policy registry: written by the executor (the component that
+/// actually decodes bundles) when it loads or hot-swaps a tenant, read
+/// by the batcher on every flush decision. Absent ids resolve to the
+/// default policy, so the batcher never blocks on a tenant it has not
+/// seen decoded state for yet — the first batch of a fresh tenant is
+/// shaped by the coordinator-wide defaults, every later one by the
+/// tenant's own policy.
+#[derive(Debug, Default)]
+pub(crate) struct PolicyTable {
+    map: RwLock<HashMap<ModelId, TenantPolicy>>,
+}
+
+impl PolicyTable {
+    pub(crate) fn new() -> PolicyTable {
+        PolicyTable::default()
+    }
+
+    pub(crate) fn get(&self, model: &ModelId) -> TenantPolicy {
+        self.map
+            .read()
+            .unwrap()
+            .get(model)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    pub(crate) fn set(&self, model: ModelId, policy: TenantPolicy) {
+        self.map.write().unwrap().insert(model, policy);
+    }
+
+    /// Drop a tenant's entry (called when the executor evicts it, so
+    /// the table stays bounded by the resident set — a reloaded tenant
+    /// re-registers its policy on its next batch).
+    pub(crate) fn remove(&self, model: &ModelId) {
+        self.map.write().unwrap().remove(model);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fall_through() {
+        let p = TenantPolicy::default();
+        assert!(p.is_default());
+        assert_eq!(p.route_or(RoutePolicy::Hybrid), RoutePolicy::Hybrid);
+        assert_eq!(p.max_batch_or(256), 256);
+        assert_eq!(p.max_wait_or(Duration::from_millis(2)), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let p = TenantPolicy {
+            route: Some(RoutePolicy::AlwaysExact),
+            max_batch: Some(8),
+            max_wait: Some(Duration::from_micros(100)),
+            max_resident_hint: 3,
+        };
+        assert!(!p.is_default());
+        assert_eq!(p.route_or(RoutePolicy::Hybrid), RoutePolicy::AlwaysExact);
+        assert_eq!(p.max_batch_or(256), 8);
+        assert_eq!(p.max_wait_or(Duration::from_millis(2)), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn max_batch_floor_is_one() {
+        let p = TenantPolicy { max_batch: Some(0), ..Default::default() };
+        assert_eq!(p.max_batch_or(256), 1);
+    }
+
+    #[test]
+    fn table_absent_is_default() {
+        let t = PolicyTable::new();
+        let id: ModelId = std::sync::Arc::from("ghost");
+        assert!(t.get(&id).is_default());
+        t.set(
+            id.clone(),
+            TenantPolicy { max_batch: Some(4), ..Default::default() },
+        );
+        assert_eq!(t.get(&id).max_batch, Some(4));
+    }
+}

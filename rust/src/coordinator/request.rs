@@ -1,11 +1,20 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response/completion types flowing through the coordinator.
+//!
+//! Every submitted request is answered with exactly one [`Completion`]:
+//! `Ok(PredictResponse)` when it was served, `Err(PredictError)` when it
+//! could not be — unknown model, dimension drift across a hot swap,
+//! executor failure, or shutdown. Errors are delivered on the same
+//! channel as successes, so callers fail fast instead of waiting out a
+//! timeout (the pre-redesign behavior, where executor-side drops were
+//! visible only as a `dropped_requests` metric).
 
+use std::sync::mpsc::Sender;
 use std::time::{Duration, Instant};
 
 pub use crate::registry::ModelId;
 
 /// Model id used by the single-model [`super::Coordinator::start`] path
-/// and by [`super::Coordinator::submit`].
+/// and by [`super::Client::submit`].
 pub const DEFAULT_MODEL: &str = "default";
 
 pub(crate) fn default_model_id() -> ModelId {
@@ -30,7 +39,93 @@ impl Route {
     }
 }
 
-/// An inference request (one instance, addressed to one model).
+/// The one-per-request outcome: a served prediction or a typed failure.
+pub type Completion = std::result::Result<PredictResponse, PredictError>;
+
+/// Why a request failed. Carried inside [`PredictError`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PredictErrorKind {
+    /// The model id could not be resolved — not served by this
+    /// coordinator, not in the registry, or its bundle became
+    /// unreadable between submit and execution.
+    UnknownModel { detail: String },
+    /// The instance's feature dimension disagrees with the model's.
+    DimMismatch { got: usize, want: usize },
+    /// The executor failed to evaluate the batch (e.g. a failing swap
+    /// left unusable state, or an XLA artifact was missing).
+    Exec { detail: String },
+    /// The coordinator shut down before the request completed.
+    Shutdown,
+}
+
+impl std::fmt::Display for PredictErrorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredictErrorKind::UnknownModel { detail } => {
+                write!(f, "unknown model: {detail}")
+            }
+            PredictErrorKind::DimMismatch { got, want } => {
+                write!(f, "dimension mismatch: instance dim {got} vs model dim {want}")
+            }
+            PredictErrorKind::Exec { detail } => {
+                write!(f, "execution failed: {detail}")
+            }
+            PredictErrorKind::Shutdown => {
+                write!(f, "coordinator is shut down")
+            }
+        }
+    }
+}
+
+/// A request that could not be served, attributed to the request id and
+/// model that failed so callers can correlate it with their submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PredictError {
+    /// Id the failed request was assigned at submit.
+    pub id: u64,
+    /// Model the request addressed.
+    pub model: ModelId,
+    pub kind: PredictErrorKind,
+}
+
+impl PredictError {
+    pub(crate) fn new(
+        id: u64,
+        model: ModelId,
+        kind: PredictErrorKind,
+    ) -> PredictError {
+        PredictError { id, model, kind }
+    }
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {} for model '{}': {}", self.id, self.model, self.kind)
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// Lossy conversion for legacy call sites that return [`crate::Error`]:
+/// the error class is preserved (`InvalidArg` / `Shape` / `Other`) but
+/// the typed kind is flattened into the message.
+impl From<PredictError> for crate::Error {
+    fn from(e: PredictError) -> crate::Error {
+        let msg = e.to_string();
+        match e.kind {
+            PredictErrorKind::UnknownModel { .. } => {
+                crate::Error::InvalidArg(msg)
+            }
+            PredictErrorKind::DimMismatch { .. } => crate::Error::Shape(msg),
+            PredictErrorKind::Exec { .. } | PredictErrorKind::Shutdown => {
+                crate::Error::Other(msg)
+            }
+        }
+    }
+}
+
+/// An inference request (one instance, addressed to one model),
+/// carrying the reply handle its completion is delivered on.
 #[derive(Clone, Debug)]
 pub struct PredictRequest {
     pub id: u64,
@@ -38,6 +133,17 @@ pub struct PredictRequest {
     pub model: ModelId,
     pub features: Vec<f32>,
     pub enqueued_at: Instant,
+    /// Where this request's [`Completion`] goes (the submitting
+    /// [`super::Client`]'s or [`super::Session`]'s channel).
+    pub(crate) reply: Sender<Completion>,
+}
+
+impl PredictRequest {
+    /// Deliver a failure completion for this request (consumes it).
+    pub(crate) fn fail(self, kind: PredictErrorKind) {
+        let err = PredictError::new(self.id, self.model.clone(), kind);
+        let _ = self.reply.send(Err(err));
+    }
 }
 
 /// A served prediction.
@@ -86,5 +192,65 @@ mod tests {
         let b: ModelId = std::sync::Arc::from(String::from("tenant-1"));
         assert_eq!(a, b);
         assert_eq!(default_model_id(), std::sync::Arc::from(DEFAULT_MODEL));
+    }
+
+    #[test]
+    fn predict_error_display_names_request_and_model() {
+        let e = PredictError::new(
+            7,
+            std::sync::Arc::from("alpha"),
+            PredictErrorKind::DimMismatch { got: 3, want: 8 },
+        );
+        let s = e.to_string();
+        assert!(s.contains("request 7"), "{s}");
+        assert!(s.contains("alpha"), "{s}");
+        assert!(s.contains("dim 3"), "{s}");
+    }
+
+    #[test]
+    fn predict_error_maps_onto_legacy_error_classes() {
+        let mid: ModelId = std::sync::Arc::from("m");
+        let cases: [(PredictErrorKind, fn(&crate::Error) -> bool); 4] = [
+            (
+                PredictErrorKind::UnknownModel { detail: "x".into() },
+                |e| matches!(e, crate::Error::InvalidArg(_)),
+            ),
+            (
+                PredictErrorKind::DimMismatch { got: 1, want: 2 },
+                |e| matches!(e, crate::Error::Shape(_)),
+            ),
+            (
+                PredictErrorKind::Exec { detail: "boom".into() },
+                |e| matches!(e, crate::Error::Other(_)),
+            ),
+            (PredictErrorKind::Shutdown, |e| {
+                matches!(e, crate::Error::Other(_))
+            }),
+        ];
+        for (kind, check) in cases {
+            let legacy: crate::Error =
+                PredictError::new(0, mid.clone(), kind).into();
+            assert!(check(&legacy), "{legacy}");
+        }
+    }
+
+    #[test]
+    fn fail_delivers_error_completion() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = PredictRequest {
+            id: 3,
+            model: default_model_id(),
+            features: vec![0.0],
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        req.fail(PredictErrorKind::Shutdown);
+        match rx.recv().unwrap() {
+            Err(e) => {
+                assert_eq!(e.id, 3);
+                assert_eq!(e.kind, PredictErrorKind::Shutdown);
+            }
+            Ok(_) => panic!("expected an error completion"),
+        }
     }
 }

@@ -18,7 +18,26 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
+    /// Shim kept for one release: prefer `s.parse::<RoutePolicy>()`
+    /// (the [`std::str::FromStr`] impl below, the single name table).
     pub fn parse(s: &str) -> crate::Result<Self> {
+        s.parse()
+    }
+
+    /// Canonical name; [`std::fmt::Display`] delegates here.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::AlwaysApprox => "approx",
+            RoutePolicy::AlwaysExact => "exact",
+            RoutePolicy::Hybrid => "hybrid",
+        }
+    }
+}
+
+impl std::str::FromStr for RoutePolicy {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "approx" | "always-approx" => Ok(RoutePolicy::AlwaysApprox),
             "exact" | "always-exact" => Ok(RoutePolicy::AlwaysExact),
@@ -28,13 +47,11 @@ impl RoutePolicy {
             ))),
         }
     }
+}
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            RoutePolicy::AlwaysApprox => "approx",
-            RoutePolicy::AlwaysExact => "exact",
-            RoutePolicy::Hybrid => "hybrid",
-        }
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -98,11 +115,24 @@ mod tests {
 
     #[test]
     fn policy_parse() {
-        assert_eq!(RoutePolicy::parse("hybrid").unwrap(), RoutePolicy::Hybrid);
+        assert_eq!("hybrid".parse::<RoutePolicy>().unwrap(), RoutePolicy::Hybrid);
         assert_eq!(
-            RoutePolicy::parse("EXACT").unwrap(),
+            "EXACT".parse::<RoutePolicy>().unwrap(),
             RoutePolicy::AlwaysExact
         );
-        assert!(RoutePolicy::parse("x").is_err());
+        assert!("x".parse::<RoutePolicy>().is_err());
+        // The legacy shim delegates to FromStr.
+        assert_eq!(RoutePolicy::parse("bound").unwrap(), RoutePolicy::Hybrid);
+    }
+
+    #[test]
+    fn policy_display_roundtrips_through_fromstr() {
+        for p in [
+            RoutePolicy::AlwaysApprox,
+            RoutePolicy::AlwaysExact,
+            RoutePolicy::Hybrid,
+        ] {
+            assert_eq!(p.to_string().parse::<RoutePolicy>().unwrap(), p);
+        }
     }
 }

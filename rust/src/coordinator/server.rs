@@ -1,18 +1,24 @@
-//! The coordinator: wires ingress queue → batcher → executor → response
-//! channel, owns the threads, and exposes the public serving API
-//! ([`Coordinator::submit`] / [`Coordinator::submit_to`] /
-//! [`Coordinator::recv`] / [`Coordinator::predict_all`]).
+//! The coordinator: wires ingress queue → batcher → executor → per-client
+//! completion channels, owns the threads, and exposes the serving API.
 //!
-//! Two ways to start one:
+//! The public surface (since the `Predictor`/client redesign):
 //!
-//! * [`Coordinator::start`] — a single in-memory (exact, approx) pair
-//!   served under the id [`DEFAULT_MODEL`] (the original single-tenant
-//!   path; unchanged semantics).
-//! * [`Coordinator::start_registry`] — multi-tenant serving over a
-//!   [`ModelStore`]: requests address models by id, state is resolved
-//!   lazily, and republished bundles hot-swap without dropping
-//!   in-flight requests ([`Coordinator::refresh`] forces the check;
-//!   `swap_poll` bounds how stale a tenant can get otherwise).
+//! * [`CoordinatorBuilder`] — configure and start a coordinator over one
+//!   in-memory model pair ([`CoordinatorBuilder::start`]) or a whole
+//!   registry ([`CoordinatorBuilder::start_registry`]).
+//! * [`Client`] — a cloneable submission handle. Every clone has its own
+//!   completion channel, so independent callers never steal each
+//!   other's results. Completions are [`Completion`]s:
+//!   `Ok(PredictResponse)` or a fail-fast `Err(PredictError)` (unknown
+//!   model, dimension drift across a swap, execution failure, shutdown).
+//! * [`Session`] — a scoped batch of submissions on its own private
+//!   channel; [`Session::wait_all`] returns completions in submission
+//!   order.
+//!
+//! The original `Coordinator::submit`/`submit_to`/`recv`/`predict_all`
+//! methods remain as thin shims over an internal [`Client`] for one
+//! release (see the deprecation notes on each); new code should hold a
+//! [`Client`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,23 +34,30 @@ use crate::registry::ModelStore;
 use crate::svm::SvmModel;
 use crate::{Error, Result};
 
-use super::batcher::IngressQueue;
+use super::batcher::{run_batcher, IngressQueue};
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::policy::PolicyTable;
 use super::request::{
-    ModelId, PredictRequest, PredictResponse, WorkItem, DEFAULT_MODEL,
+    Completion, ModelId, PredictError, PredictErrorKind, PredictRequest,
+    PredictResponse, WorkItem, DEFAULT_MODEL,
 };
 use super::router::RoutePolicy;
 use super::worker::{ModelSource, WorkerParams};
 pub use super::worker::ExecSpec;
 
-/// Coordinator configuration.
+/// Coordinator configuration (the [`CoordinatorBuilder`] is the
+/// ergonomic way to assemble one).
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Default route policy; a tenant's
+    /// [`super::TenantPolicy`] overrides it per model.
     pub policy: RoutePolicy,
     pub exec: ExecSpec,
-    /// Max instances per routed batch.
+    /// Default max instances per routed batch (per-tenant override:
+    /// `TenantPolicy::max_batch`).
     pub max_batch: usize,
-    /// Max time the batcher waits to fill a batch.
+    /// Default max time a request waits for its batch to fill
+    /// (per-tenant override: `TenantPolicy::max_wait`).
     pub max_wait: Duration,
     /// Ingress queue capacity (backpressure threshold).
     pub queue_capacity: usize,
@@ -70,36 +83,74 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Per-model dimension checking at the submit boundary.
-enum DimCheck {
-    /// Single static model: one known dimension.
-    Static(usize),
-    /// Registry: dimensions read from bundle headers, cached.
-    Registry { store: Arc<ModelStore>, cache: Mutex<HashMap<String, usize>> },
+/// Fluent construction of a [`Coordinator`].
+///
+/// ```text
+/// let coord = CoordinatorBuilder::new()
+///     .policy(RoutePolicy::Hybrid)
+///     .max_batch(128)
+///     .start_registry(store)?;
+/// let client = coord.client();
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorBuilder {
+    config: CoordinatorConfig,
 }
 
-/// A running serving instance over one model or a whole registry.
-pub struct Coordinator {
-    ingress: Arc<IngressQueue>,
-    resp_rx: Mutex<Receiver<PredictResponse>>,
-    metrics: Arc<Metrics>,
-    next_id: AtomicU64,
-    dims: DimCheck,
-    /// Bumped by [`Coordinator::refresh`]; the executor revalidates
-    /// every tenant it touches after a bump.
-    epoch: Arc<AtomicU64>,
-    batcher: Option<JoinHandle<()>>,
-    worker: Option<JoinHandle<Result<()>>>,
-}
+impl CoordinatorBuilder {
+    pub fn new() -> CoordinatorBuilder {
+        CoordinatorBuilder::default()
+    }
 
-impl Coordinator {
+    /// Start from an explicit [`CoordinatorConfig`].
+    pub fn from_config(config: CoordinatorConfig) -> CoordinatorBuilder {
+        CoordinatorBuilder { config }
+    }
+
+    /// Default route policy (per-tenant policies override it).
+    pub fn policy(mut self, policy: RoutePolicy) -> Self {
+        self.config.policy = policy;
+        self
+    }
+
+    /// Execution substrate (native math backend or the PJRT engine).
+    pub fn exec(mut self, exec: ExecSpec) -> Self {
+        self.config.exec = exec;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.config.max_batch = max_batch.max(1);
+        self
+    }
+
+    pub fn max_wait(mut self, max_wait: Duration) -> Self {
+        self.config.max_wait = max_wait;
+        self
+    }
+
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.config.queue_capacity = capacity.max(1);
+        self
+    }
+
+    pub fn swap_poll(mut self, swap_poll: Duration) -> Self {
+        self.config.swap_poll = swap_poll;
+        self
+    }
+
+    pub fn max_resident_models(mut self, n: usize) -> Self {
+        self.config.max_resident_models = n.max(1);
+        self
+    }
+
     /// Spawn the serving threads over one in-memory model pair, served
     /// as [`DEFAULT_MODEL`]. `exact` and `approx` must describe the
-    /// same underlying model (the builder guarantees this).
+    /// same underlying model (the builder checks the dimensions agree).
     pub fn start(
+        self,
         exact: SvmModel,
         approx: ApproxModel,
-        config: CoordinatorConfig,
     ) -> Result<Coordinator> {
         if exact.dim() != approx.dim() {
             return Err(Error::Shape(format!(
@@ -112,122 +163,45 @@ impl Coordinator {
         Coordinator::start_inner(
             ModelSource::Static { exact, approx },
             DimCheck::Static(dim),
-            config,
+            self.config,
         )
     }
 
     /// Spawn the serving threads over a model registry: any id stored
-    /// in `store` can be addressed via [`Coordinator::submit_to`], and
-    /// republishing a bundle hot-swaps it.
+    /// in `store` can be addressed via [`Client::submit_to`], and
+    /// republishing a bundle hot-swaps its weights and policy.
     pub fn start_registry(
+        self,
         store: Arc<ModelStore>,
-        config: CoordinatorConfig,
     ) -> Result<Coordinator> {
         Coordinator::start_inner(
             ModelSource::Registry { store: store.clone() },
             DimCheck::Registry { store, cache: Mutex::new(HashMap::new()) },
-            config,
+            self.config,
         )
     }
+}
 
-    fn start_inner(
-        source: ModelSource,
-        dims: DimCheck,
-        config: CoordinatorConfig,
-    ) -> Result<Coordinator> {
-        let ingress = Arc::new(IngressQueue::new(config.queue_capacity));
-        let metrics = Arc::new(Metrics::new());
-        let epoch = Arc::new(AtomicU64::new(0));
-        let (work_tx, work_rx): (Sender<WorkItem>, Receiver<WorkItem>) =
-            mpsc::channel();
-        let (resp_tx, resp_rx) = mpsc::channel();
+/// Per-model dimension checking at the submit boundary.
+enum DimCheck {
+    /// Single static model: one known dimension.
+    Static(usize),
+    /// Registry: dimensions read from bundle headers, cached.
+    Registry { store: Arc<ModelStore>, cache: Mutex<HashMap<String, usize>> },
+}
 
-        // Executor thread (owns predictors / PJRT engine / tenants).
-        let worker_metrics = metrics.clone();
-        let worker_epoch = epoch.clone();
-        let spec = config.exec.clone();
-        let params = WorkerParams {
-            policy: config.policy,
-            swap_poll: config.swap_poll,
-            max_resident: config.max_resident_models,
-        };
-        let worker = std::thread::Builder::new()
-            .name("approxrbf-executor".into())
-            .spawn(move || {
-                let out = super::worker::run_worker(
-                    spec,
-                    source,
-                    params,
-                    worker_epoch,
-                    work_rx,
-                    resp_tx,
-                    worker_metrics,
-                );
-                if let Err(ref e) = out {
-                    log_warn!("executor exited with error: {e}");
-                }
-                out
-            })
-            .map_err(|e| Error::Other(format!("spawn executor: {e}")))?;
+/// State shared between the [`Coordinator`] and every [`Client`].
+struct Shared {
+    ingress: Arc<IngressQueue>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    dims: DimCheck,
+    /// Bumped by [`Coordinator::refresh`]; the executor revalidates
+    /// every tenant it touches after a bump.
+    epoch: Arc<AtomicU64>,
+}
 
-        // Batcher thread: drains ingress, groups by model id, forwards.
-        // Routing happens in the executor, which owns each model's
-        // Eq. 3.11 budget.
-        let b_ingress = ingress.clone();
-        let (max_batch, max_wait) = (config.max_batch, config.max_wait);
-        let batcher = std::thread::Builder::new()
-            .name("approxrbf-batcher".into())
-            .spawn(move || {
-                'run: loop {
-                    match b_ingress.pop_batch(max_batch, max_wait) {
-                        None => {
-                            let _ = work_tx.send(WorkItem::Shutdown);
-                            break;
-                        }
-                        Some(batch) if batch.is_empty() => continue,
-                        Some(batch) => {
-                            // Stable grouping by model id (a popped batch
-                            // holds a handful of tenants at most).
-                            let mut groups: Vec<(
-                                ModelId,
-                                Vec<PredictRequest>,
-                            )> = Vec::new();
-                            for req in batch {
-                                match groups
-                                    .iter_mut()
-                                    .find(|(m, _)| *m == req.model)
-                                {
-                                    Some((_, v)) => v.push(req),
-                                    None => groups
-                                        .push((req.model.clone(), vec![req])),
-                                }
-                            }
-                            for (model, requests) in groups {
-                                if work_tx
-                                    .send(WorkItem::Batch { model, requests })
-                                    .is_err()
-                                {
-                                    break 'run;
-                                }
-                            }
-                        }
-                    }
-                }
-            })
-            .map_err(|e| Error::Other(format!("spawn batcher: {e}")))?;
-
-        Ok(Coordinator {
-            ingress,
-            resp_rx: Mutex::new(resp_rx),
-            metrics,
-            next_id: AtomicU64::new(0),
-            dims,
-            epoch,
-            batcher: Some(batcher),
-            worker: Some(worker),
-        })
-    }
-
+impl Shared {
     /// Expected feature dimension for `model` (validated at submit so
     /// shape errors surface to the caller, not inside the executor).
     fn dim_of(&self, model: &str) -> Result<usize> {
@@ -257,126 +231,457 @@ impl Coordinator {
         }
     }
 
-    /// Enqueue one instance for [`DEFAULT_MODEL`]; returns its request
-    /// id. Blocks when the ingress queue is full (backpressure).
-    pub fn submit(&self, features: Vec<f32>) -> Result<u64> {
-        self.submit_to(DEFAULT_MODEL, features)
-    }
-
-    /// Enqueue one instance for a named model.
-    pub fn submit_to(&self, model: &str, features: Vec<f32>) -> Result<u64> {
-        let dim = self.dim_of(model)?;
-        if features.len() != dim {
-            return Err(Error::Shape(format!(
-                "instance dim {} vs model '{model}' dim {dim}",
-                features.len()
-            )));
-        }
+    /// Validate and enqueue one instance; its completion will be
+    /// delivered on `reply`.
+    fn submit_with(
+        &self,
+        model: &str,
+        features: Vec<f32>,
+        reply: &Sender<Completion>,
+    ) -> std::result::Result<u64, PredictError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mid: ModelId = Arc::from(model);
+        let dim = self.dim_of(model).map_err(|e| {
+            PredictError::new(
+                id,
+                mid.clone(),
+                PredictErrorKind::UnknownModel { detail: e.to_string() },
+            )
+        })?;
+        if features.len() != dim {
+            return Err(PredictError::new(
+                id,
+                mid,
+                PredictErrorKind::DimMismatch {
+                    got: features.len(),
+                    want: dim,
+                },
+            ));
+        }
         let ok = self.ingress.push(PredictRequest {
             id,
-            model: Arc::from(model),
+            model: mid.clone(),
             features,
             enqueued_at: Instant::now(),
+            reply: reply.clone(),
         });
         if ok {
             Ok(id)
         } else {
-            Err(Error::Other("coordinator is shut down".into()))
+            Err(PredictError::new(id, mid, PredictErrorKind::Shutdown))
         }
+    }
+}
+
+/// A cloneable submission handle onto a running [`Coordinator`].
+///
+/// Each `Client` (and each clone) owns a private completion channel:
+/// completions for its submissions are delivered there and nowhere
+/// else. Submission errors and executor-side failures are both typed
+/// [`PredictError`]s, so a request that cannot be served fails fast
+/// instead of timing out.
+pub struct Client {
+    shared: Arc<Shared>,
+    reply_tx: Sender<Completion>,
+    reply_rx: Mutex<Receiver<Completion>>,
+}
+
+impl Clone for Client {
+    /// A clone is an independent client: same coordinator, fresh
+    /// completion channel.
+    fn clone(&self) -> Client {
+        Client::new(self.shared.clone())
+    }
+}
+
+impl Client {
+    fn new(shared: Arc<Shared>) -> Client {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        Client { shared, reply_tx, reply_rx: Mutex::new(reply_rx) }
+    }
+
+    /// Enqueue one instance for [`DEFAULT_MODEL`]; returns its request
+    /// id. Blocks when the ingress queue is full (backpressure).
+    pub fn submit(
+        &self,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.submit_to(DEFAULT_MODEL, features)
+    }
+
+    /// Enqueue one instance for a named model.
+    pub fn submit_to(
+        &self,
+        model: &str,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.shared.submit_with(model, features, &self.reply_tx)
+    }
+
+    /// Receive this client's next completion (any order across
+    /// batches). `None` on timeout.
+    pub fn recv(&self, timeout: Duration) -> Option<Completion> {
+        self.reply_rx.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    /// Open a [`Session`]: a scoped group of submissions with its own
+    /// completion channel and ordered [`Session::wait_all`].
+    pub fn session(&self) -> Session<'_> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        Session { client: self, reply_tx, reply_rx, submitted: Vec::new() }
+    }
+
+    /// Synchronous convenience: submit every row of `z` to
+    /// [`DEFAULT_MODEL`] and return the responses ordered by row,
+    /// failing fast on the first [`PredictError`].
+    pub fn predict_all(&self, z: &Mat) -> Result<Vec<PredictResponse>> {
+        self.predict_all_for(DEFAULT_MODEL, z)
+    }
+
+    /// [`Client::predict_all`] addressed to a named model.
+    pub fn predict_all_for(
+        &self,
+        model: &str,
+        z: &Mat,
+    ) -> Result<Vec<PredictResponse>> {
+        if z.rows() == 0 {
+            return Err(Error::InvalidArg("empty batch".into()));
+        }
+        let mut session = self.session();
+        for r in 0..z.rows() {
+            session
+                .submit_to(model, z.row(r).to_vec())
+                .map_err(Error::from)?;
+        }
+        let completions = session.wait_all(Duration::from_secs(600))?;
+        completions
+            .into_iter()
+            .map(|c| c.map_err(Error::from))
+            .collect()
+    }
+
+    /// Serving metrics snapshot (shared across all clients).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.ingress.len()
+    }
+}
+
+/// A scoped batch of submissions with a private completion channel.
+///
+/// Submit through the session, then call [`Session::wait_all`] to get
+/// every completion in submission order — including fail-fast
+/// [`PredictError`]s for requests the executor could not serve.
+pub struct Session<'c> {
+    client: &'c Client,
+    reply_tx: Sender<Completion>,
+    reply_rx: Receiver<Completion>,
+    submitted: Vec<(u64, ModelId)>,
+}
+
+impl Session<'_> {
+    /// Submit one instance for [`DEFAULT_MODEL`].
+    pub fn submit(
+        &mut self,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.submit_to(DEFAULT_MODEL, features)
+    }
+
+    /// Submit one instance for a named model.
+    pub fn submit_to(
+        &mut self,
+        model: &str,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        let id =
+            self.client
+                .shared
+                .submit_with(model, features, &self.reply_tx)?;
+        self.submitted.push((id, Arc::from(model)));
+        Ok(id)
+    }
+
+    /// Number of submissions made through this session.
+    pub fn len(&self) -> usize {
+        self.submitted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.submitted.is_empty()
+    }
+
+    /// Receive this session's next completion (unordered). `None` on
+    /// timeout.
+    pub fn recv(&self, timeout: Duration) -> Option<Completion> {
+        self.reply_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Wait for every submission's completion and return them in
+    /// submission order. If the executor terminates, every still-
+    /// pending request completes as `Err(PredictError)` with
+    /// [`PredictErrorKind::Shutdown`] — callers never hang on a dead
+    /// coordinator. Errors with [`Error::Other`] only if `timeout`
+    /// elapses first.
+    pub fn wait_all(self, timeout: Duration) -> Result<Vec<Completion>> {
+        // Drop our own sender half first: once every in-flight
+        // request's reply clone is gone (executor/batcher dead), the
+        // receive loop must observe Disconnected rather than spin on
+        // timeouts until the deadline.
+        let Session { client: _, reply_tx, reply_rx, submitted } = self;
+        drop(reply_tx);
+        let n = submitted.len();
+        let mut index: HashMap<u64, usize> = HashMap::with_capacity(n);
+        for (i, (id, _)) in submitted.iter().enumerate() {
+            index.insert(*id, i);
+        }
+        let mut out: Vec<Option<Completion>> = vec![None; n];
+        let mut got = 0usize;
+        let deadline = Instant::now() + timeout;
+        while got < n {
+            let Some(remaining) =
+                deadline.checked_duration_since(Instant::now())
+            else {
+                return Err(Error::Other(format!(
+                    "session wait_all timed out with {got}/{n} completions"
+                )));
+            };
+            match reply_rx.recv_timeout(remaining) {
+                Ok(c) => {
+                    let id = match &c {
+                        Ok(resp) => resp.id,
+                        Err(e) => e.id,
+                    };
+                    if let Some(&i) = index.get(&id) {
+                        if out[i].is_none() {
+                            out[i] = Some(c);
+                            got += 1;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    for (i, (id, model)) in submitted.iter().enumerate() {
+                        if out[i].is_none() {
+                            out[i] = Some(Err(PredictError::new(
+                                *id,
+                                model.clone(),
+                                PredictErrorKind::Shutdown,
+                            )));
+                            got += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().map(Option::unwrap).collect())
+    }
+}
+
+/// A running serving instance over one model or a whole registry.
+///
+/// Owns the batcher/executor threads. Hand out [`Coordinator::client`]
+/// handles for submission; the coordinator itself keeps an internal
+/// legacy client so the original `submit`/`recv` methods keep working
+/// during the deprecation window.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    legacy: Client,
+    batcher: Option<JoinHandle<()>>,
+    worker: Option<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Fluent configuration entry point.
+    pub fn builder() -> CoordinatorBuilder {
+        CoordinatorBuilder::new()
+    }
+
+    /// Start over one in-memory model pair with an explicit config.
+    ///
+    /// Shim kept for one release: prefer
+    /// [`Coordinator::builder`] → [`CoordinatorBuilder::start`].
+    pub fn start(
+        exact: SvmModel,
+        approx: ApproxModel,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        CoordinatorBuilder::from_config(config).start(exact, approx)
+    }
+
+    /// Start over a model registry with an explicit config.
+    ///
+    /// Shim kept for one release: prefer
+    /// [`Coordinator::builder`] → [`CoordinatorBuilder::start_registry`].
+    pub fn start_registry(
+        store: Arc<ModelStore>,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        CoordinatorBuilder::from_config(config).start_registry(store)
+    }
+
+    fn start_inner(
+        source: ModelSource,
+        dims: DimCheck,
+        config: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let ingress = Arc::new(IngressQueue::new(config.queue_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let epoch = Arc::new(AtomicU64::new(0));
+        let policies = Arc::new(PolicyTable::new());
+        let (work_tx, work_rx): (Sender<WorkItem>, Receiver<WorkItem>) =
+            mpsc::channel();
+
+        // Executor thread (owns predictors / PJRT engine / tenants).
+        let worker_metrics = metrics.clone();
+        let worker_epoch = epoch.clone();
+        let spec = config.exec.clone();
+        let params = WorkerParams {
+            policy: config.policy,
+            swap_poll: config.swap_poll,
+            max_resident: config.max_resident_models,
+            policies: policies.clone(),
+        };
+        let worker = std::thread::Builder::new()
+            .name("approxrbf-executor".into())
+            .spawn(move || {
+                let out = super::worker::run_worker(
+                    spec,
+                    source,
+                    params,
+                    worker_epoch,
+                    work_rx,
+                    worker_metrics,
+                );
+                if let Err(ref e) = out {
+                    log_warn!("executor exited with error: {e}");
+                }
+                out
+            })
+            .map_err(|e| Error::Other(format!("spawn executor: {e}")))?;
+
+        // Batcher thread: drains ingress, groups by model id, flushes
+        // each group on its tenant's max_batch/max_wait. Routing
+        // happens in the executor, which owns each model's Eq. 3.11
+        // budget and route policy.
+        let b_ingress = ingress.clone();
+        let b_policies = policies.clone();
+        let (max_batch, max_wait) = (config.max_batch, config.max_wait);
+        let batcher = std::thread::Builder::new()
+            .name("approxrbf-batcher".into())
+            .spawn(move || {
+                run_batcher(b_ingress, work_tx, b_policies, max_batch, max_wait)
+            })
+            .map_err(|e| Error::Other(format!("spawn batcher: {e}")))?;
+
+        let shared = Arc::new(Shared {
+            ingress,
+            metrics,
+            next_id: AtomicU64::new(0),
+            dims,
+            epoch,
+        });
+        Ok(Coordinator {
+            legacy: Client::new(shared.clone()),
+            shared,
+            batcher: Some(batcher),
+            worker: Some(worker),
+        })
+    }
+
+    /// A new independent [`Client`] handle (cheap; cloneable).
+    pub fn client(&self) -> Client {
+        Client::new(self.shared.clone())
+    }
+
+    /// Enqueue one instance for [`DEFAULT_MODEL`] on the coordinator's
+    /// internal client.
+    ///
+    /// Shim kept for one release: prefer [`Client::submit`] via
+    /// [`Coordinator::client`] (typed [`PredictError`]s, per-client
+    /// completion channels).
+    pub fn submit(&self, features: Vec<f32>) -> Result<u64> {
+        self.legacy.submit(features).map_err(Error::from)
+    }
+
+    /// Enqueue one instance for a named model on the coordinator's
+    /// internal client.
+    ///
+    /// Shim kept for one release: prefer [`Client::submit_to`].
+    pub fn submit_to(&self, model: &str, features: Vec<f32>) -> Result<u64> {
+        self.legacy.submit_to(model, features).map_err(Error::from)
     }
 
     /// Force the executor to revalidate model generations before the
     /// next batch of each tenant (hot-swap without waiting out
     /// `swap_poll`). Also drops cached dimension checks.
     pub fn refresh(&self) {
-        if let DimCheck::Registry { cache, .. } = &self.dims {
+        if let DimCheck::Registry { cache, .. } = &self.shared.dims {
             cache.lock().unwrap().clear();
         }
-        self.epoch.fetch_add(1, Ordering::AcqRel);
+        self.shared.epoch.fetch_add(1, Ordering::AcqRel);
     }
 
-    /// Receive the next completed response (any order across batches).
+    /// Receive the next successful response on the coordinator's
+    /// internal client, silently skipping error completions (the
+    /// pre-redesign drop semantics).
+    ///
+    /// Shim kept for one release: prefer [`Client::recv`], which
+    /// surfaces [`PredictError`]s instead of hiding them.
     pub fn recv(&self, timeout: Duration) -> Option<PredictResponse> {
-        self.recv_inner(timeout).ok()
+        let deadline = Instant::now() + timeout;
+        loop {
+            // saturating: a zero timeout still polls for an already-
+            // delivered completion (the pre-redesign semantics).
+            let remaining =
+                deadline.saturating_duration_since(Instant::now());
+            match self.legacy.recv(remaining) {
+                Some(Ok(resp)) => return Some(resp),
+                Some(Err(_)) => continue,
+                None => return None,
+            }
+        }
     }
 
-    fn recv_inner(
-        &self,
-        timeout: Duration,
-    ) -> std::result::Result<PredictResponse, RecvTimeoutError> {
-        self.resp_rx.lock().unwrap().recv_timeout(timeout)
-    }
-
-    /// Convenience synchronous API: submit every row of `z` to
-    /// [`DEFAULT_MODEL`], wait for all responses, return them ordered
-    /// by row.
+    /// Synchronous convenience on the internal client: every row of
+    /// `z` to [`DEFAULT_MODEL`], responses ordered by row.
+    ///
+    /// Shim kept for one release: prefer [`Client::predict_all`].
     pub fn predict_all(&self, z: &Mat) -> Result<Vec<PredictResponse>> {
-        self.predict_all_for(DEFAULT_MODEL, z)
+        self.legacy.predict_all(z)
     }
 
     /// [`Coordinator::predict_all`] addressed to a named model.
+    ///
+    /// Shim kept for one release: prefer [`Client::predict_all_for`].
     pub fn predict_all_for(
         &self,
         model: &str,
         z: &Mat,
     ) -> Result<Vec<PredictResponse>> {
-        let n = z.rows();
-        let mut first_id = None;
-        for r in 0..n {
-            let id = self.submit_to(model, z.row(r).to_vec())?;
-            if r == 0 {
-                first_id = Some(id);
-            }
-        }
-        let first_id = first_id.ok_or_else(|| {
-            Error::InvalidArg("empty batch".into())
-        })?;
-        let mut out: Vec<Option<PredictResponse>> = vec![None; n];
-        let mut got = 0;
-        let deadline = Instant::now() + Duration::from_secs(600);
-        while got < n {
-            let remaining = deadline
-                .checked_duration_since(Instant::now())
-                .ok_or_else(|| Error::Other("predict_all timed out".into()))?;
-            // Poll in short steps so a slow first batch (e.g. lazy XLA
-            // compilation) is not misread as a dead executor; a truly
-            // disconnected channel (executor died) errors immediately.
-            let resp = match self
-                .recv_inner(remaining.min(Duration::from_millis(200)))
-            {
-                Ok(r) => r,
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => {
-                    return Err(Error::Other(
-                        "executor thread terminated".into(),
-                    ))
-                }
-            };
-            let idx = (resp.id - first_id) as usize;
-            if idx < n && out[idx].is_none() {
-                out[idx] = Some(resp);
-                got += 1;
-            }
-        }
-        Ok(out.into_iter().map(Option::unwrap).collect())
+        self.legacy.predict_all_for(model, z)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.shared.metrics.snapshot()
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.ingress.len()
+        self.shared.ingress.len()
     }
 
     /// Graceful shutdown: drain, stop threads, surface executor errors.
+    /// Clients that outlive the coordinator fail fast with
+    /// [`PredictErrorKind::Shutdown`].
     pub fn shutdown(mut self) -> Result<()> {
         self.shutdown_inner()
     }
 
     fn shutdown_inner(&mut self) -> Result<()> {
-        self.ingress.close();
+        self.shared.ingress.close();
         if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
@@ -450,6 +755,49 @@ mod tests {
     }
 
     #[test]
+    fn builder_client_and_session_roundtrip() {
+        let (model, am, ds) = setup(0.2);
+        let coord = Coordinator::builder()
+            .policy(RoutePolicy::Hybrid)
+            .max_batch(64)
+            .max_wait(Duration::from_millis(1))
+            .start(model, am.clone())
+            .unwrap();
+        let client = coord.client();
+        // Clones are independent clients (fresh channels).
+        let clone = client.clone();
+        let mut session = client.session();
+        let n = 25usize;
+        for r in 0..n {
+            session.submit(ds.x.row(r).to_vec()).unwrap();
+        }
+        assert_eq!(session.len(), n);
+        let completions =
+            session.wait_all(Duration::from_secs(30)).unwrap();
+        assert_eq!(completions.len(), n);
+        for (r, c) in completions.iter().enumerate() {
+            let resp = c.as_ref().expect("all in-bound requests succeed");
+            let (want, _) = am.decision_one(ds.x.row(r));
+            assert!((resp.decision - want).abs() < 1e-4, "row {r}");
+        }
+        // The clone's channel saw none of the session's completions.
+        assert!(clone.recv(Duration::from_millis(10)).is_none());
+        coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn client_outliving_coordinator_fails_fast_with_shutdown() {
+        let (model, am, ds) = setup(0.2);
+        let coord =
+            Coordinator::start(model, am, CoordinatorConfig::default())
+                .unwrap();
+        let client = coord.client();
+        coord.shutdown().unwrap();
+        let err = client.submit(ds.x.row(0).to_vec()).unwrap_err();
+        assert_eq!(err.kind, PredictErrorKind::Shutdown);
+    }
+
+    #[test]
     fn hybrid_escorts_out_of_bound_to_exact() {
         let (model, am, ds) = setup(1.5); // γ = 6× γ_max: all out of bound
         let coord =
@@ -472,12 +820,10 @@ mod tests {
             (RoutePolicy::AlwaysExact, Route::Exact),
             (RoutePolicy::AlwaysApprox, Route::Approx),
         ] {
-            let coord = Coordinator::start(
-                model.clone(),
-                am.clone(),
-                CoordinatorConfig { policy, ..Default::default() },
-            )
-            .unwrap();
+            let coord = Coordinator::builder()
+                .policy(policy)
+                .start(model.clone(), am.clone())
+                .unwrap();
             let responses =
                 coord.predict_all(&ds.x.rows_slice(0, 20)).unwrap();
             assert!(responses.iter().all(|r| r.route == want));
@@ -491,7 +837,14 @@ mod tests {
         let coord =
             Coordinator::start(model, am, CoordinatorConfig::default())
                 .unwrap();
+        // Legacy shim keeps the crate-level error class…
         assert!(coord.submit(vec![0.0; 99]).is_err());
+        // …and the client surfaces the typed kind.
+        let err = coord.client().submit(vec![0.0; 99]).unwrap_err();
+        assert!(
+            matches!(err.kind, PredictErrorKind::DimMismatch { got: 99, .. }),
+            "{err}"
+        );
         coord.shutdown().unwrap();
     }
 
@@ -504,6 +857,12 @@ mod tests {
         let err =
             coord.submit_to("ghost", ds.x.row(0).to_vec()).unwrap_err();
         assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+        let err =
+            coord.client().submit_to("ghost", ds.x.row(0).to_vec()).unwrap_err();
+        assert!(
+            matches!(err.kind, PredictErrorKind::UnknownModel { .. }),
+            "{err}"
+        );
         coord.shutdown().unwrap();
     }
 
@@ -512,7 +871,7 @@ mod tests {
         let (model, am, ds) = setup(0.2);
         let coord = Coordinator::start(model, am, CoordinatorConfig::default())
             .unwrap();
-        coord.ingress.close();
+        coord.shared.ingress.close();
         assert!(coord.submit(ds.x.row(0).to_vec()).is_err());
     }
 
@@ -550,15 +909,14 @@ mod tests {
         let (m_b, am_b, ds_b) = setup(0.25);
         store.publish("alpha", &m_a, &am_a).unwrap();
         store.publish("bravo", &m_b, &am_b).unwrap();
-        let coord = Coordinator::start_registry(
-            store,
-            CoordinatorConfig::default(),
-        )
-        .unwrap();
+        let coord = Coordinator::builder()
+            .start_registry(store)
+            .unwrap();
+        let client = coord.client();
         let sub_a = ds_a.x.rows_slice(0, 40);
         let sub_b = ds_b.x.rows_slice(0, 30);
-        let ra = coord.predict_all_for("alpha", &sub_a).unwrap();
-        let rb = coord.predict_all_for("bravo", &sub_b).unwrap();
+        let ra = client.predict_all_for("alpha", &sub_a).unwrap();
+        let rb = client.predict_all_for("bravo", &sub_b).unwrap();
         for (r, resp) in ra.iter().enumerate() {
             let (want, _) = am_a.decision_one(sub_a.row(r));
             assert!((resp.decision - want).abs() < 1e-4);
@@ -569,7 +927,7 @@ mod tests {
             let (want, _) = am_b.decision_one(sub_b.row(r));
             assert!((resp.decision - want).abs() < 1e-4);
         }
-        assert!(coord.submit_to("ghost", vec![0.0; 6]).is_err());
+        assert!(client.submit_to("ghost", vec![0.0; 6]).is_err());
         let snap = coord.metrics();
         assert_eq!(snap.per_model.len(), 2);
         assert_eq!(snap.per_model[0].id, "alpha");

@@ -1,38 +1,47 @@
 //! Executor thread: owns the predictors (native Rust backends or the
 //! PJRT engine — the engine is `!Send`, so it is constructed *inside*
-//! the thread), resolves per-model state through the registry, routes
-//! each batch with that model's Eq. 3.11 budget, and turns routed
-//! sub-batches into responses.
+//! the thread), resolves per-model state and [`TenantPolicy`] through
+//! the registry, routes each batch with that model's Eq. 3.11 budget
+//! and route policy, and completes every request exactly once — either
+//! `Ok(PredictResponse)` or a fail-fast `Err(PredictError)` (unknown
+//! model, dimension drift, execution failure).
+//!
+//! Every evaluation goes through the engine-agnostic
+//! [`crate::predictor::Predictor`] trait, so the executor is the same
+//! code for the exact evaluator, the approximated model and the XLA
+//! engine.
 //!
 //! Hot-swap protocol: for registry-backed coordinators the worker
 //! revalidates a model's on-disk generation when the coordinator's
 //! refresh epoch ticks, or at most every `swap_poll` otherwise (a
 //! 32-byte header read). A republished bundle swaps the resident
-//! `Arc<ModelEntry>` between batches; requests already in flight finish
-//! on whichever generation they resolved — nothing errors, nothing is
-//! dropped. If a reload fails, the worker keeps serving the generation
-//! it has (availability beats freshness for a serving node).
+//! `Arc<ModelEntry>` (weights *and* policy) between batches; requests
+//! already in flight finish on whichever generation they resolved.
+//! If a reload fails, the worker keeps serving the generation it has
+//! (availability beats freshness for a serving node).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::approx::ApproxModel;
 use crate::linalg::{Mat, MathBackend};
 use crate::log_warn;
+use crate::predictor::{ApproxPredictor, PredictOutput, Predictor};
 use crate::registry::{ModelEntry, ModelStore};
 use crate::svm::predict::ExactPredictor;
 use crate::svm::SvmModel;
 use crate::Result;
 
 use super::metrics::Metrics;
+use super::policy::{PolicyTable, TenantPolicy};
 use super::request::{
-    default_model_id, ModelId, PredictRequest, PredictResponse, Route,
-    WorkItem,
+    default_model_id, ModelId, PredictErrorKind, PredictRequest,
+    PredictResponse, Route, WorkItem,
 };
-use super::router::{RoutePolicy, Router};
+use super::router::Router;
 
 /// Which execution substrate the worker uses.
 #[derive(Clone, Debug)]
@@ -61,10 +70,14 @@ struct PreparedPair {
 
 /// Tuning knobs forwarded from [`super::server::CoordinatorConfig`].
 pub(crate) struct WorkerParams {
-    pub policy: RoutePolicy,
+    /// Default route policy (a tenant's [`TenantPolicy`] overrides it).
+    pub policy: super::router::RoutePolicy,
     pub swap_poll: Duration,
     /// LRU bound on fully resident tenants in this executor.
     pub max_resident: usize,
+    /// Shared per-tenant policy table the executor populates for the
+    /// batcher as it decodes bundles.
+    pub policies: Arc<PolicyTable>,
 }
 
 /// Per-model serving state resident in the executor.
@@ -105,6 +118,11 @@ impl Tenant {
             self.prepared = None;
         }
     }
+
+    /// Policy declared in the tenant's bundle (default when absent).
+    fn policy(&self) -> TenantPolicy {
+        self.entry.policy.unwrap_or_default()
+    }
 }
 
 enum Exec {
@@ -121,7 +139,6 @@ pub(crate) fn run_worker(
     params: WorkerParams,
     epoch: Arc<AtomicU64>,
     work_rx: Receiver<WorkItem>,
-    resp_tx: Sender<PredictResponse>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
     // The XLA engine must be created on this thread (PJRT handles are
@@ -142,6 +159,7 @@ pub(crate) fn run_worker(
                 generation: 0,
                 exact,
                 approx,
+                policy: None,
             });
             tenants.insert(
                 id,
@@ -163,35 +181,59 @@ pub(crate) fn run_worker(
         }
         let now_epoch = epoch.load(Ordering::Acquire);
         tick += 1;
-        let Some(tenant) = resolve(
+        let tenant = match resolve(
             &mut tenants,
             store.as_deref(),
             &model,
             &params,
             now_epoch,
             tick,
-        ) else {
-            // Unresolvable model (deleted between submit and execution):
-            // drop the batch with a warning rather than killing every
-            // other tenant on this executor.
-            metrics.record_dropped(&model, requests.len());
-            log_warn!(
-                "executor: dropping {} request(s) for unresolvable model \
-                 '{model}'",
-                requests.len()
-            );
-            continue;
+        ) {
+            Ok(t) => t,
+            Err(detail) => {
+                // Unresolvable model (deleted or corrupted between
+                // submit and execution): fail the batch fast — every
+                // caller gets a typed completion instead of waiting out
+                // its timeout — and keep serving other tenants.
+                metrics.record_dropped(&model, requests.len());
+                log_warn!(
+                    "executor: failing {} request(s) for unresolvable \
+                     model '{model}': {detail}",
+                    requests.len()
+                );
+                for req in requests {
+                    req.fail(PredictErrorKind::UnknownModel {
+                        detail: detail.clone(),
+                    });
+                }
+                continue;
+            }
         };
         let generation = tenant.entry.generation;
         let budget = tenant.entry.approx.znorm_sq_budget();
-        let router = Router { policy: params.policy, znorm_sq_budget: budget };
+        let route_policy = tenant.policy().route_or(params.policy);
+        let router = Router { policy: route_policy, znorm_sq_budget: budget };
+        // Submit-side dimension checks can go stale across an
+        // out-of-band republish; anything that no longer matches the
+        // resolved model's dimension fails fast here.
+        let want_dim = tenant.entry.dim();
         // Routing already computes each ‖z‖²; keep it alongside the
         // request so no path pays a second O(batch·d) norm pass.
         let mut approx_reqs = Vec::new();
         let mut approx_norms = Vec::new();
         let mut exact_reqs = Vec::new();
         let mut exact_norms = Vec::new();
+        let mut mismatched = 0usize;
         for req in requests {
+            if req.features.len() != want_dim {
+                mismatched += 1;
+                let got = req.features.len();
+                req.fail(PredictErrorKind::DimMismatch {
+                    got,
+                    want: want_dim,
+                });
+                continue;
+            }
             let (route, zn, _) = router.route(&req.features);
             match route {
                 Route::Approx => {
@@ -204,6 +246,13 @@ pub(crate) fn run_worker(
                 }
             }
         }
+        if mismatched > 0 {
+            metrics.record_dropped(&model, mismatched);
+            log_warn!(
+                "executor: failed {mismatched} request(s) for '{model}' \
+                 (dim != {want_dim})"
+            );
+        }
         for (route, reqs, routed_norms) in [
             (Route::Approx, approx_reqs, approx_norms),
             (Route::Exact, exact_reqs, exact_norms),
@@ -212,25 +261,32 @@ pub(crate) fn run_worker(
                 continue;
             }
             let z = batch_matrix(&reqs);
-            let (decisions, norms) = match execute(&exec, tenant, route, &z) {
+            let out = match execute(&exec, tenant, route, &z) {
                 Ok(out) => out,
                 Err(e) => {
                     // A per-batch failure (shape drift across a swap,
                     // artifact gaps on the XLA path) must not take the
-                    // executor down for every other tenant.
+                    // executor down for every other tenant — but the
+                    // callers hear about it immediately.
                     metrics.record_dropped(&model, reqs.len());
                     log_warn!(
-                        "executor: dropping {} request(s) for '{model}' \
+                        "executor: failing {} request(s) for '{model}' \
                          ({route:?}): {e}",
                         reqs.len()
                     );
+                    let detail = e.to_string();
+                    for req in reqs {
+                        req.fail(PredictErrorKind::Exec {
+                            detail: detail.clone(),
+                        });
+                    }
                     continue;
                 }
             };
             // Recorded only after a successful execute so served counts
-            // and throughput never include dropped work.
+            // and throughput never include failed work.
             metrics.record_batch(&model, route, reqs.len());
-            let norms = norms.unwrap_or(routed_norms);
+            let norms = out.znorms_sq.unwrap_or(routed_norms);
             for (i, req) in reqs.into_iter().enumerate() {
                 let in_bound = norms[i] < budget;
                 let latency = req.enqueued_at.elapsed();
@@ -239,28 +295,29 @@ pub(crate) fn run_worker(
                     id: req.id,
                     model: req.model,
                     generation,
-                    decision: decisions[i],
-                    label: if decisions[i] >= 0.0 { 1.0 } else { -1.0 },
+                    decision: out.decisions[i],
+                    label: if out.decisions[i] >= 0.0 { 1.0 } else { -1.0 },
                     route,
                     znorm_sq: norms[i],
                     in_bound,
                     latency,
                 };
-                if resp_tx.send(resp).is_err() {
-                    // Receiver dropped: coordinator is shutting down.
-                    return Ok(());
-                }
+                // A send failure only means this client/session went
+                // away; other requests in the batch still complete.
+                let _ = req.reply.send(Ok(resp));
             }
         }
     }
     Ok(())
 }
 
-/// Fetch (and, when due, revalidate) the tenant state for `model`.
-/// Resident tenants are LRU-bounded by `params.max_resident`: evicted
-/// ones reload through the store (which has its own bounded cache) on
-/// their next batch, so executor memory tracks the hot set, not every
-/// id ever served.
+/// Fetch (and, when due, revalidate) the tenant state for `model`,
+/// or a human-readable reason it cannot be resolved.
+/// Resident tenants are LRU-bounded by `params.max_resident` (tenants
+/// with a higher `max_resident_hint` are evicted last): evicted ones
+/// reload through the store (which has its own bounded cache) on their
+/// next batch, so executor memory tracks the hot set, not every id
+/// ever served.
 fn resolve<'t>(
     tenants: &'t mut HashMap<ModelId, Tenant>,
     store: Option<&ModelStore>,
@@ -268,25 +325,38 @@ fn resolve<'t>(
     params: &WorkerParams,
     now_epoch: u64,
     tick: u64,
-) -> Option<&'t mut Tenant> {
+) -> std::result::Result<&'t mut Tenant, String> {
     if !tenants.contains_key(model) {
-        let store = store?;
+        let Some(store) = store else {
+            return Err(format!(
+                "'{model}' is not served by this coordinator"
+            ));
+        };
         match store.load(model) {
             Ok(entry) => {
                 if tenants.len() >= params.max_resident.max(1) {
                     if let Some(victim) = tenants
                         .iter()
-                        .min_by_key(|(_, t)| t.last_used)
+                        .min_by_key(|(_, t)| {
+                            (t.policy().max_resident_hint, t.last_used)
+                        })
                         .map(|(k, _)| k.clone())
                     {
                         tenants.remove(&victim);
+                        // Keep the shared policy table bounded by the
+                        // resident set; a reload re-registers it.
+                        params.policies.remove(&victim);
                     }
                 }
+                params.policies.set(
+                    model.clone(),
+                    entry.policy.unwrap_or_default(),
+                );
                 tenants.insert(model.clone(), Tenant::new(entry, now_epoch));
             }
             Err(e) => {
                 log_warn!("executor: cannot load '{model}': {e}");
-                return None;
+                return Err(e.to_string());
             }
         }
     }
@@ -319,7 +389,13 @@ fn resolve<'t>(
                         );
                     } else {
                         match store.load(model) {
-                            Ok(entry) => tenant.swap(entry),
+                            Ok(entry) => {
+                                params.policies.set(
+                                    model.clone(),
+                                    entry.policy.unwrap_or_default(),
+                                );
+                                tenant.swap(entry);
+                            }
                             Err(e) => log_warn!(
                                 "executor: keeping '{model}' generation {} \
                                  (reload failed: {e})",
@@ -337,33 +413,33 @@ fn resolve<'t>(
             }
         }
     }
-    Some(tenant)
+    Ok(tenant)
 }
 
-/// Execute one routed sub-batch on the selected substrate.
+/// Execute one routed sub-batch through the [`Predictor`] trait on the
+/// selected substrate.
 fn execute(
     exec: &Exec,
     tenant: &mut Tenant,
     route: Route,
     z: &Mat,
-) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+) -> Result<PredictOutput> {
     match exec {
         Exec::Native(backend) => match route {
-            Route::Approx => tenant
-                .entry
-                .approx
-                .decision_batch(z, *backend)
-                .map(|(d, n)| (d, Some(n))),
+            Route::Approx => {
+                ApproxPredictor::new(&tenant.entry.approx, *backend)?
+                    .predict_batch(z)
+            }
             Route::Exact => {
                 // Norms are cached per generation on the tenant; the
                 // clone is an O(n_SV) memcpy, noise next to the
                 // O(batch·n_SV·d) evaluation.
-                let pred = ExactPredictor::with_norms(
+                ExactPredictor::with_norms(
                     &tenant.entry.exact,
                     tenant.sv_norms.clone(),
                     *backend,
-                )?;
-                pred.decision_batch(z).map(|d| (d, None))
+                )?
+                .predict_batch(z)
             }
         },
         #[cfg(feature = "pjrt")]
@@ -376,12 +452,18 @@ fn execute(
             }
             let prep = tenant.prepared.as_ref().unwrap();
             match route {
-                Route::Approx => engine
-                    .approx_predict(&prep.approx, z)
-                    .map(|(d, n)| (d, Some(n))),
-                Route::Exact => {
-                    engine.exact_predict(&prep.exact, z).map(|d| (d, None))
+                Route::Approx => {
+                    crate::runtime::EngineApproxPredictor::new(
+                        engine,
+                        &prep.approx,
+                    )
+                    .predict_batch(z)
                 }
+                Route::Exact => crate::runtime::EngineExactPredictor::new(
+                    engine,
+                    &prep.exact,
+                )
+                .predict_batch(z),
             }
         }
     }
@@ -401,22 +483,21 @@ mod tests {
     use super::*;
     use std::time::Instant;
 
+    fn req(id: u64, features: Vec<f32>) -> PredictRequest {
+        let (reply, _rx) = std::sync::mpsc::channel();
+        PredictRequest {
+            id,
+            model: default_model_id(),
+            features,
+            enqueued_at: Instant::now(),
+            reply,
+        }
+    }
+
     #[test]
     fn batch_matrix_layout() {
-        let reqs = vec![
-            PredictRequest {
-                id: 1,
-                model: default_model_id(),
-                features: vec![1.0, 2.0],
-                enqueued_at: Instant::now(),
-            },
-            PredictRequest {
-                id: 2,
-                model: default_model_id(),
-                features: vec![3.0, 4.0],
-                enqueued_at: Instant::now(),
-            },
-        ];
+        let reqs =
+            vec![req(1, vec![1.0, 2.0]), req(2, vec![3.0, 4.0])];
         let m = batch_matrix(&reqs);
         assert_eq!(m.rows(), 2);
         assert_eq!(m.row(1), &[3.0, 4.0]);

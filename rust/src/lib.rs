@@ -13,6 +13,53 @@
 //! plus the paper's run-time validity bound (Eq. 3.11) made operational
 //! as a *bound-aware hybrid router* in the serving layer.
 //!
+//! ## Quickstart: one trait to evaluate, one client to serve
+//!
+//! Every substrate — the exact evaluator, the approximated model, the
+//! cfg-gated XLA engine — implements the [`predictor::Predictor`]
+//! trait, so offline evaluation is uniform:
+//!
+//! ```text
+//! use approxrbf::predictor::{ApproxPredictor, Predictor};
+//! use approxrbf::svm::ExactPredictor;
+//!
+//! let exact  = ExactPredictor::new(&model, MathBackend::Blocked)?;
+//! let approx = ApproxPredictor::new(&am, MathBackend::Blocked)?;
+//! for p in [&exact as &dyn Predictor, &approx] {
+//!     let out = p.predict_batch(&z)?;          // decisions (+ ‖z‖²)
+//! }
+//! ```
+//!
+//! Online serving goes through [`coordinator::CoordinatorBuilder`] and
+//! a cloneable [`coordinator::Client`]; completions are
+//! `Result<PredictResponse, PredictError>`, so a request that cannot be
+//! served fails fast instead of timing out:
+//!
+//! ```text
+//! let coord = Coordinator::builder()
+//!     .policy(RoutePolicy::Hybrid)
+//!     .start_registry(store.clone())?;
+//! let client = coord.client();
+//! let mut session = client.session();
+//! session.submit_to("tenant-a", features)?;
+//! for completion in session.wait_all(timeout)? {
+//!     match completion {
+//!         Ok(resp) => println!("f(z) = {}", resp.decision),
+//!         Err(e) => eprintln!("failed fast: {e}"),   // typed PredictError
+//!     }
+//! }
+//! ```
+//!
+//! Per-tenant behavior (route pin, batch shape, residency) is a
+//! [`coordinator::TenantPolicy`] published inside the tenant's `.arbf`
+//! bundle via [`registry::ModelStore::publish_with`].
+//!
+//! *Deprecation note*: the pre-redesign surface —
+//! `Coordinator::submit`/`submit_to`/`recv`/`predict_all` and the
+//! `RoutePolicy::parse`/`MathBackend::parse` helpers — remains as thin
+//! shims for one release; new code should hold a `Client` and use
+//! `FromStr`/`Display`.
+//!
 //! ## Architecture (three layers, Python never on the request path)
 //!
 //! * **L1/L2** — JAX + Pallas kernels (`python/compile/`) AOT-lowered to
@@ -22,8 +69,11 @@
 //!   Rust hot loop; pure Rust fallback executors ([`linalg`],
 //!   [`svm::predict`]) provide the paper's LOOPS/“BLAS” axes and run
 //!   without artifacts.
-//! * **L3** — [`coordinator`]: request router, dynamic batcher,
-//!   bound-aware approx/exact hybrid routing, per-model metrics.
+//! * **L3** — [`coordinator`]: typed `Client`/`Session` handles over a
+//!   dynamic per-tenant batcher, bound-aware approx/exact hybrid
+//!   routing (every substrate behind the [`predictor::Predictor`]
+//!   trait), fail-fast `PredictError` completions, per-model metrics
+//!   and policies.
 //! * **Registry** — [`registry`]: a versioned, checksummed binary model
 //!   format (`.arbf`, see `docs/FORMATS.md`) and a directory-backed
 //!   [`registry::ModelStore`] with atomic publish + generation counters,
@@ -45,6 +95,7 @@ pub mod benchsuite;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod predictor;
 pub mod registry;
 pub mod runtime;
 pub mod svm;
@@ -112,13 +163,18 @@ pub type Result<T> = std::result::Result<T, Error>;
 pub mod prelude {
     pub use crate::approx::{ApproxModel, BoundReport};
     pub use crate::coordinator::{
-        Coordinator, CoordinatorConfig, RoutePolicy, DEFAULT_MODEL,
+        Client, Completion, Coordinator, CoordinatorBuilder,
+        CoordinatorConfig, PredictError, PredictErrorKind, PredictResponse,
+        RoutePolicy, Session, TenantPolicy, DEFAULT_MODEL,
     };
     pub use crate::data::{Dataset, SynthProfile};
     pub use crate::linalg::{Mat, MathBackend};
-    pub use crate::registry::{ModelStore, StoreEntryInfo};
+    pub use crate::predictor::{ApproxPredictor, PredictOutput, Predictor};
+    pub use crate::registry::{
+        ModelStore, PublishOptions, StoreConfig, StoreEntryInfo,
+    };
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::Engine;
-    pub use crate::svm::{Kernel, SmoParams, SvmModel};
+    pub use crate::svm::{ExactPredictor, Kernel, SmoParams, SvmModel};
     pub use crate::{Error, Result};
 }

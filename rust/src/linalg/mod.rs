@@ -33,7 +33,26 @@ pub enum MathBackend {
 }
 
 impl MathBackend {
+    /// Shim kept for one release: prefer `s.parse::<MathBackend>()`
+    /// (the [`std::str::FromStr`] impl below, the single name table).
     pub fn parse(s: &str) -> crate::Result<Self> {
+        s.parse()
+    }
+
+    /// Canonical name; [`std::fmt::Display`] delegates here.
+    pub fn name(&self) -> &'static str {
+        match self {
+            MathBackend::Loops => "loops",
+            MathBackend::Blocked => "blocked",
+            MathBackend::Xla => "xla",
+        }
+    }
+}
+
+impl std::str::FromStr for MathBackend {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "loops" => Ok(MathBackend::Loops),
             "blocked" | "blas" => Ok(MathBackend::Blocked),
@@ -43,13 +62,11 @@ impl MathBackend {
             ))),
         }
     }
+}
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            MathBackend::Loops => "loops",
-            MathBackend::Blocked => "blocked",
-            MathBackend::Xla => "xla",
-        }
+impl std::fmt::Display for MathBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
     }
 }
 
@@ -60,9 +77,11 @@ mod tests {
     #[test]
     fn backend_parse_roundtrip() {
         for b in [MathBackend::Loops, MathBackend::Blocked, MathBackend::Xla] {
-            assert_eq!(MathBackend::parse(b.name()).unwrap(), b);
+            assert_eq!(b.to_string().parse::<MathBackend>().unwrap(), b);
         }
-        assert_eq!(MathBackend::parse("BLAS").unwrap(), MathBackend::Blocked);
-        assert!(MathBackend::parse("atlas9").is_err());
+        assert_eq!("BLAS".parse::<MathBackend>().unwrap(), MathBackend::Blocked);
+        assert!("atlas9".parse::<MathBackend>().is_err());
+        // The legacy shim delegates to FromStr.
+        assert_eq!(MathBackend::parse("loops").unwrap(), MathBackend::Loops);
     }
 }

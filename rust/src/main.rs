@@ -10,8 +10,10 @@
 //! approxrbf predict     --model m.model|--approx m.approx --data t.txt
 //! approxrbf bound-check --data data.txt [--gamma 0.05]
 //! approxrbf serve       --profile control-like [--policy hybrid] [--xla]
-//! approxrbf registry    publish|list|serve --store dir [--id name]
-//!                       [--model m.model] [--approx m.approx]
+//! approxrbf registry    publish|list|serve|rollback --store dir [--id name]
+//!                       [--model m.model] [--approx m.approx] [--warm]
+//!                       [--route hybrid] [--tenant-max-batch N]
+//!                       [--tenant-max-wait-us N] [--resident-hint N]
 //! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
 //!                       [--scale full|quick] [--artifacts artifacts]
 //! approxrbf inspect     --model m.model|--approx m.approx|--arbf m.arbf
@@ -26,11 +28,11 @@ use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::ApproxModel;
 use approxrbf::benchsuite::{self, BenchContext, Scale};
 use approxrbf::coordinator::{
-    Coordinator, CoordinatorConfig, ExecSpec, RoutePolicy,
+    Coordinator, ExecSpec, RoutePolicy, TenantPolicy,
 };
 use approxrbf::data::{libsvm_format, SynthProfile};
 use approxrbf::linalg::MathBackend;
-use approxrbf::registry::{binfmt, ModelStore};
+use approxrbf::registry::{binfmt, ModelStore, PublishOptions};
 use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
@@ -82,8 +84,11 @@ fn usage() -> String {
                predict     predict with an exact or approximated model\n  \
                bound-check report γ_MAX for a dataset (Eq. 3.11)\n  \
                serve       run the bound-aware serving coordinator\n  \
-               registry    publish/list/serve .arbf model bundles\n              \
-               (registry publish --store dir --id name --model m.model)\n  \
+               registry    publish/list/serve/rollback .arbf model bundles\n              \
+               (publish --store dir --id name --model m.model\n               \
+               [--warm] [--route hybrid] [--tenant-max-batch N]\n               \
+               [--tenant-max-wait-us N] [--resident-hint N];\n              \
+               rollback --store dir --id name)\n  \
                bench       regenerate the paper's tables/figures\n  \
                inspect     describe a model file (text or .arbf)\n";
     doc.to_string()
@@ -137,7 +142,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_approximate(args: &Args) -> Result<()> {
     let model = SvmModel::load(Path::new(args.require("model")?))?;
-    let backend = MathBackend::parse(args.get_or("backend", "blocked"))?;
+    let backend: MathBackend = args.get_or("backend", "blocked").parse()?;
     let out = args.require("out")?;
     let t0 = std::time::Instant::now();
     let am = if backend == MathBackend::Xla {
@@ -164,12 +169,12 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let (dec, what) = if let Some(mp) = args.get("model") {
         let model = SvmModel::load(Path::new(mp))?;
-        let backend = MathBackend::parse(args.get_or("backend", "blocked"))?;
+        let backend: MathBackend = args.get_or("backend", "blocked").parse()?;
         let pred = ExactPredictor::new(&model, backend)?;
         (pred.decision_batch(&data.x)?, "exact")
     } else if let Some(ap) = args.get("approx") {
         let am = ApproxModel::load(Path::new(ap))?;
-        let backend = MathBackend::parse(args.get_or("backend", "blocked"))?;
+        let backend: MathBackend = args.get_or("backend", "blocked").parse()?;
         let (dec, norms) = am.decision_batch(&data.x, backend)?;
         let budget = am.znorm_sq_budget();
         let oob = norms.iter().filter(|&&n| n >= budget).count();
@@ -235,7 +240,7 @@ fn cmd_bound_check(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let profile = SynthProfile::parse(args.get_or("profile", "control-like"))?;
-    let policy = RoutePolicy::parse(args.get_or("policy", "hybrid"))?;
+    let policy: RoutePolicy = args.get_or("policy", "hybrid").parse()?;
     let seed = args.get_u64("seed", 42)?;
     let requests = args.get_usize("requests", 20_000)?;
     let scale = Scale::parse(args.get_or("scale", "quick"))?;
@@ -249,31 +254,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         ExecSpec::Native(MathBackend::Blocked)
     };
-    let coord = Coordinator::start(
-        case.model.clone(),
-        am,
-        CoordinatorConfig { policy, exec, ..Default::default() },
-    )?;
-    println!(
-        "serving {requests} requests through policy={} …",
-        policy.name()
-    );
+    let coord = Coordinator::builder()
+        .policy(policy)
+        .exec(exec)
+        .start(case.model.clone(), am)?;
+    let client = coord.client();
+    println!("serving {requests} requests through policy={policy} …");
     let mut served = 0usize;
     let t0 = std::time::Instant::now();
     let mut row = 0usize;
     while served < requests {
-        coord.submit(case.test.x.row(row % case.test.len()).to_vec())?;
+        client
+            .submit(case.test.x.row(row % case.test.len()).to_vec())
+            .map_err(Error::from)?;
         row += 1;
-        // Drain opportunistically to keep the pipeline flowing.
-        while coord.recv(Duration::from_micros(0)).is_some() {
+        // Drain opportunistically to keep the pipeline flowing;
+        // completions are typed, so a failure aborts with its cause
+        // instead of timing out.
+        while let Some(c) = client.recv(Duration::from_micros(0)) {
+            c.map_err(Error::from)?;
             served += 1;
         }
         if row >= requests {
             while served < requests {
-                if coord.recv(Duration::from_millis(100)).is_none() {
-                    return Err(Error::Other("lost responses".into()));
+                match client.recv(Duration::from_millis(100)) {
+                    None => {
+                        return Err(Error::Other("lost responses".into()))
+                    }
+                    Some(c) => {
+                        c.map_err(Error::from)?;
+                        served += 1;
+                    }
                 }
-                served += 1;
             }
         }
     }
@@ -385,6 +397,18 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                     a.gamma,
                     a.znorm_sq_budget()
                 ),
+                binfmt::ModelRecord::Policy(p) => println!(
+                    "  policy: route={} max_batch={} max_wait={} \
+                     resident_hint={}",
+                    p.route.map(|r| r.name()).unwrap_or("(default)"),
+                    p.max_batch
+                        .map(|n| n.to_string())
+                        .unwrap_or_else(|| "(default)".into()),
+                    p.max_wait
+                        .map(|w| format!("{}µs", w.as_micros()))
+                        .unwrap_or_else(|| "(default)".into()),
+                    p.max_resident_hint
+                ),
             }
         }
     } else {
@@ -395,7 +419,30 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `registry publish|list|serve` — manage and serve `.arbf` bundles.
+/// Assemble a [`TenantPolicy`] from `registry publish` flags; `None`
+/// when no policy flag was given (the bundle then carries no kind-3
+/// record).
+fn tenant_policy_from_args(args: &Args) -> Result<Option<TenantPolicy>> {
+    let route = match args.get("route") {
+        Some(s) => Some(s.parse::<RoutePolicy>()?),
+        None => None,
+    };
+    let max_batch = match args.get_usize("tenant-max-batch", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let max_wait = match args.get_u64("tenant-max-wait-us", 0)? {
+        0 => None,
+        us => Some(Duration::from_micros(us)),
+    };
+    let max_resident_hint = args.get_u64("resident-hint", 0)? as u32;
+    let policy =
+        TenantPolicy { route, max_batch, max_wait, max_resident_hint };
+    Ok(if policy.is_default() { None } else { Some(policy) })
+}
+
+/// `registry publish|list|serve|rollback` — manage and serve `.arbf`
+/// bundles.
 fn cmd_registry(args: &Args) -> Result<()> {
     let action = args
         .positionals
@@ -414,11 +461,19 @@ fn cmd_registry(args: &Args) -> Result<()> {
                     build_approx_model(&model, MathBackend::Blocked)?
                 }
             };
-            let generation = store.publish(id, &model, &am)?;
+            let opts = PublishOptions {
+                policy: tenant_policy_from_args(args)?,
+                warm: args.has_flag("warm"),
+            };
+            let described = match &opts.policy {
+                Some(p) => format!(" policy={p:?}"),
+                None => String::new(),
+            };
+            let generation = store.publish_with(id, &model, &am, opts)?;
             let info = store.peek(id)?;
             println!(
                 "published '{id}' generation {generation}: d={} n_sv={} \
-                 {} B -> {}",
+                 {} B{described} -> {}",
                 info.dim,
                 info.n_sv,
                 info.size_bytes,
@@ -437,20 +492,47 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 "d".to_string(),
                 "n_sv".to_string(),
                 "bytes".to_string(),
+                "policy".to_string(),
+                "archived".to_string(),
             ]];
+            let archived_counts =
+                store.archived_counts().unwrap_or_default();
             for i in &infos {
+                let archived =
+                    archived_counts.get(&i.id).copied().unwrap_or(0);
                 rows.push(vec![
                     i.id.clone(),
                     i.generation.to_string(),
                     i.dim.to_string(),
                     i.n_sv.to_string(),
                     i.size_bytes.to_string(),
+                    if i.has_policy { "yes" } else { "-" }.to_string(),
+                    archived.to_string(),
                 ]);
             }
             print!("{}", markdown_table(&rows));
         }
+        "rollback" => {
+            let id = args
+                .get("id")
+                .or_else(|| args.positionals.get(1).map(|s| s.as_str()))
+                .ok_or_else(|| {
+                    Error::InvalidArg(
+                        "registry rollback needs --id (or a positional id)"
+                            .into(),
+                    )
+                })?;
+            let before = store.peek(id)?.generation;
+            let generation = store.rollback(id)?;
+            println!(
+                "rolled '{id}' back: generation {before} -> {generation} \
+                 (payload of the newest archive; serving nodes pick it up \
+                 as an ordinary hot swap)"
+            );
+        }
         "serve" => {
-            let policy = RoutePolicy::parse(args.get_or("policy", "hybrid"))?;
+            let policy: RoutePolicy =
+                args.get_or("policy", "hybrid").parse()?;
             let requests = args.get_usize("requests", 10_000)?;
             let seed = args.get_u64("seed", 42)?;
             let infos = store.list()?;
@@ -461,14 +543,13 @@ fn cmd_registry(args: &Args) -> Result<()> {
             }
             println!(
                 "serving {requests} synthetic requests across {} model(s), \
-                 policy={}…",
-                infos.len(),
-                policy.name()
+                 policy={policy}…",
+                infos.len()
             );
-            let coord = Coordinator::start_registry(
-                store.clone(),
-                CoordinatorConfig { policy, ..Default::default() },
-            )?;
+            let coord = Coordinator::builder()
+                .policy(policy)
+                .start_registry(store.clone())?;
+            let client = coord.client();
             let mut rng = Rng::new(seed);
             let t0 = std::time::Instant::now();
             let mut submitted = 0usize;
@@ -480,20 +561,26 @@ fn cmd_registry(args: &Args) -> Result<()> {
                     let z: Vec<f32> = (0..info.dim)
                         .map(|_| (rng.normal() * scale) as f32)
                         .collect();
-                    coord.submit_to(&info.id, z)?;
+                    client.submit_to(&info.id, z).map_err(Error::from)?;
                     submitted += 1;
                 }
-                while coord.recv(Duration::from_micros(0)).is_some() {
+                while let Some(c) = client.recv(Duration::from_micros(0)) {
+                    c.map_err(Error::from)?;
                     served += 1;
                 }
                 if submitted >= requests {
                     while served < requests {
-                        if coord.recv(Duration::from_millis(100)).is_none() {
-                            return Err(Error::Other(
-                                "lost responses".into(),
-                            ));
+                        match client.recv(Duration::from_millis(100)) {
+                            None => {
+                                return Err(Error::Other(
+                                    "lost responses".into(),
+                                ))
+                            }
+                            Some(c) => {
+                                c.map_err(Error::from)?;
+                                served += 1;
+                            }
                         }
-                        served += 1;
                     }
                 }
             }
@@ -509,7 +596,8 @@ fn cmd_registry(args: &Args) -> Result<()> {
         }
         other => {
             return Err(Error::InvalidArg(format!(
-                "unknown registry action '{other}' (publish|list|serve)"
+                "unknown registry action '{other}' \
+                 (publish|list|serve|rollback)"
             )))
         }
     }

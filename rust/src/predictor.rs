@@ -1,0 +1,206 @@
+//! The engine-agnostic prediction surface.
+//!
+//! The paper's value proposition is a *drop-in replacement* for exact
+//! RBF-SVM evaluation — so the crate exposes exactly one way to ask
+//! "decision values for this batch, please": the [`Predictor`] trait.
+//! Three substrates implement it:
+//!
+//! * [`crate::svm::ExactPredictor`] — the `O(n_SV·d)` exact evaluator
+//!   (paper's Table 2 "exact" rows, Loops/Blocked math backends);
+//! * [`ApproxPredictor`] — the `O(d²)` approximated model (Eq. 3.8),
+//!   which also reports each instance's `‖z‖²` so the Eq. 3.11 validity
+//!   check is free;
+//! * `runtime::EngineApproxPredictor` / `runtime::EngineExactPredictor`
+//!   (behind the `pjrt` feature) — the AOT-compiled XLA executables.
+//!
+//! The serving layer ([`crate::coordinator`]) routes every batch through
+//! this trait, so new backends (sharded, quantized, remote) slot in
+//! behind a stable surface. Callers that want trait objects can: the
+//! trait is object-safe (`&dyn Predictor` works).
+
+use crate::linalg::Mat;
+use crate::linalg::MathBackend;
+use crate::approx::ApproxModel;
+use crate::{Error, Result};
+
+/// Result of one batched evaluation.
+#[derive(Clone, Debug)]
+pub struct PredictOutput {
+    /// Decision values f(z) (or f̂(z)), one per input row.
+    pub decisions: Vec<f32>,
+    /// `‖z‖²` per row when the substrate computes it as a by-product
+    /// (the approx path always does — paper §3.1: the bound check is
+    /// free there). `None` when the substrate does not surface norms.
+    pub znorms_sq: Option<Vec<f32>>,
+}
+
+impl PredictOutput {
+    /// Predicted ±1 labels (`sign(decision)`, with `0 → +1`).
+    pub fn labels(&self) -> Vec<f32> {
+        crate::svm::predict::labels_from_decisions(&self.decisions)
+    }
+}
+
+/// One uniform evaluation interface over every backend.
+///
+/// Contract: `predict_batch` returns exactly `z.rows()` decisions (and,
+/// when present, exactly `z.rows()` norms), or a typed error — it never
+/// silently truncates. Inputs whose column count disagrees with
+/// [`Predictor::dim`] must be rejected with [`Error::Shape`].
+pub trait Predictor {
+    /// Feature dimension this predictor evaluates.
+    fn dim(&self) -> usize;
+
+    /// Short substrate label for diagnostics/metrics (e.g.
+    /// `"exact-native"`, `"approx-native"`, `"approx-xla"`).
+    fn kind(&self) -> &'static str;
+
+    /// Decision values for every row of `z`.
+    fn predict_batch(&self, z: &Mat) -> Result<PredictOutput>;
+
+    /// Convenience: one instance. Default goes through
+    /// [`Predictor::predict_batch`] with a 1-row matrix.
+    fn predict_one(&self, z: &[f32]) -> Result<f32> {
+        let m = Mat::from_rows(&[z])?;
+        let out = self.predict_batch(&m)?;
+        out.decisions.first().copied().ok_or_else(|| {
+            Error::Other(format!(
+                "{}: empty output for a 1-row batch",
+                self.kind()
+            ))
+        })
+    }
+}
+
+/// The approximated model bound to a math backend — the `O(d²)` fast
+/// path as a [`Predictor`].
+///
+/// Borrows the model: the serving executor keeps models resident behind
+/// `Arc`s and constructs this (cheap, two words) per batch.
+pub struct ApproxPredictor<'m> {
+    model: &'m ApproxModel,
+    backend: MathBackend,
+}
+
+impl<'m> ApproxPredictor<'m> {
+    /// `backend` must be a native backend; the XLA substrate lives in
+    /// `runtime::EngineApproxPredictor`.
+    pub fn new(
+        model: &'m ApproxModel,
+        backend: MathBackend,
+    ) -> Result<ApproxPredictor<'m>> {
+        if backend == MathBackend::Xla {
+            return Err(Error::InvalidArg(
+                "use runtime::EngineApproxPredictor for the XLA backend"
+                    .into(),
+            ));
+        }
+        Ok(ApproxPredictor { model, backend })
+    }
+
+    pub fn model(&self) -> &ApproxModel {
+        self.model
+    }
+}
+
+impl Predictor for ApproxPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn kind(&self) -> &'static str {
+        "approx-native"
+    }
+
+    fn predict_batch(&self, z: &Mat) -> Result<PredictOutput> {
+        let (decisions, norms) = self.model.decision_batch(z, self.backend)?;
+        Ok(PredictOutput { decisions, znorms_sq: Some(norms) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::predict::ExactPredictor;
+    use crate::svm::smo::{train_csvc, SmoParams};
+    use crate::svm::Kernel;
+
+    fn trained() -> (crate::svm::SvmModel, ApproxModel, crate::data::Dataset)
+    {
+        let ds = crate::data::synth::two_gaussians(3, 150, 5, 1.5);
+        let scaled = crate::data::UnitNormScaler.apply_dataset(&ds);
+        let gamma = crate::approx::gamma_max_for_data(&scaled) * 0.8;
+        let (m, _) =
+            train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
+                .unwrap();
+        let am =
+            crate::approx::build_approx_model(&m, MathBackend::Blocked)
+                .unwrap();
+        (m, am, scaled)
+    }
+
+    #[test]
+    fn trait_objects_agree_with_direct_eval() {
+        let (model, am, ds) = trained();
+        let exact = ExactPredictor::new(&model, MathBackend::Blocked).unwrap();
+        let approx = ApproxPredictor::new(&am, MathBackend::Blocked).unwrap();
+        let predictors: Vec<&dyn Predictor> = vec![&exact, &approx];
+        let z = ds.x.rows_slice(0, 20);
+        for p in predictors {
+            assert_eq!(p.dim(), ds.x.cols());
+            let out = p.predict_batch(&z).unwrap();
+            assert_eq!(out.decisions.len(), z.rows());
+            for r in 0..z.rows() {
+                let want = match p.kind() {
+                    "exact-native" => model.decision_one(z.row(r)),
+                    _ => am.decision_one(z.row(r)).0,
+                };
+                assert!(
+                    (out.decisions[r] - want).abs() < 1e-3,
+                    "{} row {r}: {} vs {want}",
+                    p.kind(),
+                    out.decisions[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approx_predictor_reports_norms() {
+        let (_, am, ds) = trained();
+        let p = ApproxPredictor::new(&am, MathBackend::Loops).unwrap();
+        let z = ds.x.rows_slice(0, 8);
+        let out = p.predict_batch(&z).unwrap();
+        let norms = out.znorms_sq.expect("approx path must report ‖z‖²");
+        assert_eq!(norms.len(), 8);
+        for (r, &n) in norms.iter().enumerate() {
+            let want = crate::linalg::vecops::norm_sq(z.row(r));
+            assert!((n - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn predict_one_default_matches_batch() {
+        let (_, am, ds) = trained();
+        let p = ApproxPredictor::new(&am, MathBackend::Blocked).unwrap();
+        let z = ds.x.row(0);
+        let one = p.predict_one(z).unwrap();
+        let (want, _) = am.decision_one(z);
+        assert!((one - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn xla_backend_rejected() {
+        let (_, am, _) = trained();
+        assert!(ApproxPredictor::new(&am, MathBackend::Xla).is_err());
+    }
+
+    #[test]
+    fn labels_sign_convention() {
+        let out = PredictOutput {
+            decisions: vec![0.25, -0.5, 0.0],
+            znorms_sq: None,
+        };
+        assert_eq!(out.labels(), vec![1.0, -1.0, 1.0]);
+    }
+}

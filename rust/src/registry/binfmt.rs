@@ -1,7 +1,9 @@
 //! `.arbf` — the approxrbf binary model artifact format.
 //!
 //! A compact, versioned, checksummed little-endian encoding for
-//! [`SvmModel`] and [`ApproxModel`], sitting alongside the text codecs
+//! [`SvmModel`], [`ApproxModel`] and the per-tenant
+//! [`TenantPolicy`] (kind-3 record, advertised by the
+//! [`FLAG_HAS_POLICY`] header bit), sitting alongside the text codecs
 //! (LIBSVM text / `approx_type maclaurin2_rbf`) that Table 3 measures.
 //! Design goals, in order: **integrity** (magic + version + per-record
 //! CRC-32, truncation-safe reads, strict non-finite rejection — every
@@ -16,7 +18,10 @@
 //! validation ([`SvmModel::check_finite`] /
 //! [`ApproxModel::check_finite`]) and report [`Error::Corrupt`].
 
+use std::time::Duration;
+
 use crate::approx::ApproxModel;
+use crate::coordinator::{RoutePolicy, TenantPolicy};
 use crate::linalg::Mat;
 use crate::svm::{Kernel, SvmModel};
 use crate::util::crc32::crc32;
@@ -31,8 +36,17 @@ pub const FILE_HEADER_LEN: usize = 32;
 /// Fixed per-record header length in bytes.
 pub const RECORD_HEADER_LEN: usize = 16;
 
+/// Header flag bit: the file carries a kind-3 tenant-policy record.
+/// Lives in the (previously reserved, ignored-on-read) trailing header
+/// word, so version-1 readers that predate policies still read these
+/// files.
+pub const FLAG_HAS_POLICY: u64 = 1;
+/// Version of the kind-3 policy record payload.
+pub const POLICY_PAYLOAD_VERSION: u16 = 1;
+
 const KIND_SVM: u16 = 1;
 const KIND_APPROX: u16 = 2;
+const KIND_POLICY: u16 = 3;
 /// Sanity cap: a file holds at most this many records (bundles use 2).
 const MAX_RECORDS: u16 = 16;
 /// Sanity cap on the dense element count (`n_sv × d`) of a decoded SVM
@@ -54,6 +68,15 @@ pub struct ArbfHeader {
     pub dim: u32,
     /// Support-vector count of the exact record (0 if none).
     pub n_sv: u32,
+    /// Flag bits (see [`FLAG_HAS_POLICY`]); unknown bits are ignored.
+    pub flags: u64,
+}
+
+impl ArbfHeader {
+    /// True iff the header advertises a kind-3 policy record.
+    pub fn has_policy(&self) -> bool {
+        self.flags & FLAG_HAS_POLICY != 0
+    }
 }
 
 /// One decoded record.
@@ -61,6 +84,18 @@ pub struct ArbfHeader {
 pub enum ModelRecord {
     Svm(SvmModel),
     Approx(ApproxModel),
+    /// Per-tenant serving policy (kind 3).
+    Policy(TenantPolicy),
+}
+
+/// A fully decoded registry bundle.
+#[derive(Clone, Debug)]
+pub struct Bundle {
+    pub generation: u64,
+    pub exact: SvmModel,
+    pub approx: ApproxModel,
+    /// Per-tenant serving policy, when the bundle carries one.
+    pub policy: Option<TenantPolicy>,
 }
 
 // ---------------------------------------------------------------------
@@ -137,10 +172,32 @@ fn approx_payload(am: &ApproxModel) -> Result<Vec<u8>> {
     Ok(out)
 }
 
+/// Serialize a [`TenantPolicy`] as a kind-3 record payload.
+/// `0` encodes "unset" for every optional field (a zero `max_wait` is
+/// meaningless operationally, so nothing is lost).
+fn policy_payload(p: &TenantPolicy) -> Vec<u8> {
+    let mut out = Vec::with_capacity(19);
+    push_u16(&mut out, POLICY_PAYLOAD_VERSION);
+    out.push(match p.route {
+        None => 0u8,
+        Some(RoutePolicy::AlwaysApprox) => 1,
+        Some(RoutePolicy::AlwaysExact) => 2,
+        Some(RoutePolicy::Hybrid) => 3,
+    });
+    push_u32(&mut out, p.max_batch.unwrap_or(0) as u32);
+    push_u64(
+        &mut out,
+        p.max_wait.map(|d| d.as_micros() as u64).unwrap_or(0),
+    );
+    push_u32(&mut out, p.max_resident_hint);
+    out
+}
+
 fn write_file(
     generation: u64,
     dim: usize,
     n_sv: usize,
+    flags: u64,
     records: Vec<(u16, Vec<u8>)>,
 ) -> Vec<u8> {
     let total: usize = records
@@ -154,7 +211,7 @@ fn write_file(
     push_u64(&mut out, generation);
     push_u32(&mut out, dim as u32);
     push_u32(&mut out, n_sv as u32);
-    push_u64(&mut out, 0); // reserved
+    push_u64(&mut out, flags);
     for (kind, payload) in records {
         push_u16(&mut out, kind);
         push_u16(&mut out, 0); // reserved
@@ -172,6 +229,7 @@ pub fn encode_svm(model: &SvmModel) -> Result<Vec<u8>> {
         0,
         model.dim(),
         model.n_sv(),
+        0,
         vec![(KIND_SVM, payload)],
     ))
 }
@@ -179,7 +237,7 @@ pub fn encode_svm(model: &SvmModel) -> Result<Vec<u8>> {
 /// Encode a standalone approximated model (one record, generation 0).
 pub fn encode_approx(am: &ApproxModel) -> Result<Vec<u8>> {
     let payload = approx_payload(am)?;
-    Ok(write_file(0, am.dim(), 0, vec![(KIND_APPROX, payload)]))
+    Ok(write_file(0, am.dim(), 0, 0, vec![(KIND_APPROX, payload)]))
 }
 
 /// Encode a registry bundle: the exact model followed by its
@@ -188,6 +246,17 @@ pub fn encode_bundle(
     generation: u64,
     exact: &SvmModel,
     approx: &ApproxModel,
+) -> Result<Vec<u8>> {
+    encode_bundle_with(generation, exact, approx, None)
+}
+
+/// [`encode_bundle`] plus an optional kind-3 [`TenantPolicy`] record
+/// (advertised via [`FLAG_HAS_POLICY`] in the header).
+pub fn encode_bundle_with(
+    generation: u64,
+    exact: &SvmModel,
+    approx: &ApproxModel,
+    policy: Option<&TenantPolicy>,
 ) -> Result<Vec<u8>> {
     if exact.dim() != approx.dim() {
         return Err(Error::Shape(format!(
@@ -198,11 +267,18 @@ pub fn encode_bundle(
     }
     let sp = svm_payload(exact)?;
     let ap = approx_payload(approx)?;
+    let mut records = vec![(KIND_SVM, sp), (KIND_APPROX, ap)];
+    let mut flags = 0u64;
+    if let Some(p) = policy {
+        records.push((KIND_POLICY, policy_payload(p)));
+        flags |= FLAG_HAS_POLICY;
+    }
     Ok(write_file(
         generation,
         exact.dim(),
         exact.n_sv(),
-        vec![(KIND_SVM, sp), (KIND_APPROX, ap)],
+        flags,
+        records,
     ))
 }
 
@@ -289,8 +365,46 @@ pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
     let generation = r.u64("generation")?;
     let dim = r.u32("dim")?;
     let n_sv = r.u32("n_sv")?;
-    let _reserved = r.u64("reserved header bytes")?;
-    Ok(ArbfHeader { version, n_records, generation, dim, n_sv })
+    let flags = r.u64("header flags")?;
+    Ok(ArbfHeader { version, n_records, generation, dim, n_sv, flags })
+}
+
+fn decode_policy_payload(payload: &[u8]) -> Result<TenantPolicy> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let version = r.u16("policy version")?;
+    if version != POLICY_PAYLOAD_VERSION {
+        return Err(Error::Corrupt(format!(
+            "unsupported policy record version {version} (this build \
+             reads version {POLICY_PAYLOAD_VERSION})"
+        )));
+    }
+    let route = match r.u8("policy route")? {
+        0 => None,
+        1 => Some(RoutePolicy::AlwaysApprox),
+        2 => Some(RoutePolicy::AlwaysExact),
+        3 => Some(RoutePolicy::Hybrid),
+        t => {
+            return Err(Error::Corrupt(format!(
+                "unknown policy route tag {t}"
+            )))
+        }
+    };
+    let max_batch = match r.u32("policy max_batch")? {
+        0 => None,
+        n => Some(n as usize),
+    };
+    let max_wait = match r.u64("policy max_wait_us")? {
+        0 => None,
+        us => Some(Duration::from_micros(us)),
+    };
+    let max_resident_hint = r.u32("policy max_resident_hint")?;
+    if r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "policy record: {} trailing payload bytes",
+            payload.len() - r.pos
+        )));
+    }
+    Ok(TenantPolicy { route, max_batch, max_wait, max_resident_hint })
 }
 
 fn decode_svm_payload(payload: &[u8], want_dim: u32) -> Result<SvmModel> {
@@ -420,6 +534,9 @@ pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
             KIND_APPROX => {
                 ModelRecord::Approx(decode_approx_payload(payload, hdr.dim)?)
             }
+            KIND_POLICY => {
+                ModelRecord::Policy(decode_policy_payload(payload)?)
+            }
             k => {
                 return Err(Error::Corrupt(format!(
                     "record {i}: unknown kind {k}"
@@ -452,19 +569,43 @@ pub fn decode_approx(bytes: &[u8]) -> Result<ApproxModel> {
     }
 }
 
-/// Decode a registry bundle: `(generation, exact, approx)`.
-pub fn decode_bundle(bytes: &[u8]) -> Result<(u64, SvmModel, ApproxModel)> {
+/// Decode a registry bundle including its optional policy record.
+pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
     let (hdr, records) = decode(bytes)?;
-    let mut it = records.into_iter();
-    match (it.next(), it.next()) {
-        (Some(ModelRecord::Svm(e)), Some(ModelRecord::Approx(a))) => {
-            Ok((hdr.generation, e, a))
+    let mut exact = None;
+    let mut approx = None;
+    let mut policy = None;
+    for rec in records {
+        match rec {
+            ModelRecord::Svm(m) if exact.is_none() => exact = Some(m),
+            ModelRecord::Approx(a) if approx.is_none() => approx = Some(a),
+            ModelRecord::Policy(p) if policy.is_none() => policy = Some(p),
+            _ => {
+                return Err(Error::Corrupt(
+                    "bundle holds a duplicate record kind".into(),
+                ))
+            }
         }
+    }
+    match (exact, approx) {
+        (Some(exact), Some(approx)) => Ok(Bundle {
+            generation: hdr.generation,
+            exact,
+            approx,
+            policy,
+        }),
         _ => Err(Error::Corrupt(
-            "bundle must hold an svm record followed by an approx record"
-                .into(),
+            "bundle must hold an svm record and an approx record".into(),
         )),
     }
+}
+
+/// Decode a registry bundle: `(generation, exact, approx)`.
+/// Shim kept for one release: prefer [`decode_bundle_full`], which also
+/// surfaces the tenant policy.
+pub fn decode_bundle(bytes: &[u8]) -> Result<(u64, SvmModel, ApproxModel)> {
+    let b = decode_bundle_full(bytes)?;
+    Ok((b.generation, b.exact, b.approx))
 }
 
 #[cfg(test)]
@@ -585,6 +726,70 @@ mod tests {
                 "cut at {cut}: {err}"
             );
         }
+    }
+
+    #[test]
+    fn bundle_policy_record_roundtrips_and_sets_flag() {
+        let e = toy_svm();
+        let a = toy_approx();
+        let policy = TenantPolicy {
+            route: Some(RoutePolicy::AlwaysExact),
+            max_batch: Some(32),
+            max_wait: Some(Duration::from_micros(750)),
+            max_resident_hint: 5,
+        };
+        let bytes = encode_bundle_with(3, &e, &a, Some(&policy)).unwrap();
+        let hdr = peek_header(&bytes).unwrap();
+        assert!(hdr.has_policy());
+        assert_eq!(hdr.n_records, 3);
+        let b = decode_bundle_full(&bytes).unwrap();
+        assert_eq!(b.generation, 3);
+        assert_eq!(b.policy, Some(policy));
+        // The legacy decoder still reads the models out of a
+        // policy-carrying bundle.
+        let (generation, e2, _a2) = decode_bundle(&bytes).unwrap();
+        assert_eq!(generation, 3);
+        assert_eq!(e2.n_sv(), e.n_sv());
+    }
+
+    #[test]
+    fn bundle_without_policy_has_no_flag() {
+        let bytes = encode_bundle(1, &toy_svm(), &toy_approx()).unwrap();
+        let hdr = peek_header(&bytes).unwrap();
+        assert!(!hdr.has_policy());
+        assert_eq!(hdr.flags, 0);
+        assert_eq!(decode_bundle_full(&bytes).unwrap().policy, None);
+    }
+
+    #[test]
+    fn policy_record_bad_version_and_route_are_corrupt() {
+        let policy = TenantPolicy::default();
+        let e = toy_svm();
+        let a = toy_approx();
+        let good = encode_bundle_with(1, &e, &a, Some(&policy)).unwrap();
+        // The policy record is the last one; its payload starts 16
+        // bytes before the end minus payload length (19 bytes).
+        let plen = 19;
+        let pstart = good.len() - plen;
+        // Bad payload version.
+        let mut bad = good.clone();
+        bad[pstart] = 9;
+        // Re-stamp the CRC so the corruption reaches the payload parser.
+        let crc = crc32(&bad[pstart..]);
+        bad[pstart - 12..pstart - 8].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("policy record version")
+        ));
+        // Bad route tag.
+        let mut bad = good;
+        bad[pstart + 2] = 7;
+        let crc = crc32(&bad[pstart..]);
+        bad[pstart - 12..pstart - 8].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("route tag")
+        ));
     }
 
     #[test]

@@ -13,14 +13,17 @@
 //!   truncation-safe decoding (every failure is a typed
 //!   [`crate::Error::Corrupt`]). Byte-exact layout: `docs/FORMATS.md`.
 //! * [`store`] — [`ModelStore`]: one `<id>.arbf` bundle (exact +
-//!   approx) per model id under a root directory, published atomically
-//!   (tmp file + rename) with a monotonically increasing generation
-//!   counter persisted in the file header, loaded lazily through an
-//!   LRU-bounded in-memory cache.
+//!   approx + optional [`TenantPolicy`]) per model id under a root
+//!   directory, published atomically (tmp file + rename) with a
+//!   monotonically increasing generation counter persisted in the file
+//!   header, loaded lazily through an LRU-bounded in-memory cache.
+//!   Replaced bundles are archived as `<id>.arbf.gen-<k>` for
+//!   [`ModelStore::rollback`]; [`PublishOptions::warm`] pre-seeds the
+//!   cache so a fresh tenant's first request skips the cold decode.
 //! * The serving integration lives in [`crate::coordinator`]: requests
-//!   carry a model id, the executor resolves per-model state through
-//!   the store and re-checks generations so a republish hot-swaps
-//!   without dropping in-flight requests.
+//!   carry a model id, the executor resolves per-model state (weights
+//!   *and* policy) through the store and re-checks generations so a
+//!   republish hot-swaps without dropping in-flight requests.
 
 pub mod binfmt;
 pub mod store;
@@ -29,5 +32,11 @@ pub mod store;
 /// compared by content.
 pub type ModelId = std::sync::Arc<str>;
 
-pub use binfmt::{ArbfHeader, ModelRecord};
-pub use store::{ModelEntry, ModelStore, StoreEntryInfo};
+pub use binfmt::{ArbfHeader, Bundle, ModelRecord};
+pub use store::{
+    ModelEntry, ModelStore, PublishOptions, StoreConfig, StoreEntryInfo,
+};
+
+// Policies are defined next to the router that enforces them; re-export
+// here because they are published and persisted through the registry.
+pub use crate::coordinator::TenantPolicy;

@@ -13,6 +13,14 @@
 //!   in-memory cache is bounded, evicting the least-recently-used
 //!   entry, so a node can *register* thousands of tenants while only
 //!   the hot set stays resident.
+//! * **Generation GC + rollback** — each publish archives the replaced
+//!   bundle as `<id>.arbf.gen-<k>` and prunes archives beyond
+//!   [`StoreConfig::keep_generations`]; [`ModelStore::rollback`]
+//!   republishes the newest archive as a fresh generation, so a bad
+//!   push reverts through the same hot-swap path as any other publish.
+//! * **Warm-on-publish** — [`ModelStore::publish_with`] with
+//!   [`PublishOptions::warm`] seeds the decoded-entry cache at publish
+//!   time, so a new tenant's first request skips the cold decode.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -21,6 +29,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::approx::ApproxModel;
+use crate::coordinator::TenantPolicy;
 use crate::log_warn;
 use crate::svm::SvmModel;
 use crate::{Error, Result};
@@ -34,6 +43,40 @@ pub const ARBF_EXT: &str = "arbf";
 /// Default LRU capacity of the in-memory entry cache.
 pub const DEFAULT_CACHE_CAPACITY: usize = 64;
 
+/// Default number of archived previous generations kept per id.
+pub const DEFAULT_KEEP_GENERATIONS: usize = 2;
+
+/// Store construction knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreConfig {
+    /// LRU capacity of the decoded-entry cache (≥ 1).
+    pub cache_capacity: usize,
+    /// How many replaced generations to keep as `<id>.arbf.gen-<k>`
+    /// archives (0 disables archiving — and with it, rollback).
+    pub keep_generations: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            cache_capacity: DEFAULT_CACHE_CAPACITY,
+            keep_generations: DEFAULT_KEEP_GENERATIONS,
+        }
+    }
+}
+
+/// Publish-time options (see [`ModelStore::publish_with`]).
+#[derive(Clone, Debug, Default)]
+pub struct PublishOptions {
+    /// Per-tenant serving policy persisted as a kind-3 record in the
+    /// bundle; the coordinator's executor applies it after the next
+    /// (hot-)load.
+    pub policy: Option<TenantPolicy>,
+    /// Pre-decode the bundle into the store cache so the first request
+    /// for this generation skips the cold load.
+    pub warm: bool,
+}
+
 /// A loaded (exact, approx) pair at a specific generation. Shared
 /// immutably between the store cache and serving threads.
 #[derive(Clone, Debug)]
@@ -42,6 +85,8 @@ pub struct ModelEntry {
     pub generation: u64,
     pub exact: SvmModel,
     pub approx: ApproxModel,
+    /// Per-tenant serving policy carried by the bundle, if any.
+    pub policy: Option<TenantPolicy>,
 }
 
 impl ModelEntry {
@@ -59,6 +104,8 @@ pub struct StoreEntryInfo {
     pub dim: usize,
     pub n_sv: usize,
     pub size_bytes: u64,
+    /// True iff the bundle advertises a per-tenant policy record.
+    pub has_policy: bool,
 }
 
 struct Cache {
@@ -67,10 +114,33 @@ struct Cache {
     entries: HashMap<String, (u64, Arc<ModelEntry>)>,
 }
 
+impl Cache {
+    /// Insert (or replace) an entry, evicting the LRU victim when the
+    /// id is new and the cache is full.
+    fn insert(&mut self, id: &str, entry: Arc<ModelEntry>) {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.entries.contains_key(id)
+            && self.entries.len() >= self.capacity
+        {
+            if let Some(victim) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone())
+            {
+                self.entries.remove(&victim);
+            }
+        }
+        self.entries.insert(id.to_string(), (tick, entry));
+    }
+}
+
 /// The registry: a root directory of `.arbf` bundles plus a bounded
 /// in-memory cache. Cheap to share behind an `Arc` across coordinators.
 pub struct ModelStore {
     root: PathBuf,
+    config: StoreConfig,
     cache: Mutex<Cache>,
     publish_lock: Mutex<()>,
     tmp_counter: AtomicU64,
@@ -78,9 +148,9 @@ pub struct ModelStore {
 
 impl ModelStore {
     /// Open (creating if needed) a store rooted at `root` with the
-    /// default cache capacity.
+    /// default configuration.
     pub fn open(root: impl Into<PathBuf>) -> Result<ModelStore> {
-        ModelStore::with_capacity(root, DEFAULT_CACHE_CAPACITY)
+        ModelStore::with_config(root, StoreConfig::default())
     }
 
     /// Open with an explicit LRU cache capacity (≥ 1).
@@ -88,12 +158,24 @@ impl ModelStore {
         root: impl Into<PathBuf>,
         capacity: usize,
     ) -> Result<ModelStore> {
+        ModelStore::with_config(
+            root,
+            StoreConfig { cache_capacity: capacity, ..Default::default() },
+        )
+    }
+
+    /// Open with full [`StoreConfig`] control.
+    pub fn with_config(
+        root: impl Into<PathBuf>,
+        config: StoreConfig,
+    ) -> Result<ModelStore> {
         let root = root.into();
         std::fs::create_dir_all(&root)?;
         Ok(ModelStore {
             root,
+            config,
             cache: Mutex::new(Cache {
-                capacity: capacity.max(1),
+                capacity: config.cache_capacity.max(1),
                 tick: 0,
                 entries: HashMap::new(),
             }),
@@ -128,21 +210,140 @@ impl ModelStore {
         self.root.join(format!("{id}.{ARBF_EXT}"))
     }
 
+    fn gen_path_of(&self, id: &str, generation: u64) -> PathBuf {
+        self.root
+            .join(format!("{id}.{ARBF_EXT}.gen-{generation}"))
+    }
+
+    /// Write `bytes` to `<id>.arbf` atomically (tmp file in the same
+    /// directory, fsync, rename).
+    fn atomic_write(&self, id: &str, bytes: &[u8]) -> Result<()> {
+        let path = self.path_of(id);
+        let tmp = self.root.join(format!(
+            "{id}.{ARBF_EXT}.tmp.{}.{}",
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = write {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        if let Err(e) = std::fs::rename(&tmp, &path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
+        Ok(())
+    }
+
+    /// Archive the current bundle of `id` (generation `generation`) as
+    /// `<id>.arbf.gen-<generation>` and prune archives beyond
+    /// `keep_generations`. A copy (not a rename) so the live bundle is
+    /// never absent. Best-effort: archival failure never blocks a
+    /// publish.
+    fn archive_current(&self, id: &str, generation: u64) {
+        if self.config.keep_generations == 0 {
+            return;
+        }
+        let dst = self.gen_path_of(id, generation);
+        if let Err(e) = std::fs::copy(self.path_of(id), &dst) {
+            log_warn!(
+                "registry: could not archive '{id}' generation \
+                 {generation}: {e}"
+            );
+            return;
+        }
+        match self.archived_generations(id) {
+            Ok(gens) => {
+                let keep = self.config.keep_generations;
+                if gens.len() > keep {
+                    for &g in &gens[..gens.len() - keep] {
+                        let _ = std::fs::remove_file(self.gen_path_of(id, g));
+                    }
+                }
+            }
+            Err(e) => log_warn!(
+                "registry: could not prune archives for '{id}': {e}"
+            ),
+        }
+    }
+
+    /// One directory pass counting archived generations per model id
+    /// (the `registry list` CLI uses this instead of calling
+    /// [`ModelStore::archived_generations`] per id, which would rescan
+    /// the directory once per tenant).
+    pub fn archived_counts(&self) -> Result<HashMap<String, usize>> {
+        let marker = format!(".{ARBF_EXT}.gen-");
+        let mut out: HashMap<String, usize> = HashMap::new();
+        for dirent in std::fs::read_dir(&self.root)? {
+            let path = dirent?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some((id, tail)) = name.split_once(marker.as_str()) else {
+                continue;
+            };
+            if tail.parse::<u64>().is_ok() && Self::validate_id(id).is_ok() {
+                *out.entry(id.to_string()).or_insert(0) += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Archived (replaced) generation numbers for `id`, ascending.
+    pub fn archived_generations(&self, id: &str) -> Result<Vec<u64>> {
+        Self::validate_id(id)?;
+        let prefix = format!("{id}.{ARBF_EXT}.gen-");
+        let mut out = Vec::new();
+        for dirent in std::fs::read_dir(&self.root)? {
+            let path = dirent?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if let Some(tail) = name.strip_prefix(&prefix) {
+                if let Ok(g) = tail.parse::<u64>() {
+                    out.push(g);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
     /// Atomically publish a new generation of `id`. Returns the
     /// generation number the bundle was stamped with (previous + 1, or
     /// 1 for a new id). Readers holding the old generation keep it; the
-    /// next [`ModelStore::load`] observes the new one.
+    /// next [`ModelStore::load`] observes the new one. The replaced
+    /// bundle is archived for [`ModelStore::rollback`].
     pub fn publish(
         &self,
         id: &str,
         exact: &SvmModel,
         approx: &ApproxModel,
     ) -> Result<u64> {
+        self.publish_with(id, exact, approx, PublishOptions::default())
+    }
+
+    /// [`ModelStore::publish`] with a per-tenant [`TenantPolicy`] and/or
+    /// cache warming (see [`PublishOptions`]).
+    pub fn publish_with(
+        &self,
+        id: &str,
+        exact: &SvmModel,
+        approx: &ApproxModel,
+        opts: PublishOptions,
+    ) -> Result<u64> {
         Self::validate_id(id)?;
         // Serialize publishers so read-increment-write of the
         // generation counter is atomic within this process.
         let _publishing = self.publish_lock.lock().unwrap();
         let path = self.path_of(id);
+        let mut replaced = None;
         let generation = if path.exists() {
             match self.peek(id) {
                 Ok(info) => {
@@ -159,6 +360,7 @@ impl ModelStore {
                             info.dim
                         )));
                     }
+                    replaced = Some(info.generation);
                     info.generation + 1
                 }
                 Err(e) => {
@@ -172,27 +374,70 @@ impl ModelStore {
         } else {
             1
         };
-        let bytes = binfmt::encode_bundle(generation, exact, approx)?;
-        let tmp = self.root.join(format!(
-            "{id}.{ARBF_EXT}.tmp.{}.{}",
-            std::process::id(),
-            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
-        ));
-        let write = (|| -> Result<()> {
-            let mut f = std::fs::File::create(&tmp)?;
-            f.write_all(&bytes)?;
-            f.sync_all()?;
-            Ok(())
-        })();
-        if let Err(e) = write {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(e);
+        let bytes = binfmt::encode_bundle_with(
+            generation,
+            exact,
+            approx,
+            opts.policy.as_ref(),
+        )?;
+        if let Some(old) = replaced {
+            self.archive_current(id, old);
         }
-        if let Err(e) = std::fs::rename(&tmp, &path) {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(e.into());
+        self.atomic_write(id, &bytes)?;
+        // Invalidate so the next load picks the new generation up —
+        // or, when warming, seed the cache with the state we already
+        // hold in memory (no decode, no disk read on first request).
+        let mut cache = self.cache.lock().unwrap();
+        cache.entries.remove(id);
+        if opts.warm {
+            let entry = Arc::new(ModelEntry {
+                id: Arc::from(id),
+                generation,
+                exact: exact.clone(),
+                approx: approx.clone(),
+                policy: opts.policy,
+            });
+            cache.insert(id, entry);
         }
-        // Invalidate so the next load picks the new generation up.
+        Ok(generation)
+    }
+
+    /// Roll `id` back to its most recently archived generation: the
+    /// archive's models and policy are republished as a *new*
+    /// generation (current + 1), so serving nodes pick the revert up
+    /// through the ordinary hot-swap path and generation numbers stay
+    /// monotone. Returns the new generation number.
+    pub fn rollback(&self, id: &str) -> Result<u64> {
+        Self::validate_id(id)?;
+        let _publishing = self.publish_lock.lock().unwrap();
+        let current = self.peek(id)?;
+        let archived = self.archived_generations(id)?;
+        let Some(&source) = archived.last() else {
+            return Err(Error::InvalidArg(format!(
+                "no archived generations for '{id}' (keep_generations \
+                 is {}; nothing to roll back to)",
+                self.config.keep_generations
+            )));
+        };
+        let bytes = std::fs::read(self.gen_path_of(id, source))?;
+        let bundle = binfmt::decode_bundle_full(&bytes)?;
+        if bundle.exact.dim() != current.dim {
+            return Err(Error::InvalidArg(format!(
+                "archived generation {source} of '{id}' has dim {} but \
+                 the current generation serves dim {}; refusing rollback",
+                bundle.exact.dim(),
+                current.dim
+            )));
+        }
+        let generation = current.generation + 1;
+        let out = binfmt::encode_bundle_with(
+            generation,
+            &bundle.exact,
+            &bundle.approx,
+            bundle.policy.as_ref(),
+        )?;
+        self.archive_current(id, current.generation);
+        self.atomic_write(id, &out)?;
         self.cache.lock().unwrap().entries.remove(id);
         Ok(generation)
     }
@@ -212,6 +457,7 @@ impl ModelStore {
             dim: hdr.dim as usize,
             n_sv: hdr.n_sv as usize,
             size_bytes,
+            has_policy: hdr.has_policy(),
         })
     }
 
@@ -235,27 +481,15 @@ impl ModelStore {
         // unrelated tenants' cache hits.
         let bytes = std::fs::read(self.path_of(id))
             .map_err(|e| not_found_to_invalid(e.into(), id))?;
-        let (generation, exact, approx) = binfmt::decode_bundle(&bytes)?;
+        let bundle = binfmt::decode_bundle_full(&bytes)?;
         let entry = Arc::new(ModelEntry {
             id: Arc::from(id),
-            generation,
-            exact,
-            approx,
+            generation: bundle.generation,
+            exact: bundle.exact,
+            approx: bundle.approx,
+            policy: bundle.policy,
         });
-        let mut g = self.cache.lock().unwrap();
-        g.tick += 1;
-        let tick = g.tick;
-        if !g.entries.contains_key(id) && g.entries.len() >= g.capacity {
-            if let Some(victim) = g
-                .entries
-                .iter()
-                .min_by_key(|(_, (t, _))| *t)
-                .map(|(k, _)| k.clone())
-            {
-                g.entries.remove(&victim);
-            }
-        }
-        g.entries.insert(id.to_string(), (tick, entry.clone()));
+        self.cache.lock().unwrap().insert(id, entry.clone());
         Ok(entry)
     }
 
@@ -282,11 +516,17 @@ impl ModelStore {
         Ok(out)
     }
 
-    /// Remove a model's bundle and drop it from the cache.
+    /// Remove a model's bundle (and its archived generations) and drop
+    /// it from the cache.
     pub fn remove(&self, id: &str) -> Result<()> {
         Self::validate_id(id)?;
         std::fs::remove_file(self.path_of(id))
             .map_err(|e| not_found_to_invalid(e.into(), id))?;
+        if let Ok(gens) = self.archived_generations(id) {
+            for g in gens {
+                let _ = std::fs::remove_file(self.gen_path_of(id, g));
+            }
+        }
         self.cache.lock().unwrap().entries.remove(id);
         Ok(())
     }
@@ -479,5 +719,123 @@ mod tests {
             store.load("ghost"),
             Err(Error::InvalidArg(_))
         ));
+    }
+
+    #[test]
+    fn publish_archives_previous_generations_and_prunes() {
+        let store = temp_store("gc");
+        // Default keep_generations = 2.
+        for seed in 1..=4 {
+            let (e, a) = pair(seed as f32);
+            assert_eq!(store.publish("m", &e, &a).unwrap(), seed);
+        }
+        // Generations 1..=3 were replaced; only the last 2 survive.
+        assert_eq!(store.archived_generations("m").unwrap(), vec![2, 3]);
+        assert_eq!(store.archived_counts().unwrap().get("m"), Some(&2));
+        assert_eq!(store.peek("m").unwrap().generation, 4);
+        // Archives never leak into list().
+        let infos = store.list().unwrap();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].generation, 4);
+    }
+
+    #[test]
+    fn keep_generations_zero_disables_archiving() {
+        let dir = std::env::temp_dir().join(format!(
+            "approxrbf_store_test_nogc_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ModelStore::with_config(
+            dir,
+            StoreConfig { keep_generations: 0, ..Default::default() },
+        )
+        .unwrap();
+        let (e, a) = pair(1.0);
+        store.publish("m", &e, &a).unwrap();
+        store.publish("m", &e, &a).unwrap();
+        assert!(store.archived_generations("m").unwrap().is_empty());
+        assert!(matches!(store.rollback("m"), Err(Error::InvalidArg(_))));
+    }
+
+    #[test]
+    fn rollback_restores_previous_models_as_new_generation() {
+        let store = temp_store("rollback");
+        let (e1, a1) = pair(1.0);
+        let (e2, a2) = pair(2.0);
+        store.publish("m", &e1, &a1).unwrap();
+        store.publish("m", &e2, &a2).unwrap();
+        assert_eq!(store.load("m").unwrap().approx.c, 2.0);
+        // Roll back: generation moves FORWARD (2 → 3) but the payload
+        // is generation 1's.
+        assert_eq!(store.rollback("m").unwrap(), 3);
+        let entry = store.load("m").unwrap();
+        assert_eq!(entry.generation, 3);
+        assert_eq!(entry.approx.c, 1.0);
+        // Rolling back again reverts the revert (gen 2's payload).
+        assert_eq!(store.rollback("m").unwrap(), 4);
+        assert_eq!(store.load("m").unwrap().approx.c, 2.0);
+    }
+
+    #[test]
+    fn rollback_without_history_is_invalid_arg() {
+        let store = temp_store("rollback_empty");
+        let (e, a) = pair(1.0);
+        store.publish("solo", &e, &a).unwrap();
+        assert!(matches!(
+            store.rollback("solo"),
+            Err(Error::InvalidArg(_))
+        ));
+        assert!(store.rollback("ghost").is_err());
+    }
+
+    #[test]
+    fn warm_publish_seeds_cache() {
+        let store = temp_store("warm");
+        let (e, a) = pair(1.0);
+        store
+            .publish_with(
+                "hot",
+                &e,
+                &a,
+                PublishOptions { warm: true, ..Default::default() },
+            )
+            .unwrap();
+        assert_eq!(store.cached_count(), 1, "warm publish must pre-seed");
+        // The warmed entry is the one load() hands out (same Arc).
+        let x = store.load("hot").unwrap();
+        let y = store.load("hot").unwrap();
+        assert!(Arc::ptr_eq(&x, &y));
+        assert_eq!(x.generation, 1);
+        // Cold publish does not seed.
+        store.publish("cold", &e, &a).unwrap();
+        assert_eq!(store.cached_count(), 1);
+    }
+
+    #[test]
+    fn policy_roundtrips_through_publish_and_load() {
+        let store = temp_store("policy");
+        let (e, a) = pair(1.0);
+        let policy = TenantPolicy {
+            route: Some(crate::coordinator::RoutePolicy::AlwaysExact),
+            max_batch: Some(16),
+            max_wait: Some(std::time::Duration::from_micros(300)),
+            max_resident_hint: 2,
+        };
+        store
+            .publish_with(
+                "p",
+                &e,
+                &a,
+                PublishOptions { policy: Some(policy), warm: false },
+            )
+            .unwrap();
+        assert!(store.peek("p").unwrap().has_policy);
+        assert_eq!(store.load("p").unwrap().policy, Some(policy));
+        // Republishing without a policy clears it (policy travels with
+        // the bundle).
+        store.publish("p", &e, &a).unwrap();
+        assert!(!store.peek("p").unwrap().has_policy);
+        assert_eq!(store.load("p").unwrap().policy, None);
     }
 }

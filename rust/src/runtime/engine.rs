@@ -337,3 +337,76 @@ impl Engine {
         self.cache.borrow().len()
     }
 }
+
+/// The XLA approx path as a [`crate::predictor::Predictor`]: borrows
+/// the engine and a prepared (padded + uploaded) model, so the serving
+/// executor can cache the preparation per generation and hand the
+/// cheap wrapper to the uniform evaluation surface per batch.
+pub struct EngineApproxPredictor<'e> {
+    engine: &'e Engine,
+    prepared: &'e PreparedApprox,
+}
+
+impl<'e> EngineApproxPredictor<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        prepared: &'e PreparedApprox,
+    ) -> EngineApproxPredictor<'e> {
+        EngineApproxPredictor { engine, prepared }
+    }
+}
+
+impl crate::predictor::Predictor for EngineApproxPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.prepared.d
+    }
+
+    fn kind(&self) -> &'static str {
+        "approx-xla"
+    }
+
+    fn predict_batch(
+        &self,
+        z: &Mat,
+    ) -> Result<crate::predictor::PredictOutput> {
+        let (decisions, norms) =
+            self.engine.approx_predict(self.prepared, z)?;
+        Ok(crate::predictor::PredictOutput {
+            decisions,
+            znorms_sq: Some(norms),
+        })
+    }
+}
+
+/// The XLA exact path as a [`crate::predictor::Predictor`].
+pub struct EngineExactPredictor<'e> {
+    engine: &'e Engine,
+    prepared: &'e PreparedExact,
+}
+
+impl<'e> EngineExactPredictor<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        prepared: &'e PreparedExact,
+    ) -> EngineExactPredictor<'e> {
+        EngineExactPredictor { engine, prepared }
+    }
+}
+
+impl crate::predictor::Predictor for EngineExactPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.prepared.d
+    }
+
+    fn kind(&self) -> &'static str {
+        "exact-xla"
+    }
+
+    fn predict_batch(
+        &self,
+        z: &Mat,
+    ) -> Result<crate::predictor::PredictOutput> {
+        let decisions = self.engine.exact_predict(self.prepared, z)?;
+        Ok(crate::predictor::PredictOutput { decisions, znorms_sq: None })
+    }
+}

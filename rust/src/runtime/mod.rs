@@ -13,5 +13,8 @@ pub mod engine;
 pub mod manifest;
 
 #[cfg(feature = "pjrt")]
-pub use engine::{Engine, PreparedApprox, PreparedExact};
+pub use engine::{
+    Engine, EngineApproxPredictor, EngineExactPredictor, PreparedApprox,
+    PreparedExact,
+};
 pub use manifest::{ArtifactEntry, ArtifactKind, ImplKind, Manifest};

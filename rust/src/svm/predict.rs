@@ -133,6 +133,29 @@ impl<'m> ExactPredictor<'m> {
     }
 }
 
+/// The exact evaluator as a [`crate::predictor::Predictor`]: the
+/// O(n_SV·d) reference path behind the same surface as the approx and
+/// XLA substrates. The exact path does not compute ‖z‖² as a
+/// by-product, so `znorms_sq` is `None` (the serving router supplies
+/// its own norms).
+impl crate::predictor::Predictor for ExactPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn kind(&self) -> &'static str {
+        "exact-native"
+    }
+
+    fn predict_batch(
+        &self,
+        z: &Mat,
+    ) -> Result<crate::predictor::PredictOutput> {
+        let decisions = self.decision_batch(z)?;
+        Ok(crate::predictor::PredictOutput { decisions, znorms_sq: None })
+    }
+}
+
 /// Predicted ±1 labels from decision values.
 pub fn labels_from_decisions(dec: &[f32]) -> Vec<f32> {
     dec.iter().map(|&d| if d >= 0.0 { 1.0 } else { -1.0 }).collect()

@@ -1,0 +1,282 @@
+//! The unified prediction surface, end to end:
+//!
+//! * one generic `predict_all<P: Predictor>` harness drives the exact
+//!   evaluator, the approximated model and the (stub) XLA-engine-shaped
+//!   backend through identical assertions;
+//! * every executor-side failure mode is *delivered* as a typed
+//!   `Err(PredictError)` completion — unknown model, dimension drift
+//!   across an out-of-band republish, post-shutdown submit — well under
+//!   any request timeout, instead of silently timing out.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::ApproxModel;
+use approxrbf::coordinator::{Coordinator, PredictErrorKind};
+use approxrbf::data::{synth, Dataset, UnitNormScaler};
+use approxrbf::linalg::{Mat, MathBackend};
+use approxrbf::predictor::{ApproxPredictor, PredictOutput, Predictor};
+use approxrbf::registry::ModelStore;
+use approxrbf::svm::predict::ExactPredictor;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::{Kernel, SvmModel};
+
+fn trained_pair(
+    seed: u64,
+    d: usize,
+) -> (SvmModel, ApproxModel, Dataset) {
+    let ds = synth::two_gaussians(seed, 200, d, 1.5);
+    let scaled = UnitNormScaler.apply_dataset(&ds);
+    let gamma = gamma_max_for_data(&scaled) * 0.8;
+    let (model, _) =
+        train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    (model, am, scaled)
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("approxrbf_predictor_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ---------------------------------------------------------------------
+// the generic harness (acceptance: one fn, every backend)
+// ---------------------------------------------------------------------
+
+/// THE harness: everything a caller needs from any backend, written
+/// once against the trait.
+fn predict_all<P: Predictor + ?Sized>(
+    p: &P,
+    z: &Mat,
+) -> approxrbf::Result<PredictOutput> {
+    assert_eq!(p.dim(), z.cols(), "harness caller bug");
+    let out = p.predict_batch(z)?;
+    assert_eq!(
+        out.decisions.len(),
+        z.rows(),
+        "{}: decision count must equal batch rows",
+        p.kind()
+    );
+    if let Some(norms) = &out.znorms_sq {
+        assert_eq!(norms.len(), z.rows(), "{}: norm count", p.kind());
+    }
+    Ok(out)
+}
+
+/// Stand-in for the PJRT engine path when the `pjrt` feature (or the
+/// AOT artifacts) are absent: same shape as
+/// `runtime::EngineApproxPredictor` — reports decisions *and* norms —
+/// but evaluated on the native substrate. Keeps the trait harness
+/// exercising three distinct `Predictor` impls in tier-1 builds.
+struct StubEnginePredictor<'m> {
+    am: &'m ApproxModel,
+}
+
+impl Predictor for StubEnginePredictor<'_> {
+    fn dim(&self) -> usize {
+        self.am.dim()
+    }
+
+    fn kind(&self) -> &'static str {
+        "approx-xla-stub"
+    }
+
+    fn predict_batch(&self, z: &Mat) -> approxrbf::Result<PredictOutput> {
+        let (decisions, norms) =
+            self.am.decision_batch(z, MathBackend::Blocked)?;
+        Ok(PredictOutput { decisions, znorms_sq: Some(norms) })
+    }
+}
+
+#[test]
+fn generic_harness_passes_against_exact_approx_and_stub_pjrt() {
+    let (model, am, ds) = trained_pair(41, 7);
+    let z = ds.x.rows_slice(0, 50);
+
+    let exact = ExactPredictor::new(&model, MathBackend::Blocked).unwrap();
+    let approx = ApproxPredictor::new(&am, MathBackend::Blocked).unwrap();
+    let stub = StubEnginePredictor { am: &am };
+    let backends: Vec<&dyn Predictor> = vec![&exact, &approx, &stub];
+
+    let mut kinds = Vec::new();
+    for p in backends {
+        let out = predict_all(p, &z).unwrap();
+        kinds.push(p.kind());
+        for r in 0..z.rows() {
+            // Reference values from the direct (non-trait) evaluators.
+            let want = match p.kind() {
+                "exact-native" => model.decision_one(z.row(r)),
+                _ => am.decision_one(z.row(r)).0,
+            };
+            assert!(
+                (out.decisions[r] - want).abs() < 1e-3,
+                "{} row {r}: {} vs {want}",
+                p.kind(),
+                out.decisions[r]
+            );
+        }
+        // Substrates that report ‖z‖² must agree with a direct
+        // computation (the Eq. 3.11 bound check depends on it).
+        if let Some(norms) = &out.znorms_sq {
+            for r in 0..z.rows() {
+                let want: f32 =
+                    z.row(r).iter().map(|v| v * v).sum();
+                assert!(
+                    (norms[r] - want).abs() < 1e-4,
+                    "{} row {r}: ‖z‖² {} vs {want}",
+                    p.kind(),
+                    norms[r]
+                );
+            }
+        }
+    }
+    assert_eq!(kinds, ["exact-native", "approx-native", "approx-xla-stub"]);
+
+    // Real XLA-engine impl rides the same harness when available.
+    #[cfg(feature = "pjrt")]
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let engine =
+            approxrbf::runtime::Engine::load(std::path::Path::new(
+                "artifacts",
+            ))
+            .unwrap();
+        let prep = engine.prepare_approx(&am).unwrap();
+        let ep =
+            approxrbf::runtime::EngineApproxPredictor::new(&engine, &prep);
+        let out = predict_all(&ep as &dyn Predictor, &z).unwrap();
+        for r in 0..z.rows() {
+            let (want, _) = am.decision_one(z.row(r));
+            assert!((out.decisions[r] - want).abs() < 2e-3);
+        }
+    }
+}
+
+#[test]
+fn mismatched_batch_dim_is_a_shape_error_on_every_backend() {
+    let (model, am, _) = trained_pair(42, 6);
+    let exact = ExactPredictor::new(&model, MathBackend::Loops).unwrap();
+    let approx = ApproxPredictor::new(&am, MathBackend::Loops).unwrap();
+    let bad = Mat::zeros(3, 6 + 1);
+    for p in [&exact as &dyn Predictor, &approx] {
+        assert!(
+            matches!(p.predict_batch(&bad), Err(approxrbf::Error::Shape(_))),
+            "{}",
+            p.kind()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// fail-fast PredictError delivery (acceptance: dropped requests return
+// Err(PredictError::…) in under the request timeout)
+// ---------------------------------------------------------------------
+
+#[test]
+fn unknown_model_after_eviction_fails_fast_not_timeout() {
+    let store = Arc::new(ModelStore::open(temp_dir("unknown")).unwrap());
+    let (m_a, a_a, ds) = trained_pair(5, 6);
+    let (m_b, a_b, _) = trained_pair(6, 6);
+    store.publish("alpha", &m_a, &a_a).unwrap();
+    store.publish("bravo", &m_b, &a_b).unwrap();
+    // max_resident_models(1): serving bravo evicts alpha from the
+    // executor, so a later alpha request must re-resolve via the store.
+    let coord = Coordinator::builder()
+        .max_resident_models(1)
+        .max_wait(Duration::from_millis(1))
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    // Serve alpha (caches its dim at the submit boundary, makes it
+    // resident), then bravo (evicts alpha).
+    client
+        .predict_all_for("alpha", &ds.x.rows_slice(0, 4))
+        .unwrap();
+    client
+        .predict_all_for("bravo", &ds.x.rows_slice(0, 4))
+        .unwrap();
+    // Out-of-band deletion: the submit-side dim cache still admits
+    // alpha, but the executor can no longer resolve it.
+    store.remove("alpha").unwrap();
+    let mut session = client.session();
+    let id = session
+        .submit_to("alpha", ds.x.row(0).to_vec())
+        .expect("submit admits the cached tenant");
+    let t0 = Instant::now();
+    let completions = session.wait_all(Duration::from_secs(30)).unwrap();
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(10),
+        "fail-fast took {waited:?} (timeout-like)"
+    );
+    assert_eq!(completions.len(), 1);
+    let err = completions[0].as_ref().expect_err("must fail fast");
+    assert_eq!(err.id, id);
+    assert_eq!(&*err.model, "alpha");
+    assert!(
+        matches!(err.kind, PredictErrorKind::UnknownModel { .. }),
+        "{err}"
+    );
+    // The failure is also visible operationally.
+    let snap = coord.metrics();
+    assert!(snap.dropped >= 1);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn dim_drift_across_out_of_band_republish_fails_fast() {
+    let store = Arc::new(ModelStore::open(temp_dir("dimdrift")).unwrap());
+    let (m6, a6, ds6) = trained_pair(7, 6);
+    let (m6b, a6b, _) = trained_pair(8, 6);
+    let (m10, a10, _) = trained_pair(9, 10);
+    store.publish("x", &m6, &a6).unwrap();
+    store.publish("y", &m6b, &a6b).unwrap();
+    let coord = Coordinator::builder()
+        .max_resident_models(1)
+        .max_wait(Duration::from_millis(1))
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    client.predict_all_for("x", &ds6.x.rows_slice(0, 4)).unwrap();
+    client.predict_all_for("y", &ds6.x.rows_slice(0, 4)).unwrap(); // evicts x
+    // Out-of-band feature-space change: remove + republish with d=10.
+    // The submit-side cache still says d=6, so the instance is admitted
+    // — and must fail fast at the executor, not hang.
+    store.remove("x").unwrap();
+    store.publish("x", &m10, &a10).unwrap();
+    let mut session = client.session();
+    session
+        .submit_to("x", ds6.x.row(0).to_vec())
+        .expect("stale dim cache admits the request");
+    let completions = session.wait_all(Duration::from_secs(30)).unwrap();
+    let err = completions[0].as_ref().expect_err("must fail fast");
+    assert!(
+        matches!(
+            err.kind,
+            PredictErrorKind::DimMismatch { got: 6, want: 10 }
+        ),
+        "{err}"
+    );
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn post_shutdown_submit_fails_with_shutdown_kind() {
+    let (model, am, ds) = trained_pair(11, 6);
+    let coord = Coordinator::builder().start(model, am).unwrap();
+    let client = coord.client();
+    // Healthy before shutdown…
+    client.predict_all(&ds.x.rows_slice(0, 2)).unwrap();
+    coord.shutdown().unwrap();
+    // …typed failure after.
+    let err = client.submit(ds.x.row(0).to_vec()).unwrap_err();
+    assert_eq!(err.kind, PredictErrorKind::Shutdown);
+    // Sessions opened on a dead coordinator fail the same way.
+    let mut session = client.session();
+    let err = session.submit(ds.x.row(0).to_vec()).unwrap_err();
+    assert_eq!(err.kind, PredictErrorKind::Shutdown);
+}

@@ -10,11 +10,13 @@ use std::time::Duration;
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
 use approxrbf::approx::ApproxModel;
-use approxrbf::coordinator::{Coordinator, CoordinatorConfig, Route};
+use approxrbf::coordinator::{
+    Coordinator, CoordinatorConfig, Route, RoutePolicy, TenantPolicy,
+};
 use approxrbf::data::{synth, Dataset, UnitNormScaler};
 use approxrbf::linalg::{Mat, MathBackend};
 use approxrbf::prop_cases;
-use approxrbf::registry::{binfmt, ModelStore};
+use approxrbf::registry::{binfmt, ModelStore, PublishOptions};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::Rng;
@@ -209,6 +211,173 @@ fn property_corrupted_bytes_never_panic_and_are_typed() {
             }
         }
     });
+}
+
+fn random_policy(rng: &mut Rng) -> TenantPolicy {
+    let route = match rng.below(4) {
+        0 => None,
+        1 => Some(RoutePolicy::AlwaysApprox),
+        2 => Some(RoutePolicy::AlwaysExact),
+        _ => Some(RoutePolicy::Hybrid),
+    };
+    let max_batch = if rng.chance(0.5) {
+        Some(1 + rng.below(4096))
+    } else {
+        None
+    };
+    // Whole microseconds ≥ 1: the record encodes max_wait in µs and
+    // treats 0 as "unset".
+    let max_wait = if rng.chance(0.5) {
+        Some(std::time::Duration::from_micros(
+            1 + rng.below(5_000_000) as u64,
+        ))
+    } else {
+        None
+    };
+    TenantPolicy {
+        route,
+        max_batch,
+        max_wait,
+        max_resident_hint: rng.below(16) as u32,
+    }
+}
+
+#[test]
+fn property_tenant_policy_roundtrips_through_arbf_record() {
+    prop_cases!("policy <-> arbf", 48, |rng| {
+        let am = random_approx(rng);
+        let d = am.dim();
+        let mut sv = Mat::zeros(1, d);
+        for c in 0..d {
+            *sv.at_mut(0, c) = rng.normal() as f32;
+        }
+        let exact = SvmModel::new(
+            Kernel::Rbf { gamma: am.gamma },
+            sv,
+            vec![1.0],
+            am.b,
+        )
+        .unwrap();
+        let policy = random_policy(rng);
+        let bytes =
+            binfmt::encode_bundle_with(9, &exact, &am, Some(&policy))
+                .unwrap();
+        let hdr = binfmt::peek_header(&bytes).unwrap();
+        assert!(hdr.has_policy());
+        let bundle = binfmt::decode_bundle_full(&bytes).unwrap();
+        assert_eq!(bundle.policy, Some(policy), "policy must be bit-stable");
+        // The policy record must not perturb the models around it.
+        assert_approx_eq(&am, &bundle.approx);
+        assert_svm_eq(&exact, &bundle.exact);
+    });
+}
+
+#[test]
+fn property_policy_roundtrips_through_store_publish() {
+    let store = Arc::new(ModelStore::open(temp_dir("prop_policy")).unwrap());
+    prop_cases!("policy <-> store", 12, |rng| {
+        let (e, a, _) = trained_pair_cached(rng.below(3) as u64);
+        let policy = random_policy(rng);
+        store
+            .publish_with(
+                "p",
+                &e,
+                &a,
+                PublishOptions { policy: Some(policy), warm: rng.chance(0.5) },
+            )
+            .unwrap();
+        assert_eq!(store.load("p").unwrap().policy, Some(policy));
+    });
+}
+
+/// Tiny cached trainer so the store property test does not retrain 12
+/// SVMs (the models are irrelevant; the policy record is under test).
+fn trained_pair_cached(which: u64) -> (SvmModel, ApproxModel, Dataset) {
+    use std::sync::OnceLock;
+    static CACHE: OnceLock<Vec<(SvmModel, ApproxModel, Dataset)>> =
+        OnceLock::new();
+    let all = CACHE.get_or_init(|| {
+        (0..3u64).map(|s| trained_pair(100 + s, 0.8)).collect()
+    });
+    all[(which as usize) % all.len()].clone()
+}
+
+// ---------------------------------------------------------------------
+// per-tenant policy drives the served route mix (acceptance)
+// ---------------------------------------------------------------------
+
+#[test]
+fn published_policy_overrides_route_and_hot_swaps_away() {
+    let store = Arc::new(ModelStore::open(temp_dir("policyroute")).unwrap());
+    let (m, a, data) = trained_pair(21, 0.8); // in-bound ⇒ hybrid → approx
+    let pinned = TenantPolicy {
+        route: Some(RoutePolicy::AlwaysExact),
+        ..Default::default()
+    };
+    store
+        .publish_with(
+            "tenant",
+            &m,
+            &a,
+            PublishOptions { policy: Some(pinned), warm: false },
+        )
+        .unwrap();
+    let coord = Coordinator::builder()
+        .policy(RoutePolicy::Hybrid)
+        .swap_poll(Duration::from_millis(5))
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let sub = data.x.rows_slice(0, 30);
+    // The bundle's policy pins every (in-bound!) instance to the exact
+    // path, overriding the coordinator-wide hybrid default.
+    let r1 = client.predict_all_for("tenant", &sub).unwrap();
+    assert!(r1.iter().all(|r| r.route == Route::Exact && r.in_bound));
+    // Republish without a policy: the hot swap restores hybrid routing.
+    store.publish("tenant", &m, &a).unwrap();
+    coord.refresh();
+    // The refresh epoch is observed on the tenant's next batch.
+    let r2 = client.predict_all_for("tenant", &sub).unwrap();
+    assert_eq!(r2[0].generation, 2);
+    assert!(r2.iter().all(|r| r.route == Route::Approx));
+    let snap = coord.metrics();
+    assert_eq!(snap.per_model[0].served_exact, 30);
+    assert_eq!(snap.per_model[0].served_approx, 30);
+    coord.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// registry GC + rollback through the serving path
+// ---------------------------------------------------------------------
+
+#[test]
+fn rollback_is_served_like_any_hot_swap() {
+    let store = Arc::new(ModelStore::open(temp_dir("rollbackserve")).unwrap());
+    let (m1, a1, data) = trained_pair(31, 0.8);
+    let (m2, a2, _) = trained_pair(32, 0.7);
+    store.publish("tenant", &m1, &a1).unwrap();
+    store.publish("tenant", &m2, &a2).unwrap();
+    let coord = Coordinator::builder()
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let sub = data.x.rows_slice(0, 10);
+    let before = client.predict_all_for("tenant", &sub).unwrap();
+    assert!(before.iter().all(|r| r.generation == 2));
+    // v2 is bad: revert. The rollback republishes v1's payload as
+    // generation 3 — monotone, so the swap detector fires normally.
+    assert_eq!(store.rollback("tenant").unwrap(), 3);
+    coord.refresh();
+    let after = client.predict_all_for("tenant", &sub).unwrap();
+    assert!(after.iter().all(|r| r.generation == 3));
+    for (i, resp) in after.iter().enumerate() {
+        let (want, _) = a1.decision_one(sub.row(i));
+        assert!(
+            (resp.decision - want).abs() < 1e-4,
+            "rollback must serve v1's weights"
+        );
+    }
+    coord.shutdown().unwrap();
 }
 
 // ---------------------------------------------------------------------
