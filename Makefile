@@ -2,9 +2,9 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test doc check-pjrt artifacts
+.PHONY: tier1 fmt lint build test test-sharded doc check-pjrt artifacts
 
-tier1: fmt lint build test
+tier1: fmt lint build test test-sharded
 
 # Mirror the extra CI jobs: rustdoc with warnings denied, and the
 # pjrt feature path against the vendored stub.
@@ -25,6 +25,11 @@ build:
 
 test:
 	cd $(CARGO_DIR) && cargo test -q
+
+# Mirror the CI tier1-sharded job: the whole suite through a 4-shard
+# serving plane (unpinned coordinators read APPROXRBF_TEST_SHARDS).
+test-sharded:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_SHARDS=4 cargo test -q
 
 # AOT-lower the L1/L2 kernels to HLO text for the PJRT runtime
 # (requires JAX; consumed by builds with `--features pjrt`).

@@ -9,9 +9,10 @@
 //!      directory-backed [`ModelStore`] — `control-a` ships with a
 //!      [`TenantPolicy`] pinning it to the exact path, `adult` is
 //!      published warm (cache pre-seeded before its first request);
-//!   2. serves a mixed-tenant workload through one hybrid-routing
-//!      coordinator via the cloneable [`Client`] API — each tenant is
-//!      routed with its *own* Eq. 3.11 budget and policy;
+//!   2. serves a mixed-tenant workload through a two-shard
+//!      hybrid-routing coordinator via the cloneable [`Client`] API —
+//!      each tenant is placed on its owning shard (rendezvous hashing)
+//!      and routed with its *own* Eq. 3.11 budget and policy;
 //!   3. republishes `control-a` mid-stream *without* the policy (hot
 //!      swap): its served route mix flips from all-exact to all-approx
 //!      with zero dropped or failed in-flight requests;
@@ -144,11 +145,14 @@ fn main() -> approxrbf::Result<()> {
         .policy(RoutePolicy::Hybrid)
         .max_wait(Duration::from_micros(500))
         .swap_poll(Duration::from_millis(20))
+        .shards(2)
         .start_registry(store.clone())?;
     let client = coord.client();
     println!(
-        "\n[serve] {REQUESTS} requests round-robin across {} tenants…",
-        TENANTS.len()
+        "\n[serve] {REQUESTS} requests round-robin across {} tenants \
+         on {} shards…",
+        TENANTS.len(),
+        coord.shard_count()
     );
     let mut rng = Rng::new(7);
     let t0 = Instant::now();

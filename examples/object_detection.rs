@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+use approxrbf::coordinator::{Coordinator, RoutePolicy};
 use approxrbf::data::synth;
 use approxrbf::linalg::{Mat, MathBackend};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
@@ -38,16 +38,12 @@ fn main() -> approxrbf::Result<()> {
 
     // ---- stream frames through the coordinator ----
     for policy in [RoutePolicy::AlwaysExact, RoutePolicy::Hybrid] {
-        let coord = Coordinator::start(
-            model.clone(),
-            am.clone(),
-            CoordinatorConfig {
-                policy,
-                max_batch: WINDOWS_PER_FRAME,
-                max_wait: Duration::from_micros(500),
-                ..Default::default()
-            },
-        )?;
+        let coord = Coordinator::builder()
+            .policy(policy)
+            .max_batch(WINDOWS_PER_FRAME)
+            .max_wait(Duration::from_micros(500))
+            .start(model.clone(), am.clone())?;
+        let client = coord.client();
         let mut rng = Rng::new(99);
         let mut frame_times = Vec::new();
         let mut detections = 0usize;
@@ -70,7 +66,7 @@ fn main() -> approxrbf::Result<()> {
                 }
             }
             let t0 = Instant::now();
-            let responses = coord.predict_all(&frame)?;
+            let responses = client.predict_all(&frame)?;
             frame_times.push(t0.elapsed().as_secs_f64());
             detections +=
                 responses.iter().filter(|r| r.label > 0.0).count();

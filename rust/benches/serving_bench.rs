@@ -1,9 +1,12 @@
 //! Coordinator throughput benchmark: requests/second through the full
 //! L3 path under each routing policy and executor (native vs XLA when
-//! artifacts are present).
+//! artifacts are present), plus a shard-scaling sweep over a
+//! multi-tenant registry (1/2/4 executor lanes) whose results are
+//! written to `BENCH_serving.json` for the perf trajectory.
 //!
 //! Run: `cargo bench --bench serving_bench`
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
@@ -11,10 +14,16 @@ use approxrbf::approx::bounds::gamma_max_for_data;
 use approxrbf::coordinator::{Coordinator, ExecSpec, RoutePolicy};
 use approxrbf::data::{SynthProfile, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
+use approxrbf::registry::ModelStore;
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::Kernel;
+use approxrbf::util::Json;
 
 const REQUESTS: usize = 10_000;
+/// Shard sweep: requests per tenant per producer pass.
+const SWEEP_CHUNK: usize = 256;
+const SWEEP_PASSES: usize = 8;
+const SWEEP_TENANTS: usize = 6;
 
 fn main() {
     let (raw_train, raw_test) =
@@ -88,12 +97,98 @@ fn main() {
                 REQUESTS as f64 / wall,
                 m.mean_batch_size
             );
-            // Per-tenant breakdown (single tenant here; the registry
-            // path in examples/multi_tenant_serving.rs shows several).
+            // Per-tenant breakdown (single tenant here; the sweep below
+            // and examples/multi_tenant_serving.rs show several).
             for line in m.per_model_table().lines().skip(1) {
                 println!("    {line}");
             }
             coord.shutdown().unwrap();
         }
     }
+
+    shard_scaling_sweep(&model, &am, &test);
+}
+
+/// Multi-tenant shard-scaling sweep: the same registry served by 1, 2
+/// and 4 executor lanes, driven by one concurrent producer per tenant
+/// (scoped threads, each with its own `Client` clone). Emits
+/// `BENCH_serving.json`.
+fn shard_scaling_sweep(
+    model: &approxrbf::svm::SvmModel,
+    am: &approxrbf::approx::ApproxModel,
+    test: &approxrbf::data::Dataset,
+) {
+    let dir = std::env::temp_dir().join(format!(
+        "approxrbf_serving_bench_registry_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ModelStore::open(&dir).unwrap());
+    let tenant_ids: Vec<String> =
+        (0..SWEEP_TENANTS).map(|i| format!("tenant-{i}")).collect();
+    for id in &tenant_ids {
+        store.publish(id, model, am).unwrap();
+    }
+    let chunk = test.x.rows_slice(0, SWEEP_CHUNK);
+    let per_tenant = SWEEP_CHUNK * SWEEP_PASSES;
+    let total = per_tenant * SWEEP_TENANTS;
+    println!(
+        "\n# shard scaling ({SWEEP_TENANTS} tenants × {per_tenant} \
+         requests, {SWEEP_TENANTS} concurrent producers)\n"
+    );
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let coord = Coordinator::builder()
+            .policy(RoutePolicy::Hybrid)
+            .max_wait(Duration::from_micros(200))
+            .shards(shards)
+            .warm_start(true)
+            .start_registry(store.clone())
+            .unwrap();
+        let client = coord.client();
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for id in &tenant_ids {
+                let producer = client.clone();
+                let chunk = &chunk;
+                scope.spawn(move || {
+                    for _ in 0..SWEEP_PASSES {
+                        let responses =
+                            producer.predict_all_for(id, chunk).unwrap();
+                        assert_eq!(responses.len(), SWEEP_CHUNK);
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let m = coord.metrics();
+        assert_eq!(
+            (m.served_approx + m.served_exact) as usize,
+            total,
+            "sweep lost requests"
+        );
+        let rps = total as f64 / wall;
+        println!(
+            "shards={shards}  {rps:>9.0} req/s   mean batch \
+             {:>6.1}   wall {wall:.2}s",
+            m.mean_batch_size
+        );
+        rows.push(Json::obj(vec![
+            ("shards", Json::num(shards as f64)),
+            ("requests", Json::num(total as f64)),
+            ("wall_s", Json::num(wall)),
+            ("throughput_rps", Json::num(rps)),
+            ("mean_batch_size", Json::num(m.mean_batch_size)),
+            ("mean_latency_s", Json::num(m.mean_latency_s)),
+        ]));
+        coord.shutdown().unwrap();
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_shard_scaling")),
+        ("tenants", Json::num(SWEEP_TENANTS as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serving.json", doc.to_string_pretty()).unwrap();
+    println!("\n(JSON: BENCH_serving.json)");
+    let _ = std::fs::remove_dir_all(&dir);
 }

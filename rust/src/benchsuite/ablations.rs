@@ -10,7 +10,7 @@
 use std::time::Duration;
 
 use crate::approx::builder::build_approx_model;
-use crate::coordinator::{Coordinator, CoordinatorConfig, RoutePolicy};
+use crate::coordinator::{Coordinator, RoutePolicy};
 use crate::data::synth;
 use crate::linalg::{quadform, syrk, Mat, MathBackend};
 use crate::svm::smo::{train_csvc, SmoParams};
@@ -166,17 +166,13 @@ pub fn run_routing(ctx: &BenchContext) -> Result<String> {
             RoutePolicy::AlwaysExact,
             RoutePolicy::Hybrid,
         ] {
-            let coord = Coordinator::start(
-                model.clone(),
-                am.clone(),
-                CoordinatorConfig {
-                    policy,
-                    max_wait: Duration::from_millis(1),
-                    ..Default::default()
-                },
-            )?;
+            let coord = Coordinator::builder()
+                .policy(policy)
+                .max_wait(Duration::from_millis(1))
+                .start(model.clone(), am.clone())?;
+            let client = coord.client();
             let t0 = std::time::Instant::now();
-            let responses = coord.predict_all(&traffic.x)?;
+            let responses = client.predict_all(&traffic.x)?;
             let wall = t0.elapsed().as_secs_f64();
             let labels: Vec<f32> =
                 responses.iter().map(|r| r.label).collect();

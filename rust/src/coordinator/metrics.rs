@@ -2,6 +2,13 @@
 //! histogram + Welford moments), bound-violation counts, throughput —
 //! globally and broken down per model id, so multi-tenant operators can
 //! see each tenant's route mix and latency.
+//!
+//! Sharded coordinators give every shard its *own* [`Metrics`] sink (no
+//! cross-shard lock contention on the record path) and fan the sinks in
+//! at snapshot time with [`Metrics::aggregate`]: counters and
+//! histograms sum, Welford moments merge exactly, and per-model rows
+//! reported by several shards **sum** rather than overwrite — each row
+//! also lists the shard indices that served the model.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
@@ -34,6 +41,15 @@ impl PerModel {
             dropped: 0,
             latency: Welford::new(),
         }
+    }
+
+    /// Fan-in: sum counters, merge moments (never overwrite).
+    fn absorb(&mut self, other: &PerModel) {
+        self.served_approx += other.served_approx;
+        self.served_exact += other.served_exact;
+        self.out_of_bound += other.out_of_bound;
+        self.dropped += other.dropped;
+        self.latency.merge(&other.latency);
     }
 }
 
@@ -87,6 +103,11 @@ pub struct ModelMetricsSnapshot {
     /// channel; this counter is the operational aggregate.
     pub dropped: u64,
     pub mean_latency_s: f64,
+    /// Shard indices that reported traffic for this model, ascending.
+    /// Rendezvous placement keeps this a single shard in steady state;
+    /// aggregation still sums correctly if several shards report the
+    /// same id (e.g. across a shard-count change).
+    pub shards: Vec<usize>,
 }
 
 impl ModelMetricsSnapshot {
@@ -119,6 +140,9 @@ pub struct MetricsSnapshot {
     pub mean_latency_s: f64,
     pub p_latency_s: Vec<(f64, f64)>,
     pub throughput_rps: f64,
+    /// How many shard sinks were fanned into this snapshot (1 for an
+    /// unsharded coordinator).
+    pub shard_count: usize,
     /// Breakdown keyed by model id, sorted by id.
     pub per_model: Vec<ModelMetricsSnapshot>,
 }
@@ -191,22 +215,58 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
-        let elapsed = g
+        Metrics::aggregate(&[self])
+    }
+
+    /// Fan shard sinks into one snapshot. Slice order defines the shard
+    /// index reported in [`ModelMetricsSnapshot::shards`]. Counters and
+    /// histograms sum, Welford moments merge exactly, and per-model
+    /// rows reported by several sinks are **summed**, never
+    /// overwritten; `started` is the earliest sink's, so throughput is
+    /// measured over the whole plane's serving window.
+    pub fn aggregate(shards: &[&Metrics]) -> MetricsSnapshot {
+        let mut merged = Inner::default();
+        let mut model_shards: HashMap<ModelId, Vec<usize>> = HashMap::new();
+        for (index, sink) in shards.iter().enumerate() {
+            let g = sink.inner.lock().unwrap();
+            merged.started = match (merged.started, g.started) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            merged.served_approx += g.served_approx;
+            merged.served_exact += g.served_exact;
+            merged.out_of_bound += g.out_of_bound;
+            merged.dropped += g.dropped;
+            merged.batches += g.batches;
+            merged.batch_sizes.merge(&g.batch_sizes);
+            merged.latency.merge(&g.latency);
+            for (bucket, &h) in g.histogram.iter().enumerate() {
+                merged.histogram[bucket] += h;
+            }
+            for (id, pm) in &g.per_model {
+                merged
+                    .per_model
+                    .entry(id.clone())
+                    .or_insert_with(PerModel::new)
+                    .absorb(pm);
+                model_shards.entry(id.clone()).or_default().push(index);
+            }
+        }
+        let elapsed = merged
             .started
             .map(|s| s.elapsed().as_secs_f64())
             .unwrap_or(0.0)
             .max(1e-9);
-        let total = g.served_approx + g.served_exact;
+        let total = merged.served_approx + merged.served_exact;
         // Percentiles from the histogram (bucket lower edges).
         let mut p_latency = Vec::new();
-        let served = g.latency.count();
+        let served = merged.latency.count();
         if served > 0 {
             for target in [50.0f64, 95.0, 99.0] {
                 let want = (target / 100.0 * served as f64).ceil() as u64;
                 let mut acc = 0u64;
                 let mut val = bucket_lo(BUCKETS - 1);
-                for (i, &h) in g.histogram.iter().enumerate() {
+                for (i, &h) in merged.histogram.iter().enumerate() {
                     acc += h;
                     if acc >= want {
                         val = bucket_lo(i);
@@ -216,7 +276,7 @@ impl Metrics {
                 p_latency.push((target, val));
             }
         }
-        let mut per_model: Vec<ModelMetricsSnapshot> = g
+        let mut per_model: Vec<ModelMetricsSnapshot> = merged
             .per_model
             .iter()
             .map(|(id, pm)| ModelMetricsSnapshot {
@@ -226,19 +286,21 @@ impl Metrics {
                 out_of_bound: pm.out_of_bound,
                 dropped: pm.dropped,
                 mean_latency_s: pm.latency.mean(),
+                shards: model_shards.get(id).cloned().unwrap_or_default(),
             })
             .collect();
         per_model.sort_by(|a, b| a.id.cmp(&b.id));
         MetricsSnapshot {
-            served_approx: g.served_approx,
-            served_exact: g.served_exact,
-            out_of_bound: g.out_of_bound,
-            dropped: g.dropped,
-            batches: g.batches,
-            mean_batch_size: g.batch_sizes.mean(),
-            mean_latency_s: g.latency.mean(),
+            served_approx: merged.served_approx,
+            served_exact: merged.served_exact,
+            out_of_bound: merged.out_of_bound,
+            dropped: merged.dropped,
+            batches: merged.batches,
+            mean_batch_size: merged.batch_sizes.mean(),
+            mean_latency_s: merged.latency.mean(),
             p_latency_s: p_latency,
             throughput_rps: total as f64 / elapsed,
+            shard_count: shards.len().max(1),
             per_model,
         }
     }
@@ -259,6 +321,15 @@ impl MetricsSnapshot {
                         ("dropped", Json::num(m.dropped as f64)),
                         ("approx_fraction", Json::num(m.approx_fraction())),
                         ("mean_latency_s", Json::num(m.mean_latency_s)),
+                        (
+                            "shards",
+                            Json::Arr(
+                                m.shards
+                                    .iter()
+                                    .map(|&s| Json::num(s as f64))
+                                    .collect(),
+                            ),
+                        ),
                     ]),
                 )
             })
@@ -272,6 +343,7 @@ impl MetricsSnapshot {
             ("mean_batch_size", Json::num(self.mean_batch_size)),
             ("mean_latency_s", Json::num(self.mean_latency_s)),
             ("throughput_rps", Json::num(self.throughput_rps)),
+            ("shard_count", Json::num(self.shard_count as f64)),
             (
                 "latency_percentiles",
                 Json::Arr(
@@ -291,16 +363,24 @@ impl MetricsSnapshot {
     }
 
     /// Render the per-model breakdown as an aligned text table (used by
-    /// the CLI, `serving_bench` and the multi-tenant example).
+    /// the CLI, `serving_bench` and the multi-tenant example). The
+    /// `shard` column shows which executor lane(s) served the model.
     pub fn per_model_table(&self) -> String {
         let mut out = String::from(
-            "model                     served   approx    exact  oob drop \
-             mean lat\n",
+            "model                    shard  served   approx    exact  \
+             oob drop  mean lat\n",
         );
         for m in &self.per_model {
+            let shards = m
+                .shards
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(",");
             out.push_str(&format!(
-                "{:<24} {:>7} {:>8} {:>8} {:>4} {:>4} {:>9.1} µs\n",
+                "{:<24} {:>5} {:>7} {:>8} {:>8} {:>4} {:>4} {:>8.1} µs\n",
                 m.id,
+                shards,
                 m.served_total(),
                 m.served_approx,
                 m.served_exact,
@@ -363,6 +443,55 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_sums_same_model_id_across_shards() {
+        // Regression: two shards reporting the SAME model id must sum
+        // into one row — dropped and out-of-bound counts included —
+        // never overwrite each other.
+        let shard0 = Metrics::new();
+        let shard1 = Metrics::new();
+        let id = mid("tenant");
+        shard0.record_batch(&id, Route::Approx, 10);
+        shard0.record_response(&id, Duration::from_micros(50), false);
+        shard0.record_dropped(&id, 3);
+        shard1.record_batch(&id, Route::Approx, 7);
+        shard1.record_batch(&id, Route::Exact, 2);
+        shard1.record_response(&id, Duration::from_micros(150), false);
+        shard1.record_dropped(&id, 4);
+        let s = Metrics::aggregate(&[&shard0, &shard1]);
+        assert_eq!(s.shard_count, 2);
+        assert_eq!(s.per_model.len(), 1, "one row per model id");
+        let m = &s.per_model[0];
+        assert_eq!(m.served_approx, 17, "summed, not overwritten");
+        assert_eq!(m.served_exact, 2);
+        assert_eq!(m.dropped, 7, "dropped must survive fan-in");
+        assert_eq!(m.out_of_bound, 2, "oob must survive fan-in");
+        assert_eq!(m.shards, vec![0, 1]);
+        // Globals match the per-model sums.
+        assert_eq!(s.served_approx, 17);
+        assert_eq!(s.dropped, 7);
+        assert_eq!(s.out_of_bound, 2);
+        assert_eq!(s.batches, 3);
+        // Merged mean latency is the exact pooled mean (100µs).
+        assert!((m.mean_latency_s - 100e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_keeps_distinct_models_distinct() {
+        let shard0 = Metrics::new();
+        let shard1 = Metrics::new();
+        shard0.record_batch(&mid("alpha"), Route::Approx, 5);
+        shard1.record_batch(&mid("bravo"), Route::Exact, 3);
+        let s = Metrics::aggregate(&[&shard0, &shard1]);
+        assert_eq!(s.per_model.len(), 2);
+        assert_eq!(s.per_model[0].id, "alpha");
+        assert_eq!(s.per_model[0].shards, vec![0]);
+        assert_eq!(s.per_model[1].id, "bravo");
+        assert_eq!(s.per_model[1].shards, vec![1]);
+        let table = s.per_model_table();
+        assert!(table.contains("shard"), "table gains the shard column");
+    }
+
+    #[test]
     fn histogram_buckets_monotone() {
         assert!(bucket_of(Duration::from_nanos(100)) <= bucket_of(Duration::from_micros(1)));
         assert!(bucket_of(Duration::from_micros(1)) < bucket_of(Duration::from_millis(1)));
@@ -380,5 +509,7 @@ mod tests {
         assert!(j.contains("latency_percentiles"));
         assert!(j.contains("\"models\""));
         assert!(j.contains("\"default\""));
+        assert!(j.contains("\"shard_count\""));
+        assert!(j.contains("\"shards\""));
     }
 }

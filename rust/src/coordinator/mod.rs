@@ -1,25 +1,32 @@
-//! L3 coordinator: the serving system around the paper's approximation.
+//! L3 coordinator: the sharded serving plane around the paper's
+//! approximation.
 //!
 //! Architecture (vLLM-router-like, std-only threads):
 //!
 //! ```text
-//!  Client/Session ──▶ bounded ingress queue ──▶ batcher thread
-//!  (typed submit,                                │ (groups by model id;
-//!   per-client                                   │  flushes each tenant on
-//!   completion                                   │  ITS max_batch/max_wait —
-//!   channels)                                    │  TenantPolicy or default)
-//!                                                ▼
-//!                                executor thread (drives every substrate
-//!                                through the Predictor trait — native
-//!                                Loops/Blocked or the PJRT engine —
-//!                                resolves per-model state + policy via
-//!                                the registry, applies each model's
-//!                                Eq. 3.11 budget, splits approx/exact)
+//!  Client/Session ──▶ rendezvous placement on model id (shard::assign)
+//!  (typed submit,        │
+//!   per-client           ├─▶ shard 0: ingress ─▶ batcher ─▶ executor
+//!   completion           ├─▶ shard 1: ingress ─▶ batcher ─▶ executor
+//!   channels)            └─▶ shard n: ingress ─▶ batcher ─▶ executor
+//!                             (each lane: per-model grouping, tenant
+//!                              max_batch/max_wait flush, resident-model
+//!                              LRU, swap-poll + async generation
+//!                              prefetch, its own metrics sink)
 //!                                                │
 //!                                                ▼
-//!                          per-request Completion: Ok(PredictResponse)
+//!                          fan-in on the submitting client's channel:
+//!                          per-request Completion — Ok(PredictResponse)
 //!                          or fail-fast Err(PredictError)
 //! ```
+//!
+//! Every executor drives every substrate through the
+//! [`crate::predictor::Predictor`] trait (native Loops/Blocked or the
+//! PJRT engine), resolves per-model state + [`TenantPolicy`] via the
+//! registry, and applies each model's Eq. 3.11 budget. Because a model's
+//! batches all land on its one owning shard, an `n`-shard plane returns
+//! decisions identical to a single-shard one — sharding changes *where*
+//! a tenant is served, never *what* it is served.
 //!
 //! The router turns the paper's run-time validity check (§3.1: "this
 //! bound can be verified during prediction at no extra cost") into an
@@ -30,11 +37,13 @@
 //!
 //! Multi-tenant serving: [`CoordinatorBuilder::start_registry`] serves
 //! every model published in a [`crate::registry::ModelStore`]. Requests
-//! carry a model id, metrics are broken down per model, each tenant can
-//! carry its own [`TenantPolicy`] (route pin, batch shape, residency
-//! hint) inside its `.arbf` bundle, and republishing a bundle hot-swaps
-//! the served version — weights and policy — between batches without
-//! dropping in-flight requests (see [`crate::registry`]).
+//! carry a model id, metrics are broken down per model (with the owning
+//! shard), each tenant can carry its own [`TenantPolicy`] (route pin,
+//! batch shape, residency hint) inside its `.arbf` bundle, and
+//! republishing a bundle hot-swaps the served version — weights and
+//! policy — on the owning shard without dropping in-flight requests;
+//! the `.arbf` decode happens on a prefetch thread, off the request
+//! path (see [`crate::registry`]).
 //!
 //! Error model: every submitted request is answered with exactly one
 //! [`Completion`]. Executor-side failures (unknown model, dimension
@@ -49,6 +58,7 @@ pub mod policy;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod shard;
 pub mod worker;
 
 pub use metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};

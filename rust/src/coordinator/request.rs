@@ -13,8 +13,9 @@ use std::time::{Duration, Instant};
 
 pub use crate::registry::ModelId;
 
-/// Model id used by the single-model [`super::Coordinator::start`] path
-/// and by [`super::Client::submit`].
+/// Model id used by the single-model
+/// [`super::CoordinatorBuilder::start`] path and by
+/// [`super::Client::submit`].
 pub const DEFAULT_MODEL: &str = "default";
 
 pub(crate) fn default_model_id() -> ModelId {

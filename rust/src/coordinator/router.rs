@@ -18,12 +18,6 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
-    /// Shim kept for one release: prefer `s.parse::<RoutePolicy>()`
-    /// (the [`std::str::FromStr`] impl below, the single name table).
-    pub fn parse(s: &str) -> crate::Result<Self> {
-        s.parse()
-    }
-
     /// Canonical name; [`std::fmt::Display`] delegates here.
     pub fn name(&self) -> &'static str {
         match self {
@@ -121,8 +115,7 @@ mod tests {
             RoutePolicy::AlwaysExact
         );
         assert!("x".parse::<RoutePolicy>().is_err());
-        // The legacy shim delegates to FromStr.
-        assert_eq!(RoutePolicy::parse("bound").unwrap(), RoutePolicy::Hybrid);
+        assert_eq!("bound".parse::<RoutePolicy>().unwrap(), RoutePolicy::Hybrid);
     }
 
     #[test]

@@ -1,30 +1,35 @@
-//! The coordinator: wires ingress queue → batcher → executor → per-client
-//! completion channels, owns the threads, and exposes the serving API.
+//! The coordinator: a sharded serving plane behind a stable client API.
 //!
-//! The public surface (since the `Predictor`/client redesign):
+//! [`CoordinatorBuilder::shards`]`(n)` spins up a
+//! `ShardSet` ([`super::shard`]) of `n` executor lanes — each with its own
+//! ingress queue, batcher, resident-model LRU and
+//! [`crate::predictor::Predictor`] instances — and the public surface
+//! stays exactly the client API:
 //!
 //! * [`CoordinatorBuilder`] — configure and start a coordinator over one
 //!   in-memory model pair ([`CoordinatorBuilder::start`]) or a whole
 //!   registry ([`CoordinatorBuilder::start_registry`]).
-//! * [`Client`] — a cloneable submission handle. Every clone has its own
-//!   completion channel, so independent callers never steal each
-//!   other's results. Completions are [`Completion`]s:
+//! * [`Client`] — the **only ingress**: a cloneable submission handle.
+//!   Every clone has its own completion channel, so independent callers
+//!   never steal each other's results. Submission places the request on
+//!   its model's owning shard (rendezvous hashing on the model id, see
+//!   [`super::shard::assign`]); completions fan back in on the
+//!   submitting client's channel. Completions are [`Completion`]s:
 //!   `Ok(PredictResponse)` or a fail-fast `Err(PredictError)` (unknown
 //!   model, dimension drift across a swap, execution failure, shutdown).
 //! * [`Session`] — a scoped batch of submissions on its own private
 //!   channel; [`Session::wait_all`] returns completions in submission
-//!   order.
+//!   order even when several shards complete into it concurrently.
 //!
-//! The original `Coordinator::submit`/`submit_to`/`recv`/`predict_all`
-//! methods remain as thin shims over an internal [`Client`] for one
-//! release (see the deprecation notes on each); new code should hold a
+//! The pre-redesign `Coordinator::submit*`/`recv`/`predict_all*`
+//! methods (and the `Coordinator::start*` constructors) were removed in
+//! this release after their one-release deprecation window; hold a
 //! [`Client`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::approx::ApproxModel;
@@ -34,16 +39,39 @@ use crate::registry::ModelStore;
 use crate::svm::SvmModel;
 use crate::{Error, Result};
 
-use super::batcher::{run_batcher, IngressQueue};
+use super::batcher::IngressQueue;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::policy::PolicyTable;
 use super::request::{
     Completion, ModelId, PredictError, PredictErrorKind, PredictRequest,
-    PredictResponse, WorkItem, DEFAULT_MODEL,
+    PredictResponse, DEFAULT_MODEL,
 };
 use super::router::RoutePolicy;
-use super::worker::{ModelSource, WorkerParams};
+use super::shard::{assign, ShardSet};
+use super::worker::ModelSource;
 pub use super::worker::ExecSpec;
+
+/// Default shard count: the `APPROXRBF_TEST_SHARDS` environment
+/// variable when set (the CI `tier1-sharded` job runs the whole suite
+/// at 4), else 1. An explicit [`CoordinatorBuilder::shards`] always
+/// wins. The override is logged once so a production embedder with a
+/// leaked test environment can see why their plane is sharded.
+fn default_shards() -> usize {
+    let n = std::env::var("APPROXRBF_TEST_SHARDS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|n| n.clamp(1, 64))
+        .unwrap_or(1);
+    if n != 1 {
+        static ANNOUNCED: std::sync::Once = std::sync::Once::new();
+        ANNOUNCED.call_once(|| {
+            log_warn!(
+                "coordinator: APPROXRBF_TEST_SHARDS={n} overrides the \
+                 default shard count (builder .shards() still wins)"
+            );
+        });
+    }
+    n
+}
 
 /// Coordinator configuration (the [`CoordinatorBuilder`] is the
 /// ergonomic way to assemble one).
@@ -59,14 +87,26 @@ pub struct CoordinatorConfig {
     /// Default max time a request waits for its batch to fill
     /// (per-tenant override: `TenantPolicy::max_wait`).
     pub max_wait: Duration,
-    /// Ingress queue capacity (backpressure threshold).
+    /// Per-shard ingress queue capacity (backpressure threshold).
     pub queue_capacity: usize,
-    /// Registry mode: how often the executor revalidates a model's
-    /// on-disk generation without an explicit [`Coordinator::refresh`].
+    /// Registry mode: how often each shard's executor revalidates a
+    /// model's on-disk generation without an explicit
+    /// [`Coordinator::refresh`]. A detected republish is decoded off
+    /// the hot path (shard prefetch) and swapped in atomically.
     pub swap_poll: Duration,
-    /// Registry mode: LRU bound on models fully resident in the
-    /// executor (evicted tenants reload lazily from the store).
+    /// Plane-wide residency target: each shard's executor is capped at
+    /// its even share of this plus 25% headroom (rendezvous ownership
+    /// is binomial, not exact), so worst-case total residency is
+    /// 1.25× this value. Evicted tenants reload lazily from the store.
     pub max_resident_models: usize,
+    /// Number of executor lanes. Tenants are placed by rendezvous
+    /// hashing on the model id, so every model's batches stay on one
+    /// shard. Defaults to `APPROXRBF_TEST_SHARDS` (else 1).
+    pub shards: usize,
+    /// Registry mode: pre-decode each shard's owned tenants at startup
+    /// (shard-aware warm; see
+    /// [`crate::registry::ModelStore::warm_where`]).
+    pub warm_start: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,6 +119,8 @@ impl Default for CoordinatorConfig {
             queue_capacity: 4096,
             swap_poll: Duration::from_millis(200),
             max_resident_models: 512,
+            shards: default_shards(),
+            warm_start: false,
         }
     }
 }
@@ -88,7 +130,7 @@ impl Default for CoordinatorConfig {
 /// ```text
 /// let coord = CoordinatorBuilder::new()
 ///     .policy(RoutePolicy::Hybrid)
-///     .max_batch(128)
+///     .shards(4)
 ///     .start_registry(store)?;
 /// let client = coord.client();
 /// ```
@@ -144,7 +186,21 @@ impl CoordinatorBuilder {
         self
     }
 
-    /// Spawn the serving threads over one in-memory model pair, served
+    /// Number of executor lanes ([`super::shard`]). Overrides the
+    /// `APPROXRBF_TEST_SHARDS` default.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.config.shards = n.clamp(1, 64);
+        self
+    }
+
+    /// Registry mode: pre-decode each shard's owned tenants at startup
+    /// so first requests skip the cold `.arbf` decode.
+    pub fn warm_start(mut self, warm: bool) -> Self {
+        self.config.warm_start = warm;
+        self
+    }
+
+    /// Spawn the serving plane over one in-memory model pair, served
     /// as [`DEFAULT_MODEL`]. `exact` and `approx` must describe the
     /// same underlying model (the builder checks the dimensions agree).
     pub fn start(
@@ -167,9 +223,10 @@ impl CoordinatorBuilder {
         )
     }
 
-    /// Spawn the serving threads over a model registry: any id stored
+    /// Spawn the serving plane over a model registry: any id stored
     /// in `store` can be addressed via [`Client::submit_to`], and
-    /// republishing a bundle hot-swaps its weights and policy.
+    /// republishing a bundle hot-swaps its weights and policy on the
+    /// owning shard.
     pub fn start_registry(
         self,
         store: Arc<ModelStore>,
@@ -192,18 +249,20 @@ enum DimCheck {
 
 /// State shared between the [`Coordinator`] and every [`Client`].
 struct Shared {
-    ingress: Arc<IngressQueue>,
-    metrics: Arc<Metrics>,
+    /// Per-shard ingress queues, indexed by [`assign`] output.
+    ingresses: Vec<Arc<IngressQueue>>,
+    /// Per-shard metrics sinks, fanned in by [`Metrics::aggregate`].
+    metrics: Vec<Arc<Metrics>>,
     next_id: AtomicU64,
     dims: DimCheck,
-    /// Bumped by [`Coordinator::refresh`]; the executor revalidates
-    /// every tenant it touches after a bump.
+    /// Bumped by [`Coordinator::refresh`]; every shard's executor
+    /// revalidates the tenants it touches after a bump.
     epoch: Arc<AtomicU64>,
 }
 
 impl Shared {
     /// Expected feature dimension for `model` (validated at submit so
-    /// shape errors surface to the caller, not inside the executor).
+    /// shape errors surface to the caller, not inside an executor).
     fn dim_of(&self, model: &str) -> Result<usize> {
         match &self.dims {
             DimCheck::Static(d) => {
@@ -231,8 +290,8 @@ impl Shared {
         }
     }
 
-    /// Validate and enqueue one instance; its completion will be
-    /// delivered on `reply`.
+    /// Validate and enqueue one instance on its model's owning shard;
+    /// its completion will be delivered on `reply`.
     fn submit_with(
         &self,
         model: &str,
@@ -258,7 +317,8 @@ impl Shared {
                 },
             ));
         }
-        let ok = self.ingress.push(PredictRequest {
+        let shard = assign(model, self.ingresses.len());
+        let ok = self.ingresses[shard].push(PredictRequest {
             id,
             model: mid.clone(),
             features,
@@ -271,15 +331,26 @@ impl Shared {
             Err(PredictError::new(id, mid, PredictErrorKind::Shutdown))
         }
     }
+
+    fn metrics(&self) -> MetricsSnapshot {
+        let refs: Vec<&Metrics> =
+            self.metrics.iter().map(|m| &**m).collect();
+        Metrics::aggregate(&refs)
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.ingresses.iter().map(|q| q.len()).sum()
+    }
 }
 
-/// A cloneable submission handle onto a running [`Coordinator`].
+/// A cloneable submission handle onto a running [`Coordinator`] — the
+/// crate's only serving ingress.
 ///
 /// Each `Client` (and each clone) owns a private completion channel:
 /// completions for its submissions are delivered there and nowhere
-/// else. Submission errors and executor-side failures are both typed
-/// [`PredictError`]s, so a request that cannot be served fails fast
-/// instead of timing out.
+/// else, regardless of which shard served them. Submission errors and
+/// executor-side failures are both typed [`PredictError`]s, so a
+/// request that cannot be served fails fast instead of timing out.
 pub struct Client {
     shared: Arc<Shared>,
     reply_tx: Sender<Completion>,
@@ -301,7 +372,8 @@ impl Client {
     }
 
     /// Enqueue one instance for [`DEFAULT_MODEL`]; returns its request
-    /// id. Blocks when the ingress queue is full (backpressure).
+    /// id. Blocks when the owning shard's ingress queue is full
+    /// (backpressure).
     pub fn submit(
         &self,
         features: Vec<f32>,
@@ -360,13 +432,15 @@ impl Client {
             .collect()
     }
 
-    /// Serving metrics snapshot (shared across all clients).
+    /// Serving metrics snapshot, aggregated across every shard (shared
+    /// by all clients).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared.metrics()
     }
 
+    /// Requests queued across every shard's ingress.
     pub fn queue_depth(&self) -> usize {
-        self.shared.ingress.len()
+        self.shared.queue_depth()
     }
 }
 
@@ -374,7 +448,7 @@ impl Client {
 ///
 /// Submit through the session, then call [`Session::wait_all`] to get
 /// every completion in submission order — including fail-fast
-/// [`PredictError`]s for requests the executor could not serve.
+/// [`PredictError`]s for requests the executors could not serve.
 pub struct Session<'c> {
     client: &'c Client,
     reply_tx: Sender<Completion>,
@@ -421,14 +495,14 @@ impl Session<'_> {
     }
 
     /// Wait for every submission's completion and return them in
-    /// submission order. If the executor terminates, every still-
+    /// submission order. If the executors terminate, every still-
     /// pending request completes as `Err(PredictError)` with
     /// [`PredictErrorKind::Shutdown`] — callers never hang on a dead
     /// coordinator. Errors with [`Error::Other`] only if `timeout`
     /// elapses first.
     pub fn wait_all(self, timeout: Duration) -> Result<Vec<Completion>> {
         // Drop our own sender half first: once every in-flight
-        // request's reply clone is gone (executor/batcher dead), the
+        // request's reply clone is gone (executors/batchers dead), the
         // receive loop must observe Disconnected rather than spin on
         // timeouts until the deadline.
         let Session { client: _, reply_tx, reply_rx, submitted } = self;
@@ -481,17 +555,15 @@ impl Session<'_> {
     }
 }
 
-/// A running serving instance over one model or a whole registry.
+/// A running serving plane over one model or a whole registry.
 ///
-/// Owns the batcher/executor threads. Hand out [`Coordinator::client`]
-/// handles for submission; the coordinator itself keeps an internal
-/// legacy client so the original `submit`/`recv` methods keep working
-/// during the deprecation window.
+/// Owns the `ShardSet` (per-shard batcher/executor threads). Hand out
+/// [`Coordinator::client`] handles for submission — the coordinator
+/// itself has no submit surface.
 pub struct Coordinator {
     shared: Arc<Shared>,
-    legacy: Client,
-    batcher: Option<JoinHandle<()>>,
-    worker: Option<JoinHandle<Result<()>>>,
+    shards: ShardSet,
+    finished: bool,
 }
 
 impl Coordinator {
@@ -500,96 +572,21 @@ impl Coordinator {
         CoordinatorBuilder::new()
     }
 
-    /// Start over one in-memory model pair with an explicit config.
-    ///
-    /// Shim kept for one release: prefer
-    /// [`Coordinator::builder`] → [`CoordinatorBuilder::start`].
-    pub fn start(
-        exact: SvmModel,
-        approx: ApproxModel,
-        config: CoordinatorConfig,
-    ) -> Result<Coordinator> {
-        CoordinatorBuilder::from_config(config).start(exact, approx)
-    }
-
-    /// Start over a model registry with an explicit config.
-    ///
-    /// Shim kept for one release: prefer
-    /// [`Coordinator::builder`] → [`CoordinatorBuilder::start_registry`].
-    pub fn start_registry(
-        store: Arc<ModelStore>,
-        config: CoordinatorConfig,
-    ) -> Result<Coordinator> {
-        CoordinatorBuilder::from_config(config).start_registry(store)
-    }
-
     fn start_inner(
         source: ModelSource,
         dims: DimCheck,
         config: CoordinatorConfig,
     ) -> Result<Coordinator> {
-        let ingress = Arc::new(IngressQueue::new(config.queue_capacity));
-        let metrics = Arc::new(Metrics::new());
         let epoch = Arc::new(AtomicU64::new(0));
-        let policies = Arc::new(PolicyTable::new());
-        let (work_tx, work_rx): (Sender<WorkItem>, Receiver<WorkItem>) =
-            mpsc::channel();
-
-        // Executor thread (owns predictors / PJRT engine / tenants).
-        let worker_metrics = metrics.clone();
-        let worker_epoch = epoch.clone();
-        let spec = config.exec.clone();
-        let params = WorkerParams {
-            policy: config.policy,
-            swap_poll: config.swap_poll,
-            max_resident: config.max_resident_models,
-            policies: policies.clone(),
-        };
-        let worker = std::thread::Builder::new()
-            .name("approxrbf-executor".into())
-            .spawn(move || {
-                let out = super::worker::run_worker(
-                    spec,
-                    source,
-                    params,
-                    worker_epoch,
-                    work_rx,
-                    worker_metrics,
-                );
-                if let Err(ref e) = out {
-                    log_warn!("executor exited with error: {e}");
-                }
-                out
-            })
-            .map_err(|e| Error::Other(format!("spawn executor: {e}")))?;
-
-        // Batcher thread: drains ingress, groups by model id, flushes
-        // each group on its tenant's max_batch/max_wait. Routing
-        // happens in the executor, which owns each model's Eq. 3.11
-        // budget and route policy.
-        let b_ingress = ingress.clone();
-        let b_policies = policies.clone();
-        let (max_batch, max_wait) = (config.max_batch, config.max_wait);
-        let batcher = std::thread::Builder::new()
-            .name("approxrbf-batcher".into())
-            .spawn(move || {
-                run_batcher(b_ingress, work_tx, b_policies, max_batch, max_wait)
-            })
-            .map_err(|e| Error::Other(format!("spawn batcher: {e}")))?;
-
+        let shards = ShardSet::spawn(&config, &source, &epoch)?;
         let shared = Arc::new(Shared {
-            ingress,
-            metrics,
+            ingresses: shards.ingresses(),
+            metrics: shards.metrics(),
             next_id: AtomicU64::new(0),
             dims,
             epoch,
         });
-        Ok(Coordinator {
-            legacy: Client::new(shared.clone()),
-            shared,
-            batcher: Some(batcher),
-            worker: Some(worker),
-        })
+        Ok(Coordinator { shared, shards, finished: false })
     }
 
     /// A new independent [`Client`] handle (cheap; cloneable).
@@ -597,27 +594,14 @@ impl Coordinator {
         Client::new(self.shared.clone())
     }
 
-    /// Enqueue one instance for [`DEFAULT_MODEL`] on the coordinator's
-    /// internal client.
-    ///
-    /// Shim kept for one release: prefer [`Client::submit`] via
-    /// [`Coordinator::client`] (typed [`PredictError`]s, per-client
-    /// completion channels).
-    pub fn submit(&self, features: Vec<f32>) -> Result<u64> {
-        self.legacy.submit(features).map_err(Error::from)
+    /// Number of executor lanes in the plane.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Enqueue one instance for a named model on the coordinator's
-    /// internal client.
-    ///
-    /// Shim kept for one release: prefer [`Client::submit_to`].
-    pub fn submit_to(&self, model: &str, features: Vec<f32>) -> Result<u64> {
-        self.legacy.submit_to(model, features).map_err(Error::from)
-    }
-
-    /// Force the executor to revalidate model generations before the
-    /// next batch of each tenant (hot-swap without waiting out
-    /// `swap_poll`). Also drops cached dimension checks.
+    /// Force every shard's executor to revalidate model generations
+    /// before the next batch of each tenant (hot-swap without waiting
+    /// out `swap_poll`). Also drops cached dimension checks.
     pub fn refresh(&self) {
         if let DimCheck::Registry { cache, .. } = &self.shared.dims {
             cache.lock().unwrap().clear();
@@ -625,73 +609,29 @@ impl Coordinator {
         self.shared.epoch.fetch_add(1, Ordering::AcqRel);
     }
 
-    /// Receive the next successful response on the coordinator's
-    /// internal client, silently skipping error completions (the
-    /// pre-redesign drop semantics).
-    ///
-    /// Shim kept for one release: prefer [`Client::recv`], which
-    /// surfaces [`PredictError`]s instead of hiding them.
-    pub fn recv(&self, timeout: Duration) -> Option<PredictResponse> {
-        let deadline = Instant::now() + timeout;
-        loop {
-            // saturating: a zero timeout still polls for an already-
-            // delivered completion (the pre-redesign semantics).
-            let remaining =
-                deadline.saturating_duration_since(Instant::now());
-            match self.legacy.recv(remaining) {
-                Some(Ok(resp)) => return Some(resp),
-                Some(Err(_)) => continue,
-                None => return None,
-            }
-        }
-    }
-
-    /// Synchronous convenience on the internal client: every row of
-    /// `z` to [`DEFAULT_MODEL`], responses ordered by row.
-    ///
-    /// Shim kept for one release: prefer [`Client::predict_all`].
-    pub fn predict_all(&self, z: &Mat) -> Result<Vec<PredictResponse>> {
-        self.legacy.predict_all(z)
-    }
-
-    /// [`Coordinator::predict_all`] addressed to a named model.
-    ///
-    /// Shim kept for one release: prefer [`Client::predict_all_for`].
-    pub fn predict_all_for(
-        &self,
-        model: &str,
-        z: &Mat,
-    ) -> Result<Vec<PredictResponse>> {
-        self.legacy.predict_all_for(model, z)
-    }
-
+    /// Metrics snapshot aggregated across every shard.
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        self.shared.metrics()
     }
 
+    /// Requests queued across every shard's ingress.
     pub fn queue_depth(&self) -> usize {
-        self.shared.ingress.len()
+        self.shared.queue_depth()
     }
 
-    /// Graceful shutdown: drain, stop threads, surface executor errors.
-    /// Clients that outlive the coordinator fail fast with
-    /// [`PredictErrorKind::Shutdown`].
+    /// Graceful shutdown: drain every shard, stop its threads, surface
+    /// executor errors. Clients that outlive the coordinator fail fast
+    /// with [`PredictErrorKind::Shutdown`].
     pub fn shutdown(mut self) -> Result<()> {
         self.shutdown_inner()
     }
 
     fn shutdown_inner(&mut self) -> Result<()> {
-        self.shared.ingress.close();
-        if let Some(h) = self.batcher.take() {
-            let _ = h.join();
+        if self.finished {
+            return Ok(());
         }
-        if let Some(h) = self.worker.take() {
-            match h.join() {
-                Ok(r) => r?,
-                Err(_) => return Err(Error::Other("executor panicked".into())),
-            }
-        }
-        Ok(())
+        self.finished = true;
+        self.shards.shutdown()
     }
 }
 
@@ -724,13 +664,11 @@ mod tests {
     #[test]
     fn serves_all_requests_and_matches_direct_eval() {
         let (model, am, ds) = setup(0.2);
-        let coord = Coordinator::start(
-            model.clone(),
-            am.clone(),
-            CoordinatorConfig::default(),
-        )
-        .unwrap();
-        let responses = coord.predict_all(&ds.x).unwrap();
+        let coord = Coordinator::builder()
+            .start(model.clone(), am.clone())
+            .unwrap();
+        let client = coord.client();
+        let responses = client.predict_all(&ds.x).unwrap();
         assert_eq!(responses.len(), ds.len());
         for (r, resp) in responses.iter().enumerate() {
             // γ in bound ⇒ hybrid routes to approx; value must match the
@@ -788,9 +726,7 @@ mod tests {
     #[test]
     fn client_outliving_coordinator_fails_fast_with_shutdown() {
         let (model, am, ds) = setup(0.2);
-        let coord =
-            Coordinator::start(model, am, CoordinatorConfig::default())
-                .unwrap();
+        let coord = Coordinator::builder().start(model, am).unwrap();
         let client = coord.client();
         coord.shutdown().unwrap();
         let err = client.submit(ds.x.row(0).to_vec()).unwrap_err();
@@ -800,10 +736,11 @@ mod tests {
     #[test]
     fn hybrid_escorts_out_of_bound_to_exact() {
         let (model, am, ds) = setup(1.5); // γ = 6× γ_max: all out of bound
-        let coord =
-            Coordinator::start(model.clone(), am, CoordinatorConfig::default())
-                .unwrap();
-        let responses = coord.predict_all(&ds.x).unwrap();
+        let coord = Coordinator::builder()
+            .start(model.clone(), am)
+            .unwrap();
+        let client = coord.client();
+        let responses = client.predict_all(&ds.x).unwrap();
         for (r, resp) in responses.iter().enumerate() {
             assert_eq!(resp.route, Route::Exact, "row {r}");
             assert!(!resp.in_bound);
@@ -824,8 +761,10 @@ mod tests {
                 .policy(policy)
                 .start(model.clone(), am.clone())
                 .unwrap();
-            let responses =
-                coord.predict_all(&ds.x.rows_slice(0, 20)).unwrap();
+            let responses = coord
+                .client()
+                .predict_all(&ds.x.rows_slice(0, 20))
+                .unwrap();
             assert!(responses.iter().all(|r| r.route == want));
             coord.shutdown().unwrap();
         }
@@ -834,12 +773,7 @@ mod tests {
     #[test]
     fn dim_mismatch_rejected_at_submit() {
         let (model, am, _) = setup(0.2);
-        let coord =
-            Coordinator::start(model, am, CoordinatorConfig::default())
-                .unwrap();
-        // Legacy shim keeps the crate-level error class…
-        assert!(coord.submit(vec![0.0; 99]).is_err());
-        // …and the client surfaces the typed kind.
+        let coord = Coordinator::builder().start(model, am).unwrap();
         let err = coord.client().submit(vec![0.0; 99]).unwrap_err();
         assert!(
             matches!(err.kind, PredictErrorKind::DimMismatch { got: 99, .. }),
@@ -851,14 +785,11 @@ mod tests {
     #[test]
     fn unknown_model_rejected_on_static_coordinator() {
         let (model, am, ds) = setup(0.2);
-        let coord =
-            Coordinator::start(model, am, CoordinatorConfig::default())
-                .unwrap();
-        let err =
-            coord.submit_to("ghost", ds.x.row(0).to_vec()).unwrap_err();
-        assert!(matches!(err, Error::InvalidArg(_)), "{err}");
-        let err =
-            coord.client().submit_to("ghost", ds.x.row(0).to_vec()).unwrap_err();
+        let coord = Coordinator::builder().start(model, am).unwrap();
+        let err = coord
+            .client()
+            .submit_to("ghost", ds.x.row(0).to_vec())
+            .unwrap_err();
         assert!(
             matches!(err.kind, PredictErrorKind::UnknownModel { .. }),
             "{err}"
@@ -869,25 +800,23 @@ mod tests {
     #[test]
     fn submit_after_shutdown_fails() {
         let (model, am, ds) = setup(0.2);
-        let coord = Coordinator::start(model, am, CoordinatorConfig::default())
-            .unwrap();
-        coord.shared.ingress.close();
-        assert!(coord.submit(ds.x.row(0).to_vec()).is_err());
+        let coord = Coordinator::builder().start(model, am).unwrap();
+        let client = coord.client();
+        for q in &coord.shared.ingresses {
+            q.close();
+        }
+        let err = client.submit(ds.x.row(0).to_vec()).unwrap_err();
+        assert_eq!(err.kind, PredictErrorKind::Shutdown);
     }
 
     #[test]
     fn batching_actually_batches() {
         let (model, am, ds) = setup(0.2);
-        let coord = Coordinator::start(
-            model,
-            am,
-            CoordinatorConfig {
-                max_wait: Duration::from_millis(20),
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let _ = coord.predict_all(&ds.x).unwrap();
+        let coord = Coordinator::builder()
+            .max_wait(Duration::from_millis(20))
+            .start(model, am)
+            .unwrap();
+        let _ = coord.client().predict_all(&ds.x).unwrap();
         let m = coord.metrics();
         assert!(
             m.mean_batch_size > 1.5,
@@ -895,6 +824,36 @@ mod tests {
             m.mean_batch_size
         );
         coord.shutdown().unwrap();
+    }
+
+    #[test]
+    fn sharded_static_plane_serves_identically_to_single_shard() {
+        // The static pair lives on exactly one shard (rendezvous on
+        // DEFAULT_MODEL); the other lanes idle. Decisions must be
+        // bit-identical to the unsharded plane.
+        let (model, am, ds) = setup(0.2);
+        let sub = ds.x.rows_slice(0, 40);
+        let single = Coordinator::builder()
+            .shards(1)
+            .start(model.clone(), am.clone())
+            .unwrap();
+        let sharded = Coordinator::builder()
+            .shards(3)
+            .start(model, am)
+            .unwrap();
+        assert_eq!(sharded.shard_count(), 3);
+        let r1 = single.client().predict_all(&sub).unwrap();
+        let r3 = sharded.client().predict_all(&sub).unwrap();
+        for (a, b) in r1.iter().zip(&r3) {
+            assert_eq!(a.decision.to_bits(), b.decision.to_bits());
+            assert_eq!(a.route, b.route);
+        }
+        let m = sharded.metrics();
+        assert_eq!(m.shard_count, 3);
+        assert_eq!(m.per_model.len(), 1);
+        assert_eq!(m.per_model[0].shards.len(), 1, "one owning shard");
+        single.shutdown().unwrap();
+        sharded.shutdown().unwrap();
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! The sharded serving plane: tenant placement and the per-shard
+//! executor pool behind the [`super::Client`] ingress.
+//!
+//! A coordinator built with [`super::CoordinatorBuilder::shards`]`(n)`
+//! owns a `ShardSet` of `n` independent shards. Each shard is a full
+//! serving lane — its own bounded ingress queue, its own batcher thread
+//! (per-model grouping, per-tenant flush policy), its own executor
+//! thread (resident-model LRU, [`crate::predictor::Predictor`]
+//! instances, swap polling + async generation prefetch) and its own
+//! metrics sink. Nothing is shared between shards on the request path,
+//! so lanes scale without a global lock.
+//!
+//! Tenants are placed by **rendezvous (highest-random-weight) hashing**
+//! on the model id ([`assign`]): every batch of a model is served by
+//! exactly one shard, which keeps per-model batching, generation
+//! hot-swap ordering and the resident-model LRU local to one executor.
+//! Rendezvous placement is *stable*: a tenant's shard depends only on
+//! its id and the shard count — publishing or removing other tenants
+//! never moves it, and republishing a bundle reloads it on the same
+//! owning shard (rebalance-on-hot-swap is a no-op by construction, so
+//! in-flight requests are never dropped by a republish).
+//!
+//! Completions fan back in on the submitting client's own channel (the
+//! reply sender rides inside each request), so the sharded plane needs
+//! no completion router: `n` executors may complete into one session
+//! concurrently and [`super::Session::wait_all`] still returns
+//! submission order.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::log_warn;
+use crate::{Error, Result};
+
+use super::batcher::{run_batcher, IngressQueue};
+use super::metrics::Metrics;
+use super::policy::PolicyTable;
+use super::request::{WorkItem, DEFAULT_MODEL};
+use super::server::CoordinatorConfig;
+use super::worker::{ModelSource, WorkerParams};
+
+/// FNV-1a over the model id, mixed with the shard index — deterministic
+/// across processes and platforms (unlike `DefaultHasher`), so shard
+/// ownership is reproducible in tests and across restarts.
+fn weight(model: &str, shard: u64) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in model.as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(PRIME);
+    }
+    for b in shard.to_le_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Rendezvous placement: the shard that owns `model` among `n_shards`.
+///
+/// Deterministic, uniform in expectation, and stable under tenant
+/// add/remove (a tenant's placement is a function of its id and the
+/// shard count only). `n_shards == 0` is treated as 1.
+pub fn assign(model: &str, n_shards: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    (0..n_shards)
+        .max_by_key(|&s| weight(model, s as u64))
+        .expect("non-empty shard range")
+}
+
+/// One serving lane: ingress + batcher thread + executor thread +
+/// metrics sink.
+pub(crate) struct Shard {
+    pub ingress: Arc<IngressQueue>,
+    pub metrics: Arc<Metrics>,
+    batcher: Option<JoinHandle<()>>,
+    worker: Option<JoinHandle<Result<()>>>,
+}
+
+/// The executor pool: `n` [`Shard`]s spawned from one configuration.
+pub(crate) struct ShardSet {
+    shards: Vec<Shard>,
+}
+
+impl ShardSet {
+    /// Spawn `config.shards` lanes over clones of `source`. Each lane's
+    /// executor gets a `max_resident_models / n` share of the plane-wide
+    /// residency bound plus 25% headroom (never more than the plane
+    /// bound itself): rendezvous ownership is binomial, not exact, so a
+    /// shard owning slightly more than its share must not thrash its
+    /// LRU while the plane as a whole is under budget.
+    pub(crate) fn spawn(
+        config: &CoordinatorConfig,
+        source: &ModelSource,
+        epoch: &Arc<AtomicU64>,
+    ) -> Result<ShardSet> {
+        let n = config.shards.max(1);
+        let share = config.max_resident_models.div_ceil(n);
+        // share + share/4, overflow-safe for "unbounded" configs.
+        let per_shard_resident = config
+            .max_resident_models
+            .min(share.saturating_add(share / 4))
+            .max(1);
+        // A static plane has exactly one model on exactly one owning
+        // lane; the others would clone the full SVM just to idle, so
+        // they get an empty source instead (submit-side validation
+        // guarantees no batch can ever reach them).
+        let static_owner = match source {
+            ModelSource::Static { .. } => Some(assign(DEFAULT_MODEL, n)),
+            _ => None,
+        };
+        let mut set = ShardSet { shards: Vec::with_capacity(n) };
+        for index in 0..n {
+            let w_source = match static_owner {
+                Some(owner) if owner != index => ModelSource::Empty,
+                _ => source.clone(),
+            };
+            let lane = spawn_lane(
+                config,
+                w_source,
+                epoch,
+                index,
+                n,
+                per_shard_resident,
+            );
+            match lane {
+                Ok(shard) => set.shards.push(shard),
+                Err(e) => {
+                    // A lane failed mid-spawn (thread limit, OOM):
+                    // tear the already-running lanes down — otherwise
+                    // their batcher/executor threads would outlive the
+                    // failed builder call for the life of the process.
+                    let _ = set.shutdown();
+                    return Err(e);
+                }
+            }
+        }
+        Ok(set)
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Ingress handles in shard order (index == [`assign`] output).
+    pub(crate) fn ingresses(&self) -> Vec<Arc<IngressQueue>> {
+        self.shards.iter().map(|s| s.ingress.clone()).collect()
+    }
+
+    /// Metrics sinks in shard order, for fan-in aggregation.
+    pub(crate) fn metrics(&self) -> Vec<Arc<Metrics>> {
+        self.shards.iter().map(|s| s.metrics.clone()).collect()
+    }
+
+    /// Close every ingress, then join every lane. Returns the first
+    /// executor error (all lanes are joined regardless).
+    pub(crate) fn shutdown(&mut self) -> Result<()> {
+        for shard in &self.shards {
+            shard.ingress.close();
+        }
+        for shard in &mut self.shards {
+            if let Some(h) = shard.batcher.take() {
+                let _ = h.join();
+            }
+        }
+        let mut first_err: Option<Error> = None;
+        for shard in &mut self.shards {
+            if let Some(h) = shard.worker.take() {
+                let failed = match h.join() {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => Some(e),
+                    Err(_) => {
+                        Some(Error::Other("executor panicked".into()))
+                    }
+                };
+                if first_err.is_none() {
+                    first_err = failed;
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Spawn one serving lane (ingress, executor thread, batcher thread).
+/// On a batcher-spawn failure the lane's own executor self-terminates:
+/// its `work_tx` is dropped with the failed closure, so the executor's
+/// `recv()` loop ends on disconnect.
+fn spawn_lane(
+    config: &CoordinatorConfig,
+    source: ModelSource,
+    epoch: &Arc<AtomicU64>,
+    index: usize,
+    shard_count: usize,
+    max_resident: usize,
+) -> Result<Shard> {
+    let ingress = Arc::new(IngressQueue::new(config.queue_capacity));
+    let metrics = Arc::new(Metrics::new());
+    let policies = Arc::new(PolicyTable::new());
+    let (work_tx, work_rx): (Sender<WorkItem>, Receiver<WorkItem>) =
+        mpsc::channel();
+
+    // Executor thread (owns predictors / PJRT engine / the shard's
+    // resident tenants).
+    let spec = config.exec.clone();
+    let w_metrics = metrics.clone();
+    let w_epoch = epoch.clone();
+    let params = WorkerParams {
+        policy: config.policy,
+        swap_poll: config.swap_poll,
+        max_resident,
+        policies: policies.clone(),
+        shard: index,
+        shard_count,
+        warm_start: config.warm_start,
+    };
+    let worker = std::thread::Builder::new()
+        .name(format!("approxrbf-executor-{index}"))
+        .spawn(move || {
+            let out = super::worker::run_worker(
+                spec, source, params, w_epoch, work_rx, w_metrics,
+            );
+            if let Err(ref e) = out {
+                log_warn!("executor shard {index} exited: {e}");
+            }
+            out
+        })
+        .map_err(|e| Error::Other(format!("spawn executor {index}: {e}")))?;
+
+    // Batcher thread: drains this shard's ingress, groups by model id,
+    // flushes each group on its tenant's max_batch/max_wait.
+    let b_ingress = ingress.clone();
+    let (max_batch, max_wait) = (config.max_batch, config.max_wait);
+    let batcher = std::thread::Builder::new()
+        .name(format!("approxrbf-batcher-{index}"))
+        .spawn(move || {
+            run_batcher(b_ingress, work_tx, policies, max_batch, max_wait)
+        })
+        .map_err(|e| Error::Other(format!("spawn batcher {index}: {e}")))?;
+
+    Ok(Shard {
+        ingress,
+        metrics,
+        batcher: Some(batcher),
+        worker: Some(worker),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_is_deterministic_and_in_range() {
+        for n in 1..=8usize {
+            for id in ["default", "alpha", "bravo", "tenant-42", ""] {
+                let s = assign(id, n);
+                assert!(s < n, "assign('{id}', {n}) = {s}");
+                assert_eq!(s, assign(id, n), "must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn assign_single_shard_is_zero() {
+        assert_eq!(assign("anything", 1), 0);
+        assert_eq!(assign("anything", 0), 0);
+    }
+
+    #[test]
+    fn assign_spreads_tenants() {
+        // 64 ids over 4 shards: rendezvous hashing must not collapse
+        // onto a single shard (a uniformity smoke test, not a bound).
+        let n = 4;
+        let mut counts = vec![0usize; n];
+        for i in 0..64 {
+            counts[assign(&format!("tenant-{i}"), n)] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c > 0),
+            "some shard owns nothing: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn assign_stable_under_tenant_add_remove() {
+        // Placement is a pure function of (id, shard count): computing
+        // it for any other tenant set cannot move an existing tenant.
+        let before: Vec<usize> =
+            (0..16).map(|i| assign(&format!("t{i}"), 8)).collect();
+        // "Add" and "remove" tenants (i.e. evaluate a different set).
+        let _ = assign("newcomer", 8);
+        let after: Vec<usize> =
+            (0..16).map(|i| assign(&format!("t{i}"), 8)).collect();
+        assert_eq!(before, after);
+    }
+}

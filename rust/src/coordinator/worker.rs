@@ -14,16 +14,22 @@
 //! Hot-swap protocol: for registry-backed coordinators the worker
 //! revalidates a model's on-disk generation when the coordinator's
 //! refresh epoch ticks, or at most every `swap_poll` otherwise (a
-//! 32-byte header read). A republished bundle swaps the resident
-//! `Arc<ModelEntry>` (weights *and* policy) between batches; requests
-//! already in flight finish on whichever generation they resolved.
-//! If a reload fails, the worker keeps serving the generation it has
+//! 32-byte header read). An epoch tick (an explicit
+//! [`super::Coordinator::refresh`]) reloads synchronously — the caller
+//! asked for the new generation *now*. A steady-state poll that detects
+//! a moved generation instead hands the `.arbf` decode to this shard's
+//! `Prefetcher` thread and keeps serving the resident generation; the
+//! decoded entry is swapped in atomically on a later batch, so hot-swap
+//! latency on the request path no longer includes the decode. Requests
+//! already in flight finish on whichever generation they resolved. If a
+//! reload fails, the worker keeps serving the generation it has
 //! (availability beats freshness for a serving node).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::approx::ApproxModel;
@@ -54,12 +60,20 @@ pub enum ExecSpec {
     Xla { artifacts_dir: std::path::PathBuf },
 }
 
-/// Where the worker gets model state from.
+/// Where the worker gets model state from. Clone is cheap for the
+/// registry variant (an `Arc`); the static variant clones the models
+/// once per shard at spawn.
+#[derive(Clone)]
 pub(crate) enum ModelSource {
     /// One fixed (exact, approx) pair under [`super::request::DEFAULT_MODEL`].
     Static { exact: SvmModel, approx: ApproxModel },
     /// Lazy per-id resolution through a shared registry.
     Registry { store: Arc<ModelStore> },
+    /// No local model: a lane of a static-model plane that rendezvous
+    /// placement can never route to (placement is validated at submit,
+    /// so such a lane never sees a batch — it just must not pay for a
+    /// clone of models it cannot serve).
+    Empty,
 }
 
 #[cfg(feature = "pjrt")]
@@ -78,6 +92,12 @@ pub(crate) struct WorkerParams {
     /// Shared per-tenant policy table the executor populates for the
     /// batcher as it decodes bundles.
     pub policies: Arc<PolicyTable>,
+    /// This executor's shard index (diagnostics + placement-aware warm).
+    pub shard: usize,
+    /// Total shards in the plane (placement-aware warm).
+    pub shard_count: usize,
+    /// Registry mode: pre-decode this shard's owned tenants at startup.
+    pub warm_start: bool,
 }
 
 /// Per-model serving state resident in the executor.
@@ -131,6 +151,86 @@ enum Exec {
     Xla(crate::runtime::Engine),
 }
 
+/// Per-shard decode-ahead thread: the executor hands it model ids whose
+/// on-disk generation moved; it decodes them through the store (which
+/// seeds the shared entry cache) and parks the decoded `Arc<ModelEntry>`
+/// in `ready` for the executor to swap in between batches. This keeps
+/// the `.arbf` decode — the expensive part of a hot swap — off the
+/// request path.
+struct Prefetcher {
+    tx: Option<Sender<ModelId>>,
+    ready: Arc<Mutex<HashMap<ModelId, Arc<ModelEntry>>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    fn spawn(store: Arc<ModelStore>, shard: usize) -> Result<Prefetcher> {
+        let (tx, rx) = mpsc::channel::<ModelId>();
+        let ready: Arc<Mutex<HashMap<ModelId, Arc<ModelEntry>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let out = ready.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("approxrbf-prefetch-{shard}"))
+            .spawn(move || {
+                // Bound on parked decode results. A decode can land
+                // after its tenant was LRU-evicted (nobody will take()
+                // it); clearing the map when it overflows keeps memory
+                // bounded, and any still-wanted entry is simply
+                // re-requested by its owner's next swap poll.
+                const READY_CAP: usize = 64;
+                while let Ok(id) = rx.recv() {
+                    match store.load(&id) {
+                        Ok(entry) => {
+                            let mut ready = out.lock().unwrap();
+                            if ready.len() >= READY_CAP
+                                && !ready.contains_key(&id)
+                            {
+                                log_warn!(
+                                    "prefetch: dropping {} stale parked \
+                                     result(s)",
+                                    ready.len()
+                                );
+                                ready.clear();
+                            }
+                            ready.insert(id, entry);
+                        }
+                        // The next swap poll re-requests; nothing to do
+                        // here beyond surfacing the failure.
+                        Err(e) => log_warn!(
+                            "prefetch: decode of '{id}' failed: {e}"
+                        ),
+                    }
+                }
+            })
+            .map_err(|e| {
+                crate::Error::Other(format!("spawn prefetcher: {e}"))
+            })?;
+        Ok(Prefetcher { tx: Some(tx), ready, handle: Some(handle) })
+    }
+
+    /// Queue a decode (non-blocking; duplicates are cheap cache hits).
+    fn request(&self, id: &ModelId) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(id.clone());
+        }
+    }
+
+    /// Take a decoded entry, if the prefetch completed.
+    fn take(&self, id: &ModelId) -> Option<Arc<ModelEntry>> {
+        self.ready.lock().unwrap().remove(id)
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Disconnect the channel so the thread's recv() loop ends.
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Run the executor loop until a `Shutdown` item arrives.
 /// Called on a dedicated thread by [`super::server::Coordinator`].
 pub(crate) fn run_worker(
@@ -168,6 +268,28 @@ pub(crate) fn run_worker(
             None
         }
         ModelSource::Registry { store } => Some(store),
+        ModelSource::Empty => None,
+    };
+    let prefetcher = match &store {
+        Some(store) => {
+            if params.warm_start {
+                // Placement-aware warm: pre-decode only the tenants
+                // rendezvous hashing assigns to this shard, so `n`
+                // shards warming in parallel each decode 1/n of the
+                // registry instead of all of it n times.
+                if let Err(e) = store.warm_where(|id| {
+                    super::shard::assign(id, params.shard_count)
+                        == params.shard
+                }) {
+                    log_warn!(
+                        "executor shard {}: warm failed: {e}",
+                        params.shard
+                    );
+                }
+            }
+            Some(Prefetcher::spawn(store.clone(), params.shard)?)
+        }
+        None => None,
     };
 
     let mut tick: u64 = 0;
@@ -184,6 +306,7 @@ pub(crate) fn run_worker(
         let tenant = match resolve(
             &mut tenants,
             store.as_deref(),
+            prefetcher.as_ref(),
             &model,
             &params,
             now_epoch,
@@ -321,6 +444,7 @@ pub(crate) fn run_worker(
 fn resolve<'t>(
     tenants: &'t mut HashMap<ModelId, Tenant>,
     store: Option<&ModelStore>,
+    prefetcher: Option<&Prefetcher>,
     model: &ModelId,
     params: &WorkerParams,
     now_epoch: u64,
@@ -346,6 +470,14 @@ fn resolve<'t>(
                         // Keep the shared policy table bounded by the
                         // resident set; a reload re-registers it.
                         params.policies.remove(&victim);
+                        // Drop any in-flight prefetch result too: an
+                        // evicted tenant may never see another batch,
+                        // and resolve() is the only consumer of the
+                        // ready map — without this the decoded entry
+                        // would be pinned for the worker's lifetime.
+                        if let Some(pf) = prefetcher {
+                            let _ = pf.take(&victim);
+                        }
                     }
                 }
                 params.policies.set(
@@ -363,9 +495,44 @@ fn resolve<'t>(
     let tenant = tenants.get_mut(model).expect("resident by construction");
     tenant.last_used = tick;
     if let Some(store) = store {
-        let due = tenant.epoch_seen != now_epoch
-            || tenant.last_check.elapsed() >= params.swap_poll;
-        if due {
+        // A completed prefetch swaps in first — atomic from the request
+        // path's point of view: one Arc exchange between batches, no
+        // decode on this thread.
+        if let Some(pf) = prefetcher {
+            if let Some(entry) = pf.take(model) {
+                // Swap only if the parked decode still matches what is
+                // on disk (a 32-byte header peek, paid only when a
+                // prefetch actually completed). This discards results
+                // staled by an explicit refresh() that already loaded a
+                // newer generation, AND parked pre-remove entries that
+                // would otherwise roll the tenant back after a
+                // non-monotone out-of-band remove()+republish.
+                let current = store.peek(model).ok();
+                let disk_gen = current.as_ref().map(|i| i.generation);
+                if disk_gen == Some(entry.generation)
+                    && entry.generation != tenant.entry.generation
+                {
+                    if entry.dim() == tenant.entry.dim() {
+                        params.policies.set(
+                            model.clone(),
+                            entry.policy.unwrap_or_default(),
+                        );
+                        tenant.swap(entry);
+                    } else {
+                        log_warn!(
+                            "executor: discarding prefetched '{model}' \
+                             generation {} (dim {} vs serving dim {})",
+                            entry.generation,
+                            entry.dim(),
+                            tenant.entry.dim()
+                        );
+                    }
+                }
+            }
+        }
+        let epoch_due = tenant.epoch_seen != now_epoch;
+        let poll_due = tenant.last_check.elapsed() >= params.swap_poll;
+        if epoch_due || poll_due {
             tenant.epoch_seen = now_epoch;
             tenant.last_check = Instant::now();
             // Header-only peek (~32 bytes of I/O) so the steady-state
@@ -387,7 +554,23 @@ fn resolve<'t>(
                             tenant.entry.dim(),
                             tenant.entry.generation
                         );
+                    } else if let (false, true, Some(pf)) = (
+                        epoch_due,
+                        info.generation > tenant.entry.generation,
+                        prefetcher,
+                    ) {
+                        // Steady-state detection of a newer generation:
+                        // decode off the hot path; the swap lands on a
+                        // later batch. A duplicate request (swap-poll
+                        // re-fires before the decode finishes) is a
+                        // cheap cache hit.
+                        pf.request(model);
                     } else {
+                        // Explicit refresh() — the caller asked for the
+                        // new generation now — or a non-monotone
+                        // generation (out-of-band remove + republish
+                        // restarts at 1): reload synchronously so the
+                        // very next batch serves it.
                         match store.load(model) {
                             Ok(entry) => {
                                 params.policies.set(

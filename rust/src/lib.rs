@@ -31,13 +31,14 @@
 //! ```
 //!
 //! Online serving goes through [`coordinator::CoordinatorBuilder`] and
-//! a cloneable [`coordinator::Client`]; completions are
-//! `Result<PredictResponse, PredictError>`, so a request that cannot be
-//! served fails fast instead of timing out:
+//! a cloneable [`coordinator::Client`] — the crate's only serving
+//! ingress; completions are `Result<PredictResponse, PredictError>`, so
+//! a request that cannot be served fails fast instead of timing out:
 //!
 //! ```text
 //! let coord = Coordinator::builder()
 //!     .policy(RoutePolicy::Hybrid)
+//!     .shards(4)                      // 4 executor lanes (default 1)
 //!     .start_registry(store.clone())?;
 //! let client = coord.client();
 //! let mut session = client.session();
@@ -50,15 +51,24 @@
 //! }
 //! ```
 //!
+//! ## Sharding
+//!
+//! [`coordinator::CoordinatorBuilder::shards`]`(n)` turns the
+//! coordinator into a sharded serving plane: `n` independent executor
+//! lanes (own ingress queue, batcher, resident-model LRU, metrics
+//! sink), with tenants placed by rendezvous hashing on the model id
+//! ([`coordinator::shard::assign`]). A model's batches all land on its
+//! one owning shard, so an `n`-shard plane returns decisions
+//! *identical* to a single-shard one — sharding changes where a tenant
+//! is served, never what it is served. Republishing a bundle hot-swaps
+//! it on the owning shard; the `.arbf` decode runs on a per-shard
+//! prefetch thread, off the request path. Metrics fan in at snapshot
+//! time (per-model rows sum across shards and list the owning shard).
+//! The `Client` API is identical at every shard count.
+//!
 //! Per-tenant behavior (route pin, batch shape, residency) is a
 //! [`coordinator::TenantPolicy`] published inside the tenant's `.arbf`
 //! bundle via [`registry::ModelStore::publish_with`].
-//!
-//! *Deprecation note*: the pre-redesign surface —
-//! `Coordinator::submit`/`submit_to`/`recv`/`predict_all` and the
-//! `RoutePolicy::parse`/`MathBackend::parse` helpers — remains as thin
-//! shims for one release; new code should hold a `Client` and use
-//! `FromStr`/`Display`.
 //!
 //! ## Architecture (three layers, Python never on the request path)
 //!
@@ -70,10 +80,11 @@
 //!   [`svm::predict`]) provide the paper's LOOPS/“BLAS” axes and run
 //!   without artifacts.
 //! * **L3** — [`coordinator`]: typed `Client`/`Session` handles over a
-//!   dynamic per-tenant batcher, bound-aware approx/exact hybrid
-//!   routing (every substrate behind the [`predictor::Predictor`]
-//!   trait), fail-fast `PredictError` completions, per-model metrics
-//!   and policies.
+//!   sharded executor pool (rendezvous tenant placement, per-shard
+//!   dynamic batching), bound-aware approx/exact hybrid routing (every
+//!   substrate behind the [`predictor::Predictor`] trait), fail-fast
+//!   `PredictError` completions, per-model × per-shard metrics and
+//!   policies.
 //! * **Registry** — [`registry`]: a versioned, checksummed binary model
 //!   format (`.arbf`, see `docs/FORMATS.md`) and a directory-backed
 //!   [`registry::ModelStore`] with atomic publish + generation counters,

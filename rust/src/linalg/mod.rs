@@ -33,12 +33,6 @@ pub enum MathBackend {
 }
 
 impl MathBackend {
-    /// Shim kept for one release: prefer `s.parse::<MathBackend>()`
-    /// (the [`std::str::FromStr`] impl below, the single name table).
-    pub fn parse(s: &str) -> crate::Result<Self> {
-        s.parse()
-    }
-
     /// Canonical name; [`std::fmt::Display`] delegates here.
     pub fn name(&self) -> &'static str {
         match self {
@@ -81,7 +75,5 @@ mod tests {
         }
         assert_eq!("BLAS".parse::<MathBackend>().unwrap(), MathBackend::Blocked);
         assert!("atlas9".parse::<MathBackend>().is_err());
-        // The legacy shim delegates to FromStr.
-        assert_eq!(MathBackend::parse("loops").unwrap(), MathBackend::Loops);
     }
 }

@@ -9,11 +9,13 @@
 //! approxrbf approximate --model m.model --out m.approx [--backend blocked]
 //! approxrbf predict     --model m.model|--approx m.approx --data t.txt
 //! approxrbf bound-check --data data.txt [--gamma 0.05]
-//! approxrbf serve       --profile control-like [--policy hybrid] [--xla]
+//! approxrbf serve       --profile control-like [--policy hybrid]
+//!                       [--shards N] [--xla]
 //! approxrbf registry    publish|list|serve|rollback --store dir [--id name]
 //!                       [--model m.model] [--approx m.approx] [--warm]
 //!                       [--route hybrid] [--tenant-max-batch N]
 //!                       [--tenant-max-wait-us N] [--resident-hint N]
+//!                       [--shards N]
 //! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
 //!                       [--scale full|quick] [--artifacts artifacts]
 //! approxrbf inspect     --model m.model|--approx m.approx|--arbf m.arbf
@@ -83,7 +85,8 @@ fn usage() -> String {
                approximate build the O(d²) approximated model (Eq. 3.8)\n  \
                predict     predict with an exact or approximated model\n  \
                bound-check report γ_MAX for a dataset (Eq. 3.11)\n  \
-               serve       run the bound-aware serving coordinator\n  \
+               serve       run the bound-aware serving coordinator\n              \
+               (--shards N spreads tenants over N executor lanes)\n  \
                registry    publish/list/serve/rollback .arbf model bundles\n              \
                (publish --store dir --id name --model m.model\n               \
                [--warm] [--route hybrid] [--tenant-max-batch N]\n               \
@@ -254,12 +257,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         ExecSpec::Native(MathBackend::Blocked)
     };
+    let shards = args.get_usize("shards", 1)?;
     let coord = Coordinator::builder()
         .policy(policy)
         .exec(exec)
+        .shards(shards)
         .start(case.model.clone(), am)?;
     let client = coord.client();
-    println!("serving {requests} requests through policy={policy} …");
+    println!(
+        "serving {requests} requests through policy={policy} on {} \
+         shard(s)…",
+        coord.shard_count()
+    );
     let mut served = 0usize;
     let t0 = std::time::Instant::now();
     let mut row = 0usize;
@@ -535,6 +544,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 args.get_or("policy", "hybrid").parse()?;
             let requests = args.get_usize("requests", 10_000)?;
             let seed = args.get_u64("seed", 42)?;
+            let shards = args.get_usize("shards", 1)?;
             let infos = store.list()?;
             if infos.is_empty() {
                 return Err(Error::InvalidArg(
@@ -543,11 +553,13 @@ fn cmd_registry(args: &Args) -> Result<()> {
             }
             println!(
                 "serving {requests} synthetic requests across {} model(s), \
-                 policy={policy}…",
+                 policy={policy}, shards={shards}…",
                 infos.len()
             );
             let coord = Coordinator::builder()
                 .policy(policy)
+                .shards(shards)
+                .warm_start(true)
                 .start_registry(store.clone())?;
             let client = coord.client();
             let mut rng = Rng::new(seed);

@@ -600,14 +600,6 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
     }
 }
 
-/// Decode a registry bundle: `(generation, exact, approx)`.
-/// Shim kept for one release: prefer [`decode_bundle_full`], which also
-/// surfaces the tenant policy.
-pub fn decode_bundle(bytes: &[u8]) -> Result<(u64, SvmModel, ApproxModel)> {
-    let b = decode_bundle_full(bytes)?;
-    Ok((b.generation, b.exact, b.approx))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -678,10 +670,11 @@ mod tests {
         assert_eq!(hdr.n_records, 2);
         assert_eq!(hdr.dim, 3);
         assert_eq!(hdr.n_sv, 3);
-        let (generation, e2, a2) = decode_bundle(&bytes).unwrap();
-        assert_eq!(generation, 7);
-        assert_eq!(e2.n_sv(), e.n_sv());
-        assert_eq!(a2.v, a.v);
+        let b = decode_bundle_full(&bytes).unwrap();
+        assert_eq!(b.generation, 7);
+        assert_eq!(b.exact.n_sv(), e.n_sv());
+        assert_eq!(b.approx.v, a.v);
+        assert_eq!(b.policy, None);
     }
 
     #[test]
@@ -710,7 +703,7 @@ mod tests {
         let n = bytes.len();
         bytes[n - 3] ^= 0x40;
         assert!(matches!(
-            decode_bundle(&bytes),
+            decode_bundle_full(&bytes),
             Err(Error::Corrupt(m)) if m.contains("CRC-32")
         ));
     }
@@ -720,7 +713,7 @@ mod tests {
         let bytes = encode_bundle(1, &toy_svm(), &toy_approx()).unwrap();
         for cut in [0, 3, FILE_HEADER_LEN - 1, FILE_HEADER_LEN + 5, bytes.len() - 1]
         {
-            let err = decode_bundle(&bytes[..cut]).unwrap_err();
+            let err = decode_bundle_full(&bytes[..cut]).unwrap_err();
             assert!(
                 matches!(err, Error::Corrupt(_)),
                 "cut at {cut}: {err}"
@@ -745,11 +738,7 @@ mod tests {
         let b = decode_bundle_full(&bytes).unwrap();
         assert_eq!(b.generation, 3);
         assert_eq!(b.policy, Some(policy));
-        // The legacy decoder still reads the models out of a
-        // policy-carrying bundle.
-        let (generation, e2, _a2) = decode_bundle(&bytes).unwrap();
-        assert_eq!(generation, 3);
-        assert_eq!(e2.n_sv(), e.n_sv());
+        assert_eq!(b.exact.n_sv(), e.n_sv());
     }
 
     #[test]

@@ -21,9 +21,14 @@
 //!   [`ModelStore::rollback`]; [`PublishOptions::warm`] pre-seeds the
 //!   cache so a fresh tenant's first request skips the cold decode.
 //! * The serving integration lives in [`crate::coordinator`]: requests
-//!   carry a model id, the executor resolves per-model state (weights
-//!   *and* policy) through the store and re-checks generations so a
-//!   republish hot-swaps without dropping in-flight requests.
+//!   carry a model id, each shard's executor resolves per-model state
+//!   (weights *and* policy) through the store and re-checks generations
+//!   so a republish hot-swaps without dropping in-flight requests —
+//!   with the `.arbf` decode on a per-shard prefetch thread, off the
+//!   request path. Shard placement is runtime-only (rendezvous hashing
+//!   on the id): nothing about sharding is persisted in the format,
+//!   and [`ModelStore::warm_where`] lets each shard pre-decode just
+//!   the tenants it owns.
 
 pub mod binfmt;
 pub mod store;

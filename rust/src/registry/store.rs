@@ -21,6 +21,10 @@
 //! * **Warm-on-publish** — [`ModelStore::publish_with`] with
 //!   [`PublishOptions::warm`] seeds the decoded-entry cache at publish
 //!   time, so a new tenant's first request skips the cold decode.
+//! * **Shard-aware warm** — [`ModelStore::warm_where`] pre-decodes the
+//!   subset of stored bundles a predicate claims; a sharded
+//!   coordinator's lanes use it at startup to each warm only the
+//!   tenants rendezvous placement assigns to them.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -531,6 +535,48 @@ impl ModelStore {
         Ok(())
     }
 
+    /// Pre-decode every stored bundle whose id satisfies `owned`,
+    /// seeding the entry cache; returns how many were warmed. This is
+    /// the shard-aware warm path: each shard of a sharded coordinator
+    /// warms only the tenants rendezvous placement assigns to it, so
+    /// `n` shards starting in parallel decode the registry once
+    /// between them instead of `n` times over. Warming stops once the
+    /// cache is full — decoding past capacity would only evict entries
+    /// another shard just warmed — and logs how many ids were skipped.
+    /// Unreadable bundles are skipped (they fail on first request
+    /// instead).
+    pub fn warm_where(
+        &self,
+        owned: impl Fn(&str) -> bool,
+    ) -> Result<usize> {
+        let capacity = self.config.cache_capacity.max(1);
+        let mut warmed = 0usize;
+        let mut skipped = 0usize;
+        for info in self.list()? {
+            if !owned(&info.id) {
+                continue;
+            }
+            if self.cached_count() >= capacity {
+                skipped += 1;
+                continue;
+            }
+            match self.load(&info.id) {
+                Ok(_) => warmed += 1,
+                Err(e) => {
+                    log_warn!("registry: warm skipped '{}': {e}", info.id)
+                }
+            }
+        }
+        if skipped > 0 {
+            log_warn!(
+                "registry: warm stopped at cache capacity {capacity}; \
+                 {skipped} owned bundle(s) stay cold (raise \
+                 StoreConfig::cache_capacity to warm them)"
+            );
+        }
+        Ok(warmed)
+    }
+
     /// Number of entries currently resident in the cache (tests).
     pub fn cached_count(&self) -> usize {
         self.cache.lock().unwrap().entries.len()
@@ -787,6 +833,23 @@ mod tests {
             Err(Error::InvalidArg(_))
         ));
         assert!(store.rollback("ghost").is_err());
+    }
+
+    #[test]
+    fn warm_where_decodes_only_owned_ids() {
+        let store = temp_store("warmwhere");
+        let (e, a) = pair(1.0);
+        for id in ["a0", "a1", "b0", "b1"] {
+            store.publish(id, &e, &a).unwrap();
+        }
+        assert_eq!(store.cached_count(), 0);
+        let warmed = store.warm_where(|id| id.starts_with('a')).unwrap();
+        assert_eq!(warmed, 2);
+        assert_eq!(store.cached_count(), 2);
+        // Warmed entries are in-memory hits (same Arc on load).
+        let x = store.load("a0").unwrap();
+        let y = store.load("a0").unwrap();
+        assert!(Arc::ptr_eq(&x, &y));
     }
 
     #[test]

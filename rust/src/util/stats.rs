@@ -54,6 +54,27 @@ impl Welford {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Combine another accumulator into this one (Chan et al.'s
+    /// parallel update), so per-shard moments can be fanned in to one
+    /// aggregate without replaying samples.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2
+            + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Immutable summary of a sample set with percentiles.
@@ -146,6 +167,33 @@ mod tests {
         assert!((w.var() - var).abs() < 1e-12);
         assert_eq!(w.min(), 1.0);
         assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_single_pass() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0, -3.0, 0.5];
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        // Split at every point, including the degenerate empty halves.
+        for split in 0..=xs.len() {
+            let (lo, hi) = xs.split_at(split);
+            let mut a = Welford::new();
+            let mut b = Welford::new();
+            for &x in lo {
+                a.push(x);
+            }
+            for &x in hi {
+                b.push(x);
+            }
+            a.merge(&b);
+            assert_eq!(a.count(), whole.count(), "split {split}");
+            assert!((a.mean() - whole.mean()).abs() < 1e-12);
+            assert!((a.var() - whole.var()).abs() < 1e-12);
+            assert_eq!(a.min(), whole.min());
+            assert_eq!(a.max(), whole.max());
+        }
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! Coordinator integration: serving through the full L3 stack with both
 //! native and (when artifacts exist) XLA executors, plus crate-level
-//! property tests on routing invariants.
+//! property tests on routing invariants. Everything goes through the
+//! `Client` API — the only ingress since the sharded-plane release.
 
 use std::time::Duration;
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::coordinator::{Coordinator, CoordinatorConfig, Route};
+use approxrbf::coordinator::{Coordinator, Route};
 use approxrbf::data::{Dataset, SynthProfile, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
 use approxrbf::svm::smo::{train_csvc, SmoParams};
@@ -30,13 +31,10 @@ fn setup(
 #[test]
 fn hybrid_serving_accuracy_equals_best_of_both() {
     let (model, am, test) = setup(0.8);
-    let coord = Coordinator::start(
-        model.clone(),
-        am.clone(),
-        CoordinatorConfig::default(),
-    )
-    .unwrap();
-    let responses = coord.predict_all(&test.x).unwrap();
+    let coord = Coordinator::builder()
+        .start(model.clone(), am.clone())
+        .unwrap();
+    let responses = coord.client().predict_all(&test.x).unwrap();
     // All in-bound (unit-norm data, γ < γ_max) ⇒ all approx-routed and
     // every decision equals the approx model's direct evaluation.
     for (r, resp) in responses.iter().enumerate() {
@@ -60,24 +58,16 @@ fn xla_executor_serves_identically_to_native() {
         return;
     }
     let (model, am, test) = setup(0.8);
-    let native = Coordinator::start(
-        model.clone(),
-        am.clone(),
-        CoordinatorConfig::default(),
-    )
-    .unwrap();
-    let xla = Coordinator::start(
-        model,
-        am,
-        CoordinatorConfig {
-            exec: ExecSpec::Xla { artifacts_dir: "artifacts".into() },
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let native = Coordinator::builder()
+        .start(model.clone(), am.clone())
+        .unwrap();
+    let xla = Coordinator::builder()
+        .exec(ExecSpec::Xla { artifacts_dir: "artifacts".into() })
+        .start(model, am)
+        .unwrap();
     let sub = test.x.rows_slice(0, 64);
-    let rn = native.predict_all(&sub).unwrap();
-    let rx = xla.predict_all(&sub).unwrap();
+    let rn = native.client().predict_all(&sub).unwrap();
+    let rx = xla.client().predict_all(&sub).unwrap();
     for (a, b) in rn.iter().zip(&rx) {
         assert_eq!(a.route, b.route);
         assert!(
@@ -97,8 +87,8 @@ fn property_hybrid_never_serves_out_of_bound_via_approx() {
     // under Hybrid, every response served by the approx route must
     // satisfy the Eq. (3.11) bound.
     let (model, am, test) = setup(0.9);
-    let coord =
-        Coordinator::start(model, am, CoordinatorConfig::default()).unwrap();
+    let coord = Coordinator::builder().start(model, am).unwrap();
+    let client = coord.client();
     let mut rng = Rng::new(0xBEEF);
     for _case in 0..4 {
         let mut traffic = test.x.rows_slice(0, 100);
@@ -110,7 +100,7 @@ fn property_hybrid_never_serves_out_of_bound_via_approx() {
                 }
             }
         }
-        let responses = coord.predict_all(&traffic).unwrap();
+        let responses = client.predict_all(&traffic).unwrap();
         for resp in &responses {
             if resp.route == Route::Approx {
                 assert!(
@@ -129,24 +119,23 @@ fn property_hybrid_never_serves_out_of_bound_via_approx() {
 #[test]
 fn property_all_submitted_ids_answered_exactly_once() {
     let (model, am, test) = setup(0.8);
-    let coord = Coordinator::start(
-        model,
-        am,
-        CoordinatorConfig {
-            max_batch: 17, // odd size to stress chunk boundaries
-            max_wait: Duration::from_millis(1),
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let coord = Coordinator::builder()
+        .max_batch(17) // odd size to stress chunk boundaries
+        .max_wait(Duration::from_millis(1))
+        .start(model, am)
+        .unwrap();
+    let client = coord.client();
     let n = 333;
     let mut ids = Vec::new();
     for r in 0..n {
-        ids.push(coord.submit(test.x.row(r % test.len()).to_vec()).unwrap());
+        ids.push(client.submit(test.x.row(r % test.len()).to_vec()).unwrap());
     }
     let mut seen = std::collections::HashSet::new();
     for _ in 0..n {
-        let resp = coord.recv(Duration::from_secs(10)).expect("response");
+        let resp = client
+            .recv(Duration::from_secs(10))
+            .expect("completion")
+            .expect("all requests in bound and servable");
         assert!(seen.insert(resp.id), "duplicate id {}", resp.id);
     }
     for id in ids {
@@ -162,18 +151,13 @@ fn throughput_scales_with_batching() {
     let (model, am, test) = setup(0.8);
     let mut rates = Vec::new();
     for max_batch in [1usize, 128] {
-        let coord = Coordinator::start(
-            model.clone(),
-            am.clone(),
-            CoordinatorConfig {
-                max_batch,
-                max_wait: Duration::from_micros(500),
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let coord = Coordinator::builder()
+            .max_batch(max_batch)
+            .max_wait(Duration::from_micros(500))
+            .start(model.clone(), am.clone())
+            .unwrap();
         let t0 = std::time::Instant::now();
-        let _ = coord.predict_all(&test.x).unwrap();
+        let _ = coord.client().predict_all(&test.x).unwrap();
         rates.push(test.len() as f64 / t0.elapsed().as_secs_f64());
         coord.shutdown().unwrap();
     }

@@ -185,7 +185,10 @@ fn unknown_model_after_eviction_fails_fast_not_timeout() {
     store.publish("bravo", &m_b, &a_b).unwrap();
     // max_resident_models(1): serving bravo evicts alpha from the
     // executor, so a later alpha request must re-resolve via the store.
+    // shards(1) pins both tenants onto ONE executor — the eviction this
+    // test depends on only happens when they share a resident set.
     let coord = Coordinator::builder()
+        .shards(1)
         .max_resident_models(1)
         .max_wait(Duration::from_millis(1))
         .start_registry(store.clone())
@@ -235,7 +238,9 @@ fn dim_drift_across_out_of_band_republish_fails_fast() {
     let (m10, a10, _) = trained_pair(9, 10);
     store.publish("x", &m6, &a6).unwrap();
     store.publish("y", &m6b, &a6b).unwrap();
+    // shards(1): the eviction of 'x' by 'y' requires one executor.
     let coord = Coordinator::builder()
+        .shards(1)
         .max_resident_models(1)
         .max_wait(Duration::from_millis(1))
         .start_registry(store.clone())

@@ -10,9 +10,7 @@ use std::time::Duration;
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
 use approxrbf::approx::ApproxModel;
-use approxrbf::coordinator::{
-    Coordinator, CoordinatorConfig, Route, RoutePolicy, TenantPolicy,
-};
+use approxrbf::coordinator::{Coordinator, Route, RoutePolicy, TenantPolicy};
 use approxrbf::data::{synth, Dataset, UnitNormScaler};
 use approxrbf::linalg::{Mat, MathBackend};
 use approxrbf::prop_cases;
@@ -163,14 +161,15 @@ fn property_bundle_roundtrip_preserves_upper_triangle_symmetry() {
         .unwrap();
         let generation = rng.below(1000) as u64;
         let bytes = binfmt::encode_bundle(generation, &exact, &am).unwrap();
-        let (gen2, e2, a2) = binfmt::decode_bundle(&bytes).unwrap();
-        assert_eq!(generation, gen2);
-        assert_svm_eq(&exact, &e2);
-        assert_approx_eq(&am, &a2);
+        let bundle = binfmt::decode_bundle_full(&bytes).unwrap();
+        assert_eq!(generation, bundle.generation);
+        assert_svm_eq(&exact, &bundle.exact);
+        assert_approx_eq(&am, &bundle.approx);
+        assert_eq!(bundle.policy, None);
         // Symmetry must survive the upper-triangle-only encoding.
         for r in 0..d {
             for c in 0..d {
-                assert_eq!(a2.m.at(r, c), a2.m.at(c, r));
+                assert_eq!(bundle.approx.m.at(r, c), bundle.approx.m.at(c, r));
             }
         }
     });
@@ -405,15 +404,12 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     let (m2, a2, _) = trained_pair(77, 0.7); // same d, different model
     assert_eq!(store.publish("tenant", &m1, &a1).unwrap(), 1);
 
-    let coord = Coordinator::start_registry(
-        store.clone(),
-        CoordinatorConfig {
-            max_wait: Duration::from_millis(1),
-            swap_poll: Duration::from_millis(5),
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let coord = Coordinator::builder()
+        .max_wait(Duration::from_millis(1))
+        .swap_poll(Duration::from_millis(5))
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
 
     let rows = 100usize.min(data.len());
     let half = 150usize;
@@ -424,7 +420,7 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     // Phase A: stream the first half against v1.
     for i in 0..half {
         let row = i % rows;
-        let id = coord
+        let id = client
             .submit_to("tenant", data.x.row(row).to_vec())
             .expect("submit must never fail across the swap");
         assert_eq!(id as usize, i);
@@ -433,9 +429,10 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     // Wait until v1 has demonstrably served traffic, leaving the rest
     // of phase A in flight.
     while responses.len() < half / 3 {
-        let r = coord
+        let r = client
             .recv(Duration::from_secs(10))
-            .expect("response lost before swap");
+            .expect("response lost before swap")
+            .expect("no error completions across the swap");
         responses.push(r);
     }
 
@@ -449,16 +446,17 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     // them — they must all come back as generation 2.
     for i in half..total {
         let row = i % rows;
-        let id = coord
+        let id = client
             .submit_to("tenant", data.x.row(row).to_vec())
             .expect("submit must never fail across the swap");
         assert_eq!(id as usize, i);
         row_of.push(row);
     }
     while responses.len() < total {
-        let r = coord
+        let r = client
             .recv(Duration::from_secs(10))
-            .expect("response lost across hot swap");
+            .expect("response lost across hot swap")
+            .expect("no error completions across the swap");
         responses.push(r);
     }
 
@@ -528,16 +526,15 @@ fn registry_serving_isolates_tenant_dimensions() {
     store.publish("eight", &m8, &a8).unwrap();
     store.publish("twelve", &m12, &a12).unwrap();
 
-    let coord =
-        Coordinator::start_registry(store, CoordinatorConfig::default())
-            .unwrap();
+    let coord = Coordinator::builder().start_registry(store).unwrap();
+    let client = coord.client();
     // Wrong-dimension submits are rejected per tenant at the boundary.
-    assert!(coord.submit_to("eight", vec![0.0; 12]).is_err());
-    assert!(coord.submit_to("twelve", vec![0.0; 8]).is_err());
-    let r8 = coord
+    assert!(client.submit_to("eight", vec![0.0; 12]).is_err());
+    assert!(client.submit_to("twelve", vec![0.0; 8]).is_err());
+    let r8 = client
         .predict_all_for("eight", &d8.x.rows_slice(0, 16))
         .unwrap();
-    let r12 = coord
+    let r12 = client
         .predict_all_for("twelve", &sc12.x.rows_slice(0, 16))
         .unwrap();
     for (i, resp) in r8.iter().enumerate() {
