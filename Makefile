@@ -2,9 +2,9 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test test-sharded doc check-pjrt artifacts
+.PHONY: tier1 fmt lint build test test-sharded test-quant doc check-pjrt artifacts
 
-tier1: fmt lint build test test-sharded
+tier1: fmt lint build test test-sharded test-quant
 
 # Mirror the extra CI jobs: rustdoc with warnings denied, and the
 # pjrt feature path against the vendored stub.
@@ -30,6 +30,11 @@ test:
 # serving plane (unpinned coordinators read APPROXRBF_TEST_SHARDS).
 test-sharded:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_SHARDS=4 cargo test -q
+
+# Mirror the CI tier1-quant job: every unpinned publish produces an
+# int8-quantized bundle, so the whole suite serves kind-5 payloads.
+test-quant:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_QUANT=int8 cargo test -q
 
 # AOT-lower the L1/L2 kernels to HLO text for the PJRT runtime
 # (requires JAX; consumed by builds with `--features pjrt`).

@@ -118,9 +118,18 @@ fn main() -> approxrbf::Result<()> {
                     route: Some(RoutePolicy::AlwaysExact),
                     ..Default::default()
                 }),
-                warm: false,
+                ..Default::default()
             },
-            "adult" => PublishOptions { policy: None, warm: true },
+            // 'adult' is published warm AND int8-quantized: a ~4×
+            // smaller resident model whose dequantization drift is
+            // folded into its routing budget.
+            "adult" => PublishOptions {
+                warm: true,
+                quantize: Some(
+                    approxrbf::registry::PayloadKind::Int8,
+                ),
+                ..Default::default()
+            },
             _ => PublishOptions::default(),
         };
         let described = if opts.policy.is_some() {

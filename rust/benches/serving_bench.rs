@@ -2,7 +2,10 @@
 //! L3 path under each routing policy and executor (native vs XLA when
 //! artifacts are present), plus a shard-scaling sweep over a
 //! multi-tenant registry (1/2/4 executor lanes) whose results are
-//! written to `BENCH_serving.json` for the perf trajectory.
+//! written to `BENCH_serving.json`, plus a quantized-payload leg
+//! (f32 vs f16 vs int8 bundles: resident model memory, throughput and
+//! decision drift vs the reported bound) written to `BENCH_quant.json`
+//! for the footprint trajectory.
 //!
 //! Run: `cargo bench --bench serving_bench`
 
@@ -11,10 +14,10 @@ use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::coordinator::{Coordinator, ExecSpec, RoutePolicy};
+use approxrbf::coordinator::{Coordinator, ExecSpec, Route, RoutePolicy};
 use approxrbf::data::{SynthProfile, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
-use approxrbf::registry::ModelStore;
+use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::Kernel;
 use approxrbf::util::Json;
@@ -107,6 +110,7 @@ fn main() {
     }
 
     shard_scaling_sweep(&model, &am, &test);
+    quant_payload_sweep(&model, &am, &test);
 }
 
 /// Multi-tenant shard-scaling sweep: the same registry served by 1, 2
@@ -190,5 +194,153 @@ fn shard_scaling_sweep(
     ]);
     std::fs::write("BENCH_serving.json", doc.to_string_pretty()).unwrap();
     println!("\n(JSON: BENCH_serving.json)");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Quantized-payload leg: the same model published as f32, f16 and
+/// int8 bundles, each served through the full Client path. Measures
+/// resident model memory (the footprint multiplier quantization buys),
+/// artifact bytes, end-to-end throughput, and the worst observed
+/// approx-decision drift vs the f32 bundle against the bound
+/// `approx/bounds.rs` reports. Emits `BENCH_quant.json`.
+fn quant_payload_sweep(
+    model: &approxrbf::svm::SvmModel,
+    am: &approxrbf::approx::ApproxModel,
+    test: &approxrbf::data::Dataset,
+) {
+    const QUANT_REQUESTS: usize = 4096;
+    const DRIFT_ROWS: usize = 512;
+    let dir = std::env::temp_dir().join(format!(
+        "approxrbf_serving_bench_quant_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ModelStore::open(&dir).unwrap());
+    println!(
+        "\n# quantized payloads (n_sv={}, d={}, {QUANT_REQUESTS} requests \
+         per payload kind)\n",
+        model.n_sv(),
+        model.dim()
+    );
+    let mut rows = Vec::new();
+    let mut f32_resident = 0usize;
+    // Captured during the F32 iteration (which runs first): the twin
+    // every quantized payload's drift is measured against.
+    let mut f32_entry = None;
+    for kind in [PayloadKind::F32, PayloadKind::F16, PayloadKind::Int8] {
+        let id = format!("quant-{kind}");
+        store
+            .publish_with(
+                &id,
+                model,
+                am,
+                PublishOptions {
+                    quantize: Some(kind),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let info = store.peek(&id).unwrap();
+        let entry = store.load(&id).unwrap();
+        let resident = entry.resident_bytes();
+        if kind == PayloadKind::F32 {
+            f32_resident = resident;
+            f32_entry = Some(entry.clone());
+        }
+        let twin = f32_entry.as_ref().expect("F32 iteration runs first");
+        let ratio = f32_resident as f64 / resident as f64;
+        // Per-row: the approx drift vs the f32 twin must stay within
+        // the per-row reported bound; record the maxima for the JSON.
+        let quant_err = entry.quant_info().map(|q| q.approx_err);
+        let mut max_drift = 0f64;
+        let mut max_bound = 0f64;
+        for r in 0..DRIFT_ROWS.min(test.len()) {
+            let z = test.x.row(r);
+            let drift = f64::from(
+                (entry.approx_decision_one(z)
+                    - twin.approx_decision_one(z))
+                .abs(),
+            );
+            let bound = match &quant_err {
+                Some(q) => f64::from(q.decision_error(
+                    approxrbf::linalg::vecops::norm_sq(z),
+                )),
+                None => 0.0,
+            };
+            assert!(
+                drift <= bound.max(1e-9),
+                "{kind}: row {r} drift {drift} exceeds its reported \
+                 bound {bound}"
+            );
+            max_drift = max_drift.max(drift);
+            max_bound = max_bound.max(bound);
+        }
+        // Throughput through the full serving path (1 shard so payload
+        // kinds compete on identical plumbing).
+        let coord = Coordinator::builder()
+            .policy(RoutePolicy::Hybrid)
+            .max_wait(Duration::from_micros(200))
+            .shards(1)
+            .start_registry(store.clone())
+            .unwrap();
+        let client = coord.client();
+        let _ = client
+            .predict_all_for(&id, &test.x.rows_slice(0, 64))
+            .unwrap();
+        let t0 = Instant::now();
+        let mut submitted = 0usize;
+        let mut received = 0usize;
+        let mut approx_routed = 0usize;
+        while received < QUANT_REQUESTS {
+            if submitted < QUANT_REQUESTS {
+                client
+                    .submit_to(
+                        &id,
+                        test.x.row(submitted % test.len()).to_vec(),
+                    )
+                    .unwrap();
+                submitted += 1;
+                while let Some(c) = client.recv(Duration::from_micros(0)) {
+                    let resp = c.unwrap();
+                    approx_routed += (resp.route == Route::Approx) as usize;
+                    received += 1;
+                }
+            } else if let Some(c) = client.recv(Duration::from_millis(100)) {
+                let resp = c.unwrap();
+                approx_routed += (resp.route == Route::Approx) as usize;
+                received += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = QUANT_REQUESTS as f64 / wall;
+        coord.shutdown().unwrap();
+        println!(
+            "payload={:<5} resident {resident:>9} B ({ratio:>4.1}x \
+             smaller)   file {:>9} B   {rps:>9.0} req/s   approx-routed \
+             {approx_routed}/{QUANT_REQUESTS}   max drift {max_drift:.2e} \
+             (bound {max_bound:.2e})",
+            kind.name(),
+            info.size_bytes
+        );
+        rows.push(Json::obj(vec![
+            ("payload", Json::str(kind.name())),
+            ("resident_bytes", Json::num(resident as f64)),
+            ("resident_ratio_vs_f32", Json::num(ratio)),
+            ("file_bytes", Json::num(info.size_bytes as f64)),
+            ("throughput_rps", Json::num(rps)),
+            ("requests", Json::num(QUANT_REQUESTS as f64)),
+            ("approx_routed", Json::num(approx_routed as f64)),
+            ("max_abs_drift_vs_f32", Json::num(max_drift)),
+            ("reported_drift_bound", Json::num(max_bound)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_quantized_payloads")),
+        ("n_sv", Json::num(model.n_sv() as f64)),
+        ("dim", Json::num(model.dim() as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_quant.json", doc.to_string_pretty()).unwrap();
+    println!("\n(JSON: BENCH_quant.json)");
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,11 +1,128 @@
-//! Validity bounds (paper §3.1).
+//! Validity bounds (paper §3.1) plus quantization error accounting.
 //!
 //! Term-wise accuracy needs `|2γ x_iᵀz| < ½` (Eq. 3.9). Cauchy–Schwarz
 //! turns that into the checkable `‖x_M‖²‖z‖² < 1/(16γ²)` (Eq. 3.11),
 //! giving (a) a pre-training cap `γ_MAX` from data norms and (b) a
 //! zero-cost per-instance run-time check (‖z‖² is computed anyway).
+//!
+//! When a model's payload is quantized (f16/int8 `.arbf` records, see
+//! [`crate::registry::quant`]), dequantization perturbs the served
+//! coefficients by a *known per-element bound* — [`QuantErrorBound`]
+//! (approx path) and [`ExactQuantErr`] (exact path) turn those element
+//! bounds into decision-value bounds, and
+//! [`QuantErrorBound::drift_budget`] folds the approx-side bound back
+//! into the Eq. 3.11 routing budget so a Hybrid router stops trusting
+//! the approximation once quantization drift could exceed the
+//! configured tolerance.
 
 use crate::data::Dataset;
+
+/// Default cap on the absolute decision drift quantization may add to
+/// an approx-routed instance before the Hybrid router escorts it to the
+/// exact path (coordinator knob: `CoordinatorBuilder::quant_drift_tol`).
+/// Decisions of the models this repo trains are O(1), so 0.25 trades a
+/// visible-but-bounded drift ceiling against keeping well-conditioned
+/// quantized tenants on the fast path; drop it for margin-critical
+/// tenants. Note the escort target of a quantized bundle is itself
+/// quantized (its own drift is reported by
+/// [`ExactQuantErr::decision_error`], which does not depend on ‖z‖²).
+pub const DEFAULT_QUANT_DRIFT_TOL: f32 = 0.25;
+
+/// Multiplicative slack the decision-error bounds carry for the float
+/// rounding of the (dequantized) evaluation itself, plus a tiny
+/// absolute floor — both far above the 2⁻²⁴-relative reality.
+const QUANT_EVAL_SLACK: f32 = 1.001;
+const QUANT_EVAL_FLOOR: f32 = 1e-6;
+
+/// Per-element dequantization error bounds of a quantized approx
+/// payload: `|Δv_i| ≤ eps_v`, `|ΔM_rc| ≤ eps_m` (scalars `γ, b, c`
+/// stay f32, so they contribute nothing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantErrorBound {
+    pub dim: usize,
+    pub eps_v: f32,
+    pub eps_m: f32,
+}
+
+impl QuantErrorBound {
+    /// Absolute decision-error bound for an instance with squared norm
+    /// `zn_sq`. Since `e^{−γ‖z‖²} ≤ 1` and (Cauchy–Schwarz /
+    /// `Σ|z_i| ≤ √d·‖z‖`):
+    ///
+    /// ```text
+    /// |Δf̂(z)| ≤ |Δvᵀz| + |zᵀΔMz| ≤ eps_v·√(d·‖z‖²) + eps_m·d·‖z‖²
+    /// ```
+    ///
+    /// padded by a 0.1% evaluation-rounding slack.
+    pub fn decision_error(&self, zn_sq: f32) -> f32 {
+        let s = (self.dim as f32 * zn_sq.max(0.0)).sqrt();
+        (self.eps_v * s + self.eps_m * s * s) * QUANT_EVAL_SLACK
+            + QUANT_EVAL_FLOOR
+    }
+
+    /// Largest ‖z‖² whose [`QuantErrorBound::decision_error`] stays
+    /// within `tol` — the quantization term the serving router
+    /// intersects with the Eq. 3.11 budget. Infinite when the payload
+    /// carries no error (or `tol` is infinite).
+    pub fn drift_budget(&self, tol: f32) -> f32 {
+        if !tol.is_finite() {
+            return f32::INFINITY;
+        }
+        let tol = (tol - QUANT_EVAL_FLOOR) / QUANT_EVAL_SLACK;
+        if tol <= 0.0 {
+            return 0.0;
+        }
+        let (a, b) = (self.eps_m, self.eps_v);
+        // Solve a·s² + b·s = tol for s = √(d·‖z‖²) ≥ 0.
+        let s = if a <= 0.0 && b <= 0.0 {
+            return f32::INFINITY;
+        } else if a <= 0.0 {
+            tol / b
+        } else {
+            (-b + (b * b + 4.0 * a * tol).sqrt()) / (2.0 * a)
+        };
+        s * s / self.dim.max(1) as f32
+    }
+}
+
+/// Dequantization error metadata of a quantized *exact* (RBF) model:
+/// `|Δcoef_i| ≤ eps_coef`, per-element SV error ≤ `eps_sv`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExactQuantErr {
+    pub n_sv: usize,
+    pub dim: usize,
+    /// RBF γ (NaN for non-RBF kernels — the bound is then unavailable).
+    pub gamma: f32,
+    /// Σ|coef_i| of the dequantized coefficients.
+    pub coef_abs_sum: f32,
+    pub eps_coef: f32,
+    pub eps_sv: f32,
+}
+
+impl ExactQuantErr {
+    /// Absolute decision-error bound of the quantized exact RBF model,
+    /// independent of the instance: with `K ∈ (0, 1]` and the RBF
+    /// kernel globally `√(2γ/e)`-Lipschitz in its SV argument,
+    ///
+    /// ```text
+    /// |Δf(z)| ≤ n_SV·eps_coef
+    ///         + (Σ|coef_i| + n_SV·eps_coef)·√(2γ/e)·√d·eps_sv
+    /// ```
+    ///
+    /// Returns ∞ for non-RBF kernels (no bound reported).
+    pub fn decision_error(&self) -> f32 {
+        if !self.gamma.is_finite() || self.gamma < 0.0 {
+            return f32::INFINITY;
+        }
+        let n = self.n_sv as f32;
+        let lipschitz = (2.0 * self.gamma / std::f32::consts::E).sqrt();
+        let sv_term = (self.coef_abs_sum + n * self.eps_coef)
+            * lipschitz
+            * (self.dim as f32).sqrt()
+            * self.eps_sv;
+        (n * self.eps_coef + sv_term) * QUANT_EVAL_SLACK + QUANT_EVAL_FLOOR
+    }
+}
 
 /// Pre-training γ cap for a dataset (paper: "report an upper bound for γ
 /// for a given data set prior to training"): both the future SVs and
@@ -163,5 +280,54 @@ mod tests {
     fn zero_data_infinite_gamma() {
         let ds = Dataset::new(Mat::zeros(2, 2), vec![1.0, -1.0]).unwrap();
         assert!(gamma_max_for_data(&ds).is_infinite());
+    }
+
+    #[test]
+    fn quant_drift_budget_inverts_decision_error() {
+        let q = QuantErrorBound { dim: 8, eps_v: 4e-3, eps_m: 1.5e-3 };
+        for tol in [0.01f32, 0.05, 0.25, 1.0] {
+            let zn = q.drift_budget(tol);
+            assert!(zn.is_finite() && zn > 0.0, "tol={tol}: zn={zn}");
+            // At the budget, the error sits on the tolerance (within
+            // float slop); just inside it stays below.
+            let err = q.decision_error(zn);
+            assert!((err - tol).abs() < 1e-3 * tol.max(1.0), "{err} vs {tol}");
+            assert!(q.decision_error(zn * 0.99) < tol);
+        }
+        // Monotone in the tolerance.
+        assert!(q.drift_budget(0.01) < q.drift_budget(0.25));
+    }
+
+    #[test]
+    fn quant_drift_budget_degenerate_cases() {
+        let none = QuantErrorBound { dim: 4, eps_v: 0.0, eps_m: 0.0 };
+        assert!(none.drift_budget(0.1).is_infinite());
+        assert_eq!(none.decision_error(10.0), 1e-6);
+        let v_only = QuantErrorBound { dim: 4, eps_v: 1e-3, eps_m: 0.0 };
+        let zn = v_only.drift_budget(0.1);
+        assert!(zn.is_finite());
+        assert!(v_only.decision_error(zn) <= 0.1 + 1e-5);
+        // A tolerance below the floor yields a zero budget, and an
+        // infinite tolerance never constrains.
+        assert_eq!(v_only.drift_budget(0.0), 0.0);
+        assert!(v_only.drift_budget(f32::INFINITY).is_infinite());
+    }
+
+    #[test]
+    fn exact_quant_error_shape() {
+        let e = ExactQuantErr {
+            n_sv: 10,
+            dim: 4,
+            gamma: 0.5,
+            coef_abs_sum: 5.0,
+            eps_coef: 1e-3,
+            eps_sv: 2e-3,
+        };
+        let bound = e.decision_error();
+        // n·eps_coef = 0.01; sv term = (5 + 0.01)·√(1/e)·2·2e-3 ≈ 0.0122.
+        assert!(bound > 0.02 && bound < 0.03, "{bound}");
+        // Non-RBF → no bound.
+        let lin = ExactQuantErr { gamma: f32::NAN, ..e };
+        assert!(lin.decision_error().is_infinite());
     }
 }

@@ -11,6 +11,9 @@ pub mod maclaurin;
 pub mod model;
 pub mod poly2_equiv;
 
-pub use bounds::{gamma_max_for_data, BoundReport};
+pub use bounds::{
+    gamma_max_for_data, BoundReport, ExactQuantErr, QuantErrorBound,
+    DEFAULT_QUANT_DRIFT_TOL,
+};
 pub use builder::build_approx_model;
 pub use model::ApproxModel;

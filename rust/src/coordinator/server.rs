@@ -107,6 +107,13 @@ pub struct CoordinatorConfig {
     /// (shard-aware warm; see
     /// [`crate::registry::ModelStore::warm_where`]).
     pub warm_start: bool,
+    /// Max absolute decision drift a quantized (f16/int8) tenant's
+    /// dequantization may add before its Hybrid router escorts the
+    /// instance to the exact path — folded into each tenant's Eq. 3.11
+    /// budget (see [`crate::registry::ModelEntry::znorm_sq_budget_with`]).
+    /// Irrelevant for f32 tenants. Default:
+    /// [`crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL`].
+    pub quant_drift_tol: f32,
 }
 
 impl Default for CoordinatorConfig {
@@ -121,6 +128,7 @@ impl Default for CoordinatorConfig {
             max_resident_models: 512,
             shards: default_shards(),
             warm_start: false,
+            quant_drift_tol: crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL,
         }
     }
 }
@@ -197,6 +205,13 @@ impl CoordinatorBuilder {
     /// so first requests skip the cold `.arbf` decode.
     pub fn warm_start(mut self, warm: bool) -> Self {
         self.config.warm_start = warm;
+        self
+    }
+
+    /// Quantization drift tolerance folded into quantized tenants'
+    /// routing budgets (see [`CoordinatorConfig::quant_drift_tol`]).
+    pub fn quant_drift_tol(mut self, tol: f32) -> Self {
+        self.config.quant_drift_tol = tol.max(0.0);
         self
     }
 
@@ -868,6 +883,11 @@ mod tests {
         let (m_b, am_b, ds_b) = setup(0.25);
         store.publish("alpha", &m_a, &am_a).unwrap();
         store.publish("bravo", &m_b, &am_b).unwrap();
+        // Reference decisions come from the loaded entries, so the
+        // assertion holds whatever payload kind the publish used
+        // (APPROXRBF_TEST_QUANT may quantize it).
+        let ent_a = store.load("alpha").unwrap();
+        let ent_b = store.load("bravo").unwrap();
         let coord = Coordinator::builder()
             .start_registry(store)
             .unwrap();
@@ -877,14 +897,20 @@ mod tests {
         let ra = client.predict_all_for("alpha", &sub_a).unwrap();
         let rb = client.predict_all_for("bravo", &sub_b).unwrap();
         for (r, resp) in ra.iter().enumerate() {
-            let (want, _) = am_a.decision_one(sub_a.row(r));
-            assert!((resp.decision - want).abs() < 1e-4);
+            let want = match resp.route {
+                Route::Approx => ent_a.approx_decision_one(sub_a.row(r)),
+                Route::Exact => ent_a.exact_decision_one(sub_a.row(r)),
+            };
+            assert!((resp.decision - want).abs() < 1e-3);
             assert_eq!(&*resp.model, "alpha");
             assert_eq!(resp.generation, 1);
         }
         for (r, resp) in rb.iter().enumerate() {
-            let (want, _) = am_b.decision_one(sub_b.row(r));
-            assert!((resp.decision - want).abs() < 1e-4);
+            let want = match resp.route {
+                Route::Approx => ent_b.approx_decision_one(sub_b.row(r)),
+                Route::Exact => ent_b.exact_decision_one(sub_b.row(r)),
+            };
+            assert!((resp.decision - want).abs() < 1e-3);
         }
         assert!(client.submit_to("ghost", vec![0.0; 6]).is_err());
         let snap = coord.metrics();

@@ -221,6 +221,7 @@ fn spawn_lane(
         shard: index,
         shard_count,
         warm_start: config.warm_start,
+        quant_drift_tol: config.quant_drift_tol,
     };
     let worker = std::thread::Builder::new()
         .name(format!("approxrbf-executor-{index}"))

@@ -35,8 +35,11 @@ use std::time::{Duration, Instant};
 use crate::approx::ApproxModel;
 use crate::linalg::{Mat, MathBackend};
 use crate::log_warn;
-use crate::predictor::{ApproxPredictor, PredictOutput, Predictor};
-use crate::registry::{ModelEntry, ModelStore};
+use crate::predictor::{
+    ApproxPredictor, PredictOutput, Predictor, QuantApproxPredictor,
+    QuantExactPredictor,
+};
+use crate::registry::{ModelEntry, ModelStore, TenantModels};
 use crate::svm::predict::ExactPredictor;
 use crate::svm::SvmModel;
 use crate::Result;
@@ -98,6 +101,11 @@ pub(crate) struct WorkerParams {
     pub shard_count: usize,
     /// Registry mode: pre-decode this shard's owned tenants at startup.
     pub warm_start: bool,
+    /// Max absolute decision drift quantization may add before a
+    /// quantized tenant's Hybrid router escorts the instance to the
+    /// exact path (folded into the Eq. 3.11 budget per model; see
+    /// [`crate::registry::ModelEntry::znorm_sq_budget_with`]).
+    pub quant_drift_tol: f32,
 }
 
 /// Per-model serving state resident in the executor.
@@ -106,6 +114,10 @@ struct Tenant {
     /// SV norms of the exact model, cached per generation so the
     /// native exact path skips the O(n_SV·d) precompute per batch.
     sv_norms: Vec<f32>,
+    /// The Eq. 3.11 budget with this entry's quantization drift folded
+    /// in — constant per generation, cached so the per-batch path does
+    /// not rescan the quantized payload (the f16 eps is an O(d²) scan).
+    znorm_sq_budget: f32,
     /// Refresh epoch this tenant last revalidated against.
     epoch_seen: u64,
     last_check: Instant,
@@ -117,11 +129,13 @@ struct Tenant {
 }
 
 impl Tenant {
-    fn new(entry: Arc<ModelEntry>, epoch: u64) -> Tenant {
-        let sv_norms = entry.exact.sv.row_norms_sq();
+    fn new(entry: Arc<ModelEntry>, epoch: u64, quant_drift_tol: f32) -> Tenant {
+        let sv_norms = entry.sv_row_norms_sq();
+        let znorm_sq_budget = entry.znorm_sq_budget_with(quant_drift_tol);
         Tenant {
             entry,
             sv_norms,
+            znorm_sq_budget,
             epoch_seen: epoch,
             last_check: Instant::now(),
             last_used: 0,
@@ -130,8 +144,9 @@ impl Tenant {
         }
     }
 
-    fn swap(&mut self, entry: Arc<ModelEntry>) {
-        self.sv_norms = entry.exact.sv.row_norms_sq();
+    fn swap(&mut self, entry: Arc<ModelEntry>, quant_drift_tol: f32) {
+        self.sv_norms = entry.sv_row_norms_sq();
+        self.znorm_sq_budget = entry.znorm_sq_budget_with(quant_drift_tol);
         self.entry = entry;
         #[cfg(feature = "pjrt")]
         {
@@ -257,13 +272,16 @@ pub(crate) fn run_worker(
             let entry = Arc::new(ModelEntry {
                 id: id.clone(),
                 generation: 0,
-                exact,
-                approx,
+                models: TenantModels::F32 { exact, approx },
                 policy: None,
             });
             tenants.insert(
                 id,
-                Tenant::new(entry, epoch.load(Ordering::Acquire)),
+                Tenant::new(
+                    entry,
+                    epoch.load(Ordering::Acquire),
+                    params.quant_drift_tol,
+                ),
             );
             None
         }
@@ -333,7 +351,10 @@ pub(crate) fn run_worker(
             }
         };
         let generation = tenant.entry.generation;
-        let budget = tenant.entry.approx.znorm_sq_budget();
+        // The Eq. 3.11 budget with this tenant's quantization drift
+        // folded in — cached per generation on the tenant (an f32
+        // entry serves the raw Maclaurin budget).
+        let budget = tenant.znorm_sq_budget;
         let route_policy = tenant.policy().route_or(params.policy);
         let router = Router { policy: route_policy, znorm_sq_budget: budget };
         // Submit-side dimension checks can go stale across an
@@ -484,7 +505,10 @@ fn resolve<'t>(
                     model.clone(),
                     entry.policy.unwrap_or_default(),
                 );
-                tenants.insert(model.clone(), Tenant::new(entry, now_epoch));
+                tenants.insert(
+                    model.clone(),
+                    Tenant::new(entry, now_epoch, params.quant_drift_tol),
+                );
             }
             Err(e) => {
                 log_warn!("executor: cannot load '{model}': {e}");
@@ -517,7 +541,7 @@ fn resolve<'t>(
                             model.clone(),
                             entry.policy.unwrap_or_default(),
                         );
-                        tenant.swap(entry);
+                        tenant.swap(entry, params.quant_drift_tol);
                     } else {
                         log_warn!(
                             "executor: discarding prefetched '{model}' \
@@ -577,7 +601,7 @@ fn resolve<'t>(
                                     model.clone(),
                                     entry.policy.unwrap_or_default(),
                                 );
-                                tenant.swap(entry);
+                                tenant.swap(entry, params.quant_drift_tol);
                             }
                             Err(e) => log_warn!(
                                 "executor: keeping '{model}' generation {} \
@@ -600,7 +624,9 @@ fn resolve<'t>(
 }
 
 /// Execute one routed sub-batch through the [`Predictor`] trait on the
-/// selected substrate.
+/// selected substrate. Quantized tenants are evaluated directly on
+/// their native f16/int8 storage — nothing f32-sized is materialized
+/// on the request path.
 fn execute(
     exec: &Exec,
     tenant: &mut Tenant,
@@ -608,30 +634,56 @@ fn execute(
     z: &Mat,
 ) -> Result<PredictOutput> {
     match exec {
-        Exec::Native(backend) => match route {
-            Route::Approx => {
-                ApproxPredictor::new(&tenant.entry.approx, *backend)?
+        Exec::Native(backend) => {
+            match (&tenant.entry.models, route) {
+                (TenantModels::F32 { approx, .. }, Route::Approx) => {
+                    ApproxPredictor::new(approx, *backend)?.predict_batch(z)
+                }
+                (TenantModels::F32 { exact, .. }, Route::Exact) => {
+                    // Norms are cached per generation on the tenant; the
+                    // clone is an O(n_SV) memcpy, noise next to the
+                    // O(batch·n_SV·d) evaluation.
+                    ExactPredictor::with_norms(
+                        exact,
+                        tenant.sv_norms.clone(),
+                        *backend,
+                    )?
                     .predict_batch(z)
+                }
+                (
+                    TenantModels::Quantized { approx, .. },
+                    Route::Approx,
+                ) => QuantApproxPredictor::new(approx).predict_batch(z),
+                (TenantModels::Quantized { exact, .. }, Route::Exact) => {
+                    QuantExactPredictor::with_norms(
+                        exact,
+                        tenant.sv_norms.clone(),
+                    )?
+                    .predict_batch(z)
+                }
             }
-            Route::Exact => {
-                // Norms are cached per generation on the tenant; the
-                // clone is an O(n_SV) memcpy, noise next to the
-                // O(batch·n_SV·d) evaluation.
-                ExactPredictor::with_norms(
-                    &tenant.entry.exact,
-                    tenant.sv_norms.clone(),
-                    *backend,
-                )?
-                .predict_batch(z)
-            }
-        },
+        }
         #[cfg(feature = "pjrt")]
         Exec::Xla(engine) => {
             if tenant.prepared.is_none() {
-                tenant.prepared = Some(PreparedPair {
-                    approx: engine.prepare_approx(&tenant.entry.approx)?,
-                    exact: engine.prepare_exact(&tenant.entry.exact)?,
-                });
+                // The engine uploads f32 device buffers, so a quantized
+                // tenant dequantizes transiently at prepare time (once
+                // per generation; the temps drop after upload).
+                let prepared = match &tenant.entry.models {
+                    TenantModels::F32 { exact, approx } => PreparedPair {
+                        approx: engine.prepare_approx(approx)?,
+                        exact: engine.prepare_exact(exact)?,
+                    },
+                    TenantModels::Quantized { exact, approx } => {
+                        let a = approx.dequantize();
+                        let e = exact.dequantize();
+                        PreparedPair {
+                            approx: engine.prepare_approx(&a)?,
+                            exact: engine.prepare_exact(&e)?,
+                        }
+                    }
+                };
+                tenant.prepared = Some(prepared);
             }
             let prep = tenant.prepared.as_ref().unwrap();
             match route {

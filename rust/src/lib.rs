@@ -70,6 +70,31 @@
 //! [`coordinator::TenantPolicy`] published inside the tenant's `.arbf`
 //! bundle via [`registry::ModelStore::publish_with`].
 //!
+//! ## Quantized bundles
+//!
+//! Publishing with [`registry::PublishOptions::quantize`] set to
+//! `PayloadKind::F16` or `PayloadKind::Int8` (CLI: `registry publish
+//! --quantize f16|int8`) stores the bundle's model payloads quantized
+//! (kind-4/5 records, `docs/FORMATS.md`) and serves them from **native
+//! quantized storage** — ~2×/4× smaller resident models, so each
+//! shard's LRU holds more tenants:
+//!
+//! ```text
+//! store.publish_with("tenant-b", &exact, &approx, PublishOptions {
+//!     quantize: Some(PayloadKind::Int8),
+//!     ..Default::default()
+//! })?;
+//! ```
+//!
+//! Bound-accounting caveat: the known per-element dequantization error
+//! is folded into that tenant's Eq. 3.11 routing budget
+//! ([`approx::bounds::QuantErrorBound`], tolerance knob
+//! [`coordinator::CoordinatorBuilder::quant_drift_tol`]), so Hybrid
+//! routing escorts instances whose quantization drift bound exceeds
+//! the tolerance — to an exact model that is itself quantized
+//! ([`approx::bounds::ExactQuantErr`] reports its drift). Keep
+//! margin-critical tenants at f32.
+//!
 //! ## Architecture (three layers, Python never on the request path)
 //!
 //! * **L1/L2** — JAX + Pallas kernels (`python/compile/`) AOT-lowered to
@@ -182,7 +207,8 @@ pub mod prelude {
     pub use crate::linalg::{Mat, MathBackend};
     pub use crate::predictor::{ApproxPredictor, PredictOutput, Predictor};
     pub use crate::registry::{
-        ModelStore, PublishOptions, StoreConfig, StoreEntryInfo,
+        ModelStore, PayloadKind, PublishOptions, StoreConfig,
+        StoreEntryInfo,
     };
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::Engine;

@@ -13,9 +13,9 @@
 //!                       [--shards N] [--xla]
 //! approxrbf registry    publish|list|serve|rollback --store dir [--id name]
 //!                       [--model m.model] [--approx m.approx] [--warm]
-//!                       [--route hybrid] [--tenant-max-batch N]
-//!                       [--tenant-max-wait-us N] [--resident-hint N]
-//!                       [--shards N]
+//!                       [--quantize f16|int8] [--route hybrid]
+//!                       [--tenant-max-batch N] [--tenant-max-wait-us N]
+//!                       [--resident-hint N] [--shards N]
 //! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
 //!                       [--scale full|quick] [--artifacts artifacts]
 //! approxrbf inspect     --model m.model|--approx m.approx|--arbf m.arbf
@@ -34,7 +34,7 @@ use approxrbf::coordinator::{
 };
 use approxrbf::data::{libsvm_format, SynthProfile};
 use approxrbf::linalg::MathBackend;
-use approxrbf::registry::{binfmt, ModelStore, PublishOptions};
+use approxrbf::registry::{binfmt, ModelStore, PayloadKind, PublishOptions};
 use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
@@ -89,8 +89,9 @@ fn usage() -> String {
                (--shards N spreads tenants over N executor lanes)\n  \
                registry    publish/list/serve/rollback .arbf model bundles\n              \
                (publish --store dir --id name --model m.model\n               \
-               [--warm] [--route hybrid] [--tenant-max-batch N]\n               \
-               [--tenant-max-wait-us N] [--resident-hint N];\n              \
+               [--warm] [--quantize f16|int8] [--route hybrid]\n               \
+               [--tenant-max-batch N] [--tenant-max-wait-us N]\n               \
+               [--resident-hint N];\n              \
                rollback --store dir --id name)\n  \
                bench       regenerate the paper's tables/figures\n  \
                inspect     describe a model file (text or .arbf)\n";
@@ -385,30 +386,61 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         let hdr = binfmt::peek_header(&bytes)?;
         println!(
             "arbf v{} bundle: {} record(s), generation {}, d={}, n_sv={}, \
-             {} B",
+             payload={}, {} B",
             hdr.version,
             hdr.n_records,
             hdr.generation,
             hdr.dim,
             hdr.n_sv,
+            hdr.payload(),
             bytes.len()
         );
-        for rec in binfmt::decode(&bytes)?.1 {
+        let frames = binfmt::record_frames(&bytes)?;
+        let records = binfmt::decode(&bytes)?.1;
+        for (frame, rec) in frames.iter().zip(records) {
+            let footprint = format!(
+                "kind={} payload={} B",
+                frame.kind, frame.payload_len
+            );
             match rec {
                 binfmt::ModelRecord::Svm(m) => println!(
-                    "  exact : kernel={} n_sv={} b={:.4}",
+                    "  exact : kernel={} n_sv={} b={:.4} [{footprint}]",
                     m.kernel.name(),
                     m.n_sv(),
                     m.b
                 ),
                 binfmt::ModelRecord::Approx(a) => println!(
-                    "  approx: γ={:.4} ‖z‖² budget={:.4}",
+                    "  approx: γ={:.4} ‖z‖² budget={:.4} [{footprint}]",
                     a.gamma,
                     a.znorm_sq_budget()
                 ),
+                binfmt::ModelRecord::QuantSvm(m) => println!(
+                    "  exact : kernel={} n_sv={} b={:.4} quant={} \
+                     resident={} B drift≤{:.2e} [{footprint}]",
+                    m.kernel.name(),
+                    m.n_sv(),
+                    m.b,
+                    m.payload(),
+                    m.resident_bytes(),
+                    m.quant_err().decision_error()
+                ),
+                binfmt::ModelRecord::QuantApprox(a) => {
+                    let err = a.quant_err();
+                    println!(
+                        "  approx: γ={:.4} ‖z‖² budget={:.4} quant={} \
+                         resident={} B eps_v={:.2e} eps_m={:.2e} \
+                         [{footprint}]",
+                        a.gamma,
+                        a.znorm_sq_budget(),
+                        a.payload(),
+                        a.resident_bytes(),
+                        err.eps_v,
+                        err.eps_m
+                    )
+                }
                 binfmt::ModelRecord::Policy(p) => println!(
                     "  policy: route={} max_batch={} max_wait={} \
-                     resident_hint={}",
+                     resident_hint={} [{footprint}]",
                     p.route.map(|r| r.name()).unwrap_or("(default)"),
                     p.max_batch
                         .map(|n| n.to_string())
@@ -470,9 +502,14 @@ fn cmd_registry(args: &Args) -> Result<()> {
                     build_approx_model(&model, MathBackend::Blocked)?
                 }
             };
+            let quantize = match args.get("quantize") {
+                Some(s) => Some(s.parse::<PayloadKind>()?),
+                None => None,
+            };
             let opts = PublishOptions {
                 policy: tenant_policy_from_args(args)?,
                 warm: args.has_flag("warm"),
+                quantize,
             };
             let described = match &opts.policy {
                 Some(p) => format!(" policy={p:?}"),
@@ -482,9 +519,10 @@ fn cmd_registry(args: &Args) -> Result<()> {
             let info = store.peek(id)?;
             println!(
                 "published '{id}' generation {generation}: d={} n_sv={} \
-                 {} B{described} -> {}",
+                 payload={} {} B{described} -> {}",
                 info.dim,
                 info.n_sv,
+                info.payload,
                 info.size_bytes,
                 store.root().join(format!("{id}.arbf")).display()
             );
@@ -500,6 +538,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 "generation".to_string(),
                 "d".to_string(),
                 "n_sv".to_string(),
+                "payload".to_string(),
                 "bytes".to_string(),
                 "policy".to_string(),
                 "archived".to_string(),
@@ -514,6 +553,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                     i.generation.to_string(),
                     i.dim.to_string(),
                     i.n_sv.to_string(),
+                    i.payload.to_string(),
                     i.size_bytes.to_string(),
                     if i.has_policy { "yes" } else { "-" }.to_string(),
                     archived.to_string(),

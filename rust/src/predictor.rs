@@ -3,7 +3,7 @@
 //! The paper's value proposition is a *drop-in replacement* for exact
 //! RBF-SVM evaluation — so the crate exposes exactly one way to ask
 //! "decision values for this batch, please": the [`Predictor`] trait.
-//! Three substrates implement it:
+//! The substrates implementing it:
 //!
 //! * [`crate::svm::ExactPredictor`] — the `O(n_SV·d)` exact evaluator
 //!   (paper's Table 2 "exact" rows, Loops/Blocked math backends);
@@ -13,6 +13,14 @@
 //! * `runtime::EngineApproxPredictor` / `runtime::EngineExactPredictor`
 //!   (behind the `pjrt` feature) — the AOT-compiled XLA executables.
 //!
+//! * [`QuantApproxPredictor`] / [`QuantExactPredictor`] — the same two
+//!   decision functions evaluated directly on **native quantized
+//!   storage** (f16/int8 `.arbf` payloads, see
+//!   [`crate::registry::quant`]): elements are dequantized on the fly,
+//!   so a quantized tenant's resident footprint stays at the quantized
+//!   size. The dequantization error is bounded and folded into the
+//!   Eq. 3.11 routing budget by the serving executor.
+//!
 //! The serving layer ([`crate::coordinator`]) routes every batch through
 //! this trait, so new backends (sharded, quantized, remote) slot in
 //! behind a stable surface. Callers that want trait objects can: the
@@ -21,6 +29,9 @@
 use crate::linalg::Mat;
 use crate::linalg::MathBackend;
 use crate::approx::ApproxModel;
+use crate::registry::quant::{
+    PayloadKind, QuantApproxModel, QuantSvmModel,
+};
 use crate::{Error, Result};
 
 /// Result of one batched evaluation.
@@ -118,6 +129,125 @@ impl Predictor for ApproxPredictor<'_> {
     }
 }
 
+/// The approximated model evaluated on **native quantized storage**
+/// (f16/int8): `v` and the packed upper triangle of `M` are dequantized
+/// element-wise inside the accumulation loops, so nothing f32-sized is
+/// ever materialized. Row-independent scalar evaluation — decisions are
+/// bit-stable across batch shapes and shard counts.
+pub struct QuantApproxPredictor<'m> {
+    model: &'m QuantApproxModel,
+}
+
+impl<'m> QuantApproxPredictor<'m> {
+    pub fn new(model: &'m QuantApproxModel) -> QuantApproxPredictor<'m> {
+        QuantApproxPredictor { model }
+    }
+
+    pub fn model(&self) -> &QuantApproxModel {
+        self.model
+    }
+}
+
+impl Predictor for QuantApproxPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn kind(&self) -> &'static str {
+        match self.model.payload() {
+            PayloadKind::F16 => "approx-quant-f16",
+            _ => "approx-quant-int8",
+        }
+    }
+
+    fn predict_batch(&self, z: &Mat) -> Result<PredictOutput> {
+        if z.cols() != self.model.dim() {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs model dim {}",
+                z.cols(),
+                self.model.dim()
+            )));
+        }
+        let mut decisions = Vec::with_capacity(z.rows());
+        let mut norms = Vec::with_capacity(z.rows());
+        for r in 0..z.rows() {
+            let (dec, zn) = self.model.decision_one(z.row(r));
+            decisions.push(dec);
+            norms.push(zn);
+        }
+        Ok(PredictOutput { decisions, znorms_sq: Some(norms) })
+    }
+}
+
+/// The exact evaluator on **native quantized storage**: coefficients
+/// and SV rows stay f16/int8 and are dequantized inside the per-SV
+/// kernel loop (precomputed dequantized SV norms, like the f32 blocked
+/// path). Row-independent evaluation, bit-stable across batch shapes.
+pub struct QuantExactPredictor<'m> {
+    model: &'m QuantSvmModel,
+    sv_norms: Vec<f32>,
+}
+
+impl<'m> QuantExactPredictor<'m> {
+    pub fn new(model: &'m QuantSvmModel) -> QuantExactPredictor<'m> {
+        let sv_norms = model.sv_row_norms_sq();
+        QuantExactPredictor { model, sv_norms }
+    }
+
+    /// Construct with precomputed (dequantized) SV norms — the serving
+    /// executor caches them per model generation.
+    pub fn with_norms(
+        model: &'m QuantSvmModel,
+        sv_norms: Vec<f32>,
+    ) -> Result<QuantExactPredictor<'m>> {
+        if sv_norms.len() != model.n_sv() {
+            return Err(Error::Shape(format!(
+                "{} SV norms vs {} SVs",
+                sv_norms.len(),
+                model.n_sv()
+            )));
+        }
+        Ok(QuantExactPredictor { model, sv_norms })
+    }
+}
+
+impl Predictor for QuantExactPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn kind(&self) -> &'static str {
+        match self.model.payload() {
+            PayloadKind::F16 => "exact-quant-f16",
+            _ => "exact-quant-int8",
+        }
+    }
+
+    fn predict_batch(&self, z: &Mat) -> Result<PredictOutput> {
+        if z.cols() != self.model.dim() {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs model dim {}",
+                z.cols(),
+                self.model.dim()
+            )));
+        }
+        let m = self.model;
+        let mut decisions = Vec::with_capacity(z.rows());
+        for r in 0..z.rows() {
+            let zr = z.row(r);
+            let zn = crate::linalg::vecops::norm_sq(zr);
+            let mut acc = m.b;
+            for s in 0..m.n_sv() {
+                let cross = m.sv.row_dot(s, zr);
+                acc += m.coef.get(s)
+                    * m.kernel.eval_precomp(self.sv_norms[s], zn, cross);
+            }
+            decisions.push(acc);
+        }
+        Ok(PredictOutput { decisions, znorms_sq: None })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,5 +332,59 @@ mod tests {
             znorms_sq: None,
         };
         assert_eq!(out.labels(), vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn quant_predictors_match_reference_within_reported_bounds() {
+        let (model, am, ds) = trained();
+        let z = ds.x.rows_slice(0, 24);
+        for kind in [PayloadKind::F16, PayloadKind::Int8] {
+            let qa = QuantApproxModel::quantize(&am, kind).unwrap();
+            let qe = QuantSvmModel::quantize(&model, kind).unwrap();
+            let ap = QuantApproxPredictor::new(&qa);
+            let ep = QuantExactPredictor::new(&qe);
+            assert_eq!(ap.dim(), am.dim());
+            assert_eq!(ep.dim(), model.dim());
+            assert!(ap.kind().starts_with("approx-quant"));
+            assert!(ep.kind().starts_with("exact-quant"));
+            let aout = ap.predict_batch(&z).unwrap();
+            let eout = ep.predict_batch(&z).unwrap();
+            assert_eq!(aout.decisions.len(), z.rows());
+            assert_eq!(eout.decisions.len(), z.rows());
+            let norms = aout.znorms_sq.expect("quant approx reports ‖z‖²");
+            let a_err = qa.quant_err();
+            let e_bound = qe.quant_err().decision_error();
+            for r in 0..z.rows() {
+                // Batch rows are bit-identical to per-row evaluation
+                // (row-independent scalar path).
+                let (one, zn) = qa.decision_one(z.row(r));
+                assert_eq!(aout.decisions[r].to_bits(), one.to_bits());
+                assert_eq!(norms[r].to_bits(), zn.to_bits());
+                // And both stay within the advertised drift bounds of
+                // their f32 twins.
+                let (want_a, _) = am.decision_one(z.row(r));
+                assert!(
+                    (aout.decisions[r] - want_a).abs()
+                        <= a_err.decision_error(zn),
+                    "{kind} approx row {r}"
+                );
+                let want_e = model.decision_one(z.row(r));
+                assert!(
+                    (eout.decisions[r] - want_e).abs() <= e_bound,
+                    "{kind} exact row {r}: |{} - {want_e}| > {e_bound}",
+                    eout.decisions[r]
+                );
+            }
+            // Trait objects work (object safety).
+            let dyn_preds: Vec<&dyn Predictor> = vec![&ap, &ep];
+            for p in dyn_preds {
+                assert_eq!(p.predict_batch(&z).unwrap().decisions.len(), 24);
+                let bad = Mat::zeros(2, am.dim() + 1);
+                assert!(matches!(
+                    p.predict_batch(&bad),
+                    Err(Error::Shape(_))
+                ));
+            }
+        }
     }
 }

@@ -1,22 +1,29 @@
 //! `.arbf` — the approxrbf binary model artifact format.
 //!
 //! A compact, versioned, checksummed little-endian encoding for
-//! [`SvmModel`], [`ApproxModel`] and the per-tenant
+//! [`SvmModel`], [`ApproxModel`], their quantized twins
+//! ([`QuantSvmModel`] / [`QuantApproxModel`], kind-4 f16 and kind-5
+//! int8 records, advertised by the [`FLAG_QUANT_F16`] /
+//! [`FLAG_QUANT_INT8`] header bits) and the per-tenant
 //! [`TenantPolicy`] (kind-3 record, advertised by the
 //! [`FLAG_HAS_POLICY`] header bit), sitting alongside the text codecs
 //! (LIBSVM text / `approx_type maclaurin2_rbf`) that Table 3 measures.
 //! Design goals, in order: **integrity** (magic + version + per-record
 //! CRC-32, truncation-safe reads, strict non-finite rejection — every
 //! failure is a typed [`Error::Corrupt`]), **compactness** (4-byte f32
-//! payloads, upper-triangle-only `M`, LIBSVM-style sparse SV rows) and
-//! **cheap introspection** (generation/dim/n_sv live in the fixed
-//! 32-byte file header so the registry can poll for hot-swaps without
-//! deserializing payloads).
+//! payloads — 2-byte f16 / 1-byte int8 when quantized —
+//! upper-triangle-only `M`, LIBSVM-style sparse SV rows) and
+//! **cheap introspection** (generation/dim/n_sv/payload-kind live in
+//! the fixed 32-byte file header so the registry can poll for
+//! hot-swaps without deserializing payloads).
 //!
-//! Byte-exact layout: `docs/FORMATS.md`. Encoders refuse non-finite
-//! values with [`Error::InvalidArg`]; decoders re-run the same
-//! validation ([`SvmModel::check_finite`] /
-//! [`ApproxModel::check_finite`]) and report [`Error::Corrupt`].
+//! Byte-exact layout: `docs/FORMATS.md`; the committed golden corpus
+//! under `rust/tests/data/` plus `rust/tests/format_conformance.rs`
+//! pin every byte of it. Encoders refuse non-finite values with
+//! [`Error::InvalidArg`]; decoders re-run the same validation
+//! ([`SvmModel::check_finite`] / [`ApproxModel::check_finite`] /
+//! [`QuantSvmModel::check`] / [`QuantApproxModel::check`]) and report
+//! [`Error::Corrupt`].
 
 use std::time::Duration;
 
@@ -26,6 +33,11 @@ use crate::linalg::Mat;
 use crate::svm::{Kernel, SvmModel};
 use crate::util::crc32::crc32;
 use crate::{Error, Result};
+
+use super::quant::{
+    PayloadKind, QuantApproxModel, QuantMat, QuantSvmModel, QuantSymData,
+    QuantSymMat, QuantVec, TenantModels,
+};
 
 /// File magic: `ARBF`.
 pub const MAGIC: [u8; 4] = *b"ARBF";
@@ -41,12 +53,22 @@ pub const RECORD_HEADER_LEN: usize = 16;
 /// word, so version-1 readers that predate policies still read these
 /// files.
 pub const FLAG_HAS_POLICY: u64 = 1;
+/// Header flag bit: model payloads are kind-4 (f16) records.
+pub const FLAG_QUANT_F16: u64 = 1 << 1;
+/// Header flag bit: model payloads are kind-5 (int8) records.
+pub const FLAG_QUANT_INT8: u64 = 1 << 2;
 /// Version of the kind-3 policy record payload.
 pub const POLICY_PAYLOAD_VERSION: u16 = 1;
 
 const KIND_SVM: u16 = 1;
 const KIND_APPROX: u16 = 2;
 const KIND_POLICY: u16 = 3;
+const KIND_QUANT_F16: u16 = 4;
+const KIND_QUANT_INT8: u16 = 5;
+/// Role byte leading every kind-4/5 payload: which model the record
+/// quantizes.
+const ROLE_SVM: u8 = 1;
+const ROLE_APPROX: u8 = 2;
 /// Sanity cap: a file holds at most this many records (bundles use 2).
 const MAX_RECORDS: u16 = 16;
 /// Sanity cap on the dense element count (`n_sv × d`) of a decoded SVM
@@ -77,6 +99,18 @@ impl ArbfHeader {
     pub fn has_policy(&self) -> bool {
         self.flags & FLAG_HAS_POLICY != 0
     }
+
+    /// Payload precision advertised by the header flags (the full
+    /// decode cross-checks this against the actual record kinds).
+    pub fn payload(&self) -> PayloadKind {
+        if self.flags & FLAG_QUANT_F16 != 0 {
+            PayloadKind::F16
+        } else if self.flags & FLAG_QUANT_INT8 != 0 {
+            PayloadKind::Int8
+        } else {
+            PayloadKind::F32
+        }
+    }
 }
 
 /// One decoded record.
@@ -86,16 +120,37 @@ pub enum ModelRecord {
     Approx(ApproxModel),
     /// Per-tenant serving policy (kind 3).
     Policy(TenantPolicy),
+    /// Quantized exact model (kind 4/5, role 1), in native storage.
+    QuantSvm(QuantSvmModel),
+    /// Quantized approx model (kind 4/5, role 2), in native storage.
+    QuantApprox(QuantApproxModel),
 }
 
-/// A fully decoded registry bundle.
+/// A fully decoded registry bundle: the (exact, approx) pair in
+/// whatever precision it was published with, plus the optional policy.
 #[derive(Clone, Debug)]
 pub struct Bundle {
     pub generation: u64,
-    pub exact: SvmModel,
-    pub approx: ApproxModel,
+    /// The model pair — f32 or native quantized storage.
+    pub models: TenantModels,
     /// Per-tenant serving policy, when the bundle carries one.
     pub policy: Option<TenantPolicy>,
+}
+
+impl Bundle {
+    pub fn payload(&self) -> PayloadKind {
+        self.models.payload()
+    }
+
+    /// Dequantized exact model (a clone for f32 bundles).
+    pub fn exact_dequant(&self) -> SvmModel {
+        self.models.exact_dequant()
+    }
+
+    /// Dequantized approx model (a clone for f32 bundles).
+    pub fn approx_dequant(&self) -> ApproxModel {
+        self.models.approx_dequant()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -193,6 +248,113 @@ fn policy_payload(p: &TenantPolicy) -> Vec<u8> {
     out
 }
 
+/// Kind-4/5 role-1 payload: the exact model with quantized
+/// coefficients and sparse quantized SV rows (layout: FORMATS.md).
+fn quant_svm_payload(m: &QuantSvmModel) -> Vec<u8> {
+    let (tag, gamma, beta) = match m.kernel {
+        Kernel::Linear => (0u8, 0.0f32, 0.0f32),
+        Kernel::Rbf { gamma } => (1, gamma, 0.0),
+        Kernel::Poly2 { gamma, beta } => (2, gamma, beta),
+    };
+    let (n_sv, d) = (m.n_sv(), m.dim());
+    let mut out = Vec::new();
+    out.push(ROLE_SVM);
+    out.push(tag);
+    push_f32(&mut out, gamma);
+    push_f32(&mut out, beta);
+    push_f32(&mut out, m.b);
+    push_u32(&mut out, n_sv as u32);
+    push_u32(&mut out, d as u32);
+    match &m.coef {
+        QuantVec::F16(h) => {
+            for &x in h {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantVec::Int8 { scale, q } => {
+            push_f32(&mut out, *scale);
+            for &x in q {
+                out.push(x as u8);
+            }
+        }
+    }
+    // Sparse rows mirror the f32 encoding; a "zero" is a zero-valued
+    // quantized element (±0 for f16, q = 0 for int8). Int8 rows carry
+    // their scale even when empty, so dense reconstruction is exact.
+    match &m.sv {
+        QuantMat::F16 { rows, cols, h } => {
+            for r in 0..*rows {
+                let row = &h[r * cols..(r + 1) * cols];
+                let nnz = row.iter().filter(|&&x| x & 0x7fff != 0).count();
+                push_u32(&mut out, nnz as u32);
+                for (j, &x) in row.iter().enumerate() {
+                    if x & 0x7fff != 0 {
+                        push_u32(&mut out, j as u32);
+                        push_u16(&mut out, x);
+                    }
+                }
+            }
+        }
+        QuantMat::Int8 { rows, cols, scales, q } => {
+            for r in 0..*rows {
+                let row = &q[r * cols..(r + 1) * cols];
+                let nnz = row.iter().filter(|&&x| x != 0).count();
+                push_u32(&mut out, nnz as u32);
+                push_f32(&mut out, scales[r]);
+                for (j, &x) in row.iter().enumerate() {
+                    if x != 0 {
+                        push_u32(&mut out, j as u32);
+                        out.push(x as u8);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Kind-4/5 role-2 payload: the approx model with quantized `v` and
+/// packed upper-triangle `M` (layout: FORMATS.md). Scalars stay f32.
+fn quant_approx_payload(a: &QuantApproxModel) -> Vec<u8> {
+    let d = a.dim();
+    let mut out = Vec::new();
+    out.push(ROLE_APPROX);
+    push_u32(&mut out, d as u32);
+    push_f32(&mut out, a.gamma);
+    push_f32(&mut out, a.b);
+    push_f32(&mut out, a.c);
+    push_f32(&mut out, a.max_sv_norm_sq);
+    match &a.v {
+        QuantVec::F16(h) => {
+            for &x in h {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantVec::Int8 { scale, q } => {
+            push_f32(&mut out, *scale);
+            for &x in q {
+                out.push(x as u8);
+            }
+        }
+    }
+    match &a.m.data {
+        QuantSymData::F16(h) => {
+            for &x in h {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantSymData::Int8 { scales, q } => {
+            for &s in scales {
+                push_f32(&mut out, s);
+            }
+            for &x in q {
+                out.push(x as u8);
+            }
+        }
+    }
+    out
+}
+
 fn write_file(
     generation: u64,
     dim: usize,
@@ -258,25 +420,106 @@ pub fn encode_bundle_with(
     approx: &ApproxModel,
     policy: Option<&TenantPolicy>,
 ) -> Result<Vec<u8>> {
-    if exact.dim() != approx.dim() {
-        return Err(Error::Shape(format!(
-            "bundle: exact dim {} vs approx dim {}",
-            exact.dim(),
-            approx.dim()
-        )));
+    encode_bundle_native(
+        generation,
+        &TenantModels::F32 {
+            exact: exact.clone(),
+            approx: approx.clone(),
+        },
+        policy,
+    )
+}
+
+/// [`encode_bundle_with`] at a chosen payload precision: `F32` writes
+/// kind-1/2 records, `F16`/`Int8` quantize both models fresh into
+/// kind-4/5 records (the publish path; CLI `registry publish
+/// --quantize`).
+pub fn encode_bundle_quantized(
+    generation: u64,
+    exact: &SvmModel,
+    approx: &ApproxModel,
+    policy: Option<&TenantPolicy>,
+    payload: PayloadKind,
+) -> Result<Vec<u8>> {
+    // Dimension agreement is enforced once, by encode_bundle_native.
+    match payload {
+        PayloadKind::F32 => {
+            encode_bundle_with(generation, exact, approx, policy)
+        }
+        kind => encode_bundle_native(
+            generation,
+            &TenantModels::Quantized {
+                exact: QuantSvmModel::quantize(exact, kind)?,
+                approx: QuantApproxModel::quantize(approx, kind)?,
+            },
+            policy,
+        ),
     }
-    let sp = svm_payload(exact)?;
-    let ap = approx_payload(approx)?;
-    let mut records = vec![(KIND_SVM, sp), (KIND_APPROX, ap)];
-    let mut flags = 0u64;
+}
+
+/// Encode a bundle from whatever storage the models already hold —
+/// **lossless** for quantized models (stored q-values and scales are
+/// written verbatim, never re-quantized). This is the rollback path
+/// (an archived int8 bundle reverts without double-quantization) and
+/// the byte-stability contract the format-conformance corpus pins:
+/// `encode_bundle_native(decode(x)) == x`.
+pub fn encode_bundle_native(
+    generation: u64,
+    models: &TenantModels,
+    policy: Option<&TenantPolicy>,
+) -> Result<Vec<u8>> {
+    let (mut records, mut flags) = match models {
+        TenantModels::F32 { exact, approx } => {
+            if exact.dim() != approx.dim() {
+                return Err(Error::Shape(format!(
+                    "bundle: exact dim {} vs approx dim {}",
+                    exact.dim(),
+                    approx.dim()
+                )));
+            }
+            let sp = svm_payload(exact)?;
+            let ap = approx_payload(approx)?;
+            (vec![(KIND_SVM, sp), (KIND_APPROX, ap)], 0u64)
+        }
+        TenantModels::Quantized { exact, approx } => {
+            if exact.dim() != approx.dim() {
+                return Err(Error::Shape(format!(
+                    "bundle: exact dim {} vs approx dim {}",
+                    exact.dim(),
+                    approx.dim()
+                )));
+            }
+            if exact.payload() != approx.payload() {
+                return Err(Error::InvalidArg(format!(
+                    "bundle: exact payload {} vs approx payload {}",
+                    exact.payload(),
+                    approx.payload()
+                )));
+            }
+            exact.check().map_err(Error::InvalidArg)?;
+            approx.check().map_err(Error::InvalidArg)?;
+            let (kind, flag) = match exact.payload() {
+                PayloadKind::F16 => (KIND_QUANT_F16, FLAG_QUANT_F16),
+                PayloadKind::Int8 => (KIND_QUANT_INT8, FLAG_QUANT_INT8),
+                PayloadKind::F32 => unreachable!("quantized storage"),
+            };
+            (
+                vec![
+                    (kind, quant_svm_payload(exact)),
+                    (kind, quant_approx_payload(approx)),
+                ],
+                flag,
+            )
+        }
+    };
     if let Some(p) = policy {
         records.push((KIND_POLICY, policy_payload(p)));
         flags |= FLAG_HAS_POLICY;
     }
     Ok(write_file(
         generation,
-        exact.dim(),
-        exact.n_sv(),
+        models.dim(),
+        models.n_sv(),
         flags,
         records,
     ))
@@ -337,6 +580,21 @@ impl<'a> Reader<'a> {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
+
+    fn u16_vec(&mut self, n: usize, what: &str) -> Result<Vec<u16>> {
+        let bytes = self.take(n.checked_mul(2).ok_or_else(|| {
+            Error::Corrupt(format!("{what}: length overflow"))
+        })?, what)?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn i8_vec(&mut self, n: usize, what: &str) -> Result<Vec<i8>> {
+        let bytes = self.take(n, what)?;
+        Ok(bytes.iter().map(|&b| b as i8).collect())
+    }
 }
 
 /// Read and validate the fixed file header without touching payloads.
@@ -366,6 +624,14 @@ pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
     let dim = r.u32("dim")?;
     let n_sv = r.u32("n_sv")?;
     let flags = r.u64("header flags")?;
+    // Unknown bits are ignored (forward compatibility), but the two
+    // known quantization bits are mutually exclusive — no encoder
+    // writes both, so the combination can only be corruption.
+    if flags & FLAG_QUANT_F16 != 0 && flags & FLAG_QUANT_INT8 != 0 {
+        return Err(Error::Corrupt(
+            "header flags claim both f16 and int8 payloads".into(),
+        ));
+    }
     Ok(ArbfHeader { version, n_records, generation, dim, n_sv, flags })
 }
 
@@ -428,12 +694,7 @@ fn decode_svm_payload(payload: &[u8], want_dim: u32) -> Result<SvmModel> {
             return Err(Error::Corrupt(format!("unknown kernel tag {t}")))
         }
     };
-    if (n_sv as u64) * (d as u64) > MAX_MODEL_ELEMS {
-        return Err(Error::Corrupt(format!(
-            "implausible svm record: n_sv={n_sv} × d={d} exceeds the \
-             {MAX_MODEL_ELEMS}-element cap"
-        )));
-    }
+    check_svm_elems(n_sv, d)?;
     let coef = r.f32_vec(n_sv, "coefficients")?;
     let mut sv = Mat::zeros(n_sv, d);
     for i in 0..n_sv {
@@ -476,6 +737,7 @@ fn decode_approx_payload(payload: &[u8], want_dim: u32) -> Result<ApproxModel> {
             "approx record dim {d} disagrees with header dim {want_dim}"
         )));
     }
+    check_approx_elems(d)?;
     let gamma = r.f32("gamma")?;
     let b = r.f32("b")?;
     let c = r.f32("c")?;
@@ -501,6 +763,248 @@ fn decode_approx_payload(payload: &[u8], want_dim: u32) -> Result<ApproxModel> {
     let am = ApproxModel { gamma, b, c, v, m, max_sv_norm_sq };
     am.check_finite().map_err(Error::Corrupt)?;
     Ok(am)
+}
+
+/// The alloc-bomb cap applied to every model record, quantized or not:
+/// a crafted header must not be able to demand a dense allocation
+/// orders of magnitude beyond the payload it ships.
+fn check_svm_elems(n_sv: usize, d: usize) -> Result<()> {
+    if (n_sv as u64) * (d as u64) > MAX_MODEL_ELEMS {
+        return Err(Error::Corrupt(format!(
+            "implausible svm record: n_sv={n_sv} × d={d} exceeds the \
+             {MAX_MODEL_ELEMS}-element cap"
+        )));
+    }
+    Ok(())
+}
+
+fn check_approx_elems(d: usize) -> Result<()> {
+    if (d as u64) * (d as u64) > MAX_MODEL_ELEMS {
+        return Err(Error::Corrupt(format!(
+            "implausible approx record: d={d} demands a {d}×{d} matrix \
+             beyond the {MAX_MODEL_ELEMS}-element cap"
+        )));
+    }
+    Ok(())
+}
+
+/// Decode a kind-4 (f16) or kind-5 (int8) record: a role byte, then the
+/// quantized twin of the corresponding f32 payload.
+fn decode_quant_payload(
+    payload: &[u8],
+    kind: PayloadKind,
+    want_dim: u32,
+) -> Result<ModelRecord> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let role = r.u8("quant record role")?;
+    let rec = match role {
+        ROLE_SVM => {
+            ModelRecord::QuantSvm(decode_quant_svm(&mut r, kind, want_dim)?)
+        }
+        ROLE_APPROX => ModelRecord::QuantApprox(decode_quant_approx(
+            &mut r, kind, want_dim,
+        )?),
+        t => {
+            return Err(Error::Corrupt(format!(
+                "unknown quant record role {t}"
+            )))
+        }
+    };
+    if r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "quant record: {} trailing payload bytes",
+            payload.len() - r.pos
+        )));
+    }
+    Ok(rec)
+}
+
+fn decode_quant_svm(
+    r: &mut Reader,
+    kind: PayloadKind,
+    want_dim: u32,
+) -> Result<QuantSvmModel> {
+    let tag = r.u8("kernel tag")?;
+    let gamma = r.f32("gamma")?;
+    let beta = r.f32("coef0")?;
+    let b = r.f32("bias")?;
+    let n_sv = r.u32("n_sv")? as usize;
+    let d = r.u32("dim")? as usize;
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "quant svm record dim {d} disagrees with header dim {want_dim}"
+        )));
+    }
+    let kernel = match tag {
+        0 => Kernel::Linear,
+        1 => Kernel::Rbf { gamma },
+        2 => Kernel::Poly2 { gamma, beta },
+        t => {
+            return Err(Error::Corrupt(format!("unknown kernel tag {t}")))
+        }
+    };
+    check_svm_elems(n_sv, d)?;
+    let coef = match kind {
+        PayloadKind::F16 => {
+            QuantVec::F16(r.u16_vec(n_sv, "quantized coefficients")?)
+        }
+        PayloadKind::Int8 => QuantVec::Int8 {
+            scale: r.f32("coef scale")?,
+            q: r.i8_vec(n_sv, "quantized coefficients")?,
+        },
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    let sv = match kind {
+        PayloadKind::F16 => {
+            let mut h = vec![0u16; n_sv * d];
+            for i in 0..n_sv {
+                let nnz = r.u32("sv nnz")? as usize;
+                if nnz > d {
+                    return Err(Error::Corrupt(format!(
+                        "quant sv {i}: {nnz} nonzeros in dimension {d}"
+                    )));
+                }
+                for _ in 0..nnz {
+                    let idx = r.u32("sv index")? as usize;
+                    let val = r.u16("sv value")?;
+                    if idx >= d {
+                        return Err(Error::Corrupt(format!(
+                            "quant sv {i}: feature index {idx} out of \
+                             range (d={d})"
+                        )));
+                    }
+                    h[i * d + idx] = val;
+                }
+            }
+            QuantMat::F16 { rows: n_sv, cols: d, h }
+        }
+        PayloadKind::Int8 => {
+            let mut q = vec![0i8; n_sv * d];
+            let mut scales = Vec::with_capacity(n_sv);
+            for i in 0..n_sv {
+                let nnz = r.u32("sv nnz")? as usize;
+                if nnz > d {
+                    return Err(Error::Corrupt(format!(
+                        "quant sv {i}: {nnz} nonzeros in dimension {d}"
+                    )));
+                }
+                scales.push(r.f32("sv row scale")?);
+                for _ in 0..nnz {
+                    let idx = r.u32("sv index")? as usize;
+                    let val = r.u8("sv value")? as i8;
+                    if idx >= d {
+                        return Err(Error::Corrupt(format!(
+                            "quant sv {i}: feature index {idx} out of \
+                             range (d={d})"
+                        )));
+                    }
+                    q[i * d + idx] = val;
+                }
+            }
+            QuantMat::Int8 { rows: n_sv, cols: d, scales, q }
+        }
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    let model = QuantSvmModel { kernel, b, coef, sv };
+    model.check().map_err(Error::Corrupt)?;
+    Ok(model)
+}
+
+fn decode_quant_approx(
+    r: &mut Reader,
+    kind: PayloadKind,
+    want_dim: u32,
+) -> Result<QuantApproxModel> {
+    let d = r.u32("dim")? as usize;
+    if d == 0 {
+        return Err(Error::Corrupt("quant approx record with dim 0".into()));
+    }
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "quant approx record dim {d} disagrees with header dim \
+             {want_dim}"
+        )));
+    }
+    check_approx_elems(d)?;
+    let gamma = r.f32("gamma")?;
+    let b = r.f32("b")?;
+    let c = r.f32("c")?;
+    let max_sv_norm_sq = r.f32("max_sv_norm_sq")?;
+    let packed = QuantSymMat::packed_len(d);
+    let (v, data) = match kind {
+        PayloadKind::F16 => (
+            QuantVec::F16(r.u16_vec(d, "quantized v")?),
+            QuantSymData::F16(r.u16_vec(packed, "quantized M upper")?),
+        ),
+        PayloadKind::Int8 => (
+            QuantVec::Int8 {
+                scale: r.f32("v scale")?,
+                q: r.i8_vec(d, "quantized v")?,
+            },
+            QuantSymData::Int8 {
+                scales: r.f32_vec(d, "M row scales")?,
+                q: r.i8_vec(packed, "quantized M upper")?,
+            },
+        ),
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    let model = QuantApproxModel {
+        gamma,
+        b,
+        c,
+        max_sv_norm_sq,
+        v,
+        m: QuantSymMat { d, data },
+    };
+    model.check().map_err(Error::Corrupt)?;
+    Ok(model)
+}
+
+/// One record's framing facts, without decoding its payload.
+#[derive(Clone, Copy, Debug)]
+pub struct RecordFrame {
+    pub kind: u16,
+    pub crc32: u32,
+    pub payload_len: u64,
+    /// Byte offset of the payload within the file.
+    pub payload_offset: usize,
+}
+
+/// Walk the record frames of a file (header + framing validation only;
+/// payloads are not parsed). Powers `inspect --arbf` footprint
+/// reporting and the format-conformance corpus's CRC re-checks.
+pub fn record_frames(bytes: &[u8]) -> Result<Vec<RecordFrame>> {
+    let hdr = peek_header(bytes)?;
+    let mut r = Reader { buf: bytes, pos: FILE_HEADER_LEN };
+    let mut out = Vec::with_capacity(hdr.n_records as usize);
+    for i in 0..hdr.n_records {
+        let kind = r.u16("record kind")?;
+        let _reserved = r.u16("record reserved")?;
+        let crc = r.u32("record crc")?;
+        let len = r.u64("record payload length")?;
+        let avail = (r.buf.len() - r.pos) as u64;
+        if len > avail {
+            return Err(Error::Corrupt(format!(
+                "record {i}: payload length {len} exceeds remaining file \
+                 size {avail}"
+            )));
+        }
+        let payload_offset = r.pos;
+        let _ = r.take(len as usize, "record payload")?;
+        out.push(RecordFrame {
+            kind,
+            crc32: crc,
+            payload_len: len,
+            payload_offset,
+        });
+    }
+    if r.pos != bytes.len() {
+        return Err(Error::Corrupt(format!(
+            "{} trailing bytes after final record",
+            bytes.len() - r.pos
+        )));
+    }
+    Ok(out)
 }
 
 /// Decode a whole `.arbf` file into its records, verifying framing and
@@ -537,6 +1041,12 @@ pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
             KIND_POLICY => {
                 ModelRecord::Policy(decode_policy_payload(payload)?)
             }
+            KIND_QUANT_F16 => {
+                decode_quant_payload(payload, PayloadKind::F16, hdr.dim)?
+            }
+            KIND_QUANT_INT8 => {
+                decode_quant_payload(payload, PayloadKind::Int8, hdr.dim)?
+            }
             k => {
                 return Err(Error::Corrupt(format!(
                     "record {i}: unknown kind {k}"
@@ -569,16 +1079,28 @@ pub fn decode_approx(bytes: &[u8]) -> Result<ApproxModel> {
     }
 }
 
-/// Decode a registry bundle including its optional policy record.
+/// Decode a registry bundle including its optional policy record, in
+/// whatever payload precision it was written with. The header's
+/// payload flags must agree with the actual record kinds, the bundle
+/// must hold exactly one exact and one approx model record, and a
+/// quantized bundle's records must share one precision.
 pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
     let (hdr, records) = decode(bytes)?;
     let mut exact = None;
     let mut approx = None;
+    let mut q_exact: Option<QuantSvmModel> = None;
+    let mut q_approx: Option<QuantApproxModel> = None;
     let mut policy = None;
     for rec in records {
         match rec {
             ModelRecord::Svm(m) if exact.is_none() => exact = Some(m),
             ModelRecord::Approx(a) if approx.is_none() => approx = Some(a),
+            ModelRecord::QuantSvm(m) if q_exact.is_none() => {
+                q_exact = Some(m)
+            }
+            ModelRecord::QuantApprox(a) if q_approx.is_none() => {
+                q_approx = Some(a)
+            }
             ModelRecord::Policy(p) if policy.is_none() => policy = Some(p),
             _ => {
                 return Err(Error::Corrupt(
@@ -587,17 +1109,36 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
             }
         }
     }
-    match (exact, approx) {
-        (Some(exact), Some(approx)) => Ok(Bundle {
-            generation: hdr.generation,
-            exact,
-            approx,
-            policy,
-        }),
-        _ => Err(Error::Corrupt(
-            "bundle must hold an svm record and an approx record".into(),
-        )),
+    let models = match (exact, approx, q_exact, q_approx) {
+        (Some(exact), Some(approx), None, None) => {
+            TenantModels::F32 { exact, approx }
+        }
+        (None, None, Some(exact), Some(approx)) => {
+            if exact.payload() != approx.payload() {
+                return Err(Error::Corrupt(format!(
+                    "bundle mixes payload kinds ({} exact vs {} approx)",
+                    exact.payload(),
+                    approx.payload()
+                )));
+            }
+            TenantModels::Quantized { exact, approx }
+        }
+        _ => {
+            return Err(Error::Corrupt(
+                "bundle must hold one exact record and one approx record \
+                 of a single payload kind"
+                    .into(),
+            ))
+        }
+    };
+    if models.payload() != hdr.payload() {
+        return Err(Error::Corrupt(format!(
+            "header advertises {} payloads but records are {}",
+            hdr.payload(),
+            models.payload()
+        )));
     }
+    Ok(Bundle { generation: hdr.generation, models, policy })
 }
 
 #[cfg(test)]
@@ -672,8 +1213,9 @@ mod tests {
         assert_eq!(hdr.n_sv, 3);
         let b = decode_bundle_full(&bytes).unwrap();
         assert_eq!(b.generation, 7);
-        assert_eq!(b.exact.n_sv(), e.n_sv());
-        assert_eq!(b.approx.v, a.v);
+        assert_eq!(b.payload(), PayloadKind::F32);
+        assert_eq!(b.exact_dequant().n_sv(), e.n_sv());
+        assert_eq!(b.approx_dequant().v, a.v);
         assert_eq!(b.policy, None);
     }
 
@@ -738,7 +1280,7 @@ mod tests {
         let b = decode_bundle_full(&bytes).unwrap();
         assert_eq!(b.generation, 3);
         assert_eq!(b.policy, Some(policy));
-        assert_eq!(b.exact.n_sv(), e.n_sv());
+        assert_eq!(b.exact_dequant().n_sv(), e.n_sv());
     }
 
     #[test]
@@ -792,5 +1334,214 @@ mod tests {
         let mut sv = toy_svm();
         sv.coef[1] = f32::INFINITY;
         assert!(matches!(encode_svm(&sv), Err(Error::InvalidArg(_))));
+    }
+
+    // -- kind-4/5 quantized records -----------------------------------
+
+    #[test]
+    fn quantized_bundle_roundtrips_natively_and_sets_flags() {
+        let e = toy_svm();
+        let a = toy_approx();
+        for (kind, flag, code) in [
+            (PayloadKind::F16, FLAG_QUANT_F16, KIND_QUANT_F16),
+            (PayloadKind::Int8, FLAG_QUANT_INT8, KIND_QUANT_INT8),
+        ] {
+            let bytes =
+                encode_bundle_quantized(5, &e, &a, None, kind).unwrap();
+            let hdr = peek_header(&bytes).unwrap();
+            assert_eq!(hdr.payload(), kind);
+            assert_eq!(hdr.flags, flag);
+            assert_eq!(hdr.n_records, 2);
+            assert_eq!(hdr.dim, 3);
+            assert_eq!(hdr.n_sv, 3);
+            let frames = record_frames(&bytes).unwrap();
+            assert!(frames.iter().all(|f| f.kind == code));
+            let b = decode_bundle_full(&bytes).unwrap();
+            assert_eq!(b.generation, 5);
+            assert_eq!(b.payload(), kind);
+            // Lossless native re-encode: the byte-stability contract
+            // rollback and the golden corpus rely on.
+            let again =
+                encode_bundle_native(5, &b.models, b.policy.as_ref())
+                    .unwrap();
+            assert_eq!(again, bytes, "{kind}: native re-encode drifted");
+            // Dequantized models stay within the advertised bounds.
+            let deq = b.approx_dequant();
+            assert_eq!(deq.dim(), 3);
+            let err = b.models.quant_error().unwrap();
+            for r in 0..3 {
+                for c in 0..3 {
+                    assert!(
+                        (deq.m.at(r, c) - a.m.at(r, c)).abs() <= err.eps_m,
+                        "{kind} M[{r}][{c}]"
+                    );
+                    assert_eq!(deq.m.at(r, c), deq.m.at(c, r));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_bundle_carries_policy() {
+        let policy = TenantPolicy {
+            route: Some(RoutePolicy::Hybrid),
+            max_batch: Some(8),
+            max_wait: Some(Duration::from_micros(100)),
+            max_resident_hint: 1,
+        };
+        let bytes = encode_bundle_quantized(
+            2,
+            &toy_svm(),
+            &toy_approx(),
+            Some(&policy),
+            PayloadKind::Int8,
+        )
+        .unwrap();
+        let hdr = peek_header(&bytes).unwrap();
+        assert!(hdr.has_policy());
+        assert_eq!(hdr.payload(), PayloadKind::Int8);
+        assert_eq!(hdr.flags, FLAG_HAS_POLICY | FLAG_QUANT_INT8);
+        let b = decode_bundle_full(&bytes).unwrap();
+        assert_eq!(b.policy, Some(policy));
+    }
+
+    #[test]
+    fn quantized_record_bitflip_fails_crc() {
+        let bytes = encode_bundle_quantized(
+            1,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::Int8,
+        )
+        .unwrap();
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 2] ^= 0x10;
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("CRC-32")
+        ));
+        // Truncation at every prefix length stays typed — never panics.
+        for cut in 0..bytes.len() {
+            assert!(matches!(
+                decode_bundle_full(&bytes[..cut]),
+                Err(Error::Corrupt(_))
+            ));
+        }
+    }
+
+    #[test]
+    fn contradictory_quant_flags_are_corrupt_at_peek() {
+        let mut bytes = encode_bundle_quantized(
+            1,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::F16,
+        )
+        .unwrap();
+        bytes[24] |= FLAG_QUANT_INT8 as u8; // f16 | int8: impossible
+        assert!(matches!(
+            peek_header(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("both f16 and int8")
+        ));
+        assert!(decode_bundle_full(&bytes).is_err());
+    }
+
+    #[test]
+    fn quant_payload_flag_mismatch_is_corrupt() {
+        // Flip the quantization flag off: records say int8, header
+        // says f32 → the cross-check must refuse.
+        let mut bytes = encode_bundle_quantized(
+            1,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::Int8,
+        )
+        .unwrap();
+        bytes[24] &= !(FLAG_QUANT_INT8 as u8);
+        assert!(matches!(
+            decode_bundle_full(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("advertises")
+        ));
+    }
+
+    #[test]
+    fn oversized_quant_header_claims_are_capped() {
+        // Craft a kind-5 record whose header claims a huge n_sv×d: the
+        // alloc-bomb cap must reject it before any allocation.
+        let bytes = encode_bundle_quantized(
+            1,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::Int8,
+        )
+        .unwrap();
+        let frames = record_frames(&bytes).unwrap();
+        let svm = frames[0];
+        let mut bad = bytes.clone();
+        // Payload layout: role(1) + tag(1) + 3×f32(12) + n_sv(4) + d(4).
+        let n_sv_off = svm.payload_offset + 14;
+        bad[n_sv_off..n_sv_off + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        let start = svm.payload_offset;
+        let end = start + svm.payload_len as usize;
+        let crc = crc32(&bad[start..end]);
+        bad[start - 12..start - 8].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("element cap")
+        ));
+    }
+
+    #[test]
+    fn mixed_or_missing_quant_records_are_corrupt() {
+        // Hand-assemble a bundle holding two approx-role records and no
+        // svm — structurally framed correctly, semantically invalid.
+        let a = toy_approx();
+        let qa =
+            QuantApproxModel::quantize(&a, PayloadKind::Int8).unwrap();
+        let payload = quant_approx_payload(&qa);
+        let bytes = write_file(
+            1,
+            a.dim(),
+            0,
+            FLAG_QUANT_INT8,
+            vec![
+                (KIND_QUANT_INT8, payload.clone()),
+                (KIND_QUANT_INT8, payload),
+            ],
+        );
+        assert!(matches!(
+            decode_bundle_full(&bytes),
+            Err(Error::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn f16_overflow_rejected_at_quantized_encode() {
+        let mut a = toy_approx();
+        a.v[0] = 1.0e5; // beyond f16 range
+        let err = encode_bundle_quantized(
+            1,
+            &toy_svm(),
+            &a,
+            None,
+            PayloadKind::F16,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(m) if m.contains("f16")));
+        // …but int8 takes it fine.
+        assert!(encode_bundle_quantized(
+            1,
+            &toy_svm(),
+            &a,
+            None,
+            PayloadKind::Int8
+        )
+        .is_ok());
     }
 }

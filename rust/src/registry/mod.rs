@@ -5,13 +5,20 @@
 //! serving node can host thousands of approximated models and swap
 //! republished versions in place.
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`binfmt`] — the `.arbf` format: versioned little-endian records
 //!   for [`crate::svm::SvmModel`] and [`crate::approx::ApproxModel`]
 //!   with magic/CRC-32 framing, strict non-finite rejection and
 //!   truncation-safe decoding (every failure is a typed
-//!   [`crate::Error::Corrupt`]). Byte-exact layout: `docs/FORMATS.md`.
+//!   [`crate::Error::Corrupt`]). Byte-exact layout: `docs/FORMATS.md`,
+//!   pinned by the golden corpus under `rust/tests/data/`.
+//! * [`quant`] — f16/int8 payload codecs (kind-4/5 records) with
+//!   advertised per-element error bounds, and the native quantized
+//!   model storage ([`QuantSvmModel`] / [`QuantApproxModel`]) the
+//!   serving layer evaluates directly — ≥2× smaller resident models,
+//!   with dequantization drift folded into the Eq. 3.11 routing budget
+//!   (see [`crate::approx::bounds`]).
 //! * [`store`] — [`ModelStore`]: one `<id>.arbf` bundle (exact +
 //!   approx + optional [`TenantPolicy`]) per model id under a root
 //!   directory, published atomically (tmp file + rename) with a
@@ -31,6 +38,7 @@
 //!   the tenants it owns.
 
 pub mod binfmt;
+pub mod quant;
 pub mod store;
 
 /// Identifier a serving request uses to name a model. Cheap to clone;
@@ -38,6 +46,9 @@ pub mod store;
 pub type ModelId = std::sync::Arc<str>;
 
 pub use binfmt::{ArbfHeader, Bundle, ModelRecord};
+pub use quant::{
+    PayloadKind, QuantApproxModel, QuantInfo, QuantSvmModel, TenantModels,
+};
 pub use store::{
     ModelEntry, ModelStore, PublishOptions, StoreConfig, StoreEntryInfo,
 };

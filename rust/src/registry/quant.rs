@@ -1,0 +1,1444 @@
+//! Quantized payload codecs and storage for `.arbf` model records.
+//!
+//! Two precisions, both with *advertised per-element error bounds* so
+//! the serving layer can fold dequantization error into the paper's
+//! Eq. 3.11 routing budget (see [`crate::approx::bounds`]):
+//!
+//! * **f16** (IEEE 754 binary16, round-to-nearest-even): relative error
+//!   ≤ 2⁻¹¹ per element in the normal range plus a 2⁻²⁵ subnormal
+//!   floor; values beyond ±65504 are rejected at quantize time.
+//! * **int8** (symmetric per-row, stored f32 scales): each row is
+//!   quantized as `q = round(x / scale)` with `scale = max|row| / 127`,
+//!   so the per-element error is bounded by [`int8_eps`]` = 0.5001 ×
+//!   scale` (half a quantization step plus float dequant rounding).
+//!   All-zero rows encode `scale = 0` and dequantize to exact zeros.
+//!
+//! Quantized tensors stay in **native storage** at serving time
+//! ([`QuantSvmModel`] / [`QuantApproxModel`] inside
+//! [`TenantModels::Quantized`]) and are dequantized element-wise on the
+//! fly by the evaluators — this is what delivers the resident-memory
+//! reduction (int8 ≈ ¼ of f32 for SV payloads, ≈ ⅛ for the packed `M`
+//! upper triangle vs the mirrored f32 matrix) measured by
+//! `serving_bench`'s `BENCH_quant.json` leg. Scalars (`γ`, `b`, `c`,
+//! `‖x_M‖²`, per-row scales) always stay f32: they are O(1)/O(d) bytes
+//! and quantizing them would perturb the bound arithmetic itself.
+//!
+//! The byte-level record layouts (kind 4 = f16, kind 5 = int8) live in
+//! [`super::binfmt`]; this module owns the value-level transforms and
+//! the in-memory quantized model types.
+
+use crate::approx::bounds::{ExactQuantErr, QuantErrorBound};
+use crate::approx::ApproxModel;
+use crate::linalg::{vecops, Mat};
+use crate::svm::{Kernel, SvmModel};
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------------
+// payload kinds
+// ---------------------------------------------------------------------
+
+/// Precision of a bundle's model payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Full-precision records (kinds 1–2).
+    F32,
+    /// IEEE 754 binary16 records (kind 4).
+    F16,
+    /// Symmetric per-row int8 records with f32 scales (kind 5).
+    Int8,
+}
+
+impl PayloadKind {
+    /// Canonical name; [`std::fmt::Display`] delegates here.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PayloadKind::F32 => "f32",
+            PayloadKind::F16 => "f16",
+            PayloadKind::Int8 => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for PayloadKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for PayloadKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<PayloadKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "none" | "off" => Ok(PayloadKind::F32),
+            "f16" | "half" => Ok(PayloadKind::F16),
+            "int8" | "i8" => Ok(PayloadKind::Int8),
+            other => Err(Error::InvalidArg(format!(
+                "unknown payload kind '{other}' (f32|f16|int8)"
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f16 scalar codec
+// ---------------------------------------------------------------------
+
+/// Largest finite f16 magnitude; values beyond it are rejected on
+/// quantize (saturating would break the advertised error bound).
+pub const F16_MAX: f32 = 65504.0;
+/// Relative half-ulp bound for normal-range f16 values: 2⁻¹¹.
+pub const F16_REL_EPS: f32 = 4.8828125e-4;
+/// Absolute rounding floor in the f16 subnormal range: 2⁻²⁵.
+pub const F16_SUBNORMAL_EPS: f32 = 2.9802322e-8;
+
+/// f32 → f16 bits, IEEE round-to-nearest-even. The input must be
+/// finite with `|x| ≤` [`F16_MAX`] — [`quantize`](QuantVec) callers
+/// enforce that; out-of-range values here produce ±inf bits, which the
+/// decoder rejects as corrupt.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf/NaN (callers reject beforehand; keep the bits meaningful).
+        return sign | 0x7c00 | u16::from(mant != 0) << 9;
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // Normal f16: keep 10 mantissa bits, round to nearest even.
+        let kept = mant >> 13;
+        let rest = mant & 0x1fff;
+        let mut h = ((((e + 15) as u32) << 10) | kept) as u16;
+        if rest > 0x1000 || (rest == 0x1000 && (kept & 1) == 1) {
+            h += 1; // may carry into the exponent — correct rounding
+        }
+        return sign | h;
+    }
+    if e >= -25 {
+        // Subnormal f16: value = q × 2⁻²⁴.
+        let full = mant | 0x0080_0000; // implicit leading 1, 24 bits
+        let shift = (13 + (-14 - e)) as u32;
+        let mut q = (full >> shift) as u16;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rest > half || (rest == half && (q & 1) == 1) {
+            q += 1; // may round up to the smallest normal — correct
+        }
+        return sign | q;
+    }
+    sign // underflow to (signed) zero
+}
+
+/// f16 bits → f32 (exact: every f16 value is representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign_bit = (u32::from(h) & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = u32::from(h) & 0x3ff;
+    match exp {
+        0 => {
+            // ±0 and subnormals: value = mant × 2⁻²⁴ (exact in f32).
+            let unit = f32::from_bits(0x3380_0000); // 2⁻²⁴
+            let v = (mant as f32) * unit;
+            if sign_bit != 0 {
+                -v
+            } else {
+                v
+            }
+        }
+        0x1f => {
+            if mant == 0 {
+                f32::from_bits(sign_bit | 0x7f80_0000) // ±inf
+            } else {
+                f32::NAN
+            }
+        }
+        e => f32::from_bits(
+            sign_bit | ((u32::from(e) + 112) << 23) | (mant << 13),
+        ),
+    }
+}
+
+/// Per-element error bound of an f16 round trip, computed from the
+/// *dequantized* value `x̂`: the original satisfied
+/// `|x − x̂| ≤ |x̂|·2⁻¹¹ + 2⁻²⁵` (half-ulp in the normal range, the
+/// additive term covering the subnormal range).
+#[inline]
+pub fn f16_eps(dequantized: f32) -> f32 {
+    dequantized.abs() * F16_REL_EPS + F16_SUBNORMAL_EPS
+}
+
+// ---------------------------------------------------------------------
+// int8 row codec
+// ---------------------------------------------------------------------
+
+/// Per-element error bound of a symmetric int8 row with stored `scale`:
+/// half a quantization step, padded 0.02% for the float rounding of
+/// `scale × q` on dequantize and the clamp edge.
+#[inline]
+pub fn int8_eps(scale: f32) -> f32 {
+    0.5001 * scale
+}
+
+/// Quantize one row symmetrically: `scale = max|row|/127`,
+/// `q = round(x/scale)` clamped to ±127. All-zero rows get
+/// `scale = 0` (dequantizing to exact zeros); when `max/127` lands in
+/// the f32 subnormal range (where division is too imprecise to honor
+/// the bound — or underflows to zero outright) the row falls back to
+/// `scale = max` (q ∈ {−1, 0, 1}), which keeps the [`int8_eps`] bound
+/// intact at the cost of resolution. Non-finite inputs are rejected.
+pub fn int8_quantize_row(row: &[f32]) -> Result<(f32, Vec<i8>)> {
+    let mut max = 0.0f32;
+    for &x in row {
+        if !x.is_finite() {
+            return Err(Error::InvalidArg(format!(
+                "cannot quantize non-finite value {x}"
+            )));
+        }
+        max = max.max(x.abs());
+    }
+    if max == 0.0 {
+        return Ok((0.0, vec![0; row.len()]));
+    }
+    let mut scale = max / 127.0;
+    if scale < f32::MIN_POSITIVE {
+        scale = max; // subnormal scale: q collapses to {-1, 0, 1}
+    }
+    let q = row
+        .iter()
+        .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    Ok((scale, q))
+}
+
+#[inline]
+fn int8_dequant(scale: f32, q: i8) -> f32 {
+    scale * f32::from(q)
+}
+
+// ---------------------------------------------------------------------
+// quantized tensor storage
+// ---------------------------------------------------------------------
+
+/// A quantized dense vector (one int8 scale for the whole vector).
+#[derive(Clone, Debug)]
+pub enum QuantVec {
+    F16(Vec<u16>),
+    Int8 { scale: f32, q: Vec<i8> },
+}
+
+impl QuantVec {
+    pub fn quantize(v: &[f32], kind: PayloadKind) -> Result<QuantVec> {
+        match kind {
+            PayloadKind::F16 => {
+                check_f16_range(v)?;
+                Ok(QuantVec::F16(
+                    v.iter().map(|&x| f32_to_f16_bits(x)).collect(),
+                ))
+            }
+            PayloadKind::Int8 => {
+                let (scale, q) = int8_quantize_row(v)?;
+                Ok(QuantVec::Int8 { scale, q })
+            }
+            PayloadKind::F32 => Err(Error::InvalidArg(
+                "QuantVec::quantize: f32 is not a quantized kind".into(),
+            )),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            QuantVec::F16(h) => h.len(),
+            QuantVec::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn payload(&self) -> PayloadKind {
+        match self {
+            QuantVec::F16(_) => PayloadKind::F16,
+            QuantVec::Int8 { .. } => PayloadKind::Int8,
+        }
+    }
+
+    /// Dequantized element `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            QuantVec::F16(h) => f16_bits_to_f32(h[i]),
+            QuantVec::Int8 { scale, q } => int8_dequant(*scale, q[i]),
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+
+    /// Dequantized dot product with `z` (the native evaluation path).
+    #[inline]
+    pub fn dot(&self, z: &[f32]) -> f32 {
+        match self {
+            QuantVec::F16(h) => h
+                .iter()
+                .zip(z)
+                .map(|(&hi, &zi)| f16_bits_to_f32(hi) * zi)
+                .sum(),
+            QuantVec::Int8 { scale, q } => {
+                let s: f32 = q
+                    .iter()
+                    .zip(z)
+                    .map(|(&qi, &zi)| f32::from(qi) * zi)
+                    .sum();
+                *scale * s
+            }
+        }
+    }
+
+    /// Max per-element dequantization error bound.
+    pub fn eps(&self) -> f32 {
+        match self {
+            QuantVec::F16(h) => h
+                .iter()
+                .map(|&hi| f16_eps(f16_bits_to_f32(hi)))
+                .fold(0.0, f32::max),
+            QuantVec::Int8 { scale, .. } => int8_eps(*scale),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            QuantVec::F16(h) => 2 * h.len(),
+            QuantVec::Int8 { q, .. } => q.len() + 4,
+        }
+    }
+
+    fn check(&self, what: &str) -> std::result::Result<(), String> {
+        match self {
+            QuantVec::F16(h) => check_f16_finite(h, what),
+            QuantVec::Int8 { scale, .. } => check_scale(*scale, what),
+        }
+    }
+}
+
+/// A quantized dense rectangular matrix (SV rows), row-major, with
+/// per-row int8 scales.
+#[derive(Clone, Debug)]
+pub enum QuantMat {
+    F16 { rows: usize, cols: usize, h: Vec<u16> },
+    Int8 { rows: usize, cols: usize, scales: Vec<f32>, q: Vec<i8> },
+}
+
+impl QuantMat {
+    pub fn quantize(m: &Mat, kind: PayloadKind) -> Result<QuantMat> {
+        let (rows, cols) = (m.rows(), m.cols());
+        match kind {
+            PayloadKind::F16 => {
+                check_f16_range(m.as_slice())?;
+                Ok(QuantMat::F16 {
+                    rows,
+                    cols,
+                    h: m.as_slice()
+                        .iter()
+                        .map(|&x| f32_to_f16_bits(x))
+                        .collect(),
+                })
+            }
+            PayloadKind::Int8 => {
+                let mut scales = Vec::with_capacity(rows);
+                let mut q = Vec::with_capacity(rows * cols);
+                for r in 0..rows {
+                    let (s, rq) = int8_quantize_row(m.row(r))?;
+                    scales.push(s);
+                    q.extend_from_slice(&rq);
+                }
+                Ok(QuantMat::Int8 { rows, cols, scales, q })
+            }
+            PayloadKind::F32 => Err(Error::InvalidArg(
+                "QuantMat::quantize: f32 is not a quantized kind".into(),
+            )),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            QuantMat::F16 { rows, .. } | QuantMat::Int8 { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            QuantMat::F16 { cols, .. } | QuantMat::Int8 { cols, .. } => *cols,
+        }
+    }
+
+    pub fn payload(&self) -> PayloadKind {
+        match self {
+            QuantMat::F16 { .. } => PayloadKind::F16,
+            QuantMat::Int8 { .. } => PayloadKind::Int8,
+        }
+    }
+
+    /// Dequantized element (r, c).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        match self {
+            QuantMat::F16 { cols, h, .. } => {
+                f16_bits_to_f32(h[r * cols + c])
+            }
+            QuantMat::Int8 { cols, scales, q, .. } => {
+                int8_dequant(scales[r], q[r * cols + c])
+            }
+        }
+    }
+
+    /// Dequantized dot of row `r` with `z`.
+    #[inline]
+    pub fn row_dot(&self, r: usize, z: &[f32]) -> f32 {
+        match self {
+            QuantMat::F16 { cols, h, .. } => {
+                let row = &h[r * cols..(r + 1) * cols];
+                row.iter()
+                    .zip(z)
+                    .map(|(&hi, &zi)| f16_bits_to_f32(hi) * zi)
+                    .sum()
+            }
+            QuantMat::Int8 { cols, scales, q, .. } => {
+                let row = &q[r * cols..(r + 1) * cols];
+                let s: f32 = row
+                    .iter()
+                    .zip(z)
+                    .map(|(&qi, &zi)| f32::from(qi) * zi)
+                    .sum();
+                scales[r] * s
+            }
+        }
+    }
+
+    /// Squared L2 norm of dequantized row `r`.
+    pub fn row_norm_sq(&self, r: usize) -> f32 {
+        match self {
+            QuantMat::F16 { cols, h, .. } => h[r * cols..(r + 1) * cols]
+                .iter()
+                .map(|&hi| {
+                    let x = f16_bits_to_f32(hi);
+                    x * x
+                })
+                .sum(),
+            QuantMat::Int8 { cols, scales, q, .. } => {
+                let s: f32 = q[r * cols..(r + 1) * cols]
+                    .iter()
+                    .map(|&qi| f32::from(qi) * f32::from(qi))
+                    .sum();
+                scales[r] * scales[r] * s
+            }
+        }
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows(), self.cols());
+        for r in 0..self.rows() {
+            for c in 0..self.cols() {
+                *out.at_mut(r, c) = self.get(r, c);
+            }
+        }
+        out
+    }
+
+    /// Max per-element dequantization error bound over every row.
+    pub fn eps(&self) -> f32 {
+        match self {
+            QuantMat::F16 { h, .. } => h
+                .iter()
+                .map(|&hi| f16_eps(f16_bits_to_f32(hi)))
+                .fold(0.0, f32::max),
+            QuantMat::Int8 { scales, .. } => scales
+                .iter()
+                .map(|&s| int8_eps(s))
+                .fold(0.0, f32::max),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            QuantMat::F16 { h, .. } => 2 * h.len(),
+            QuantMat::Int8 { scales, q, .. } => q.len() + 4 * scales.len(),
+        }
+    }
+
+    fn check(&self, what: &str) -> std::result::Result<(), String> {
+        let want = self.rows() * self.cols();
+        match self {
+            QuantMat::F16 { h, .. } => {
+                if h.len() != want {
+                    return Err(format!("{what}: storage length mismatch"));
+                }
+                check_f16_finite(h, what)
+            }
+            QuantMat::Int8 { scales, q, .. } => {
+                if q.len() != want || scales.len() != self.rows() {
+                    return Err(format!("{what}: storage length mismatch"));
+                }
+                for &s in scales {
+                    check_scale(s, what)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A quantized symmetric matrix stored as the packed upper triangle,
+/// row-wise (packed row `r` holds `M[r][r..d]`, length `d − r`), with
+/// per-packed-row int8 scales. This is both the wire layout (kind-4/5
+/// approx records) and the resident layout — `d(d+1)/2` elements vs
+/// the `d²` of the mirrored f32 [`Mat`].
+#[derive(Clone, Debug)]
+pub struct QuantSymMat {
+    pub d: usize,
+    pub data: QuantSymData,
+}
+
+#[derive(Clone, Debug)]
+pub enum QuantSymData {
+    F16(Vec<u16>),
+    Int8 { scales: Vec<f32>, q: Vec<i8> },
+}
+
+impl QuantSymMat {
+    /// Packed length for dimension `d`.
+    pub fn packed_len(d: usize) -> usize {
+        d * (d + 1) / 2
+    }
+
+    /// Offset of packed row `r` (rows have lengths d, d−1, …, 1).
+    #[inline]
+    fn row_offset(&self, r: usize) -> usize {
+        // Σ_{k<r} (d − k) = r·(2d − r + 1)/2, underflow-safe at r = 0.
+        r * (2 * self.d - r + 1) / 2
+    }
+
+    /// Quantize the upper triangle of a symmetric `d × d` matrix.
+    pub fn quantize(m: &Mat, kind: PayloadKind) -> Result<QuantSymMat> {
+        let d = m.rows();
+        if m.cols() != d {
+            return Err(Error::Shape(format!(
+                "QuantSymMat: {}×{} is not square",
+                m.rows(),
+                m.cols()
+            )));
+        }
+        let mut packed = Vec::with_capacity(Self::packed_len(d));
+        for r in 0..d {
+            for c in r..d {
+                packed.push(m.at(r, c));
+            }
+        }
+        let data = match kind {
+            PayloadKind::F16 => {
+                check_f16_range(&packed)?;
+                QuantSymData::F16(
+                    packed.iter().map(|&x| f32_to_f16_bits(x)).collect(),
+                )
+            }
+            PayloadKind::Int8 => {
+                let mut scales = Vec::with_capacity(d);
+                let mut q = Vec::with_capacity(packed.len());
+                let mut off = 0;
+                for r in 0..d {
+                    let len = d - r;
+                    let (s, rq) =
+                        int8_quantize_row(&packed[off..off + len])?;
+                    scales.push(s);
+                    q.extend_from_slice(&rq);
+                    off += len;
+                }
+                QuantSymData::Int8 { scales, q }
+            }
+            PayloadKind::F32 => {
+                return Err(Error::InvalidArg(
+                    "QuantSymMat::quantize: f32 is not a quantized kind"
+                        .into(),
+                ))
+            }
+        };
+        Ok(QuantSymMat { d, data })
+    }
+
+    pub fn payload(&self) -> PayloadKind {
+        match &self.data {
+            QuantSymData::F16(_) => PayloadKind::F16,
+            QuantSymData::Int8 { .. } => PayloadKind::Int8,
+        }
+    }
+
+    /// Dequantized element (r, c) of the mirrored matrix. Off-diagonal
+    /// elements take the scale of the packed row they are stored in
+    /// (`min(r, c)`).
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        let (r, c) = if r <= c { (r, c) } else { (c, r) };
+        let i = self.row_offset(r) + (c - r);
+        match &self.data {
+            QuantSymData::F16(h) => f16_bits_to_f32(h[i]),
+            QuantSymData::Int8 { scales, q } => {
+                int8_dequant(scales[r], q[i])
+            }
+        }
+    }
+
+    /// Dequantized quadratic form `zᵀMz` over the packed triangle:
+    /// `Σ_r z_r · (M_rr·z_r + 2·Σ_{c>r} M_rc·z_c)`.
+    pub fn quadform(&self, z: &[f32]) -> f32 {
+        debug_assert_eq!(z.len(), self.d);
+        let mut acc = 0.0f32;
+        match &self.data {
+            QuantSymData::F16(h) => {
+                let mut off = 0;
+                for r in 0..self.d {
+                    let len = self.d - r;
+                    let row = &h[off..off + len];
+                    let diag = f16_bits_to_f32(row[0]) * z[r];
+                    let tail: f32 = row[1..]
+                        .iter()
+                        .zip(&z[r + 1..])
+                        .map(|(&hi, &zc)| f16_bits_to_f32(hi) * zc)
+                        .sum();
+                    acc += z[r] * (diag + 2.0 * tail);
+                    off += len;
+                }
+            }
+            QuantSymData::Int8 { scales, q } => {
+                let mut off = 0;
+                for r in 0..self.d {
+                    let len = self.d - r;
+                    let row = &q[off..off + len];
+                    let diag = f32::from(row[0]) * z[r];
+                    let tail: f32 = row[1..]
+                        .iter()
+                        .zip(&z[r + 1..])
+                        .map(|(&qi, &zc)| f32::from(qi) * zc)
+                        .sum();
+                    acc += scales[r] * z[r] * (diag + 2.0 * tail);
+                    off += len;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Mirror back into a dense f32 [`Mat`].
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.d, self.d);
+        for r in 0..self.d {
+            for c in r..self.d {
+                let v = self.get(r, c);
+                *m.at_mut(r, c) = v;
+                *m.at_mut(c, r) = v;
+            }
+        }
+        m
+    }
+
+    /// Max per-element dequantization error bound over the triangle.
+    pub fn eps(&self) -> f32 {
+        match &self.data {
+            QuantSymData::F16(h) => h
+                .iter()
+                .map(|&hi| f16_eps(f16_bits_to_f32(hi)))
+                .fold(0.0, f32::max),
+            QuantSymData::Int8 { scales, .. } => scales
+                .iter()
+                .map(|&s| int8_eps(s))
+                .fold(0.0, f32::max),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        match &self.data {
+            QuantSymData::F16(h) => 2 * h.len(),
+            QuantSymData::Int8 { scales, q } => q.len() + 4 * scales.len(),
+        }
+    }
+
+    fn check(&self, what: &str) -> std::result::Result<(), String> {
+        let want = Self::packed_len(self.d);
+        match &self.data {
+            QuantSymData::F16(h) => {
+                if h.len() != want {
+                    return Err(format!("{what}: storage length mismatch"));
+                }
+                check_f16_finite(h, what)
+            }
+            QuantSymData::Int8 { scales, q } => {
+                if q.len() != want || scales.len() != self.d {
+                    return Err(format!("{what}: storage length mismatch"));
+                }
+                for &s in scales {
+                    check_scale(s, what)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+fn check_f16_range(xs: &[f32]) -> Result<()> {
+    for &x in xs {
+        if !x.is_finite() {
+            return Err(Error::InvalidArg(format!(
+                "cannot quantize non-finite value {x}"
+            )));
+        }
+        if x.abs() > F16_MAX {
+            return Err(Error::InvalidArg(format!(
+                "value {x} exceeds the f16 range (±{F16_MAX}); \
+                 quantize as int8 or keep f32"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn check_f16_finite(h: &[u16], what: &str) -> std::result::Result<(), String> {
+    match h.iter().position(|&hi| (hi >> 10) & 0x1f == 0x1f) {
+        Some(i) => Err(format!("{what}: non-finite f16 at index {i}")),
+        None => Ok(()),
+    }
+}
+
+fn check_scale(s: f32, what: &str) -> std::result::Result<(), String> {
+    if !s.is_finite() || s < 0.0 {
+        Err(format!("{what}: invalid int8 scale {s}"))
+    } else {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// quantized models
+// ---------------------------------------------------------------------
+
+/// An exact SVM model whose coefficient vector and SV matrix stay in
+/// quantized storage (kind-4/5 role-1 records).
+#[derive(Clone, Debug)]
+pub struct QuantSvmModel {
+    pub kernel: Kernel,
+    pub b: f32,
+    pub coef: QuantVec,
+    pub sv: QuantMat,
+}
+
+impl QuantSvmModel {
+    /// Quantize an f32 model (publish path).
+    pub fn quantize(m: &SvmModel, kind: PayloadKind) -> Result<QuantSvmModel> {
+        m.check_finite().map_err(Error::InvalidArg)?;
+        Ok(QuantSvmModel {
+            kernel: m.kernel,
+            b: m.b,
+            coef: QuantVec::quantize(&m.coef, kind)?,
+            sv: QuantMat::quantize(&m.sv, kind)?,
+        })
+    }
+
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.sv.cols()
+    }
+
+    pub fn payload(&self) -> PayloadKind {
+        self.sv.payload()
+    }
+
+    /// Squared norms of the dequantized SV rows (cached per generation
+    /// by the serving executor, exactly like the f32 path).
+    pub fn sv_row_norms_sq(&self) -> Vec<f32> {
+        (0..self.n_sv()).map(|r| self.sv.row_norm_sq(r)).collect()
+    }
+
+    /// Exact decision value on the dequantized weights (reference path;
+    /// the batched evaluator in [`crate::predictor`] uses the same
+    /// per-row arithmetic).
+    pub fn decision_one(&self, z: &[f32]) -> f32 {
+        let zn = vecops::norm_sq(z);
+        let mut acc = self.b;
+        for i in 0..self.n_sv() {
+            let cross = self.sv.row_dot(i, z);
+            let xn = self.sv.row_norm_sq(i);
+            acc += self.coef.get(i) * self.kernel.eval_precomp(xn, zn, cross);
+        }
+        acc
+    }
+
+    /// Materialize the dequantized f32 model (PJRT preparation, tests).
+    pub fn dequantize(&self) -> SvmModel {
+        SvmModel {
+            kernel: self.kernel,
+            sv: self.sv.dequantize(),
+            coef: self.coef.dequantize(),
+            b: self.b,
+        }
+    }
+
+    /// Dequantization error metadata for
+    /// [`crate::approx::bounds::ExactQuantErr::decision_error`]. The
+    /// decision bound is derived from the RBF kernel's `K ∈ (0, 1]`
+    /// range and global Lipschitz constant, so non-RBF kernels
+    /// (linear, poly2 — both unbounded in `x`) report `gamma = NaN`
+    /// and the bound comes back as ∞ ("unavailable").
+    pub fn quant_err(&self) -> ExactQuantErr {
+        let coef_abs_sum =
+            (0..self.n_sv()).map(|i| self.coef.get(i).abs()).sum();
+        let gamma = match self.kernel {
+            Kernel::Rbf { gamma } => gamma,
+            Kernel::Linear | Kernel::Poly2 { .. } => f32::NAN,
+        };
+        ExactQuantErr {
+            n_sv: self.n_sv(),
+            dim: self.dim(),
+            gamma,
+            coef_abs_sum,
+            eps_coef: self.coef.eps(),
+            eps_sv: self.sv.eps(),
+        }
+    }
+
+    /// Approximate resident footprint in bytes (storage only).
+    pub fn resident_bytes(&self) -> usize {
+        self.coef.resident_bytes() + self.sv.resident_bytes() + 16
+    }
+
+    /// Structural + value validation (shared by the binary decoder).
+    pub fn check(&self) -> std::result::Result<(), String> {
+        if self.sv.rows() != self.coef.len() {
+            return Err(format!(
+                "{} SVs vs {} quantized coefficients",
+                self.sv.rows(),
+                self.coef.len()
+            ));
+        }
+        if !self.b.is_finite() {
+            return Err(format!("non-finite b: {}", self.b));
+        }
+        let (gamma, beta) = match self.kernel {
+            Kernel::Linear => (0.0, 0.0),
+            Kernel::Rbf { gamma } => (gamma, 0.0),
+            Kernel::Poly2 { gamma, beta } => (gamma, beta),
+        };
+        if !gamma.is_finite() || !beta.is_finite() {
+            return Err("non-finite kernel parameter".into());
+        }
+        self.coef.check("coef")?;
+        self.sv.check("sv")
+    }
+}
+
+/// An approximated (Eq. 3.8) model whose `v` and `M` stay in quantized
+/// storage (kind-4/5 role-2 records). Scalars are f32.
+#[derive(Clone, Debug)]
+pub struct QuantApproxModel {
+    pub gamma: f32,
+    pub b: f32,
+    pub c: f32,
+    pub max_sv_norm_sq: f32,
+    pub v: QuantVec,
+    pub m: QuantSymMat,
+}
+
+impl QuantApproxModel {
+    /// Quantize an f32 approx model (publish path).
+    pub fn quantize(
+        am: &ApproxModel,
+        kind: PayloadKind,
+    ) -> Result<QuantApproxModel> {
+        am.check_finite().map_err(Error::InvalidArg)?;
+        Ok(QuantApproxModel {
+            gamma: am.gamma,
+            b: am.b,
+            c: am.c,
+            max_sv_norm_sq: am.max_sv_norm_sq,
+            v: QuantVec::quantize(&am.v, kind)?,
+            m: QuantSymMat::quantize(&am.m, kind)?,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn payload(&self) -> PayloadKind {
+        self.v.payload()
+    }
+
+    /// The raw Eq. 3.11 budget of the dequantized model (quantization
+    /// drift is folded in by
+    /// [`super::ModelEntry::znorm_sq_budget_with`]).
+    pub fn znorm_sq_budget(&self) -> f32 {
+        1.0 / (16.0 * self.gamma * self.gamma * self.max_sv_norm_sq)
+    }
+
+    /// Decision value + ‖z‖² on the native quantized storage.
+    pub fn decision_one(&self, z: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(z.len(), self.dim());
+        let zn = vecops::norm_sq(z);
+        let lin = self.v.dot(z);
+        let quad = self.m.quadform(z);
+        ((-self.gamma * zn).exp() * (self.c + lin + quad) + self.b, zn)
+    }
+
+    /// Materialize the dequantized f32 model.
+    pub fn dequantize(&self) -> ApproxModel {
+        ApproxModel {
+            gamma: self.gamma,
+            b: self.b,
+            c: self.c,
+            v: self.v.dequantize(),
+            m: self.m.dequantize(),
+            max_sv_norm_sq: self.max_sv_norm_sq,
+        }
+    }
+
+    /// Dequantization error bound metadata for the serving router.
+    pub fn quant_err(&self) -> QuantErrorBound {
+        QuantErrorBound {
+            dim: self.dim(),
+            eps_v: self.v.eps(),
+            eps_m: self.m.eps(),
+        }
+    }
+
+    /// Approximate resident footprint in bytes (storage only).
+    pub fn resident_bytes(&self) -> usize {
+        self.v.resident_bytes() + self.m.resident_bytes() + 20
+    }
+
+    /// Structural + value validation (shared by the binary decoder).
+    pub fn check(&self) -> std::result::Result<(), String> {
+        if self.m.d != self.v.len() {
+            return Err(format!(
+                "quantized M is {0}×{0} but v has dim {1}",
+                self.m.d,
+                self.v.len()
+            ));
+        }
+        for (name, val) in [
+            ("gamma", self.gamma),
+            ("b", self.b),
+            ("c", self.c),
+            ("max_sv_norm_sq", self.max_sv_norm_sq),
+        ] {
+            if !val.is_finite() {
+                return Err(format!("non-finite {name}: {val}"));
+            }
+        }
+        if self.max_sv_norm_sq < 0.0 {
+            return Err(format!(
+                "negative max_sv_norm_sq: {}",
+                self.max_sv_norm_sq
+            ));
+        }
+        self.v.check("v")?;
+        self.m.check("M")
+    }
+}
+
+// ---------------------------------------------------------------------
+// the per-tenant model pair, in either precision
+// ---------------------------------------------------------------------
+
+/// The (exact, approx) pair a bundle decodes to — full-precision f32 or
+/// native quantized storage, depending on the payload kind it was
+/// published with.
+#[derive(Clone, Debug)]
+pub enum TenantModels {
+    F32 { exact: SvmModel, approx: ApproxModel },
+    Quantized { exact: QuantSvmModel, approx: QuantApproxModel },
+}
+
+impl TenantModels {
+    pub fn dim(&self) -> usize {
+        match self {
+            TenantModels::F32 { approx, .. } => approx.dim(),
+            TenantModels::Quantized { approx, .. } => approx.dim(),
+        }
+    }
+
+    pub fn n_sv(&self) -> usize {
+        match self {
+            TenantModels::F32 { exact, .. } => exact.n_sv(),
+            TenantModels::Quantized { exact, .. } => exact.n_sv(),
+        }
+    }
+
+    pub fn payload(&self) -> PayloadKind {
+        match self {
+            TenantModels::F32 { .. } => PayloadKind::F32,
+            TenantModels::Quantized { exact, .. } => exact.payload(),
+        }
+    }
+
+    /// Raw Eq. 3.11 budget of the (dequantized) approx model.
+    pub fn approx_znorm_sq_budget(&self) -> f32 {
+        match self {
+            TenantModels::F32 { approx, .. } => approx.znorm_sq_budget(),
+            TenantModels::Quantized { approx, .. } => {
+                approx.znorm_sq_budget()
+            }
+        }
+    }
+
+    /// Approx-side dequantization error bound (`None` for f32).
+    pub fn quant_error(&self) -> Option<QuantErrorBound> {
+        match self {
+            TenantModels::F32 { .. } => None,
+            TenantModels::Quantized { approx, .. } => {
+                Some(approx.quant_err())
+            }
+        }
+    }
+
+    /// Exact-side dequantization error bound (`None` for f32).
+    pub fn exact_quant_error(&self) -> Option<ExactQuantErr> {
+        match self {
+            TenantModels::F32 { .. } => None,
+            TenantModels::Quantized { exact, .. } => Some(exact.quant_err()),
+        }
+    }
+
+    /// SV row norms of the (dequantized) exact model.
+    pub fn sv_row_norms_sq(&self) -> Vec<f32> {
+        match self {
+            TenantModels::F32 { exact, .. } => exact.sv.row_norms_sq(),
+            TenantModels::Quantized { exact, .. } => exact.sv_row_norms_sq(),
+        }
+    }
+
+    /// Reference approx decision on whatever storage is served — the
+    /// same per-row arithmetic the executor's batched evaluator uses,
+    /// so tests can compare served decisions against this regardless of
+    /// payload kind.
+    pub fn approx_decision_one(&self, z: &[f32]) -> f32 {
+        match self {
+            TenantModels::F32 { approx, .. } => approx.decision_one(z).0,
+            TenantModels::Quantized { approx, .. } => {
+                approx.decision_one(z).0
+            }
+        }
+    }
+
+    /// Reference exact decision on whatever storage is served.
+    pub fn exact_decision_one(&self, z: &[f32]) -> f32 {
+        match self {
+            TenantModels::F32 { exact, .. } => exact.decision_one(z),
+            TenantModels::Quantized { exact, .. } => exact.decision_one(z),
+        }
+    }
+
+    /// Dequantized copies (PJRT preparation, tests; clones for f32).
+    pub fn exact_dequant(&self) -> SvmModel {
+        match self {
+            TenantModels::F32 { exact, .. } => exact.clone(),
+            TenantModels::Quantized { exact, .. } => exact.dequantize(),
+        }
+    }
+
+    pub fn approx_dequant(&self) -> ApproxModel {
+        match self {
+            TenantModels::F32 { approx, .. } => approx.clone(),
+            TenantModels::Quantized { approx, .. } => approx.dequantize(),
+        }
+    }
+
+    /// Approximate resident footprint of both models, in bytes —
+    /// the quantity `BENCH_quant.json` reports per payload kind. The
+    /// f32 accounting mirrors what is actually resident: a dense
+    /// `n_sv×d` SV matrix and the *mirrored* `d×d` M.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            TenantModels::F32 { exact, approx } => {
+                let e = 4 * (exact.n_sv() * exact.dim() + exact.n_sv()) + 16;
+                let a = 4 * (approx.dim() * approx.dim() + approx.dim()) + 20;
+                e + a
+            }
+            TenantModels::Quantized { exact, approx } => {
+                exact.resident_bytes() + approx.resident_bytes()
+            }
+        }
+    }
+}
+
+/// Summary of a quantized bundle's error metadata (carried by
+/// [`super::ModelEntry`]-level accessors and the CLI `inspect` output).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantInfo {
+    pub payload: PayloadKind,
+    pub approx_err: QuantErrorBound,
+    pub exact_err: ExactQuantErr,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+
+    // -- f16 scalar codec ---------------------------------------------
+
+    #[test]
+    fn f16_known_values() {
+        // (f32, f16 bits) pairs exactly representable in binary16.
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (0.25, 0x3400),
+            (0.75, 0x3a00),
+            (65504.0, 0x7bff),
+            (6.1035156e-5, 0x0400), // smallest normal
+            (5.9604645e-8, 0x0001), // smallest subnormal
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "{x}");
+            assert_eq!(f16_bits_to_f32(bits), x, "{bits:#06x}");
+        }
+        // An inexact value rounds to its nearest f16: 0.1 → 0x2e66,
+        // which decodes to exactly 0.099975586.
+        assert_eq!(f32_to_f16_bits(0.1), 0x2e66);
+        assert_eq!(f16_bits_to_f32(0x2e66), 0.099975586);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties() {
+        // 1 + 2⁻¹¹ is exactly halfway between 1.0 and the next f16
+        // (1 + 2⁻¹⁰): ties to even → 1.0 (mantissa 0 is even).
+        let tie = 1.0 + 4.8828125e-4;
+        assert_eq!(f32_to_f16_bits(tie), 0x3c00);
+        // 1 + 3·2⁻¹¹ is halfway between 1+2⁻¹⁰ and 1+2⁻⁹: ties to
+        // even → 1+2⁻⁹ (mantissa 2).
+        let tie = 1.0 + 3.0 * 4.8828125e-4;
+        assert_eq!(f32_to_f16_bits(tie), 0x3c02);
+    }
+
+    #[test]
+    fn property_f16_roundtrip_within_advertised_bound() {
+        prop_cases!("f16 roundtrip bound", 64, |rng| {
+            for _ in 0..64 {
+                // Magnitudes spanning subnormal to near-max range.
+                let mag = 10f64.powf(rng.range(-9.0, 4.5));
+                let x = (rng.normal() * mag) as f32;
+                if x.abs() > F16_MAX {
+                    continue;
+                }
+                let x_hat = f16_bits_to_f32(f32_to_f16_bits(x));
+                assert!(x_hat.is_finite(), "{x} -> non-finite");
+                assert!(
+                    (x - x_hat).abs() <= f16_eps(x_hat),
+                    "{x}: dequant {x_hat}, err {} > bound {}",
+                    (x - x_hat).abs(),
+                    f16_eps(x_hat)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn f16_out_of_range_rejected_by_quantize() {
+        let err = QuantVec::quantize(&[1.0, 70000.0], PayloadKind::F16)
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(m) if m.contains("f16")));
+        assert!(
+            QuantVec::quantize(&[f32::NAN], PayloadKind::F16).is_err()
+        );
+    }
+
+    // -- int8 row codec -----------------------------------------------
+
+    #[test]
+    fn int8_exact_multiples_roundtrip_exactly() {
+        // max = 127·2⁻⁷ makes the scale exactly 2⁻⁷; multiples of the
+        // scale quantize with zero error.
+        let row = [0.9921875f32, -0.5, 0.25, 0.0078125, 0.0];
+        let (scale, q) = int8_quantize_row(&row).unwrap();
+        assert_eq!(scale, 0.0078125);
+        assert_eq!(q, vec![127, -64, 32, 1, 0]);
+        for (i, &x) in row.iter().enumerate() {
+            assert_eq!(int8_dequant(scale, q[i]), x);
+        }
+    }
+
+    #[test]
+    fn property_int8_roundtrip_within_advertised_bound() {
+        prop_cases!("int8 roundtrip bound", 64, |rng| {
+            let n = 1 + rng.below(64);
+            // Down to deep-subnormal magnitudes: the scale fallback
+            // must uphold the bound across the whole f32 range.
+            let mag = 10f64.powf(rng.range(-42.0, 6.0));
+            let row: Vec<f32> =
+                (0..n).map(|_| (rng.normal() * mag) as f32).collect();
+            let (scale, q) = int8_quantize_row(&row).unwrap();
+            let bound = int8_eps(scale);
+            for (i, &x) in row.iter().enumerate() {
+                let x_hat = int8_dequant(scale, q[i]);
+                assert!(x_hat.is_finite());
+                assert!(
+                    (x - x_hat).abs() <= bound,
+                    "row[{i}]={x}: dequant {x_hat}, scale {scale}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn int8_edge_cases_never_panic_or_go_nonfinite() {
+        // All-zero row.
+        let (s, q) = int8_quantize_row(&[0.0; 7]).unwrap();
+        assert_eq!(s, 0.0);
+        assert!(q.iter().all(|&x| x == 0));
+        assert_eq!(int8_eps(s), 0.0);
+        // Single-element rows, including negatives.
+        for x in [1.0f32, -3.5, 1e-30, 1e30] {
+            let (s, q) = int8_quantize_row(&[x]).unwrap();
+            assert_eq!(q[0].unsigned_abs(), 127, "{x}");
+            assert!((x - int8_dequant(s, q[0])).abs() <= int8_eps(s));
+        }
+        // Subnormal max: the scale fallback keeps everything finite.
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        let (s, q) = int8_quantize_row(&[tiny, -tiny, 0.0]).unwrap();
+        assert!(s.is_finite() && s > 0.0);
+        for &qi in &q {
+            assert!(int8_dequant(s, qi).is_finite());
+        }
+        // Rows whose max/127 would be a *nonzero subnormal* (imprecise
+        // division) must take the scale = max fallback too, or the
+        // advertised bound breaks: e.g. max = 178 ULPs of f32.
+        for bits in [178u32, 300, 2_000, 100_000] {
+            let big = f32::from_bits(bits);
+            let small = f32::from_bits(bits / 3);
+            let (s, q) = int8_quantize_row(&[big, -small]).unwrap();
+            let bound = int8_eps(s);
+            for (x, qi) in [(big, q[0]), (-small, q[1])] {
+                assert!(
+                    (x - int8_dequant(s, qi)).abs() <= bound,
+                    "bits={bits}: {x} vs {}",
+                    int8_dequant(s, qi)
+                );
+            }
+        }
+        // Extreme dynamic range: small values collapse to 0 but stay
+        // within the advertised bound.
+        let row = [1e30f32, 1e-30];
+        let (s, q) = int8_quantize_row(&row).unwrap();
+        assert_eq!(q[1], 0);
+        assert!((row[1] - int8_dequant(s, q[1])).abs() <= int8_eps(s));
+        // Non-finite rejected.
+        assert!(int8_quantize_row(&[f32::INFINITY]).is_err());
+        assert!(int8_quantize_row(&[f32::NAN, 1.0]).is_err());
+    }
+
+    // -- tensor storage -----------------------------------------------
+
+    fn toy_sym() -> Mat {
+        Mat::from_vec(
+            3,
+            3,
+            vec![0.5, 0.25, -1.0, 0.25, -0.75, 2.0, -1.0, 2.0, 0.125],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn symmat_packed_indexing_matches_dense() {
+        let m = toy_sym();
+        for kind in [PayloadKind::F16, PayloadKind::Int8] {
+            let qm = QuantSymMat::quantize(&m, kind).unwrap();
+            let dense = qm.dequantize();
+            for r in 0..3 {
+                for c in 0..3 {
+                    assert_eq!(qm.get(r, c), dense.at(r, c), "{kind}");
+                    assert_eq!(dense.at(r, c), dense.at(c, r));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_quadform_matches_dequantized_dense() {
+        prop_cases!("quant quadform", 32, |rng| {
+            let d = 1 + rng.below(12);
+            let mut m = Mat::zeros(d, d);
+            for r in 0..d {
+                for c in r..d {
+                    let val = rng.normal() as f32;
+                    *m.at_mut(r, c) = val;
+                    *m.at_mut(c, r) = val;
+                }
+            }
+            let z: Vec<f32> =
+                (0..d).map(|_| rng.normal() as f32).collect();
+            for kind in [PayloadKind::F16, PayloadKind::Int8] {
+                let qm = QuantSymMat::quantize(&m, kind).unwrap();
+                let want = crate::linalg::quadform::quadform_symmetric(
+                    &qm.dequantize(),
+                    &z,
+                );
+                let got = qm.quadform(&z);
+                assert!(
+                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "{kind}: {got} vs {want}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quantized_models_roundtrip_within_decision_bound() {
+        prop_cases!("quant model decisions", 16, |rng| {
+            let d = 2 + rng.below(10);
+            let mut m = Mat::zeros(d, d);
+            for r in 0..d {
+                for c in r..d {
+                    let val = (rng.normal() * 0.3) as f32;
+                    *m.at_mut(r, c) = val;
+                    *m.at_mut(c, r) = val;
+                }
+            }
+            let am = ApproxModel {
+                gamma: rng.range(0.01, 0.5) as f32,
+                b: rng.normal() as f32,
+                c: rng.normal() as f32,
+                v: (0..d).map(|_| rng.normal() as f32).collect(),
+                m,
+                max_sv_norm_sq: rng.range(0.5, 4.0) as f32,
+            };
+            let z: Vec<f32> =
+                (0..d).map(|_| (rng.normal() * 0.5) as f32).collect();
+            let zn = vecops::norm_sq(&z);
+            let (want, _) = am.decision_one(&z);
+            for kind in [PayloadKind::F16, PayloadKind::Int8] {
+                let qa = QuantApproxModel::quantize(&am, kind).unwrap();
+                qa.check().unwrap();
+                let (got, got_zn) = qa.decision_one(&z);
+                assert!((got_zn - zn).abs() < 1e-5);
+                let bound = qa.quant_err().decision_error(zn);
+                assert!(
+                    (got - want).abs() <= bound,
+                    "{kind}: |{got} - {want}| > bound {bound}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quantized_svm_decisions_within_exact_bound() {
+        prop_cases!("quant svm decisions", 16, |rng| {
+            let d = 2 + rng.below(8);
+            let n_sv = 1 + rng.below(12);
+            let mut sv = Mat::zeros(n_sv, d);
+            for r in 0..n_sv {
+                for c in 0..d {
+                    if rng.chance(0.7) {
+                        *sv.at_mut(r, c) = (rng.normal() * 0.4) as f32;
+                    }
+                }
+            }
+            let coef: Vec<f32> =
+                (0..n_sv).map(|_| rng.normal() as f32).collect();
+            let gamma = rng.range(0.05, 1.0) as f32;
+            let m = SvmModel::new(
+                Kernel::Rbf { gamma },
+                sv,
+                coef,
+                rng.normal() as f32,
+            )
+            .unwrap();
+            let z: Vec<f32> =
+                (0..d).map(|_| (rng.normal() * 0.5) as f32).collect();
+            let want = m.decision_one(&z);
+            for kind in [PayloadKind::F16, PayloadKind::Int8] {
+                let qm = QuantSvmModel::quantize(&m, kind).unwrap();
+                qm.check().unwrap();
+                let got = qm.decision_one(&z);
+                let bound = qm.quant_err().decision_error();
+                assert!(
+                    (got - want).abs() <= bound,
+                    "{kind}: |{got} - {want}| > bound {bound}"
+                );
+                // Dequantized twin agrees with the native evaluation
+                // far inside the bound.
+                let deq = qm.dequantize().decision_one(&z);
+                assert!((got - deq).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn resident_bytes_shrink_at_least_2x() {
+        let d = 24;
+        let n_sv = 40;
+        let mut sv = Mat::zeros(n_sv, d);
+        let mut m = Mat::zeros(d, d);
+        for r in 0..n_sv {
+            for c in 0..d {
+                *sv.at_mut(r, c) = ((r * 7 + c) % 13) as f32 * 0.05 - 0.25;
+            }
+        }
+        for r in 0..d {
+            for c in r..d {
+                let val = ((r + 2 * c) % 9) as f32 * 0.1 - 0.4;
+                *m.at_mut(r, c) = val;
+                *m.at_mut(c, r) = val;
+            }
+        }
+        let exact = SvmModel::new(
+            Kernel::Rbf { gamma: 0.25 },
+            sv,
+            vec![0.5; n_sv],
+            0.1,
+        )
+        .unwrap();
+        let approx = ApproxModel {
+            gamma: 0.25,
+            b: 0.1,
+            c: 0.2,
+            v: vec![0.125; d],
+            m,
+            max_sv_norm_sq: 2.0,
+        };
+        let f32_bytes = TenantModels::F32 {
+            exact: exact.clone(),
+            approx: approx.clone(),
+        }
+        .resident_bytes();
+        for (kind, min_ratio) in
+            [(PayloadKind::F16, 2.0f64), (PayloadKind::Int8, 3.5)]
+        {
+            let q = TenantModels::Quantized {
+                exact: QuantSvmModel::quantize(&exact, kind).unwrap(),
+                approx: QuantApproxModel::quantize(&approx, kind).unwrap(),
+            };
+            let ratio = f32_bytes as f64 / q.resident_bytes() as f64;
+            assert!(
+                ratio >= min_ratio,
+                "{kind}: ratio {ratio:.2} < {min_ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn payload_kind_parse_display_roundtrip() {
+        for k in [PayloadKind::F32, PayloadKind::F16, PayloadKind::Int8] {
+            assert_eq!(k.to_string().parse::<PayloadKind>().unwrap(), k);
+        }
+        assert_eq!("half".parse::<PayloadKind>().unwrap(), PayloadKind::F16);
+        assert_eq!("i8".parse::<PayloadKind>().unwrap(), PayloadKind::Int8);
+        assert!("f64".parse::<PayloadKind>().is_err());
+    }
+}

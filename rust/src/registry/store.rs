@@ -32,6 +32,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL;
 use crate::approx::ApproxModel;
 use crate::coordinator::TenantPolicy;
 use crate::log_warn;
@@ -39,6 +40,7 @@ use crate::svm::SvmModel;
 use crate::{Error, Result};
 
 use super::binfmt;
+use super::quant::{PayloadKind, QuantInfo, TenantModels};
 use super::ModelId;
 
 /// File extension used for bundles.
@@ -79,16 +81,44 @@ pub struct PublishOptions {
     /// Pre-decode the bundle into the store cache so the first request
     /// for this generation skips the cold load.
     pub warm: bool,
+    /// Payload precision of the published bundle: `Some(kind)` forces
+    /// it; `None` defers to the `APPROXRBF_TEST_QUANT` environment
+    /// override (`f16`/`int8`; the CI `tier1-quant` job runs the whole
+    /// suite with it set), defaulting to f32. Mirrors how
+    /// `APPROXRBF_TEST_SHARDS` drives the default shard count.
+    pub quantize: Option<PayloadKind>,
 }
 
-/// A loaded (exact, approx) pair at a specific generation. Shared
-/// immutably between the store cache and serving threads.
+/// Default payload precision for publishes that don't pin one: the
+/// `APPROXRBF_TEST_QUANT` environment variable when set (logged once),
+/// else f32.
+fn default_publish_payload() -> PayloadKind {
+    let kind = std::env::var("APPROXRBF_TEST_QUANT")
+        .ok()
+        .and_then(|s| s.parse::<PayloadKind>().ok())
+        .unwrap_or(PayloadKind::F32);
+    if kind != PayloadKind::F32 {
+        static ANNOUNCED: std::sync::Once = std::sync::Once::new();
+        ANNOUNCED.call_once(|| {
+            log_warn!(
+                "registry: APPROXRBF_TEST_QUANT={kind} overrides the \
+                 default publish payload (PublishOptions::quantize still \
+                 wins)"
+            );
+        });
+    }
+    kind
+}
+
+/// A loaded (exact, approx) pair at a specific generation — f32 or
+/// native quantized storage, depending on the bundle's payload kind.
+/// Shared immutably between the store cache and serving threads.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
     pub id: ModelId,
     pub generation: u64,
-    pub exact: SvmModel,
-    pub approx: ApproxModel,
+    /// The served model pair in its native storage.
+    pub models: TenantModels,
     /// Per-tenant serving policy carried by the bundle, if any.
     pub policy: Option<TenantPolicy>,
 }
@@ -96,7 +126,77 @@ pub struct ModelEntry {
 impl ModelEntry {
     /// Feature dimension (exact and approx agree by construction).
     pub fn dim(&self) -> usize {
-        self.approx.dim()
+        self.models.dim()
+    }
+
+    /// Payload precision this entry serves at.
+    pub fn payload(&self) -> PayloadKind {
+        self.models.payload()
+    }
+
+    /// The Eq. 3.11 routing budget with quantization drift folded in at
+    /// the default tolerance
+    /// ([`crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL`]).
+    pub fn znorm_sq_budget(&self) -> f32 {
+        self.znorm_sq_budget_with(DEFAULT_QUANT_DRIFT_TOL)
+    }
+
+    /// The served ‖z‖² budget: the Maclaurin Eq. 3.11 budget
+    /// intersected with the largest ‖z‖² whose dequantization drift
+    /// bound stays within `quant_drift_tol`
+    /// ([`crate::approx::bounds::QuantErrorBound::drift_budget`]).
+    /// For f32 entries this is exactly the Eq. 3.11 budget.
+    pub fn znorm_sq_budget_with(&self, quant_drift_tol: f32) -> f32 {
+        let base = self.models.approx_znorm_sq_budget();
+        match self.models.quant_error() {
+            None => base,
+            Some(q) => base.min(q.drift_budget(quant_drift_tol)),
+        }
+    }
+
+    /// Quantization error metadata (`None` for f32 entries).
+    pub fn quant_info(&self) -> Option<QuantInfo> {
+        match (
+            self.models.quant_error(),
+            self.models.exact_quant_error(),
+        ) {
+            (Some(approx_err), Some(exact_err)) => Some(QuantInfo {
+                payload: self.payload(),
+                approx_err,
+                exact_err,
+            }),
+            _ => None,
+        }
+    }
+
+    /// SV norms of the (dequantized) exact model — cached per
+    /// generation by the serving executor.
+    pub fn sv_row_norms_sq(&self) -> Vec<f32> {
+        self.models.sv_row_norms_sq()
+    }
+
+    /// Reference decisions on the entry's native storage (what the
+    /// serving executor computes); see [`TenantModels`].
+    pub fn approx_decision_one(&self, z: &[f32]) -> f32 {
+        self.models.approx_decision_one(z)
+    }
+
+    pub fn exact_decision_one(&self, z: &[f32]) -> f32 {
+        self.models.exact_decision_one(z)
+    }
+
+    /// Dequantized copies (clones for f32 entries).
+    pub fn exact_dequant(&self) -> SvmModel {
+        self.models.exact_dequant()
+    }
+
+    pub fn approx_dequant(&self) -> ApproxModel {
+        self.models.approx_dequant()
+    }
+
+    /// Approximate resident footprint of the model pair in bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.models.resident_bytes()
     }
 }
 
@@ -110,6 +210,8 @@ pub struct StoreEntryInfo {
     pub size_bytes: u64,
     /// True iff the bundle advertises a per-tenant policy record.
     pub has_policy: bool,
+    /// Payload precision advertised by the header flags.
+    pub payload: PayloadKind,
 }
 
 struct Cache {
@@ -378,27 +480,39 @@ impl ModelStore {
         } else {
             1
         };
-        let bytes = binfmt::encode_bundle_with(
+        let payload = opts.quantize.unwrap_or_else(default_publish_payload);
+        let bytes = binfmt::encode_bundle_quantized(
             generation,
             exact,
             approx,
             opts.policy.as_ref(),
+            payload,
         )?;
         if let Some(old) = replaced {
             self.archive_current(id, old);
         }
         self.atomic_write(id, &bytes)?;
         // Invalidate so the next load picks the new generation up —
-        // or, when warming, seed the cache with the state we already
-        // hold in memory (no decode, no disk read on first request).
+        // or, when warming, seed the cache. An f32 warm seeds the state
+        // already in memory (no decode, no disk read on first request);
+        // a quantized warm decodes the bytes just written, so the
+        // warmed entry is exactly what any other lane loads from disk
+        // (sharded planes must stay decision-identical).
         let mut cache = self.cache.lock().unwrap();
         cache.entries.remove(id);
         if opts.warm {
+            let models = if payload == PayloadKind::F32 {
+                TenantModels::F32 {
+                    exact: exact.clone(),
+                    approx: approx.clone(),
+                }
+            } else {
+                binfmt::decode_bundle_full(&bytes)?.models
+            };
             let entry = Arc::new(ModelEntry {
                 id: Arc::from(id),
                 generation,
-                exact: exact.clone(),
-                approx: approx.clone(),
+                models,
                 policy: opts.policy,
             });
             cache.insert(id, entry);
@@ -425,19 +539,21 @@ impl ModelStore {
         };
         let bytes = std::fs::read(self.gen_path_of(id, source))?;
         let bundle = binfmt::decode_bundle_full(&bytes)?;
-        if bundle.exact.dim() != current.dim {
+        if bundle.models.dim() != current.dim {
             return Err(Error::InvalidArg(format!(
                 "archived generation {source} of '{id}' has dim {} but \
                  the current generation serves dim {}; refusing rollback",
-                bundle.exact.dim(),
+                bundle.models.dim(),
                 current.dim
             )));
         }
         let generation = current.generation + 1;
-        let out = binfmt::encode_bundle_with(
+        // Native re-encode: an archived quantized bundle reverts with
+        // its stored q-values and scales verbatim — no requantization,
+        // no double quantization error.
+        let out = binfmt::encode_bundle_native(
             generation,
-            &bundle.exact,
-            &bundle.approx,
+            &bundle.models,
             bundle.policy.as_ref(),
         )?;
         self.archive_current(id, current.generation);
@@ -462,6 +578,7 @@ impl ModelStore {
             n_sv: hdr.n_sv as usize,
             size_bytes,
             has_policy: hdr.has_policy(),
+            payload: hdr.payload(),
         })
     }
 
@@ -489,8 +606,7 @@ impl ModelStore {
         let entry = Arc::new(ModelEntry {
             id: Arc::from(id),
             generation: bundle.generation,
-            exact: bundle.exact,
-            approx: bundle.approx,
+            models: bundle.models,
             policy: bundle.policy,
         });
         self.cache.lock().unwrap().insert(id, entry.clone());
@@ -651,9 +767,9 @@ mod tests {
         assert_eq!(store.publish("alpha", &e2, &a2).unwrap(), 2);
         let second = store.load("alpha").unwrap();
         assert_eq!(second.generation, 2);
-        assert_eq!(second.approx.c, 2.0);
+        assert_eq!(second.approx_dequant().c, 2.0);
         // The old Arc is still intact (in-flight readers keep serving).
-        assert_eq!(first.approx.c, 1.0);
+        assert_eq!(first.approx_dequant().c, 1.0);
     }
 
     #[test]
@@ -811,16 +927,16 @@ mod tests {
         let (e2, a2) = pair(2.0);
         store.publish("m", &e1, &a1).unwrap();
         store.publish("m", &e2, &a2).unwrap();
-        assert_eq!(store.load("m").unwrap().approx.c, 2.0);
+        assert_eq!(store.load("m").unwrap().approx_dequant().c, 2.0);
         // Roll back: generation moves FORWARD (2 → 3) but the payload
         // is generation 1's.
         assert_eq!(store.rollback("m").unwrap(), 3);
         let entry = store.load("m").unwrap();
         assert_eq!(entry.generation, 3);
-        assert_eq!(entry.approx.c, 1.0);
+        assert_eq!(entry.approx_dequant().c, 1.0);
         // Rolling back again reverts the revert (gen 2's payload).
         assert_eq!(store.rollback("m").unwrap(), 4);
-        assert_eq!(store.load("m").unwrap().approx.c, 2.0);
+        assert_eq!(store.load("m").unwrap().approx_dequant().c, 2.0);
     }
 
     #[test]
@@ -876,6 +992,123 @@ mod tests {
     }
 
     #[test]
+    fn quantized_publish_roundtrips_and_reports_payload() {
+        let store = temp_store("quant");
+        let (e, a) = pair(1.0);
+        for kind in [PayloadKind::F16, PayloadKind::Int8] {
+            let id = format!("q-{kind}");
+            store
+                .publish_with(
+                    &id,
+                    &e,
+                    &a,
+                    PublishOptions {
+                        quantize: Some(kind),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            let info = store.peek(&id).unwrap();
+            assert_eq!(info.payload, kind);
+            assert_eq!(info.dim, 2);
+            assert_eq!(info.n_sv, 2);
+            let entry = store.load(&id).unwrap();
+            assert_eq!(entry.payload(), kind);
+            // Scalars survive exactly; tensors within advertised eps.
+            let deq = entry.approx_dequant();
+            assert_eq!(deq.c, a.c);
+            assert_eq!(deq.gamma, a.gamma);
+            let q = entry.quant_info().expect("quantized entry");
+            assert_eq!(q.payload, kind);
+            assert!(deq.m.max_abs_diff(&a.m) <= q.approx_err.eps_m);
+            // The folded budget never exceeds the raw Eq. 3.11 budget.
+            assert!(entry.znorm_sq_budget() <= a.znorm_sq_budget());
+            // Quantized resident footprint shrinks vs the f32 twin.
+            store
+                .publish_with(
+                    "f32-twin",
+                    &e,
+                    &a,
+                    PublishOptions {
+                        quantize: Some(PayloadKind::F32),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            let f32_entry = store.load("f32-twin").unwrap();
+            assert!(f32_entry.quant_info().is_none());
+            assert!(
+                entry.resident_bytes() < f32_entry.resident_bytes(),
+                "{kind}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_warm_publish_seeds_the_decoded_entry() {
+        let store = temp_store("quantwarm");
+        let (e, a) = pair(1.0);
+        store
+            .publish_with(
+                "hot",
+                &e,
+                &a,
+                PublishOptions {
+                    warm: true,
+                    quantize: Some(PayloadKind::Int8),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(store.cached_count(), 1);
+        let warmed = store.load("hot").unwrap();
+        // The warmed entry is the decoded quantized state — identical
+        // to what a cold lane reads from disk — not the f32 originals.
+        assert_eq!(warmed.payload(), PayloadKind::Int8);
+        let fresh = ModelStore::open(store.root()).unwrap();
+        let cold = fresh.load("hot").unwrap();
+        assert_eq!(
+            warmed.approx_decision_one(&[0.3, -0.7]).to_bits(),
+            cold.approx_decision_one(&[0.3, -0.7]).to_bits()
+        );
+    }
+
+    #[test]
+    fn rollback_of_quantized_bundle_is_lossless() {
+        let store = temp_store("quantrollback");
+        let (e1, a1) = pair(1.0);
+        let (e2, a2) = pair(2.0);
+        store
+            .publish_with(
+                "m",
+                &e1,
+                &a1,
+                PublishOptions {
+                    quantize: Some(PayloadKind::Int8),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let gen1 = store.load("m").unwrap();
+        store.publish("m", &e2, &a2).unwrap();
+        assert_eq!(store.rollback("m").unwrap(), 3);
+        let entry = store.load("m").unwrap();
+        assert_eq!(entry.generation, 3);
+        assert_eq!(entry.payload(), PayloadKind::Int8);
+        // Bit-identical decisions to the original quantized generation:
+        // the rollback re-encoded stored q-values, never requantized.
+        let z = [0.25f32, -0.5];
+        assert_eq!(
+            entry.approx_decision_one(&z).to_bits(),
+            gen1.approx_decision_one(&z).to_bits()
+        );
+        assert_eq!(
+            entry.exact_decision_one(&z).to_bits(),
+            gen1.exact_decision_one(&z).to_bits()
+        );
+    }
+
+    #[test]
     fn policy_roundtrips_through_publish_and_load() {
         let store = temp_store("policy");
         let (e, a) = pair(1.0);
@@ -890,7 +1123,10 @@ mod tests {
                 "p",
                 &e,
                 &a,
-                PublishOptions { policy: Some(policy), warm: false },
+                PublishOptions {
+                    policy: Some(policy),
+                    ..Default::default()
+                },
             )
             .unwrap();
         assert!(store.peek("p").unwrap().has_policy);

@@ -1,0 +1,245 @@
+#!/usr/bin/env python3
+"""Regenerates the golden `.arbf` corpus (v1, kinds 1-5).
+
+The committed binaries are CANONICAL: rust/tests/format_conformance.rs
+asserts that the Rust encoder reproduces them byte-for-byte, so any
+format change must be made deliberately (edit docs/FORMATS.md, bump the
+version or add a kind, regenerate here, and update the conformance
+expectations).
+
+Every model value in the corpus is dyadic (a small multiple of a power
+of two), and every int8 row max is 127 * 2^-k, so f32 arithmetic, f16
+conversion and int8 quantization are all EXACT - this generator and the
+Rust encoder agree bit-for-bit with no rounding ambiguity.
+
+Run from the repo root:  python3 rust/tests/data/gen_fixtures.py
+"""
+
+import math
+import os
+import struct
+import zlib
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# -- primitives ------------------------------------------------------------
+
+
+def u8(x):
+    return struct.pack("<B", x)
+
+
+def u16(x):
+    return struct.pack("<H", x)
+
+
+def u32(x):
+    return struct.pack("<I", x)
+
+
+def u64(x):
+    return struct.pack("<Q", x)
+
+
+def i8(x):
+    return struct.pack("<b", x)
+
+
+def f32(x):
+    b = struct.pack("<f", x)
+    # The corpus must stay exact: refuse values that round in f32.
+    assert struct.unpack("<f", b)[0] == x, f"{x} not f32-exact"
+    return b
+
+
+def f16(x):
+    """f32 -> f16 bits, exact values only (asserts)."""
+    if x == 0:
+        return u16(0x8000 if math.copysign(1.0, x) < 0 else 0)
+    s = 0x8000 if x < 0 else 0
+    m, e = math.frexp(abs(x))  # abs(x) = m * 2^e, m in [0.5, 1)
+    exp = e - 1  # normalized exponent: abs(x) = (2m) * 2^exp
+    assert -14 <= exp <= 15, f"{x} outside exact-normal f16 range"
+    mant = (2 * m - 1) * 1024
+    assert mant == int(mant), f"{x} not f16-exact"
+    return u16(s | ((exp + 15) << 10) | int(mant))
+
+
+def record(kind, payload):
+    return u16(kind) + u16(0) + u32(zlib.crc32(payload)) + u64(len(payload)) + payload
+
+
+def arbf(generation, dim, n_sv, flags, records):
+    out = b"ARBF" + u16(1) + u16(len(records)) + u64(generation)
+    out += u32(dim) + u32(n_sv) + u64(flags)
+    for kind, payload in records:
+        out += record(kind, payload)
+    return out
+
+
+FLAG_HAS_POLICY = 1
+FLAG_QUANT_F16 = 2
+FLAG_QUANT_INT8 = 4
+
+# -- the f32/f16 toy pair (all values f16-exact dyadics) -------------------
+
+SVM = dict(
+    tag=1,  # rbf
+    gamma=0.25,
+    beta=0.0,
+    b=0.125,
+    coef=[0.5, -1.0, 0.75],
+    rows=[[1.0, 0.0, 2.0], [0.0, 2.0, 0.0], [-1.0, 1.0, 0.5]],
+)
+APPROX = dict(
+    d=3,
+    gamma=0.125,
+    b=-0.25,
+    c=0.5,
+    max_sv_norm_sq=4.0,
+    v=[1.0, -2.0, 0.25],
+    m_upper=[[0.5, 0.25, -1.0], [-0.75, 2.0], [0.125]],
+)
+POLICY = u16(1) + u8(2) + u32(32) + u64(750) + u32(5)  # always-exact, 32, 750us, 5
+
+# -- the int8 toy pair (every row max is 127 * 2^-k -> exact scales) -------
+
+SVM8 = dict(
+    tag=1,
+    gamma=0.25,
+    beta=0.0,
+    b=0.125,
+    coef=dict(scale=0.0078125, q=[127, -64, 32]),
+    rows=[
+        dict(scale=0.0078125, q=[127, 0, 64]),
+        dict(scale=0.0078125, q=[0, 127, 0]),
+        dict(scale=0.00390625, q=[-127, 64, 0]),
+    ],
+)
+APPROX8 = dict(
+    d=3,
+    gamma=0.125,
+    b=-0.25,
+    c=0.5,
+    max_sv_norm_sq=4.0,
+    v=dict(scale=0.0078125, q=[127, -64, 32]),
+    m_upper=[
+        dict(scale=0.0078125, q=[127, 32, -64]),
+        dict(scale=0.0078125, q=[-127, 96]),
+        dict(scale=0.00390625, q=[127]),
+    ],
+)
+
+# -- payload builders ------------------------------------------------------
+
+
+def svm_payload(m):
+    out = u8(m["tag"]) + f32(m["gamma"]) + f32(m["beta"]) + f32(m["b"])
+    out += u32(len(m["coef"])) + u32(len(m["rows"][0]))
+    for c in m["coef"]:
+        out += f32(c)
+    for row in m["rows"]:
+        nz = [(j, v) for j, v in enumerate(row) if v != 0.0]
+        out += u32(len(nz))
+        for j, v in nz:
+            out += u32(j) + f32(v)
+    return out
+
+
+def approx_payload(a):
+    out = u32(a["d"]) + f32(a["gamma"]) + f32(a["b"]) + f32(a["c"])
+    out += f32(a["max_sv_norm_sq"])
+    for v in a["v"]:
+        out += f32(v)
+    for row in a["m_upper"]:
+        for v in row:
+            out += f32(v)
+    return out
+
+
+def f16_svm_payload(m):
+    out = u8(1) + u8(m["tag"]) + f32(m["gamma"]) + f32(m["beta"]) + f32(m["b"])
+    out += u32(len(m["coef"])) + u32(len(m["rows"][0]))
+    for c in m["coef"]:
+        out += f16(c)
+    for row in m["rows"]:
+        nz = [(j, v) for j, v in enumerate(row) if v != 0.0]
+        out += u32(len(nz))
+        for j, v in nz:
+            out += u32(j) + f16(v)
+    return out
+
+
+def f16_approx_payload(a):
+    out = u8(2) + u32(a["d"]) + f32(a["gamma"]) + f32(a["b"]) + f32(a["c"])
+    out += f32(a["max_sv_norm_sq"])
+    for v in a["v"]:
+        out += f16(v)
+    for row in a["m_upper"]:
+        for v in row:
+            out += f16(v)
+    return out
+
+
+def int8_svm_payload(m):
+    out = u8(1) + u8(m["tag"]) + f32(m["gamma"]) + f32(m["beta"]) + f32(m["b"])
+    out += u32(len(m["coef"]["q"])) + u32(len(m["rows"][0]["q"]))
+    out += f32(m["coef"]["scale"])
+    for q in m["coef"]["q"]:
+        out += i8(q)
+    for row in m["rows"]:
+        nz = [(j, q) for j, q in enumerate(row["q"]) if q != 0]
+        out += u32(len(nz)) + f32(row["scale"])
+        for j, q in nz:
+            out += u32(j) + i8(q)
+    return out
+
+
+def int8_approx_payload(a):
+    out = u8(2) + u32(a["d"]) + f32(a["gamma"]) + f32(a["b"]) + f32(a["c"])
+    out += f32(a["max_sv_norm_sq"])
+    out += f32(a["v"]["scale"])
+    for q in a["v"]["q"]:
+        out += i8(q)
+    for row in a["m_upper"]:
+        out += f32(row["scale"])
+    for row in a["m_upper"]:
+        for q in row["q"]:
+            out += i8(q)
+    return out
+
+
+# -- fixtures --------------------------------------------------------------
+
+FIXTURES = {
+    "v1_svm.arbf": arbf(0, 3, 3, 0, [(1, svm_payload(SVM))]),
+    "v1_approx.arbf": arbf(0, 3, 0, 0, [(2, approx_payload(APPROX))]),
+    "v1_bundle_policy.arbf": arbf(
+        7,
+        3,
+        3,
+        FLAG_HAS_POLICY,
+        [(1, svm_payload(SVM)), (2, approx_payload(APPROX)), (3, POLICY)],
+    ),
+    "v1_bundle_f16.arbf": arbf(
+        3,
+        3,
+        3,
+        FLAG_QUANT_F16,
+        [(4, f16_svm_payload(SVM)), (4, f16_approx_payload(APPROX))],
+    ),
+    "v1_bundle_int8_policy.arbf": arbf(
+        9,
+        3,
+        3,
+        FLAG_QUANT_INT8 | FLAG_HAS_POLICY,
+        [(5, int8_svm_payload(SVM8)), (5, int8_approx_payload(APPROX8)), (3, POLICY)],
+    ),
+}
+
+if __name__ == "__main__":
+    for name, data in FIXTURES.items():
+        path = os.path.join(HERE, name)
+        with open(path, "wb") as fh:
+            fh.write(data)
+        print(f"wrote {name}: {len(data)} bytes, crc32 {zlib.crc32(data):#010x}")

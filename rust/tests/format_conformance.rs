@@ -1,0 +1,381 @@
+//! `.arbf` format conformance against the committed golden corpus
+//! (`rust/tests/data/*.arbf`, regenerated only by
+//! `rust/tests/data/gen_fixtures.py`).
+//!
+//! The corpus pins format version 1, record kinds 1–5 and the header
+//! flag bits at the **byte** level:
+//!
+//! * every fixture byte-decodes to known header fields and tensors;
+//! * per-record CRCs recompute to the stored values;
+//! * the Rust encoders reproduce every fixture **byte-for-byte**
+//!   (`encode(decode(x)) == x`), so any accidental layout change —
+//!   reordered fields, changed widths, different sparsity rule — fails
+//!   loudly here before it silently orphans every published registry;
+//! * deliberate mutations (magic, version, flags, payload bytes,
+//!   truncation) are rejected with typed `Error::Corrupt`, while flips
+//!   confined to ignored reserved bytes still decode identically.
+//!
+//! Every fixture value is dyadic, so f32/f16/int8 round trips in the
+//! corpus are exact and the assertions below can use `==` on floats.
+
+use approxrbf::coordinator::{RoutePolicy, TenantPolicy};
+use approxrbf::linalg::Mat;
+use approxrbf::registry::binfmt::{
+    self, FLAG_HAS_POLICY, FLAG_QUANT_F16, FLAG_QUANT_INT8,
+};
+use approxrbf::registry::{PayloadKind, TenantModels};
+use approxrbf::approx::ApproxModel;
+use approxrbf::svm::{Kernel, SvmModel};
+use approxrbf::util::crc32::crc32;
+use approxrbf::Error;
+use std::time::Duration;
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data")
+        .join(name);
+    std::fs::read(&path)
+        .unwrap_or_else(|e| panic!("golden fixture {name}: {e}"))
+}
+
+/// The f32/f16 toy pair — mirrors gen_fixtures.py exactly.
+fn toy_svm() -> SvmModel {
+    SvmModel::new(
+        Kernel::Rbf { gamma: 0.25 },
+        Mat::from_vec(3, 3, vec![1., 0., 2., 0., 2., 0., -1., 1., 0.5])
+            .unwrap(),
+        vec![0.5, -1.0, 0.75],
+        0.125,
+    )
+    .unwrap()
+}
+
+fn toy_approx() -> ApproxModel {
+    ApproxModel {
+        gamma: 0.125,
+        b: -0.25,
+        c: 0.5,
+        v: vec![1.0, -2.0, 0.25],
+        m: Mat::from_vec(
+            3,
+            3,
+            vec![0.5, 0.25, -1.0, 0.25, -0.75, 2.0, -1.0, 2.0, 0.125],
+        )
+        .unwrap(),
+        max_sv_norm_sq: 4.0,
+    }
+}
+
+/// The int8 toy pair: every row max is 127·2⁻ᵏ, so quantization is
+/// exact and these f32 models quantize to the fixture's q/scales.
+fn toy_svm_int8() -> SvmModel {
+    SvmModel::new(
+        Kernel::Rbf { gamma: 0.25 },
+        Mat::from_vec(
+            3,
+            3,
+            vec![
+                0.9921875, 0.0, 0.5, //
+                0.0, 0.9921875, 0.0, //
+                -0.49609375, 0.25, 0.0,
+            ],
+        )
+        .unwrap(),
+        vec![0.9921875, -0.5, 0.25],
+        0.125,
+    )
+    .unwrap()
+}
+
+fn toy_approx_int8() -> ApproxModel {
+    ApproxModel {
+        gamma: 0.125,
+        b: -0.25,
+        c: 0.5,
+        v: vec![0.9921875, -0.5, 0.25],
+        m: Mat::from_vec(
+            3,
+            3,
+            vec![
+                0.9921875, 0.25, -0.5, //
+                0.25, -0.9921875, 0.75, //
+                -0.5, 0.75, 0.49609375,
+            ],
+        )
+        .unwrap(),
+        max_sv_norm_sq: 4.0,
+    }
+}
+
+fn toy_policy() -> TenantPolicy {
+    TenantPolicy {
+        route: Some(RoutePolicy::AlwaysExact),
+        max_batch: Some(32),
+        max_wait: Some(Duration::from_micros(750)),
+        max_resident_hint: 5,
+    }
+}
+
+fn assert_crcs_recompute(bytes: &[u8]) {
+    for (i, frame) in binfmt::record_frames(bytes).unwrap().iter().enumerate()
+    {
+        let start = frame.payload_offset;
+        let end = start + frame.payload_len as usize;
+        assert_eq!(
+            crc32(&bytes[start..end]),
+            frame.crc32,
+            "record {i}: stored CRC does not recompute"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-fixture conformance
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_v1_svm_standalone() {
+    let bytes = fixture("v1_svm.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!(
+        (hdr.version, hdr.n_records, hdr.generation),
+        (1, 1, 0)
+    );
+    assert_eq!((hdr.dim, hdr.n_sv, hdr.flags), (3, 3, 0));
+    assert_eq!(hdr.payload(), PayloadKind::F32);
+    assert_crcs_recompute(&bytes);
+    let m = binfmt::decode_svm(&bytes).unwrap();
+    let want = toy_svm();
+    assert_eq!(m.kernel, want.kernel);
+    assert_eq!(m.b, want.b);
+    assert_eq!(m.coef, want.coef);
+    assert_eq!(m.sv.max_abs_diff(&want.sv), 0.0);
+    // Byte stability: the encoder reproduces the committed fixture.
+    assert_eq!(binfmt::encode_svm(&want).unwrap(), bytes);
+}
+
+#[test]
+fn golden_v1_approx_standalone() {
+    let bytes = fixture("v1_approx.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation, hdr.dim, hdr.n_sv), (1, 0, 3, 0));
+    assert_crcs_recompute(&bytes);
+    let a = binfmt::decode_approx(&bytes).unwrap();
+    let want = toy_approx();
+    assert_eq!(a.gamma, want.gamma);
+    assert_eq!(a.b, want.b);
+    assert_eq!(a.c, want.c);
+    assert_eq!(a.max_sv_norm_sq, want.max_sv_norm_sq);
+    assert_eq!(a.v, want.v);
+    assert_eq!(a.m.max_abs_diff(&want.m), 0.0);
+    assert_eq!(binfmt::encode_approx(&want).unwrap(), bytes);
+}
+
+#[test]
+fn golden_v1_bundle_with_policy() {
+    let bytes = fixture("v1_bundle_policy.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (3, 7));
+    assert_eq!(hdr.flags, FLAG_HAS_POLICY);
+    assert!(hdr.has_policy());
+    assert_eq!(hdr.payload(), PayloadKind::F32);
+    assert_crcs_recompute(&bytes);
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.generation, 7);
+    assert_eq!(b.policy, Some(toy_policy()));
+    let e = b.exact_dequant();
+    let a = b.approx_dequant();
+    assert_eq!(e.coef, toy_svm().coef);
+    assert_eq!(a.v, toy_approx().v);
+    assert_eq!(
+        binfmt::encode_bundle_with(
+            7,
+            &toy_svm(),
+            &toy_approx(),
+            Some(&toy_policy())
+        )
+        .unwrap(),
+        bytes
+    );
+    // The native re-encode of the decoded bundle is identical too.
+    assert_eq!(
+        binfmt::encode_bundle_native(7, &b.models, b.policy.as_ref())
+            .unwrap(),
+        bytes
+    );
+}
+
+#[test]
+fn golden_v1_bundle_f16() {
+    let bytes = fixture("v1_bundle_f16.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (2, 3));
+    assert_eq!(hdr.flags, FLAG_QUANT_F16);
+    assert_eq!(hdr.payload(), PayloadKind::F16);
+    assert_crcs_recompute(&bytes);
+    let frames = binfmt::record_frames(&bytes).unwrap();
+    assert!(frames.iter().all(|f| f.kind == 4));
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.payload(), PayloadKind::F16);
+    // Every fixture value is f16-exact, so dequantization is lossless.
+    let e = b.exact_dequant();
+    let a = b.approx_dequant();
+    assert_eq!(e.coef, toy_svm().coef);
+    assert_eq!(e.sv.max_abs_diff(&toy_svm().sv), 0.0);
+    assert_eq!(e.b, 0.125);
+    assert_eq!(a.v, toy_approx().v);
+    assert_eq!(a.m.max_abs_diff(&toy_approx().m), 0.0);
+    // Byte stability via BOTH paths: re-encoding the decoded native
+    // storage, and re-quantizing the f32 twins from scratch.
+    assert_eq!(
+        binfmt::encode_bundle_native(3, &b.models, None).unwrap(),
+        bytes
+    );
+    assert_eq!(
+        binfmt::encode_bundle_quantized(
+            3,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::F16
+        )
+        .unwrap(),
+        bytes
+    );
+}
+
+#[test]
+fn golden_v1_bundle_int8_with_policy() {
+    let bytes = fixture("v1_bundle_int8_policy.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (3, 9));
+    assert_eq!(hdr.flags, FLAG_QUANT_INT8 | FLAG_HAS_POLICY);
+    assert_eq!(hdr.payload(), PayloadKind::Int8);
+    assert_crcs_recompute(&bytes);
+    let frames = binfmt::record_frames(&bytes).unwrap();
+    assert_eq!(
+        frames.iter().map(|f| f.kind).collect::<Vec<_>>(),
+        vec![5, 5, 3]
+    );
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.payload(), PayloadKind::Int8);
+    assert_eq!(b.policy, Some(toy_policy()));
+    // Dyadic scales (2⁻⁷ / 2⁻⁸) make dequantization exact.
+    let e = b.exact_dequant();
+    let a = b.approx_dequant();
+    assert_eq!(e.coef, toy_svm_int8().coef);
+    assert_eq!(e.sv.max_abs_diff(&toy_svm_int8().sv), 0.0);
+    assert_eq!(a.v, toy_approx_int8().v);
+    assert_eq!(a.m.max_abs_diff(&toy_approx_int8().m), 0.0);
+    match &b.models {
+        TenantModels::Quantized { approx, .. } => {
+            // Spot-check the stored quantized state itself.
+            assert_eq!(approx.v.get(0), 0.9921875);
+            assert_eq!(approx.m.get(2, 2), 0.49609375);
+            assert_eq!(approx.m.get(0, 2), approx.m.get(2, 0));
+        }
+        TenantModels::F32 { .. } => panic!("int8 fixture decoded as f32"),
+    }
+    assert_eq!(
+        binfmt::encode_bundle_native(9, &b.models, b.policy.as_ref())
+            .unwrap(),
+        bytes
+    );
+    // Quantizing the exact-dyadic f32 twins reproduces the same bytes:
+    // scale = max|row|/127 = 2⁻ᵏ exactly, q = value/scale exactly.
+    assert_eq!(
+        binfmt::encode_bundle_quantized(
+            9,
+            &toy_svm_int8(),
+            &toy_approx_int8(),
+            Some(&toy_policy()),
+            PayloadKind::Int8
+        )
+        .unwrap(),
+        bytes
+    );
+}
+
+// ---------------------------------------------------------------------
+// deliberate mutations must fail loudly (and reserved bytes must not)
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_fixture_rejects_deliberate_mutations() {
+    for name in [
+        "v1_svm.arbf",
+        "v1_approx.arbf",
+        "v1_bundle_policy.arbf",
+        "v1_bundle_f16.arbf",
+        "v1_bundle_int8_policy.arbf",
+    ] {
+        let bytes = fixture(name);
+        let check = |mutated: Vec<u8>, what: &str| {
+            assert!(
+                matches!(binfmt::decode(&mutated), Err(Error::Corrupt(_))),
+                "{name}: {what} mutation must be Corrupt"
+            );
+        };
+        // Magic, version, record-count, flags word.
+        let mut m = bytes.clone();
+        m[0] ^= 0x01;
+        check(m, "magic");
+        let mut m = bytes.clone();
+        m[4] = 99;
+        check(m, "version");
+        let mut m = bytes.clone();
+        m[6] = 0xff;
+        m[7] = 0xff;
+        check(m, "record count");
+        // A flipped payload byte breaks the CRC.
+        let mut m = bytes.clone();
+        let last = m.len() - 1;
+        m[last] ^= 0x80;
+        check(m, "payload tail");
+        let frames = binfmt::record_frames(&bytes).unwrap();
+        let mid = frames[0].payload_offset + 2;
+        let mut m = bytes.clone();
+        m[mid] ^= 0x04;
+        check(m, "payload head");
+        // Truncation at every boundary-ish cut.
+        for cut in [0, 5, 31, 33, bytes.len() - 1] {
+            check(bytes[..cut].to_vec(), "truncation");
+        }
+        // Trailing junk.
+        let mut m = bytes.clone();
+        m.push(0);
+        check(m, "trailing junk");
+        // …but a flip confined to a record header's reserved u16 (not
+        // CRC-covered, documented ignored) still decodes identically.
+        let reserved_off = frames[0].payload_offset - 14; // kind(2)+res(2)+crc(4)+len(8)
+        let mut m = bytes.clone();
+        m[reserved_off] = 0xaa;
+        let a = binfmt::decode(&bytes).unwrap();
+        let b = binfmt::decode(&m).unwrap();
+        assert_eq!(a.1.len(), b.1.len(), "{name}: reserved flip changed decode");
+    }
+}
+
+#[test]
+fn quant_flag_and_record_mismatch_is_corrupt() {
+    // Clearing the f16 flag leaves kind-4 records behind an f32 header
+    // claim — decode_bundle_full must refuse the inconsistency.
+    let mut bytes = fixture("v1_bundle_f16.arbf");
+    bytes[24] &= !(FLAG_QUANT_F16 as u8);
+    assert!(matches!(
+        binfmt::decode_bundle_full(&bytes),
+        Err(Error::Corrupt(m)) if m.contains("advertises")
+    ));
+}
+
+#[test]
+fn quantized_fixture_serves_decisions_equal_to_dequantized_eval() {
+    // End-of-pipe sanity on the corpus: the native int8 evaluation of
+    // the fixture equals evaluating its (exactly) dequantized twin.
+    let b = binfmt::decode_bundle_full(&fixture("v1_bundle_int8_policy.arbf"))
+        .unwrap();
+    let z = [0.25f32, -0.5, 0.125];
+    let native = b.models.approx_decision_one(&z);
+    let (deq, _) = b.approx_dequant().decision_one(&z);
+    assert!((native - deq).abs() < 1e-6, "{native} vs {deq}");
+}

@@ -14,7 +14,9 @@ use approxrbf::coordinator::{Coordinator, Route, RoutePolicy, TenantPolicy};
 use approxrbf::data::{synth, Dataset, UnitNormScaler};
 use approxrbf::linalg::{Mat, MathBackend};
 use approxrbf::prop_cases;
-use approxrbf::registry::{binfmt, ModelStore, PublishOptions};
+use approxrbf::registry::{
+    binfmt, ModelStore, PayloadKind, PublishOptions,
+};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::Rng;
@@ -163,13 +165,16 @@ fn property_bundle_roundtrip_preserves_upper_triangle_symmetry() {
         let bytes = binfmt::encode_bundle(generation, &exact, &am).unwrap();
         let bundle = binfmt::decode_bundle_full(&bytes).unwrap();
         assert_eq!(generation, bundle.generation);
-        assert_svm_eq(&exact, &bundle.exact);
-        assert_approx_eq(&am, &bundle.approx);
+        assert_eq!(bundle.payload(), PayloadKind::F32);
+        let back_e = bundle.exact_dequant();
+        let back_a = bundle.approx_dequant();
+        assert_svm_eq(&exact, &back_e);
+        assert_approx_eq(&am, &back_a);
         assert_eq!(bundle.policy, None);
         // Symmetry must survive the upper-triangle-only encoding.
         for r in 0..d {
             for c in 0..d {
-                assert_eq!(bundle.approx.m.at(r, c), bundle.approx.m.at(c, r));
+                assert_eq!(back_a.m.at(r, c), back_a.m.at(c, r));
             }
         }
     });
@@ -258,16 +263,32 @@ fn property_tenant_policy_roundtrips_through_arbf_record() {
         )
         .unwrap();
         let policy = random_policy(rng);
-        let bytes =
-            binfmt::encode_bundle_with(9, &exact, &am, Some(&policy))
-                .unwrap();
-        let hdr = binfmt::peek_header(&bytes).unwrap();
-        assert!(hdr.has_policy());
-        let bundle = binfmt::decode_bundle_full(&bytes).unwrap();
-        assert_eq!(bundle.policy, Some(policy), "policy must be bit-stable");
-        // The policy record must not perturb the models around it.
-        assert_approx_eq(&am, &bundle.approx);
-        assert_svm_eq(&exact, &bundle.exact);
+        // The policy record must be bit-stable whatever payload
+        // precision carries the models around it.
+        for kind in [PayloadKind::F32, PayloadKind::F16, PayloadKind::Int8]
+        {
+            let bytes = binfmt::encode_bundle_quantized(
+                9,
+                &exact,
+                &am,
+                Some(&policy),
+                kind,
+            )
+            .unwrap();
+            let hdr = binfmt::peek_header(&bytes).unwrap();
+            assert!(hdr.has_policy());
+            assert_eq!(hdr.payload(), kind);
+            let bundle = binfmt::decode_bundle_full(&bytes).unwrap();
+            assert_eq!(
+                bundle.policy,
+                Some(policy),
+                "{kind}: policy must be bit-stable"
+            );
+            if kind == PayloadKind::F32 {
+                assert_approx_eq(&am, &bundle.approx_dequant());
+                assert_svm_eq(&exact, &bundle.exact_dequant());
+            }
+        }
     });
 }
 
@@ -282,7 +303,11 @@ fn property_policy_roundtrips_through_store_publish() {
                 "p",
                 &e,
                 &a,
-                PublishOptions { policy: Some(policy), warm: rng.chance(0.5) },
+                PublishOptions {
+                    policy: Some(policy),
+                    warm: rng.chance(0.5),
+                    ..Default::default()
+                },
             )
             .unwrap();
         assert_eq!(store.load("p").unwrap().policy, Some(policy));
@@ -313,12 +338,19 @@ fn published_policy_overrides_route_and_hot_swaps_away() {
         route: Some(RoutePolicy::AlwaysExact),
         ..Default::default()
     };
+    // f32-pinned payloads: this test asserts an exact route mix and
+    // in_bound flags, which a quantized payload's folded drift budget
+    // could legitimately shift.
     store
         .publish_with(
             "tenant",
             &m,
             &a,
-            PublishOptions { policy: Some(pinned), warm: false },
+            PublishOptions {
+                policy: Some(pinned),
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
         )
         .unwrap();
     let coord = Coordinator::builder()
@@ -333,7 +365,17 @@ fn published_policy_overrides_route_and_hot_swaps_away() {
     let r1 = client.predict_all_for("tenant", &sub).unwrap();
     assert!(r1.iter().all(|r| r.route == Route::Exact && r.in_bound));
     // Republish without a policy: the hot swap restores hybrid routing.
-    store.publish("tenant", &m, &a).unwrap();
+    store
+        .publish_with(
+            "tenant",
+            &m,
+            &a,
+            PublishOptions {
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
     coord.refresh();
     // The refresh epoch is observed on the tenant's next batch.
     let r2 = client.predict_all_for("tenant", &sub).unwrap();
@@ -355,6 +397,9 @@ fn rollback_is_served_like_any_hot_swap() {
     let (m1, a1, data) = trained_pair(31, 0.8);
     let (m2, a2, _) = trained_pair(32, 0.7);
     store.publish("tenant", &m1, &a1).unwrap();
+    // Reference the served state (whatever payload kind the publish
+    // used — APPROXRBF_TEST_QUANT may quantize it).
+    let gen1 = store.load("tenant").unwrap();
     store.publish("tenant", &m2, &a2).unwrap();
     let coord = Coordinator::builder()
         .start_registry(store.clone())
@@ -370,9 +415,12 @@ fn rollback_is_served_like_any_hot_swap() {
     let after = client.predict_all_for("tenant", &sub).unwrap();
     assert!(after.iter().all(|r| r.generation == 3));
     for (i, resp) in after.iter().enumerate() {
-        let (want, _) = a1.decision_one(sub.row(i));
+        let want = match resp.route {
+            Route::Approx => gen1.approx_decision_one(sub.row(i)),
+            Route::Exact => gen1.exact_decision_one(sub.row(i)),
+        };
         assert!(
-            (resp.decision - want).abs() < 1e-4,
+            (resp.decision - want).abs() < 1e-3,
             "rollback must serve v1's weights"
         );
     }
@@ -403,6 +451,9 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     let (m1, a1, data) = trained_pair(5, 0.8);
     let (m2, a2, _) = trained_pair(77, 0.7); // same d, different model
     assert_eq!(store.publish("tenant", &m1, &a1).unwrap(), 1);
+    // Reference entries for both generations (payload-kind agnostic:
+    // under APPROXRBF_TEST_QUANT these are the quantized served state).
+    let gen1 = store.load("tenant").unwrap();
 
     let coord = Coordinator::builder()
         .max_wait(Duration::from_millis(1))
@@ -439,6 +490,7 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     // Phase B: with requests still in flight, atomically publish v2
     // under the same id and force the coordinator to notice.
     assert_eq!(store.publish("tenant", &m2, &a2).unwrap(), 2);
+    let gen2 = store.load("tenant").unwrap();
     coord.refresh();
 
     // Phase C: stream the second half; these are submitted strictly
@@ -475,10 +527,10 @@ fn hot_swap_switches_generations_without_dropping_requests() {
         let row = row_of[r.id as usize];
         let z = data.x.row(row);
         let want = match (r.generation, r.route) {
-            (1, Route::Approx) => a1.decision_one(z).0,
-            (1, Route::Exact) => m1.decision_one(z),
-            (2, Route::Approx) => a2.decision_one(z).0,
-            (2, Route::Exact) => m2.decision_one(z),
+            (1, Route::Approx) => gen1.approx_decision_one(z),
+            (1, Route::Exact) => gen1.exact_decision_one(z),
+            (2, Route::Approx) => gen2.approx_decision_one(z),
+            (2, Route::Exact) => gen2.exact_decision_one(z),
             (g, _) => panic!("unexpected generation {g}"),
         };
         assert!(
@@ -512,6 +564,206 @@ fn hot_swap_switches_generations_without_dropping_requests() {
     coord.shutdown().unwrap();
 }
 
+// ---------------------------------------------------------------------
+// quantized payloads: codec properties + full serving path (acceptance)
+// ---------------------------------------------------------------------
+
+#[test]
+fn property_quantized_bundles_roundtrip_within_bounds_and_reencode_stably() {
+    prop_cases!("quant bundle roundtrip", 24, |rng| {
+        let am = random_approx(rng);
+        let d = am.dim();
+        let mut sv = Mat::zeros(2, d);
+        for c in 0..d {
+            *sv.at_mut(0, c) = rng.normal() as f32;
+            *sv.at_mut(1, c) = rng.normal() as f32;
+        }
+        let exact = SvmModel::new(
+            Kernel::Rbf { gamma: am.gamma },
+            sv,
+            vec![1.0, -1.0],
+            am.b,
+        )
+        .unwrap();
+        for kind in [PayloadKind::F16, PayloadKind::Int8] {
+            let bytes = binfmt::encode_bundle_quantized(
+                4, &exact, &am, None, kind,
+            )
+            .unwrap();
+            let bundle = binfmt::decode_bundle_full(&bytes).unwrap();
+            assert_eq!(bundle.payload(), kind);
+            // Dequantized tensors stay within the advertised per-element
+            // bounds of their sources.
+            let err = bundle.models.quant_error().unwrap();
+            let back = bundle.approx_dequant();
+            for (i, (&x, &y)) in am.v.iter().zip(&back.v).enumerate() {
+                assert!(
+                    (x - y).abs() <= err.eps_v,
+                    "{kind} v[{i}]: |{x} - {y}| > {}",
+                    err.eps_v
+                );
+            }
+            assert!(back.m.max_abs_diff(&am.m) <= err.eps_m);
+            // Native re-encode is byte-stable (no requantization).
+            let again = binfmt::encode_bundle_native(
+                4,
+                &bundle.models,
+                bundle.policy.as_ref(),
+            )
+            .unwrap();
+            assert_eq!(again, bytes, "{kind}");
+            // Quantized record corruption stays typed, never panics.
+            let mut bad = bytes.clone();
+            let at = rng.below(bad.len());
+            bad[at] ^= 1 << rng.below(8);
+            if bad != bytes {
+                if let Err(e) = binfmt::decode_bundle_full(&bad) {
+                    assert!(
+                        matches!(e, Error::Corrupt(_)),
+                        "{kind}: wrong error type {e}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The ISSUE's serving acceptance: an int8 bundle publishes, decodes,
+/// hot-swaps (f32 → int8 mid-stream) and serves through `Client`, with
+/// every approx-routed decision within the bound `approx/bounds.rs`
+/// reports of the f32 twin's decision.
+#[test]
+fn int8_bundle_serves_within_reported_bound_and_hot_swaps_from_f32() {
+    let store = Arc::new(ModelStore::open(temp_dir("quantserve")).unwrap());
+    let (m, a, data) = trained_pair(61, 0.8);
+    // Generation 1: f32. Generation 2 (mid-stream): int8, same weights.
+    store
+        .publish_with(
+            "tenant",
+            &m,
+            &a,
+            PublishOptions {
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let coord = Coordinator::builder()
+        .max_wait(Duration::from_millis(1))
+        .swap_poll(Duration::from_millis(5))
+        // Generous tolerance so the int8 tenant deterministically keeps
+        // a usable approx budget (the zero-tolerance companion test
+        // below pins the escort direction).
+        .quant_drift_tol(1.0)
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let sub = data.x.rows_slice(0, 40);
+    let r1 = client.predict_all_for("tenant", &sub).unwrap();
+    assert!(r1.iter().all(|r| r.generation == 1));
+
+    store
+        .publish_with(
+            "tenant",
+            &m,
+            &a,
+            PublishOptions {
+                quantize: Some(PayloadKind::Int8),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let entry = store.load("tenant").unwrap();
+    assert_eq!(entry.payload(), PayloadKind::Int8);
+    let q = entry.quant_info().expect("int8 entry carries quant info");
+    coord.refresh();
+    let r2 = client.predict_all_for("tenant", &sub).unwrap();
+    assert!(r2.iter().all(|r| r.generation == 2), "hot swap to int8");
+    let exact_bound = q.exact_err.decision_error();
+    let mut approx_served = 0;
+    for (i, resp) in r2.iter().enumerate() {
+        // Served decision == the native quantized evaluation…
+        let want = match resp.route {
+            Route::Approx => entry.approx_decision_one(sub.row(i)),
+            Route::Exact => entry.exact_decision_one(sub.row(i)),
+        };
+        assert!((resp.decision - want).abs() < 1e-3);
+        // …and within the reported drift bound of the f32 twin.
+        match resp.route {
+            Route::Approx => {
+                approx_served += 1;
+                let (f32_dec, zn) = a.decision_one(sub.row(i));
+                assert!(
+                    (resp.decision - f32_dec).abs()
+                        <= q.approx_err.decision_error(zn),
+                    "row {i}: int8 drift exceeds the reported bound"
+                );
+            }
+            Route::Exact => {
+                let f32_dec = m.decision_one(sub.row(i));
+                assert!(
+                    (resp.decision - f32_dec).abs() <= exact_bound,
+                    "row {i}: int8 exact drift exceeds the reported bound"
+                );
+            }
+        }
+    }
+    // The quantized tenant still rides the fast path for this
+    // well-conditioned model (the drift budget did not collapse).
+    assert!(approx_served > 0, "int8 tenant never served approx");
+    coord.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+/// The router really folds quantization into the budget: with a zero
+/// drift tolerance, a quantized tenant's Hybrid budget collapses and
+/// every instance is escorted to the exact path (its f32 twin, served
+/// by the same plane, keeps riding approx).
+#[test]
+fn zero_drift_tolerance_escorts_quantized_tenant_to_exact() {
+    let store = Arc::new(ModelStore::open(temp_dir("quanttol")).unwrap());
+    let (m, a, data) = trained_pair(62, 0.8);
+    store
+        .publish_with(
+            "q8",
+            &m,
+            &a,
+            PublishOptions {
+                quantize: Some(PayloadKind::Int8),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    store
+        .publish_with(
+            "f32",
+            &m,
+            &a,
+            PublishOptions {
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let coord = Coordinator::builder()
+        .policy(RoutePolicy::Hybrid)
+        .quant_drift_tol(0.0)
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let sub = data.x.rows_slice(0, 20);
+    let rq = client.predict_all_for("q8", &sub).unwrap();
+    assert!(
+        rq.iter().all(|r| r.route == Route::Exact && !r.in_bound),
+        "zero tolerance must escort every quantized instance"
+    );
+    // The f32 twin is untouched by the tolerance (no quant error).
+    let rf = client.predict_all_for("f32", &sub).unwrap();
+    assert!(rf.iter().all(|r| r.route == Route::Approx && r.in_bound));
+    coord.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
 #[test]
 fn registry_serving_isolates_tenant_dimensions() {
     let store = Arc::new(ModelStore::open(temp_dir("dims")).unwrap());
@@ -525,6 +777,8 @@ fn registry_serving_isolates_tenant_dimensions() {
     let a12 = build_approx_model(&m12, MathBackend::Blocked).unwrap();
     store.publish("eight", &m8, &a8).unwrap();
     store.publish("twelve", &m12, &a12).unwrap();
+    let ent8 = store.load("eight").unwrap();
+    let ent12 = store.load("twelve").unwrap();
 
     let coord = Coordinator::builder().start_registry(store).unwrap();
     let client = coord.client();
@@ -538,12 +792,18 @@ fn registry_serving_isolates_tenant_dimensions() {
         .predict_all_for("twelve", &sc12.x.rows_slice(0, 16))
         .unwrap();
     for (i, resp) in r8.iter().enumerate() {
-        let (want, _) = a8.decision_one(d8.x.row(i));
-        assert!((resp.decision - want).abs() < 1e-4);
+        let want = match resp.route {
+            Route::Approx => ent8.approx_decision_one(d8.x.row(i)),
+            Route::Exact => ent8.exact_decision_one(d8.x.row(i)),
+        };
+        assert!((resp.decision - want).abs() < 1e-3);
     }
     for (i, resp) in r12.iter().enumerate() {
-        let (want, _) = a12.decision_one(sc12.x.row(i));
-        assert!((resp.decision - want).abs() < 1e-4);
+        let want = match resp.route {
+            Route::Approx => ent12.approx_decision_one(sc12.x.row(i)),
+            Route::Exact => ent12.exact_decision_one(sc12.x.row(i)),
+        };
+        assert!((resp.decision - want).abs() < 1e-3);
     }
     coord.shutdown().unwrap();
 }
