@@ -2,7 +2,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test test-sharded test-quant doc check-pjrt artifacts
+.PHONY: tier1 fmt lint build test test-sharded test-quant test-kernel-blocked bench-smoke doc check-pjrt artifacts
 
 tier1: fmt lint build test test-sharded test-quant
 
@@ -35,6 +35,20 @@ test-sharded:
 # int8-quantized bundle, so the whole suite serves kind-5 payloads.
 test-quant:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_QUANT=int8 cargo test -q
+
+# Mirror the CI tier1-quant job's second step: the sharded plane served
+# through the pinned 'blocked' quantized kernel arm (int8 decisions are
+# bit-identical across arms; this guards the dispatch plumbing).
+test-kernel-blocked:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_QUANT=int8 \
+		APPROXRBF_QUANT_KERNEL=blocked cargo test -q --test shard_test
+
+# Mirror the CI bench-smoke job: short deterministic serving_bench
+# sweep; BENCH_quant.json's kernel_arms rows must show int8
+# blocked/simd >= scalar (the CI job gates on it).
+bench-smoke:
+	cd $(CARGO_DIR) && APPROXRBF_BENCH_SMOKE=1 \
+		cargo bench --bench serving_bench
 
 # AOT-lower the L1/L2 kernels to HLO text for the PJRT runtime
 # (requires JAX; consumed by builds with `--features pjrt`).

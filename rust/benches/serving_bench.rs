@@ -4,8 +4,13 @@
 //! multi-tenant registry (1/2/4 executor lanes) whose results are
 //! written to `BENCH_serving.json`, plus a quantized-payload leg
 //! (f32 vs f16 vs int8 bundles: resident model memory, throughput and
-//! decision drift vs the reported bound) written to `BENCH_quant.json`
-//! for the footprint trajectory.
+//! decision drift vs the reported bound) and a quantized kernel-arm
+//! A/B sweep (scalar vs blocked vs simd on larger synthetic shapes,
+//! with int8 bit-identity cross-checked) — both written to
+//! `BENCH_quant.json`. The CI `bench-smoke` job runs this with
+//! `APPROXRBF_BENCH_SMOKE` set (shorter deterministic sweeps) and
+//! fails if an int8 blocked/simd arm does not beat the scalar arm of
+//! the same run.
 //!
 //! Run: `cargo bench --bench serving_bench`
 
@@ -14,23 +19,35 @@ use std::time::{Duration, Instant};
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::ApproxModel;
 use approxrbf::coordinator::{Coordinator, ExecSpec, Route, RoutePolicy};
 use approxrbf::data::{SynthProfile, UnitNormScaler};
-use approxrbf::linalg::MathBackend;
+use approxrbf::linalg::quantblas::{self, KernelArm};
+use approxrbf::linalg::{Mat, MathBackend};
+use approxrbf::predictor::{
+    Predictor, QuantApproxPredictor, QuantExactPredictor,
+};
+use approxrbf::registry::quant::{QuantApproxModel, QuantSvmModel};
 use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
-use approxrbf::svm::Kernel;
-use approxrbf::util::Json;
+use approxrbf::svm::{Kernel, SvmModel};
+use approxrbf::util::{Json, Rng};
 
-const REQUESTS: usize = 10_000;
 /// Shard sweep: requests per tenant per producer pass.
 const SWEEP_CHUNK: usize = 256;
-const SWEEP_PASSES: usize = 8;
 const SWEEP_TENANTS: usize = 6;
 
+/// Short deterministic sweeps for the CI `bench-smoke` job.
+fn smoke() -> bool {
+    std::env::var("APPROXRBF_BENCH_SMOKE").is_ok()
+}
+
 fn main() {
+    let requests: usize = if smoke() { 2_000 } else { 10_000 };
+    let (n_train, n_test) =
+        if smoke() { (1_200, 800) } else { (3_000, 2_000) };
     let (raw_train, raw_test) =
-        SynthProfile::ControlLike.generate(11, 3000, 2000);
+        SynthProfile::ControlLike.generate(11, n_train, n_test);
     let train = UnitNormScaler.apply_dataset(&raw_train);
     let test = UnitNormScaler.apply_dataset(&raw_test);
     let gamma = gamma_max_for_data(&train) * 0.8;
@@ -39,10 +56,11 @@ fn main() {
             .unwrap();
     let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
     println!(
-        "# serving throughput (n_sv={}, d={}, {} requests)\n",
+        "# serving throughput (n_sv={}, d={}, {} requests{})\n",
         stats.n_sv,
         train.dim(),
-        REQUESTS
+        requests,
+        if smoke() { ", smoke sweep" } else { "" }
     );
 
     #[allow(unused_mut)]
@@ -78,8 +96,8 @@ fn main() {
             let t0 = Instant::now();
             let mut submitted = 0usize;
             let mut received = 0usize;
-            while received < REQUESTS {
-                if submitted < REQUESTS {
+            while received < requests {
+                if submitted < requests {
                     client
                         .submit(test.x.row(submitted % test.len()).to_vec())
                         .unwrap();
@@ -97,7 +115,7 @@ fn main() {
                 "exec={exec_name:<7} policy={:<7} {:>9.0} req/s   \
                  mean batch {:>6.1}",
                 policy.name(),
-                REQUESTS as f64 / wall,
+                requests as f64 / wall,
                 m.mean_batch_size
             );
             // Per-tenant breakdown (single tenant here; the sweep below
@@ -133,8 +151,9 @@ fn shard_scaling_sweep(
     for id in &tenant_ids {
         store.publish(id, model, am).unwrap();
     }
+    let passes: usize = if smoke() { 2 } else { 8 };
     let chunk = test.x.rows_slice(0, SWEEP_CHUNK);
-    let per_tenant = SWEEP_CHUNK * SWEEP_PASSES;
+    let per_tenant = SWEEP_CHUNK * passes;
     let total = per_tenant * SWEEP_TENANTS;
     println!(
         "\n# shard scaling ({SWEEP_TENANTS} tenants × {per_tenant} \
@@ -156,7 +175,7 @@ fn shard_scaling_sweep(
                 let producer = client.clone();
                 let chunk = &chunk;
                 scope.spawn(move || {
-                    for _ in 0..SWEEP_PASSES {
+                    for _ in 0..passes {
                         let responses =
                             producer.predict_all_for(id, chunk).unwrap();
                         assert_eq!(responses.len(), SWEEP_CHUNK);
@@ -208,8 +227,8 @@ fn quant_payload_sweep(
     am: &approxrbf::approx::ApproxModel,
     test: &approxrbf::data::Dataset,
 ) {
-    const QUANT_REQUESTS: usize = 4096;
-    const DRIFT_ROWS: usize = 512;
+    let quant_requests: usize = if smoke() { 1_024 } else { 4_096 };
+    let drift_rows: usize = if smoke() { 128 } else { 512 };
     let dir = std::env::temp_dir().join(format!(
         "approxrbf_serving_bench_quant_{}",
         std::process::id()
@@ -217,7 +236,7 @@ fn quant_payload_sweep(
     let _ = std::fs::remove_dir_all(&dir);
     let store = Arc::new(ModelStore::open(&dir).unwrap());
     println!(
-        "\n# quantized payloads (n_sv={}, d={}, {QUANT_REQUESTS} requests \
+        "\n# quantized payloads (n_sv={}, d={}, {quant_requests} requests \
          per payload kind)\n",
         model.n_sv(),
         model.dim()
@@ -254,7 +273,7 @@ fn quant_payload_sweep(
         let quant_err = entry.quant_info().map(|q| q.approx_err);
         let mut max_drift = 0f64;
         let mut max_bound = 0f64;
-        for r in 0..DRIFT_ROWS.min(test.len()) {
+        for r in 0..drift_rows.min(test.len()) {
             let z = test.x.row(r);
             let drift = f64::from(
                 (entry.approx_decision_one(z)
@@ -291,8 +310,8 @@ fn quant_payload_sweep(
         let mut submitted = 0usize;
         let mut received = 0usize;
         let mut approx_routed = 0usize;
-        while received < QUANT_REQUESTS {
-            if submitted < QUANT_REQUESTS {
+        while received < quant_requests {
+            if submitted < quant_requests {
                 client
                     .submit_to(
                         &id,
@@ -312,12 +331,12 @@ fn quant_payload_sweep(
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        let rps = QUANT_REQUESTS as f64 / wall;
+        let rps = quant_requests as f64 / wall;
         coord.shutdown().unwrap();
         println!(
             "payload={:<5} resident {resident:>9} B ({ratio:>4.1}x \
              smaller)   file {:>9} B   {rps:>9.0} req/s   approx-routed \
-             {approx_routed}/{QUANT_REQUESTS}   max drift {max_drift:.2e} \
+             {approx_routed}/{quant_requests}   max drift {max_drift:.2e} \
              (bound {max_bound:.2e})",
             kind.name(),
             info.size_bytes
@@ -328,19 +347,138 @@ fn quant_payload_sweep(
             ("resident_ratio_vs_f32", Json::num(ratio)),
             ("file_bytes", Json::num(info.size_bytes as f64)),
             ("throughput_rps", Json::num(rps)),
-            ("requests", Json::num(QUANT_REQUESTS as f64)),
+            ("requests", Json::num(quant_requests as f64)),
             ("approx_routed", Json::num(approx_routed as f64)),
             ("max_abs_drift_vs_f32", Json::num(max_drift)),
             ("reported_drift_bound", Json::num(max_bound)),
         ]));
     }
+    let arm_rows = kernel_arm_sweep();
     let doc = Json::obj(vec![
         ("bench", Json::str("serving_quantized_payloads")),
         ("n_sv", Json::num(model.n_sv() as f64)),
         ("dim", Json::num(model.dim() as f64)),
         ("rows", Json::Arr(rows)),
+        ("kernel_arms", Json::Arr(arm_rows)),
     ]);
     std::fs::write("BENCH_quant.json", doc.to_string_pretty()).unwrap();
     println!("\n(JSON: BENCH_quant.json)");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Kernel-arm A/B sweep: the same quantized models evaluated through
+/// every available dispatch arm (`scalar` = the PR-4 per-element
+/// loops) on serving-sized synthetic shapes, so `BENCH_quant.json`
+/// records the speedup the blocked/SIMD kernels buy *relative to the
+/// scalar arm of the same run* — hardware-noise-proof, which is what
+/// the CI `bench-smoke` gate compares. int8 arms are cross-checked
+/// bit-identical while we're at it.
+fn kernel_arm_sweep() -> Vec<Json> {
+    let d = 256;
+    let n_sv = 512;
+    let batch_rows = 64;
+    let mut rng = Rng::new(42);
+    let mut sym = Mat::zeros(d, d);
+    for r in 0..d {
+        for c in r..d {
+            let v = (rng.normal() * 0.05) as f32;
+            *sym.at_mut(r, c) = v;
+            *sym.at_mut(c, r) = v;
+        }
+    }
+    let am = ApproxModel {
+        gamma: 0.05,
+        b: 0.1,
+        c: 0.3,
+        v: (0..d).map(|_| (rng.normal() * 0.2) as f32).collect(),
+        m: sym,
+        max_sv_norm_sq: 1.0,
+    };
+    let mut sv = Mat::zeros(n_sv, d);
+    for r in 0..n_sv {
+        for c in 0..d {
+            *sv.at_mut(r, c) = (rng.normal() * 0.1) as f32;
+        }
+    }
+    let coef: Vec<f32> = (0..n_sv).map(|_| rng.normal() as f32).collect();
+    let exact =
+        SvmModel::new(Kernel::Rbf { gamma: 0.05 }, sv, coef, 0.05).unwrap();
+    let batch = Mat::from_vec(
+        batch_rows,
+        d,
+        (0..batch_rows * d)
+            .map(|_| (rng.normal() * 0.3) as f32)
+            .collect(),
+    )
+    .unwrap();
+    let (reps_a, reps_e) = if smoke() { (30, 10) } else { (120, 40) };
+    println!(
+        "\n# quantized kernel arms (synthetic d={d}, n_sv={n_sv}, \
+         batch {batch_rows}; arm speedups vs the scalar arm)\n"
+    );
+    let mut out = Vec::new();
+    for kind in [PayloadKind::F16, PayloadKind::Int8] {
+        let qa = QuantApproxModel::quantize(&am, kind).unwrap();
+        let qe = QuantSvmModel::quantize(&exact, kind).unwrap();
+        let mut scalar_rps = [0f64; 2]; // [approx, exact]
+        let mut int8_oracle: Option<Vec<u32>> = None;
+        for arm in quantblas::available_arms() {
+            let ap = QuantApproxPredictor::with_arm(&qa, arm);
+            let ep = QuantExactPredictor::with_arm(&qe, arm);
+            // int8 bit-identity across arms, checked on live outputs.
+            if kind == PayloadKind::Int8 {
+                let bits: Vec<u32> = ap
+                    .predict_batch(&batch)
+                    .unwrap()
+                    .decisions
+                    .iter()
+                    .chain(&ep.predict_batch(&batch).unwrap().decisions)
+                    .map(|x| x.to_bits())
+                    .collect();
+                match &int8_oracle {
+                    None => int8_oracle = Some(bits),
+                    Some(want) => assert_eq!(
+                        &bits, want,
+                        "int8 decisions diverge on arm {arm}"
+                    ),
+                }
+            }
+            for (path_idx, path) in ["approx", "exact"].iter().enumerate() {
+                let reps = if path_idx == 0 { reps_a } else { reps_e };
+                // Best-of-3 rounds: robust against scheduler noise.
+                let mut best = f64::INFINITY;
+                for _ in 0..3 {
+                    let t0 = Instant::now();
+                    for _ in 0..reps {
+                        let n = if path_idx == 0 {
+                            ap.predict_batch(&batch).unwrap().decisions.len()
+                        } else {
+                            ep.predict_batch(&batch).unwrap().decisions.len()
+                        };
+                        assert_eq!(n, batch_rows);
+                    }
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                let rps = (reps * batch_rows) as f64 / best;
+                if arm == KernelArm::Scalar {
+                    scalar_rps[path_idx] = rps;
+                }
+                let speedup = rps / scalar_rps[path_idx];
+                println!(
+                    "payload={:<5} path={path:<6} arm={:<8} {rps:>10.0} \
+                     rows/s   {speedup:>5.2}x vs scalar",
+                    kind.name(),
+                    arm.name()
+                );
+                out.push(Json::obj(vec![
+                    ("payload", Json::str(kind.name())),
+                    ("path", Json::str(*path)),
+                    ("arm", Json::str(arm.name())),
+                    ("rows_per_s", Json::num(rps)),
+                    ("speedup_vs_scalar", Json::num(speedup)),
+                ]));
+            }
+        }
+    }
+    out
 }

@@ -36,28 +36,49 @@ const QUANT_EVAL_FLOOR: f32 = 1e-6;
 
 /// Per-element dequantization error bounds of a quantized approx
 /// payload: `|Δv_i| ≤ eps_v`, `|ΔM_rc| ≤ eps_m` (scalars `γ, b, c`
-/// stay f32, so they contribute nothing).
+/// stay f32, so they contribute nothing), plus the query-side terms of
+/// the int8 integer kernels (`linalg::quantblas` quantizes the query
+/// row to i16 so all dispatch arms accumulate in exact integer
+/// arithmetic): `|Δz_i| ≤ eps_z_rel·‖z‖₂`, weighted by the dequantized
+/// coefficient mass `v_abs_sum = Σ|v̂_i|` and
+/// `m_abs_sum = Σ_rc|M̂_rc|` (mirrored). f16 payloads keep the query
+/// in f32, so their `eps_z_rel` is 0 and the bound reduces to the
+/// weight-only form.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantErrorBound {
     pub dim: usize,
     pub eps_v: f32,
     pub eps_m: f32,
+    /// Relative per-element query quantization error (0 when the query
+    /// is evaluated in f32; `quantblas::Z16_REL_EPS` on int8).
+    pub eps_z_rel: f32,
+    /// `Σ|v̂_i|` of the dequantized linear term.
+    pub v_abs_sum: f32,
+    /// `Σ_rc |M̂_rc|` of the dequantized mirrored quadratic term.
+    pub m_abs_sum: f32,
 }
 
 impl QuantErrorBound {
     /// Absolute decision-error bound for an instance with squared norm
-    /// `zn_sq`. Since `e^{−γ‖z‖²} ≤ 1` and (Cauchy–Schwarz /
-    /// `Σ|z_i| ≤ √d·‖z‖`):
+    /// `zn_sq`. Since `e^{−γ‖z‖²} ≤ 1`, Cauchy–Schwarz /
+    /// `Σ|z_i| ≤ √d·‖z‖` on the weight errors, and
+    /// `|Δz_i| ≤ eps_z = eps_z_rel·‖z‖` on the query error
+    /// (`|ẑ_rẑ_c − z_rz_c| ≤ 2‖z‖·eps_z + eps_z²`):
     ///
     /// ```text
-    /// |Δf̂(z)| ≤ |Δvᵀz| + |zᵀΔMz| ≤ eps_v·√(d·‖z‖²) + eps_m·d·‖z‖²
+    /// |Δf̂(z)| ≤ eps_v·√(d·‖z‖²) + eps_m·d·‖z‖²            (weights)
+    ///         + Σ|v̂|·eps_z + Σ|M̂|·(2‖z‖ + eps_z)·eps_z    (query)
     /// ```
     ///
     /// padded by a 0.1% evaluation-rounding slack.
     pub fn decision_error(&self, zn_sq: f32) -> f32 {
-        let s = (self.dim as f32 * zn_sq.max(0.0)).sqrt();
-        (self.eps_v * s + self.eps_m * s * s) * QUANT_EVAL_SLACK
-            + QUANT_EVAL_FLOOR
+        let zn = zn_sq.max(0.0);
+        let s = (self.dim as f32 * zn).sqrt();
+        let weight = self.eps_v * s + self.eps_m * s * s;
+        let eps_z = self.eps_z_rel * zn.sqrt();
+        let query = self.v_abs_sum * eps_z
+            + self.m_abs_sum * (2.0 * zn.sqrt() + eps_z) * eps_z;
+        (weight + query) * QUANT_EVAL_SLACK + QUANT_EVAL_FLOOR
     }
 
     /// Largest ‖z‖² whose [`QuantErrorBound::decision_error`] stays
@@ -72,21 +93,27 @@ impl QuantErrorBound {
         if tol <= 0.0 {
             return 0.0;
         }
-        let (a, b) = (self.eps_m, self.eps_v);
-        // Solve a·s² + b·s = tol for s = √(d·‖z‖²) ≥ 0.
-        let s = if a <= 0.0 && b <= 0.0 {
+        let d = self.dim as f32;
+        // decision_error(zn) = a·t² + b·t with t = √‖z‖² — the weight
+        // terms grouped with the query terms by power of t.
+        let a = self.eps_m * d
+            + self.m_abs_sum * self.eps_z_rel * (2.0 + self.eps_z_rel);
+        let b = self.eps_v * d.sqrt() + self.v_abs_sum * self.eps_z_rel;
+        let t = if a <= 0.0 && b <= 0.0 {
             return f32::INFINITY;
         } else if a <= 0.0 {
             tol / b
         } else {
             (-b + (b * b + 4.0 * a * tol).sqrt()) / (2.0 * a)
         };
-        s * s / self.dim.max(1) as f32
+        t * t
     }
 }
 
 /// Dequantization error metadata of a quantized *exact* (RBF) model:
-/// `|Δcoef_i| ≤ eps_coef`, per-element SV error ≤ `eps_sv`.
+/// `|Δcoef_i| ≤ eps_coef`, per-element SV error ≤ `eps_sv`, and (int8
+/// payloads only) the relative per-element error `eps_z_rel` of the
+/// i16-quantized query the integer kernels evaluate against.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ExactQuantErr {
     pub n_sv: usize,
@@ -97,19 +124,27 @@ pub struct ExactQuantErr {
     pub coef_abs_sum: f32,
     pub eps_coef: f32,
     pub eps_sv: f32,
+    /// Relative per-element query quantization error (0 when the query
+    /// is evaluated in f32; `quantblas::Z16_REL_EPS` on int8).
+    pub eps_z_rel: f32,
 }
 
 impl ExactQuantErr {
-    /// Absolute decision-error bound of the quantized exact RBF model,
-    /// independent of the instance: with `K ∈ (0, 1]` and the RBF
-    /// kernel globally `√(2γ/e)`-Lipschitz in its SV argument,
+    /// Absolute decision-error bound of the quantized exact RBF model's
+    /// *weight* perturbation, independent of the instance: with
+    /// `K ∈ (0, 1]` and the RBF kernel globally `√(2γ/e)`-Lipschitz in
+    /// its SV argument,
     ///
     /// ```text
     /// |Δf(z)| ≤ n_SV·eps_coef
     ///         + (Σ|coef_i| + n_SV·eps_coef)·√(2γ/e)·√d·eps_sv
     /// ```
     ///
-    /// Returns ∞ for non-RBF kernels (no bound reported).
+    /// Returns ∞ for non-RBF kernels (no bound reported). For int8
+    /// payloads the served bound also carries a query-quantization
+    /// term that grows with ‖z‖ — use
+    /// [`ExactQuantErr::decision_error_at`]; this z-independent form is
+    /// what the CLI summarizes.
     pub fn decision_error(&self) -> f32 {
         if !self.gamma.is_finite() || self.gamma < 0.0 {
             return f32::INFINITY;
@@ -121,6 +156,27 @@ impl ExactQuantErr {
             * (self.dim as f32).sqrt()
             * self.eps_sv;
         (n * self.eps_coef + sv_term) * QUANT_EVAL_SLACK + QUANT_EVAL_FLOOR
+    }
+
+    /// Full decision-error bound for an instance with squared norm
+    /// `zn_sq`: [`ExactQuantErr::decision_error`] plus the
+    /// query-quantization term — the same Lipschitz argument applied
+    /// to `‖Δz‖₂ ≤ √d·eps_z_rel·‖z‖₂` (the int8 kernels evaluate
+    /// `K(x̂, ẑ)` with the quantized query's own norm, so the
+    /// perturbation really is a shift of the kernel's z argument).
+    pub fn decision_error_at(&self, zn_sq: f32) -> f32 {
+        let base = self.decision_error();
+        if !base.is_finite() || self.eps_z_rel <= 0.0 {
+            return base;
+        }
+        let n = self.n_sv as f32;
+        let lipschitz = (2.0 * self.gamma / std::f32::consts::E).sqrt();
+        let z_term = (self.coef_abs_sum + n * self.eps_coef)
+            * lipschitz
+            * (self.dim as f32).sqrt()
+            * self.eps_z_rel
+            * zn_sq.max(0.0).sqrt();
+        base + z_term * QUANT_EVAL_SLACK
     }
 }
 
@@ -282,28 +338,55 @@ mod tests {
         assert!(gamma_max_for_data(&ds).is_infinite());
     }
 
+    /// A weight-only bound (f16-style: query stays f32).
+    fn weight_only(dim: usize, eps_v: f32, eps_m: f32) -> QuantErrorBound {
+        QuantErrorBound {
+            dim,
+            eps_v,
+            eps_m,
+            eps_z_rel: 0.0,
+            v_abs_sum: 0.0,
+            m_abs_sum: 0.0,
+        }
+    }
+
     #[test]
     fn quant_drift_budget_inverts_decision_error() {
-        let q = QuantErrorBound { dim: 8, eps_v: 4e-3, eps_m: 1.5e-3 };
-        for tol in [0.01f32, 0.05, 0.25, 1.0] {
-            let zn = q.drift_budget(tol);
-            assert!(zn.is_finite() && zn > 0.0, "tol={tol}: zn={zn}");
-            // At the budget, the error sits on the tolerance (within
-            // float slop); just inside it stays below.
-            let err = q.decision_error(zn);
-            assert!((err - tol).abs() < 1e-3 * tol.max(1.0), "{err} vs {tol}");
-            assert!(q.decision_error(zn * 0.99) < tol);
+        let with_query = QuantErrorBound {
+            eps_z_rel: 1.6e-5,
+            v_abs_sum: 3.0,
+            m_abs_sum: 12.0,
+            ..weight_only(8, 4e-3, 1.5e-3)
+        };
+        for q in [weight_only(8, 4e-3, 1.5e-3), with_query] {
+            for tol in [0.01f32, 0.05, 0.25, 1.0] {
+                let zn = q.drift_budget(tol);
+                assert!(zn.is_finite() && zn > 0.0, "tol={tol}: zn={zn}");
+                // At the budget, the error sits on the tolerance
+                // (within float slop); just inside it stays below.
+                let err = q.decision_error(zn);
+                assert!(
+                    (err - tol).abs() < 1e-3 * tol.max(1.0),
+                    "{err} vs {tol}"
+                );
+                assert!(q.decision_error(zn * 0.99) < tol);
+            }
+            // Monotone in the tolerance.
+            assert!(q.drift_budget(0.01) < q.drift_budget(0.25));
         }
-        // Monotone in the tolerance.
-        assert!(q.drift_budget(0.01) < q.drift_budget(0.25));
+        // Query terms only tighten the budget.
+        assert!(
+            with_query.drift_budget(0.25)
+                <= weight_only(8, 4e-3, 1.5e-3).drift_budget(0.25)
+        );
     }
 
     #[test]
     fn quant_drift_budget_degenerate_cases() {
-        let none = QuantErrorBound { dim: 4, eps_v: 0.0, eps_m: 0.0 };
+        let none = weight_only(4, 0.0, 0.0);
         assert!(none.drift_budget(0.1).is_infinite());
         assert_eq!(none.decision_error(10.0), 1e-6);
-        let v_only = QuantErrorBound { dim: 4, eps_v: 1e-3, eps_m: 0.0 };
+        let v_only = weight_only(4, 1e-3, 0.0);
         let zn = v_only.drift_budget(0.1);
         assert!(zn.is_finite());
         assert!(v_only.decision_error(zn) <= 0.1 + 1e-5);
@@ -311,6 +394,17 @@ mod tests {
         // infinite tolerance never constrains.
         assert_eq!(v_only.drift_budget(0.0), 0.0);
         assert!(v_only.drift_budget(f32::INFINITY).is_infinite());
+        // A pure query-side bound (exactly stored weights) still
+        // inverts through the linear term.
+        let z_only = QuantErrorBound {
+            eps_z_rel: 1.6e-5,
+            v_abs_sum: 2.0,
+            m_abs_sum: 0.0,
+            ..weight_only(4, 0.0, 0.0)
+        };
+        let zn = z_only.drift_budget(0.1);
+        assert!(zn.is_finite());
+        assert!(z_only.decision_error(zn) <= 0.1 + 1e-5);
     }
 
     #[test]
@@ -322,12 +416,22 @@ mod tests {
             coef_abs_sum: 5.0,
             eps_coef: 1e-3,
             eps_sv: 2e-3,
+            eps_z_rel: 0.0,
         };
         let bound = e.decision_error();
         // n·eps_coef = 0.01; sv term = (5 + 0.01)·√(1/e)·2·2e-3 ≈ 0.0122.
         assert!(bound > 0.02 && bound < 0.03, "{bound}");
-        // Non-RBF → no bound.
+        // Without a quantized query the z-aware bound degenerates.
+        assert_eq!(e.decision_error_at(100.0), bound);
+        // With one it grows with ‖z‖, slowly (i16 query).
+        let q = ExactQuantErr { eps_z_rel: 1.6e-5, ..e };
+        let at_zero = q.decision_error_at(0.0);
+        let at_ten = q.decision_error_at(100.0);
+        assert!(at_zero >= bound && at_ten > at_zero, "{at_zero} {at_ten}");
+        assert!(at_ten < bound * 1.2, "query term should be marginal");
+        // Non-RBF → no bound, also through the z-aware form.
         let lin = ExactQuantErr { gamma: f32::NAN, ..e };
         assert!(lin.decision_error().is_infinite());
+        assert!(lin.decision_error_at(4.0).is_infinite());
     }
 }

@@ -86,8 +86,19 @@
 //! })?;
 //! ```
 //!
+//! Quantized storage is evaluated by the blocked/SIMD kernels in
+//! [`linalg::quantblas`] (runtime dispatch:
+//! `APPROXRBF_QUANT_KERNEL=scalar|blocked|simd`, default best
+//! available). int8 payloads run exact-integer i8×i16 kernels against
+//! a query quantized once per row, so int8 decisions are
+//! *bit-identical across dispatch arms*; f16 payloads block-dequantize
+//! into FMA loops and agree within the advertised bound. The CI
+//! `bench-smoke` job gates the int8 blocked/simd arms against the
+//! scalar arm on every run (`BENCH_quant.json` kernel-arm sweep).
+//!
 //! Bound-accounting caveat: the known per-element dequantization error
-//! is folded into that tenant's Eq. 3.11 routing budget
+//! — including the marginal i16 query-quantization term of the int8
+//! kernels — is folded into that tenant's Eq. 3.11 routing budget
 //! ([`approx::bounds::QuantErrorBound`], tolerance knob
 //! [`coordinator::CoordinatorBuilder::quant_drift_tol`]), so Hybrid
 //! routing escorts instances whose quantization drift bound exceeds

@@ -11,15 +11,20 @@
 //!   a vendor library (fused, compiler-optimized).
 //!
 //! The SIMD axis maps to the scalar vs chunked dot/quadratic-form
-//! evaluators in [`vecops`] / [`quadform`].
+//! evaluators in [`vecops`] / [`quadform`]. Quantized (f16/int8)
+//! storage is evaluated by the blocked/SIMD kernels in [`quantblas`],
+//! behind their own [`KernelArm`] dispatch
+//! (`APPROXRBF_QUANT_KERNEL=scalar|blocked|simd`).
 
 pub mod gemm;
 pub mod matrix;
 pub mod quadform;
+pub mod quantblas;
 pub mod syrk;
 pub mod vecops;
 
 pub use matrix::Mat;
+pub use quantblas::KernelArm;
 
 /// Math backend selector mirrored on the paper's LOOPS/BLAS/ATLAS axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -1,0 +1,922 @@
+//! Blocked/SIMD evaluation kernels for quantized model storage.
+//!
+//! The paper's promise is prediction cost quadratic in the input
+//! dimension; PR 4's f16/int8 `.arbf` payloads shrank resident models
+//! 4–8× but evaluated them with scalar per-element loops, so quantized
+//! tenants *lost* throughput to f32 (`BENCH_quant.json`). This module
+//! closes that gap with cache-friendly kernels over the three hot
+//! shapes — SV-matrix × z (exact path), packed-upper symmetric
+//! quadratic form (approx path), and `v·z` (approx path) — behind a
+//! runtime [`KernelArm`] dispatch:
+//!
+//! * [`KernelArm::Scalar`] — the PR-4 per-element loops, kept as the
+//!   dispatch baseline and the property-test oracle;
+//! * [`KernelArm::Blocked`] — portable unrolled 8-lane blocks that
+//!   LLVM autovectorizes (always available);
+//! * [`KernelArm::Simd`] — explicit `std::arch` x86-64 paths (AVX2
+//!   integer `madd` for int8, F16C convert + FMA for f16), selected
+//!   only when `is_x86_feature_detected!` proves support.
+//!
+//! The arm is chosen once per process: `APPROXRBF_QUANT_KERNEL=
+//! scalar|blocked|simd` pins it for A/B testing, otherwise the best
+//! available arm wins. Every kernel also takes the arm explicitly so
+//! tests and benches can compare arms side by side in one process.
+//!
+//! ## int8: exact integer accumulation, bit-identical across arms
+//!
+//! int8 weights are dotted against a query quantized once per row to
+//! **i16** ([`QuantZ`], scale `max|z|/32767`): every product
+//! `i8 × i16` and the whole accumulation happen in exact integer
+//! arithmetic (i32 lanes flushed to i64 well before overflow), and the
+//! two per-output scales are applied in one canonical float sequence.
+//! Integer addition is associative, so *every arm returns bit-identical
+//! decisions no matter how it blocks or vectorizes the sum* — asserted
+//! by the property tests here and relied on by the serving plane's
+//! shard/arm invariance tests. The query-side quantization error is
+//! tiny (relative [`Z16_REL_EPS`] ≈ 1.5e-5 per element, ~2⁸ below the
+//! int8 weight error) and is folded into the advertised decision
+//! bounds ([`crate::approx::bounds::QuantErrorBound::eps_z_rel`]).
+//!
+//! ## f16: block-dequantize then FMA, bound-level agreement
+//!
+//! f16 weights are expanded to f32 in registers/blocks and multiplied
+//! against the f32 query. Float summation order differs between arms,
+//! so f16 arms agree only to reordering error (~2⁻²⁴ relative) — far
+//! inside the advertised f16 dequantization bound, which is what the
+//! tests pin.
+//!
+//! The scalar f16 codec (`f32 ↔ binary16` bit transforms) lives here
+//! too: it is a pure value transform the storage layer
+//! ([`crate::registry::quant`]) re-exports.
+
+use std::sync::OnceLock;
+
+use crate::{log_info, log_warn};
+use crate::{Error, Result};
+
+// ---------------------------------------------------------------------
+// f16 scalar codec (moved from registry::quant; re-exported there)
+// ---------------------------------------------------------------------
+
+/// Largest finite f16 magnitude; values beyond it are rejected on
+/// quantize (saturating would break the advertised error bound).
+pub const F16_MAX: f32 = 65504.0;
+/// Relative half-ulp bound for normal-range f16 values: 2⁻¹¹.
+pub const F16_REL_EPS: f32 = 4.8828125e-4;
+/// Absolute rounding floor in the f16 subnormal range: 2⁻²⁵.
+pub const F16_SUBNORMAL_EPS: f32 = 2.9802322e-8;
+
+/// f32 → f16 bits, IEEE round-to-nearest-even. The input must be
+/// finite with `|x| ≤` [`F16_MAX`] — quantize callers enforce that;
+/// out-of-range values here produce ±inf bits, which the decoder
+/// rejects as corrupt.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf/NaN (callers reject beforehand; keep the bits meaningful).
+        return sign | 0x7c00 | u16::from(mant != 0) << 9;
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e >= -14 {
+        // Normal f16: keep 10 mantissa bits, round to nearest even.
+        let kept = mant >> 13;
+        let rest = mant & 0x1fff;
+        let mut h = ((((e + 15) as u32) << 10) | kept) as u16;
+        if rest > 0x1000 || (rest == 0x1000 && (kept & 1) == 1) {
+            h += 1; // may carry into the exponent — correct rounding
+        }
+        return sign | h;
+    }
+    if e >= -25 {
+        // Subnormal f16: value = q × 2⁻²⁴.
+        let full = mant | 0x0080_0000; // implicit leading 1, 24 bits
+        let shift = (13 + (-14 - e)) as u32;
+        let mut q = (full >> shift) as u16;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rest > half || (rest == half && (q & 1) == 1) {
+            q += 1; // may round up to the smallest normal — correct
+        }
+        return sign | q;
+    }
+    sign // underflow to (signed) zero
+}
+
+/// f16 bits → f32 (exact: every f16 value is representable in f32).
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign_bit = (u32::from(h) & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = u32::from(h) & 0x3ff;
+    match exp {
+        0 => {
+            // ±0 and subnormals: value = mant × 2⁻²⁴ (exact in f32).
+            let unit = f32::from_bits(0x3380_0000); // 2⁻²⁴
+            let v = (mant as f32) * unit;
+            if sign_bit != 0 {
+                -v
+            } else {
+                v
+            }
+        }
+        0x1f => {
+            if mant == 0 {
+                f32::from_bits(sign_bit | 0x7f80_0000) // ±inf
+            } else {
+                f32::NAN
+            }
+        }
+        e => f32::from_bits(
+            sign_bit | ((u32::from(e) + 112) << 23) | (mant << 13),
+        ),
+    }
+}
+
+/// Per-element error bound of an f16 round trip, computed from the
+/// *dequantized* value `x̂`: the original satisfied
+/// `|x − x̂| ≤ |x̂|·2⁻¹¹ + 2⁻²⁵` (half-ulp in the normal range, the
+/// additive term covering the subnormal range).
+#[inline]
+pub fn f16_eps(dequantized: f32) -> f32 {
+    dequantized.abs() * F16_REL_EPS + F16_SUBNORMAL_EPS
+}
+
+// ---------------------------------------------------------------------
+// kernel arm selection
+// ---------------------------------------------------------------------
+
+/// One implementation of the quantized evaluation kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelArm {
+    /// Per-element loops (the PR-4 evaluators): serial i64 accumulation
+    /// on int8, serial convert-multiply-add on f16. Dispatch baseline
+    /// and property-test oracle.
+    Scalar,
+    /// Portable unrolled blocks: 8 independent accumulator lanes (i32
+    /// with i64 flushes on int8), autovectorized by LLVM. Always
+    /// available.
+    Blocked,
+    /// Explicit x86-64 `std::arch` kernels (AVX2 `madd_epi16` int8
+    /// path, F16C+FMA f16 path). Requires [`simd_available`].
+    Simd,
+}
+
+impl KernelArm {
+    /// Canonical name; [`std::fmt::Display`] delegates here.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelArm::Scalar => "scalar",
+            KernelArm::Blocked => "blocked",
+            KernelArm::Simd => "simd",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelArm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelArm {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<KernelArm> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelArm::Scalar),
+            "blocked" => Ok(KernelArm::Blocked),
+            "simd" => Ok(KernelArm::Simd),
+            other => Err(Error::InvalidArg(format!(
+                "unknown kernel arm '{other}' (scalar|blocked|simd)"
+            ))),
+        }
+    }
+}
+
+/// True when the explicit SIMD arm can run on this machine (x86-64
+/// with AVX2 + FMA + F16C — one gate for both payload kinds; every
+/// AVX2-era core has all three).
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+            && is_x86_feature_detected!("f16c")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The arms this machine can execute, in dispatch-preference order.
+pub fn available_arms() -> Vec<KernelArm> {
+    let mut arms = vec![KernelArm::Scalar, KernelArm::Blocked];
+    if simd_available() {
+        arms.push(KernelArm::Simd);
+    }
+    arms
+}
+
+fn best_arm() -> KernelArm {
+    if simd_available() {
+        KernelArm::Simd
+    } else {
+        KernelArm::Blocked
+    }
+}
+
+/// The process-wide kernel arm, chosen once on first use: the
+/// `APPROXRBF_QUANT_KERNEL` environment override (`scalar|blocked|
+/// simd`, logged; `simd` falls back to `blocked` when unavailable),
+/// else the best available arm. int8 decisions are bit-identical
+/// across arms, so the choice is a pure throughput knob.
+pub fn active_arm() -> KernelArm {
+    static ARM: OnceLock<KernelArm> = OnceLock::new();
+    *ARM.get_or_init(|| match std::env::var("APPROXRBF_QUANT_KERNEL") {
+        Ok(s) => match s.parse::<KernelArm>() {
+            Ok(KernelArm::Simd) if !simd_available() => {
+                log_warn!(
+                    "quantblas: APPROXRBF_QUANT_KERNEL=simd but this CPU \
+                     lacks AVX2/FMA/F16C; using blocked"
+                );
+                KernelArm::Blocked
+            }
+            Ok(arm) => {
+                log_info!(
+                    "quantblas: APPROXRBF_QUANT_KERNEL pins the '{arm}' \
+                     kernel arm"
+                );
+                arm
+            }
+            Err(e) => {
+                log_warn!("quantblas: {e}; using the default arm");
+                best_arm()
+            }
+        },
+        Err(_) => best_arm(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// query-side i16 quantization
+// ---------------------------------------------------------------------
+
+/// Relative per-element bound of the i16 query quantization:
+/// `|Δz_i| ≤ 0.5001·scale ≤ Z16_REL_EPS·max|z| ≤ Z16_REL_EPS·‖z‖₂`
+/// (half a step plus dequant float rounding, as in the int8 row
+/// codec). ≈ 1.53e-5 — about 2⁸ below the int8 *weight* bound, so the
+/// query term it adds to the advertised decision bounds is marginal.
+pub const Z16_REL_EPS: f32 = 0.5001 / 32767.0;
+
+/// A query row quantized once to i16 for the integer int8 kernels:
+/// `ẑ_i = scale · q_i`, `scale = max|z|/32767`.
+///
+/// All-zero rows get `scale = 0` (exact zeros); a subnormal `max/32767`
+/// falls back to `scale = max` (resolution collapses but the
+/// [`Z16_REL_EPS`]-implied absolute bound still holds, and such rows
+/// are ~1e-34 — far below every decision bound's floor). Non-finite
+/// queries mark the row poisoned ([`QuantZ::finite`] false) and every
+/// kernel returns NaN, matching the f32 evaluators.
+#[derive(Clone, Debug)]
+pub struct QuantZ {
+    /// Dequantization scale (0 for all-zero rows, NaN when poisoned).
+    pub scale: f32,
+    /// i16 codes, one per input element.
+    pub q: Vec<i16>,
+    /// `‖ẑ‖²` of the quantized row (exact integer sum of squares,
+    /// scaled back) — the norm the exact-path RBF kernel uses so its
+    /// distance is exactly `‖x̂ − ẑ‖²`. NaN when poisoned.
+    pub norm_sq: f32,
+    /// False iff the input contained a non-finite value.
+    pub finite: bool,
+}
+
+impl QuantZ {
+    pub fn from_f32(z: &[f32]) -> QuantZ {
+        let mut max = 0.0f32;
+        let mut all_finite = true;
+        for &x in z {
+            // Explicit finiteness check: f32::max ignores NaN, so a
+            // NaN element would otherwise slip through the max scan.
+            all_finite &= x.is_finite();
+            max = max.max(x.abs());
+        }
+        if !all_finite || !max.is_finite() {
+            return QuantZ {
+                scale: f32::NAN,
+                q: vec![0; z.len()],
+                norm_sq: f32::NAN,
+                finite: false,
+            };
+        }
+        if max == 0.0 {
+            return QuantZ {
+                scale: 0.0,
+                q: vec![0; z.len()],
+                norm_sq: 0.0,
+                finite: true,
+            };
+        }
+        let mut scale = max / 32767.0;
+        if scale < f32::MIN_POSITIVE {
+            scale = max; // subnormal scale: q collapses to {-1, 0, 1}
+        }
+        let q: Vec<i16> = z
+            .iter()
+            .map(|&x| (x / scale).round().clamp(-32767.0, 32767.0) as i16)
+            .collect();
+        let sum_sq: i64 = q.iter().map(|&qi| i64::from(qi).pow(2)).sum();
+        // Canonical scale application order (shared with the kernels):
+        // widen the exact integer, then one scale at a time.
+        let norm_sq = ((sum_sq as f32) * scale) * scale;
+        QuantZ { scale, q, norm_sq, finite: true }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// int8 integer kernels (exact i64 sums — identical across arms)
+// ---------------------------------------------------------------------
+
+/// `Σ w_i · qz_i` in exact integer arithmetic. Every arm returns the
+/// same i64, so the float results built from it are bit-identical.
+fn dot_i8i16(arm: KernelArm, w: &[i8], qz: &[i16]) -> i64 {
+    debug_assert_eq!(w.len(), qz.len());
+    match arm {
+        KernelArm::Scalar => dot_i8i16_scalar(w, qz),
+        KernelArm::Blocked => dot_i8i16_blocked(w, qz),
+        KernelArm::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            if simd_available() {
+                // SAFETY: gated on runtime AVX2 detection.
+                return unsafe { x86::dot_i8i16_avx2(w, qz) };
+            }
+            dot_i8i16_blocked(w, qz)
+        }
+    }
+}
+
+/// The PR-4 oracle: one serial i64 accumulator.
+fn dot_i8i16_scalar(w: &[i8], qz: &[i16]) -> i64 {
+    let mut total = 0i64;
+    for i in 0..w.len() {
+        total += i64::from(w[i]) * i64::from(qz[i]);
+    }
+    total
+}
+
+/// Portable blocked arm: 8 independent i32 lanes (products are ≤
+/// 127·32767 ≈ 4.2e6, so 256 per lane stay < 2³¹), flushed to an i64
+/// total before they can overflow. LLVM autovectorizes the lane loop.
+fn dot_i8i16_blocked(w: &[i8], qz: &[i16]) -> i64 {
+    const LANES: usize = 8;
+    const FLUSH_ITERS: usize = 256;
+    let mut total = 0i64;
+    let mut lanes = [0i32; LANES];
+    let chunks = w.len() / LANES;
+    let mut since_flush = 0usize;
+    for c in 0..chunks {
+        let wc = &w[c * LANES..c * LANES + LANES];
+        let zc = &qz[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            lanes[l] += i32::from(wc[l]) * i32::from(zc[l]);
+        }
+        since_flush += 1;
+        if since_flush == FLUSH_ITERS {
+            for lane in &mut lanes {
+                total += i64::from(*lane);
+                *lane = 0;
+            }
+            since_flush = 0;
+        }
+    }
+    for lane in lanes {
+        total += i64::from(lane);
+    }
+    for i in chunks * LANES..w.len() {
+        total += i64::from(w[i]) * i64::from(qz[i]);
+    }
+    total
+}
+
+/// Canonical scale application shared by every arm: widen the exact
+/// integer once, then apply the row scale, then the query scale. One
+/// fixed float sequence ⇒ int8 bit-identity reduces to i64 equality.
+#[inline]
+fn finish_i8_dot(total: i64, row_scale: f32, z_scale: f32) -> f32 {
+    ((total as f32) * row_scale) * z_scale
+}
+
+/// Dequantized dot of one int8 row with a pre-quantized query:
+/// `row_scale · ẑᵀq`. NaN when the query is poisoned.
+pub fn dot_i8(arm: KernelArm, w: &[i8], row_scale: f32, z: &QuantZ) -> f32 {
+    if !z.finite {
+        return f32::NAN;
+    }
+    finish_i8_dot(dot_i8i16(arm, w, &z.q), row_scale, z.scale)
+}
+
+/// GEMV over contiguous int8 rows (`rows × cols`, per-row scales):
+/// `out[r] = scales[r]·(row_r·ẑ)` — the SV-matrix × z shape. The exact
+/// predictor fuses this row loop with its per-row kernel evaluation
+/// (`registry::quant::QuantSvmModel::decision_with_norms`) to avoid a
+/// scratch vector per query; this standalone form serves callers that
+/// want the raw cross terms, and the dispatch-parity tests.
+pub fn gemv_i8(
+    arm: KernelArm,
+    w: &[i8],
+    scales: &[f32],
+    cols: usize,
+    z: &QuantZ,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(w.len(), scales.len() * cols);
+    debug_assert_eq!(z.len(), cols);
+    out.clear();
+    for (r, &s) in scales.iter().enumerate() {
+        out.push(dot_i8(arm, &w[r * cols..(r + 1) * cols], s, z));
+    }
+}
+
+/// Quadratic form `ẑᵀM̂ẑ` over an int8 packed upper triangle (packed
+/// row `r` holds `M[r][r..d]`, per-packed-row scales):
+/// `Σ_r s_r·ẑ_r·(M_rr·ẑ_r + 2·Σ_{c>r} M_rc·ẑ_c)`. Each row's inner
+/// sum is exact integer work dispatched per arm; the per-row float
+/// combine is one fixed serial sequence, so int8 bit-identity holds
+/// across arms here too.
+pub fn quadform_i8(
+    arm: KernelArm,
+    scales: &[f32],
+    packed: &[i8],
+    d: usize,
+    z: &QuantZ,
+) -> f32 {
+    debug_assert_eq!(z.len(), d);
+    debug_assert_eq!(scales.len(), d);
+    if !z.finite {
+        return f32::NAN;
+    }
+    let mut acc = 0.0f32;
+    let mut off = 0usize;
+    for r in 0..d {
+        let len = d - r;
+        let row = &packed[off..off + len];
+        let qz_r = i64::from(z.q[r]);
+        let diag = i64::from(row[0]) * qz_r;
+        let tail = dot_i8i16(arm, &row[1..], &z.q[r + 1..]);
+        // |u| ≤ 32767·4.2e6·(2d+1): exact in i64 up to d ~ 10⁷.
+        let u = qz_r * (diag + 2 * tail);
+        acc += (u as f32) * scales[r];
+        off += len;
+    }
+    (acc * z.scale) * z.scale
+}
+
+// ---------------------------------------------------------------------
+// f16 kernels (block-dequantize then multiply-accumulate)
+// ---------------------------------------------------------------------
+
+/// Dequantized dot of an f16 row with an f32 query. Arms agree to
+/// float-reordering error (~2⁻²⁴ relative), far inside the advertised
+/// f16 bound.
+pub fn dot_f16(arm: KernelArm, h: &[u16], z: &[f32]) -> f32 {
+    debug_assert_eq!(h.len(), z.len());
+    match arm {
+        KernelArm::Scalar => dot_f16_scalar(h, z),
+        KernelArm::Blocked => dot_f16_blocked(h, z),
+        KernelArm::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            if simd_available() {
+                // SAFETY: gated on runtime AVX2+FMA+F16C detection.
+                return unsafe { x86::dot_f16_avx2(h, z) };
+            }
+            dot_f16_blocked(h, z)
+        }
+    }
+}
+
+/// The PR-4 oracle: serial convert-multiply-add.
+fn dot_f16_scalar(h: &[u16], z: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for i in 0..h.len() {
+        acc += f16_bits_to_f32(h[i]) * z[i];
+    }
+    acc
+}
+
+/// Portable blocked arm: dequantize 8-element blocks into a register
+/// buffer, accumulate in 8 independent lanes.
+fn dot_f16_blocked(h: &[u16], z: &[f32]) -> f32 {
+    const LANES: usize = 8;
+    let mut lanes = [0.0f32; LANES];
+    let mut buf = [0.0f32; LANES];
+    let chunks = h.len() / LANES;
+    for c in 0..chunks {
+        let hc = &h[c * LANES..c * LANES + LANES];
+        let zc = &z[c * LANES..c * LANES + LANES];
+        for l in 0..LANES {
+            buf[l] = f16_bits_to_f32(hc[l]);
+        }
+        for l in 0..LANES {
+            lanes[l] += buf[l] * zc[l];
+        }
+    }
+    let mut total = lanes.iter().sum::<f32>();
+    for i in chunks * LANES..h.len() {
+        total += f16_bits_to_f32(h[i]) * z[i];
+    }
+    total
+}
+
+/// GEMV over contiguous f16 rows (see [`gemv_i8`] on why the exact
+/// predictor fuses this loop instead of calling it).
+pub fn gemv_f16(
+    arm: KernelArm,
+    h: &[u16],
+    cols: usize,
+    z: &[f32],
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(h.len() % cols.max(1), 0);
+    out.clear();
+    let rows = if cols == 0 { 0 } else { h.len() / cols };
+    for r in 0..rows {
+        out.push(dot_f16(arm, &h[r * cols..(r + 1) * cols], z));
+    }
+}
+
+/// Quadratic form `zᵀM̂z` over an f16 packed upper triangle.
+pub fn quadform_f16(arm: KernelArm, packed: &[u16], d: usize, z: &[f32]) -> f32 {
+    debug_assert_eq!(z.len(), d);
+    let mut acc = 0.0f32;
+    let mut off = 0usize;
+    for r in 0..d {
+        let len = d - r;
+        let row = &packed[off..off + len];
+        let diag = f16_bits_to_f32(row[0]) * z[r];
+        let tail = dot_f16(arm, &row[1..], &z[r + 1..]);
+        acc += z[r] * (diag + 2.0 * tail);
+        off += len;
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// explicit x86-64 SIMD arm
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Exact integer dot: 16 i8 weights widen to i16, `madd_epi16`
+    /// pairs them against 16 i16 query codes into 8 i32 lanes (each
+    /// pair ≤ 2·127·32767 ≈ 8.3e6), lanes flush to i64 every 128
+    /// chunks (≤ 1.07e9 < 2³¹). Same i64 as the scalar oracle.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers gate on [`super::simd_available`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8i16_avx2(w: &[i8], qz: &[i16]) -> i64 {
+        const CHUNK: usize = 16;
+        const FLUSH_CHUNKS: usize = 128;
+        let chunks = w.len() / CHUNK;
+        let mut acc32 = _mm256_setzero_si256();
+        let mut acc64 = _mm256_setzero_si256();
+        let mut pending = 0usize;
+        for c in 0..chunks {
+            let wp = w.as_ptr().add(c * CHUNK) as *const __m128i;
+            let zp = qz.as_ptr().add(c * CHUNK) as *const __m256i;
+            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp));
+            let zv = _mm256_loadu_si256(zp);
+            acc32 = _mm256_add_epi32(acc32, _mm256_madd_epi16(wv, zv));
+            pending += 1;
+            if pending == FLUSH_CHUNKS {
+                acc64 = _mm256_add_epi64(acc64, widen_i32x8(acc32));
+                acc32 = _mm256_setzero_si256();
+                pending = 0;
+            }
+        }
+        acc64 = _mm256_add_epi64(acc64, widen_i32x8(acc32));
+        let mut lanes = [0i64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc64);
+        let mut total: i64 = lanes.iter().sum();
+        for i in chunks * CHUNK..w.len() {
+            total += i64::from(w[i]) * i64::from(qz[i]);
+        }
+        total
+    }
+
+    /// Sum 8 i32 lanes into 4 i64 lanes (exact sign extension).
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn widen_i32x8(v: __m256i) -> __m256i {
+        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v));
+        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256(v, 1));
+        _mm256_add_epi64(lo, hi)
+    }
+
+    /// f16 dot: F16C converts 8 halves per cycle, FMA accumulates in 8
+    /// f32 lanes.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA + F16C.
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub unsafe fn dot_f16_avx2(h: &[u16], z: &[f32]) -> f32 {
+        const CHUNK: usize = 8;
+        let chunks = h.len() / CHUNK;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let hp = h.as_ptr().add(c * CHUNK) as *const __m128i;
+            let hv = _mm256_cvtph_ps(_mm_loadu_si128(hp));
+            let zv = _mm256_loadu_ps(z.as_ptr().add(c * CHUNK));
+            acc = _mm256_fmadd_ps(hv, zv, acc);
+        }
+        let mut lanes = [0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut total: f32 = lanes.iter().sum();
+        for i in chunks * CHUNK..h.len() {
+            total += super::f16_bits_to_f32(h[i]) * z[i];
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+    use crate::util::Rng;
+
+    /// Lengths straddling every block boundary (8/16-wide chunks, the
+    /// SIMD flush cadence) — tail handling is where blocked kernels rot.
+    const RAGGED: [usize; 16] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 33, 63, 64, 100, 129, 1000];
+
+    fn random_row(rng: &mut Rng, n: usize, mag: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() as f32) * mag).collect()
+    }
+
+    fn quant_i8_row(rng: &mut Rng, n: usize) -> (f32, Vec<i8>) {
+        let row = random_row(rng, n, 0.5);
+        crate::registry::quant::int8_quantize_row(&row).unwrap()
+    }
+
+    #[test]
+    fn arm_parse_display_roundtrip() {
+        for arm in [KernelArm::Scalar, KernelArm::Blocked, KernelArm::Simd] {
+            assert_eq!(arm.to_string().parse::<KernelArm>().unwrap(), arm);
+        }
+        assert!("avx512".parse::<KernelArm>().is_err());
+        // Availability is monotone: scalar and blocked always present,
+        // and the process-wide arm is always an available one (a simd
+        // override falls back to blocked when undetected).
+        let arms = available_arms();
+        assert!(arms.contains(&KernelArm::Scalar));
+        assert!(arms.contains(&KernelArm::Blocked));
+        assert!(arms.contains(&active_arm()));
+    }
+
+    #[test]
+    fn quantz_roundtrip_within_relative_bound() {
+        prop_cases!("quantz bound", 48, |rng| {
+            let n = 1 + rng.below(64);
+            let mag = 10f64.powf(rng.range(-6.0, 4.0)) as f32;
+            let z = random_row(rng, n, mag);
+            let qz = QuantZ::from_f32(&z);
+            assert!(qz.finite);
+            let max = z.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let mut norm = 0.0f32;
+            for (i, &x) in z.iter().enumerate() {
+                let x_hat = qz.scale * f32::from(qz.q[i]);
+                assert!(
+                    (x - x_hat).abs() <= Z16_REL_EPS * max.max(1e-30),
+                    "z[{i}]={x}: dequant {x_hat} (scale {})",
+                    qz.scale
+                );
+                norm += x_hat * x_hat;
+            }
+            // The carried norm is the quantized row's norm.
+            assert!((qz.norm_sq - norm).abs() <= 1e-3 * (1.0 + norm));
+        });
+    }
+
+    #[test]
+    fn quantz_edge_cases() {
+        let zero = QuantZ::from_f32(&[0.0; 5]);
+        assert_eq!(zero.scale, 0.0);
+        assert_eq!(zero.norm_sq, 0.0);
+        assert!(zero.q.iter().all(|&q| q == 0));
+        let poisoned = QuantZ::from_f32(&[1.0, f32::NAN]);
+        assert!(!poisoned.finite);
+        assert!(poisoned.norm_sq.is_nan());
+        let inf = QuantZ::from_f32(&[f32::INFINITY]);
+        assert!(!inf.finite);
+        // Subnormal scale fallback stays finite and bounded.
+        let tiny = f32::from_bits(3);
+        let qz = QuantZ::from_f32(&[tiny, -tiny]);
+        assert!(qz.finite && qz.scale > 0.0);
+        let empty = QuantZ::from_f32(&[]);
+        assert!(empty.is_empty() && empty.finite);
+    }
+
+    #[test]
+    fn property_int8_arms_bit_identical_on_ragged_sizes() {
+        prop_cases!("int8 arms agree", 24, |rng| {
+            for &n in &RAGGED {
+                let (scale, w) = quant_i8_row(rng, n.max(1));
+                let z = random_row(rng, w.len(), 1.0);
+                let qz = QuantZ::from_f32(&z);
+                let oracle = dot_i8(KernelArm::Scalar, &w, scale, &qz);
+                for arm in available_arms() {
+                    let got = dot_i8(arm, &w, scale, &qz);
+                    assert_eq!(
+                        got.to_bits(),
+                        oracle.to_bits(),
+                        "{arm} n={n}: {got} vs oracle {oracle}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_int8_quadform_arms_bit_identical() {
+        prop_cases!("int8 quadform arms agree", 16, |rng| {
+            for &d in &[1usize, 2, 3, 5, 8, 13, 16, 17, 31, 40] {
+                let mut scales = Vec::with_capacity(d);
+                let mut packed = Vec::new();
+                for r in 0..d {
+                    let (s, row) = quant_i8_row(rng, d - r);
+                    scales.push(s);
+                    packed.extend_from_slice(&row);
+                }
+                let z = random_row(rng, d, 1.0);
+                let qz = QuantZ::from_f32(&z);
+                let oracle = quadform_i8(KernelArm::Scalar, &scales, &packed, d, &qz);
+                for arm in available_arms() {
+                    let got = quadform_i8(arm, &scales, &packed, d, &qz);
+                    assert_eq!(got.to_bits(), oracle.to_bits(), "{arm} d={d}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn int8_flush_cadence_is_exact_at_adversarial_length() {
+        // Worst-case magnitudes at lengths past several flush windows:
+        // every product is +127·32767, so any premature i32 overflow
+        // would corrupt the total. 100_000 elements cover many 2048-
+        // element SIMD windows and 2048-element blocked windows.
+        let n = 100_000;
+        let w = vec![127i8; n];
+        let qz = QuantZ {
+            scale: 1.0,
+            q: vec![32767i16; n],
+            norm_sq: 0.0,
+            finite: true,
+        };
+        let want = 127i64 * 32767 * n as i64;
+        for arm in available_arms() {
+            let got = dot_i8(arm, &w, 1.0, &qz);
+            assert_eq!(got, want as f32, "{arm}");
+        }
+        // And with alternating signs (partial cancellation).
+        let mut q2 = vec![32767i16; n];
+        for (i, q) in q2.iter_mut().enumerate() {
+            if i % 2 == 1 {
+                *q = -32767;
+            }
+        }
+        let qz2 = QuantZ { q: q2, ..qz };
+        let oracle = dot_i8(KernelArm::Scalar, &w, 1.0, &qz2);
+        for arm in available_arms() {
+            assert_eq!(dot_i8(arm, &w, 1.0, &qz2).to_bits(), oracle.to_bits(), "{arm}");
+        }
+    }
+
+    #[test]
+    fn int8_matches_f32_reference_within_query_bound() {
+        // The integer path equals the dequantized-weights × dequantized-
+        // query f32 dot up to float rounding of the final scales.
+        prop_cases!("int8 vs f32 reference", 24, |rng| {
+            let n = 1 + rng.below(300);
+            let (scale, w) = quant_i8_row(rng, n);
+            let z = random_row(rng, n, 2.0);
+            let qz = QuantZ::from_f32(&z);
+            let got = dot_i8(KernelArm::Blocked, &w, scale, &qz);
+            let want: f64 = w
+                .iter()
+                .zip(&qz.q)
+                .map(|(&wi, &qi)| {
+                    f64::from(scale) * f64::from(wi) * f64::from(qz.scale) * f64::from(qi)
+                })
+                .sum();
+            assert!(
+                (f64::from(got) - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                "{got} vs {want}"
+            );
+        });
+    }
+
+    #[test]
+    fn property_f16_arms_agree_within_reordering_error() {
+        prop_cases!("f16 arms agree", 24, |rng| {
+            for &n in &RAGGED {
+                let row = random_row(rng, n, 0.5);
+                let h: Vec<u16> =
+                    row.iter().map(|&x| f32_to_f16_bits(x)).collect();
+                let z = random_row(rng, n, 1.0);
+                let oracle = dot_f16(KernelArm::Scalar, &h, &z);
+                for arm in available_arms() {
+                    let got = dot_f16(arm, &h, &z);
+                    assert!(
+                        (got - oracle).abs() <= 1e-4 * (1.0 + oracle.abs()),
+                        "{arm} n={n}: {got} vs {oracle}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_f16_quadform_arms_agree() {
+        prop_cases!("f16 quadform arms agree", 16, |rng| {
+            for &d in &[1usize, 2, 5, 9, 16, 17, 33] {
+                let mut packed = Vec::new();
+                for r in 0..d {
+                    for x in random_row(rng, d - r, 0.5) {
+                        packed.push(f32_to_f16_bits(x));
+                    }
+                }
+                let z = random_row(rng, d, 1.0);
+                let oracle = quadform_f16(KernelArm::Scalar, &packed, d, &z);
+                for arm in available_arms() {
+                    let got = quadform_f16(arm, &packed, d, &z);
+                    assert!(
+                        (got - oracle).abs() <= 1e-4 * (1.0 + oracle.abs()),
+                        "{arm} d={d}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_matches_per_row_dots() {
+        let mut rng = Rng::new(7);
+        let (cols, rows) = (37, 9);
+        let mut w = Vec::new();
+        let mut scales = Vec::new();
+        for _ in 0..rows {
+            let (s, r) = quant_i8_row(&mut rng, cols);
+            scales.push(s);
+            w.extend_from_slice(&r);
+        }
+        let z = random_row(&mut rng, cols, 1.0);
+        let qz = QuantZ::from_f32(&z);
+        let mut h = Vec::new();
+        for &x in random_row(&mut rng, rows * cols, 0.5).iter() {
+            h.push(f32_to_f16_bits(x));
+        }
+        for arm in available_arms() {
+            let mut out = Vec::new();
+            gemv_i8(arm, &w, &scales, cols, &qz, &mut out);
+            assert_eq!(out.len(), rows);
+            for (r, &got) in out.iter().enumerate() {
+                let want = dot_i8(arm, &w[r * cols..(r + 1) * cols], scales[r], &qz);
+                assert_eq!(got.to_bits(), want.to_bits(), "{arm} row {r}");
+            }
+            let mut fout = Vec::new();
+            gemv_f16(arm, &h, cols, &z, &mut fout);
+            assert_eq!(fout.len(), rows);
+        }
+    }
+
+    #[test]
+    fn poisoned_query_yields_nan_everywhere() {
+        let qz = QuantZ::from_f32(&[1.0, f32::NAN, 2.0]);
+        for arm in available_arms() {
+            assert!(dot_i8(arm, &[1, 2, 3], 0.5, &qz).is_nan(), "{arm}");
+            assert!(
+                quadform_i8(arm, &[0.5, 0.5, 0.5], &[1, 2, 3, 4, 5, 6], 3, &qz).is_nan(),
+                "{arm}"
+            );
+        }
+    }
+}

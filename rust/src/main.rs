@@ -355,6 +355,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Render a decision-drift bound for CLI output: finite bounds in
+/// scientific notation, unavailable bounds (∞ — non-RBF kernels, see
+/// `ExactQuantErr::decision_error`) as `n/a` so the output never
+/// prints `inf` and stays machine-parseable.
+fn fmt_bound(bound: f32) -> String {
+    if bound.is_finite() {
+        format!("{bound:.2e}")
+    } else {
+        "n/a".to_string()
+    }
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     if let Some(mp) = args.get("model") {
         let m = SvmModel::load(Path::new(mp))?;
@@ -416,13 +428,13 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 ),
                 binfmt::ModelRecord::QuantSvm(m) => println!(
                     "  exact : kernel={} n_sv={} b={:.4} quant={} \
-                     resident={} B drift≤{:.2e} [{footprint}]",
+                     resident={} B drift≤{} [{footprint}]",
                     m.kernel.name(),
                     m.n_sv(),
                     m.b,
                     m.payload(),
                     m.resident_bytes(),
-                    m.quant_err().decision_error()
+                    fmt_bound(m.quant_err().decision_error())
                 ),
                 binfmt::ModelRecord::QuantApprox(a) => {
                     let err = a.quant_err();
@@ -539,6 +551,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 "d".to_string(),
                 "n_sv".to_string(),
                 "payload".to_string(),
+                "drift".to_string(),
                 "bytes".to_string(),
                 "policy".to_string(),
                 "archived".to_string(),
@@ -548,12 +561,28 @@ fn cmd_registry(args: &Args) -> Result<()> {
             for i in &infos {
                 let archived =
                     archived_counts.get(&i.id).copied().unwrap_or(0);
+                // Exact-side decision-drift bound of quantized entries
+                // (decoding the bundle; `-` for f32, `n/a` when the
+                // kernel is non-RBF and no bound exists, `?` when the
+                // bundle fails to decode).
+                let drift = if i.payload == PayloadKind::F32 {
+                    "-".to_string()
+                } else {
+                    match store.load(&i.id) {
+                        Ok(entry) => entry
+                            .quant_info()
+                            .map(|q| fmt_bound(q.exact_err.decision_error()))
+                            .unwrap_or_else(|| "-".to_string()),
+                        Err(_) => "?".to_string(),
+                    }
+                };
                 rows.push(vec![
                     i.id.clone(),
                     i.generation.to_string(),
                     i.dim.to_string(),
                     i.n_sv.to_string(),
                     i.payload.to_string(),
+                    drift,
                     i.size_bytes.to_string(),
                     if i.has_policy { "yes" } else { "-" }.to_string(),
                     archived.to_string(),

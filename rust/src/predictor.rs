@@ -16,16 +16,22 @@
 //! * [`QuantApproxPredictor`] / [`QuantExactPredictor`] — the same two
 //!   decision functions evaluated directly on **native quantized
 //!   storage** (f16/int8 `.arbf` payloads, see
-//!   [`crate::registry::quant`]): elements are dequantized on the fly,
-//!   so a quantized tenant's resident footprint stays at the quantized
-//!   size. The dequantization error is bounded and folded into the
-//!   Eq. 3.11 routing budget by the serving executor.
+//!   [`crate::registry::quant`]) through the blocked/SIMD kernels in
+//!   [`crate::linalg::quantblas`], so a quantized tenant's resident
+//!   footprint stays at the quantized size without the scalar-loop
+//!   throughput penalty. The kernel arm comes from the process-wide
+//!   dispatch (`APPROXRBF_QUANT_KERNEL`) unless pinned via `with_arm`;
+//!   int8 decisions are bit-identical across arms (exact integer
+//!   accumulation). The dequantization error is bounded and folded
+//!   into the Eq. 3.11 routing budget by the serving executor.
 //!
 //! The serving layer ([`crate::coordinator`]) routes every batch through
 //! this trait, so new backends (sharded, quantized, remote) slot in
 //! behind a stable surface. Callers that want trait objects can: the
 //! trait is object-safe (`&dyn Predictor` works).
 
+use crate::linalg::quantblas;
+use crate::linalg::KernelArm;
 use crate::linalg::Mat;
 use crate::linalg::MathBackend;
 use crate::approx::ApproxModel;
@@ -130,21 +136,38 @@ impl Predictor for ApproxPredictor<'_> {
 }
 
 /// The approximated model evaluated on **native quantized storage**
-/// (f16/int8): `v` and the packed upper triangle of `M` are dequantized
-/// element-wise inside the accumulation loops, so nothing f32-sized is
-/// ever materialized. Row-independent scalar evaluation — decisions are
-/// bit-stable across batch shapes and shard counts.
+/// (f16/int8) through the `linalg::quantblas` kernels: f16 rows
+/// block-dequantize into FMA loops, int8 rows run exact-integer
+/// i8×i16 kernels against a query quantized once per row, so nothing
+/// f32-sized is ever materialized. Row-independent evaluation —
+/// decisions are bit-stable across batch shapes and shard counts, and
+/// (int8) across kernel arms.
 pub struct QuantApproxPredictor<'m> {
     model: &'m QuantApproxModel,
+    arm: KernelArm,
 }
 
 impl<'m> QuantApproxPredictor<'m> {
+    /// Evaluate with the process-wide kernel arm
+    /// (`APPROXRBF_QUANT_KERNEL`, else best available).
     pub fn new(model: &'m QuantApproxModel) -> QuantApproxPredictor<'m> {
-        QuantApproxPredictor { model }
+        Self::with_arm(model, quantblas::active_arm())
+    }
+
+    /// Pin a specific kernel arm (A/B benches, dispatch-parity tests).
+    pub fn with_arm(
+        model: &'m QuantApproxModel,
+        arm: KernelArm,
+    ) -> QuantApproxPredictor<'m> {
+        QuantApproxPredictor { model, arm }
     }
 
     pub fn model(&self) -> &QuantApproxModel {
         self.model
+    }
+
+    pub fn arm(&self) -> KernelArm {
+        self.arm
     }
 }
 
@@ -171,7 +194,7 @@ impl Predictor for QuantApproxPredictor<'_> {
         let mut decisions = Vec::with_capacity(z.rows());
         let mut norms = Vec::with_capacity(z.rows());
         for r in 0..z.rows() {
-            let (dec, zn) = self.model.decision_one(z.row(r));
+            let (dec, zn) = self.model.decision_one_with(self.arm, z.row(r));
             decisions.push(dec);
             norms.push(zn);
         }
@@ -180,18 +203,36 @@ impl Predictor for QuantApproxPredictor<'_> {
 }
 
 /// The exact evaluator on **native quantized storage**: coefficients
-/// and SV rows stay f16/int8 and are dequantized inside the per-SV
-/// kernel loop (precomputed dequantized SV norms, like the f32 blocked
-/// path). Row-independent evaluation, bit-stable across batch shapes.
+/// and SV rows stay f16/int8 and stream through the
+/// `linalg::quantblas` SV-matrix × z kernels (precomputed dequantized
+/// SV norms, like the f32 blocked path; int8 queries quantize once
+/// per row). Row-independent evaluation, bit-stable across batch
+/// shapes and (int8) across kernel arms.
 pub struct QuantExactPredictor<'m> {
     model: &'m QuantSvmModel,
     sv_norms: Vec<f32>,
+    arm: KernelArm,
 }
 
 impl<'m> QuantExactPredictor<'m> {
+    /// Evaluate with the process-wide kernel arm
+    /// (`APPROXRBF_QUANT_KERNEL`, else best available).
     pub fn new(model: &'m QuantSvmModel) -> QuantExactPredictor<'m> {
         let sv_norms = model.sv_row_norms_sq();
-        QuantExactPredictor { model, sv_norms }
+        QuantExactPredictor {
+            model,
+            sv_norms,
+            arm: quantblas::active_arm(),
+        }
+    }
+
+    /// Pin a specific kernel arm (A/B benches, dispatch-parity tests).
+    pub fn with_arm(
+        model: &'m QuantSvmModel,
+        arm: KernelArm,
+    ) -> QuantExactPredictor<'m> {
+        let sv_norms = model.sv_row_norms_sq();
+        QuantExactPredictor { model, sv_norms, arm }
     }
 
     /// Construct with precomputed (dequantized) SV norms — the serving
@@ -207,7 +248,15 @@ impl<'m> QuantExactPredictor<'m> {
                 model.n_sv()
             )));
         }
-        Ok(QuantExactPredictor { model, sv_norms })
+        Ok(QuantExactPredictor {
+            model,
+            sv_norms,
+            arm: quantblas::active_arm(),
+        })
+    }
+
+    pub fn arm(&self) -> KernelArm {
+        self.arm
     }
 }
 
@@ -231,18 +280,13 @@ impl Predictor for QuantExactPredictor<'_> {
                 self.model.dim()
             )));
         }
-        let m = self.model;
         let mut decisions = Vec::with_capacity(z.rows());
         for r in 0..z.rows() {
-            let zr = z.row(r);
-            let zn = crate::linalg::vecops::norm_sq(zr);
-            let mut acc = m.b;
-            for s in 0..m.n_sv() {
-                let cross = m.sv.row_dot(s, zr);
-                acc += m.coef.get(s)
-                    * m.kernel.eval_precomp(self.sv_norms[s], zn, cross);
-            }
-            decisions.push(acc);
+            decisions.push(self.model.decision_with_norms(
+                self.arm,
+                z.row(r),
+                Some(&self.sv_norms),
+            ));
         }
         Ok(PredictOutput { decisions, znorms_sq: None })
     }
@@ -353,10 +397,10 @@ mod tests {
             assert_eq!(eout.decisions.len(), z.rows());
             let norms = aout.znorms_sq.expect("quant approx reports ‖z‖²");
             let a_err = qa.quant_err();
-            let e_bound = qe.quant_err().decision_error();
+            let e_err = qe.quant_err();
             for r in 0..z.rows() {
                 // Batch rows are bit-identical to per-row evaluation
-                // (row-independent scalar path).
+                // (row-independent kernel path).
                 let (one, zn) = qa.decision_one(z.row(r));
                 assert_eq!(aout.decisions[r].to_bits(), one.to_bits());
                 assert_eq!(norms[r].to_bits(), zn.to_bits());
@@ -369,6 +413,7 @@ mod tests {
                     "{kind} approx row {r}"
                 );
                 let want_e = model.decision_one(z.row(r));
+                let e_bound = e_err.decision_error_at(zn);
                 assert!(
                     (eout.decisions[r] - want_e).abs() <= e_bound,
                     "{kind} exact row {r}: |{} - {want_e}| > {e_bound}",
@@ -384,6 +429,60 @@ mod tests {
                     p.predict_batch(&bad),
                     Err(Error::Shape(_))
                 ));
+            }
+        }
+    }
+
+    #[test]
+    fn quant_predictor_arms_bit_identical_int8_bounded_f16() {
+        let (model, am, ds) = trained();
+        let z = ds.x.rows_slice(0, 16);
+        // int8: every dispatch arm returns the scalar oracle's bits
+        // (exact integer accumulation).
+        let qa = QuantApproxModel::quantize(&am, PayloadKind::Int8).unwrap();
+        let qe = QuantSvmModel::quantize(&model, PayloadKind::Int8).unwrap();
+        let ref_a = QuantApproxPredictor::with_arm(&qa, KernelArm::Scalar)
+            .predict_batch(&z)
+            .unwrap();
+        let ref_e = QuantExactPredictor::with_arm(&qe, KernelArm::Scalar)
+            .predict_batch(&z)
+            .unwrap();
+        for arm in quantblas::available_arms() {
+            let ap = QuantApproxPredictor::with_arm(&qa, arm);
+            assert_eq!(ap.arm(), arm);
+            let aout = ap.predict_batch(&z).unwrap();
+            let eout = QuantExactPredictor::with_arm(&qe, arm)
+                .predict_batch(&z)
+                .unwrap();
+            for r in 0..z.rows() {
+                assert_eq!(
+                    aout.decisions[r].to_bits(),
+                    ref_a.decisions[r].to_bits(),
+                    "{arm} approx row {r}"
+                );
+                assert_eq!(
+                    eout.decisions[r].to_bits(),
+                    ref_e.decisions[r].to_bits(),
+                    "{arm} exact row {r}"
+                );
+            }
+        }
+        // f16: arms agree within the advertised bound of the f32 twin
+        // (float reordering differs, so only bound-level agreement).
+        let fa = QuantApproxModel::quantize(&am, PayloadKind::F16).unwrap();
+        let f_err = fa.quant_err();
+        for arm in quantblas::available_arms() {
+            let out = QuantApproxPredictor::with_arm(&fa, arm)
+                .predict_batch(&z)
+                .unwrap();
+            let norms = out.znorms_sq.expect("quant approx reports ‖z‖²");
+            for r in 0..z.rows() {
+                let (want, _) = am.decision_one(z.row(r));
+                assert!(
+                    (out.decisions[r] - want).abs()
+                        <= f_err.decision_error(norms[r]),
+                    "{arm} f16 row {r}"
+                );
             }
         }
     }

@@ -15,13 +15,19 @@
 //!
 //! Quantized tensors stay in **native storage** at serving time
 //! ([`QuantSvmModel`] / [`QuantApproxModel`] inside
-//! [`TenantModels::Quantized`]) and are dequantized element-wise on the
-//! fly by the evaluators — this is what delivers the resident-memory
-//! reduction (int8 ≈ ¼ of f32 for SV payloads, ≈ ⅛ for the packed `M`
-//! upper triangle vs the mirrored f32 matrix) measured by
-//! `serving_bench`'s `BENCH_quant.json` leg. Scalars (`γ`, `b`, `c`,
-//! `‖x_M‖²`, per-row scales) always stay f32: they are O(1)/O(d) bytes
-//! and quantizing them would perturb the bound arithmetic itself.
+//! [`TenantModels::Quantized`]) and are evaluated by the blocked/SIMD
+//! kernels in [`crate::linalg::quantblas`] (arm dispatch via
+//! `APPROXRBF_QUANT_KERNEL`): f16 rows block-dequantize into FMA
+//! loops; int8 rows are dotted against an i16-quantized query in exact
+//! integer arithmetic, which makes int8 decisions bit-identical across
+//! dispatch arms. This native evaluation is what delivers the
+//! resident-memory reduction (int8 ≈ ¼ of f32 for SV payloads, ≈ ⅛
+//! for the packed `M` upper triangle vs the mirrored f32 matrix)
+//! measured by `serving_bench`'s `BENCH_quant.json` leg — and, since
+//! PR 5, without the scalar-loop throughput penalty it used to cost.
+//! Scalars (`γ`, `b`, `c`, `‖x_M‖²`, per-row scales) always stay f32:
+//! they are O(1)/O(d) bytes and quantizing them would perturb the
+//! bound arithmetic itself.
 //!
 //! The byte-level record layouts (kind 4 = f16, kind 5 = int8) live in
 //! [`super::binfmt`]; this module owns the value-level transforms and
@@ -29,9 +35,18 @@
 
 use crate::approx::bounds::{ExactQuantErr, QuantErrorBound};
 use crate::approx::ApproxModel;
+use crate::linalg::quantblas::{self, KernelArm, QuantZ};
 use crate::linalg::{vecops, Mat};
 use crate::svm::{Kernel, SvmModel};
 use crate::{Error, Result};
+
+// The scalar f16 codec moved to `linalg::quantblas` (the kernels
+// convert inline); re-exported here so codec users keep one import
+// path next to the storage types.
+pub use crate::linalg::quantblas::{
+    f16_bits_to_f32, f16_eps, f32_to_f16_bits, F16_MAX, F16_REL_EPS,
+    F16_SUBNORMAL_EPS,
+};
 
 // ---------------------------------------------------------------------
 // payload kinds
@@ -78,98 +93,6 @@ impl std::str::FromStr for PayloadKind {
             ))),
         }
     }
-}
-
-// ---------------------------------------------------------------------
-// f16 scalar codec
-// ---------------------------------------------------------------------
-
-/// Largest finite f16 magnitude; values beyond it are rejected on
-/// quantize (saturating would break the advertised error bound).
-pub const F16_MAX: f32 = 65504.0;
-/// Relative half-ulp bound for normal-range f16 values: 2⁻¹¹.
-pub const F16_REL_EPS: f32 = 4.8828125e-4;
-/// Absolute rounding floor in the f16 subnormal range: 2⁻²⁵.
-pub const F16_SUBNORMAL_EPS: f32 = 2.9802322e-8;
-
-/// f32 → f16 bits, IEEE round-to-nearest-even. The input must be
-/// finite with `|x| ≤` [`F16_MAX`] — [`quantize`](QuantVec) callers
-/// enforce that; out-of-range values here produce ±inf bits, which the
-/// decoder rejects as corrupt.
-pub fn f32_to_f16_bits(x: f32) -> u16 {
-    let bits = x.to_bits();
-    let sign = ((bits >> 16) & 0x8000) as u16;
-    let exp = ((bits >> 23) & 0xff) as i32;
-    let mant = bits & 0x007f_ffff;
-    if exp == 0xff {
-        // Inf/NaN (callers reject beforehand; keep the bits meaningful).
-        return sign | 0x7c00 | u16::from(mant != 0) << 9;
-    }
-    let e = exp - 127;
-    if e > 15 {
-        return sign | 0x7c00; // overflow → inf
-    }
-    if e >= -14 {
-        // Normal f16: keep 10 mantissa bits, round to nearest even.
-        let kept = mant >> 13;
-        let rest = mant & 0x1fff;
-        let mut h = ((((e + 15) as u32) << 10) | kept) as u16;
-        if rest > 0x1000 || (rest == 0x1000 && (kept & 1) == 1) {
-            h += 1; // may carry into the exponent — correct rounding
-        }
-        return sign | h;
-    }
-    if e >= -25 {
-        // Subnormal f16: value = q × 2⁻²⁴.
-        let full = mant | 0x0080_0000; // implicit leading 1, 24 bits
-        let shift = (13 + (-14 - e)) as u32;
-        let mut q = (full >> shift) as u16;
-        let rest = full & ((1u32 << shift) - 1);
-        let half = 1u32 << (shift - 1);
-        if rest > half || (rest == half && (q & 1) == 1) {
-            q += 1; // may round up to the smallest normal — correct
-        }
-        return sign | q;
-    }
-    sign // underflow to (signed) zero
-}
-
-/// f16 bits → f32 (exact: every f16 value is representable in f32).
-pub fn f16_bits_to_f32(h: u16) -> f32 {
-    let sign_bit = (u32::from(h) & 0x8000) << 16;
-    let exp = (h >> 10) & 0x1f;
-    let mant = u32::from(h) & 0x3ff;
-    match exp {
-        0 => {
-            // ±0 and subnormals: value = mant × 2⁻²⁴ (exact in f32).
-            let unit = f32::from_bits(0x3380_0000); // 2⁻²⁴
-            let v = (mant as f32) * unit;
-            if sign_bit != 0 {
-                -v
-            } else {
-                v
-            }
-        }
-        0x1f => {
-            if mant == 0 {
-                f32::from_bits(sign_bit | 0x7f80_0000) // ±inf
-            } else {
-                f32::NAN
-            }
-        }
-        e => f32::from_bits(
-            sign_bit | ((u32::from(e) + 112) << 23) | (mant << 13),
-        ),
-    }
-}
-
-/// Per-element error bound of an f16 round trip, computed from the
-/// *dequantized* value `x̂`: the original satisfied
-/// `|x − x̂| ≤ |x̂|·2⁻¹¹ + 2⁻²⁵` (half-ulp in the normal range, the
-/// additive term covering the subnormal range).
-#[inline]
-pub fn f16_eps(dequantized: f32) -> f32 {
-    dequantized.abs() * F16_REL_EPS + F16_SUBNORMAL_EPS
 }
 
 // ---------------------------------------------------------------------
@@ -281,22 +204,34 @@ impl QuantVec {
         (0..self.len()).map(|i| self.get(i)).collect()
     }
 
-    /// Dequantized dot product with `z` (the native evaluation path).
+    /// Contiguous f16 storage, when this vector is f16.
+    pub fn as_f16(&self) -> Option<&[u16]> {
+        match self {
+            QuantVec::F16(h) => Some(h),
+            QuantVec::Int8 { .. } => None,
+        }
+    }
+
+    /// `(scale, codes)` of the contiguous int8 storage, when int8.
+    pub fn as_i8(&self) -> Option<(f32, &[i8])> {
+        match self {
+            QuantVec::F16(_) => None,
+            QuantVec::Int8 { scale, q } => Some((*scale, q)),
+        }
+    }
+
+    /// Dequantized dot product with `z` through the process-wide
+    /// kernel arm. int8 storage quantizes `z` to i16 per call — batch
+    /// evaluators quantize once per query row instead
+    /// ([`QuantApproxModel::decision_one_with`] /
+    /// [`QuantSvmModel::decision_with_norms`]).
     #[inline]
     pub fn dot(&self, z: &[f32]) -> f32 {
+        let arm = quantblas::active_arm();
         match self {
-            QuantVec::F16(h) => h
-                .iter()
-                .zip(z)
-                .map(|(&hi, &zi)| f16_bits_to_f32(hi) * zi)
-                .sum(),
+            QuantVec::F16(h) => quantblas::dot_f16(arm, h, z),
             QuantVec::Int8 { scale, q } => {
-                let s: f32 = q
-                    .iter()
-                    .zip(z)
-                    .map(|(&qi, &zi)| f32::from(qi) * zi)
-                    .sum();
-                *scale * s
+                quantblas::dot_i8(arm, q, *scale, &QuantZ::from_f32(z))
             }
         }
     }
@@ -398,26 +333,39 @@ impl QuantMat {
         }
     }
 
-    /// Dequantized dot of row `r` with `z`.
+    /// Contiguous row-major f16 storage, when this matrix is f16.
+    pub fn as_f16(&self) -> Option<&[u16]> {
+        match self {
+            QuantMat::F16 { h, .. } => Some(h),
+            QuantMat::Int8 { .. } => None,
+        }
+    }
+
+    /// `(per-row scales, row-major codes)` when this matrix is int8 —
+    /// the contiguous views the blocked/SIMD GEMV kernels stream.
+    pub fn as_i8(&self) -> Option<(&[f32], &[i8])> {
+        match self {
+            QuantMat::F16 { .. } => None,
+            QuantMat::Int8 { scales, q, .. } => Some((scales, q)),
+        }
+    }
+
+    /// Dequantized dot of row `r` with `z` through the process-wide
+    /// kernel arm. int8 storage quantizes `z` per call — batch
+    /// evaluators quantize once ([`QuantSvmModel::decision_with_norms`]).
     #[inline]
     pub fn row_dot(&self, r: usize, z: &[f32]) -> f32 {
+        let arm = quantblas::active_arm();
         match self {
             QuantMat::F16 { cols, h, .. } => {
-                let row = &h[r * cols..(r + 1) * cols];
-                row.iter()
-                    .zip(z)
-                    .map(|(&hi, &zi)| f16_bits_to_f32(hi) * zi)
-                    .sum()
+                quantblas::dot_f16(arm, &h[r * cols..(r + 1) * cols], z)
             }
-            QuantMat::Int8 { cols, scales, q, .. } => {
-                let row = &q[r * cols..(r + 1) * cols];
-                let s: f32 = row
-                    .iter()
-                    .zip(z)
-                    .map(|(&qi, &zi)| f32::from(qi) * zi)
-                    .sum();
-                scales[r] * s
-            }
+            QuantMat::Int8 { cols, scales, q, .. } => quantblas::dot_i8(
+                arm,
+                &q[r * cols..(r + 1) * cols],
+                scales[r],
+                &QuantZ::from_f32(z),
+            ),
         }
     }
 
@@ -592,44 +540,53 @@ impl QuantSymMat {
         }
     }
 
-    /// Dequantized quadratic form `zᵀMz` over the packed triangle:
-    /// `Σ_r z_r · (M_rr·z_r + 2·Σ_{c>r} M_rc·z_c)`.
-    pub fn quadform(&self, z: &[f32]) -> f32 {
-        debug_assert_eq!(z.len(), self.d);
-        let mut acc = 0.0f32;
+    /// Contiguous packed-triangle f16 storage, when f16.
+    pub fn as_f16(&self) -> Option<&[u16]> {
         match &self.data {
-            QuantSymData::F16(h) => {
-                let mut off = 0;
-                for r in 0..self.d {
-                    let len = self.d - r;
-                    let row = &h[off..off + len];
-                    let diag = f16_bits_to_f32(row[0]) * z[r];
-                    let tail: f32 = row[1..]
-                        .iter()
-                        .zip(&z[r + 1..])
-                        .map(|(&hi, &zc)| f16_bits_to_f32(hi) * zc)
-                        .sum();
-                    acc += z[r] * (diag + 2.0 * tail);
-                    off += len;
-                }
-            }
-            QuantSymData::Int8 { scales, q } => {
-                let mut off = 0;
-                for r in 0..self.d {
-                    let len = self.d - r;
-                    let row = &q[off..off + len];
-                    let diag = f32::from(row[0]) * z[r];
-                    let tail: f32 = row[1..]
-                        .iter()
-                        .zip(&z[r + 1..])
-                        .map(|(&qi, &zc)| f32::from(qi) * zc)
-                        .sum();
-                    acc += scales[r] * z[r] * (diag + 2.0 * tail);
-                    off += len;
-                }
-            }
+            QuantSymData::F16(h) => Some(h),
+            QuantSymData::Int8 { .. } => None,
         }
-        acc
+    }
+
+    /// `(per-packed-row scales, packed codes)` when int8 — the
+    /// contiguous triangle views the quadratic-form kernels stream.
+    pub fn as_i8(&self) -> Option<(&[f32], &[i8])> {
+        match &self.data {
+            QuantSymData::F16(_) => None,
+            QuantSymData::Int8 { scales, q } => Some((scales, q)),
+        }
+    }
+
+    /// Dequantized quadratic form `zᵀMz` over the packed triangle:
+    /// `Σ_r z_r · (M_rr·z_r + 2·Σ_{c>r} M_rc·z_c)`, through the
+    /// process-wide kernel arm (int8 quantizes `z` per call; batch
+    /// evaluators quantize once and use [`QuantSymMat::quadform_with`]).
+    pub fn quadform(&self, z: &[f32]) -> f32 {
+        self.quadform_with(quantblas::active_arm(), z, None)
+    }
+
+    /// Quadratic form with an explicit kernel arm and, for int8, an
+    /// optional pre-quantized query (quantized from `z` when absent).
+    pub fn quadform_with(
+        &self,
+        arm: KernelArm,
+        z: &[f32],
+        qz: Option<&QuantZ>,
+    ) -> f32 {
+        debug_assert_eq!(z.len(), self.d);
+        match &self.data {
+            QuantSymData::F16(h) => quantblas::quadform_f16(arm, h, self.d, z),
+            QuantSymData::Int8 { scales, q } => match qz {
+                Some(qz) => quantblas::quadform_i8(arm, scales, q, self.d, qz),
+                None => quantblas::quadform_i8(
+                    arm,
+                    scales,
+                    q,
+                    self.d,
+                    &QuantZ::from_f32(z),
+                ),
+            },
+        }
     }
 
     /// Mirror back into a dense f32 [`Mat`].
@@ -764,16 +721,61 @@ impl QuantSvmModel {
         (0..self.n_sv()).map(|r| self.sv.row_norm_sq(r)).collect()
     }
 
-    /// Exact decision value on the dequantized weights (reference path;
-    /// the batched evaluator in [`crate::predictor`] uses the same
-    /// per-row arithmetic).
+    /// Exact decision value on the native quantized storage through
+    /// the process-wide kernel arm (reference path; the batched
+    /// evaluator in [`crate::predictor`] calls the same
+    /// [`QuantSvmModel::decision_with_norms`], so served batches are
+    /// bit-identical to this per-row form).
     pub fn decision_one(&self, z: &[f32]) -> f32 {
-        let zn = vecops::norm_sq(z);
+        self.decision_with_norms(quantblas::active_arm(), z, None)
+    }
+
+    /// Decision value with an explicit kernel arm.
+    pub fn decision_one_with(&self, arm: KernelArm, z: &[f32]) -> f32 {
+        self.decision_with_norms(arm, z, None)
+    }
+
+    /// Decision value with an explicit arm and, optionally, cached
+    /// dequantized SV norms (the serving executor caches them per
+    /// generation; `None` recomputes — identical values either way).
+    ///
+    /// f16 storage streams the f32 query; int8 storage quantizes the
+    /// query once to i16 and runs the exact-integer kernels, so the
+    /// result is bit-identical across arms. The RBF distance then uses
+    /// the *quantized* query's own norm (`K(x̂, ẑ)` exactly), keeping
+    /// the Lipschitz error analysis of
+    /// [`ExactQuantErr::decision_error_at`] tight.
+    pub fn decision_with_norms(
+        &self,
+        arm: KernelArm,
+        z: &[f32],
+        norms: Option<&[f32]>,
+    ) -> f32 {
+        let xn_of = |r: usize| match norms {
+            Some(n) => n[r],
+            None => self.sv.row_norm_sq(r),
+        };
         let mut acc = self.b;
-        for i in 0..self.n_sv() {
-            let cross = self.sv.row_dot(i, z);
-            let xn = self.sv.row_norm_sq(i);
-            acc += self.coef.get(i) * self.kernel.eval_precomp(xn, zn, cross);
+        match &self.sv {
+            QuantMat::F16 { cols, h, .. } => {
+                let zn = vecops::norm_sq(z);
+                for r in 0..self.n_sv() {
+                    let row = &h[r * cols..(r + 1) * cols];
+                    let cross = quantblas::dot_f16(arm, row, z);
+                    acc += self.coef.get(r)
+                        * self.kernel.eval_precomp(xn_of(r), zn, cross);
+                }
+            }
+            QuantMat::Int8 { cols, scales, q, .. } => {
+                let qz = QuantZ::from_f32(z);
+                let zn = qz.norm_sq;
+                for r in 0..self.n_sv() {
+                    let row = &q[r * cols..(r + 1) * cols];
+                    let cross = quantblas::dot_i8(arm, row, scales[r], &qz);
+                    acc += self.coef.get(r)
+                        * self.kernel.eval_precomp(xn_of(r), zn, cross);
+                }
+            }
         }
         acc
     }
@@ -808,6 +810,12 @@ impl QuantSvmModel {
             coef_abs_sum,
             eps_coef: self.coef.eps(),
             eps_sv: self.sv.eps(),
+            // int8 SV rows are dotted against an i16-quantized query
+            // (exact-integer kernels); f16 rows stream the f32 query.
+            eps_z_rel: match self.sv {
+                QuantMat::F16 { .. } => 0.0,
+                QuantMat::Int8 { .. } => quantblas::Z16_REL_EPS,
+            },
         }
     }
 
@@ -885,12 +893,34 @@ impl QuantApproxModel {
         1.0 / (16.0 * self.gamma * self.gamma * self.max_sv_norm_sq)
     }
 
-    /// Decision value + ‖z‖² on the native quantized storage.
+    /// Decision value + ‖z‖² on the native quantized storage through
+    /// the process-wide kernel arm. The reported ‖z‖² is always the
+    /// f32 query's norm (it feeds the Eq. 3.11 routing check), and the
+    /// exponential uses it too; only the linear/quadratic forms see
+    /// the i16-quantized query on int8 payloads.
     pub fn decision_one(&self, z: &[f32]) -> (f32, f32) {
+        self.decision_one_with(quantblas::active_arm(), z)
+    }
+
+    /// Decision value + ‖z‖² with an explicit kernel arm. int8
+    /// payloads quantize the query once and run the exact-integer
+    /// kernels, so the decision is bit-identical across arms.
+    pub fn decision_one_with(&self, arm: KernelArm, z: &[f32]) -> (f32, f32) {
         debug_assert_eq!(z.len(), self.dim());
         let zn = vecops::norm_sq(z);
-        let lin = self.v.dot(z);
-        let quad = self.m.quadform(z);
+        let qz = match (&self.v, &self.m.data) {
+            (QuantVec::Int8 { .. }, _) | (_, QuantSymData::Int8 { .. }) => {
+                Some(QuantZ::from_f32(z))
+            }
+            _ => None,
+        };
+        let lin = match &self.v {
+            QuantVec::F16(h) => quantblas::dot_f16(arm, h, z),
+            QuantVec::Int8 { scale, q } => {
+                quantblas::dot_i8(arm, q, *scale, qz.as_ref().unwrap())
+            }
+        };
+        let quad = self.m.quadform_with(arm, z, qz.as_ref());
         ((-self.gamma * zn).exp() * (self.c + lin + quad) + self.b, zn)
     }
 
@@ -906,12 +936,32 @@ impl QuantApproxModel {
         }
     }
 
-    /// Dequantization error bound metadata for the serving router.
+    /// Dequantization error bound metadata for the serving router:
+    /// per-element weight bounds plus the query-quantization terms of
+    /// the int8 integer kernels (dequantized |v|/|M| mass and the i16
+    /// relative query error; zero for f16, whose kernels stream the
+    /// f32 query).
     pub fn quant_err(&self) -> QuantErrorBound {
+        let d = self.dim();
+        let v_abs_sum = (0..d).map(|i| self.v.get(i).abs()).sum();
+        // Mirrored |M̂| mass: packed row r holds M[r][r..d] — the
+        // diagonal counts once, off-diagonal elements twice.
+        let mut m_abs_sum = 0.0f32;
+        for r in 0..d {
+            m_abs_sum += self.m.get(r, r).abs();
+            for c in r + 1..d {
+                m_abs_sum += 2.0 * self.m.get(r, c).abs();
+            }
+        }
+        let int8_query = matches!(self.v, QuantVec::Int8 { .. })
+            || matches!(self.m.data, QuantSymData::Int8 { .. });
         QuantErrorBound {
-            dim: self.dim(),
+            dim: d,
             eps_v: self.v.eps(),
             eps_m: self.m.eps(),
+            eps_z_rel: if int8_query { quantblas::Z16_REL_EPS } else { 0.0 },
+            v_abs_sum,
+            m_abs_sum,
         }
     }
 
@@ -1285,15 +1335,30 @@ mod tests {
                 (0..d).map(|_| rng.normal() as f32).collect();
             for kind in [PayloadKind::F16, PayloadKind::Int8] {
                 let qm = QuantSymMat::quantize(&m, kind).unwrap();
+                let dense = qm.dequantize();
                 let want = crate::linalg::quadform::quadform_symmetric(
-                    &qm.dequantize(),
-                    &z,
+                    &dense, &z,
                 );
-                let got = qm.quadform(&z);
-                assert!(
-                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
-                    "{kind}: {got} vs {want}"
-                );
+                // int8 evaluates at the i16-quantized query: cover the
+                // |ẑᵀM̂ẑ − zᵀM̂z| ≤ Σ|M̂|·(2‖z‖ + eps_z)·eps_z term.
+                let zn = vecops::norm_sq(&z);
+                let eps_z = match kind {
+                    PayloadKind::Int8 => {
+                        quantblas::Z16_REL_EPS * zn.sqrt()
+                    }
+                    _ => 0.0,
+                };
+                let m_abs: f32 =
+                    dense.as_slice().iter().map(|x| x.abs()).sum();
+                let tol = 1e-4 * (1.0 + want.abs())
+                    + m_abs * (2.0 * zn.sqrt() + eps_z) * eps_z;
+                for arm in quantblas::available_arms() {
+                    let got = qm.quadform_with(arm, &z, None);
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "{kind}/{arm}: {got} vs {want}"
+                    );
+                }
             }
         });
     }
@@ -1362,19 +1427,31 @@ mod tests {
             let z: Vec<f32> =
                 (0..d).map(|_| (rng.normal() * 0.5) as f32).collect();
             let want = m.decision_one(&z);
+            let zn = vecops::norm_sq(&z);
             for kind in [PayloadKind::F16, PayloadKind::Int8] {
                 let qm = QuantSvmModel::quantize(&m, kind).unwrap();
                 qm.check().unwrap();
                 let got = qm.decision_one(&z);
-                let bound = qm.quant_err().decision_error();
+                let bound = qm.quant_err().decision_error_at(zn);
                 assert!(
                     (got - want).abs() <= bound,
                     "{kind}: |{got} - {want}| > bound {bound}"
                 );
+                // The z-independent weight bound stays the CLI summary
+                // and is never above the served bound.
+                assert!(bound >= qm.quant_err().decision_error());
                 // Dequantized twin agrees with the native evaluation
-                // far inside the bound.
+                // far inside the bound (int8 adds only the marginal
+                // i16 query-quantization drift).
                 let deq = qm.dequantize().decision_one(&z);
-                assert!((got - deq).abs() < 1e-3);
+                assert!((got - deq).abs() < 5e-3, "{kind}");
+                // Every dispatch arm returns the same int8 bits.
+                if kind == PayloadKind::Int8 {
+                    for arm in quantblas::available_arms() {
+                        let via = qm.decision_one_with(arm, &z);
+                        assert_eq!(via.to_bits(), got.to_bits(), "{arm}");
+                    }
+                }
             }
         });
     }

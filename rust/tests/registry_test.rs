@@ -679,7 +679,6 @@ fn int8_bundle_serves_within_reported_bound_and_hot_swaps_from_f32() {
     coord.refresh();
     let r2 = client.predict_all_for("tenant", &sub).unwrap();
     assert!(r2.iter().all(|r| r.generation == 2), "hot swap to int8");
-    let exact_bound = q.exact_err.decision_error();
     let mut approx_served = 0;
     for (i, resp) in r2.iter().enumerate() {
         // Served decision == the native quantized evaluation…
@@ -688,7 +687,9 @@ fn int8_bundle_serves_within_reported_bound_and_hot_swaps_from_f32() {
             Route::Exact => entry.exact_decision_one(sub.row(i)),
         };
         assert!((resp.decision - want).abs() < 1e-3);
-        // …and within the reported drift bound of the f32 twin.
+        // …and within the reported drift bound of the f32 twin (the
+        // exact-side bound is z-aware: int8 kernels evaluate against
+        // an i16-quantized query, which adds a ‖z‖-scaled term).
         match resp.route {
             Route::Approx => {
                 approx_served += 1;
@@ -701,8 +702,10 @@ fn int8_bundle_serves_within_reported_bound_and_hot_swaps_from_f32() {
             }
             Route::Exact => {
                 let f32_dec = m.decision_one(sub.row(i));
+                let zn = approxrbf::linalg::vecops::norm_sq(sub.row(i));
                 assert!(
-                    (resp.decision - f32_dec).abs() <= exact_bound,
+                    (resp.decision - f32_dec).abs()
+                        <= q.exact_err.decision_error_at(zn),
                     "row {i}: int8 exact drift exceeds the reported bound"
                 );
             }

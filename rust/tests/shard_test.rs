@@ -26,8 +26,9 @@ use approxrbf::coordinator::{
     Coordinator, Route, RoutePolicy, TenantPolicy,
 };
 use approxrbf::data::{synth, Dataset, UnitNormScaler};
-use approxrbf::linalg::MathBackend;
+use approxrbf::linalg::{quantblas, MathBackend};
 use approxrbf::prop_cases;
+use approxrbf::registry::quant::TenantModels;
 use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
@@ -409,6 +410,33 @@ fn quantized_tenant_is_shard_invariant_and_within_bound_of_f32_twin() {
         );
     }
     assert!(approx_pairs > 0, "int8 tenant never exercised approx route");
+    // Kernel-arm invariance: the served int8 bits equal every dispatch
+    // arm's native evaluation (exact integer accumulation makes int8
+    // decisions arm-independent), so the plane's decisions cannot
+    // depend on which kernel arm a node selects. CI re-runs this whole
+    // file under APPROXRBF_QUANT_KERNEL=blocked as the process-level
+    // counterpart of this in-process check.
+    let (q_exact, q_approx) = match &q_entry.models {
+        TenantModels::Quantized { exact, approx } => (exact, approx),
+        TenantModels::F32 { .. } => panic!("int8 entry decoded as f32"),
+    };
+    for (i, (id, z)) in traffic.iter().enumerate() {
+        if *id != "quant-int8" {
+            continue;
+        }
+        let (_, _, bits, route) = &r1[i];
+        for arm in quantblas::available_arms() {
+            let want = match route {
+                Route::Approx => q_approx.decision_one_with(arm, z).0,
+                Route::Exact => q_exact.decision_one_with(arm, z),
+            };
+            assert_eq!(
+                want.to_bits(),
+                *bits,
+                "request {i}: served bits differ from arm {arm}"
+            );
+        }
+    }
     let _ = std::fs::remove_dir_all(store.root());
 }
 
