@@ -2,7 +2,7 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test test-sharded test-quant test-kernel-blocked bench-smoke doc check-pjrt artifacts
+.PHONY: tier1 fmt lint build test test-sharded test-quant test-kernel-blocked test-remote bench-smoke doc check-pjrt artifacts
 
 tier1: fmt lint build test test-sharded test-quant
 
@@ -42,6 +42,14 @@ test-quant:
 test-kernel-blocked:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_QUANT=int8 \
 		APPROXRBF_QUANT_KERNEL=blocked cargo test -q --test shard_test
+
+# Mirror the CI tier1-remote job: router + two spawned serve-shard
+# processes over loopback (bit-identity, republish-over-the-wire,
+# kill-one-shard fail-fast). Serial: the suite binds real sockets and
+# spawns child processes, so parallel tests would just fight over CPU.
+test-remote:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_REMOTE=1 \
+		cargo test -q --test remote_e2e -- --test-threads=1
 
 # Mirror the CI bench-smoke job: short deterministic serving_bench
 # sweep; BENCH_quant.json's kernel_arms rows must show int8

@@ -7,10 +7,12 @@
 //! decision drift vs the reported bound) and a quantized kernel-arm
 //! A/B sweep (scalar vs blocked vs simd on larger synthetic shapes,
 //! with int8 bit-identity cross-checked) — both written to
-//! `BENCH_quant.json`. The CI `bench-smoke` job runs this with
-//! `APPROXRBF_BENCH_SMOKE` set (shorter deterministic sweeps) and
-//! fails if an int8 blocked/simd arm does not beat the scalar arm of
-//! the same run.
+//! `BENCH_quant.json` — and a remote-serving leg (the same registry
+//! behind two loopback-TCP shard servers fronted by a `Router`, vs the
+//! in-process plane) written to `BENCH_remote.json`. The CI
+//! `bench-smoke` job runs this with `APPROXRBF_BENCH_SMOKE` set
+//! (shorter deterministic sweeps) and fails if an int8 blocked/simd
+//! arm does not beat the scalar arm of the same run.
 //!
 //! Run: `cargo bench --bench serving_bench`
 
@@ -129,6 +131,7 @@ fn main() {
 
     shard_scaling_sweep(&model, &am, &test);
     quant_payload_sweep(&model, &am, &test);
+    remote_loopback_sweep(&model, &am, &test);
 }
 
 /// Multi-tenant shard-scaling sweep: the same registry served by 1, 2
@@ -213,6 +216,163 @@ fn shard_scaling_sweep(
     ]);
     std::fs::write("BENCH_serving.json", doc.to_string_pretty()).unwrap();
     println!("\n(JSON: BENCH_serving.json)");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Remote-serving leg: the same multi-tenant registry served (a) by an
+/// in-process two-lane plane and (b) by two single-lane shard servers
+/// behind real loopback TCP, fronted by a `Router` — so
+/// `BENCH_remote.json` records what the `ARBW` wire (framing, CRC,
+/// per-connection threads, socket hops) costs relative to in-process
+/// dispatch on identical work. Server-side mean latency rides along to
+/// separate wire overhead from executor time.
+fn remote_loopback_sweep(
+    model: &approxrbf::svm::SvmModel,
+    am: &approxrbf::approx::ApproxModel,
+    test: &approxrbf::data::Dataset,
+) {
+    use approxrbf::net::{
+        Router, RouterConfig, ShardServer, ShardServerConfig,
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "approxrbf_serving_bench_remote_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ModelStore::open(&dir).unwrap());
+    let tenant_ids: Vec<String> =
+        (0..SWEEP_TENANTS).map(|i| format!("tenant-{i}")).collect();
+    for id in &tenant_ids {
+        store.publish(id, model, am).unwrap();
+    }
+    let passes: usize = if smoke() { 2 } else { 8 };
+    let chunk = test.x.rows_slice(0, SWEEP_CHUNK);
+    let per_tenant = SWEEP_CHUNK * passes;
+    let total = per_tenant * SWEEP_TENANTS;
+    println!(
+        "\n# remote serving (in-process vs loopback wire, \
+         {SWEEP_TENANTS} tenants × {per_tenant} requests)\n"
+    );
+    let mut rows = Vec::new();
+
+    // Leg A: in-process plane, two executor lanes.
+    {
+        let coord = Coordinator::builder()
+            .policy(RoutePolicy::Hybrid)
+            .max_wait(Duration::from_micros(200))
+            .shards(2)
+            .warm_start(true)
+            .start_registry(store.clone())
+            .unwrap();
+        let client = coord.client();
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for id in &tenant_ids {
+                let producer = client.clone();
+                let chunk = &chunk;
+                scope.spawn(move || {
+                    for _ in 0..passes {
+                        let responses =
+                            producer.predict_all_for(id, chunk).unwrap();
+                        assert_eq!(responses.len(), SWEEP_CHUNK);
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let m = coord.metrics();
+        assert_eq!((m.served_approx + m.served_exact) as usize, total);
+        let rps = total as f64 / wall;
+        println!(
+            "mode=local            {rps:>9.0} req/s   mean batch \
+             {:>6.1}   wall {wall:.2}s",
+            m.mean_batch_size
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("local")),
+            ("requests", Json::num(total as f64)),
+            ("wall_s", Json::num(wall)),
+            ("throughput_rps", Json::num(rps)),
+            ("mean_batch_size", Json::num(m.mean_batch_size)),
+            ("server_mean_latency_s", Json::num(m.mean_latency_s)),
+        ]));
+        coord.shutdown().unwrap();
+    }
+
+    // Leg B: two single-lane shard servers on loopback TCP behind a
+    // Router — same lane count, plus the wire.
+    {
+        let bind_shard = |shard_id: u32| {
+            let coord = Coordinator::builder()
+                .policy(RoutePolicy::Hybrid)
+                .max_wait(Duration::from_micros(200))
+                .shards(1)
+                .warm_start(true)
+                .start_registry(store.clone())
+                .unwrap();
+            ShardServer::bind(
+                "127.0.0.1:0",
+                coord,
+                store.clone(),
+                ShardServerConfig { shard_id, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let s0 = bind_shard(0);
+        let s1 = bind_shard(1);
+        let addrs =
+            vec![s0.local_addr().to_string(), s1.local_addr().to_string()];
+        let router = Router::connect(&addrs, RouterConfig::default())
+            .expect("loopback shard servers reachable");
+        let client = router.client();
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for id in &tenant_ids {
+                let producer = client.clone();
+                let chunk = &chunk;
+                scope.spawn(move || {
+                    for _ in 0..passes {
+                        let responses =
+                            producer.predict_all_for(id, chunk).unwrap();
+                        assert_eq!(responses.len(), SWEEP_CHUNK);
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let m = router.metrics();
+        assert_eq!(
+            (m.served_approx + m.served_exact) as usize,
+            total,
+            "remote leg lost requests"
+        );
+        let rps = total as f64 / wall;
+        println!(
+            "mode=remote-loopback  {rps:>9.0} req/s   mean batch \
+             {:>6.1}   wall {wall:.2}s",
+            m.mean_batch_size
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("remote-loopback")),
+            ("requests", Json::num(total as f64)),
+            ("wall_s", Json::num(wall)),
+            ("throughput_rps", Json::num(rps)),
+            ("mean_batch_size", Json::num(m.mean_batch_size)),
+            ("server_mean_latency_s", Json::num(m.mean_latency_s)),
+        ]));
+        router.shutdown();
+        s0.shutdown().unwrap();
+        s1.shutdown().unwrap();
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_remote_loopback")),
+        ("tenants", Json::num(SWEEP_TENANTS as f64)),
+        ("shard_processes", Json::num(2.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_remote.json", doc.to_string_pretty()).unwrap();
+    println!("\n(JSON: BENCH_remote.json)");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

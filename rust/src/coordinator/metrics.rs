@@ -61,6 +61,9 @@ struct Inner {
     out_of_bound: u64,
     dropped: u64,
     batches: u64,
+    /// Ingress-queue depth *gauge*: last value sampled by the
+    /// coordinator at snapshot time (not a counter — it can go down).
+    queue_depth: u64,
     batch_sizes: Welford,
     latency: Welford,
     histogram: [u64; BUCKETS],
@@ -76,6 +79,7 @@ impl Default for Inner {
             out_of_bound: 0,
             dropped: 0,
             batches: 0,
+            queue_depth: 0,
             batch_sizes: Welford::new(),
             latency: Welford::new(),
             histogram: [0; BUCKETS],
@@ -140,6 +144,15 @@ pub struct MetricsSnapshot {
     pub mean_latency_s: f64,
     pub p_latency_s: Vec<(f64, f64)>,
     pub throughput_rps: f64,
+    /// Ingress-queue depth gauge at snapshot time, **summed** across
+    /// shard sinks (each sink reports its own backlog; the plane's
+    /// backlog is their total). Router health checks poll this.
+    pub queue_depth: u64,
+    /// Seconds since the earliest fanned-in sink first served traffic
+    /// (i.e. the **max** uptime across shards — one slow-starting lane
+    /// never under-reports the plane's serving window). 0.0 before any
+    /// traffic.
+    pub uptime_s: f64,
     /// How many shard sinks were fanned into this snapshot (1 for an
     /// unsharded coordinator).
     pub shard_count: usize,
@@ -181,6 +194,14 @@ impl Metrics {
         }
     }
 
+    /// Set the ingress queue-depth gauge. Sampled by the coordinator
+    /// (and the shard server) right before a snapshot; a *gauge*, so a
+    /// later sample overwrites — [`Metrics::aggregate`] **sums** the
+    /// last-set values across shard sinks.
+    pub fn set_queue_depth(&self, n: usize) {
+        self.inner.lock().unwrap().queue_depth = n as u64;
+    }
+
     /// Account for requests completed with a fail-fast error instead
     /// of a served prediction.
     pub fn record_dropped(&self, model: &ModelId, n: usize) {
@@ -219,11 +240,12 @@ impl Metrics {
     }
 
     /// Fan shard sinks into one snapshot. Slice order defines the shard
-    /// index reported in [`ModelMetricsSnapshot::shards`]. Counters and
-    /// histograms sum, Welford moments merge exactly, and per-model
-    /// rows reported by several sinks are **summed**, never
-    /// overwritten; `started` is the earliest sink's, so throughput is
-    /// measured over the whole plane's serving window.
+    /// index reported in [`ModelMetricsSnapshot::shards`]. Counters,
+    /// histograms and the queue-depth gauge **sum**, Welford moments
+    /// merge exactly, and per-model rows reported by several sinks are
+    /// **summed**, never overwritten; `started` is the earliest sink's,
+    /// so `uptime_s` is the **max** uptime across shards and throughput
+    /// is measured over the whole plane's serving window.
     pub fn aggregate(shards: &[&Metrics]) -> MetricsSnapshot {
         let mut merged = Inner::default();
         let mut model_shards: HashMap<ModelId, Vec<usize>> = HashMap::new();
@@ -238,6 +260,7 @@ impl Metrics {
             merged.out_of_bound += g.out_of_bound;
             merged.dropped += g.dropped;
             merged.batches += g.batches;
+            merged.queue_depth += g.queue_depth;
             merged.batch_sizes.merge(&g.batch_sizes);
             merged.latency.merge(&g.latency);
             for (bucket, &h) in g.histogram.iter().enumerate() {
@@ -252,11 +275,11 @@ impl Metrics {
                 model_shards.entry(id.clone()).or_default().push(index);
             }
         }
-        let elapsed = merged
+        let uptime_s = merged
             .started
             .map(|s| s.elapsed().as_secs_f64())
-            .unwrap_or(0.0)
-            .max(1e-9);
+            .unwrap_or(0.0);
+        let elapsed = uptime_s.max(1e-9);
         let total = merged.served_approx + merged.served_exact;
         // Percentiles from the histogram (bucket lower edges).
         let mut p_latency = Vec::new();
@@ -300,10 +323,158 @@ impl Metrics {
             mean_latency_s: merged.latency.mean(),
             p_latency_s: p_latency,
             throughput_rps: total as f64 / elapsed,
+            queue_depth: merged.queue_depth,
+            uptime_s,
             shard_count: shards.len().max(1),
             per_model,
         }
     }
+
+    /// Export this sink's raw accumulator state for transport (the
+    /// shard server answers a metrics pull with this; the router
+    /// rebuilds a sink per shard with [`Metrics::from_state`] and fans
+    /// them in through the ordinary [`Metrics::aggregate`], so remote
+    /// planes aggregate *exactly* like local ones — moments merge, they
+    /// are never re-derived from pre-averaged numbers).
+    pub fn export_state(&self) -> MetricsState {
+        let g = self.inner.lock().unwrap();
+        MetricsState {
+            served_approx: g.served_approx,
+            served_exact: g.served_exact,
+            out_of_bound: g.out_of_bound,
+            dropped: g.dropped,
+            batches: g.batches,
+            queue_depth: g.queue_depth,
+            uptime_s: g
+                .started
+                .map(|s| s.elapsed().as_secs_f64())
+                .unwrap_or(0.0),
+            batch_sizes: WelfordState::of(&g.batch_sizes),
+            latency: WelfordState::of(&g.latency),
+            histogram: g.histogram.to_vec(),
+            per_model: {
+                let mut rows: Vec<ModelMetricsState> = g
+                    .per_model
+                    .iter()
+                    .map(|(id, pm)| ModelMetricsState {
+                        id: id.to_string(),
+                        served_approx: pm.served_approx,
+                        served_exact: pm.served_exact,
+                        out_of_bound: pm.out_of_bound,
+                        dropped: pm.dropped,
+                        latency: WelfordState::of(&pm.latency),
+                    })
+                    .collect();
+                rows.sort_by(|a, b| a.id.cmp(&b.id));
+                rows
+            },
+        }
+    }
+
+    /// Rebuild a sink from transported state. The serving window is
+    /// anchored `state.uptime_s` in the past so throughput over the
+    /// rebuilt sink matches the exporting process (modulo transport
+    /// latency). Histogram rows beyond the local bucket count are
+    /// folded into the last bucket rather than dropped.
+    pub fn from_state(state: &MetricsState) -> Metrics {
+        let mut inner = Inner {
+            started: if state.uptime_s > 0.0 {
+                let ago = Duration::from_secs_f64(
+                    state.uptime_s.max(0.0).min(1e9),
+                );
+                Some(Instant::now().checked_sub(ago).unwrap_or_else(Instant::now))
+            } else {
+                None
+            },
+            served_approx: state.served_approx,
+            served_exact: state.served_exact,
+            out_of_bound: state.out_of_bound,
+            dropped: state.dropped,
+            batches: state.batches,
+            queue_depth: state.queue_depth,
+            batch_sizes: state.batch_sizes.to_welford(),
+            latency: state.latency.to_welford(),
+            histogram: [0; BUCKETS],
+            per_model: state
+                .per_model
+                .iter()
+                .map(|m| {
+                    let id: ModelId = std::sync::Arc::from(m.id.as_str());
+                    let pm = PerModel {
+                        served_approx: m.served_approx,
+                        served_exact: m.served_exact,
+                        out_of_bound: m.out_of_bound,
+                        dropped: m.dropped,
+                        latency: m.latency.to_welford(),
+                    };
+                    (id, pm)
+                })
+                .collect(),
+        };
+        for (i, &h) in state.histogram.iter().enumerate() {
+            inner.histogram[i.min(BUCKETS - 1)] += h;
+        }
+        Metrics { inner: Mutex::new(inner) }
+    }
+}
+
+/// Transported Welford moments (see [`Welford::from_parts`]): the raw
+/// sufficient statistics, so merging after transport is exact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WelfordState {
+    pub count: u64,
+    pub mean: f64,
+    pub m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl WelfordState {
+    fn of(w: &Welford) -> WelfordState {
+        WelfordState {
+            count: w.count(),
+            mean: w.mean(),
+            m2: w.m2(),
+            min: w.min(),
+            max: w.max(),
+        }
+    }
+
+    fn to_welford(self) -> Welford {
+        Welford::from_parts(self.count, self.mean, self.m2, self.min, self.max)
+    }
+}
+
+/// Per-model slice of a [`MetricsState`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMetricsState {
+    pub id: String,
+    pub served_approx: u64,
+    pub served_exact: u64,
+    pub out_of_bound: u64,
+    pub dropped: u64,
+    pub latency: WelfordState,
+}
+
+/// A [`Metrics`] sink's raw accumulator state in transportable form:
+/// plain counters, gauges and Welford moments — no `Instant`s, no
+/// interior mutability — so the wire layer can serialize it and a
+/// remote router can reconstruct an equivalent sink with
+/// [`Metrics::from_state`]. Rows are sorted by model id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsState {
+    pub served_approx: u64,
+    pub served_exact: u64,
+    pub out_of_bound: u64,
+    pub dropped: u64,
+    pub batches: u64,
+    pub queue_depth: u64,
+    pub uptime_s: f64,
+    pub batch_sizes: WelfordState,
+    pub latency: WelfordState,
+    /// Log-scale latency histogram counts (quarter-decade buckets).
+    pub histogram: Vec<u64>,
+    pub per_model: Vec<ModelMetricsState>,
 }
 
 impl MetricsSnapshot {
@@ -343,6 +514,8 @@ impl MetricsSnapshot {
             ("mean_batch_size", Json::num(self.mean_batch_size)),
             ("mean_latency_s", Json::num(self.mean_latency_s)),
             ("throughput_rps", Json::num(self.throughput_rps)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("uptime_s", Json::num(self.uptime_s)),
             ("shard_count", Json::num(self.shard_count as f64)),
             (
                 "latency_percentiles",
@@ -366,7 +539,11 @@ impl MetricsSnapshot {
     /// the CLI, `serving_bench` and the multi-tenant example). The
     /// `shard` column shows which executor lane(s) served the model.
     pub fn per_model_table(&self) -> String {
-        let mut out = String::from(
+        let mut out = format!(
+            "plane: shards={} queue_depth={} uptime={:.1}s\n",
+            self.shard_count, self.queue_depth, self.uptime_s
+        );
+        out.push_str(
             "model                    shard  served   approx    exact  \
              oob drop  mean lat\n",
         );
@@ -511,5 +688,79 @@ mod tests {
         assert!(j.contains("\"default\""));
         assert!(j.contains("\"shard_count\""));
         assert!(j.contains("\"shards\""));
+        assert!(j.contains("\"queue_depth\""));
+        assert!(j.contains("\"uptime_s\""));
+    }
+
+    #[test]
+    fn queue_depth_is_a_gauge_and_sums_across_shards() {
+        let shard0 = Metrics::new();
+        let shard1 = Metrics::new();
+        shard0.set_queue_depth(7);
+        shard0.set_queue_depth(3); // later sample overwrites
+        shard1.set_queue_depth(5);
+        let s = Metrics::aggregate(&[&shard0, &shard1]);
+        assert_eq!(s.queue_depth, 8);
+        // No traffic yet: uptime stays 0 (the gauge alone does not
+        // start the serving window).
+        assert_eq!(s.uptime_s, 0.0);
+        shard0.record_batch(&mid("a"), Route::Approx, 1);
+        let s = Metrics::aggregate(&[&shard0, &shard1]);
+        assert!(s.uptime_s >= 0.0);
+        assert!(s.per_model_table().contains("queue_depth=8"));
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_aggregate() {
+        let m = Metrics::new();
+        let (a, b) = (mid("alpha"), mid("bravo"));
+        m.record_batch(&a, Route::Approx, 10);
+        m.record_batch(&b, Route::Exact, 3);
+        m.record_response(&a, Duration::from_micros(50), true);
+        m.record_response(&a, Duration::from_micros(150), false);
+        m.record_response(&b, Duration::from_millis(2), true);
+        m.record_dropped(&b, 4);
+        m.set_queue_depth(6);
+
+        let state = m.export_state();
+        let rebuilt = Metrics::from_state(&state);
+        let (s0, s1) = (m.snapshot(), rebuilt.snapshot());
+        assert_eq!(s0.served_approx, s1.served_approx);
+        assert_eq!(s0.served_exact, s1.served_exact);
+        assert_eq!(s0.out_of_bound, s1.out_of_bound);
+        assert_eq!(s0.dropped, s1.dropped);
+        assert_eq!(s0.batches, s1.batches);
+        assert_eq!(s0.queue_depth, s1.queue_depth);
+        assert!((s0.mean_batch_size - s1.mean_batch_size).abs() < 1e-12);
+        assert!((s0.mean_latency_s - s1.mean_latency_s).abs() < 1e-12);
+        assert_eq!(s0.p_latency_s, s1.p_latency_s);
+        assert_eq!(s0.per_model.len(), s1.per_model.len());
+        for (m0, m1) in s0.per_model.iter().zip(&s1.per_model) {
+            assert_eq!(m0.id, m1.id);
+            assert_eq!(m0.served_total(), m1.served_total());
+            assert_eq!(m0.dropped, m1.dropped);
+            assert!((m0.mean_latency_s - m1.mean_latency_s).abs() < 1e-12);
+        }
+        // A second export round-trips exactly (state is pure data).
+        assert_eq!(rebuilt.export_state().histogram, state.histogram);
+        assert_eq!(rebuilt.export_state().per_model, state.per_model);
+
+        // Rebuilt sinks merge through the ordinary aggregate path.
+        let merged = Metrics::aggregate(&[&m, &rebuilt]);
+        assert_eq!(merged.served_approx, 2 * s0.served_approx);
+        assert_eq!(merged.queue_depth, 2 * s0.queue_depth);
+    }
+
+    #[test]
+    fn from_state_folds_oversized_histogram_tail() {
+        let mut state = Metrics::new().export_state();
+        state.histogram = vec![1u64; BUCKETS + 5];
+        let rebuilt = Metrics::from_state(&state).export_state();
+        assert_eq!(rebuilt.histogram.len(), BUCKETS);
+        assert_eq!(
+            rebuilt.histogram.iter().sum::<u64>(),
+            (BUCKETS + 5) as u64
+        );
+        assert_eq!(rebuilt.histogram[BUCKETS - 1], 6);
     }
 }

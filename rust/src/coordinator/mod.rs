@@ -45,6 +45,13 @@
 //! the `.arbf` decode happens on a prefetch thread, off the request
 //! path (see [`crate::registry`]).
 //!
+//! Network serving: [`crate::net`] fronts this same plane over TCP — a
+//! shard server wraps one coordinator behind the `ARBW` wire protocol,
+//! and a router places tenants over shard *processes* with the same
+//! [`shard::assign`] rendezvous function, so a remote plane serves
+//! decisions bit-identical to a local one. The in-process path stays
+//! the default and is untouched by the network tier.
+//!
 //! Error model: every submitted request is answered with exactly one
 //! [`Completion`]. Executor-side failures (unknown model, dimension
 //! drift across an out-of-band republish, a failing batch, shutdown)
@@ -61,7 +68,10 @@ pub mod server;
 pub mod shard;
 pub mod worker;
 
-pub use metrics::{Metrics, MetricsSnapshot, ModelMetricsSnapshot};
+pub use metrics::{
+    Metrics, MetricsSnapshot, MetricsState, ModelMetricsSnapshot,
+    ModelMetricsState, WelfordState,
+};
 pub use policy::TenantPolicy;
 pub use request::{
     Completion, ModelId, PredictError, PredictErrorKind, PredictRequest,

@@ -22,7 +22,7 @@ use super::request::ModelId;
 use super::router::RoutePolicy;
 
 /// Per-model serving knobs, persisted in the model's `.arbf` bundle.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TenantPolicy {
     /// Route override (`None` → the coordinator's policy). E.g. a tenant
     /// that must never lose the exactness guarantee pins `AlwaysExact`.
@@ -38,6 +38,13 @@ pub struct TenantPolicy {
     /// set overflows `max_resident_models`, tenants with a *lower* hint
     /// are evicted first (ties broken least-recently-used). 0 = default.
     pub max_resident_hint: u32,
+    /// Per-tenant quantization drift tolerance in decision units
+    /// (`None` → the coordinator's `quant_drift_tol`). The executor
+    /// *intersects* this with the plane-wide knob — `min(tenant,
+    /// plane)` — so a margin-critical tenant can pin a tighter bound
+    /// than its neighbors but never loosen the operator's floor.
+    /// Must be finite and ≥ 0; a no-op for f32 payloads.
+    pub quant_drift_tol: Option<f32>,
 }
 
 impl TenantPolicy {
@@ -57,6 +64,15 @@ impl TenantPolicy {
 
     pub fn max_wait_or(&self, default: Duration) -> Duration {
         self.max_wait.unwrap_or(default)
+    }
+
+    /// Effective drift tolerance: the tenant's pin intersected with the
+    /// plane-wide default (`min` — a tenant tightens, never loosens).
+    pub fn quant_drift_tol_or(&self, default: f32) -> f32 {
+        match self.quant_drift_tol {
+            Some(t) => t.min(default),
+            None => default,
+        }
     }
 }
 
@@ -118,11 +134,30 @@ mod tests {
             max_batch: Some(8),
             max_wait: Some(Duration::from_micros(100)),
             max_resident_hint: 3,
+            quant_drift_tol: Some(0.125),
         };
         assert!(!p.is_default());
         assert_eq!(p.route_or(RoutePolicy::Hybrid), RoutePolicy::AlwaysExact);
         assert_eq!(p.max_batch_or(256), 8);
         assert_eq!(p.max_wait_or(Duration::from_millis(2)), Duration::from_micros(100));
+        assert_eq!(p.quant_drift_tol_or(0.25), 0.125);
+    }
+
+    #[test]
+    fn drift_tol_intersects_never_loosens() {
+        let unset = TenantPolicy::default();
+        assert_eq!(unset.quant_drift_tol_or(0.25), 0.25);
+        let loose = TenantPolicy {
+            quant_drift_tol: Some(2.0),
+            ..Default::default()
+        };
+        // A tenant cannot raise the plane-wide floor.
+        assert_eq!(loose.quant_drift_tol_or(0.25), 0.25);
+        let tight = TenantPolicy {
+            quant_drift_tol: Some(0.0),
+            ..Default::default()
+        };
+        assert_eq!(tight.quant_drift_tol_or(0.25), 0.0);
     }
 
     #[test]

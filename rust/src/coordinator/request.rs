@@ -148,7 +148,7 @@ impl PredictRequest {
 }
 
 /// A served prediction.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PredictResponse {
     pub id: u64,
     /// Model that served the request.

@@ -40,7 +40,7 @@ use crate::svm::SvmModel;
 use crate::{Error, Result};
 
 use super::batcher::IngressQueue;
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::metrics::{Metrics, MetricsSnapshot, MetricsState};
 use super::request::{
     Completion, ModelId, PredictError, PredictErrorKind, PredictRequest,
     PredictResponse, DEFAULT_MODEL,
@@ -347,10 +347,25 @@ impl Shared {
         }
     }
 
+    /// Sample each lane's ingress backlog into its sink's queue-depth
+    /// gauge, so every snapshot (local or exported over the wire)
+    /// carries the backlog observed at snapshot time.
+    fn sample_queue_gauges(&self) {
+        for (q, m) in self.ingresses.iter().zip(&self.metrics) {
+            m.set_queue_depth(q.len());
+        }
+    }
+
     fn metrics(&self) -> MetricsSnapshot {
+        self.sample_queue_gauges();
         let refs: Vec<&Metrics> =
             self.metrics.iter().map(|m| &**m).collect();
         Metrics::aggregate(&refs)
+    }
+
+    fn metrics_states(&self) -> Vec<MetricsState> {
+        self.sample_queue_gauges();
+        self.metrics.iter().map(|m| m.export_state()).collect()
     }
 
     fn queue_depth(&self) -> usize {
@@ -627,6 +642,28 @@ impl Coordinator {
     /// Metrics snapshot aggregated across every shard.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics()
+    }
+
+    /// Transport seam for the network tier ([`crate::net`]): validate
+    /// and enqueue one instance for `model`, delivering its completion
+    /// on `reply` — the same path [`Client::submit_to`] takes, minus
+    /// the client-owned channel.
+    pub(crate) fn submit_with(
+        &self,
+        model: &str,
+        features: Vec<f32>,
+        reply: &Sender<Completion>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.shared.submit_with(model, features, reply)
+    }
+
+    /// Per-lane transportable metrics states (one per shard, in shard
+    /// order) for the network tier: a shard server answers a metrics
+    /// pull with these, and the router rebuilds sinks via
+    /// [`Metrics::from_state`] and fans them all into one
+    /// [`Metrics::aggregate`].
+    pub(crate) fn metrics_states(&self) -> Vec<MetricsState> {
+        self.shared.metrics_states()
     }
 
     /// Requests queued across every shard's ingress.

@@ -104,7 +104,9 @@ pub(crate) struct WorkerParams {
     /// Max absolute decision drift quantization may add before a
     /// quantized tenant's Hybrid router escorts the instance to the
     /// exact path (folded into the Eq. 3.11 budget per model; see
-    /// [`crate::registry::ModelEntry::znorm_sq_budget_with`]).
+    /// [`crate::registry::ModelEntry::znorm_sq_budget_with`]). A
+    /// tenant whose bundle policy pins its own tolerance intersects it
+    /// with this plane-wide floor (`min`) at tenant load/swap time.
     pub quant_drift_tol: f32,
 }
 
@@ -129,9 +131,21 @@ struct Tenant {
 }
 
 impl Tenant {
+    /// Effective drift tolerance for `entry`: its bundle policy's pin
+    /// intersected with the plane-wide default (`min` — a tenant
+    /// tightens, never loosens; see
+    /// [`TenantPolicy::quant_drift_tol_or`]).
+    fn effective_drift_tol(entry: &ModelEntry, plane_default: f32) -> f32 {
+        entry
+            .policy
+            .unwrap_or_default()
+            .quant_drift_tol_or(plane_default)
+    }
+
     fn new(entry: Arc<ModelEntry>, epoch: u64, quant_drift_tol: f32) -> Tenant {
         let sv_norms = entry.sv_row_norms_sq();
-        let znorm_sq_budget = entry.znorm_sq_budget_with(quant_drift_tol);
+        let tol = Tenant::effective_drift_tol(&entry, quant_drift_tol);
+        let znorm_sq_budget = entry.znorm_sq_budget_with(tol);
         Tenant {
             entry,
             sv_norms,
@@ -146,7 +160,8 @@ impl Tenant {
 
     fn swap(&mut self, entry: Arc<ModelEntry>, quant_drift_tol: f32) {
         self.sv_norms = entry.sv_row_norms_sq();
-        self.znorm_sq_budget = entry.znorm_sq_budget_with(quant_drift_tol);
+        let tol = Tenant::effective_drift_tol(&entry, quant_drift_tol);
+        self.znorm_sq_budget = entry.znorm_sq_budget_with(tol);
         self.entry = entry;
         #[cfg(feature = "pjrt")]
         {

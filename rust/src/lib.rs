@@ -66,9 +66,21 @@
 //! time (per-model rows sum across shards and list the owning shard).
 //! The `Client` API is identical at every shard count.
 //!
-//! Per-tenant behavior (route pin, batch shape, residency) is a
-//! [`coordinator::TenantPolicy`] published inside the tenant's `.arbf`
-//! bundle via [`registry::ModelStore::publish_with`].
+//! Per-tenant behavior (route pin, batch shape, residency, quantization
+//! drift tolerance) is a [`coordinator::TenantPolicy`] published inside
+//! the tenant's `.arbf` bundle via [`registry::ModelStore::publish_with`].
+//!
+//! ## Network serving
+//!
+//! The same plane serves over TCP with zero external dependencies
+//! ([`net`]): `approxrbf serve-shard` exposes one coordinator process
+//! behind the length-prefixed, CRC-checked `ARBW` wire protocol, and a
+//! [`net::Router`] places tenants over shard *processes* with the same
+//! rendezvous function the in-process `ShardSet` uses — so remote
+//! decisions are bit-identical to local ones. [`net::RemoteClient`] /
+//! [`net::RemoteSession`] mirror `Client`/`Session` method-for-method;
+//! dead shards fail fast with typed errors instead of hanging. See
+//! `docs/WIRE.md`.
 //!
 //! ## Quantized bundles
 //!
@@ -142,6 +154,7 @@ pub mod benchsuite;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod net;
 pub mod predictor;
 pub mod registry;
 pub mod runtime;
@@ -216,6 +229,10 @@ pub mod prelude {
     };
     pub use crate::data::{Dataset, SynthProfile};
     pub use crate::linalg::{Mat, MathBackend};
+    pub use crate::net::{
+        RemoteClient, RemoteSession, Router, RouterConfig, ShardServer,
+        ShardServerConfig,
+    };
     pub use crate::predictor::{ApproxPredictor, PredictOutput, Predictor};
     pub use crate::registry::{
         ModelStore, PayloadKind, PublishOptions, StoreConfig,

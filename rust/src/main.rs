@@ -15,7 +15,9 @@
 //!                       [--model m.model] [--approx m.approx] [--warm]
 //!                       [--quantize f16|int8] [--route hybrid]
 //!                       [--tenant-max-batch N] [--tenant-max-wait-us N]
-//!                       [--resident-hint N] [--shards N]
+//!                       [--resident-hint N] [--drift-tol T] [--shards N]
+//! approxrbf serve-shard --listen ADDR --store dir [--shards N]
+//! approxrbf route       --shards ADDR,ADDR... [--store dir]
 //! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
 //!                       [--scale full|quick] [--artifacts artifacts]
 //! approxrbf inspect     --model m.model|--approx m.approx|--arbf m.arbf
@@ -34,6 +36,7 @@ use approxrbf::coordinator::{
 };
 use approxrbf::data::{libsvm_format, SynthProfile};
 use approxrbf::linalg::MathBackend;
+use approxrbf::net::{Router, RouterConfig, ShardServer, ShardServerConfig};
 use approxrbf::registry::{binfmt, ModelStore, PayloadKind, PublishOptions};
 use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
@@ -62,6 +65,8 @@ fn main() {
         "predict" => cmd_predict(&args),
         "bound-check" => cmd_bound_check(&args),
         "serve" => cmd_serve(&args),
+        "serve-shard" => cmd_serve_shard(&args),
+        "route" => cmd_route(&args),
         "registry" => cmd_registry(&args),
         "bench" => cmd_bench(&args),
         "inspect" => cmd_inspect(&args),
@@ -91,8 +96,13 @@ fn usage() -> String {
                (publish --store dir --id name --model m.model\n               \
                [--warm] [--quantize f16|int8] [--route hybrid]\n               \
                [--tenant-max-batch N] [--tenant-max-wait-us N]\n               \
-               [--resident-hint N];\n              \
+               [--resident-hint N] [--drift-tol T];\n              \
                rollback --store dir --id name)\n  \
+               serve-shard expose a registry coordinator over TCP\n              \
+               (--listen 127.0.0.1:7070 --store dir [--shards N]\n               \
+               [--shard-id I] [--drift-tol T])\n  \
+               route       rendezvous-route tenants over shard servers\n              \
+               (--shards HOST:PORT,HOST:PORT… [--requests N])\n  \
                bench       regenerate the paper's tables/figures\n  \
                inspect     describe a model file (text or .arbf)\n";
     doc.to_string()
@@ -314,6 +324,120 @@ fn cmd_serve(args: &Args) -> Result<()> {
     coord.shutdown()
 }
 
+/// `serve-shard`: expose one registry-backed coordinator process over
+/// the `ARBW` wire protocol. Runs until killed.
+fn cmd_serve_shard(args: &Args) -> Result<()> {
+    let listen = args.require("listen")?;
+    let store = Arc::new(ModelStore::open(args.get_or("store", "registry"))?);
+    let policy: RoutePolicy = args.get_or("policy", "hybrid").parse()?;
+    let shards = args.get_usize("shards", 1)?;
+    let shard_id = args.get_usize("shard-id", 0)? as u32;
+    let mut builder = Coordinator::builder()
+        .policy(policy)
+        .shards(shards)
+        .warm_start(true);
+    if let Some(s) = args.get("drift-tol") {
+        let tol = s.parse::<f32>().map_err(|_| {
+            Error::InvalidArg(format!("bad --drift-tol '{s}'"))
+        })?;
+        builder = builder.quant_drift_tol(tol);
+    }
+    let coord = builder.start_registry(store.clone())?;
+    let config = ShardServerConfig {
+        shard_id,
+        max_in_flight: args.get_usize("max-in-flight", 1024)?,
+        read_timeout: Duration::from_secs(
+            args.get_u64("read-timeout-s", 30)?,
+        ),
+    };
+    let server = ShardServer::bind(listen, coord, store, config)?;
+    // The supervising process (e2e tests, orchestrators) scrapes this
+    // line for the resolved port, so flush it out immediately.
+    println!(
+        "shard {shard_id} serving on {} ({shards} lane(s))",
+        server.local_addr()
+    );
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// `route`: stand up a router over shard-server processes and drive
+/// synthetic traffic at the models they advertise — the remote
+/// counterpart of `registry serve`.
+fn cmd_route(args: &Args) -> Result<()> {
+    let addrs: Vec<String> = args
+        .require("shards")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let requests = args.get_usize("requests", 10_000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let router = Router::connect(&addrs, RouterConfig::default())?;
+    let mut models: Vec<(String, u32)> =
+        router.model_dims().into_iter().collect();
+    models.sort();
+    if models.is_empty() {
+        router.shutdown();
+        return Err(Error::InvalidArg(
+            "shard servers advertise no models: publish to their \
+             registries first"
+                .into(),
+        ));
+    }
+    println!(
+        "routing {requests} requests over {} shard(s), {} model(s)…",
+        router.shard_count(),
+        models.len()
+    );
+    let client = router.client();
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    let mut served = 0usize;
+    while served < requests {
+        if submitted < requests {
+            let (id, dim) = &models[submitted % models.len()];
+            let scale = 1.0 / (*dim as f64).sqrt();
+            let z: Vec<f32> = (0..*dim)
+                .map(|_| (rng.normal() * scale) as f32)
+                .collect();
+            client.submit_to(id, z).map_err(Error::from)?;
+            submitted += 1;
+        }
+        while let Some(c) = client.recv(Duration::from_micros(0)) {
+            c.map_err(Error::from)?;
+            served += 1;
+        }
+        if submitted >= requests {
+            while served < requests {
+                match client.recv(Duration::from_millis(100)) {
+                    None => {
+                        return Err(Error::Other("lost responses".into()))
+                    }
+                    Some(c) => {
+                        c.map_err(Error::from)?;
+                        served += 1;
+                    }
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = router.metrics();
+    println!(
+        "done in {wall:.2}s: {:.0} req/s, mean batch {:.1}\n",
+        requests as f64 / wall,
+        m.mean_batch_size
+    );
+    print!("{}", m.per_model_table());
+    router.shutdown();
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     let which = args
         .positionals
@@ -452,7 +576,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 }
                 binfmt::ModelRecord::Policy(p) => println!(
                     "  policy: route={} max_batch={} max_wait={} \
-                     resident_hint={} [{footprint}]",
+                     resident_hint={} drift_tol={} [{footprint}]",
                     p.route.map(|r| r.name()).unwrap_or("(default)"),
                     p.max_batch
                         .map(|n| n.to_string())
@@ -460,7 +584,10 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                     p.max_wait
                         .map(|w| format!("{}µs", w.as_micros()))
                         .unwrap_or_else(|| "(default)".into()),
-                    p.max_resident_hint
+                    p.max_resident_hint,
+                    p.quant_drift_tol
+                        .map(|t| t.to_string())
+                        .unwrap_or_else(|| "(default)".into())
                 ),
             }
         }
@@ -489,8 +616,19 @@ fn tenant_policy_from_args(args: &Args) -> Result<Option<TenantPolicy>> {
         us => Some(Duration::from_micros(us)),
     };
     let max_resident_hint = args.get_u64("resident-hint", 0)? as u32;
-    let policy =
-        TenantPolicy { route, max_batch, max_wait, max_resident_hint };
+    let quant_drift_tol = match args.get("drift-tol") {
+        Some(s) => Some(s.parse::<f32>().map_err(|_| {
+            Error::InvalidArg(format!("bad --drift-tol '{s}'"))
+        })?),
+        None => None,
+    };
+    let policy = TenantPolicy {
+        route,
+        max_batch,
+        max_wait,
+        max_resident_hint,
+        quant_drift_tol,
+    };
     Ok(if policy.is_default() { None } else { Some(policy) })
 }
 

@@ -1,0 +1,51 @@
+//! Network serving tier: shard processes behind a zero-dependency wire
+//! protocol, with a transparent local-or-remote client.
+//!
+//! The in-process [`crate::coordinator`] plane stays the default and is
+//! untouched by this module. The network tier *fronts* that same plane
+//! over `std::net` TCP — no external crates:
+//!
+//! ```text
+//!  RemoteClient/RemoteSession              (mirror Client/Session)
+//!        │
+//!        ▼
+//!  Router ── rendezvous placement on model id (shard::assign, the
+//!        │   SAME function the in-process ShardSet uses)
+//!        ├──▶ TCP ──▶ ShardServer 0 ──▶ Coordinator (own process)
+//!        └──▶ TCP ──▶ ShardServer 1 ──▶ Coordinator (own process)
+//!                      └ ARBW frames: length-prefixed, CRC32-checked,
+//!                        version-negotiated (wire.rs)
+//! ```
+//!
+//! Layers:
+//!
+//! * [`wire`] — the `ARBW` frame codec: 16-byte header (magic, kind,
+//!   CRC32 of payload, length), alloc-bomb caps inherited from the
+//!   `.arbf` registry format, typed request/response/error bodies plus
+//!   handshake, metrics-pull, refresh and ping control frames.
+//! * [`shard_server`] — [`shard_server::ShardServer`] fronts one
+//!   [`crate::coordinator::Coordinator`] behind a `TcpListener`:
+//!   per-connection reader/pump/writer threads, a bounded in-flight
+//!   window per connection, and the socket read timeout doubling as the
+//!   idle timeout. CLI: `approxrbf serve-shard --listen ADDR --store
+//!   DIR`.
+//! * [`router`] — [`router::Router`] multiplexes any number of
+//!   [`router::RemoteClient`]s over per-shard connections, reconnects
+//!   with backoff, converts dead shards into fail-fast
+//!   [`crate::coordinator::PredictError`]s for that shard's tenants
+//!   only, and aggregates remote metrics through the same
+//!   [`crate::coordinator::Metrics::aggregate`] as the local plane.
+//!   CLI: `approxrbf route --shards HOST:PORT,HOST:PORT…`.
+//!
+//! Guarantees carried over from the in-process plane: every accepted
+//! request is answered with exactly one completion; placement parity
+//! means a remote plane's decisions are bit-identical to a local one's;
+//! and a republish hot-swaps tenants mid-stream without dropping
+//! in-flight requests. See `docs/WIRE.md` for the byte-level protocol.
+
+pub mod router;
+pub mod shard_server;
+pub mod wire;
+
+pub use router::{RemoteClient, RemoteSession, Router, RouterConfig};
+pub use shard_server::{ShardServer, ShardServerConfig};

@@ -1,0 +1,974 @@
+//! Router: multiplexes clients over remote shard-server processes with
+//! the *same* rendezvous placement as the in-process plane.
+//!
+//! Placement is [`crate::coordinator::shard::assign`] over the model id
+//! and the number of shard *addresses* — the identical function the
+//! in-process `ShardSet` uses over executor lanes. A model's traffic
+//! therefore always lands on one shard process, and an `n`-process
+//! remote plane serves decisions bit-identical to an in-process one
+//! (sharding changes *where* a tenant is served, never *what*).
+//!
+//! Each shard address gets one TCP connection plus a tender thread that
+//! owns its lifecycle: connect → handshake → demultiplex responses →
+//! on death, fail every in-flight request of *that shard only* with a
+//! typed [`PredictErrorKind::Exec`] and reconnect with exponential
+//! backoff (50 ms doubling to the configured ceiling). While a shard is
+//! down, submissions placed on it fail fast at submit; other shards'
+//! tenants are untouched. Nothing ever hangs waiting for a dead peer.
+//!
+//! [`RemoteClient`] and [`RemoteSession`] mirror the in-process
+//! [`crate::coordinator::Client`]/[`crate::coordinator::Session`]
+//! surface method-for-method, so callers swap a local plane for a
+//! remote one without touching their submit/completion logic.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::shard::assign;
+use crate::coordinator::{
+    Completion, Metrics, MetricsSnapshot, MetricsState, ModelId,
+    PredictError, PredictErrorKind, PredictResponse, DEFAULT_MODEL,
+};
+use crate::linalg::Mat;
+use crate::{log_info, log_warn, Error, Result};
+
+use super::wire::{self, Message, WIRE_VERSION};
+
+/// Tuning knobs for a [`Router`].
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Name announced in the wire handshake (diagnostics only).
+    pub client_name: String,
+    /// Per-attempt TCP connect + handshake timeout. [`Router::connect`]
+    /// waits up to twice this for every shard to come up.
+    pub connect_timeout: Duration,
+    /// Reconnect backoff ceiling (floor is 50 ms, doubling).
+    pub reconnect_ceiling: Duration,
+    /// Round-trip timeout for control messages (metrics pull, refresh).
+    pub control_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            client_name: "router".to_string(),
+            connect_timeout: Duration::from_secs(2),
+            reconnect_ceiling: Duration::from_secs(2),
+            control_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+const BACKOFF_FLOOR: Duration = Duration::from_millis(50);
+
+/// In-flight bookkeeping for one request: where its completion goes
+/// and which model it addressed (needed to type a fail-fast error).
+struct PendingEntry {
+    reply: Sender<Completion>,
+    model: ModelId,
+}
+
+/// Mutable half of one shard connection, shared by submitters (write
+/// side) and the tender's read loop (demux side).
+#[derive(Default)]
+struct LinkState {
+    /// Write half of the live connection; `None` while the shard is
+    /// down — submits placed here fail fast instead of queueing.
+    conn: Option<TcpStream>,
+    pending: HashMap<u64, PendingEntry>,
+    /// FIFO waiters for `Metrics` replies (TCP preserves order, so
+    /// pull k is answered by reply k).
+    metrics_waiters: VecDeque<Sender<Vec<MetricsState>>>,
+    /// FIFO waiters for `Ack` replies to `Refresh`.
+    ack_waiters: VecDeque<Sender<()>>,
+}
+
+struct Link {
+    index: usize,
+    addr: String,
+    state: Mutex<LinkState>,
+}
+
+impl Link {
+    fn alive(&self) -> bool {
+        self.state.lock().unwrap().conn.is_some()
+    }
+
+    /// Kill the connection (if any) and fail every in-flight request of
+    /// this shard with a typed `Exec` error — fail fast, never hang.
+    fn teardown(&self, why: &str) {
+        let (pending, had_conn) = {
+            let mut st = self.state.lock().unwrap();
+            let had = match st.conn.take() {
+                Some(c) => {
+                    let _ = c.shutdown(Shutdown::Both);
+                    true
+                }
+                None => false,
+            };
+            st.metrics_waiters.clear();
+            st.ack_waiters.clear();
+            (std::mem::take(&mut st.pending), had)
+        };
+        if had_conn || !pending.is_empty() {
+            log_warn!(
+                "router: shard {} ({}) down ({why}), failing {} in-flight",
+                self.index,
+                self.addr,
+                pending.len()
+            );
+        }
+        for (id, entry) in pending {
+            let err = PredictError {
+                id,
+                model: entry.model,
+                kind: PredictErrorKind::Exec {
+                    detail: format!(
+                        "shard {} ({}) disconnected: {why}",
+                        self.index, self.addr
+                    ),
+                },
+            };
+            let _ = entry.reply.send(Err(err));
+        }
+    }
+}
+
+struct RouterInner {
+    links: Vec<Arc<Link>>,
+    /// Model → feature dimension, merged from every shard's handshake
+    /// (client-side dim validation without a round-trip per request).
+    dims: Arc<Mutex<HashMap<String, u32>>>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    tenders: Mutex<Vec<JoinHandle<()>>>,
+    config: RouterConfig,
+}
+
+/// A connected remote serving plane over one or more shard-server
+/// processes. Cheap to clone (shared handle); hand out
+/// [`Router::client`]s for submission, exactly like
+/// [`crate::coordinator::Coordinator::client`].
+#[derive(Clone)]
+pub struct Router {
+    inner: Arc<RouterInner>,
+}
+
+impl Router {
+    /// Connect to shard servers at `addrs` (placement order — must
+    /// match across every router of a plane). Fails unless every shard
+    /// answers its handshake within the startup window; after that,
+    /// individual shard deaths degrade to fail-fast errors for their
+    /// tenants only, with reconnection in the background.
+    pub fn connect(addrs: &[String], config: RouterConfig) -> Result<Router> {
+        if addrs.is_empty() {
+            return Err(Error::InvalidArg(
+                "router needs at least one shard address".into(),
+            ));
+        }
+        let links: Vec<Arc<Link>> = addrs
+            .iter()
+            .enumerate()
+            .map(|(index, addr)| {
+                Arc::new(Link {
+                    index,
+                    addr: addr.clone(),
+                    state: Mutex::new(LinkState::default()),
+                })
+            })
+            .collect();
+        let inner = Arc::new(RouterInner {
+            links,
+            dims: Arc::new(Mutex::new(HashMap::new())),
+            next_id: AtomicU64::new(0),
+            stop: Arc::new(AtomicBool::new(false)),
+            tenders: Mutex::new(Vec::new()),
+            config,
+        });
+        for link in &inner.links {
+            let link = link.clone();
+            let dims = inner.dims.clone();
+            let stop = inner.stop.clone();
+            let cfg = inner.config.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("approxrbf-net-tender-{}", link.index))
+                .spawn(move || run_tender(link, dims, stop, cfg))
+                .map_err(|e| Error::Other(format!("spawn tender: {e}")))?;
+            inner.tenders.lock().unwrap().push(handle);
+        }
+        // Startup barrier: every shard must come up once.
+        let deadline = Instant::now() + inner.config.connect_timeout * 2;
+        loop {
+            if inner.links.iter().all(|l| l.alive()) {
+                break;
+            }
+            if Instant::now() >= deadline {
+                let down: Vec<&str> = inner
+                    .links
+                    .iter()
+                    .filter(|l| !l.alive())
+                    .map(|l| l.addr.as_str())
+                    .collect();
+                inner.shutdown_impl();
+                return Err(Error::Other(format!(
+                    "router: shard(s) unreachable at startup: {}",
+                    down.join(", ")
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(Router { inner })
+    }
+
+    /// Where `model` is placed: the same rendezvous function the
+    /// in-process `ShardSet` uses, over shard *processes*.
+    pub fn place_for(model: &str, n_shards: usize) -> usize {
+        assign(model, n_shards)
+    }
+
+    /// Number of shard processes behind this router.
+    pub fn shard_count(&self) -> usize {
+        self.inner.links.len()
+    }
+
+    /// A new independent [`RemoteClient`] handle (cheap; cloneable).
+    pub fn client(&self) -> RemoteClient {
+        RemoteClient::new(self.inner.clone())
+    }
+
+    /// Model → feature dimension table merged from the shard
+    /// handshakes.
+    pub fn model_dims(&self) -> HashMap<String, u32> {
+        self.inner.dims.lock().unwrap().clone()
+    }
+
+    /// Serving metrics aggregated across every reachable shard: each
+    /// shard ships its raw per-lane sink states, the router rebuilds
+    /// them with [`Metrics::from_state`] and merges through the same
+    /// [`Metrics::aggregate`] the in-process plane uses (exact, not
+    /// averaged averages). Unreachable shards are skipped with a
+    /// warning.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut sinks: Vec<Metrics> = Vec::new();
+        for link in &self.inner.links {
+            match self.inner.pull_metrics(link) {
+                Ok(states) => {
+                    sinks.extend(states.iter().map(Metrics::from_state));
+                }
+                Err(e) => log_warn!(
+                    "router: metrics pull from shard {} ({}) failed: {e}",
+                    link.index,
+                    link.addr
+                ),
+            }
+        }
+        let refs: Vec<&Metrics> = sinks.iter().collect();
+        Metrics::aggregate(&refs)
+    }
+
+    /// Ask every reachable shard to revalidate model generations now
+    /// (remote [`crate::coordinator::Coordinator::refresh`]); returns
+    /// how many shards acknowledged.
+    pub fn refresh(&self) -> Result<usize> {
+        let mut acked = 0usize;
+        for link in &self.inner.links {
+            match self.inner.refresh_link(link) {
+                Ok(()) => acked += 1,
+                Err(e) => log_warn!(
+                    "router: refresh of shard {} ({}) failed: {e}",
+                    link.index,
+                    link.addr
+                ),
+            }
+        }
+        Ok(acked)
+    }
+
+    /// Disconnect every shard, failing whatever is still in flight,
+    /// and join the tender threads. Idempotent; also runs on drop of
+    /// the last handle.
+    pub fn shutdown(&self) {
+        self.inner.shutdown_impl();
+    }
+}
+
+impl RouterInner {
+    /// The submit path shared by [`RemoteClient`] and
+    /// [`RemoteSession`] — mirrors the in-process `Shared::submit_with`
+    /// contract: validate, place, enqueue (here: frame onto the owning
+    /// shard's socket), return the request id; every accepted request
+    /// is answered with exactly one completion on `reply`.
+    fn submit_with(
+        &self,
+        model: &str,
+        features: Vec<f32>,
+        reply: &Sender<Completion>,
+    ) -> std::result::Result<u64, PredictError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mid: ModelId = Arc::from(model);
+        if let Some(&want) = self.dims.lock().unwrap().get(model) {
+            if features.len() != want as usize {
+                return Err(PredictError {
+                    id,
+                    model: mid,
+                    kind: PredictErrorKind::DimMismatch {
+                        got: features.len(),
+                        want: want as usize,
+                    },
+                });
+            }
+        }
+        let shard = assign(model, self.links.len());
+        let link = &self.links[shard];
+        let frame = wire::encode_frame(&Message::Request {
+            id,
+            model: model.to_string(),
+            features,
+        })
+        .map_err(|e| PredictError {
+            id,
+            model: mid.clone(),
+            kind: PredictErrorKind::Exec {
+                detail: format!("request encode failed: {e}"),
+            },
+        })?;
+        let mut st = link.state.lock().unwrap();
+        if st.conn.is_none() {
+            return Err(PredictError {
+                id,
+                model: mid,
+                kind: PredictErrorKind::Exec {
+                    detail: format!(
+                        "shard {} ({}) unreachable",
+                        link.index, link.addr
+                    ),
+                },
+            });
+        }
+        st.pending.insert(
+            id,
+            PendingEntry { reply: reply.clone(), model: mid.clone() },
+        );
+        // Holding the link lock across the write keeps frames atomic on
+        // the socket across concurrent submitters.
+        if let Err(e) = st.conn.as_mut().unwrap().write_all(&frame) {
+            st.pending.remove(&id);
+            if let Some(c) = st.conn.take() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            return Err(PredictError {
+                id,
+                model: mid,
+                kind: PredictErrorKind::Exec {
+                    detail: format!(
+                        "shard {} ({}): write failed: {e}",
+                        link.index, link.addr
+                    ),
+                },
+            });
+        }
+        Ok(id)
+    }
+
+    /// Send one control frame and register a FIFO waiter for its reply
+    /// under the link lock (so registration order matches wire order).
+    fn send_control<T>(
+        &self,
+        link: &Link,
+        msg: &Message,
+        enqueue: impl FnOnce(&mut LinkState, Sender<T>),
+    ) -> Result<Receiver<T>> {
+        let frame = wire::encode_frame(msg)?;
+        let (tx, rx) = mpsc::channel();
+        let mut st = link.state.lock().unwrap();
+        let Some(conn) = st.conn.as_mut() else {
+            return Err(Error::Other(format!(
+                "shard {} ({}) unreachable",
+                link.index, link.addr
+            )));
+        };
+        if let Err(e) = conn.write_all(&frame) {
+            if let Some(c) = st.conn.take() {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            return Err(Error::Other(format!(
+                "shard {} ({}): write failed: {e}",
+                link.index, link.addr
+            )));
+        }
+        enqueue(&mut st, tx);
+        Ok(rx)
+    }
+
+    fn pull_metrics(&self, link: &Link) -> Result<Vec<MetricsState>> {
+        let rx = self.send_control(link, &Message::MetricsPull, |st, tx| {
+            st.metrics_waiters.push_back(tx)
+        })?;
+        rx.recv_timeout(self.config.control_timeout).map_err(|_| {
+            Error::Other(format!(
+                "shard {} ({}): metrics pull timed out",
+                link.index, link.addr
+            ))
+        })
+    }
+
+    fn refresh_link(&self, link: &Link) -> Result<()> {
+        let rx = self.send_control(link, &Message::Refresh, |st, tx| {
+            st.ack_waiters.push_back(tx)
+        })?;
+        rx.recv_timeout(self.config.control_timeout).map_err(|_| {
+            Error::Other(format!(
+                "shard {} ({}): refresh timed out",
+                link.index, link.addr
+            ))
+        })
+    }
+
+    fn shutdown_impl(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for link in &self.links {
+            link.teardown("router shutdown");
+        }
+        let tenders: Vec<_> =
+            self.tenders.lock().unwrap().drain(..).collect();
+        for t in tenders {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RouterInner {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Sleep in 50 ms slices so shutdown is not held up by a backoff nap.
+fn sleep_interruptible(total: Duration, stop: &AtomicBool) {
+    let mut left = total;
+    while left > Duration::ZERO && !stop.load(Ordering::Relaxed) {
+        let step = left.min(Duration::from_millis(50));
+        std::thread::sleep(step);
+        left = left.saturating_sub(step);
+    }
+}
+
+/// One connect + handshake attempt. Returns the stream (read timeout
+/// cleared) and the shard's advertised dim table.
+fn connect_once(
+    link: &Link,
+    cfg: &RouterConfig,
+) -> Result<(TcpStream, Vec<(String, u32)>)> {
+    let sa = link
+        .addr
+        .to_socket_addrs()
+        .map_err(Error::Io)?
+        .next()
+        .ok_or_else(|| {
+            Error::InvalidArg(format!("unresolvable address '{}'", link.addr))
+        })?;
+    let mut stream =
+        TcpStream::connect_timeout(&sa, cfg.connect_timeout)
+            .map_err(Error::Io)?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .set_read_timeout(Some(cfg.connect_timeout))
+        .map_err(Error::Io)?;
+    wire::write_frame(
+        &mut stream,
+        &Message::Hello {
+            version: WIRE_VERSION,
+            client: cfg.client_name.clone(),
+        },
+    )?;
+    match wire::read_frame(&mut stream)? {
+        Some(Message::HelloAck { version, shard_id, shard_count, dims }) => {
+            if version != WIRE_VERSION {
+                return Err(Error::Other(format!(
+                    "shard {} speaks wire v{version}, router speaks \
+                     v{WIRE_VERSION}",
+                    link.index
+                )));
+            }
+            if shard_id as usize != link.index {
+                log_warn!(
+                    "router: shard at {} announces id {shard_id}, placed \
+                     as {} — check --shard-id flags",
+                    link.addr,
+                    link.index
+                );
+            }
+            log_info!(
+                "router: shard {} ({}) up — {} lanes, {} models",
+                link.index,
+                link.addr,
+                shard_count,
+                dims.len()
+            );
+            // Blocking reads from here on; death arrives as EOF/reset.
+            stream.set_read_timeout(None).map_err(Error::Io)?;
+            Ok((stream, dims))
+        }
+        Some(Message::Error(e)) => {
+            Err(Error::Other(format!("shard refused handshake: {e}")))
+        }
+        Some(m) => Err(Error::Corrupt(format!(
+            "expected HelloAck, got frame kind {}",
+            m.kind()
+        ))),
+        None => Err(Error::Other(
+            "connection closed during handshake".to_string(),
+        )),
+    }
+}
+
+/// Own one shard connection for the router's lifetime: connect,
+/// handshake, demux until death, fail in-flight, back off, repeat.
+fn run_tender(
+    link: Arc<Link>,
+    dims: Arc<Mutex<HashMap<String, u32>>>,
+    stop: Arc<AtomicBool>,
+    cfg: RouterConfig,
+) {
+    let mut backoff = BACKOFF_FLOOR;
+    while !stop.load(Ordering::Relaxed) {
+        match connect_once(&link, &cfg) {
+            Ok((stream, table)) => {
+                backoff = BACKOFF_FLOOR;
+                {
+                    let mut d = dims.lock().unwrap();
+                    for (id, dim) in table {
+                        d.insert(id, dim);
+                    }
+                }
+                match stream.try_clone() {
+                    Ok(write_half) => {
+                        link.state.lock().unwrap().conn = Some(write_half);
+                    }
+                    Err(e) => {
+                        log_warn!("router: stream clone failed: {e}");
+                        continue;
+                    }
+                }
+                let why = read_loop(&link, stream, &stop);
+                link.teardown(&why);
+            }
+            Err(e) => {
+                log_warn!(
+                    "router: connect to shard {} ({}) failed: {e}",
+                    link.index,
+                    link.addr
+                );
+            }
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        sleep_interruptible(backoff, &stop);
+        backoff = (backoff * 2).min(cfg.reconnect_ceiling);
+    }
+    link.teardown("router shutdown");
+}
+
+/// Demultiplex one live connection until it dies; returns why.
+fn read_loop(
+    link: &Link,
+    mut stream: TcpStream,
+    stop: &AtomicBool,
+) -> String {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return "router shutdown".to_string();
+        }
+        let msg = match wire::read_frame(&mut stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return "connection closed".to_string(),
+            Err(e) => return format!("read failed: {e}"),
+        };
+        match msg {
+            Message::Response(r) => deliver(link, r.id, Ok(r)),
+            Message::Error(e) => {
+                let oob = e.id == 0
+                    && !link
+                        .state
+                        .lock()
+                        .unwrap()
+                        .pending
+                        .contains_key(&e.id);
+                if oob {
+                    // Out-of-band server complaint (e.g. handshake-era
+                    // refusal); nothing to correlate it with.
+                    log_warn!("router: shard {} reports: {e}", link.index);
+                } else {
+                    deliver(link, e.id, Err(e));
+                }
+            }
+            Message::Metrics(states) => {
+                let waiter = link
+                    .state
+                    .lock()
+                    .unwrap()
+                    .metrics_waiters
+                    .pop_front();
+                match waiter {
+                    Some(tx) => {
+                        let _ = tx.send(states);
+                    }
+                    None => log_warn!(
+                        "router: unsolicited metrics from shard {}",
+                        link.index
+                    ),
+                }
+            }
+            Message::Ack => {
+                let waiter =
+                    link.state.lock().unwrap().ack_waiters.pop_front();
+                match waiter {
+                    Some(tx) => {
+                        let _ = tx.send(());
+                    }
+                    None => log_warn!(
+                        "router: unsolicited ack from shard {}",
+                        link.index
+                    ),
+                }
+            }
+            Message::Pong => {}
+            other => {
+                return format!(
+                    "protocol violation: frame kind {} from server",
+                    other.kind()
+                );
+            }
+        }
+    }
+}
+
+/// Hand a completion to whoever is waiting on its request id.
+fn deliver(link: &Link, id: u64, completion: Completion) {
+    let entry = link.state.lock().unwrap().pending.remove(&id);
+    match entry {
+        Some(e) => {
+            let _ = e.reply.send(completion);
+        }
+        None => log_warn!(
+            "router: completion for unknown request {id} from shard {}",
+            link.index
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------
+// RemoteClient / RemoteSession — the in-process Client surface, remote
+// ---------------------------------------------------------------------
+
+/// A submission handle over a [`Router`], mirroring
+/// [`crate::coordinator::Client`] method-for-method: per-client
+/// completion channel, typed fail-fast errors, same batch helpers. Code
+/// written against the in-process client runs unmodified against a
+/// remote plane.
+pub struct RemoteClient {
+    inner: Arc<RouterInner>,
+    reply_tx: Sender<Completion>,
+    reply_rx: Mutex<Receiver<Completion>>,
+}
+
+impl Clone for RemoteClient {
+    /// A clone is an independent client: same plane, fresh completion
+    /// channel.
+    fn clone(&self) -> RemoteClient {
+        RemoteClient::new(self.inner.clone())
+    }
+}
+
+impl RemoteClient {
+    fn new(inner: Arc<RouterInner>) -> RemoteClient {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        RemoteClient { inner, reply_tx, reply_rx: Mutex::new(reply_rx) }
+    }
+
+    /// Enqueue one instance for [`DEFAULT_MODEL`]; returns its request
+    /// id.
+    pub fn submit(
+        &self,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.submit_to(DEFAULT_MODEL, features)
+    }
+
+    /// Enqueue one instance for a named model on its owning shard
+    /// process.
+    pub fn submit_to(
+        &self,
+        model: &str,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.inner.submit_with(model, features, &self.reply_tx)
+    }
+
+    /// Receive this client's next completion (any order across
+    /// shards). `None` on timeout.
+    pub fn recv(&self, timeout: Duration) -> Option<Completion> {
+        self.reply_rx.lock().unwrap().recv_timeout(timeout).ok()
+    }
+
+    /// Open a [`RemoteSession`]: a scoped group of submissions with its
+    /// own completion channel and ordered [`RemoteSession::wait_all`].
+    pub fn session(&self) -> RemoteSession<'_> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        RemoteSession {
+            client: self,
+            reply_tx,
+            reply_rx,
+            submitted: Vec::new(),
+        }
+    }
+
+    /// Synchronous convenience: submit every row of `z` to
+    /// [`DEFAULT_MODEL`] and return the responses ordered by row,
+    /// failing fast on the first [`PredictError`].
+    pub fn predict_all(&self, z: &Mat) -> Result<Vec<PredictResponse>> {
+        self.predict_all_for(DEFAULT_MODEL, z)
+    }
+
+    /// [`RemoteClient::predict_all`] addressed to a named model.
+    pub fn predict_all_for(
+        &self,
+        model: &str,
+        z: &Mat,
+    ) -> Result<Vec<PredictResponse>> {
+        if z.rows() == 0 {
+            return Err(Error::InvalidArg("empty batch".into()));
+        }
+        let mut session = self.session();
+        for r in 0..z.rows() {
+            session
+                .submit_to(model, z.row(r).to_vec())
+                .map_err(Error::from)?;
+        }
+        let completions = session.wait_all(Duration::from_secs(600))?;
+        completions
+            .into_iter()
+            .map(|c| c.map_err(Error::from))
+            .collect()
+    }
+
+    /// Serving metrics aggregated across every reachable shard (see
+    /// [`Router::metrics`]).
+    pub fn metrics(&self) -> MetricsSnapshot {
+        Router { inner: self.inner.clone() }.metrics()
+    }
+
+    /// Requests queued across the remote plane's ingresses, from the
+    /// shards' queue-depth gauges (one metrics round-trip).
+    pub fn queue_depth(&self) -> usize {
+        self.metrics().queue_depth as usize
+    }
+}
+
+/// A scoped batch of submissions with a private completion channel —
+/// the remote mirror of [`crate::coordinator::Session`], with the same
+/// ordering and fail-fast guarantees.
+pub struct RemoteSession<'c> {
+    client: &'c RemoteClient,
+    reply_tx: Sender<Completion>,
+    reply_rx: Receiver<Completion>,
+    submitted: Vec<(u64, ModelId)>,
+}
+
+impl RemoteSession<'_> {
+    /// Submit one instance for [`DEFAULT_MODEL`].
+    pub fn submit(
+        &mut self,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        self.submit_to(DEFAULT_MODEL, features)
+    }
+
+    /// Submit one instance for a named model.
+    pub fn submit_to(
+        &mut self,
+        model: &str,
+        features: Vec<f32>,
+    ) -> std::result::Result<u64, PredictError> {
+        let id = self
+            .client
+            .inner
+            .submit_with(model, features, &self.reply_tx)?;
+        self.submitted.push((id, Arc::from(model)));
+        Ok(id)
+    }
+
+    /// Number of submissions made through this session.
+    pub fn len(&self) -> usize {
+        self.submitted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.submitted.is_empty()
+    }
+
+    /// Receive this session's next completion (unordered). `None` on
+    /// timeout.
+    pub fn recv(&self, timeout: Duration) -> Option<Completion> {
+        self.reply_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Wait for every submission's completion and return them in
+    /// submission order — the same contract as the in-process
+    /// [`crate::coordinator::Session::wait_all`]: a dead shard's
+    /// requests come back as typed errors (delivered by the router's
+    /// teardown), and if every reply sender disappears the remainder
+    /// completes as [`PredictErrorKind::Shutdown`] rather than
+    /// hanging. Errors with [`Error::Other`] only if `timeout` elapses
+    /// first.
+    pub fn wait_all(self, timeout: Duration) -> Result<Vec<Completion>> {
+        let RemoteSession { client: _, reply_tx, reply_rx, submitted } =
+            self;
+        drop(reply_tx);
+        let n = submitted.len();
+        let mut index: HashMap<u64, usize> = HashMap::with_capacity(n);
+        for (i, (id, _)) in submitted.iter().enumerate() {
+            index.insert(*id, i);
+        }
+        let mut out: Vec<Option<Completion>> = vec![None; n];
+        let mut got = 0usize;
+        let deadline = Instant::now() + timeout;
+        while got < n {
+            let Some(remaining) =
+                deadline.checked_duration_since(Instant::now())
+            else {
+                return Err(Error::Other(format!(
+                    "session wait_all timed out with {got}/{n} completions"
+                )));
+            };
+            match reply_rx.recv_timeout(remaining) {
+                Ok(c) => {
+                    let id = match &c {
+                        Ok(resp) => resp.id,
+                        Err(e) => e.id,
+                    };
+                    if let Some(&i) = index.get(&id) {
+                        if out[i].is_none() {
+                            out[i] = Some(c);
+                            got += 1;
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    for (i, (id, model)) in submitted.iter().enumerate() {
+                        if out[i].is_none() {
+                            out[i] = Some(Err(PredictError {
+                                id: *id,
+                                model: model.clone(),
+                                kind: PredictErrorKind::Shutdown,
+                            }));
+                            got += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out.into_iter().map(Option::unwrap).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+
+    /// Independent FNV-1a/HRW reimplementation. Pins the placement
+    /// function: if either side drifts, router-side placement would
+    /// silently diverge from the in-process `ShardSet`'s and a tenant
+    /// would be served by a shard that does not own it.
+    fn hrw_reference(model: &str, n_shards: usize) -> usize {
+        if n_shards <= 1 {
+            return 0;
+        }
+        let weight = |shard: u64| -> u64 {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for &b in model.as_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            for b in shard.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+            h
+        };
+        (0..n_shards as u64)
+            .max_by_key(|&s| weight(s))
+            .unwrap_or(0) as usize
+    }
+
+    #[test]
+    fn placement_parity_router_vs_inprocess_10k() {
+        prop_cases!("placement-parity", 10_000, |rng| {
+            let len = 1 + rng.below(24);
+            let name: String = (0..len)
+                .map(|_| {
+                    let alphabet =
+                        b"abcdefghijklmnopqrstuvwxyz0123456789-_.";
+                    alphabet[rng.below(alphabet.len())] as char
+                })
+                .collect();
+            for n in [1usize, 2, 3, 5, 8, 64] {
+                let router_side = Router::place_for(&name, n);
+                let in_process = assign(&name, n);
+                assert_eq!(
+                    router_side, in_process,
+                    "router and ShardSet disagree on '{name}' over {n} \
+                     shards"
+                );
+                assert_eq!(
+                    router_side,
+                    hrw_reference(&name, n),
+                    "placement drifted from the pinned FNV-1a/HRW for \
+                     '{name}' over {n} shards"
+                );
+                assert!(router_side < n);
+            }
+        });
+    }
+
+    #[test]
+    fn placement_is_stable_as_shards_join() {
+        // Rendezvous property: growing the plane only ever moves a
+        // tenant to the *new* shard, never between old ones.
+        let models: Vec<String> =
+            (0..200).map(|i| format!("tenant-{i}")).collect();
+        for n in 2..10usize {
+            let mut moved_elsewhere = 0;
+            for m in &models {
+                let before = Router::place_for(m, n);
+                let after = Router::place_for(m, n + 1);
+                if after != before && after != n {
+                    moved_elsewhere += 1;
+                }
+            }
+            assert_eq!(
+                moved_elsewhere, 0,
+                "a tenant moved between pre-existing shards when shard \
+                 {n} joined"
+            );
+        }
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = RouterConfig::default();
+        assert!(cfg.connect_timeout > Duration::ZERO);
+        assert!(cfg.reconnect_ceiling >= BACKOFF_FLOOR);
+        assert!(cfg.control_timeout > Duration::ZERO);
+        assert_eq!(cfg.client_name, "router");
+    }
+}

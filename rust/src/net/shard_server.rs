@@ -1,0 +1,496 @@
+//! Shard server: fronts one in-process [`Coordinator`] with the `ARBW`
+//! wire protocol over `std::net::TcpListener`.
+//!
+//! Per connection the server runs three threads:
+//!
+//! * **reader** — parses frames off the socket, answers control
+//!   messages inline (metrics pull, refresh, ping) and submits
+//!   `Request` frames through the coordinator's transport seam
+//!   ([`Coordinator`] `submit_with`), under a bounded in-flight window
+//!   (backpressure per connection, not just per ingress queue);
+//! * **pump** — drains the connection's completion channel and
+//!   rewrites coordinator-assigned request ids back to the client's
+//!   correlation ids;
+//! * **writer** — serializes outbound frames behind a `BufWriter`,
+//!   flushing whenever its queue drains.
+//!
+//! Because the coordinator answers every accepted request with exactly
+//! one completion, a dying connection never strands client state: the
+//! pump drains whatever is still in flight (the frames go to a dead
+//! socket, which is fine) and all three threads exit.
+//!
+//! Timeouts: the socket read timeout doubles as the idle timeout — a
+//! peer that sends nothing for [`ShardServerConfig::read_timeout`] is
+//! disconnected. There is deliberately no *write* pacing: slow readers
+//! are bounded by the in-flight window instead.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::{
+    Completion, Coordinator, PredictError, PredictErrorKind,
+};
+use crate::registry::ModelStore;
+use crate::{log_info, log_warn, Error, Result};
+
+use super::wire::{self, Message, WIRE_VERSION};
+
+/// Tuning knobs for a [`ShardServer`].
+#[derive(Clone, Debug)]
+pub struct ShardServerConfig {
+    /// This server's shard index in the plane it participates in
+    /// (announced in the handshake; a router sanity-checks it against
+    /// the position of this address in its `--shards` list).
+    pub shard_id: u32,
+    /// Max requests in flight per connection before the reader stops
+    /// pulling new frames off the socket (bounded window).
+    pub max_in_flight: usize,
+    /// Socket read timeout; doubles as the idle timeout after which a
+    /// silent peer is disconnected.
+    pub read_timeout: Duration,
+}
+
+impl Default for ShardServerConfig {
+    fn default() -> Self {
+        ShardServerConfig {
+            shard_id: 0,
+            max_in_flight: 1024,
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Bounded in-flight window, shared by a connection's reader (acquire)
+/// and pump (release).
+struct InFlight {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    fn new() -> InFlight {
+        InFlight { n: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Block until a slot frees up; `false` if shutdown was requested
+    /// while waiting.
+    fn acquire(&self, max: usize, shutdown: &AtomicBool) -> bool {
+        let mut n = self.n.lock().unwrap();
+        while *n >= max {
+            if shutdown.load(Ordering::Relaxed) {
+                return false;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(n, Duration::from_millis(100))
+                .unwrap();
+            n = guard;
+        }
+        *n += 1;
+        true
+    }
+
+    fn release(&self) {
+        let mut n = self.n.lock().unwrap();
+        *n = n.saturating_sub(1);
+        self.cv.notify_one();
+    }
+}
+
+/// Correlation state shared by a connection's reader and pump: the
+/// coordinator assigns its own request ids, the wire carries the
+/// client's. `orphans` holds completions that raced ahead of the
+/// reader's id registration (the executor can complete a request
+/// before `submit_with`'s caller regains the lock).
+#[derive(Default)]
+struct ConnState {
+    map: HashMap<u64, u64>,
+    orphans: Vec<Completion>,
+}
+
+fn completion_id(c: &Completion) -> u64 {
+    match c {
+        Ok(r) => r.id,
+        Err(e) => e.id,
+    }
+}
+
+/// Rewrite a completion's coordinator id to the client's correlation
+/// id and wrap it as a wire message.
+fn completion_to_wire(c: Completion, wire_id: u64) -> Message {
+    match c {
+        Ok(mut r) => {
+            r.id = wire_id;
+            Message::Response(r)
+        }
+        Err(mut e) => {
+            e.id = wire_id;
+            Message::Error(e)
+        }
+    }
+}
+
+fn io_timed_out(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// A running shard server. Owns its coordinator: dropping (or
+/// [`ShardServer::shutdown`]-ing) the server tears the whole lane
+/// down.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    coord: Option<Arc<Coordinator>>,
+}
+
+impl ShardServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:7070"`, port 0 for ephemeral)
+    /// and serve `coord` over it. `store` supplies the handshake's
+    /// model dimension table.
+    pub fn bind(
+        listen: &str,
+        coord: Coordinator,
+        store: Arc<ModelStore>,
+        config: ShardServerConfig,
+    ) -> Result<ShardServer> {
+        let listener = TcpListener::bind(listen).map_err(Error::Io)?;
+        let addr = listener.local_addr().map_err(Error::Io)?;
+        listener.set_nonblocking(true).map_err(Error::Io)?;
+        let coord = Arc::new(coord);
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+
+        let a_stop = stop.clone();
+        let a_conns = conns.clone();
+        let a_handlers = handlers.clone();
+        let a_coord = coord.clone();
+        let accept = std::thread::Builder::new()
+            .name("approxrbf-net-accept".to_string())
+            .spawn(move || {
+                while !a_stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log_info!("shard server: connection from {peer}");
+                            let _ = stream.set_nodelay(true);
+                            let _ = stream
+                                .set_read_timeout(Some(config.read_timeout));
+                            if let Ok(clone) = stream.try_clone() {
+                                a_conns.lock().unwrap().push(clone);
+                            }
+                            let coord = a_coord.clone();
+                            let store = store.clone();
+                            let cfg = config.clone();
+                            let stop = a_stop.clone();
+                            let h = std::thread::Builder::new()
+                                .name("approxrbf-net-conn".to_string())
+                                .spawn(move || {
+                                    handle_connection(
+                                        stream, coord, store, cfg, stop,
+                                    );
+                                });
+                            match h {
+                                Ok(h) => {
+                                    a_handlers.lock().unwrap().push(h)
+                                }
+                                Err(e) => log_warn!(
+                                    "shard server: spawn failed: {e}"
+                                ),
+                            }
+                        }
+                        Err(e) if io_timed_out(&e) => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(e) => {
+                            log_warn!("shard server: accept failed: {e}");
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Other(format!("spawn accept loop: {e}")))?;
+
+        Ok(ShardServer {
+            addr,
+            stop,
+            accept: Some(accept),
+            conns,
+            handlers,
+            coord: Some(coord),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, disconnect every peer, join every connection
+    /// thread, then shut the coordinator down.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_serving();
+        match self.coord.take() {
+            Some(coord) => match Arc::try_unwrap(coord) {
+                Ok(c) => c.shutdown(),
+                // A handler leaked a reference (should not happen after
+                // the joins above); its Drop will tear the plane down.
+                Err(_) => Ok(()),
+            },
+            None => Ok(()),
+        }
+    }
+
+    fn stop_serving(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handlers: Vec<_> =
+            self.handlers.lock().unwrap().drain(..).collect();
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop_serving();
+        // The coordinator Arc drops here; its own Drop shuts the
+        // serving plane down once the last reference is gone.
+    }
+}
+
+/// Serve one accepted connection until EOF, idle timeout, damage or
+/// server shutdown.
+fn handle_connection(
+    mut stream: TcpStream,
+    coord: Arc<Coordinator>,
+    store: Arc<ModelStore>,
+    config: ShardServerConfig,
+    stop: Arc<AtomicBool>,
+) {
+    // Handshake: the first frame must be a version-compatible Hello.
+    match wire::read_frame(&mut stream) {
+        Ok(Some(Message::Hello { version, client }))
+            if version == WIRE_VERSION =>
+        {
+            log_info!("shard server: hello from '{client}' (v{version})");
+        }
+        Ok(Some(Message::Hello { version, .. })) => {
+            // A clean typed refusal, not a hang: the client hears why.
+            let refuse = Message::Error(PredictError {
+                id: 0,
+                model: Arc::from(""),
+                kind: PredictErrorKind::Exec {
+                    detail: format!(
+                        "unsupported wire version {version} (server \
+                         speaks {WIRE_VERSION})"
+                    ),
+                },
+            });
+            let _ = wire::write_frame(&mut stream, &refuse);
+            let _ = stream.flush();
+            return;
+        }
+        Ok(other) => {
+            log_warn!(
+                "shard server: peer opened with {:?} instead of Hello",
+                other.map(|m| m.kind())
+            );
+            return;
+        }
+        Err(e) => {
+            log_warn!("shard server: handshake read failed: {e}");
+            return;
+        }
+    }
+    let dims = match store.list() {
+        Ok(infos) => infos
+            .iter()
+            .map(|i| (i.id.clone(), i.dim as u32))
+            .collect(),
+        Err(e) => {
+            log_warn!("shard server: dim table unavailable: {e}");
+            Vec::new()
+        }
+    };
+    let ack = Message::HelloAck {
+        version: WIRE_VERSION,
+        shard_id: config.shard_id,
+        shard_count: coord.shard_count() as u32,
+        dims,
+    };
+    if wire::write_frame(&mut stream, &ack)
+        .and_then(|()| stream.flush().map_err(Error::Io))
+        .is_err()
+    {
+        return;
+    }
+
+    let Ok(write_stream) = stream.try_clone() else {
+        log_warn!("shard server: stream clone failed");
+        return;
+    };
+    let (out_tx, out_rx) = mpsc::channel::<Message>();
+    let (reply_tx, reply_rx) = mpsc::channel::<Completion>();
+    let window = Arc::new(InFlight::new());
+    let state = Arc::new(Mutex::new(ConnState::default()));
+
+    let writer =
+        std::thread::spawn(move || run_writer(write_stream, out_rx));
+    let pump = {
+        let out_tx = out_tx.clone();
+        let window = window.clone();
+        let state = state.clone();
+        std::thread::spawn(move || run_pump(reply_rx, out_tx, window, state))
+    };
+
+    // Reader loop (this thread).
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let msg = match wire::read_frame(&mut stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => break, // clean EOF
+            Err(Error::Io(e)) if io_timed_out(&e) => {
+                log_info!("shard server: idle timeout, disconnecting");
+                break;
+            }
+            Err(e) => {
+                log_warn!("shard server: dropping connection: {e}");
+                break;
+            }
+        };
+        match msg {
+            Message::Request { id: wire_id, model, features } => {
+                if !window.acquire(config.max_in_flight, &stop) {
+                    break;
+                }
+                match coord.submit_with(&model, features, &reply_tx) {
+                    Ok(coord_id) => {
+                        let mut st = state.lock().unwrap();
+                        if let Some(pos) = st
+                            .orphans
+                            .iter()
+                            .position(|c| completion_id(c) == coord_id)
+                        {
+                            // The executor finished before we could
+                            // register the id; deliver directly.
+                            let c = st.orphans.swap_remove(pos);
+                            drop(st);
+                            window.release();
+                            let _ =
+                                out_tx.send(completion_to_wire(c, wire_id));
+                        } else {
+                            st.map.insert(coord_id, wire_id);
+                        }
+                    }
+                    Err(mut e) => {
+                        // Submit-side refusal: no completion will ever
+                        // arrive for this request, answer inline.
+                        window.release();
+                        e.id = wire_id;
+                        let _ = out_tx.send(Message::Error(e));
+                    }
+                }
+            }
+            Message::MetricsPull => {
+                let _ =
+                    out_tx.send(Message::Metrics(coord.metrics_states()));
+            }
+            Message::Refresh => {
+                coord.refresh();
+                let _ = out_tx.send(Message::Ack);
+            }
+            Message::Ping => {
+                let _ = out_tx.send(Message::Pong);
+            }
+            other => {
+                log_warn!(
+                    "shard server: unexpected frame kind {} mid-stream, \
+                     dropping connection",
+                    other.kind()
+                );
+                break;
+            }
+        }
+    }
+
+    // Teardown: once our reply sender is gone, the pump's channel
+    // disconnects after the last in-flight completion arrives (the
+    // coordinator completes every accepted request exactly once), then
+    // the writer's queue disconnects after the pump drops its sender.
+    drop(reply_tx);
+    let _ = pump.join();
+    drop(out_tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Translate completions to wire frames until every reply sender is
+/// gone (reader exited *and* nothing is left in flight).
+fn run_pump(
+    reply_rx: Receiver<Completion>,
+    out_tx: Sender<Message>,
+    window: Arc<InFlight>,
+    state: Arc<Mutex<ConnState>>,
+) {
+    loop {
+        match reply_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(c) => {
+                let coord_id = completion_id(&c);
+                let mut st = state.lock().unwrap();
+                match st.map.remove(&coord_id) {
+                    Some(wire_id) => {
+                        drop(st);
+                        window.release();
+                        let _ = out_tx.send(completion_to_wire(c, wire_id));
+                    }
+                    // Raced ahead of the reader's registration; the
+                    // reader delivers it when it learns the id.
+                    None => st.orphans.push(c),
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// Serialize outbound frames; flush whenever the queue drains so bursts
+/// share a syscall but a lone reply never waits.
+fn run_writer(stream: TcpStream, out_rx: Receiver<Message>) {
+    let mut w = std::io::BufWriter::new(stream);
+    while let Ok(msg) = out_rx.recv() {
+        if wire::write_frame(&mut w, &msg).is_err() {
+            return;
+        }
+        while let Ok(next) = out_rx.try_recv() {
+            if wire::write_frame(&mut w, &next).is_err() {
+                return;
+            }
+        }
+        if w.flush().is_err() {
+            return;
+        }
+    }
+}

@@ -1,0 +1,967 @@
+//! `ARBW` wire protocol: length-prefixed, CRC32-checked binary frames
+//! over a byte stream.
+//!
+//! The frame discipline deliberately mirrors the `.arbf` record format
+//! (`crate::registry::binfmt`): a fixed little-endian header carrying a
+//! magic, a kind tag, a CRC32 of the payload and the payload length —
+//! with the same alloc-bomb caps (a length field is *never* trusted
+//! before it is bounds-checked) and the same typed
+//! [`Error::Corrupt`](crate::Error::Corrupt) on any damage: bad magic,
+//! unknown kind, checksum mismatch, truncation, trailing bytes.
+//!
+//! ```text
+//! frame   := header payload
+//! header  := magic[4]="ARBW" kind:u16 reserved:u16 crc32:u32 len:u32
+//! payload := kind-specific body, len bytes, crc32 over payload only
+//! ```
+//!
+//! Messages (kind tags):
+//!
+//! | tag | message       | direction        | body                       |
+//! |-----|---------------|------------------|----------------------------|
+//! | 1   | `Hello`       | client → server  | protocol version, client   |
+//! | 2   | `HelloAck`    | server → client  | version, shard id/count, dim table |
+//! | 3   | `Request`     | client → server  | id, model, features        |
+//! | 4   | `Response`    | server → client  | served prediction          |
+//! | 5   | `Error`       | server → client  | typed fail-fast error      |
+//! | 6   | `MetricsPull` | client → server  | —                          |
+//! | 7   | `Metrics`     | server → client  | per-lane raw sink states   |
+//! | 8   | `Refresh`     | client → server  | —                          |
+//! | 9   | `Ack`         | server → client  | —                          |
+//! | 10  | `Ping`        | either           | —                          |
+//! | 11  | `Pong`        | either           | —                          |
+//!
+//! Versioning: the version rides in `Hello`/`HelloAck`, not in every
+//! frame header. A server refuses a `Hello` whose version it does not
+//! speak (the client gets a clean `Error` frame, not a hang), and
+//! unknown *kinds* are `Corrupt` — forward compatibility is by version
+//! negotiation, never by silently skipping frames. See `docs/WIRE.md`.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::coordinator::{
+    MetricsState, ModelMetricsState, PredictError, PredictErrorKind,
+    PredictResponse, Route, WelfordState,
+};
+use crate::registry::binfmt::{
+    push_f32, push_f64, push_u16, push_u32, push_u64, Reader,
+};
+use crate::util::crc32::crc32;
+use crate::{Error, Result};
+
+/// Frame magic: `ARBW` ("approx RBF wire"; the `.arbf` sibling).
+pub const WIRE_MAGIC: [u8; 4] = *b"ARBW";
+/// Protocol version negotiated in `Hello`/`HelloAck`.
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed frame header length in bytes.
+pub const FRAME_HEADER_LEN: usize = 16;
+/// Hard cap on a single frame payload (alloc-bomb guard: a corrupted
+/// or hostile length field can never make the reader allocate more
+/// than this before the CRC is even checked).
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 24;
+/// Cap on counted tables in a payload (dim tables, per-model rows) —
+/// mirrors `binfmt::MAX_RECORDS` in spirit: counts are validated
+/// before any allocation sized by them.
+pub const MAX_WIRE_MODELS: usize = 4096;
+/// Cap on a transported string (model ids are ≤128 by
+/// [`crate::registry::ModelStore`] validation; error details are
+/// clipped to this at encode).
+pub const MAX_WIRE_STR: usize = 4096;
+/// Cap on a transported latency histogram's bucket count.
+pub const MAX_WIRE_BUCKETS: usize = 1024;
+
+const K_HELLO: u16 = 1;
+const K_HELLO_ACK: u16 = 2;
+const K_REQUEST: u16 = 3;
+const K_RESPONSE: u16 = 4;
+const K_ERROR: u16 = 5;
+const K_METRICS_PULL: u16 = 6;
+const K_METRICS: u16 = 7;
+const K_REFRESH: u16 = 8;
+const K_ACK: u16 = 9;
+const K_PING: u16 = 10;
+const K_PONG: u16 = 11;
+
+/// One protocol message. `Response`/`Error` carry the coordinator's
+/// own types, so the network tier converts at the wire boundary only.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Client's opening frame on every connection.
+    Hello {
+        /// [`WIRE_VERSION`] the client speaks.
+        version: u16,
+        /// Free-form client name for diagnostics (e.g. `"router"`).
+        client: String,
+    },
+    /// Server's handshake reply: who this shard is and what it serves.
+    HelloAck {
+        version: u16,
+        /// This server's shard index in the plane (diagnostics).
+        shard_id: u32,
+        /// Executor lanes behind this server.
+        shard_count: u32,
+        /// `(model id, feature dimension)` for every published model,
+        /// so routers validate dimensions client-side without a
+        /// round-trip per request.
+        dims: Vec<(String, u32)>,
+    },
+    /// One instance for one model. `id` is the *client's* correlation
+    /// id, echoed verbatim in the matching `Response`/`Error`.
+    Request { id: u64, model: String, features: Vec<f32> },
+    /// A served prediction (ids are rewritten back to the client's
+    /// correlation id by the server).
+    Response(PredictResponse),
+    /// A typed fail-fast completion for a request that could not be
+    /// served — same contract as the in-process plane.
+    Error(PredictError),
+    /// Ask the server for its raw metrics sink states.
+    MetricsPull,
+    /// Reply to [`Message::MetricsPull`]: one raw state per executor
+    /// lane, in shard order. Raw sufficient statistics, not
+    /// pre-averaged numbers, so the router's
+    /// [`crate::coordinator::Metrics::aggregate`] is exact.
+    Metrics(Vec<MetricsState>),
+    /// Ask the server to revalidate model generations now
+    /// ([`crate::coordinator::Coordinator::refresh`]); answered with
+    /// [`Message::Ack`].
+    Refresh,
+    Ack,
+    Ping,
+    Pong,
+}
+
+impl Message {
+    /// This message's frame kind tag.
+    pub fn kind(&self) -> u16 {
+        match self {
+            Message::Hello { .. } => K_HELLO,
+            Message::HelloAck { .. } => K_HELLO_ACK,
+            Message::Request { .. } => K_REQUEST,
+            Message::Response(_) => K_RESPONSE,
+            Message::Error(_) => K_ERROR,
+            Message::MetricsPull => K_METRICS_PULL,
+            Message::Metrics(_) => K_METRICS,
+            Message::Refresh => K_REFRESH,
+            Message::Ack => K_ACK,
+            Message::Ping => K_PING,
+            Message::Pong => K_PONG,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// encode
+// ---------------------------------------------------------------------
+
+/// Clip a diagnostic string to `max` bytes on a char boundary (error
+/// details may quote arbitrary input; the wire caps them rather than
+/// refusing to transport the error).
+fn clipped(s: &str, max: usize) -> &str {
+    if s.len() <= max {
+        return s;
+    }
+    let mut end = max;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > u16::MAX as usize {
+        return Err(Error::InvalidArg(format!(
+            "wire string too long ({} bytes)",
+            s.len()
+        )));
+    }
+    push_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn push_welford(out: &mut Vec<u8>, w: &WelfordState) {
+    push_u64(out, w.count);
+    push_f64(out, w.mean);
+    push_f64(out, w.m2);
+    push_f64(out, w.min);
+    push_f64(out, w.max);
+}
+
+fn encode_payload(msg: &Message) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    match msg {
+        Message::Hello { version, client } => {
+            push_u16(&mut out, *version);
+            push_str(&mut out, clipped(client, MAX_WIRE_STR))?;
+        }
+        Message::HelloAck { version, shard_id, shard_count, dims } => {
+            if dims.len() > MAX_WIRE_MODELS {
+                return Err(Error::InvalidArg(format!(
+                    "dim table has {} entries (cap {MAX_WIRE_MODELS})",
+                    dims.len()
+                )));
+            }
+            push_u16(&mut out, *version);
+            push_u32(&mut out, *shard_id);
+            push_u32(&mut out, *shard_count);
+            push_u32(&mut out, dims.len() as u32);
+            for (id, dim) in dims {
+                push_str(&mut out, id)?;
+                push_u32(&mut out, *dim);
+            }
+        }
+        Message::Request { id, model, features } => {
+            push_u64(&mut out, *id);
+            push_str(&mut out, model)?;
+            push_u32(&mut out, features.len() as u32);
+            for &f in features {
+                push_f32(&mut out, f);
+            }
+        }
+        Message::Response(r) => {
+            push_u64(&mut out, r.id);
+            push_str(&mut out, &r.model)?;
+            push_u64(&mut out, r.generation);
+            push_f32(&mut out, r.decision);
+            push_f32(&mut out, r.label);
+            out.push(match r.route {
+                Route::Approx => 0,
+                Route::Exact => 1,
+            });
+            push_f32(&mut out, r.znorm_sq);
+            out.push(u8::from(r.in_bound));
+            push_u64(&mut out, r.latency.as_micros() as u64);
+        }
+        Message::Error(e) => {
+            push_u64(&mut out, e.id);
+            push_str(&mut out, &e.model)?;
+            match &e.kind {
+                PredictErrorKind::UnknownModel { detail } => {
+                    out.push(1);
+                    push_str(&mut out, clipped(detail, MAX_WIRE_STR))?;
+                }
+                PredictErrorKind::DimMismatch { got, want } => {
+                    out.push(2);
+                    push_u64(&mut out, *got as u64);
+                    push_u64(&mut out, *want as u64);
+                }
+                PredictErrorKind::Exec { detail } => {
+                    out.push(3);
+                    push_str(&mut out, clipped(detail, MAX_WIRE_STR))?;
+                }
+                PredictErrorKind::Shutdown => out.push(4),
+            }
+        }
+        Message::Metrics(states) => {
+            if states.len() > MAX_WIRE_MODELS {
+                return Err(Error::InvalidArg(format!(
+                    "{} metrics states (cap {MAX_WIRE_MODELS})",
+                    states.len()
+                )));
+            }
+            push_u32(&mut out, states.len() as u32);
+            for s in states {
+                if s.histogram.len() > MAX_WIRE_BUCKETS {
+                    return Err(Error::InvalidArg(format!(
+                        "histogram has {} buckets (cap {MAX_WIRE_BUCKETS})",
+                        s.histogram.len()
+                    )));
+                }
+                if s.per_model.len() > MAX_WIRE_MODELS {
+                    return Err(Error::InvalidArg(format!(
+                        "{} per-model rows (cap {MAX_WIRE_MODELS})",
+                        s.per_model.len()
+                    )));
+                }
+                push_u64(&mut out, s.served_approx);
+                push_u64(&mut out, s.served_exact);
+                push_u64(&mut out, s.out_of_bound);
+                push_u64(&mut out, s.dropped);
+                push_u64(&mut out, s.batches);
+                push_u64(&mut out, s.queue_depth);
+                push_f64(&mut out, s.uptime_s);
+                push_welford(&mut out, &s.batch_sizes);
+                push_welford(&mut out, &s.latency);
+                push_u32(&mut out, s.histogram.len() as u32);
+                for &h in &s.histogram {
+                    push_u64(&mut out, h);
+                }
+                push_u32(&mut out, s.per_model.len() as u32);
+                for m in &s.per_model {
+                    push_str(&mut out, &m.id)?;
+                    push_u64(&mut out, m.served_approx);
+                    push_u64(&mut out, m.served_exact);
+                    push_u64(&mut out, m.out_of_bound);
+                    push_u64(&mut out, m.dropped);
+                    push_welford(&mut out, &m.latency);
+                }
+            }
+        }
+        Message::MetricsPull
+        | Message::Refresh
+        | Message::Ack
+        | Message::Ping
+        | Message::Pong => {}
+    }
+    Ok(out)
+}
+
+/// Encode one message as a complete frame (header + payload).
+pub fn encode_frame(msg: &Message) -> Result<Vec<u8>> {
+    let payload = encode_payload(msg)?;
+    if payload.len() > MAX_FRAME_PAYLOAD {
+        return Err(Error::InvalidArg(format!(
+            "frame payload of {} bytes exceeds cap {MAX_FRAME_PAYLOAD}",
+            payload.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&WIRE_MAGIC);
+    push_u16(&mut out, msg.kind());
+    push_u16(&mut out, 0); // reserved
+    push_u32(&mut out, crc32(&payload));
+    push_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Encode and write one frame. The caller owns flushing (a writer
+/// thread batches several frames per flush under load).
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    let bytes = encode_frame(msg)?;
+    w.write_all(&bytes).map_err(Error::Io)
+}
+
+// ---------------------------------------------------------------------
+// decode
+// ---------------------------------------------------------------------
+
+fn read_str(rd: &mut Reader<'_>, what: &str) -> Result<String> {
+    let n = rd.u16(what)? as usize;
+    let bytes = rd.take(n, what)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| {
+        Error::Corrupt(format!("{what}: invalid utf-8 in wire string"))
+    })
+}
+
+fn read_welford(rd: &mut Reader<'_>, what: &str) -> Result<WelfordState> {
+    Ok(WelfordState {
+        count: rd.u64(what)?,
+        mean: rd.f64(what)?,
+        m2: rd.f64(what)?,
+        min: rd.f64(what)?,
+        max: rd.f64(what)?,
+    })
+}
+
+fn read_route(rd: &mut Reader<'_>) -> Result<Route> {
+    match rd.u8("route")? {
+        0 => Ok(Route::Approx),
+        1 => Ok(Route::Exact),
+        other => {
+            Err(Error::Corrupt(format!("unknown route tag {other}")))
+        }
+    }
+}
+
+/// Validate a counted-table length against its cap *before* any
+/// allocation sized by it.
+fn checked_count(n: u32, cap: usize, what: &str) -> Result<usize> {
+    let n = n as usize;
+    if n > cap {
+        return Err(Error::Corrupt(format!(
+            "{what}: count {n} exceeds cap {cap}"
+        )));
+    }
+    Ok(n)
+}
+
+fn decode_payload(kind: u16, payload: &[u8]) -> Result<Message> {
+    let mut rd = Reader { buf: payload, pos: 0 };
+    let msg = match kind {
+        K_HELLO => Message::Hello {
+            version: rd.u16("hello version")?,
+            client: read_str(&mut rd, "hello client")?,
+        },
+        K_HELLO_ACK => {
+            let version = rd.u16("helloack version")?;
+            let shard_id = rd.u32("helloack shard id")?;
+            let shard_count = rd.u32("helloack shard count")?;
+            let n = checked_count(
+                rd.u32("helloack dim count")?,
+                MAX_WIRE_MODELS,
+                "dim table",
+            )?;
+            let mut dims = Vec::with_capacity(n);
+            for _ in 0..n {
+                let id = read_str(&mut rd, "dim table id")?;
+                let dim = rd.u32("dim table dim")?;
+                dims.push((id, dim));
+            }
+            Message::HelloAck { version, shard_id, shard_count, dims }
+        }
+        K_REQUEST => {
+            let id = rd.u64("request id")?;
+            let model = read_str(&mut rd, "request model")?;
+            let n = rd.u32("request feature count")? as usize;
+            // f32_vec bounds-checks against the actual buffer before
+            // allocating, so a hostile count cannot alloc-bomb.
+            let features = rd.f32_vec(n, "request features")?;
+            Message::Request { id, model, features }
+        }
+        K_RESPONSE => {
+            let id = rd.u64("response id")?;
+            let model = read_str(&mut rd, "response model")?;
+            let generation = rd.u64("response generation")?;
+            let decision = rd.f32("response decision")?;
+            let label = rd.f32("response label")?;
+            let route = read_route(&mut rd)?;
+            let znorm_sq = rd.f32("response znorm_sq")?;
+            let in_bound = match rd.u8("response in_bound")? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(Error::Corrupt(format!(
+                        "in_bound must be 0/1, got {other}"
+                    )))
+                }
+            };
+            let latency =
+                Duration::from_micros(rd.u64("response latency")?);
+            Message::Response(PredictResponse {
+                id,
+                model: std::sync::Arc::from(model.as_str()),
+                generation,
+                decision,
+                label,
+                route,
+                znorm_sq,
+                in_bound,
+                latency,
+            })
+        }
+        K_ERROR => {
+            let id = rd.u64("error id")?;
+            let model = read_str(&mut rd, "error model")?;
+            let kind = match rd.u8("error kind tag")? {
+                1 => PredictErrorKind::UnknownModel {
+                    detail: read_str(&mut rd, "error detail")?,
+                },
+                2 => PredictErrorKind::DimMismatch {
+                    got: rd.u64("error got")? as usize,
+                    want: rd.u64("error want")? as usize,
+                },
+                3 => PredictErrorKind::Exec {
+                    detail: read_str(&mut rd, "error detail")?,
+                },
+                4 => PredictErrorKind::Shutdown,
+                other => {
+                    return Err(Error::Corrupt(format!(
+                        "unknown error kind tag {other}"
+                    )))
+                }
+            };
+            Message::Error(PredictError {
+                id,
+                model: std::sync::Arc::from(model.as_str()),
+                kind,
+            })
+        }
+        K_METRICS => {
+            let n = checked_count(
+                rd.u32("metrics state count")?,
+                MAX_WIRE_MODELS,
+                "metrics states",
+            )?;
+            let mut states = Vec::with_capacity(n);
+            for _ in 0..n {
+                let served_approx = rd.u64("metrics served_approx")?;
+                let served_exact = rd.u64("metrics served_exact")?;
+                let out_of_bound = rd.u64("metrics out_of_bound")?;
+                let dropped = rd.u64("metrics dropped")?;
+                let batches = rd.u64("metrics batches")?;
+                let queue_depth = rd.u64("metrics queue_depth")?;
+                let uptime_s = rd.f64("metrics uptime")?;
+                let batch_sizes =
+                    read_welford(&mut rd, "metrics batch_sizes")?;
+                let latency = read_welford(&mut rd, "metrics latency")?;
+                let hn = checked_count(
+                    rd.u32("metrics histogram len")?,
+                    MAX_WIRE_BUCKETS,
+                    "histogram",
+                )?;
+                let mut histogram = Vec::with_capacity(hn);
+                for _ in 0..hn {
+                    histogram.push(rd.u64("metrics histogram bucket")?);
+                }
+                let mn = checked_count(
+                    rd.u32("metrics model count")?,
+                    MAX_WIRE_MODELS,
+                    "per-model rows",
+                )?;
+                let mut per_model = Vec::with_capacity(mn);
+                for _ in 0..mn {
+                    per_model.push(ModelMetricsState {
+                        id: read_str(&mut rd, "model row id")?,
+                        served_approx: rd.u64("model row served_approx")?,
+                        served_exact: rd.u64("model row served_exact")?,
+                        out_of_bound: rd.u64("model row out_of_bound")?,
+                        dropped: rd.u64("model row dropped")?,
+                        latency: read_welford(&mut rd, "model row latency")?,
+                    });
+                }
+                states.push(MetricsState {
+                    served_approx,
+                    served_exact,
+                    out_of_bound,
+                    dropped,
+                    batches,
+                    queue_depth,
+                    uptime_s,
+                    batch_sizes,
+                    latency,
+                    histogram,
+                    per_model,
+                });
+            }
+            Message::Metrics(states)
+        }
+        K_METRICS_PULL => Message::MetricsPull,
+        K_REFRESH => Message::Refresh,
+        K_ACK => Message::Ack,
+        K_PING => Message::Ping,
+        K_PONG => Message::Pong,
+        other => {
+            return Err(Error::Corrupt(format!(
+                "unknown frame kind {other}"
+            )))
+        }
+    };
+    if rd.pos != rd.buf.len() {
+        return Err(Error::Corrupt(format!(
+            "{} trailing byte(s) after frame payload",
+            rd.buf.len() - rd.pos
+        )));
+    }
+    Ok(msg)
+}
+
+/// Parse and validate a frame header; returns `(kind, crc, len)`.
+fn parse_header(header: &[u8; FRAME_HEADER_LEN]) -> Result<(u16, u32, usize)> {
+    if header[0..4] != WIRE_MAGIC {
+        return Err(Error::Corrupt(format!(
+            "bad wire magic {:02x?} (want {:02x?})",
+            &header[0..4],
+            WIRE_MAGIC
+        )));
+    }
+    let kind = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    // header[6..8] is reserved; tolerated on read (forward compat),
+    // always written 0 — same contract as .arbf reserved bytes.
+    let crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    let len = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(Error::Corrupt(format!(
+            "frame payload length {len} exceeds cap {MAX_FRAME_PAYLOAD}"
+        )));
+    }
+    Ok((kind, crc, len))
+}
+
+/// Decode one complete frame from a byte slice; returns the message
+/// and the total number of bytes consumed. Mirrors `binfmt::decode`'s
+/// negative space: every class of damage is a typed `Corrupt`.
+pub fn decode_frame(bytes: &[u8]) -> Result<(Message, usize)> {
+    if bytes.len() < FRAME_HEADER_LEN {
+        return Err(Error::Corrupt(format!(
+            "truncated frame header: {} of {FRAME_HEADER_LEN} bytes",
+            bytes.len()
+        )));
+    }
+    let header: &[u8; FRAME_HEADER_LEN] =
+        bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+    let (kind, crc, len) = parse_header(header)?;
+    let total = FRAME_HEADER_LEN + len;
+    if bytes.len() < total {
+        return Err(Error::Corrupt(format!(
+            "truncated frame payload: {} of {len} bytes",
+            bytes.len() - FRAME_HEADER_LEN
+        )));
+    }
+    let payload = &bytes[FRAME_HEADER_LEN..total];
+    let got = crc32(payload);
+    if got != crc {
+        return Err(Error::Corrupt(format!(
+            "frame crc mismatch: stored {crc:#010x}, computed {got:#010x}"
+        )));
+    }
+    Ok((decode_payload(kind, payload)?, total))
+}
+
+/// Read one frame from a blocking stream.
+///
+/// Returns `Ok(None)` on a clean EOF at a frame boundary (the peer
+/// closed between frames — the normal end of a connection); EOF
+/// *inside* a frame is `Corrupt`. Read timeouts and other I/O failures
+/// surface as [`Error::Io`] for the caller's reconnect logic.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Message>> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let mut got = 0usize;
+    while got < FRAME_HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(Error::Corrupt(format!(
+                    "eof inside frame header ({got} of \
+                     {FRAME_HEADER_LEN} bytes)"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let (kind, crc, len) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    match r.read_exact(&mut payload) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            return Err(Error::Corrupt(
+                "eof inside frame payload".to_string(),
+            ))
+        }
+        Err(e) => return Err(Error::Io(e)),
+    }
+    let computed = crc32(&payload);
+    if computed != crc {
+        return Err(Error::Corrupt(format!(
+            "frame crc mismatch: stored {crc:#010x}, computed \
+             {computed:#010x}"
+        )));
+    }
+    decode_payload(kind, &payload).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_cases;
+
+    fn mid(s: &str) -> crate::coordinator::ModelId {
+        std::sync::Arc::from(s)
+    }
+
+    fn sample_response() -> Message {
+        Message::Response(PredictResponse {
+            id: 42,
+            model: mid("tenant-α"),
+            generation: 7,
+            decision: -0.25,
+            label: -1.0,
+            route: Route::Exact,
+            znorm_sq: 1.5,
+            in_bound: false,
+            latency: Duration::from_micros(1234),
+        })
+    }
+
+    fn sample_metrics() -> Message {
+        Message::Metrics(vec![MetricsState {
+            served_approx: 10,
+            served_exact: 3,
+            out_of_bound: 1,
+            dropped: 2,
+            batches: 4,
+            queue_depth: 6,
+            uptime_s: 1.5,
+            batch_sizes: WelfordState {
+                count: 4,
+                mean: 3.25,
+                m2: 0.5,
+                min: 1.0,
+                max: 5.0,
+            },
+            latency: WelfordState {
+                count: 13,
+                mean: 1e-4,
+                m2: 1e-9,
+                min: 5e-5,
+                max: 3e-4,
+            },
+            histogram: vec![0, 1, 5, 7],
+            per_model: vec![ModelMetricsState {
+                id: "alpha".to_string(),
+                served_approx: 10,
+                served_exact: 3,
+                out_of_bound: 1,
+                dropped: 2,
+                latency: WelfordState {
+                    count: 13,
+                    mean: 1e-4,
+                    m2: 1e-9,
+                    min: 5e-5,
+                    max: 3e-4,
+                },
+            }],
+        }])
+    }
+
+    fn all_samples() -> Vec<Message> {
+        vec![
+            Message::Hello {
+                version: WIRE_VERSION,
+                client: "router".to_string(),
+            },
+            Message::HelloAck {
+                version: WIRE_VERSION,
+                shard_id: 2,
+                shard_count: 3,
+                dims: vec![
+                    ("alpha".to_string(), 8),
+                    ("bravo.v2".to_string(), 128),
+                ],
+            },
+            Message::Request {
+                id: 9,
+                model: "alpha".to_string(),
+                features: vec![0.5, -1.25, 3.75],
+            },
+            Message::Request {
+                id: 10,
+                model: "empty".to_string(),
+                features: vec![],
+            },
+            sample_response(),
+            Message::Error(PredictError {
+                id: 11,
+                model: mid("ghost"),
+                kind: PredictErrorKind::UnknownModel {
+                    detail: "no such bundle".to_string(),
+                },
+            }),
+            Message::Error(PredictError {
+                id: 12,
+                model: mid("alpha"),
+                kind: PredictErrorKind::DimMismatch { got: 3, want: 8 },
+            }),
+            Message::Error(PredictError {
+                id: 13,
+                model: mid("alpha"),
+                kind: PredictErrorKind::Exec {
+                    detail: "boom".to_string(),
+                },
+            }),
+            Message::Error(PredictError {
+                id: 14,
+                model: mid("alpha"),
+                kind: PredictErrorKind::Shutdown,
+            }),
+            Message::MetricsPull,
+            sample_metrics(),
+            Message::Refresh,
+            Message::Ack,
+            Message::Ping,
+            Message::Pong,
+        ]
+    }
+
+    #[test]
+    fn every_message_kind_roundtrips() {
+        for msg in all_samples() {
+            let frame = encode_frame(&msg).unwrap();
+            let (back, used) = decode_frame(&frame).unwrap();
+            assert_eq!(used, frame.len(), "{msg:?}");
+            assert_eq!(back, msg);
+            // And through the stream reader.
+            let mut cursor: &[u8] = &frame;
+            let back = read_frame(&mut cursor).unwrap().unwrap();
+            assert_eq!(back, msg);
+            assert!(cursor.is_empty());
+        }
+    }
+
+    #[test]
+    fn stream_reader_handles_back_to_back_frames_and_clean_eof() {
+        let msgs = all_samples();
+        let mut stream = Vec::new();
+        for m in &msgs {
+            stream.extend_from_slice(&encode_frame(m).unwrap());
+        }
+        let mut cursor: &[u8] = &stream;
+        for want in &msgs {
+            let got = read_frame(&mut cursor).unwrap().unwrap();
+            assert_eq!(&got, want);
+        }
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_typed_corrupt() {
+        let frame = encode_frame(&sample_response()).unwrap();
+        for cut in 1..frame.len() {
+            let err = decode_frame(&frame[..cut]).unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt(_)),
+                "cut at {cut}: {err}"
+            );
+            // The stream reader agrees (EOF mid-frame is corruption,
+            // not a clean end).
+            let mut cursor = &frame[..cut];
+            let err = read_frame(&mut cursor).unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt(_)),
+                "stream cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn crc_bitflip_anywhere_in_payload_is_corrupt() {
+        let frame = encode_frame(&sample_metrics()).unwrap();
+        for pos in FRAME_HEADER_LEN..frame.len() {
+            let mut bad = frame.clone();
+            bad[pos] ^= 0x20;
+            let err = decode_frame(&bad).unwrap_err();
+            assert!(
+                matches!(err, Error::Corrupt(_)),
+                "flip at {pos}: {err}"
+            );
+            assert!(
+                err.to_string().contains("crc"),
+                "flip at {pos} should fail the checksum: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn header_negatives_are_typed_corrupt() {
+        let frame = encode_frame(&Message::Ping).unwrap();
+
+        // Bad magic.
+        let mut bad = frame.clone();
+        bad[0] ^= 0xff;
+        let err = decode_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // Unknown kind (payload empty, crc still valid).
+        let mut bad = frame.clone();
+        bad[4] = 0xee;
+        bad[5] = 0xee;
+        let err = decode_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+
+        // Oversized length field: rejected before any allocation.
+        let mut bad = frame.clone();
+        bad[12..16]
+            .copy_from_slice(&(MAX_FRAME_PAYLOAD as u32 + 1).to_le_bytes());
+        let err = decode_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+
+        // Reserved bytes are tolerated (forward compat).
+        let mut ok = frame;
+        ok[6] = 0xab;
+        assert_eq!(decode_frame(&ok).unwrap().0, Message::Ping);
+    }
+
+    #[test]
+    fn trailing_bytes_inside_payload_are_corrupt() {
+        // Craft a Ping frame whose payload carries one stray byte with
+        // a *valid* crc and length: structural validation must still
+        // reject it.
+        let payload = [0u8; 1];
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&WIRE_MAGIC);
+        bad.extend_from_slice(&K_PING.to_le_bytes());
+        bad.extend_from_slice(&0u16.to_le_bytes());
+        bad.extend_from_slice(&crc32(&payload).to_le_bytes());
+        bad.extend_from_slice(&1u32.to_le_bytes());
+        bad.extend_from_slice(&payload);
+        let err = decode_frame(&bad).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn hostile_table_counts_are_capped_before_allocation() {
+        // A HelloAck claiming u32::MAX dim-table entries must die on
+        // the count check, not attempt the allocation.
+        let mut payload = Vec::new();
+        push_u16(&mut payload, WIRE_VERSION);
+        push_u32(&mut payload, 0);
+        push_u32(&mut payload, 1);
+        push_u32(&mut payload, u32::MAX);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&WIRE_MAGIC);
+        frame.extend_from_slice(&K_HELLO_ACK.to_le_bytes());
+        frame.extend_from_slice(&0u16.to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let err = decode_frame(&frame).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn long_error_details_are_clipped_not_refused() {
+        let msg = Message::Error(PredictError {
+            id: 1,
+            model: mid("m"),
+            kind: PredictErrorKind::Exec {
+                detail: "x".repeat(3 * MAX_WIRE_STR),
+            },
+        });
+        let frame = encode_frame(&msg).unwrap();
+        let (back, _) = decode_frame(&frame).unwrap();
+        match back {
+            Message::Error(e) => match e.kind {
+                PredictErrorKind::Exec { detail } => {
+                    assert_eq!(detail.len(), MAX_WIRE_STR);
+                }
+                other => panic!("wrong kind {other:?}"),
+            },
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn property_ragged_requests_roundtrip() {
+        prop_cases!("wire request roundtrip", 64, |rng| {
+            let dim = rng.below(33); // 0..=32, ragged
+            let features: Vec<f32> = (0..dim)
+                .map(|_| (rng.normal() * 10.0) as f32)
+                .collect();
+            let name_len = 1 + rng.below(16);
+            let model: String = (0..name_len)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            let msg = Message::Request {
+                id: rng.below(1 << 48) as u64,
+                model,
+                features,
+            };
+            let frame = encode_frame(&msg).unwrap();
+            let (back, used) = decode_frame(&frame).unwrap();
+            assert_eq!(used, frame.len());
+            assert_eq!(back, msg);
+
+            // Any truncation of this frame is typed Corrupt.
+            if frame.len() > 1 {
+                let cut = 1 + rng.below(frame.len() - 1);
+                let err = decode_frame(&frame[..cut]).unwrap_err();
+                assert!(matches!(err, Error::Corrupt(_)), "{err}");
+            }
+
+            // Any single-byte payload flip is caught by the crc.
+            if frame.len() > FRAME_HEADER_LEN {
+                let pos = FRAME_HEADER_LEN
+                    + rng.below(frame.len() - FRAME_HEADER_LEN);
+                let mut bad = frame.clone();
+                bad[pos] ^= 1u8 << rng.below(8);
+                let err = decode_frame(&bad).unwrap_err();
+                assert!(matches!(err, Error::Corrupt(_)), "{err}");
+            }
+        });
+    }
+}

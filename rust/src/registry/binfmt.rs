@@ -57,8 +57,15 @@ pub const FLAG_HAS_POLICY: u64 = 1;
 pub const FLAG_QUANT_F16: u64 = 1 << 1;
 /// Header flag bit: model payloads are kind-5 (int8) records.
 pub const FLAG_QUANT_INT8: u64 = 1 << 2;
-/// Version of the kind-3 policy record payload.
+/// Version of the kind-3 policy record payload when no per-tenant
+/// drift tolerance is set (19-byte body — the original layout, kept
+/// byte-stable so every pre-existing bundle and golden fixture still
+/// encodes identically).
 pub const POLICY_PAYLOAD_VERSION: u16 = 1;
+/// Version of the kind-3 policy record payload carrying a per-tenant
+/// `quant_drift_tol` (23-byte body: the v1 fields + a trailing f32).
+/// Written only when the tolerance is set; decoders accept both.
+pub const POLICY_PAYLOAD_VERSION_DRIFT: u16 = 2;
 
 const KIND_SVM: u16 = 1;
 const KIND_APPROX: u16 = 2;
@@ -157,19 +164,25 @@ impl Bundle {
 // encode
 // ---------------------------------------------------------------------
 
-fn push_u16(out: &mut Vec<u8>, v: u16) {
+// Shared with `crate::net::wire`, which reuses the same little-endian
+// primitive codec for its frame payloads.
+pub(crate) fn push_u16(out: &mut Vec<u8>, v: u16) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn push_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn push_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_f32(out: &mut Vec<u8>, v: f32) {
+pub(crate) fn push_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -229,10 +242,19 @@ fn approx_payload(am: &ApproxModel) -> Result<Vec<u8>> {
 
 /// Serialize a [`TenantPolicy`] as a kind-3 record payload.
 /// `0` encodes "unset" for every optional field (a zero `max_wait` is
-/// meaningless operationally, so nothing is lost).
+/// meaningless operationally, so nothing is lost). Policies without a
+/// `quant_drift_tol` keep the original 19-byte v1 body — bundles that
+/// predate the field re-encode byte-identically — and only a set
+/// tolerance promotes the record to the 23-byte v2 body.
 fn policy_payload(p: &TenantPolicy) -> Vec<u8> {
-    let mut out = Vec::with_capacity(19);
-    push_u16(&mut out, POLICY_PAYLOAD_VERSION);
+    let mut out = Vec::with_capacity(23);
+    push_u16(
+        &mut out,
+        match p.quant_drift_tol {
+            None => POLICY_PAYLOAD_VERSION,
+            Some(_) => POLICY_PAYLOAD_VERSION_DRIFT,
+        },
+    );
     out.push(match p.route {
         None => 0u8,
         Some(RoutePolicy::AlwaysApprox) => 1,
@@ -245,6 +267,9 @@ fn policy_payload(p: &TenantPolicy) -> Vec<u8> {
         p.max_wait.map(|d| d.as_micros() as u64).unwrap_or(0),
     );
     push_u32(&mut out, p.max_resident_hint);
+    if let Some(tol) = p.quant_drift_tol {
+        push_f32(&mut out, tol);
+    }
     out
 }
 
@@ -513,6 +538,14 @@ pub fn encode_bundle_native(
         }
     };
     if let Some(p) = policy {
+        if let Some(tol) = p.quant_drift_tol {
+            if !tol.is_finite() || tol < 0.0 {
+                return Err(Error::InvalidArg(format!(
+                    "policy quant_drift_tol must be finite and >= 0, \
+                     got {tol}"
+                )));
+            }
+        }
         records.push((KIND_POLICY, policy_payload(p)));
         flags |= FLAG_HAS_POLICY;
     }
@@ -530,14 +563,16 @@ pub fn encode_bundle_native(
 // ---------------------------------------------------------------------
 
 /// Truncation-safe little-endian reader: every read names what it was
-/// reading so corruption errors localize the damage.
-struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// reading so corruption errors localize the damage. Shared with
+/// `crate::net::wire`, which decodes frame payloads with the same
+/// discipline.
+pub(crate) struct Reader<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
         if self.buf.len() - self.pos < n {
             return Err(Error::Corrupt(format!(
                 "truncated: {what} needs {n} bytes at offset {}, only {} \
@@ -551,27 +586,31 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self, what: &str) -> Result<u8> {
+    pub(crate) fn u8(&mut self, what: &str) -> Result<u8> {
         Ok(self.take(1, what)?[0])
     }
 
-    fn u16(&mut self, what: &str) -> Result<u16> {
+    pub(crate) fn u16(&mut self, what: &str) -> Result<u16> {
         Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self, what: &str) -> Result<u32> {
+    pub(crate) fn u32(&mut self, what: &str) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self, what: &str) -> Result<u64> {
+    pub(crate) fn u64(&mut self, what: &str) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self, what: &str) -> Result<f32> {
+    pub(crate) fn f32(&mut self, what: &str) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
     }
 
-    fn f32_vec(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+    pub(crate) fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f32_vec(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
         let bytes = self.take(n.checked_mul(4).ok_or_else(|| {
             Error::Corrupt(format!("{what}: length overflow"))
         })?, what)?;
@@ -638,10 +677,13 @@ pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
 fn decode_policy_payload(payload: &[u8]) -> Result<TenantPolicy> {
     let mut r = Reader { buf: payload, pos: 0 };
     let version = r.u16("policy version")?;
-    if version != POLICY_PAYLOAD_VERSION {
+    if version != POLICY_PAYLOAD_VERSION
+        && version != POLICY_PAYLOAD_VERSION_DRIFT
+    {
         return Err(Error::Corrupt(format!(
             "unsupported policy record version {version} (this build \
-             reads version {POLICY_PAYLOAD_VERSION})"
+             reads versions {POLICY_PAYLOAD_VERSION} and \
+             {POLICY_PAYLOAD_VERSION_DRIFT})"
         )));
     }
     let route = match r.u8("policy route")? {
@@ -664,13 +706,30 @@ fn decode_policy_payload(payload: &[u8]) -> Result<TenantPolicy> {
         us => Some(Duration::from_micros(us)),
     };
     let max_resident_hint = r.u32("policy max_resident_hint")?;
+    let quant_drift_tol = if version == POLICY_PAYLOAD_VERSION_DRIFT {
+        let tol = r.f32("policy quant_drift_tol")?;
+        if !tol.is_finite() || tol < 0.0 {
+            return Err(Error::Corrupt(format!(
+                "policy quant_drift_tol {tol} is not finite and >= 0"
+            )));
+        }
+        Some(tol)
+    } else {
+        None
+    };
     if r.pos != payload.len() {
         return Err(Error::Corrupt(format!(
             "policy record: {} trailing payload bytes",
             payload.len() - r.pos
         )));
     }
-    Ok(TenantPolicy { route, max_batch, max_wait, max_resident_hint })
+    Ok(TenantPolicy {
+        route,
+        max_batch,
+        max_wait,
+        max_resident_hint,
+        quant_drift_tol,
+    })
 }
 
 fn decode_svm_payload(payload: &[u8], want_dim: u32) -> Result<SvmModel> {
@@ -1272,6 +1331,7 @@ mod tests {
             max_batch: Some(32),
             max_wait: Some(Duration::from_micros(750)),
             max_resident_hint: 5,
+            quant_drift_tol: None,
         };
         let bytes = encode_bundle_with(3, &e, &a, Some(&policy)).unwrap();
         let hdr = peek_header(&bytes).unwrap();
@@ -1281,6 +1341,89 @@ mod tests {
         assert_eq!(b.generation, 3);
         assert_eq!(b.policy, Some(policy));
         assert_eq!(b.exact_dequant().n_sv(), e.n_sv());
+    }
+
+    #[test]
+    fn policy_drift_tol_writes_v2_record_and_roundtrips() {
+        let e = toy_svm();
+        let a = toy_approx();
+        // A set tolerance promotes the record to the 23-byte v2 body…
+        let with_tol = TenantPolicy {
+            quant_drift_tol: Some(0.0625),
+            ..Default::default()
+        };
+        let bytes = encode_bundle_with(1, &e, &a, Some(&with_tol)).unwrap();
+        let frames = record_frames(&bytes).unwrap();
+        let policy_frame = frames.last().unwrap();
+        assert_eq!(policy_frame.kind, KIND_POLICY);
+        assert_eq!(policy_frame.payload_len, 23);
+        let b = decode_bundle_full(&bytes).unwrap();
+        assert_eq!(b.policy, Some(with_tol));
+        // …while an unset tolerance keeps the original v1 body, so
+        // pre-existing bundles stay byte-stable.
+        let without = TenantPolicy {
+            max_batch: Some(4),
+            ..Default::default()
+        };
+        let bytes = encode_bundle_with(1, &e, &a, Some(&without)).unwrap();
+        let frames = record_frames(&bytes).unwrap();
+        assert_eq!(frames.last().unwrap().payload_len, 19);
+        assert_eq!(
+            decode_bundle_full(&bytes).unwrap().policy,
+            Some(without)
+        );
+        // A zero tolerance is meaningful ("escort everything exact")
+        // and must survive, not collapse to unset.
+        let zero = TenantPolicy {
+            quant_drift_tol: Some(0.0),
+            ..Default::default()
+        };
+        let bytes = encode_bundle_with(1, &e, &a, Some(&zero)).unwrap();
+        assert_eq!(
+            decode_bundle_full(&bytes).unwrap().policy,
+            Some(zero)
+        );
+    }
+
+    #[test]
+    fn policy_drift_tol_rejects_non_finite_and_negative() {
+        let e = toy_svm();
+        let a = toy_approx();
+        for bad in [f32::NAN, f32::INFINITY, -0.5] {
+            let p = TenantPolicy {
+                quant_drift_tol: Some(bad),
+                ..Default::default()
+            };
+            assert!(
+                matches!(
+                    encode_bundle_with(1, &e, &a, Some(&p)),
+                    Err(Error::InvalidArg(_))
+                ),
+                "tol {bad} must be refused on encode"
+            );
+        }
+        // A corrupted v2 record whose trailing f32 is negative decodes
+        // as Corrupt, not as a policy.
+        let good = encode_bundle_with(
+            1,
+            &e,
+            &a,
+            Some(&TenantPolicy {
+                quant_drift_tol: Some(0.5),
+                ..Default::default()
+            }),
+        )
+        .unwrap();
+        let pstart = good.len() - 23;
+        let mut bad = good;
+        bad[pstart + 19..pstart + 23]
+            .copy_from_slice(&(-1.0f32).to_le_bytes());
+        let crc = crc32(&bad[pstart..]);
+        bad[pstart - 12..pstart - 8].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("quant_drift_tol")
+        ));
     }
 
     #[test]
@@ -1388,6 +1531,7 @@ mod tests {
             max_batch: Some(8),
             max_wait: Some(Duration::from_micros(100)),
             max_resident_hint: 1,
+            quant_drift_tol: Some(0.125),
         };
         let bytes = encode_bundle_quantized(
             2,

@@ -1117,6 +1117,7 @@ mod tests {
             max_batch: Some(16),
             max_wait: Some(std::time::Duration::from_micros(300)),
             max_resident_hint: 2,
+            quant_drift_tol: Some(0.125),
         };
         store
             .publish_with(

@@ -55,6 +55,24 @@ impl Welford {
         self.max
     }
 
+    /// Raw sum of squared deviations (the `M2` term). Together with
+    /// [`Welford::from_parts`] this lets an accumulator cross a process
+    /// boundary losslessly (the network metrics pull serializes the
+    /// moments, not the samples).
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
+    /// Rebuild an accumulator from transported moments — the inverse of
+    /// reading `count`/`mean`/`m2`/`min`/`max`. A rebuilt accumulator
+    /// merges and reports identically to the original.
+    pub fn from_parts(n: u64, mean: f64, m2: f64, min: f64, max: f64) -> Welford {
+        if n == 0 {
+            return Welford::new();
+        }
+        Welford { n, mean, m2, min, max }
+    }
+
     /// Combine another accumulator into this one (Chan et al.'s
     /// parallel update), so per-shard moments can be fanned in to one
     /// aggregate without replaying samples.
@@ -194,6 +212,30 @@ mod tests {
             assert_eq!(a.min(), whole.min());
             assert_eq!(a.max(), whole.max());
         }
+    }
+
+    #[test]
+    fn welford_from_parts_roundtrips() {
+        let mut w = Welford::new();
+        for x in [1.0, 2.5, -3.0, 8.0] {
+            w.push(x);
+        }
+        let back = Welford::from_parts(
+            w.count(),
+            w.mean(),
+            w.m2(),
+            w.min(),
+            w.max(),
+        );
+        assert_eq!(back.count(), w.count());
+        assert_eq!(back.mean(), w.mean());
+        assert_eq!(back.var(), w.var());
+        assert_eq!(back.min(), w.min());
+        assert_eq!(back.max(), w.max());
+        // The degenerate empty transport is a clean new accumulator.
+        let empty = Welford::from_parts(0, 0.0, 0.0, 0.0, 0.0);
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.min(), f64::INFINITY);
     }
 
     #[test]

@@ -108,11 +108,14 @@ fn toy_approx_int8() -> ApproxModel {
 }
 
 fn toy_policy() -> TenantPolicy {
+    // quant_drift_tol stays None: the golden fixtures pin the 19-byte
+    // v1 policy body, which is exactly what an unset tolerance writes.
     TenantPolicy {
         route: Some(RoutePolicy::AlwaysExact),
         max_batch: Some(32),
         max_wait: Some(Duration::from_micros(750)),
         max_resident_hint: 5,
+        quant_drift_tol: None,
     }
 }
 

@@ -238,11 +238,21 @@ fn random_policy(rng: &mut Rng) -> TenantPolicy {
     } else {
         None
     };
+    // Dyadic tolerances so the f32 roundtrip comparison is exact (any
+    // finite f32 roundtrips bit-exactly; dyadic just keeps asserts
+    // readable). Half the cases exercise the 19-byte v1 body (unset),
+    // half the 23-byte v2 body.
+    let quant_drift_tol = if rng.chance(0.5) {
+        Some(rng.below(64) as f32 / 256.0)
+    } else {
+        None
+    };
     TenantPolicy {
         route,
         max_batch,
         max_wait,
         max_resident_hint: rng.below(16) as u32,
+        quant_drift_tol,
     }
 }
 

@@ -1,0 +1,479 @@
+//! Network serving tier e2e (the PR-6 acceptance tests): a router over
+//! **two real shard-server processes** (spawned from the compiled
+//! `approxrbf` binary) serving a mixed exact/approx/int8 tenant set.
+//!
+//! * **bit-identity** — decisions, routes and generations served over
+//!   the wire equal an in-process `shards(1)` plane on the same
+//!   registry and traffic, request for request;
+//! * **hot swap over the wire** — a mid-stream republish (picked up via
+//!   the router's `Refresh` control frame) serves the new generation
+//!   with zero dropped or errored in-flight requests;
+//! * **fail-fast isolation** — killing one shard process turns that
+//!   shard's tenants' requests into typed `PredictError`s (no client
+//!   hang) while the surviving shard's tenants keep serving.
+//!
+//! Gated by `APPROXRBF_TEST_REMOTE=1` (spawns processes and binds
+//! loopback sockets); each test is a silent pass without it. CI runs
+//! the suite in the dedicated `tier1-remote` job (`make test-remote`).
+
+use std::io::BufRead;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::ApproxModel;
+use approxrbf::coordinator::{
+    Coordinator, PredictErrorKind, Route, RoutePolicy, TenantPolicy,
+};
+use approxrbf::data::{synth, Dataset, UnitNormScaler};
+use approxrbf::linalg::MathBackend;
+use approxrbf::net::{Router, RouterConfig};
+use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::{Kernel, SvmModel};
+use approxrbf::util::Rng;
+
+/// Plane-wide drift tolerance used on BOTH sides of every comparison
+/// (in-process baseline and `serve-shard --drift-tol`), so int8 tenants
+/// route deterministically.
+const DRIFT_TOL: &str = "1.0";
+
+fn remote_enabled() -> bool {
+    match std::env::var("APPROXRBF_TEST_REMOTE") {
+        Ok(v) => v == "1",
+        Err(_) => false,
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("approxrbf_remote_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn trained_pair(
+    seed: u64,
+    gamma_mult: f32,
+) -> (SvmModel, ApproxModel, Dataset) {
+    let ds = synth::two_gaussians(seed, 220, 8, 1.5);
+    let scaled = UnitNormScaler.apply_dataset(&ds);
+    let gamma = gamma_max_for_data(&scaled) * gamma_mult;
+    let (model, _) =
+        train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    (model, am, scaled)
+}
+
+/// A mixed tenant set with all three serving modes: a policy-pinned
+/// AlwaysExact tenant, two hybrid f32 tenants (one partly pushed out of
+/// bound by the traffic generator), and a native-int8 tenant.
+fn mixed_registry(
+    tag: &str,
+) -> (Arc<ModelStore>, Vec<(&'static str, Dataset)>) {
+    let store = Arc::new(ModelStore::open(temp_dir(tag)).unwrap());
+    let (m1, a1, d1) = trained_pair(101, 0.8);
+    let (m2, a2, d2) = trained_pair(202, 0.8);
+    let (m3, a3, d3) = trained_pair(303, 0.8);
+    let (m4, a4, d4) = trained_pair(404, 0.8);
+    store
+        .publish_with(
+            "pinned-exact",
+            &m1,
+            &a1,
+            PublishOptions {
+                policy: Some(TenantPolicy {
+                    route: Some(RoutePolicy::AlwaysExact),
+                    ..Default::default()
+                }),
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let f32_opts = || PublishOptions {
+        quantize: Some(PayloadKind::F32),
+        ..Default::default()
+    };
+    store.publish_with("hybrid-in", &m2, &a2, f32_opts()).unwrap();
+    store.publish_with("hybrid-mixed", &m3, &a3, f32_opts()).unwrap();
+    store
+        .publish_with(
+            "quant-int8",
+            &m4,
+            &a4,
+            PublishOptions {
+                quantize: Some(PayloadKind::Int8),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    (
+        store,
+        vec![
+            ("pinned-exact", d1),
+            ("hybrid-in", d2),
+            ("hybrid-mixed", d3),
+            ("quant-int8", d4),
+        ],
+    )
+}
+
+/// Deterministic mixed-tenant traffic; a third of `hybrid-mixed`'s rows
+/// are scaled out of bound (exact escorts).
+fn build_traffic(
+    tenants: &[(&'static str, Dataset)],
+    n: usize,
+) -> Vec<(&'static str, Vec<f32>)> {
+    let mut rng = Rng::new(0x51AD);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let (id, ds) = &tenants[i % tenants.len()];
+        let row = (i / tenants.len()) % ds.len();
+        let mut z = ds.x.row(row).to_vec();
+        if *id == "hybrid-mixed" && rng.chance(0.33) {
+            let s = rng.range(2.5, 5.0) as f32;
+            for v in &mut z {
+                *v *= s;
+            }
+        }
+        out.push((*id, z));
+    }
+    out
+}
+
+/// One served request: (model, generation, decision bits, route).
+type Served = (String, u64, u32, Route);
+
+/// The in-process `shards(1)` baseline every remote decision must
+/// bit-match.
+fn run_in_process(
+    store: &Arc<ModelStore>,
+    traffic: &[(&'static str, Vec<f32>)],
+) -> Vec<Served> {
+    let coord = Coordinator::builder()
+        .shards(1)
+        .max_wait(Duration::from_millis(1))
+        .quant_drift_tol(DRIFT_TOL.parse().unwrap())
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let mut session = client.session();
+    for (id, z) in traffic {
+        session.submit_to(id, z.clone()).unwrap();
+    }
+    let completions = session.wait_all(Duration::from_secs(60)).unwrap();
+    let rows = completions
+        .into_iter()
+        .map(|c| {
+            let r = c.expect("no failures in the baseline workload");
+            (r.model.to_string(), r.generation, r.decision.to_bits(), r.route)
+        })
+        .collect();
+    coord.shutdown().unwrap();
+    rows
+}
+
+/// One `approxrbf serve-shard` child process; killed on drop.
+struct ShardProc {
+    child: Child,
+    addr: String,
+}
+
+impl ShardProc {
+    fn spawn(store: &std::path::Path, shard_id: usize) -> ShardProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_approxrbf"))
+            .args([
+                "serve-shard",
+                "--listen",
+                "127.0.0.1:0",
+                "--store",
+                store.to_str().unwrap(),
+                "--shard-id",
+                &shard_id.to_string(),
+                "--drift-tol",
+                DRIFT_TOL,
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn shard server process");
+        // The server prints `shard N serving on ADDR (...)` once bound;
+        // scrape the resolved ephemeral port from it.
+        let stdout = child.stdout.take().expect("child stdout");
+        let mut line = String::new();
+        std::io::BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("read shard server banner");
+        let addr = line
+            .split(" serving on ")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable banner: {line:?}"))
+            .to_string();
+        ShardProc { child, addr }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Two shard processes over `store` plus a connected router.
+fn spawn_plane(store: &Arc<ModelStore>) -> (Vec<ShardProc>, Router) {
+    let shards: Vec<ShardProc> = (0..2)
+        .map(|i| ShardProc::spawn(store.root(), i))
+        .collect();
+    let addrs: Vec<String> =
+        shards.iter().map(|s| s.addr.clone()).collect();
+    let router = Router::connect(&addrs, RouterConfig::default())
+        .expect("router connects to both shard processes");
+    (shards, router)
+}
+
+#[test]
+fn remote_plane_is_bit_identical_to_in_process() {
+    if !remote_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_REMOTE != 1");
+        return;
+    }
+    let (store, tenants) = mixed_registry("identity");
+    let traffic = build_traffic(&tenants, 240);
+    let baseline = run_in_process(&store, &traffic);
+
+    let (_shards, router) = spawn_plane(&store);
+    // Every tenant's dimension came over in the handshake.
+    let dims = router.model_dims();
+    for (id, ds) in &tenants {
+        assert_eq!(dims.get(*id).copied(), Some(ds.dim() as u32));
+    }
+    let client = router.client();
+    let mut session = client.session();
+    for (id, z) in &traffic {
+        session.submit_to(id, z.clone()).unwrap();
+    }
+    let completions = session.wait_all(Duration::from_secs(60)).unwrap();
+    assert_eq!(completions.len(), baseline.len());
+    let mut by_route = [0usize; 2];
+    for (i, (c, want)) in completions.iter().zip(&baseline).enumerate() {
+        let r = c.as_ref().expect("no failures over the wire");
+        let got: Served = (
+            r.model.to_string(),
+            r.generation,
+            r.decision.to_bits(),
+            r.route,
+        );
+        assert_eq!(
+            &got, want,
+            "request {i}: remote decision differs from in-process"
+        );
+        by_route[(r.route == Route::Exact) as usize] += 1;
+    }
+    // The workload really exercised both routes and the int8 tenant.
+    assert!(by_route[0] > 0 && by_route[1] > 0);
+    assert!(baseline.iter().any(|(m, _, _, _)| m == "quant-int8"));
+
+    // Remote metrics fan-in accounts every request exactly once.
+    let snap = router.metrics();
+    assert_eq!(
+        snap.served_approx + snap.served_exact,
+        traffic.len() as u64
+    );
+    assert_eq!(snap.dropped, 0);
+    assert_eq!(snap.per_model.len(), tenants.len());
+    router.shutdown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn mid_stream_republish_over_the_wire_drops_nothing() {
+    if !remote_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_REMOTE != 1");
+        return;
+    }
+    let (store, tenants) = mixed_registry("hotswap");
+    let (_shards, router) = spawn_plane(&store);
+    let client = router.client();
+    let swap_id = "hybrid-in";
+    let ds = &tenants.iter().find(|(id, _)| *id == swap_id).unwrap().1;
+
+    // Phase A: traffic against generation 1.
+    let mut responses = Vec::new();
+    for i in 0..120 {
+        client
+            .submit_to(swap_id, ds.x.row(i % ds.len()).to_vec())
+            .unwrap();
+    }
+    while responses.len() < 40 {
+        let r = client
+            .recv(Duration::from_secs(10))
+            .expect("lost response before swap")
+            .expect("no errors before swap");
+        assert_eq!(r.generation, 1);
+        responses.push(r);
+    }
+
+    // Phase B: republish mid-stream, then nudge the shard processes
+    // over the wire (the Refresh control frame — the remote counterpart
+    // of Coordinator::refresh).
+    let (m2, a2, _) = trained_pair(909, 0.7);
+    assert_eq!(store.publish(swap_id, &m2, &a2).unwrap(), 2);
+    assert_eq!(router.refresh().unwrap(), 2, "both shards must ack");
+
+    // Phase C: stream until generation 2 serves; every in-flight and
+    // new completion must be Ok throughout — zero drops, zero errors.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut submitted = 120u64;
+    let mut seen_gen2 = false;
+    while !seen_gen2 {
+        assert!(
+            Instant::now() < deadline,
+            "generation 2 never served over the wire \
+             ({} responses so far)",
+            responses.len()
+        );
+        client
+            .submit_to(
+                swap_id,
+                ds.x.row(submitted as usize % ds.len()).to_vec(),
+            )
+            .unwrap();
+        submitted += 1;
+        while let Some(c) = client.recv(Duration::from_millis(20)) {
+            let r = c.expect("no errors across the remote hot swap");
+            seen_gen2 |= r.generation == 2;
+            responses.push(r);
+        }
+    }
+    while (responses.len() as u64) < submitted {
+        let r = client
+            .recv(Duration::from_secs(10))
+            .expect("lost in-flight response across the remote swap")
+            .expect("no errors across the remote hot swap");
+        responses.push(r);
+    }
+    let mut seen_ids = std::collections::HashSet::new();
+    let mut gens = [0usize; 3];
+    for r in &responses {
+        assert!(seen_ids.insert(r.id), "duplicate completion {}", r.id);
+        gens[r.generation as usize] += 1;
+    }
+    assert!(gens[1] > 0, "generation 1 never served");
+    assert!(gens[2] > 0, "generation 2 never served");
+    assert_eq!(router.metrics().dropped, 0);
+    router.shutdown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn killing_one_shard_fails_fast_for_its_tenants_only() {
+    if !remote_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_REMOTE != 1");
+        return;
+    }
+    let (store, tenants) = mixed_registry("failfast");
+    // Partition the tenant set by owning shard process; both shards
+    // must own someone for this test to mean anything (true for this
+    // fixed tenant set, asserted anyway).
+    let owned_by = |shard: usize| -> Vec<&'static str> {
+        tenants
+            .iter()
+            .map(|(id, _)| *id)
+            .filter(|id| Router::place_for(id, 2) == shard)
+            .collect()
+    };
+    let victims = owned_by(0);
+    let survivors = owned_by(1);
+    assert!(
+        !victims.is_empty() && !survivors.is_empty(),
+        "degenerate placement: {victims:?} / {survivors:?}"
+    );
+
+    let (mut shards, router) = spawn_plane(&store);
+    let client = router.client();
+    // Warm both shards up with one served request each.
+    for id in [&victims[0], &survivors[0]] {
+        let ds = &tenants.iter().find(|(t, _)| t == id).unwrap().1;
+        client.submit_to(id, ds.x.row(0).to_vec()).unwrap();
+        client
+            .recv(Duration::from_secs(10))
+            .expect("warmup response")
+            .expect("warmup must serve");
+    }
+
+    // Kill shard process 0 (SIGKILL — no goodbye frame).
+    shards[0].kill();
+
+    // Every victim-tenant request must resolve to a typed error within
+    // the deadline — whether it raced into the dying socket (failed by
+    // the router's teardown) or arrived after detection (failed at
+    // submit). Nothing may hang.
+    let t0 = Instant::now();
+    let mut victim_errors = 0usize;
+    for round in 0..40 {
+        for id in &victims {
+            let ds = &tenants.iter().find(|(t, _)| t == id).unwrap().1;
+            match client.submit_to(id, ds.x.row(round % ds.len()).to_vec())
+            {
+                Err(e) => {
+                    assert!(
+                        matches!(e.kind, PredictErrorKind::Exec { .. }),
+                        "unexpected error kind: {e}"
+                    );
+                    victim_errors += 1;
+                }
+                Ok(_) => match client.recv(Duration::from_secs(10)) {
+                    Some(Err(e)) => {
+                        assert!(
+                            matches!(
+                                e.kind,
+                                PredictErrorKind::Exec { .. }
+                                    | PredictErrorKind::Shutdown
+                            ),
+                            "unexpected error kind: {e}"
+                        );
+                        victim_errors += 1;
+                    }
+                    Some(Ok(r)) => {
+                        panic!("dead shard served request {}", r.id)
+                    }
+                    None => panic!("victim request hung (no completion)"),
+                },
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert_eq!(victim_errors, 40 * victims.len());
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "fail-fast path took {:?}",
+        t0.elapsed()
+    );
+
+    // The surviving shard's tenants are untouched.
+    let mut session = client.session();
+    for id in &survivors {
+        let ds = &tenants.iter().find(|(t, _)| t == id).unwrap().1;
+        for r in 0..10 {
+            session.submit_to(id, ds.x.row(r).to_vec()).unwrap();
+        }
+    }
+    let completions = session.wait_all(Duration::from_secs(30)).unwrap();
+    assert_eq!(completions.len(), 10 * survivors.len());
+    for c in completions {
+        c.expect("surviving shard's tenants must keep serving");
+    }
+    router.shutdown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
