@@ -2,9 +2,9 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test test-sharded test-quant test-kernel-blocked test-remote bench-smoke doc check-pjrt artifacts
+.PHONY: tier1 fmt lint build test test-sharded test-quant test-rff test-kernel-blocked test-remote bench-smoke doc check-pjrt artifacts
 
-tier1: fmt lint build test test-sharded test-quant
+tier1: fmt lint build test test-sharded test-quant test-rff
 
 # Mirror the extra CI jobs: rustdoc with warnings denied, and the
 # pjrt feature path against the vendored stub.
@@ -35,6 +35,11 @@ test-sharded:
 # int8-quantized bundle, so the whole suite serves kind-5 payloads.
 test-quant:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_QUANT=int8 cargo test -q
+
+# Mirror the CI tier1-rff job: every unpinned publish lands on the
+# random-feature substrate, so the whole suite serves kind-6 bundles.
+test-rff:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_SUBSTRATE=rff cargo test -q
 
 # Mirror the CI tier1-quant job's second step: the sharded plane served
 # through the pinned 'blocked' quantized kernel arm (int8 decisions are

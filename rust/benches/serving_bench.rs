@@ -7,10 +7,13 @@
 //! decision drift vs the reported bound) and a quantized kernel-arm
 //! A/B sweep (scalar vs blocked vs simd on larger synthetic shapes,
 //! with int8 bit-identity cross-checked) — both written to
-//! `BENCH_quant.json` — and a remote-serving leg (the same registry
-//! behind two loopback-TCP shard servers fronted by a `Router`, vs the
-//! in-process plane) written to `BENCH_remote.json`. The CI
-//! `bench-smoke` job runs this with `APPROXRBF_BENCH_SMOKE` set
+//! `BENCH_quant.json` — plus a substrate leg (the same model published
+//! on the exact, Maclaurin and random-feature substrates: resident
+//! bytes, throughput and observed rff drift vs the stored estimate)
+//! written to `BENCH_rff.json`, and a remote-serving leg (the same
+//! registry behind two loopback-TCP shard servers fronted by a
+//! `Router`, vs the in-process plane) written to `BENCH_remote.json`.
+//! The CI `bench-smoke` job runs this with `APPROXRBF_BENCH_SMOKE` set
 //! (shorter deterministic sweeps) and fails if an int8 blocked/simd
 //! arm does not beat the scalar arm of the same run.
 //!
@@ -22,7 +25,9 @@ use std::time::{Duration, Instant};
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
 use approxrbf::approx::ApproxModel;
-use approxrbf::coordinator::{Coordinator, ExecSpec, Route, RoutePolicy};
+use approxrbf::coordinator::{
+    Coordinator, ExecSpec, Route, RoutePolicy, TenantPolicy,
+};
 use approxrbf::data::{SynthProfile, UnitNormScaler};
 use approxrbf::linalg::quantblas::{self, KernelArm};
 use approxrbf::linalg::{Mat, MathBackend};
@@ -30,7 +35,9 @@ use approxrbf::predictor::{
     Predictor, QuantApproxPredictor, QuantExactPredictor,
 };
 use approxrbf::registry::quant::{QuantApproxModel, QuantSvmModel};
-use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
+use approxrbf::registry::{
+    ModelStore, PayloadKind, PublishOptions, Substrate,
+};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::{Json, Rng};
@@ -131,6 +138,7 @@ fn main() {
 
     shard_scaling_sweep(&model, &am, &test);
     quant_payload_sweep(&model, &am, &test);
+    rff_substrate_sweep(&model, &am, &test);
     remote_loopback_sweep(&model, &am, &test);
 }
 
@@ -246,8 +254,14 @@ fn remote_loopback_sweep(
         store.publish(id, model, am).unwrap();
     }
     let passes: usize = if smoke() { 2 } else { 8 };
-    let chunk = test.x.rows_slice(0, SWEEP_CHUNK);
-    let per_tenant = SWEEP_CHUNK * passes;
+    // Smoke must shrink the per-pass chunk too, not just the pass
+    // count: every remote request pays wire framing + a socket hop, so
+    // a pass-count-only shrink left this the slowest smoke leg by far
+    // (and the local legs shrink their request counts, not just their
+    // repetitions).
+    let chunk_rows = if smoke() { 64 } else { SWEEP_CHUNK };
+    let chunk = test.x.rows_slice(0, chunk_rows);
+    let per_tenant = chunk_rows * passes;
     let total = per_tenant * SWEEP_TENANTS;
     println!(
         "\n# remote serving (in-process vs loopback wire, \
@@ -274,7 +288,7 @@ fn remote_loopback_sweep(
                     for _ in 0..passes {
                         let responses =
                             producer.predict_all_for(id, chunk).unwrap();
-                        assert_eq!(responses.len(), SWEEP_CHUNK);
+                        assert_eq!(responses.len(), chunk_rows);
                     }
                 });
             }
@@ -334,7 +348,7 @@ fn remote_loopback_sweep(
                     for _ in 0..passes {
                         let responses =
                             producer.predict_all_for(id, chunk).unwrap();
-                        assert_eq!(responses.len(), SWEEP_CHUNK);
+                        assert_eq!(responses.len(), chunk_rows);
                     }
                 });
             }
@@ -523,6 +537,159 @@ fn quant_payload_sweep(
     ]);
     std::fs::write("BENCH_quant.json", doc.to_string_pretty()).unwrap();
     println!("\n(JSON: BENCH_quant.json)");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Substrate leg: the same trained model published on the exact
+/// (policy-pinned), Maclaurin and random-feature substrates, each
+/// served through the full Client path on one executor lane. Records
+/// resident model memory, artifact bytes, throughput, route mix, and
+/// the worst observed rff drift vs the exact reference against the
+/// stored Monte-Carlo estimate. Emits `BENCH_rff.json`.
+fn rff_substrate_sweep(
+    model: &approxrbf::svm::SvmModel,
+    am: &approxrbf::approx::ApproxModel,
+    test: &approxrbf::data::Dataset,
+) {
+    let requests: usize = if smoke() { 1_024 } else { 4_096 };
+    let drift_rows: usize = if smoke() { 128 } else { 512 };
+    let rff_features: usize = 2_048;
+    let dir = std::env::temp_dir().join(format!(
+        "approxrbf_serving_bench_rff_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ModelStore::open(&dir).unwrap());
+    store
+        .publish_with(
+            "subst-exact",
+            model,
+            am,
+            PublishOptions {
+                policy: Some(TenantPolicy {
+                    route: Some(RoutePolicy::AlwaysExact),
+                    ..Default::default()
+                }),
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    store
+        .publish_with(
+            "subst-maclaurin",
+            model,
+            am,
+            PublishOptions {
+                substrate: Some(Substrate::Maclaurin),
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    store
+        .publish_with(
+            "subst-rff",
+            model,
+            am,
+            PublishOptions {
+                substrate: Some(Substrate::Rff),
+                rff_features: Some(rff_features),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let rff_entry = store.load("subst-rff").unwrap();
+    let err_est = rff_entry.models.rff().expect("rff entry").err_est;
+    let exact_entry = store.load("subst-exact").unwrap();
+    println!(
+        "\n# substrates (n_sv={}, d={}, D={rff_features}, rff err≈\
+         {err_est:.2e}, {requests} requests per substrate)\n",
+        model.n_sv(),
+        model.dim()
+    );
+    // Worst observed rff drift vs the exact reference — the number the
+    // stored estimate is supposed to dominate.
+    let mut max_drift = 0f64;
+    for r in 0..drift_rows.min(test.len()) {
+        let z = test.x.row(r);
+        let drift = f64::from(
+            (rff_entry.approx_decision_one(z)
+                - exact_entry.exact_decision_one(z))
+            .abs(),
+        );
+        max_drift = max_drift.max(drift);
+    }
+    // One hybrid plane over all three tenants; the tolerance sits just
+    // above the stored estimate so the rff all-or-nothing gate opens.
+    let coord = Coordinator::builder()
+        .policy(RoutePolicy::Hybrid)
+        .max_wait(Duration::from_micros(200))
+        .shards(1)
+        .quant_drift_tol((err_est * 1.25).max(1.0))
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let mut rows = Vec::new();
+    for id in ["subst-exact", "subst-maclaurin", "subst-rff"] {
+        let info = store.peek(id).unwrap();
+        let resident = store.load(id).unwrap().resident_bytes();
+        let _ = client
+            .predict_all_for(id, &test.x.rows_slice(0, 64))
+            .unwrap();
+        let t0 = Instant::now();
+        let mut submitted = 0usize;
+        let mut received = 0usize;
+        let mut approx_routed = 0usize;
+        while received < requests {
+            if submitted < requests {
+                client
+                    .submit_to(id, test.x.row(submitted % test.len()).to_vec())
+                    .unwrap();
+                submitted += 1;
+                while let Some(c) = client.recv(Duration::from_micros(0)) {
+                    let resp = c.unwrap();
+                    approx_routed += (resp.route == Route::Approx) as usize;
+                    received += 1;
+                }
+            } else if let Some(c) = client.recv(Duration::from_millis(100)) {
+                let resp = c.unwrap();
+                approx_routed += (resp.route == Route::Approx) as usize;
+                received += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rps = requests as f64 / wall;
+        println!(
+            "substrate={:<9} resident {resident:>9} B   file {:>9} B   \
+             {rps:>9.0} req/s   approx-routed {approx_routed}/{requests}",
+            id.trim_start_matches("subst-"),
+            info.size_bytes
+        );
+        rows.push(Json::obj(vec![
+            ("substrate", Json::str(id.trim_start_matches("subst-"))),
+            ("resident_bytes", Json::num(resident as f64)),
+            ("file_bytes", Json::num(info.size_bytes as f64)),
+            ("throughput_rps", Json::num(rps)),
+            ("requests", Json::num(requests as f64)),
+            ("approx_routed", Json::num(approx_routed as f64)),
+        ]));
+    }
+    coord.shutdown().unwrap();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serving_rff_substrate")),
+        ("n_sv", Json::num(model.n_sv() as f64)),
+        ("dim", Json::num(model.dim() as f64)),
+        ("rff_features", Json::num(rff_features as f64)),
+        ("rff_err_est", Json::num(f64::from(err_est))),
+        ("rff_max_abs_drift_vs_exact", Json::num(max_drift)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_rff.json", doc.to_string_pretty()).unwrap();
+    println!(
+        "\n(JSON: BENCH_rff.json; worst rff drift {max_drift:.2e} vs \
+         stored estimate {err_est:.2e})"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 

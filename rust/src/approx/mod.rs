@@ -10,6 +10,7 @@ pub mod error_analysis;
 pub mod maclaurin;
 pub mod model;
 pub mod poly2_equiv;
+pub mod rff;
 
 pub use bounds::{
     gamma_max_for_data, BoundReport, ExactQuantErr, QuantErrorBound,
@@ -17,3 +18,4 @@ pub use bounds::{
 };
 pub use builder::build_approx_model;
 pub use model::ApproxModel;
+pub use rff::RffModel;

@@ -1,0 +1,479 @@
+//! Random-Fourier-feature substrate (Rahimi & Recht; the explicit-map
+//! regime of Fastfood / Cotter et al. named in PAPERS.md).
+//!
+//! For the RBF kernel `K(x,y) = e^{−γ‖x−y‖²}`, Bochner's theorem gives
+//! `K(x,y) ≈ z(x)·z(y)` with `z(x) = √(2/D)·cos(Wx + φ)`, `W ∈ ℝ^{D×d}`
+//! with rows drawn from `N(0, 2γI)` and `φ ~ U[0, 2π)`. Folding the
+//! dual weights at publish time,
+//!
+//! `f̂(z) = b + Σ_j w_j·cos(W_j·z + φ_j)`,
+//! `w_j = (2/D)·Σ_i coef_i·cos(W_j·x_i + φ_j)`,
+//!
+//! an `O(D·d)` evaluation independent of `n_SV` — the regime the
+//! Maclaurin approximation (quadratic in `d`, bound collapsing at large
+//! γ) cannot serve fast.
+//!
+//! **The feature map is never stored.** `W` and `φ` regenerate from a
+//! 64-bit seed through the deterministic [`crate::util::Rng`]
+//! (xoshiro256++/SplitMix64) in one canonical draw order, so the
+//! kind-6 `.arbf` record carries only *(seed, D, γ, b, error estimate,
+//! w)* — `O(D)` bytes — and every shard/process that decodes it
+//! reconstructs bit-identical `W`, `φ` and therefore bit-identical
+//! decisions.
+//!
+//! The **empirical error estimate** is a Monte-Carlo bound computed at
+//! publish over a deterministic probe set (the SVs, jittered SVs,
+//! SV midpoints and rescaled SVs — the regions the model actually
+//! discriminates in): `err_est = 3·max_probe|f̂ − f| + 1e-3`. It is
+//! stored in the record and drives per-tenant substrate routing: a
+//! tenant whose estimate exceeds the effective `quant_drift_tol`
+//! escorts everything to the exact path (see
+//! [`crate::registry::ModelEntry::znorm_sq_budget_with`]).
+
+use crate::linalg::rffmap::{self, RffArm};
+use crate::linalg::vecops;
+use crate::svm::{Kernel, SvmModel};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// Default feature count `D` for publishes that don't pin one (the
+/// adaptive fit doubles from here while the error estimate stays above
+/// [`ADAPT_TARGET_ERR`]).
+pub const DEFAULT_RFF_FEATURES: usize = 512;
+
+/// Ceiling of the adaptive doubling ladder.
+pub const ADAPT_MAX_RFF_FEATURES: usize = 4096;
+
+/// Adaptive fit target: half the default routing tolerance, so an
+/// unpinned RFF publish normally lands with headroom under
+/// [`crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL`].
+pub const ADAPT_TARGET_ERR: f32 =
+    crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL * 0.5;
+
+/// Probe-jitter scale of the error-estimate set (fraction of each SV
+/// coordinate's unit, additive Gaussian).
+const PROBE_JITTER: f64 = 0.05;
+
+/// Safety factor and floor of the stored estimate:
+/// `err_est = 3·worst_probe + 1e-3`.
+const ERR_SAFETY: f32 = 3.0;
+const ERR_FLOOR: f32 = 1e-3;
+
+/// A fitted random-feature model: the stored record fields plus the
+/// regenerated feature map.
+#[derive(Clone, Debug)]
+pub struct RffModel {
+    /// PRNG seed the feature map regenerates from.
+    pub seed: u64,
+    /// RBF kernel width of the source model.
+    pub gamma: f32,
+    /// Bias term (the exact model's `b`).
+    pub bias: f32,
+    /// Stored Monte-Carlo decision-error estimate vs the exact model.
+    pub err_est: f32,
+    /// Folded output weights, length `D` (the `√(2/D)` feature scale
+    /// and the `2/D` kernel-estimator scale are baked in).
+    pub w: Vec<f32>,
+    /// Feature dimension `d`.
+    dim: usize,
+    /// Regenerated `D×d` row-major frequency matrix (not stored).
+    wmat: Vec<f32>,
+    /// Regenerated phases, length `D` (not stored).
+    phase: Vec<f32>,
+}
+
+impl RffModel {
+    /// Number of random features `D`.
+    pub fn n_features(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The canonical feature-map draw order — **load-bearing for
+    /// bit-identity** (the Box–Muller spare-deviate cache makes any
+    /// reorder observable): all `D·d` frequencies row-major first,
+    /// then all `D` phases.
+    fn regenerate(
+        seed: u64,
+        n_features: usize,
+        dim: usize,
+        gamma: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let sigma = (2.0 * gamma as f64).sqrt();
+        let wmat: Vec<f32> = (0..n_features * dim)
+            .map(|_| (rng.normal() * sigma) as f32)
+            .collect();
+        let phase: Vec<f32> = (0..n_features)
+            .map(|_| (rng.uniform() * std::f64::consts::TAU) as f32)
+            .collect();
+        (wmat, phase)
+    }
+
+    /// Reconstruct a model from its stored record fields, regenerating
+    /// the feature map from the seed. This is the `.arbf` decode path;
+    /// validation mirrors the other models' `check_finite` contracts.
+    pub fn from_parts(
+        dim: usize,
+        seed: u64,
+        gamma: f32,
+        bias: f32,
+        err_est: f32,
+        w: Vec<f32>,
+    ) -> Result<RffModel> {
+        if dim == 0 || w.is_empty() {
+            return Err(Error::InvalidArg(format!(
+                "rff model needs dim ≥ 1 and D ≥ 1 (got d={dim}, D={})",
+                w.len()
+            )));
+        }
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(Error::InvalidArg(format!(
+                "rff model needs a finite positive gamma (got {gamma})"
+            )));
+        }
+        if !bias.is_finite() {
+            return Err(Error::InvalidArg(format!(
+                "non-finite rff bias: {bias}"
+            )));
+        }
+        if !(err_est.is_finite() && err_est >= 0.0) {
+            return Err(Error::InvalidArg(format!(
+                "rff err_est must be finite and ≥ 0 (got {err_est})"
+            )));
+        }
+        if let Some(i) = w.iter().position(|x| !x.is_finite()) {
+            return Err(Error::InvalidArg(format!("non-finite rff w[{i}]")));
+        }
+        let (wmat, phase) =
+            RffModel::regenerate(seed, w.len(), dim, gamma);
+        Ok(RffModel { seed, gamma, bias, err_est, w, dim, wmat, phase })
+    }
+
+    /// Fit a random-feature model to an exact RBF SVM: regenerate the
+    /// map from `seed`, fold the dual weights, and compute the stored
+    /// error estimate over the deterministic probe set. `n_features`
+    /// pins `D`; `None` runs the adaptive ladder (double from
+    /// [`DEFAULT_RFF_FEATURES`] until the estimate reaches
+    /// [`ADAPT_TARGET_ERR`] or [`ADAPT_MAX_RFF_FEATURES`]).
+    pub fn fit(
+        exact: &SvmModel,
+        n_features: Option<usize>,
+        seed: u64,
+    ) -> Result<RffModel> {
+        let Kernel::Rbf { gamma } = exact.kernel else {
+            return Err(Error::InvalidArg(format!(
+                "the rff substrate requires an RBF kernel (got {:?})",
+                exact.kernel
+            )));
+        };
+        if !(gamma.is_finite() && gamma > 0.0) {
+            return Err(Error::InvalidArg(format!(
+                "rff fit needs a finite positive gamma (got {gamma})"
+            )));
+        }
+        exact.check_finite().map_err(Error::InvalidArg)?;
+        match n_features {
+            Some(d_feat) => RffModel::fit_at(exact, gamma, d_feat, seed),
+            None => {
+                let mut d_feat = DEFAULT_RFF_FEATURES;
+                loop {
+                    let model =
+                        RffModel::fit_at(exact, gamma, d_feat, seed)?;
+                    if model.err_est <= ADAPT_TARGET_ERR
+                        || d_feat >= ADAPT_MAX_RFF_FEATURES
+                    {
+                        return Ok(model);
+                    }
+                    d_feat *= 2;
+                }
+            }
+        }
+    }
+
+    fn fit_at(
+        exact: &SvmModel,
+        gamma: f32,
+        n_features: usize,
+        seed: u64,
+    ) -> Result<RffModel> {
+        if n_features == 0 {
+            return Err(Error::InvalidArg(
+                "rff feature count D must be ≥ 1".into(),
+            ));
+        }
+        let dim = exact.dim();
+        if dim == 0 {
+            return Err(Error::InvalidArg(
+                "rff fit needs dim ≥ 1".into(),
+            ));
+        }
+        let (wmat, phase) =
+            RffModel::regenerate(seed, n_features, dim, gamma);
+        // Fold the dual weights: w_j = (2/D)·Σ_i coef_i·cos(W_j·x_i + φ_j).
+        let scale = 2.0 / n_features as f32;
+        let mut w = vec![0f32; n_features];
+        for j in 0..n_features {
+            let row = &wmat[j * dim..(j + 1) * dim];
+            let mut acc = 0f32;
+            for i in 0..exact.n_sv() {
+                let dot = vecops::dot(row, exact.sv.row(i));
+                acc += exact.coef[i] * (dot + phase[j]).cos();
+            }
+            w[j] = scale * acc;
+        }
+        let mut model = RffModel {
+            seed,
+            gamma,
+            bias: exact.b,
+            err_est: 0.0,
+            w,
+            dim,
+            wmat,
+            phase,
+        };
+        model.err_est = model.estimate_err(exact);
+        Ok(model)
+    }
+
+    /// Monte-Carlo error estimate vs the exact model over a
+    /// deterministic probe set anchored at the SVs: the SVs themselves,
+    /// Gaussian-jittered copies, consecutive-pair midpoints, and
+    /// rescaled copies (norm regimes above/below the data shell).
+    fn estimate_err(&self, exact: &SvmModel) -> f32 {
+        let mut rng = Rng::new(self.seed ^ 0x5052_4F42_4553_4554); // probe stream
+        let n_sv = exact.n_sv();
+        let d = self.dim;
+        let mut worst = 0f32;
+        let mut buf = vec![0f32; d];
+        let mut check = |probe: &[f32], worst: &mut f32| {
+            let diff =
+                (self.decision_one(probe).0 - exact.decision_one(probe))
+                    .abs();
+            if diff > *worst {
+                *worst = diff;
+            }
+        };
+        for i in 0..n_sv {
+            let sv = exact.sv.row(i);
+            check(sv, &mut worst);
+            for (k, &x) in sv.iter().enumerate() {
+                buf[k] = x + (rng.normal() * PROBE_JITTER) as f32;
+            }
+            check(&buf, &mut worst);
+            let next = exact.sv.row((i + 1) % n_sv);
+            for k in 0..d {
+                buf[k] = 0.5 * (sv[k] + next[k]);
+            }
+            check(&buf, &mut worst);
+            let s = rng.range(0.5, 1.5) as f32;
+            for k in 0..d {
+                buf[k] = s * sv[k];
+            }
+            check(&buf, &mut worst);
+        }
+        ERR_SAFETY * worst + ERR_FLOOR
+    }
+
+    /// Decision value + `‖z‖²` for one instance through the
+    /// process-wide kernel arm.
+    pub fn decision_one(&self, z: &[f32]) -> (f32, f32) {
+        self.decision_one_with(rffmap::active_rff_arm(), z)
+    }
+
+    /// Decision value + `‖z‖²` through an explicit kernel arm (A/B
+    /// benches, dispatch-parity tests). Arms are bit-identical.
+    pub fn decision_one_with(&self, arm: RffArm, z: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(z.len(), self.dim);
+        let zn = vecops::norm_sq(z);
+        let dec = rffmap::rff_decision(
+            arm,
+            &self.wmat,
+            &self.phase,
+            &self.w,
+            self.dim,
+            self.bias,
+            z,
+        );
+        (dec, zn)
+    }
+
+    /// Resident footprint in bytes: the stored `w` plus the regenerated
+    /// `W` and `φ` (the map is `O(D·d)` resident but `O(D)` on disk).
+    pub fn resident_bytes(&self) -> usize {
+        4 * (self.w.len() + self.wmat.len() + self.phase.len()) + 28
+    }
+}
+
+/// Deterministic per-tenant seed (FNV-1a over the model id): the same
+/// id republished on any node folds the same feature map, and the seed
+/// still travels in the record so decode never depends on this.
+pub fn seed_for_id(id: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in id.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rffmap::rff_available_arms;
+    use crate::linalg::Mat;
+
+    fn toy_exact() -> SvmModel {
+        SvmModel::new(
+            Kernel::Rbf { gamma: 0.25 },
+            Mat::from_vec(3, 3, vec![1., 0., 2., 0., 2., 0., -1., 1., 0.5])
+                .unwrap(),
+            vec![0.5, -1.0, 0.75],
+            0.125,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn regeneration_is_bit_deterministic() {
+        let exact = toy_exact();
+        let a = RffModel::fit(&exact, Some(64), 42).unwrap();
+        let b = RffModel::from_parts(
+            a.dim(),
+            a.seed,
+            a.gamma,
+            a.bias,
+            a.err_est,
+            a.w.clone(),
+        )
+        .unwrap();
+        assert_eq!(a.wmat.len(), b.wmat.len());
+        for (x, y) in a.wmat.iter().zip(&b.wmat) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.phase.iter().zip(&b.phase) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let z = [0.3f32, -0.7, 1.1];
+        assert_eq!(
+            a.decision_one(&z).0.to_bits(),
+            b.decision_one(&z).0.to_bits()
+        );
+    }
+
+    #[test]
+    fn different_seeds_give_different_maps() {
+        let exact = toy_exact();
+        let a = RffModel::fit(&exact, Some(32), 1).unwrap();
+        let b = RffModel::fit(&exact, Some(32), 2).unwrap();
+        assert_ne!(a.wmat, b.wmat);
+    }
+
+    #[test]
+    fn fit_approximates_exact_within_stored_estimate() {
+        let exact = toy_exact();
+        let m = RffModel::fit(&exact, Some(2048), 7).unwrap();
+        assert_eq!(m.n_features(), 2048);
+        assert_eq!(m.dim(), 3);
+        assert!(m.err_est.is_finite() && m.err_est > 0.0);
+        // Probe-adjacent points (tighter jitter than the estimate's own
+        // probe set) must stay within the stored estimate.
+        let mut rng = Rng::new(0xD00D);
+        for i in 0..exact.n_sv() {
+            let sv = exact.sv.row(i);
+            let z: Vec<f32> = sv
+                .iter()
+                .map(|&x| x + (rng.normal() * 0.02) as f32)
+                .collect();
+            let got = m.decision_one(&z).0;
+            let want = exact.decision_one(&z);
+            assert!(
+                (got - want).abs() <= m.err_est,
+                "sv {i}: |{got} - {want}| > {}",
+                m.err_est
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_fit_tightens_until_target_or_cap() {
+        let exact = toy_exact();
+        let m = RffModel::fit(&exact, None, 11).unwrap();
+        assert!(m.n_features() >= DEFAULT_RFF_FEATURES);
+        assert!(m.n_features() <= ADAPT_MAX_RFF_FEATURES);
+        assert!(
+            m.err_est <= ADAPT_TARGET_ERR
+                || m.n_features() == ADAPT_MAX_RFF_FEATURES
+        );
+    }
+
+    #[test]
+    fn arms_bit_identical_on_fitted_model() {
+        let exact = toy_exact();
+        let m = RffModel::fit(&exact, Some(129), 3).unwrap(); // odd D: tail path
+        let z = [0.5f32, 0.25, -1.0];
+        let (reference, zn) = m.decision_one_with(RffArm::Scalar, &z);
+        assert!((zn - vecops::norm_sq(&z)).abs() < 1e-6);
+        for arm in rff_available_arms() {
+            let (got, _) = m.decision_one_with(arm, &z);
+            assert_eq!(got.to_bits(), reference.to_bits(), "{arm}");
+        }
+    }
+
+    #[test]
+    fn non_rbf_kernels_rejected() {
+        let linear = SvmModel::new(
+            Kernel::Linear,
+            Mat::from_vec(1, 2, vec![1., 2.]).unwrap(),
+            vec![1.0],
+            0.0,
+        )
+        .unwrap();
+        assert!(matches!(
+            RffModel::fit(&linear, Some(16), 1),
+            Err(Error::InvalidArg(_))
+        ));
+    }
+
+    #[test]
+    fn from_parts_rejects_defects() {
+        assert!(RffModel::from_parts(0, 1, 0.5, 0.0, 0.0, vec![1.0]).is_err());
+        assert!(RffModel::from_parts(2, 1, 0.5, 0.0, 0.0, vec![]).is_err());
+        assert!(
+            RffModel::from_parts(2, 1, f32::NAN, 0.0, 0.0, vec![1.0])
+                .is_err()
+        );
+        assert!(
+            RffModel::from_parts(2, 1, -0.5, 0.0, 0.0, vec![1.0]).is_err()
+        );
+        assert!(
+            RffModel::from_parts(2, 1, 0.5, f32::INFINITY, 0.0, vec![1.0])
+                .is_err()
+        );
+        assert!(
+            RffModel::from_parts(2, 1, 0.5, 0.0, -1.0, vec![1.0]).is_err()
+        );
+        assert!(
+            RffModel::from_parts(2, 1, 0.5, 0.0, 0.0, vec![f32::NAN])
+                .is_err()
+        );
+        assert!(RffModel::from_parts(2, 1, 0.5, 0.0, 0.0, vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn seed_for_id_is_stable_and_spreads() {
+        assert_eq!(seed_for_id("tenant"), seed_for_id("tenant"));
+        assert_ne!(seed_for_id("tenant-a"), seed_for_id("tenant-b"));
+    }
+
+    #[test]
+    fn resident_bytes_track_shapes() {
+        let exact = toy_exact();
+        let m = RffModel::fit(&exact, Some(64), 5).unwrap();
+        // w: 64, wmat: 64·3, phase: 64 → 4·320 + 28.
+        assert_eq!(m.resident_bytes(), 4 * (64 + 64 * 3 + 64) + 28);
+    }
+}

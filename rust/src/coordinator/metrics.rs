@@ -30,6 +30,10 @@ struct PerModel {
     out_of_bound: u64,
     dropped: u64,
     latency: Welford,
+    /// Serving substrate label the executor reported for this model
+    /// (`exact`/`maclaurin`/`rff`/`f16`/`int8`); empty until the first
+    /// served batch (e.g. rows created by `record_dropped` alone).
+    substrate: String,
 }
 
 impl PerModel {
@@ -40,16 +44,22 @@ impl PerModel {
             out_of_bound: 0,
             dropped: 0,
             latency: Welford::new(),
+            substrate: String::new(),
         }
     }
 
-    /// Fan-in: sum counters, merge moments (never overwrite).
+    /// Fan-in: sum counters, merge moments (never overwrite). The
+    /// substrate label is not a counter: any non-empty report wins
+    /// (across a hot swap the newest generation's label sticks).
     fn absorb(&mut self, other: &PerModel) {
         self.served_approx += other.served_approx;
         self.served_exact += other.served_exact;
         self.out_of_bound += other.out_of_bound;
         self.dropped += other.dropped;
         self.latency.merge(&other.latency);
+        if !other.substrate.is_empty() {
+            self.substrate = other.substrate.clone();
+        }
     }
 }
 
@@ -112,6 +122,10 @@ pub struct ModelMetricsSnapshot {
     /// aggregation still sums correctly if several shards report the
     /// same id (e.g. across a shard-count change).
     pub shards: Vec<usize>,
+    /// Serving substrate the executor reported
+    /// (`exact`/`maclaurin`/`rff`/`f16`/`int8`; empty before any
+    /// served batch).
+    pub substrate: String,
 }
 
 impl ModelMetricsSnapshot {
@@ -175,7 +189,17 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn record_batch(&self, model: &ModelId, route: Route, n: usize) {
+    /// Record one served sub-batch. `substrate` is the tenant's serving
+    /// substrate label (see [`ModelMetricsSnapshot::substrate`]); the
+    /// latest non-empty report wins, so a hot swap that changes the
+    /// substrate updates the row.
+    pub fn record_batch(
+        &self,
+        model: &ModelId,
+        route: Route,
+        n: usize,
+        substrate: &str,
+    ) {
         let mut g = self.inner.lock().unwrap();
         g.started.get_or_insert_with(Instant::now);
         g.batches += 1;
@@ -191,6 +215,9 @@ impl Metrics {
         match route {
             Route::Approx => pm.served_approx += n as u64,
             Route::Exact => pm.served_exact += n as u64,
+        }
+        if !substrate.is_empty() && pm.substrate != substrate {
+            pm.substrate = substrate.to_string();
         }
     }
 
@@ -310,6 +337,7 @@ impl Metrics {
                 dropped: pm.dropped,
                 mean_latency_s: pm.latency.mean(),
                 shards: model_shards.get(id).cloned().unwrap_or_default(),
+                substrate: pm.substrate.clone(),
             })
             .collect();
         per_model.sort_by(|a, b| a.id.cmp(&b.id));
@@ -363,6 +391,7 @@ impl Metrics {
                         out_of_bound: pm.out_of_bound,
                         dropped: pm.dropped,
                         latency: WelfordState::of(&pm.latency),
+                        substrate: pm.substrate.clone(),
                     })
                     .collect();
                 rows.sort_by(|a, b| a.id.cmp(&b.id));
@@ -406,6 +435,7 @@ impl Metrics {
                         out_of_bound: m.out_of_bound,
                         dropped: m.dropped,
                         latency: m.latency.to_welford(),
+                        substrate: m.substrate.clone(),
                     };
                     (id, pm)
                 })
@@ -454,6 +484,8 @@ pub struct ModelMetricsState {
     pub out_of_bound: u64,
     pub dropped: u64,
     pub latency: WelfordState,
+    /// Serving substrate label (empty before any served batch).
+    pub substrate: String,
 }
 
 /// A [`Metrics`] sink's raw accumulator state in transportable form:
@@ -486,6 +518,7 @@ impl MetricsSnapshot {
                 (
                     m.id.clone(),
                     Json::obj(vec![
+                        ("substrate", Json::str(m.substrate.clone())),
                         ("served_approx", Json::num(m.served_approx as f64)),
                         ("served_exact", Json::num(m.served_exact as f64)),
                         ("out_of_bound", Json::num(m.out_of_bound as f64)),
@@ -544,8 +577,8 @@ impl MetricsSnapshot {
             self.shard_count, self.queue_depth, self.uptime_s
         );
         out.push_str(
-            "model                    shard  served   approx    exact  \
-             oob drop  mean lat\n",
+            "model                    substrate shard  served   approx    \
+             exact  oob drop  mean lat\n",
         );
         for m in &self.per_model {
             let shards = m
@@ -555,8 +588,10 @@ impl MetricsSnapshot {
                 .collect::<Vec<_>>()
                 .join(",");
             out.push_str(&format!(
-                "{:<24} {:>5} {:>7} {:>8} {:>8} {:>4} {:>4} {:>8.1} µs\n",
+                "{:<24} {:>9} {:>5} {:>7} {:>8} {:>8} {:>4} {:>4} \
+                 {:>8.1} µs\n",
                 m.id,
+                if m.substrate.is_empty() { "-" } else { m.substrate.as_str() },
                 shards,
                 m.served_total(),
                 m.served_approx,
@@ -582,8 +617,8 @@ mod tests {
     fn counts_accumulate() {
         let m = Metrics::new();
         let a = mid("default");
-        m.record_batch(&a, Route::Approx, 10);
-        m.record_batch(&a, Route::Exact, 3);
+        m.record_batch(&a, Route::Approx, 10, "maclaurin");
+        m.record_batch(&a, Route::Exact, 3, "maclaurin");
         m.record_response(&a, Duration::from_micros(50), true);
         m.record_response(&a, Duration::from_micros(150), false);
         m.record_dropped(&a, 4);
@@ -602,8 +637,8 @@ mod tests {
     fn per_model_breakdown_separates_tenants() {
         let m = Metrics::new();
         let (a, b) = (mid("alpha"), mid("bravo"));
-        m.record_batch(&a, Route::Approx, 5);
-        m.record_batch(&b, Route::Exact, 2);
+        m.record_batch(&a, Route::Approx, 5, "maclaurin");
+        m.record_batch(&b, Route::Exact, 2, "maclaurin");
         m.record_response(&a, Duration::from_micros(10), true);
         m.record_response(&b, Duration::from_micros(20), false);
         let s = m.snapshot();
@@ -627,11 +662,11 @@ mod tests {
         let shard0 = Metrics::new();
         let shard1 = Metrics::new();
         let id = mid("tenant");
-        shard0.record_batch(&id, Route::Approx, 10);
+        shard0.record_batch(&id, Route::Approx, 10, "maclaurin");
         shard0.record_response(&id, Duration::from_micros(50), false);
         shard0.record_dropped(&id, 3);
-        shard1.record_batch(&id, Route::Approx, 7);
-        shard1.record_batch(&id, Route::Exact, 2);
+        shard1.record_batch(&id, Route::Approx, 7, "maclaurin");
+        shard1.record_batch(&id, Route::Exact, 2, "maclaurin");
         shard1.record_response(&id, Duration::from_micros(150), false);
         shard1.record_dropped(&id, 4);
         let s = Metrics::aggregate(&[&shard0, &shard1]);
@@ -656,8 +691,8 @@ mod tests {
     fn aggregate_keeps_distinct_models_distinct() {
         let shard0 = Metrics::new();
         let shard1 = Metrics::new();
-        shard0.record_batch(&mid("alpha"), Route::Approx, 5);
-        shard1.record_batch(&mid("bravo"), Route::Exact, 3);
+        shard0.record_batch(&mid("alpha"), Route::Approx, 5, "maclaurin");
+        shard1.record_batch(&mid("bravo"), Route::Exact, 3, "maclaurin");
         let s = Metrics::aggregate(&[&shard0, &shard1]);
         assert_eq!(s.per_model.len(), 2);
         assert_eq!(s.per_model[0].id, "alpha");
@@ -666,6 +701,31 @@ mod tests {
         assert_eq!(s.per_model[1].shards, vec![1]);
         let table = s.per_model_table();
         assert!(table.contains("shard"), "table gains the shard column");
+    }
+
+    #[test]
+    fn substrate_column_tracks_latest_report_and_survives_fanin() {
+        let shard0 = Metrics::new();
+        let shard1 = Metrics::new();
+        let id = mid("tenant");
+        // A drop-only row has no substrate yet.
+        shard0.record_dropped(&id, 1);
+        assert_eq!(Metrics::aggregate(&[&shard0]).per_model[0].substrate, "");
+        // First served batch sets it; a republish onto a different
+        // substrate updates it (latest non-empty report wins).
+        shard0.record_batch(&id, Route::Approx, 4, "maclaurin");
+        shard0.record_batch(&id, Route::Approx, 4, "rff");
+        assert_eq!(shard0.snapshot().per_model[0].substrate, "rff");
+        // Fan-in: a shard that never served the tenant (empty label)
+        // must not blank the column.
+        shard1.record_dropped(&id, 2);
+        let s = Metrics::aggregate(&[&shard0, &shard1]);
+        assert_eq!(s.per_model[0].substrate, "rff");
+        assert!(s.per_model_table().contains("rff"));
+        assert!(s.per_model_table().contains("substrate"));
+        // And it survives the transportable-state roundtrip.
+        let rebuilt = Metrics::from_state(&shard0.export_state());
+        assert_eq!(rebuilt.snapshot().per_model[0].substrate, "rff");
     }
 
     #[test]
@@ -679,10 +739,11 @@ mod tests {
     #[test]
     fn snapshot_json_has_fields() {
         let m = Metrics::new();
-        m.record_batch(&mid("default"), Route::Approx, 1);
+        m.record_batch(&mid("default"), Route::Approx, 1, "maclaurin");
         m.record_response(&mid("default"), Duration::from_micros(10), true);
         let j = m.snapshot().to_json().to_string_compact();
         assert!(j.contains("served_approx"));
+        assert!(j.contains("\"substrate\":\"maclaurin\""));
         assert!(j.contains("latency_percentiles"));
         assert!(j.contains("\"models\""));
         assert!(j.contains("\"default\""));
@@ -704,7 +765,7 @@ mod tests {
         // No traffic yet: uptime stays 0 (the gauge alone does not
         // start the serving window).
         assert_eq!(s.uptime_s, 0.0);
-        shard0.record_batch(&mid("a"), Route::Approx, 1);
+        shard0.record_batch(&mid("a"), Route::Approx, 1, "maclaurin");
         let s = Metrics::aggregate(&[&shard0, &shard1]);
         assert!(s.uptime_s >= 0.0);
         assert!(s.per_model_table().contains("queue_depth=8"));
@@ -714,8 +775,8 @@ mod tests {
     fn state_roundtrip_preserves_aggregate() {
         let m = Metrics::new();
         let (a, b) = (mid("alpha"), mid("bravo"));
-        m.record_batch(&a, Route::Approx, 10);
-        m.record_batch(&b, Route::Exact, 3);
+        m.record_batch(&a, Route::Approx, 10, "maclaurin");
+        m.record_batch(&b, Route::Exact, 3, "maclaurin");
         m.record_response(&a, Duration::from_micros(50), true);
         m.record_response(&a, Duration::from_micros(150), false);
         m.record_response(&b, Duration::from_millis(2), true);

@@ -37,9 +37,11 @@ use crate::linalg::{Mat, MathBackend};
 use crate::log_warn;
 use crate::predictor::{
     ApproxPredictor, PredictOutput, Predictor, QuantApproxPredictor,
-    QuantExactPredictor,
+    QuantExactPredictor, RffPredictor,
 };
-use crate::registry::{ModelEntry, ModelStore, TenantModels};
+use crate::registry::{
+    ModelEntry, ModelStore, PayloadKind, TenantModels,
+};
 use crate::svm::predict::ExactPredictor;
 use crate::svm::SvmModel;
 use crate::Result;
@@ -110,6 +112,25 @@ pub(crate) struct WorkerParams {
     pub quant_drift_tol: f32,
 }
 
+/// Substrate column this tenant reports to metrics: what its fast
+/// path actually is — `"exact"` when the bundle policy pins
+/// AlwaysExact (the approximation never runs), else the storage the
+/// Approx route evaluates on.
+fn substrate_label(entry: &ModelEntry) -> &'static str {
+    use super::router::RoutePolicy;
+    if entry.policy.and_then(|p| p.route) == Some(RoutePolicy::AlwaysExact) {
+        return "exact";
+    }
+    match &entry.models {
+        TenantModels::F32 { .. } => "maclaurin",
+        TenantModels::Rff { .. } => "rff",
+        TenantModels::Quantized { .. } => match entry.payload() {
+            PayloadKind::F16 => "f16",
+            _ => "int8",
+        },
+    }
+}
+
 /// Per-model serving state resident in the executor.
 struct Tenant {
     entry: Arc<ModelEntry>,
@@ -120,6 +141,9 @@ struct Tenant {
     /// in — constant per generation, cached so the per-batch path does
     /// not rescan the quantized payload (the f16 eps is an O(d²) scan).
     znorm_sq_budget: f32,
+    /// Metrics substrate column (see [`substrate_label`]), constant
+    /// per generation.
+    substrate: &'static str,
     /// Refresh epoch this tenant last revalidated against.
     epoch_seen: u64,
     last_check: Instant,
@@ -146,10 +170,12 @@ impl Tenant {
         let sv_norms = entry.sv_row_norms_sq();
         let tol = Tenant::effective_drift_tol(&entry, quant_drift_tol);
         let znorm_sq_budget = entry.znorm_sq_budget_with(tol);
+        let substrate = substrate_label(&entry);
         Tenant {
             entry,
             sv_norms,
             znorm_sq_budget,
+            substrate,
             epoch_seen: epoch,
             last_check: Instant::now(),
             last_used: 0,
@@ -162,6 +188,7 @@ impl Tenant {
         self.sv_norms = entry.sv_row_norms_sq();
         let tol = Tenant::effective_drift_tol(&entry, quant_drift_tol);
         self.znorm_sq_budget = entry.znorm_sq_budget_with(tol);
+        self.substrate = substrate_label(&entry);
         self.entry = entry;
         #[cfg(feature = "pjrt")]
         {
@@ -444,7 +471,7 @@ pub(crate) fn run_worker(
             };
             // Recorded only after a successful execute so served counts
             // and throughput never include failed work.
-            metrics.record_batch(&model, route, reqs.len());
+            metrics.record_batch(&model, route, reqs.len(), tenant.substrate);
             let norms = out.znorms_sq.unwrap_or(routed_norms);
             for (i, req) in reqs.into_iter().enumerate() {
                 let in_bound = norms[i] < budget;
@@ -676,6 +703,20 @@ fn execute(
                     )?
                     .predict_batch(z)
                 }
+                // The rff substrate rides the Approx route (its stored
+                // error estimate gated the budget); the Maclaurin twin
+                // in the bundle is tooling-only and never serves.
+                (TenantModels::Rff { rff, .. }, Route::Approx) => {
+                    RffPredictor::new(rff).predict_batch(z)
+                }
+                (TenantModels::Rff { exact, .. }, Route::Exact) => {
+                    ExactPredictor::with_norms(
+                        exact,
+                        tenant.sv_norms.clone(),
+                        *backend,
+                    )?
+                    .predict_batch(z)
+                }
             }
         }
         #[cfg(feature = "pjrt")]
@@ -696,6 +737,16 @@ fn execute(
                             approx: engine.prepare_approx(&a)?,
                             exact: engine.prepare_exact(&e)?,
                         }
+                    }
+                    // No AOT artifact computes cos(Wx+b) features, and
+                    // silently substituting the Maclaurin twin would
+                    // serve outside the budget the rff estimate gated.
+                    TenantModels::Rff { .. } => {
+                        return Err(crate::Error::InvalidArg(
+                            "rff tenants have no AOT artifacts; serve \
+                             them on a native backend"
+                                .into(),
+                        ));
                     }
                 };
                 tenant.prepared = Some(prepared);

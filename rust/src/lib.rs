@@ -118,6 +118,21 @@
 //! ([`approx::bounds::ExactQuantErr`] reports its drift). Keep
 //! margin-critical tenants at f32.
 //!
+//! ## Random-feature substrate
+//!
+//! Orthogonal to payload precision, a tenant can be published on the
+//! random Fourier feature substrate ([`approx::RffModel`], served by
+//! [`predictor::RffPredictor`]): `PublishOptions { substrate:
+//! Some(Substrate::Rff), rff_features: Some(d), .. }` or `registry
+//! publish --substrate rff --rff-features D`. The kind-6 `.arbf`
+//! record stores only `(seed, D, γ, bias, w)` — the D×d projection and
+//! phases regenerate deterministically from the seed at load — so the
+//! serving footprint is O(D·d) independent of the support-vector count
+//! and of γ. Routing consults the stored Monte-Carlo error estimate:
+//! the whole tenant serves approx when the estimate fits under
+//! `quant_drift_tol`, and escorts everything to exact otherwise
+//! (all-or-nothing, unlike Maclaurin's per-instance Eq. 3.11 budget).
+//!
 //! ## Architecture (three layers, Python never on the request path)
 //!
 //! * **L1/L2** — JAX + Pallas kernels (`python/compile/`) AOT-lowered to

@@ -20,11 +20,13 @@ pub mod gemm;
 pub mod matrix;
 pub mod quadform;
 pub mod quantblas;
+pub mod rffmap;
 pub mod syrk;
 pub mod vecops;
 
 pub use matrix::Mat;
 pub use quantblas::KernelArm;
+pub use rffmap::RffArm;
 
 /// Math backend selector mirrored on the paper's LOOPS/BLAS/ATLAS axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

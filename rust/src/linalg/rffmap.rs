@@ -1,0 +1,240 @@
+//! Fused evaluation kernel for the random-Fourier-feature substrate.
+//!
+//! The RFF decision function is
+//! `f(z) = bias + Σ_j w_j · cos(W_j·z + φ_j)` — a `D×d` GEMV, a fused
+//! cosine, and a `D`-length dot, evaluated here as one pass over the
+//! regenerated feature map (`W`, `φ` live in
+//! [`crate::approx::rff::RffModel`]; the `√(2/D)` feature scale and the
+//! folded dual weights are both baked into `w` at publish time).
+//!
+//! Dispatch mirrors [`super::quantblas`]: a scalar oracle arm plus a
+//! portable blocked arm behind a process-wide choice
+//! (`APPROXRBF_RFF_KERNEL=scalar|blocked`), with every kernel also
+//! taking the arm explicitly for side-by-side tests. There is no
+//! explicit-SIMD arm — the cosine dominates and `libm` cos does not
+//! vectorize — so "blocked" means 4 interleaved row accumulators
+//! (ILP across rows of `W`).
+//!
+//! ## Bit-identity across arms and shard counts
+//!
+//! Per row `j`, both arms accumulate `W_j·z` in the same strictly
+//! sequential `k` order, and both add the `w_j·cos(…)` terms in the
+//! same strictly sequential `j` order — the blocked arm only interleaves
+//! *independent* row accumulators. Every arm therefore returns
+//! bit-identical decisions, which the serving plane's shard-invariance
+//! tests rely on (the feature map itself is bit-identical everywhere
+//! because it regenerates from the stored seed).
+
+use std::sync::OnceLock;
+
+use crate::{log_info, log_warn};
+use crate::{Error, Result};
+
+/// One implementation of the RFF decision kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RffArm {
+    /// One row of `W` at a time; dispatch baseline and property-test
+    /// oracle.
+    Scalar,
+    /// Four interleaved row accumulators per pass (each row's sum stays
+    /// in scalar order, so decisions are bit-identical to `Scalar`).
+    Blocked,
+}
+
+impl RffArm {
+    /// Canonical name; [`std::fmt::Display`] delegates here.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RffArm::Scalar => "scalar",
+            RffArm::Blocked => "blocked",
+        }
+    }
+}
+
+impl std::fmt::Display for RffArm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for RffArm {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<RffArm> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(RffArm::Scalar),
+            "blocked" => Ok(RffArm::Blocked),
+            other => Err(Error::InvalidArg(format!(
+                "unknown rff kernel arm '{other}' (scalar|blocked)"
+            ))),
+        }
+    }
+}
+
+/// The arms this machine can execute, in dispatch-preference order
+/// (both are portable).
+pub fn rff_available_arms() -> Vec<RffArm> {
+    vec![RffArm::Scalar, RffArm::Blocked]
+}
+
+/// The process-wide RFF kernel arm, chosen once on first use: the
+/// `APPROXRBF_RFF_KERNEL` environment override (`scalar|blocked`,
+/// logged), else `blocked`. Decisions are bit-identical across arms,
+/// so the choice is a pure throughput knob.
+pub fn active_rff_arm() -> RffArm {
+    static ARM: OnceLock<RffArm> = OnceLock::new();
+    *ARM.get_or_init(|| match std::env::var("APPROXRBF_RFF_KERNEL") {
+        Ok(s) => match s.parse::<RffArm>() {
+            Ok(arm) => {
+                log_info!(
+                    "rffmap: APPROXRBF_RFF_KERNEL pins the '{arm}' \
+                     kernel arm"
+                );
+                arm
+            }
+            Err(e) => {
+                log_warn!("rffmap: {e}; using the default arm");
+                RffArm::Blocked
+            }
+        },
+        Err(_) => RffArm::Blocked,
+    })
+}
+
+/// Fused RFF decision for one instance:
+/// `bias + Σ_j w[j]·cos(wmat[j·d..]·z + phase[j])`.
+///
+/// `wmat` is the `D×d` row-major feature map, `phase.len() == w.len()
+/// == D`, `z.len() == d`. Both arms return bit-identical values (see
+/// module docs).
+pub fn rff_decision(
+    arm: RffArm,
+    wmat: &[f32],
+    phase: &[f32],
+    w: &[f32],
+    d: usize,
+    bias: f32,
+    z: &[f32],
+) -> f32 {
+    let n_features = w.len();
+    debug_assert_eq!(phase.len(), n_features);
+    debug_assert_eq!(wmat.len(), n_features * d);
+    debug_assert_eq!(z.len(), d);
+    match arm {
+        RffArm::Scalar => {
+            let mut total = bias;
+            for j in 0..n_features {
+                let row = &wmat[j * d..(j + 1) * d];
+                let mut acc = 0f32;
+                for k in 0..d {
+                    acc += row[k] * z[k];
+                }
+                total += w[j] * (acc + phase[j]).cos();
+            }
+            total
+        }
+        RffArm::Blocked => {
+            let mut total = bias;
+            let mut j = 0usize;
+            while j + 4 <= n_features {
+                let r0 = &wmat[j * d..(j + 1) * d];
+                let r1 = &wmat[(j + 1) * d..(j + 2) * d];
+                let r2 = &wmat[(j + 2) * d..(j + 3) * d];
+                let r3 = &wmat[(j + 3) * d..(j + 4) * d];
+                let (mut a0, mut a1, mut a2, mut a3) =
+                    (0f32, 0f32, 0f32, 0f32);
+                for k in 0..d {
+                    let zk = z[k];
+                    a0 += r0[k] * zk;
+                    a1 += r1[k] * zk;
+                    a2 += r2[k] * zk;
+                    a3 += r3[k] * zk;
+                }
+                // Same j-order as the scalar arm: bit-identical totals.
+                total += w[j] * (a0 + phase[j]).cos();
+                total += w[j + 1] * (a1 + phase[j + 1]).cos();
+                total += w[j + 2] * (a2 + phase[j + 2]).cos();
+                total += w[j + 3] * (a3 + phase[j + 3]).cos();
+                j += 4;
+            }
+            while j < n_features {
+                let row = &wmat[j * d..(j + 1) * d];
+                let mut acc = 0f32;
+                for k in 0..d {
+                    acc += row[k] * z[k];
+                }
+                total += w[j] * (acc + phase[j]).cos();
+                j += 1;
+            }
+            total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn arm_parse_roundtrip() {
+        for arm in rff_available_arms() {
+            assert_eq!(arm.to_string().parse::<RffArm>().unwrap(), arm);
+        }
+        assert!("simd".parse::<RffArm>().is_err());
+    }
+
+    #[test]
+    fn property_arms_bit_identical() {
+        let mut rng = Rng::new(0x8FF0);
+        for case in 0..64 {
+            // Odd D values exercise the blocked arm's tail loop.
+            let d = 1 + rng.below(17);
+            let n_features = 1 + rng.below(37);
+            let wmat: Vec<f32> =
+                (0..n_features * d).map(|_| rng.normal() as f32).collect();
+            let phase: Vec<f32> = (0..n_features)
+                .map(|_| rng.range(0.0, std::f64::consts::TAU) as f32)
+                .collect();
+            let w: Vec<f32> =
+                (0..n_features).map(|_| rng.normal() as f32).collect();
+            let z: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let bias = rng.normal() as f32;
+            let reference = rff_decision(
+                RffArm::Scalar,
+                &wmat,
+                &phase,
+                &w,
+                d,
+                bias,
+                &z,
+            );
+            assert!(reference.is_finite());
+            for arm in rff_available_arms() {
+                let got =
+                    rff_decision(arm, &wmat, &phase, &w, d, bias, &z);
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "case {case} ({arm}): {got} vs {reference}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_manual_small_case() {
+        // D=2, d=1: f(z) = bias + w0·cos(w00·z + φ0) + w1·cos(w10·z + φ1).
+        let wmat = [0.5f32, -1.5];
+        let phase = [0.25f32, 1.0];
+        let w = [2.0f32, -0.5];
+        let z = [0.8f32];
+        let manual = 0.1
+            + 2.0 * (0.5f32 * 0.8 + 0.25).cos()
+            + -0.5 * (-1.5f32 * 0.8 + 1.0).cos();
+        for arm in rff_available_arms() {
+            let got = rff_decision(arm, &wmat, &phase, &w, 1, 0.1, &z);
+            assert!((got - manual).abs() < 1e-6, "{arm}: {got} vs {manual}");
+        }
+    }
+}

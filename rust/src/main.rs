@@ -13,7 +13,8 @@
 //!                       [--shards N] [--xla]
 //! approxrbf registry    publish|list|serve|rollback --store dir [--id name]
 //!                       [--model m.model] [--approx m.approx] [--warm]
-//!                       [--quantize f16|int8] [--route hybrid]
+//!                       [--quantize f16|int8] [--substrate maclaurin|rff]
+//!                       [--rff-features D] [--route hybrid]
 //!                       [--tenant-max-batch N] [--tenant-max-wait-us N]
 //!                       [--resident-hint N] [--drift-tol T] [--shards N]
 //! approxrbf serve-shard --listen ADDR --store dir [--shards N]
@@ -37,7 +38,9 @@ use approxrbf::coordinator::{
 use approxrbf::data::{libsvm_format, SynthProfile};
 use approxrbf::linalg::MathBackend;
 use approxrbf::net::{Router, RouterConfig, ShardServer, ShardServerConfig};
-use approxrbf::registry::{binfmt, ModelStore, PayloadKind, PublishOptions};
+use approxrbf::registry::{
+    binfmt, ModelStore, PayloadKind, PublishOptions, Substrate,
+};
 use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
@@ -94,7 +97,9 @@ fn usage() -> String {
                (--shards N spreads tenants over N executor lanes)\n  \
                registry    publish/list/serve/rollback .arbf model bundles\n              \
                (publish --store dir --id name --model m.model\n               \
-               [--warm] [--quantize f16|int8] [--route hybrid]\n               \
+               [--warm] [--quantize f16|int8]\n               \
+               [--substrate maclaurin|rff] [--rff-features D]\n               \
+               [--route hybrid]\n               \
                [--tenant-max-batch N] [--tenant-max-wait-us N]\n               \
                [--resident-hint N] [--drift-tol T];\n              \
                rollback --store dir --id name)\n  \
@@ -522,12 +527,13 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         let hdr = binfmt::peek_header(&bytes)?;
         println!(
             "arbf v{} bundle: {} record(s), generation {}, d={}, n_sv={}, \
-             payload={}, {} B",
+             substrate={}, payload={}, {} B",
             hdr.version,
             hdr.n_records,
             hdr.generation,
             hdr.dim,
             hdr.n_sv,
+            if hdr.has_rff() { "rff" } else { "maclaurin" },
             hdr.payload(),
             bytes.len()
         );
@@ -574,6 +580,15 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                         err.eps_m
                     )
                 }
+                binfmt::ModelRecord::Rff(r) => println!(
+                    "  rff   : D={} seed={:#018x} γ={:.4} err≈{} \
+                     resident={} B [{footprint}]",
+                    r.n_features(),
+                    r.seed,
+                    r.gamma,
+                    fmt_bound(r.err_est),
+                    r.resident_bytes()
+                ),
                 binfmt::ModelRecord::Policy(p) => println!(
                     "  policy: route={} max_batch={} max_wait={} \
                      resident_hint={} drift_tol={} [{footprint}]",
@@ -656,10 +671,20 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 Some(s) => Some(s.parse::<PayloadKind>()?),
                 None => None,
             };
+            let substrate = match args.get("substrate") {
+                Some(s) => Some(s.parse::<Substrate>()?),
+                None => None,
+            };
+            let rff_features = match args.get_usize("rff-features", 0)? {
+                0 => None,
+                n => Some(n),
+            };
             let opts = PublishOptions {
                 policy: tenant_policy_from_args(args)?,
                 warm: args.has_flag("warm"),
                 quantize,
+                substrate,
+                rff_features,
             };
             let described = match &opts.policy {
                 Some(p) => format!(" policy={p:?}"),
@@ -669,9 +694,10 @@ fn cmd_registry(args: &Args) -> Result<()> {
             let info = store.peek(id)?;
             println!(
                 "published '{id}' generation {generation}: d={} n_sv={} \
-                 payload={} {} B{described} -> {}",
+                 substrate={} payload={} {} B{described} -> {}",
                 info.dim,
                 info.n_sv,
+                if info.has_rff { "rff" } else { "maclaurin" },
                 info.payload,
                 info.size_bytes,
                 store.root().join(format!("{id}.arbf")).display()
@@ -688,6 +714,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 "generation".to_string(),
                 "d".to_string(),
                 "n_sv".to_string(),
+                "substrate".to_string(),
                 "payload".to_string(),
                 "drift".to_string(),
                 "bytes".to_string(),
@@ -699,11 +726,21 @@ fn cmd_registry(args: &Args) -> Result<()> {
             for i in &infos {
                 let archived =
                     archived_counts.get(&i.id).copied().unwrap_or(0);
-                // Exact-side decision-drift bound of quantized entries
-                // (decoding the bundle; `-` for f32, `n/a` when the
-                // kernel is non-RBF and no bound exists, `?` when the
-                // bundle fails to decode).
-                let drift = if i.payload == PayloadKind::F32 {
+                // Drift column: for quantized entries the exact-side
+                // decision-drift bound, for rff entries the stored
+                // Monte-Carlo error estimate (both decode the bundle;
+                // `-` for f32 Maclaurin, `n/a` when no finite bound
+                // exists, `?` when the bundle fails to decode).
+                let drift = if i.has_rff {
+                    match store.load(&i.id) {
+                        Ok(entry) => entry
+                            .models
+                            .rff()
+                            .map(|r| fmt_bound(r.err_est))
+                            .unwrap_or_else(|| "-".to_string()),
+                        Err(_) => "?".to_string(),
+                    }
+                } else if i.payload == PayloadKind::F32 {
                     "-".to_string()
                 } else {
                     match store.load(&i.id) {
@@ -719,6 +756,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                     i.generation.to_string(),
                     i.dim.to_string(),
                     i.n_sv.to_string(),
+                    if i.has_rff { "rff" } else { "maclaurin" }.to_string(),
                     i.payload.to_string(),
                     drift,
                     i.size_bytes.to_string(),

@@ -295,6 +295,7 @@ fn encode_payload(msg: &Message) -> Result<Vec<u8>> {
                     push_u64(&mut out, m.out_of_bound);
                     push_u64(&mut out, m.dropped);
                     push_welford(&mut out, &m.latency);
+                    push_str(&mut out, clipped(&m.substrate, MAX_WIRE_STR))?;
                 }
             }
         }
@@ -509,6 +510,7 @@ fn decode_payload(kind: u16, payload: &[u8]) -> Result<Message> {
                         out_of_bound: rd.u64("model row out_of_bound")?,
                         dropped: rd.u64("model row dropped")?,
                         latency: read_welford(&mut rd, "model row latency")?,
+                        substrate: read_str(&mut rd, "model row substrate")?,
                     });
                 }
                 states.push(MetricsState {
@@ -705,6 +707,7 @@ mod tests {
                     min: 5e-5,
                     max: 3e-4,
                 },
+                substrate: "rff".to_string(),
             }],
         }])
     }

@@ -25,16 +25,26 @@
 //!   accumulation). The dequantization error is bounded and folded
 //!   into the Eq. 3.11 routing budget by the serving executor.
 //!
+//! * [`RffPredictor`] — the random-feature substrate
+//!   ([`crate::approx::RffModel`], kind-6 `.arbf` bundles): `O(D·d)`
+//!   fused cosine-feature evaluation through the
+//!   [`crate::linalg::rffmap`] kernels, arm-dispatched via
+//!   `APPROXRBF_RFF_KERNEL` unless pinned with `with_arm`; decisions
+//!   are bit-identical across arms. Routing uses the model's stored
+//!   Monte-Carlo error estimate instead of a ‖z‖² budget.
+//!
 //! The serving layer ([`crate::coordinator`]) routes every batch through
 //! this trait, so new backends (sharded, quantized, remote) slot in
 //! behind a stable surface. Callers that want trait objects can: the
 //! trait is object-safe (`&dyn Predictor` works).
 
 use crate::linalg::quantblas;
+use crate::linalg::rffmap;
 use crate::linalg::KernelArm;
 use crate::linalg::Mat;
 use crate::linalg::MathBackend;
-use crate::approx::ApproxModel;
+use crate::linalg::RffArm;
+use crate::approx::{ApproxModel, RffModel};
 use crate::registry::quant::{
     PayloadKind, QuantApproxModel, QuantSvmModel,
 };
@@ -181,6 +191,65 @@ impl Predictor for QuantApproxPredictor<'_> {
             PayloadKind::F16 => "approx-quant-f16",
             _ => "approx-quant-int8",
         }
+    }
+
+    fn predict_batch(&self, z: &Mat) -> Result<PredictOutput> {
+        if z.cols() != self.model.dim() {
+            return Err(Error::Shape(format!(
+                "batch dim {} vs model dim {}",
+                z.cols(),
+                self.model.dim()
+            )));
+        }
+        let mut decisions = Vec::with_capacity(z.rows());
+        let mut norms = Vec::with_capacity(z.rows());
+        for r in 0..z.rows() {
+            let (dec, zn) = self.model.decision_one_with(self.arm, z.row(r));
+            decisions.push(dec);
+            norms.push(zn);
+        }
+        Ok(PredictOutput { decisions, znorms_sq: Some(norms) })
+    }
+}
+
+/// The random-feature substrate as a [`Predictor`]: the fused
+/// `cos(Wx+b)`-feature decision kernel in [`crate::linalg::rffmap`],
+/// `O(D·d)` per row with no `O(n_SV)` term anywhere. Row-independent
+/// evaluation — decisions are bit-stable across batch shapes, shard
+/// counts, and kernel arms (both arms accumulate in the same order).
+pub struct RffPredictor<'m> {
+    model: &'m RffModel,
+    arm: RffArm,
+}
+
+impl<'m> RffPredictor<'m> {
+    /// Evaluate with the process-wide kernel arm
+    /// (`APPROXRBF_RFF_KERNEL`, else blocked).
+    pub fn new(model: &'m RffModel) -> RffPredictor<'m> {
+        Self::with_arm(model, rffmap::active_rff_arm())
+    }
+
+    /// Pin a specific kernel arm (A/B benches, dispatch-parity tests).
+    pub fn with_arm(model: &'m RffModel, arm: RffArm) -> RffPredictor<'m> {
+        RffPredictor { model, arm }
+    }
+
+    pub fn model(&self) -> &RffModel {
+        self.model
+    }
+
+    pub fn arm(&self) -> RffArm {
+        self.arm
+    }
+}
+
+impl Predictor for RffPredictor<'_> {
+    fn dim(&self) -> usize {
+        self.model.dim()
+    }
+
+    fn kind(&self) -> &'static str {
+        "approx-rff"
     }
 
     fn predict_batch(&self, z: &Mat) -> Result<PredictOutput> {
@@ -431,6 +500,53 @@ mod tests {
                 ));
             }
         }
+    }
+
+    #[test]
+    fn rff_predictor_matches_model_and_checks_shapes() {
+        let (model, _, _) = trained();
+        let rm = RffModel::fit(&model, Some(256), 7).unwrap();
+        // SV rows sit inside the fit's probe set, so the stored
+        // estimate provably covers them.
+        let z = model.sv.rows_slice(0, model.n_sv().min(16));
+        let p = RffPredictor::new(&rm);
+        assert_eq!(p.dim(), model.dim());
+        assert_eq!(p.kind(), "approx-rff");
+        let out = p.predict_batch(&z).unwrap();
+        assert_eq!(out.decisions.len(), z.rows());
+        let norms = out.znorms_sq.expect("rff path must report ‖z‖²");
+        for r in 0..z.rows() {
+            // Batch rows are bit-identical to per-row evaluation and
+            // across arms (row-independent, order-stable kernels).
+            let (one, zn) = rm.decision_one(z.row(r));
+            assert_eq!(out.decisions[r].to_bits(), one.to_bits());
+            assert_eq!(norms[r].to_bits(), zn.to_bits());
+            // On training-adjacent inputs the fitted map stays within
+            // its stored estimate of the exact machine.
+            let want = model.decision_one(z.row(r));
+            assert!(
+                (out.decisions[r] - want).abs() <= rm.err_est,
+                "row {r}: |{} - {want}| > {}",
+                out.decisions[r],
+                rm.err_est
+            );
+        }
+        for arm in rffmap::rff_available_arms() {
+            let pinned = RffPredictor::with_arm(&rm, arm);
+            assert_eq!(pinned.arm(), arm);
+            let pout = pinned.predict_batch(&z).unwrap();
+            for r in 0..z.rows() {
+                assert_eq!(
+                    pout.decisions[r].to_bits(),
+                    out.decisions[r].to_bits(),
+                    "{arm} row {r}"
+                );
+            }
+        }
+        // Shape contract + object safety.
+        let dyn_p: &dyn Predictor = &p;
+        let bad = Mat::zeros(2, model.dim() + 1);
+        assert!(matches!(dyn_p.predict_batch(&bad), Err(Error::Shape(_))));
     }
 
     #[test]

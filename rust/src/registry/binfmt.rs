@@ -27,7 +27,7 @@
 
 use std::time::Duration;
 
-use crate::approx::ApproxModel;
+use crate::approx::{ApproxModel, RffModel};
 use crate::coordinator::{RoutePolicy, TenantPolicy};
 use crate::linalg::Mat;
 use crate::svm::{Kernel, SvmModel};
@@ -57,6 +57,10 @@ pub const FLAG_HAS_POLICY: u64 = 1;
 pub const FLAG_QUANT_F16: u64 = 1 << 1;
 /// Header flag bit: model payloads are kind-5 (int8) records.
 pub const FLAG_QUANT_INT8: u64 = 1 << 2;
+/// Header flag bit: the bundle carries a kind-6 random-feature record
+/// alongside its f32 exact/approx pair. Mutually exclusive with the
+/// quantization bits (no encoder writes both substrates).
+pub const FLAG_RFF: u64 = 1 << 3;
 /// Version of the kind-3 policy record payload when no per-tenant
 /// drift tolerance is set (19-byte body — the original layout, kept
 /// byte-stable so every pre-existing bundle and golden fixture still
@@ -72,6 +76,7 @@ const KIND_APPROX: u16 = 2;
 const KIND_POLICY: u16 = 3;
 const KIND_QUANT_F16: u16 = 4;
 const KIND_QUANT_INT8: u16 = 5;
+const KIND_RFF: u16 = 6;
 /// Role byte leading every kind-4/5 payload: which model the record
 /// quantizes.
 const ROLE_SVM: u8 = 1;
@@ -107,6 +112,11 @@ impl ArbfHeader {
         self.flags & FLAG_HAS_POLICY != 0
     }
 
+    /// True iff the header advertises a kind-6 random-feature record.
+    pub fn has_rff(&self) -> bool {
+        self.flags & FLAG_RFF != 0
+    }
+
     /// Payload precision advertised by the header flags (the full
     /// decode cross-checks this against the actual record kinds).
     pub fn payload(&self) -> PayloadKind {
@@ -131,6 +141,9 @@ pub enum ModelRecord {
     QuantSvm(QuantSvmModel),
     /// Quantized approx model (kind 4/5, role 2), in native storage.
     QuantApprox(QuantApproxModel),
+    /// Random-feature substrate (kind 6): folded weights + the seed the
+    /// feature map regenerates from.
+    Rff(RffModel),
 }
 
 /// A fully decoded registry bundle: the (exact, approx) pair in
@@ -380,6 +393,24 @@ fn quant_approx_payload(a: &QuantApproxModel) -> Vec<u8> {
     out
 }
 
+/// Kind-6 payload: the stored half of a random-feature model —
+/// `dim:u32, D:u32, seed:u64, γ:f32, bias:f32, err_est:f32, w: D×f32`
+/// (28 + 4·D bytes). `W` and `φ` are *not* stored; they regenerate
+/// deterministically from the seed (see [`RffModel::from_parts`]).
+fn rff_payload(m: &RffModel) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28 + 4 * m.n_features());
+    push_u32(&mut out, m.dim() as u32);
+    push_u32(&mut out, m.n_features() as u32);
+    push_u64(&mut out, m.seed);
+    push_f32(&mut out, m.gamma);
+    push_f32(&mut out, m.bias);
+    push_f32(&mut out, m.err_est);
+    for &x in &m.w {
+        push_f32(&mut out, x);
+    }
+    out
+}
+
 fn write_file(
     generation: u64,
     dim: usize,
@@ -482,6 +513,28 @@ pub fn encode_bundle_quantized(
     }
 }
 
+/// Encode a random-feature bundle: the f32 exact/approx pair (kept so
+/// the exact escort path and the Maclaurin twin survive a republish)
+/// plus the kind-6 record, advertised via [`FLAG_RFF`]. The publish
+/// path for `registry publish --substrate rff`.
+pub fn encode_bundle_rff(
+    generation: u64,
+    exact: &SvmModel,
+    approx: &ApproxModel,
+    rff: &RffModel,
+    policy: Option<&TenantPolicy>,
+) -> Result<Vec<u8>> {
+    encode_bundle_native(
+        generation,
+        &TenantModels::Rff {
+            exact: exact.clone(),
+            approx: approx.clone(),
+            rff: rff.clone(),
+        },
+        policy,
+    )
+}
+
 /// Encode a bundle from whatever storage the models already hold —
 /// **lossless** for quantized models (stored q-values and scales are
 /// written verbatim, never re-quantized). This is the rollback path
@@ -505,6 +558,23 @@ pub fn encode_bundle_native(
             let sp = svm_payload(exact)?;
             let ap = approx_payload(approx)?;
             (vec![(KIND_SVM, sp), (KIND_APPROX, ap)], 0u64)
+        }
+        TenantModels::Rff { exact, approx, rff } => {
+            if exact.dim() != approx.dim() || exact.dim() != rff.dim() {
+                return Err(Error::Shape(format!(
+                    "bundle: exact dim {} vs approx dim {} vs rff dim {}",
+                    exact.dim(),
+                    approx.dim(),
+                    rff.dim()
+                )));
+            }
+            let sp = svm_payload(exact)?;
+            let ap = approx_payload(approx)?;
+            let rp = rff_payload(rff);
+            (
+                vec![(KIND_SVM, sp), (KIND_APPROX, ap), (KIND_RFF, rp)],
+                FLAG_RFF,
+            )
         }
         TenantModels::Quantized { exact, approx } => {
             if exact.dim() != approx.dim() {
@@ -669,6 +739,15 @@ pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
     if flags & FLAG_QUANT_F16 != 0 && flags & FLAG_QUANT_INT8 != 0 {
         return Err(Error::Corrupt(
             "header flags claim both f16 and int8 payloads".into(),
+        ));
+    }
+    // Same reasoning for the random-feature bit: an rff bundle stores
+    // its pair in f32, so rff + quantized can only be corruption.
+    if flags & FLAG_RFF != 0
+        && flags & (FLAG_QUANT_F16 | FLAG_QUANT_INT8) != 0
+    {
+        return Err(Error::Corrupt(
+            "header flags claim both rff and quantized payloads".into(),
         ));
     }
     Ok(ArbfHeader { version, n_records, generation, dim, n_sv, flags })
@@ -845,6 +924,52 @@ fn check_approx_elems(d: usize) -> Result<()> {
         )));
     }
     Ok(())
+}
+
+/// Alloc-bomb cap for kind-6 records: the regenerated feature map is a
+/// dense `D×d` allocation the payload never ships, so a crafted header
+/// could otherwise demand gigabytes from a 28-byte record.
+fn check_rff_elems(n_features: usize, d: usize) -> Result<()> {
+    if n_features == 0 || d == 0 {
+        return Err(Error::Corrupt(format!(
+            "rff record needs D ≥ 1 and d ≥ 1 (got D={n_features}, \
+             d={d})"
+        )));
+    }
+    if (n_features as u64) * (d as u64) > MAX_MODEL_ELEMS {
+        return Err(Error::Corrupt(format!(
+            "implausible rff record: D={n_features} × d={d} demands a \
+             feature map beyond the {MAX_MODEL_ELEMS}-element cap"
+        )));
+    }
+    Ok(())
+}
+
+/// Decode a kind-6 record, regenerating the feature map from the
+/// stored seed (so two decodes of the same bytes are bit-identical).
+fn decode_rff_payload(payload: &[u8], want_dim: u32) -> Result<RffModel> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let d = r.u32("rff dim")? as usize;
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "rff record dim {d} disagrees with header dim {want_dim}"
+        )));
+    }
+    let n_features = r.u32("rff feature count")? as usize;
+    check_rff_elems(n_features, d)?;
+    let seed = r.u64("rff seed")?;
+    let gamma = r.f32("rff gamma")?;
+    let bias = r.f32("rff bias")?;
+    let err_est = r.f32("rff err_est")?;
+    let w = r.f32_vec(n_features, "rff weights")?;
+    if r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "rff record: {} trailing payload bytes",
+            payload.len() - r.pos
+        )));
+    }
+    RffModel::from_parts(d, seed, gamma, bias, err_est, w)
+        .map_err(|e| Error::Corrupt(format!("rff record: {e}")))
 }
 
 /// Decode a kind-4 (f16) or kind-5 (int8) record: a role byte, then the
@@ -1066,6 +1191,39 @@ pub fn record_frames(bytes: &[u8]) -> Result<Vec<RecordFrame>> {
     Ok(out)
 }
 
+/// The cheaply-peekable facts of a kind-6 record: what `registry list`
+/// and `inspect --arbf` render without decoding the weight vector or
+/// regenerating the feature map.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RffSummary {
+    pub n_features: u32,
+    pub seed: u64,
+    pub gamma: f32,
+    /// Stored Monte-Carlo decision-error estimate.
+    pub err_est: f32,
+}
+
+/// Scan the record frames for a kind-6 record and read its fixed
+/// 28-byte prefix. `Ok(None)` when the file holds no rff record.
+pub fn peek_rff_summary(bytes: &[u8]) -> Result<Option<RffSummary>> {
+    for frame in record_frames(bytes)? {
+        if frame.kind != KIND_RFF {
+            continue;
+        }
+        let start = frame.payload_offset;
+        let end = start + frame.payload_len as usize;
+        let mut r = Reader { buf: &bytes[start..end], pos: 0 };
+        let _dim = r.u32("rff dim")?;
+        let n_features = r.u32("rff feature count")?;
+        let seed = r.u64("rff seed")?;
+        let gamma = r.f32("rff gamma")?;
+        let _bias = r.f32("rff bias")?;
+        let err_est = r.f32("rff err_est")?;
+        return Ok(Some(RffSummary { n_features, seed, gamma, err_est }));
+    }
+    Ok(None)
+}
+
 /// Decode a whole `.arbf` file into its records, verifying framing and
 /// per-record CRCs.
 pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
@@ -1105,6 +1263,9 @@ pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
             }
             KIND_QUANT_INT8 => {
                 decode_quant_payload(payload, PayloadKind::Int8, hdr.dim)?
+            }
+            KIND_RFF => {
+                ModelRecord::Rff(decode_rff_payload(payload, hdr.dim)?)
             }
             k => {
                 return Err(Error::Corrupt(format!(
@@ -1149,6 +1310,7 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
     let mut approx = None;
     let mut q_exact: Option<QuantSvmModel> = None;
     let mut q_approx: Option<QuantApproxModel> = None;
+    let mut rff: Option<RffModel> = None;
     let mut policy = None;
     for rec in records {
         match rec {
@@ -1160,6 +1322,7 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
             ModelRecord::QuantApprox(a) if q_approx.is_none() => {
                 q_approx = Some(a)
             }
+            ModelRecord::Rff(m) if rff.is_none() => rff = Some(m),
             ModelRecord::Policy(p) if policy.is_none() => policy = Some(p),
             _ => {
                 return Err(Error::Corrupt(
@@ -1168,11 +1331,16 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
             }
         }
     }
-    let models = match (exact, approx, q_exact, q_approx) {
-        (Some(exact), Some(approx), None, None) => {
+    let models = match (exact, approx, q_exact, q_approx, rff) {
+        (Some(exact), Some(approx), None, None, None) => {
             TenantModels::F32 { exact, approx }
         }
-        (None, None, Some(exact), Some(approx)) => {
+        // Record-level dims already agree: every model record
+        // cross-checked its own dim against the header's.
+        (Some(exact), Some(approx), None, None, Some(rff)) => {
+            TenantModels::Rff { exact, approx, rff }
+        }
+        (None, None, Some(exact), Some(approx), None) => {
             if exact.payload() != approx.payload() {
                 return Err(Error::Corrupt(format!(
                     "bundle mixes payload kinds ({} exact vs {} approx)",
@@ -1195,6 +1363,14 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
             "header advertises {} payloads but records are {}",
             hdr.payload(),
             models.payload()
+        )));
+    }
+    let is_rff = matches!(models, TenantModels::Rff { .. });
+    if hdr.has_rff() != is_rff {
+        return Err(Error::Corrupt(format!(
+            "header advertises rff={} but the bundle {} a kind-6 record",
+            hdr.has_rff(),
+            if is_rff { "holds" } else { "lacks" }
         )));
     }
     Ok(Bundle { generation: hdr.generation, models, policy })
@@ -1663,6 +1839,154 @@ mod tests {
             decode_bundle_full(&bytes),
             Err(Error::Corrupt(_))
         ));
+    }
+
+    // -- kind-6 random-feature records --------------------------------
+
+    fn toy_rff() -> RffModel {
+        RffModel::fit(&toy_svm(), Some(64), 42).unwrap()
+    }
+
+    #[test]
+    fn rff_bundle_roundtrips_and_sets_flag() {
+        let e = toy_svm();
+        let a = toy_approx();
+        let rff = toy_rff();
+        let bytes = encode_bundle_rff(9, &e, &a, &rff, None).unwrap();
+        let hdr = peek_header(&bytes).unwrap();
+        assert_eq!(hdr.flags, FLAG_RFF);
+        assert!(hdr.has_rff());
+        assert_eq!(hdr.n_records, 3);
+        assert_eq!(hdr.payload(), PayloadKind::F32);
+        let frames = record_frames(&bytes).unwrap();
+        assert_eq!(
+            frames.iter().map(|f| f.kind).collect::<Vec<_>>(),
+            vec![KIND_SVM, KIND_APPROX, KIND_RFF]
+        );
+        assert_eq!(frames[2].payload_len, 28 + 4 * 64u64);
+        let b = decode_bundle_full(&bytes).unwrap();
+        assert_eq!(b.generation, 9);
+        let TenantModels::Rff { rff: back, .. } = &b.models else {
+            panic!("expected an rff bundle, got {:?}", b.models.payload());
+        };
+        assert_eq!(back.seed, rff.seed);
+        assert_eq!(back.w, rff.w);
+        assert_eq!(back.err_est, rff.err_est);
+        // The regenerated map gives bit-identical decisions.
+        let z = [0.4f32, -0.2, 1.0];
+        assert_eq!(
+            back.decision_one(&z).0.to_bits(),
+            rff.decision_one(&z).0.to_bits()
+        );
+        // Byte-stability: native re-encode reproduces the file exactly.
+        let again =
+            encode_bundle_native(9, &b.models, b.policy.as_ref()).unwrap();
+        assert_eq!(again, bytes);
+        // Cheap introspection sees the stored facts.
+        let s = peek_rff_summary(&bytes).unwrap().unwrap();
+        assert_eq!(s.n_features, 64);
+        assert_eq!(s.seed, rff.seed);
+        assert_eq!(s.err_est, rff.err_est);
+        // Non-rff files peek as None.
+        let plain = encode_bundle(1, &e, &a).unwrap();
+        assert_eq!(peek_rff_summary(&plain).unwrap(), None);
+    }
+
+    #[test]
+    fn rff_bundle_carries_policy() {
+        let policy = TenantPolicy {
+            route: Some(RoutePolicy::Hybrid),
+            quant_drift_tol: Some(0.5),
+            ..Default::default()
+        };
+        let bytes = encode_bundle_rff(
+            2,
+            &toy_svm(),
+            &toy_approx(),
+            &toy_rff(),
+            Some(&policy),
+        )
+        .unwrap();
+        let hdr = peek_header(&bytes).unwrap();
+        assert_eq!(hdr.flags, FLAG_RFF | FLAG_HAS_POLICY);
+        let b = decode_bundle_full(&bytes).unwrap();
+        assert_eq!(b.policy, Some(policy));
+    }
+
+    #[test]
+    fn rff_flag_mismatch_is_corrupt() {
+        // Clear FLAG_RFF: records hold a kind-6, header denies it.
+        let mut bytes =
+            encode_bundle_rff(1, &toy_svm(), &toy_approx(), &toy_rff(), None)
+                .unwrap();
+        bytes[24] &= !(FLAG_RFF as u8);
+        assert!(matches!(
+            decode_bundle_full(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("advertises")
+        ));
+        // Set FLAG_RFF on a plain bundle: header promises a kind-6 the
+        // records lack.
+        let mut bytes = encode_bundle(1, &toy_svm(), &toy_approx()).unwrap();
+        bytes[24] |= FLAG_RFF as u8;
+        assert!(matches!(
+            decode_bundle_full(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("advertises")
+        ));
+    }
+
+    #[test]
+    fn contradictory_rff_and_quant_flags_are_corrupt_at_peek() {
+        let mut bytes =
+            encode_bundle_rff(1, &toy_svm(), &toy_approx(), &toy_rff(), None)
+                .unwrap();
+        bytes[24] |= FLAG_QUANT_INT8 as u8;
+        assert!(matches!(
+            peek_header(&bytes),
+            Err(Error::Corrupt(m)) if m.contains("rff and quantized")
+        ));
+    }
+
+    #[test]
+    fn oversized_rff_feature_claims_are_capped() {
+        // Inflate the stored D: the alloc-bomb cap must reject before
+        // the D×d map regeneration allocates anything.
+        let bytes =
+            encode_bundle_rff(1, &toy_svm(), &toy_approx(), &toy_rff(), None)
+                .unwrap();
+        let frames = record_frames(&bytes).unwrap();
+        let rff_frame = frames[2];
+        let mut bad = bytes.clone();
+        let d_feat_off = rff_frame.payload_offset + 4;
+        bad[d_feat_off..d_feat_off + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        let start = rff_frame.payload_offset;
+        let end = start + rff_frame.payload_len as usize;
+        let crc = crc32(&bad[start..end]);
+        bad[start - 12..start - 8].copy_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("element cap")
+        ));
+    }
+
+    #[test]
+    fn rff_record_bitflip_fails_crc_and_truncation_is_typed() {
+        let bytes =
+            encode_bundle_rff(1, &toy_svm(), &toy_approx(), &toy_rff(), None)
+                .unwrap();
+        let mut bad = bytes.clone();
+        let n = bad.len();
+        bad[n - 5] ^= 0x20;
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("CRC-32")
+        ));
+        for cut in 0..bytes.len() {
+            assert!(matches!(
+                decode_bundle_full(&bytes[..cut]),
+                Err(Error::Corrupt(_))
+            ));
+        }
     }
 
     #[test]

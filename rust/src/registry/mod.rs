@@ -45,12 +45,13 @@ pub mod store;
 /// compared by content.
 pub type ModelId = std::sync::Arc<str>;
 
-pub use binfmt::{ArbfHeader, Bundle, ModelRecord};
+pub use binfmt::{ArbfHeader, Bundle, ModelRecord, RffSummary};
 pub use quant::{
     PayloadKind, QuantApproxModel, QuantInfo, QuantSvmModel, TenantModels,
 };
 pub use store::{
     ModelEntry, ModelStore, PublishOptions, StoreConfig, StoreEntryInfo,
+    Substrate,
 };
 
 // Policies are defined next to the router that enforces them; re-export

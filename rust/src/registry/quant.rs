@@ -34,7 +34,7 @@
 //! the in-memory quantized model types.
 
 use crate::approx::bounds::{ExactQuantErr, QuantErrorBound};
-use crate::approx::ApproxModel;
+use crate::approx::{ApproxModel, RffModel};
 use crate::linalg::quantblas::{self, KernelArm, QuantZ};
 use crate::linalg::{vecops, Mat};
 use crate::svm::{Kernel, SvmModel};
@@ -1004,13 +1004,15 @@ impl QuantApproxModel {
 // the per-tenant model pair, in either precision
 // ---------------------------------------------------------------------
 
-/// The (exact, approx) pair a bundle decodes to — full-precision f32 or
-/// native quantized storage, depending on the payload kind it was
-/// published with.
+/// The models a bundle decodes to — the full-precision f32 pair,
+/// native quantized storage, or the random-feature substrate (the f32
+/// pair plus the kind-6 [`RffModel`]; its fast path replaces the
+/// Maclaurin model on the approx serving slot).
 #[derive(Clone, Debug)]
 pub enum TenantModels {
     F32 { exact: SvmModel, approx: ApproxModel },
     Quantized { exact: QuantSvmModel, approx: QuantApproxModel },
+    Rff { exact: SvmModel, approx: ApproxModel, rff: RffModel },
 }
 
 impl TenantModels {
@@ -1018,6 +1020,7 @@ impl TenantModels {
         match self {
             TenantModels::F32 { approx, .. } => approx.dim(),
             TenantModels::Quantized { approx, .. } => approx.dim(),
+            TenantModels::Rff { rff, .. } => rff.dim(),
         }
     }
 
@@ -1025,41 +1028,58 @@ impl TenantModels {
         match self {
             TenantModels::F32 { exact, .. } => exact.n_sv(),
             TenantModels::Quantized { exact, .. } => exact.n_sv(),
+            TenantModels::Rff { exact, .. } => exact.n_sv(),
         }
     }
 
+    /// Payload precision of the stored tensors. Rff bundles store f32
+    /// (substrate and precision are orthogonal axes; the header's
+    /// `FLAG_RFF` carries the substrate).
     pub fn payload(&self) -> PayloadKind {
         match self {
             TenantModels::F32 { .. } => PayloadKind::F32,
             TenantModels::Quantized { exact, .. } => exact.payload(),
+            TenantModels::Rff { .. } => PayloadKind::F32,
         }
     }
 
-    /// Raw Eq. 3.11 budget of the (dequantized) approx model.
+    /// The random-feature model, when this tenant serves that substrate.
+    pub fn rff(&self) -> Option<&RffModel> {
+        match self {
+            TenantModels::Rff { rff, .. } => Some(rff),
+            _ => None,
+        }
+    }
+
+    /// Raw Eq. 3.11 budget of the (dequantized) Maclaurin model. For
+    /// rff tenants this is the retained twin's budget — the serving
+    /// gate ([`super::ModelEntry::znorm_sq_budget_with`]) replaces it
+    /// with the stored-error-estimate test, which has no ‖z‖² shape.
     pub fn approx_znorm_sq_budget(&self) -> f32 {
         match self {
             TenantModels::F32 { approx, .. } => approx.znorm_sq_budget(),
             TenantModels::Quantized { approx, .. } => {
                 approx.znorm_sq_budget()
             }
+            TenantModels::Rff { approx, .. } => approx.znorm_sq_budget(),
         }
     }
 
-    /// Approx-side dequantization error bound (`None` for f32).
+    /// Approx-side dequantization error bound (`None` for f32/rff).
     pub fn quant_error(&self) -> Option<QuantErrorBound> {
         match self {
-            TenantModels::F32 { .. } => None,
             TenantModels::Quantized { approx, .. } => {
                 Some(approx.quant_err())
             }
+            TenantModels::F32 { .. } | TenantModels::Rff { .. } => None,
         }
     }
 
-    /// Exact-side dequantization error bound (`None` for f32).
+    /// Exact-side dequantization error bound (`None` for f32/rff).
     pub fn exact_quant_error(&self) -> Option<ExactQuantErr> {
         match self {
-            TenantModels::F32 { .. } => None,
             TenantModels::Quantized { exact, .. } => Some(exact.quant_err()),
+            TenantModels::F32 { .. } | TenantModels::Rff { .. } => None,
         }
     }
 
@@ -1068,19 +1088,22 @@ impl TenantModels {
         match self {
             TenantModels::F32 { exact, .. } => exact.sv.row_norms_sq(),
             TenantModels::Quantized { exact, .. } => exact.sv_row_norms_sq(),
+            TenantModels::Rff { exact, .. } => exact.sv.row_norms_sq(),
         }
     }
 
-    /// Reference approx decision on whatever storage is served — the
-    /// same per-row arithmetic the executor's batched evaluator uses,
-    /// so tests can compare served decisions against this regardless of
-    /// payload kind.
+    /// Reference approx-slot decision on whatever storage is served —
+    /// the same per-row arithmetic the executor's batched evaluator
+    /// uses, so tests can compare served decisions against this
+    /// regardless of payload kind. For rff tenants the approx slot
+    /// serves the random-feature model, never the Maclaurin twin.
     pub fn approx_decision_one(&self, z: &[f32]) -> f32 {
         match self {
             TenantModels::F32 { approx, .. } => approx.decision_one(z).0,
             TenantModels::Quantized { approx, .. } => {
                 approx.decision_one(z).0
             }
+            TenantModels::Rff { rff, .. } => rff.decision_one(z).0,
         }
     }
 
@@ -1089,14 +1112,16 @@ impl TenantModels {
         match self {
             TenantModels::F32 { exact, .. } => exact.decision_one(z),
             TenantModels::Quantized { exact, .. } => exact.decision_one(z),
+            TenantModels::Rff { exact, .. } => exact.decision_one(z),
         }
     }
 
-    /// Dequantized copies (PJRT preparation, tests; clones for f32).
+    /// Dequantized copies (PJRT preparation, tests; clones for f32/rff).
     pub fn exact_dequant(&self) -> SvmModel {
         match self {
             TenantModels::F32 { exact, .. } => exact.clone(),
             TenantModels::Quantized { exact, .. } => exact.dequantize(),
+            TenantModels::Rff { exact, .. } => exact.clone(),
         }
     }
 
@@ -1104,13 +1129,15 @@ impl TenantModels {
         match self {
             TenantModels::F32 { approx, .. } => approx.clone(),
             TenantModels::Quantized { approx, .. } => approx.dequantize(),
+            TenantModels::Rff { approx, .. } => approx.clone(),
         }
     }
 
     /// Approximate resident footprint of both models, in bytes —
     /// the quantity `BENCH_quant.json` reports per payload kind. The
     /// f32 accounting mirrors what is actually resident: a dense
-    /// `n_sv×d` SV matrix and the *mirrored* `d×d` M.
+    /// `n_sv×d` SV matrix and the *mirrored* `d×d` M. Rff tenants add
+    /// the regenerated `D×d` feature map on top of the f32 pair.
     pub fn resident_bytes(&self) -> usize {
         match self {
             TenantModels::F32 { exact, approx } => {
@@ -1120,6 +1147,11 @@ impl TenantModels {
             }
             TenantModels::Quantized { exact, approx } => {
                 exact.resident_bytes() + approx.resident_bytes()
+            }
+            TenantModels::Rff { exact, approx, rff } => {
+                let e = 4 * (exact.n_sv() * exact.dim() + exact.n_sv()) + 16;
+                let a = 4 * (approx.dim() * approx.dim() + approx.dim()) + 20;
+                e + a + rff.resident_bytes()
             }
         }
     }

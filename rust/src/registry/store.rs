@@ -33,7 +33,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::approx::bounds::DEFAULT_QUANT_DRIFT_TOL;
-use crate::approx::ApproxModel;
+use crate::approx::{rff, ApproxModel};
 use crate::coordinator::TenantPolicy;
 use crate::log_warn;
 use crate::svm::SvmModel;
@@ -71,6 +71,47 @@ impl Default for StoreConfig {
     }
 }
 
+/// Approximation substrate a tenant's fast path is published on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Substrate {
+    /// The paper's second-order Maclaurin model (kinds 2/4/5).
+    Maclaurin,
+    /// Random Fourier features (kind 6): `O(D·d)` evaluation routed by
+    /// the stored Monte-Carlo error estimate — the large-γ / high-`d`
+    /// regime where the Maclaurin bound collapses.
+    Rff,
+}
+
+impl Substrate {
+    /// Canonical name; [`std::fmt::Display`] delegates here.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Substrate::Maclaurin => "maclaurin",
+            Substrate::Rff => "rff",
+        }
+    }
+}
+
+impl std::fmt::Display for Substrate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Substrate {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Substrate> {
+        match s.to_ascii_lowercase().as_str() {
+            "maclaurin" | "mac" => Ok(Substrate::Maclaurin),
+            "rff" | "random-features" => Ok(Substrate::Rff),
+            other => Err(Error::InvalidArg(format!(
+                "unknown substrate '{other}' (maclaurin|rff)"
+            ))),
+        }
+    }
+}
+
 /// Publish-time options (see [`ModelStore::publish_with`]).
 #[derive(Clone, Debug, Default)]
 pub struct PublishOptions {
@@ -87,6 +128,16 @@ pub struct PublishOptions {
     /// suite with it set), defaulting to f32. Mirrors how
     /// `APPROXRBF_TEST_SHARDS` drives the default shard count.
     pub quantize: Option<PayloadKind>,
+    /// Approximation substrate of the fast path: `Some` forces it;
+    /// `None` defers to the `APPROXRBF_TEST_SUBSTRATE` environment
+    /// override (`rff`; the CI `tier1-rff` job runs the whole suite
+    /// with it set), defaulting to Maclaurin. An explicit quantized
+    /// payload implies Maclaurin (rff bundles store f32).
+    pub substrate: Option<Substrate>,
+    /// Feature count `D` for rff publishes: `Some` pins it; `None`
+    /// runs the adaptive ladder
+    /// ([`crate::approx::rff::RffModel::fit`]).
+    pub rff_features: Option<usize>,
 }
 
 /// Default payload precision for publishes that don't pin one: the
@@ -108,6 +159,27 @@ fn default_publish_payload() -> PayloadKind {
         });
     }
     kind
+}
+
+/// Default substrate for publishes that don't pin one: the
+/// `APPROXRBF_TEST_SUBSTRATE` environment variable when set (logged
+/// once), else Maclaurin.
+fn default_publish_substrate() -> Substrate {
+    let substrate = std::env::var("APPROXRBF_TEST_SUBSTRATE")
+        .ok()
+        .and_then(|s| s.parse::<Substrate>().ok())
+        .unwrap_or(Substrate::Maclaurin);
+    if substrate != Substrate::Maclaurin {
+        static ANNOUNCED: std::sync::Once = std::sync::Once::new();
+        ANNOUNCED.call_once(|| {
+            log_warn!(
+                "registry: APPROXRBF_TEST_SUBSTRATE={substrate} overrides \
+                 the default publish substrate (PublishOptions::substrate \
+                 still wins)"
+            );
+        });
+    }
+    substrate
 }
 
 /// A loaded (exact, approx) pair at a specific generation — f32 or
@@ -146,7 +218,20 @@ impl ModelEntry {
     /// bound stays within `quant_drift_tol`
     /// ([`crate::approx::bounds::QuantErrorBound::drift_budget`]).
     /// For f32 entries this is exactly the Eq. 3.11 budget.
+    ///
+    /// Rff entries have no ‖z‖²-shaped validity region: the stored
+    /// Monte-Carlo estimate either clears the tolerance (everything
+    /// rides the fast path) or it doesn't (everything escorts to
+    /// exact). All-or-nothing is still monotone in the tolerance, so
+    /// the policy plane's min-intersection semantics carry over.
     pub fn znorm_sq_budget_with(&self, quant_drift_tol: f32) -> f32 {
+        if let Some(rffm) = self.models.rff() {
+            return if rffm.err_est <= quant_drift_tol {
+                f32::MAX
+            } else {
+                0.0
+            };
+        }
         let base = self.models.approx_znorm_sq_budget();
         match self.models.quant_error() {
             None => base,
@@ -212,6 +297,8 @@ pub struct StoreEntryInfo {
     pub has_policy: bool,
     /// Payload precision advertised by the header flags.
     pub payload: PayloadKind,
+    /// True iff the header flags advertise an rff (kind-6) bundle.
+    pub has_rff: bool,
 }
 
 struct Cache {
@@ -480,28 +567,74 @@ impl ModelStore {
         } else {
             1
         };
-        let payload = opts.quantize.unwrap_or_else(default_publish_payload);
-        let bytes = binfmt::encode_bundle_quantized(
-            generation,
-            exact,
-            approx,
-            opts.policy.as_ref(),
-            payload,
-        )?;
+        // An explicit quantized payload pins the Maclaurin substrate;
+        // otherwise an explicit substrate wins, then the environment
+        // defaults (rff bundles always store f32, so the two overrides
+        // cannot both apply).
+        let substrate = match opts.substrate {
+            Some(s) => s,
+            None if opts
+                .quantize
+                .is_some_and(|k| k != PayloadKind::F32) =>
+            {
+                Substrate::Maclaurin
+            }
+            None => default_publish_substrate(),
+        };
+        let (payload, bytes) = match substrate {
+            Substrate::Rff => {
+                if let Some(kind) = opts.quantize {
+                    if kind != PayloadKind::F32 {
+                        return Err(Error::InvalidArg(format!(
+                            "substrate rff stores f32 payloads; drop \
+                             quantize={kind} or publish on maclaurin"
+                        )));
+                    }
+                }
+                let rffm = rff::RffModel::fit(
+                    exact,
+                    opts.rff_features,
+                    rff::seed_for_id(id),
+                )?;
+                let bytes = binfmt::encode_bundle_rff(
+                    generation,
+                    exact,
+                    approx,
+                    &rffm,
+                    opts.policy.as_ref(),
+                )?;
+                (PayloadKind::F32, bytes)
+            }
+            Substrate::Maclaurin => {
+                let payload =
+                    opts.quantize.unwrap_or_else(default_publish_payload);
+                let bytes = binfmt::encode_bundle_quantized(
+                    generation,
+                    exact,
+                    approx,
+                    opts.policy.as_ref(),
+                    payload,
+                )?;
+                (payload, bytes)
+            }
+        };
         if let Some(old) = replaced {
             self.archive_current(id, old);
         }
         self.atomic_write(id, &bytes)?;
         // Invalidate so the next load picks the new generation up —
-        // or, when warming, seed the cache. An f32 warm seeds the state
-        // already in memory (no decode, no disk read on first request);
-        // a quantized warm decodes the bytes just written, so the
-        // warmed entry is exactly what any other lane loads from disk
-        // (sharded planes must stay decision-identical).
+        // or, when warming, seed the cache. An f32 Maclaurin warm seeds
+        // the state already in memory (no decode, no disk read on first
+        // request); a quantized or rff warm decodes the bytes just
+        // written, so the warmed entry is exactly what any other lane
+        // loads from disk (sharded planes must stay
+        // decision-identical).
         let mut cache = self.cache.lock().unwrap();
         cache.entries.remove(id);
         if opts.warm {
-            let models = if payload == PayloadKind::F32 {
+            let models = if substrate == Substrate::Maclaurin
+                && payload == PayloadKind::F32
+            {
                 TenantModels::F32 {
                     exact: exact.clone(),
                     approx: approx.clone(),
@@ -579,6 +712,7 @@ impl ModelStore {
             size_bytes,
             has_policy: hdr.has_policy(),
             payload: hdr.payload(),
+            has_rff: hdr.has_rff(),
         })
     }
 
@@ -1137,5 +1271,125 @@ mod tests {
         store.publish("p", &e, &a).unwrap();
         assert!(!store.peek("p").unwrap().has_policy);
         assert_eq!(store.load("p").unwrap().policy, None);
+    }
+
+    #[test]
+    fn substrate_parse_roundtrip() {
+        for s in [Substrate::Maclaurin, Substrate::Rff] {
+            assert_eq!(s.to_string().parse::<Substrate>().unwrap(), s);
+        }
+        assert_eq!("MAC".parse::<Substrate>().unwrap(), Substrate::Maclaurin);
+        assert!("fastfood9".parse::<Substrate>().is_err());
+    }
+
+    #[test]
+    fn rff_publish_roundtrips_and_gates_by_estimate() {
+        let store = temp_store("rff");
+        let (e, a) = pair(1.0);
+        store
+            .publish_with(
+                "r",
+                &e,
+                &a,
+                PublishOptions {
+                    substrate: Some(Substrate::Rff),
+                    rff_features: Some(64),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let info = store.peek("r").unwrap();
+        assert!(info.has_rff);
+        assert_eq!(info.payload, PayloadKind::F32);
+        let entry = store.load("r").unwrap();
+        let rffm = entry.models.rff().expect("rff models");
+        assert_eq!(rffm.n_features(), 64);
+        // The publish path derives the map's seed from the id, so a
+        // locally fitted twin is bit-identical.
+        let twin =
+            rff::RffModel::fit(&e, Some(64), rff::seed_for_id("r")).unwrap();
+        assert_eq!(rffm.seed, twin.seed);
+        let z = [0.3f32, -0.4];
+        assert_eq!(
+            entry.approx_decision_one(&z).to_bits(),
+            twin.decision_one(&z).0.to_bits()
+        );
+        // All-or-nothing serving gate on the stored estimate.
+        assert_eq!(entry.znorm_sq_budget_with(rffm.err_est), f32::MAX);
+        assert_eq!(entry.znorm_sq_budget_with(0.0), 0.0);
+        // The Maclaurin twin rides along for tooling/rollback paths.
+        assert_eq!(entry.approx_dequant().c, a.c);
+        // A plain publish does not advertise rff.
+        store.publish("plain", &e, &a).unwrap();
+        assert!(!store.peek("plain").unwrap().has_rff);
+    }
+
+    #[test]
+    fn rff_substrate_refuses_quantized_payloads() {
+        let store = temp_store("rffquant");
+        let (e, a) = pair(1.0);
+        let err = store
+            .publish_with(
+                "r",
+                &e,
+                &a,
+                PublishOptions {
+                    substrate: Some(Substrate::Rff),
+                    quantize: Some(PayloadKind::Int8),
+                    ..Default::default()
+                },
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArg(_)), "{err}");
+        // An explicit quantized payload with no explicit substrate is
+        // simply a Maclaurin publish.
+        store
+            .publish_with(
+                "q",
+                &e,
+                &a,
+                PublishOptions {
+                    quantize: Some(PayloadKind::Int8),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert!(!store.peek("q").unwrap().has_rff);
+    }
+
+    #[test]
+    fn rff_warm_publish_seeds_the_decoded_entry() {
+        let store = temp_store("rffwarm");
+        let (e, a) = pair(1.0);
+        store
+            .publish_with(
+                "hot",
+                &e,
+                &a,
+                PublishOptions {
+                    warm: true,
+                    substrate: Some(Substrate::Rff),
+                    rff_features: Some(64),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(store.cached_count(), 1);
+        let warmed = store.load("hot").unwrap();
+        assert!(warmed.models.rff().is_some());
+        // A cold lane regenerates W and b from the stored seed and must
+        // land on bit-identical decisions (sharded planes rely on it).
+        let fresh = ModelStore::open(store.root()).unwrap();
+        let cold = fresh.load("hot").unwrap();
+        for z in [[0.3f32, -0.7], [1.5, 0.25], [0.0, 0.0]] {
+            assert_eq!(
+                warmed.approx_decision_one(&z).to_bits(),
+                cold.approx_decision_one(&z).to_bits()
+            );
+            assert_eq!(
+                warmed.exact_decision_one(&z).to_bits(),
+                cold.exact_decision_one(&z).to_bits()
+            );
+        }
     }
 }

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Regenerates the golden `.arbf` corpus (v1, kinds 1-5).
+"""Regenerates the golden `.arbf` corpus (v1, kinds 1-6).
 
 The committed binaries are CANONICAL: rust/tests/format_conformance.rs
 asserts that the Rust encoder reproduces them byte-for-byte, so any
@@ -80,6 +80,7 @@ def arbf(generation, dim, n_sv, flags, records):
 FLAG_HAS_POLICY = 1
 FLAG_QUANT_F16 = 2
 FLAG_QUANT_INT8 = 4
+FLAG_RFF = 8
 
 # -- the f32/f16 toy pair (all values f16-exact dyadics) -------------------
 
@@ -128,6 +129,17 @@ APPROX8 = dict(
         dict(scale=0.0078125, q=[-127, 96]),
         dict(scale=0.00390625, q=[127]),
     ],
+)
+
+# -- the rff record (kind 6; W and phases regenerate from the seed) --------
+
+RFF = dict(
+    dim=3,
+    seed=42,
+    gamma=0.125,
+    bias=0.125,
+    err_est=0.25,
+    w=[0.5, -1.0, 0.25, 2.0],
 )
 
 # -- payload builders ------------------------------------------------------
@@ -209,6 +221,14 @@ def int8_approx_payload(a):
     return out
 
 
+def rff_payload(r):
+    out = u32(r["dim"]) + u32(len(r["w"])) + u64(r["seed"])
+    out += f32(r["gamma"]) + f32(r["bias"]) + f32(r["err_est"])
+    for v in r["w"]:
+        out += f32(v)
+    return out
+
+
 # -- fixtures --------------------------------------------------------------
 
 FIXTURES = {
@@ -234,6 +254,13 @@ FIXTURES = {
         3,
         FLAG_QUANT_INT8 | FLAG_HAS_POLICY,
         [(5, int8_svm_payload(SVM8)), (5, int8_approx_payload(APPROX8)), (3, POLICY)],
+    ),
+    "v1_bundle_rff.arbf": arbf(
+        11,
+        3,
+        3,
+        FLAG_RFF,
+        [(1, svm_payload(SVM)), (2, approx_payload(APPROX)), (6, rff_payload(RFF))],
     ),
 }
 

@@ -2,7 +2,7 @@
 //! (`rust/tests/data/*.arbf`, regenerated only by
 //! `rust/tests/data/gen_fixtures.py`).
 //!
-//! The corpus pins format version 1, record kinds 1–5 and the header
+//! The corpus pins format version 1, record kinds 1–6 and the header
 //! flag bits at the **byte** level:
 //!
 //! * every fixture byte-decodes to known header fields and tensors;
@@ -21,10 +21,10 @@
 use approxrbf::coordinator::{RoutePolicy, TenantPolicy};
 use approxrbf::linalg::Mat;
 use approxrbf::registry::binfmt::{
-    self, FLAG_HAS_POLICY, FLAG_QUANT_F16, FLAG_QUANT_INT8,
+    self, FLAG_HAS_POLICY, FLAG_QUANT_F16, FLAG_QUANT_INT8, FLAG_RFF,
 };
 use approxrbf::registry::{PayloadKind, TenantModels};
-use approxrbf::approx::ApproxModel;
+use approxrbf::approx::{ApproxModel, RffModel};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::crc32::crc32;
 use approxrbf::Error;
@@ -105,6 +105,13 @@ fn toy_approx_int8() -> ApproxModel {
         .unwrap(),
         max_sv_norm_sq: 4.0,
     }
+}
+
+/// The kind-6 record: only the dyadic stored half lives in the file —
+/// the projection and phases regenerate from seed 42 at decode.
+fn toy_rff() -> RffModel {
+    RffModel::from_parts(3, 42, 0.125, 0.125, 0.25, vec![0.5, -1.0, 0.25, 2.0])
+        .unwrap()
 }
 
 fn toy_policy() -> TenantPolicy {
@@ -299,6 +306,71 @@ fn golden_v1_bundle_int8_with_policy() {
     );
 }
 
+#[test]
+fn golden_v1_bundle_rff() {
+    let bytes = fixture("v1_bundle_rff.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (3, 11));
+    assert_eq!(hdr.flags, FLAG_RFF);
+    assert!(hdr.has_rff());
+    // Substrate and precision are orthogonal: an rff bundle is f32.
+    assert_eq!(hdr.payload(), PayloadKind::F32);
+    assert_crcs_recompute(&bytes);
+    let frames = binfmt::record_frames(&bytes).unwrap();
+    assert_eq!(
+        frames.iter().map(|f| f.kind).collect::<Vec<_>>(),
+        vec![1, 2, 6]
+    );
+    // The kind-6 payload is the fixed 28-byte head plus D×f32 weights.
+    assert_eq!(frames[2].payload_len, 28 + 4 * 4);
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.generation, 11);
+    assert_eq!(b.payload(), PayloadKind::F32);
+    let e = b.exact_dequant();
+    let a = b.approx_dequant();
+    assert_eq!(e.coef, toy_svm().coef);
+    assert_eq!(a.v, toy_approx().v);
+    let r = b.models.rff().expect("rff fixture decoded without kind-6");
+    assert_eq!((r.dim(), r.n_features()), (3, 4));
+    assert_eq!(r.seed, 42);
+    assert_eq!((r.gamma, r.bias, r.err_est), (0.125, 0.125, 0.25));
+    assert_eq!(r.w, vec![0.5, -1.0, 0.25, 2.0]);
+    // Byte stability via BOTH paths: re-encoding the decoded native
+    // storage, and rebuilding the record from its stored parts.
+    assert_eq!(
+        binfmt::encode_bundle_native(11, &b.models, None).unwrap(),
+        bytes
+    );
+    assert_eq!(
+        binfmt::encode_bundle_rff(11, &toy_svm(), &toy_approx(), &toy_rff(), None)
+            .unwrap(),
+        bytes
+    );
+}
+
+#[test]
+fn rff_feature_map_regenerates_deterministically() {
+    // The file never ships W or φ — serving correctness rests on the
+    // seeded regeneration being bit-stable across decodes and across
+    // an independent from_parts reconstruction.
+    let bytes = fixture("v1_bundle_rff.arbf");
+    let once = binfmt::decode_bundle_full(&bytes).unwrap();
+    let twice = binfmt::decode_bundle_full(&bytes).unwrap();
+    let local = toy_rff();
+    for z in [
+        [0.0f32, 0.0, 0.0],
+        [1.0, -0.5, 0.25],
+        [-2.0, 0.125, 3.0],
+        [0.5, 0.5, -0.5],
+    ] {
+        let d0 = once.models.rff().unwrap().decision_one(&z).0;
+        let d1 = twice.models.rff().unwrap().decision_one(&z).0;
+        let d2 = local.decision_one(&z).0;
+        assert_eq!(d0.to_bits(), d1.to_bits(), "decode/decode drift at {z:?}");
+        assert_eq!(d0.to_bits(), d2.to_bits(), "decode/from_parts drift at {z:?}");
+    }
+}
+
 // ---------------------------------------------------------------------
 // deliberate mutations must fail loudly (and reserved bytes must not)
 // ---------------------------------------------------------------------
@@ -311,6 +383,7 @@ fn every_fixture_rejects_deliberate_mutations() {
         "v1_bundle_policy.arbf",
         "v1_bundle_f16.arbf",
         "v1_bundle_int8_policy.arbf",
+        "v1_bundle_rff.arbf",
     ] {
         let bytes = fixture(name);
         let check = |mutated: Vec<u8>, what: &str| {
@@ -368,6 +441,33 @@ fn quant_flag_and_record_mismatch_is_corrupt() {
     assert!(matches!(
         binfmt::decode_bundle_full(&bytes),
         Err(Error::Corrupt(m)) if m.contains("advertises")
+    ));
+}
+
+#[test]
+fn rff_flag_and_record_mismatch_is_corrupt() {
+    // Clearing FLAG_RFF leaves a kind-6 record the header denies.
+    let mut bytes = fixture("v1_bundle_rff.arbf");
+    bytes[24] &= !(FLAG_RFF as u8);
+    assert!(matches!(
+        binfmt::decode_bundle_full(&bytes),
+        Err(Error::Corrupt(m)) if m.contains("advertises")
+    ));
+    // Setting FLAG_RFF on a plain bundle promises a kind-6 that never
+    // arrives.
+    let mut bytes = fixture("v1_bundle_policy.arbf");
+    bytes[24] |= FLAG_RFF as u8;
+    assert!(matches!(
+        binfmt::decode_bundle_full(&bytes),
+        Err(Error::Corrupt(m)) if m.contains("advertises")
+    ));
+    // rff + quantized flags are mutually exclusive — rejected at peek,
+    // before any payload is trusted.
+    let mut bytes = fixture("v1_bundle_rff.arbf");
+    bytes[24] |= FLAG_QUANT_F16 as u8;
+    assert!(matches!(
+        binfmt::peek_header(&bytes),
+        Err(Error::Corrupt(m)) if m.contains("rff and quantized")
     ));
 }
 

@@ -31,7 +31,9 @@ use approxrbf::coordinator::{
 use approxrbf::data::{synth, Dataset, UnitNormScaler};
 use approxrbf::linalg::MathBackend;
 use approxrbf::net::{Router, RouterConfig};
-use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
+use approxrbf::registry::{
+    ModelStore, PayloadKind, PublishOptions, Substrate,
+};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::Rng;
@@ -69,9 +71,10 @@ fn trained_pair(
     (model, am, scaled)
 }
 
-/// A mixed tenant set with all three serving modes: a policy-pinned
+/// A mixed tenant set with every serving mode: a policy-pinned
 /// AlwaysExact tenant, two hybrid f32 tenants (one partly pushed out of
-/// bound by the traffic generator), and a native-int8 tenant.
+/// bound by the traffic generator), a native-int8 tenant, and a
+/// random-feature tenant.
 fn mixed_registry(
     tag: &str,
 ) -> (Arc<ModelStore>, Vec<(&'static str, Dataset)>) {
@@ -80,6 +83,7 @@ fn mixed_registry(
     let (m2, a2, d2) = trained_pair(202, 0.8);
     let (m3, a3, d3) = trained_pair(303, 0.8);
     let (m4, a4, d4) = trained_pair(404, 0.8);
+    let (m5, a5, d5) = trained_pair(505, 0.8);
     store
         .publish_with(
             "pinned-exact",
@@ -112,6 +116,20 @@ fn mixed_registry(
             },
         )
         .unwrap();
+    // Seed determinism makes the remote/in-process comparison exact for
+    // this tenant: both planes regenerate the same W, φ from the seed.
+    store
+        .publish_with(
+            "subst-rff",
+            &m5,
+            &a5,
+            PublishOptions {
+                substrate: Some(Substrate::Rff),
+                rff_features: Some(1024),
+                ..Default::default()
+            },
+        )
+        .unwrap();
     (
         store,
         vec![
@@ -119,6 +137,7 @@ fn mixed_registry(
             ("hybrid-in", d2),
             ("hybrid-mixed", d3),
             ("quant-int8", d4),
+            ("subst-rff", d5),
         ],
     )
 }
@@ -280,9 +299,11 @@ fn remote_plane_is_bit_identical_to_in_process() {
         );
         by_route[(r.route == Route::Exact) as usize] += 1;
     }
-    // The workload really exercised both routes and the int8 tenant.
+    // The workload really exercised both routes and the non-f32
+    // substrates.
     assert!(by_route[0] > 0 && by_route[1] > 0);
     assert!(baseline.iter().any(|(m, _, _, _)| m == "quant-int8"));
+    assert!(baseline.iter().any(|(m, _, _, _)| m == "subst-rff"));
 
     // Remote metrics fan-in accounts every request exactly once.
     let snap = router.metrics();

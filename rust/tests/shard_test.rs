@@ -29,7 +29,9 @@ use approxrbf::data::{synth, Dataset, UnitNormScaler};
 use approxrbf::linalg::{quantblas, MathBackend};
 use approxrbf::prop_cases;
 use approxrbf::registry::quant::TenantModels;
-use approxrbf::registry::{ModelStore, PayloadKind, PublishOptions};
+use approxrbf::registry::{
+    ModelStore, PayloadKind, PublishOptions, Substrate,
+};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::Rng;
@@ -138,13 +140,22 @@ fn run_plane(
     traffic: &[(&'static str, Vec<f32>)],
     shards: usize,
 ) -> (Vec<Served>, approxrbf::coordinator::MetricsSnapshot) {
+    // Generous drift tolerance so quantized tenants in these
+    // workloads stay on the fast path deterministically; a no-op
+    // for f32 tenants (no quant error to fold).
+    run_plane_tol(store, traffic, shards, 1.0)
+}
+
+fn run_plane_tol(
+    store: &Arc<ModelStore>,
+    traffic: &[(&'static str, Vec<f32>)],
+    shards: usize,
+    quant_drift_tol: f32,
+) -> (Vec<Served>, approxrbf::coordinator::MetricsSnapshot) {
     let coord = Coordinator::builder()
         .shards(shards)
         .max_wait(Duration::from_millis(1))
-        // Generous drift tolerance so quantized tenants in these
-        // workloads stay on the fast path deterministically; a no-op
-        // for f32 tenants (no quant error to fold).
-        .quant_drift_tol(1.0)
+        .quant_drift_tol(quant_drift_tol)
         .start_registry(store.clone())
         .unwrap();
     assert_eq!(coord.shard_count(), shards);
@@ -539,6 +550,111 @@ fn mid_stream_f32_to_int8_republish_swaps_via_prefetch() {
     assert!(gen2_checked > 0, "generation 2 never served");
     assert_eq!(coord.metrics().dropped, 0);
     coord.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn rff_tenant_rescues_large_gamma_workload_and_is_shard_invariant() {
+    // The PR-7 acceptance workload: one trained model at γ = 6·γ_MAX
+    // on unit-norm data. The Maclaurin Eq. 3.11 budget collapses to
+    // ~1/36 ≪ ‖z‖² ≈ 1, so the maclaurin-substrate twin escorts
+    // (essentially) everything to exact; the rff-substrate twin has no
+    // ‖z‖²-shaped validity region and serves the same workload on the
+    // fast path, within its stored error estimate — and both must stay
+    // bit-identical between shards(1) and shards(4).
+    let store = Arc::new(ModelStore::open(temp_dir("rffrescue")).unwrap());
+    let (m, a, ds) = trained_pair(606, 6.0);
+    store
+        .publish_with(
+            "big-gamma-mac",
+            &m,
+            &a,
+            PublishOptions {
+                substrate: Some(Substrate::Maclaurin),
+                quantize: Some(PayloadKind::F32),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    store
+        .publish_with(
+            "big-gamma-rff",
+            &m,
+            &a,
+            PublishOptions {
+                substrate: Some(Substrate::Rff),
+                rff_features: Some(2048),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    let rff_entry = store.load("big-gamma-rff").unwrap();
+    let err_est = rff_entry.models.rff().expect("rff entry").err_est;
+    assert!(err_est.is_finite() && err_est > 0.0);
+    // Tolerance above the stored estimate so the all-or-nothing gate
+    // opens for the rff tenant; the maclaurin twin's f32 budget is
+    // tolerance-independent, so it keeps escorting regardless.
+    let tol = (err_est * 1.25).max(1.0);
+    let tenants: Vec<(&'static str, Dataset)> =
+        vec![("big-gamma-mac", ds.clone()), ("big-gamma-rff", ds)];
+    let traffic = build_traffic(&tenants, 240);
+    let (r1, s1) = run_plane_tol(&store, &traffic, 1, tol);
+    let (r4, s4) = run_plane_tol(&store, &traffic, 4, tol);
+    assert_eq!(r1.len(), r4.len());
+    for (i, (a1, b4)) in r1.iter().zip(&r4).enumerate() {
+        assert_eq!(a1, b4, "request {i} differs between 1 and 4 shards");
+    }
+    assert_eq!(s1.served_approx, s4.served_approx);
+    assert_eq!(s1.served_exact, s4.served_exact);
+    assert_eq!(s1.dropped + s4.dropped, 0);
+    // Route mix per tenant: the Maclaurin twin escorts ≳90%, the rff
+    // twin serves ≳90% approx (both are 100% for this workload, but
+    // the acceptance floor is what the issue pins).
+    let mut counts: HashMap<&str, (u64, u64)> = HashMap::new();
+    for (id, _, _, route) in &r1 {
+        let c = counts.entry(id.as_str()).or_default();
+        match route {
+            Route::Approx => c.0 += 1,
+            Route::Exact => c.1 += 1,
+        }
+    }
+    let (mac_a, mac_e) = counts["big-gamma-mac"];
+    let (rff_a, rff_e) = counts["big-gamma-rff"];
+    assert!(
+        mac_e as f64 >= 0.9 * (mac_a + mac_e) as f64,
+        "maclaurin twin escorted only {mac_e}/{} at 6·γ_MAX",
+        mac_a + mac_e
+    );
+    assert!(
+        rff_a as f64 >= 0.9 * (rff_a + rff_e) as f64,
+        "rff twin escorted {rff_e}/{} despite err_est {err_est} ≤ tol {tol}",
+        rff_a + rff_e
+    );
+    // Served approx decisions stay within the stored estimate of the
+    // exact reference, and equal the native rff evaluation bit-for-bit.
+    let mut checked = 0;
+    for (i, (id, z)) in traffic.iter().enumerate() {
+        if *id != "big-gamma-rff" {
+            continue;
+        }
+        let (_, _, bits, route) = &r1[i];
+        if *route != Route::Approx {
+            continue;
+        }
+        checked += 1;
+        let dec = f32::from_bits(*bits);
+        let exact = rff_entry.exact_decision_one(z);
+        assert!(
+            (dec - exact).abs() <= err_est,
+            "request {i}: |{dec} - {exact}| beyond stored estimate {err_est}"
+        );
+        assert_eq!(
+            rff_entry.approx_decision_one(z).to_bits(),
+            *bits,
+            "request {i}: served bits differ from native rff evaluation"
+        );
+    }
+    assert!(checked > 0, "rff tenant never exercised the approx route");
     let _ = std::fs::remove_dir_all(store.root());
 }
 
