@@ -2,9 +2,13 @@
 
 CARGO_DIR := rust
 
-.PHONY: tier1 fmt lint build test test-sharded test-quant test-rff test-kernel-blocked test-remote bench-smoke doc check-pjrt artifacts
+# Pinned nightly for the sanitizer legs (kept in sync with
+# NIGHTLY_TOOLCHAIN in .github/workflows/ci.yml).
+NIGHTLY ?= nightly-2025-05-20
 
-tier1: fmt lint build test test-sharded test-quant test-rff
+.PHONY: tier1 fmt lint lint-arblint build test test-sharded test-quant test-rff test-kernel-blocked test-remote tsan miri bench-smoke doc check-pjrt artifacts
+
+tier1: fmt lint lint-arblint build test test-sharded test-quant test-rff
 
 # Mirror the extra CI jobs: rustdoc with warnings denied, and the
 # pjrt feature path against the vendored stub.
@@ -19,6 +23,11 @@ fmt:
 
 lint:
 	cd $(CARGO_DIR) && cargo clippy --all-targets -- -D warnings
+
+# Repo-native static analysis (docs/ANALYSIS.md): SAFETY comments,
+# env-var doc table, wire/format doc sync, alloc caps, no-panic plane.
+lint-arblint:
+	cd $(CARGO_DIR) && cargo run --bin arblint
 
 build:
 	cd $(CARGO_DIR) && cargo build --release
@@ -55,6 +64,32 @@ test-kernel-blocked:
 test-remote:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_REMOTE=1 \
 		cargo test -q --test remote_e2e -- --test-threads=1
+
+# Mirror the CI tsan job: ThreadSanitizer over the genuinely concurrent
+# suites (sharded coordinator, then remote TCP plane). -Zbuild-std
+# instruments std itself, without which TSan reports false races inside
+# the runtime; requires `rustup component add rust-src` on $(NIGHTLY).
+tsan:
+	cd $(CARGO_DIR) && RUSTFLAGS="-Zsanitizer=thread" \
+		APPROXRBF_TEST_SHARDS=4 cargo +$(NIGHTLY) test \
+		--test shard_test -Zbuild-std \
+		--target x86_64-unknown-linux-gnu
+	cd $(CARGO_DIR) && RUSTFLAGS="-Zsanitizer=thread" \
+		APPROXRBF_TEST_REMOTE=1 cargo +$(NIGHTLY) test \
+		--test remote_e2e -Zbuild-std \
+		--target x86_64-unknown-linux-gnu -- --test-threads=1
+
+# Mirror the CI miri job: interpret the pure modules where UB would
+# hide. The case cap keeps interpreted property tests fast; Miri
+# isolates the environment, so each var must be explicitly forwarded.
+# util::proptest is excluded: its meta-test asserts the uncapped count.
+miri:
+	cd $(CARGO_DIR) && \
+		MIRIFLAGS="-Zmiri-env-forward=APPROXRBF_PROP_CASES -Zmiri-env-forward=APPROXRBF_QUANT_KERNEL -Zmiri-env-forward=APPROXRBF_RFF_KERNEL" \
+		APPROXRBF_PROP_CASES=2 APPROXRBF_QUANT_KERNEL=scalar \
+		APPROXRBF_RFF_KERNEL=scalar cargo +$(NIGHTLY) miri test --lib \
+		util::crc32 util::rng registry::quant linalg::rffmap \
+		linalg::quantblas
 
 # Mirror the CI bench-smoke job: short deterministic serving_bench
 # sweep; BENCH_quant.json's kernel_arms rows must show int8

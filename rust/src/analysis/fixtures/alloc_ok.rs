@@ -1,0 +1,28 @@
+//! Lint fixture (passing): decode-direction allocations behind a cap
+//! check, and an encode-direction allocation that is exempt. Never
+//! compiled — loaded via `include_str!` by the rule self-tests.
+
+const CAP: usize = 4096;
+
+fn checked_count(n: u32, cap: usize) -> Result<usize, String> {
+    let n = n as usize;
+    if n > cap {
+        return Err(format!("count {n} exceeds cap {cap}"));
+    }
+    Ok(n)
+}
+
+pub fn decode_rows(n_raw: u32) -> Result<Vec<u64>, String> {
+    let n = checked_count(n_raw, CAP)?;
+    let mut rows = Vec::with_capacity(n);
+    rows.resize(n, 0);
+    Ok(rows)
+}
+
+pub fn encode_rows(rows: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(rows.len() * 8);
+    for r in rows {
+        out.extend_from_slice(&r.to_le_bytes());
+    }
+    out
+}

@@ -1,0 +1,16 @@
+//! Lint fixture (violating): decode-direction allocations sized by an
+//! untrusted count with no cap check anywhere in the function. Never
+//! compiled — loaded via `include_str!` by the rule self-tests.
+
+pub fn decode_rows(n_raw: u32) -> Vec<u64> {
+    let n = n_raw as usize;
+    let mut rows = Vec::with_capacity(n);
+    for _ in 0..n {
+        rows.push(0);
+    }
+    rows
+}
+
+pub fn read_payload(len_raw: u64) -> Vec<u8> {
+    vec![0u8; len_raw as usize]
+}

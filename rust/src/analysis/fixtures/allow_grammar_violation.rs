@@ -1,0 +1,8 @@
+//! Lint fixture (violating): malformed allowance markers. Never
+//! compiled — loaded via `include_str!` by the rule self-tests.
+
+pub fn bad() -> u32 {
+    // LINT-ALLOW(bogus): not a rule key arblint knows about.
+    // LINT-ALLOW(panic):
+    1
+}

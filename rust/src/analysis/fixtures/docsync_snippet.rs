@@ -1,0 +1,12 @@
+//! Lint fixture: protocol/format constants for the doc-sync rule.
+//! Never compiled — loaded via `include_str!` by the rule self-tests,
+//! which pair it with small in-test markdown tables.
+
+const K_HELLO: u16 = 1;
+const K_DATA_ROW: u16 = 2;
+
+const KIND_A: u16 = 1;
+const KIND_B: u16 = 2;
+
+pub const FLAG_ALPHA: u64 = 1;
+pub const FLAG_BETA: u64 = 1 << 1;

@@ -1,0 +1,9 @@
+//! Lint fixture: reads one env var the test README documents and one
+//! it does not. Never compiled — loaded via `include_str!`.
+
+pub fn knobs() -> (Option<String>, Option<String>) {
+    (
+        std::env::var("APPROXRBF_FIXTURE_DOCUMENTED").ok(),
+        std::env::var("APPROXRBF_FIXTURE_SECRET").ok(),
+    )
+}

@@ -1,0 +1,29 @@
+//! Lint fixture (passing): serving-plane code with no panic paths
+//! outside a justified allowance. Never compiled — loaded via
+//! `include_str!` by the rule self-tests.
+
+use std::sync::{Mutex, PoisonError};
+
+pub fn recover(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+pub fn allowed() -> u32 {
+    // LINT-ALLOW(panic): fixture demonstrating a justified allowance.
+    Some(1).unwrap()
+}
+
+pub fn message(msg: &str) -> String {
+    // A panic pattern inside a string literal is data, not a panic
+    // path — the classifier must not flag the next line.
+    format!("{msg}: refusing to .unwrap() here")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        Some(3).unwrap();
+        std::env::var("HOME").expect("test-only");
+    }
+}

@@ -1,0 +1,10 @@
+//! Lint fixture (violating): two panic paths in non-test code. Never
+//! compiled — loaded via `include_str!` by the rule self-tests.
+
+pub fn brittle(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn message(v: Option<u32>) -> u32 {
+    v.expect("value missing")
+}

@@ -1,0 +1,19 @@
+//! Lint fixture (passing): every `unsafe` carries a justification.
+//! Never compiled — loaded via `include_str!` by the rule self-tests.
+
+/// Reads the first byte behind `p`.
+///
+/// # Safety
+///
+/// `p` must be non-null and valid for reads of one byte.
+pub unsafe fn first_byte(p: *const u8) -> u8 {
+    // SAFETY: the caller upholds validity per the function contract
+    // spelled out in the doc comment above.
+    unsafe { *p }
+}
+
+pub fn via_block(x: &[u8]) -> u8 {
+    // SAFETY: `as_ptr` of a non-empty slice is valid for one read;
+    // emptiness is checked by every caller in this fixture.
+    unsafe { *x.as_ptr() }
+}

@@ -1,0 +1,6 @@
+//! Lint fixture (violating): a naked `unsafe` block with no adjacent
+//! justification. Never compiled — loaded via `include_str!`.
+
+pub fn naked(x: &[u8]) -> u8 {
+    unsafe { *x.as_ptr() }
+}

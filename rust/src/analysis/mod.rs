@@ -1,0 +1,222 @@
+//! arblint — repo-native static analysis for invariants the compiler
+//! cannot see.
+//!
+//! The serving plane carries several cross-cutting promises that live
+//! half in code and half in documentation: every `unsafe` is
+//! justified, every environment knob is in the README table, the wire
+//! and `.arbf` constants match their format documents, untrusted
+//! lengths are cap-checked before allocation, and the hot path has no
+//! panic paths. Each of these has broken silently in other projects
+//! precisely because nothing enforced it. This module enforces them
+//! with a zero-dependency, line/token-level scanner — no rustc
+//! plugin, no external crates — wired into tier-1 CI through the
+//! `arblint` binary (`cargo run --bin arblint`) and into `cargo test`
+//! through the [`tests`] meta-test, which fails whenever the live
+//! tree is not lint-clean.
+//!
+//! Architecture: [`source`] classifies each line of a file into code,
+//! comment and string-literal views (plus `#[cfg(test)]` region
+//! marking); [`rules`] implements the checks as pure functions over
+//! those views so fixtures under `fixtures/` (excluded from the live
+//! walk) can exercise every rule in both the passing and the
+//! violating direction. [`run_all`] walks the tree and runs
+//! everything. Rule catalog, allowance grammar and known limitations
+//! are documented in `docs/ANALYSIS.md`.
+
+pub mod rules;
+pub mod source;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use source::SourceFile;
+
+/// One lint finding, printed as `file:line: rule: message`.
+pub struct Diagnostic {
+    /// Repo-relative path (`/`-separated).
+    pub file: String,
+    /// 1-based line; 0 for file-level findings.
+    pub line: usize,
+    /// Rule id, e.g. `no-panic`.
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Source roots scanned for `.rs` files, relative to the repo root.
+const SCAN_ROOTS: [&str; 4] =
+    ["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Directory names never descended into: `vendor` holds third-party
+/// stub code with its own conventions, `fixtures` holds deliberately
+/// violating lint-test snippets.
+const SKIP_DIRS: [&str; 2] = ["vendor", "fixtures"];
+
+/// Run every rule against the repo rooted at `root`. Returns
+/// diagnostics sorted by file and line; `Err` means the tree itself
+/// could not be read (missing README/docs is a hard error — the
+/// cross-check rules have nothing to check against).
+pub fn run_all(root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let mut paths = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut paths)?;
+        }
+    }
+    paths.sort();
+
+    let mut files = Vec::with_capacity(paths.len());
+    for path in &paths {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        files.push(SourceFile::parse(&rel_path(root, path), &text));
+    }
+
+    let read_doc = |rel: &str| {
+        std::fs::read_to_string(root.join(rel))
+            .map_err(|e| format!("read {rel}: {e}"))
+    };
+    let readme = read_doc("README.md")?;
+    let wire_md = read_doc("docs/WIRE.md")?;
+    let formats_md = read_doc("docs/FORMATS.md")?;
+
+    let mut diags = Vec::new();
+    for f in &files {
+        diags.extend(rules::check_safety(f));
+        diags.extend(rules::check_allow_grammar(f));
+        if rules::no_panic_scope(&f.rel) {
+            diags.extend(rules::check_no_panic(f));
+        }
+        if rules::alloc_scope(&f.rel) {
+            diags.extend(rules::check_alloc_guard(f));
+        }
+    }
+    diags.extend(rules::check_env_doc(&files, "README.md", &readme));
+
+    let find = |rel: &str| {
+        files
+            .iter()
+            .find(|f| f.rel == rel)
+            .ok_or_else(|| format!("{rel} not found under {SCAN_ROOTS:?}"))
+    };
+    diags.extend(rules::check_doc_sync(
+        find("rust/src/net/wire.rs")?,
+        "docs/WIRE.md",
+        &wire_md,
+        find("rust/src/registry/binfmt.rs")?,
+        "docs/FORMATS.md",
+        &formats_md,
+    ));
+
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule)
+            .cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(diags)
+}
+
+/// Number of files [`run_all`] would scan — reported by the binary so
+/// "clean" is distinguishable from "scanned nothing".
+pub fn scanned_file_count(root: &Path) -> usize {
+    let mut paths = Vec::new();
+    for scan in SCAN_ROOTS {
+        let dir = root.join(scan);
+        if dir.is_dir() && collect_rs(&dir, &mut paths).is_err() {
+            return 0;
+        }
+    }
+    paths.len()
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry =
+            entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_ref()) {
+                collect_rs(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `root`-relative `/`-separated form of `path`.
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The meta-test: `cargo test` fails whenever the live tree has
+    /// any arblint finding, so tier-1 enforces lint cleanliness even
+    /// where CI forgets to invoke the binary.
+    #[test]
+    fn live_tree_is_lint_clean() {
+        let root =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let diags = run_all(&root).expect("walk the live tree");
+        if !diags.is_empty() {
+            let mut report = String::new();
+            for d in &diags {
+                report.push_str(&format!("{d}\n"));
+            }
+            panic!(
+                "arblint found {} violation(s) in the live tree:\n\
+                 {report}",
+                diags.len()
+            );
+        }
+    }
+
+    #[test]
+    fn walker_skips_fixtures_and_vendor() {
+        let root =
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let mut paths = Vec::new();
+        for scan in SCAN_ROOTS {
+            let dir = root.join(scan);
+            if dir.is_dir() {
+                collect_rs(&dir, &mut paths).expect("walk");
+            }
+        }
+        assert!(!paths.is_empty());
+        for p in &paths {
+            let s = p.to_string_lossy();
+            assert!(
+                !s.contains("fixtures") && !s.contains("vendor"),
+                "walker descended into an excluded dir: {s}"
+            );
+        }
+        // The files the doc-sync rule needs must be in the walk.
+        let rels: Vec<String> =
+            paths.iter().map(|p| rel_path(&root, p)).collect();
+        assert!(rels.iter().any(|r| r == "rust/src/net/wire.rs"));
+        assert!(rels
+            .iter()
+            .any(|r| r == "rust/src/registry/binfmt.rs"));
+    }
+}

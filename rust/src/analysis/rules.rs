@@ -1,0 +1,1139 @@
+//! The five arblint rules. Each is a pure function from classified
+//! sources (and, where relevant, documentation text) to diagnostics,
+//! so the fixture suite can drive every rule on synthetic inputs and
+//! the meta-test can drive them all on the live tree.
+//!
+//! Catalog (ids as printed in diagnostics; details in
+//! `docs/ANALYSIS.md`):
+//!
+//! * `safety` — every `unsafe` token carries an adjacent
+//!   justification: a `SAFETY:` comment or a `# Safety` doc section.
+//! * `env-doc` — the set of `APPROXRBF_*` names appearing anywhere in
+//!   the scanned sources equals the set documented in the README's
+//!   "Environment variables" table, in both directions.
+//! * `doc-sync` — wire message-kind constants match the table in
+//!   `docs/WIRE.md`; `.arbf` record-kind and flag constants match
+//!   `docs/FORMATS.md`.
+//! * `alloc-guard` — decode-direction functions in the binary-format
+//!   and wire modules show cap-check evidence before allocating from
+//!   a length that untrusted bytes control.
+//! * `no-panic` — no `.unwrap()` / `.expect(` / `panic!`-family
+//!   macros in non-test serving-plane code.
+//!
+//! A sixth internal rule, `allow-grammar`, rejects malformed or
+//! unknown allowance markers so a typo cannot silently disable a rule.
+
+use super::source::{
+    allows, find_word, parse_allow, Allow, SourceFile, ALLOW_KEYS,
+};
+use super::Diagnostic;
+
+/// Environment-variable prefix this repo owns. Built by concatenation
+/// so the scanner does not count its own definition as a usage site.
+fn env_prefix() -> String {
+    format!("{}_", "APPROXRBF")
+}
+
+fn diag(file: &str, line: usize, rule: &'static str, message: String) -> Diagnostic {
+    Diagnostic { file: file.to_string(), line, rule, message }
+}
+
+// ---------------------------------------------------------------------
+// scope routing
+// ---------------------------------------------------------------------
+
+/// Files the `no-panic` rule covers: the serving plane, where a panic
+/// takes down a coordinator or shard thread mid-request.
+pub fn no_panic_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/")
+        || rel.starts_with("rust/src/net/")
+        || rel == "rust/src/predictor.rs"
+}
+
+/// Files the `alloc-guard` rule covers: the two modules that parse
+/// attacker-controllable bytes (model files and wire frames).
+pub fn alloc_scope(rel: &str) -> bool {
+    rel == "rust/src/registry/binfmt.rs" || rel == "rust/src/net/wire.rs"
+}
+
+// ---------------------------------------------------------------------
+// rule: safety
+// ---------------------------------------------------------------------
+
+/// Flag `unsafe` tokens with no adjacent justification. Evidence is a
+/// `SAFETY` marker or `# Safety` doc heading on the same line's
+/// comment or in the contiguous comment/attribute block directly
+/// above (doc block and attributes of the item count; a blank line
+/// breaks adjacency so stale justifications cannot drift far away).
+pub fn check_safety(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (idx, line) in f.lines.iter().enumerate() {
+        if find_word(&line.code, "unsafe").is_none() {
+            continue;
+        }
+        if comment_justifies(&line.comment) || allows(line, "safety") {
+            continue;
+        }
+        let mut justified = false;
+        let mut k = idx;
+        while k > 0 {
+            k -= 1;
+            let above = &f.lines[k];
+            let code = above.code.trim();
+            if code.is_empty() && !above.comment.trim().is_empty() {
+                if comment_justifies(&above.comment) || allows(above, "safety") {
+                    justified = true;
+                    break;
+                }
+            } else if code.starts_with("#[") || code.starts_with("#!") {
+                // Attributes sit between a doc block and the item.
+            } else {
+                break;
+            }
+        }
+        if !justified {
+            out.push(diag(
+                &f.rel,
+                idx + 1,
+                "safety",
+                "`unsafe` without an adjacent `SAFETY:` comment or \
+                 `# Safety` doc section"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+fn comment_justifies(comment: &str) -> bool {
+    comment.contains("SAFETY") || comment.contains("# Safety")
+}
+
+// ---------------------------------------------------------------------
+// rule: no-panic
+// ---------------------------------------------------------------------
+
+const PANIC_PATTERNS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Flag panic paths in non-test code. An allowance marker on the same
+/// line or on a comment-only line directly above silences one site.
+pub fn check_no_panic(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let Some(pat) =
+            PANIC_PATTERNS.iter().find(|p| line.code.contains(*p))
+        else {
+            continue;
+        };
+        let allowed = allows(line, "panic")
+            || (idx > 0
+                && f.lines[idx - 1].code.trim().is_empty()
+                && allows(&f.lines[idx - 1], "panic"));
+        if !allowed {
+            out.push(diag(
+                &f.rel,
+                idx + 1,
+                "no-panic",
+                format!(
+                    "`{pat}` in serving-plane code — return an error \
+                     or recover (poisoned locks: \
+                     `crate::util::sync`); if genuinely unreachable, \
+                     annotate with an allowance marker"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule: alloc-guard
+// ---------------------------------------------------------------------
+
+/// Does this function name sit on the decode (untrusted-input) side?
+fn decode_direction(name: &str) -> bool {
+    name.starts_with("decode")
+        || name.starts_with("read")
+        || name.starts_with("peek")
+        || name == "record_frames"
+}
+
+/// Flag allocations sized by a runtime value inside decode-direction
+/// functions unless the function shows cap-check evidence first: a
+/// call to `checked_count`/`check_*` (element-count caps) or
+/// `peek_header`/`parse_header` (which bound counts before any caller
+/// allocates). Encode-direction functions size allocations from data
+/// the process already holds, so they are exempt; `collect()`-based
+/// allocations are bounded by the `Reader::take` slice length by
+/// construction and are not pattern-matched here (see
+/// `docs/ANALYSIS.md` for both limitations).
+pub fn check_alloc_guard(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut cur_fn: Option<(String, usize)> = None;
+    for (idx, line) in f.lines.iter().enumerate() {
+        if let Some(name) = fn_decl_name(&line.code) {
+            cur_fn = Some((name, idx));
+        }
+        if line.in_test {
+            continue;
+        }
+        let Some((name, start)) = &cur_fn else { continue };
+        if !decode_direction(name) {
+            continue;
+        }
+        for expr in alloc_size_exprs(&line.code) {
+            if !expr_is_dynamic(&expr) {
+                continue;
+            }
+            let evidence = f.lines[*start..=idx]
+                .iter()
+                .any(|l| has_guard_evidence(&l.code));
+            let allowed = allows(line, "alloc")
+                || (idx > 0
+                    && f.lines[idx - 1].code.trim().is_empty()
+                    && allows(&f.lines[idx - 1], "alloc"));
+            if !evidence && !allowed {
+                out.push(diag(
+                    &f.rel,
+                    idx + 1,
+                    "alloc-guard",
+                    format!(
+                        "allocation sized by `{}` in decode-direction \
+                         fn `{name}` with no cap-check call \
+                         (`checked_count`/`check_*`/`peek_header`/\
+                         `parse_header`) earlier in the function",
+                        expr.trim()
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Extract the name of a `fn` declared on this line, if any.
+fn fn_decl_name(code: &str) -> Option<String> {
+    let pos = find_word(code, "fn")?;
+    let rest = code[pos + 2..].trim_start();
+    let name: String = rest
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Size expressions of explicit allocations on this line:
+/// `with_capacity(E)`, `vec![_; E]`, `.resize(E, …)`, `.reserve(E)`.
+fn alloc_size_exprs(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for pat in ["with_capacity(", ".reserve("] {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(pat) {
+            let open = from + p + pat.len() - 1;
+            if let Some(inner) = balanced(code, open, '(', ')') {
+                out.push(inner);
+            }
+            from += p + pat.len();
+        }
+    }
+    let mut from = 0;
+    while let Some(p) = code[from..].find(".resize(") {
+        let open = from + p + ".resize(".len() - 1;
+        if let Some(inner) = balanced(code, open, '(', ')') {
+            out.push(top_level_head(&inner, ','));
+        }
+        from += p + ".resize(".len();
+    }
+    let mut from = 0;
+    while let Some(p) = code[from..].find("vec![") {
+        let open = from + p + "vec![".len() - 1;
+        if let Some(inner) = balanced(code, open, '[', ']') {
+            if let Some(size) = top_level_tail(&inner, ';') {
+                out.push(size);
+            }
+        }
+        from += p + "vec![".len();
+    }
+    out
+}
+
+/// Contents of the bracket pair opening at byte `open` (exclusive of
+/// the delimiters); `None` if it does not close on this line.
+fn balanced(code: &str, open: usize, lhs: char, rhs: char) -> Option<String> {
+    let mut depth = 0i64;
+    for (off, c) in code[open..].char_indices() {
+        if c == lhs {
+            depth += 1;
+        } else if c == rhs {
+            depth -= 1;
+            if depth == 0 {
+                return Some(code[open + 1..open + off].to_string());
+            }
+        }
+    }
+    None
+}
+
+/// `expr` up to its first top-level `sep` (whole expr if none).
+fn top_level_head(expr: &str, sep: char) -> String {
+    match split_top_level(expr, sep) {
+        Some(at) => expr[..at].to_string(),
+        None => expr.to_string(),
+    }
+}
+
+/// `expr` after its first top-level `sep`, if present.
+fn top_level_tail(expr: &str, sep: char) -> Option<String> {
+    split_top_level(expr, sep).map(|at| expr[at + 1..].to_string())
+}
+
+fn split_top_level(expr: &str, sep: char) -> Option<usize> {
+    let mut depth = 0i64;
+    for (off, c) in expr.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            c if c == sep && depth == 0 => return Some(off),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// A size expression is dynamic when it mentions any lowercase-leading
+/// identifier other than primitive-type/keyword noise — numeric
+/// literals and `SCREAMING_CASE` constants are compile-time facts.
+fn expr_is_dynamic(expr: &str) -> bool {
+    const KEYWORDS: [&str; 14] = [
+        "as", "usize", "isize", "u8", "u16", "u32", "u64", "i8", "i16",
+        "i32", "i64", "f32", "f64", "const",
+    ];
+    let mut token = String::new();
+    let mut tokens = Vec::new();
+    for c in expr.chars().chain(std::iter::once(' ')) {
+        if c.is_alphanumeric() || c == '_' {
+            token.push(c);
+        } else if !token.is_empty() {
+            tokens.push(std::mem::take(&mut token));
+        }
+    }
+    tokens.iter().any(|t| {
+        t.chars().next().is_some_and(|c| {
+            c.is_lowercase() || c == '_'
+        }) && !KEYWORDS.contains(&t.as_str())
+    })
+}
+
+fn has_guard_evidence(code: &str) -> bool {
+    for pat in ["checked_count(", "peek_header(", "parse_header("] {
+        if code.contains(pat) {
+            return true;
+        }
+    }
+    // Any `check_…(` call counts: the element-cap helpers in binfmt
+    // follow this naming scheme and new ones should too.
+    let mut from = 0;
+    while let Some(p) = code[from..].find("check_") {
+        let at = from + p;
+        let prev_is_ident = at > 0 && {
+            let b = code.as_bytes()[at - 1];
+            b.is_ascii_alphanumeric() || b == b'_'
+        };
+        if !prev_is_ident {
+            let rest = &code[at + "check_".len()..];
+            let ident_end = rest
+                .find(|c: char| !c.is_alphanumeric() && c != '_')
+                .unwrap_or(rest.len());
+            if rest[ident_end..].starts_with('(') {
+                return true;
+            }
+        }
+        from = at + "check_".len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// rule: env-doc
+// ---------------------------------------------------------------------
+
+/// Section heading the README table must live under.
+pub const ENV_SECTION: &str = "## Environment variables";
+
+/// Cross-check environment-variable usage against the README table.
+/// Both directions are errors: an undocumented variable and a stale
+/// table row. Scans raw lines — the names appear inside string
+/// literals at their read sites and inside backticks in docs.
+pub fn check_env_doc(files: &[SourceFile], readme_rel: &str, readme: &str) -> Vec<Diagnostic> {
+    let prefix = env_prefix();
+    let mut used: Vec<(String, String, usize)> = Vec::new();
+    for f in files {
+        for (idx, line) in f.lines.iter().enumerate() {
+            // Unit-test regions are skipped: tests pin variables that
+            // non-test code reads, and lint fixtures referenced from
+            // test modules may name variables that exist nowhere else.
+            if line.in_test {
+                continue;
+            }
+            for var in scan_env_vars(&line.raw, &prefix) {
+                used.push((var, f.rel.clone(), idx + 1));
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    let mut documented: Vec<(String, usize)> = Vec::new();
+    let mut in_section = false;
+    let mut section_seen = false;
+    for (idx, line) in readme.lines().enumerate() {
+        let t = line.trim();
+        if t == ENV_SECTION {
+            in_section = true;
+            section_seen = true;
+            continue;
+        }
+        if in_section && t.starts_with("## ") {
+            in_section = false;
+        }
+        if in_section && t.starts_with('|') {
+            if let Some(cell) = t.trim_start_matches('|').split('|').next() {
+                for var in scan_env_vars(cell, &prefix) {
+                    documented.push((var, idx + 1));
+                }
+            }
+        }
+    }
+    if !section_seen {
+        out.push(diag(
+            readme_rel,
+            0,
+            "env-doc",
+            format!("README has no `{ENV_SECTION}` section"),
+        ));
+        return out;
+    }
+
+    // Report each undocumented variable once, at its first occurrence
+    // (files arrive sorted, so "first" is deterministic).
+    let mut reported: Vec<&str> = Vec::new();
+    for (var, rel, line) in &used {
+        if documented.iter().any(|(d, _)| d == var) || reported.iter().any(|r| r == var) {
+            continue;
+        }
+        reported.push(var);
+        out.push(diag(
+            rel,
+            *line,
+            "env-doc",
+            format!(
+                "`{var}` is read here but missing from the README \
+                 `{ENV_SECTION}` table"
+            ),
+        ));
+    }
+    for (var, line) in &documented {
+        if !used.iter().any(|(u, _, _)| u == var) {
+            out.push(diag(
+                readme_rel,
+                *line,
+                "env-doc",
+                format!(
+                    "`{var}` is documented but no longer read \
+                     anywhere — stale table row"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// All `PREFIX…` names in `text` (at least one name char after the
+/// prefix, so prose like a bare glob pattern does not count).
+fn scan_env_vars(text: &str, prefix: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = text[from..].find(prefix) {
+        let at = from + p;
+        let rest = &text[at + prefix.len()..];
+        let name_len = rest
+            .find(|c: char| !c.is_ascii_uppercase() && !c.is_ascii_digit() && c != '_')
+            .unwrap_or(rest.len());
+        if name_len > 0 {
+            let full = &text[at..at + prefix.len() + name_len];
+            out.push(full.trim_end_matches('_').to_string());
+        }
+        from = at + prefix.len();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule: doc-sync
+// ---------------------------------------------------------------------
+
+/// Cross-check protocol/format constants against their documentation
+/// tables. Three legs: wire message kinds vs. `docs/WIRE.md`, `.arbf`
+/// record-kind tags vs. `docs/FORMATS.md`, and `.arbf` header flag
+/// bits vs. `docs/FORMATS.md`. Any drift — missing, extra, or a value
+/// mismatch — is a hard error in both directions.
+pub fn check_doc_sync(
+    wire: &SourceFile,
+    wire_md_rel: &str,
+    wire_md: &str,
+    binfmt: &SourceFile,
+    formats_md_rel: &str,
+    formats_md: &str,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+
+    // Leg 1: `const K_*: u16` vs. the WIRE.md message-kind table.
+    let code_kinds = scan_u16_consts(wire, "K_");
+    let doc_kinds = wire_md_kinds(wire_md);
+    if doc_kinds.is_empty() {
+        out.push(diag(
+            wire_md_rel,
+            0,
+            "doc-sync",
+            "no message-kind table found under `## Message kinds`"
+                .to_string(),
+        ));
+    }
+    for (name, value, line) in &code_kinds {
+        match doc_kinds.iter().find(|(n, _, _)| n == name) {
+            None => out.push(diag(
+                &wire.rel,
+                *line,
+                "doc-sync",
+                format!(
+                    "`{name}` = {value} is not in the \
+                     `{wire_md_rel}` message-kind table"
+                ),
+            )),
+            Some((_, doc_value, doc_line)) if doc_value != value => {
+                out.push(diag(
+                    wire_md_rel,
+                    *doc_line,
+                    "doc-sync",
+                    format!(
+                        "table says `{name}` = {doc_value}, code says \
+                         {value}"
+                    ),
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    for (name, value, line) in &doc_kinds {
+        if !code_kinds.iter().any(|(n, _, _)| n == name) {
+            out.push(diag(
+                wire_md_rel,
+                *line,
+                "doc-sync",
+                format!(
+                    "table lists `{name}` = {value} but no such \
+                     constant exists in `{}`",
+                    wire.rel
+                ),
+            ));
+        }
+    }
+
+    // Leg 2: `const KIND_*: u16` values vs. the FORMATS.md record
+    // framing row. The docs name kinds in prose, so this leg compares
+    // the tag-value sets.
+    let code_tags = scan_u16_consts(binfmt, "KIND_");
+    match formats_kind_row(formats_md) {
+        None => out.push(diag(
+            formats_md_rel,
+            0,
+            "doc-sync",
+            "no record-kind row (`| kind |` with `u16:` tags) found"
+                .to_string(),
+        )),
+        Some((doc_tags, doc_line)) => {
+            for (name, value, line) in &code_tags {
+                if !doc_tags.contains(value) {
+                    out.push(diag(
+                        &binfmt.rel,
+                        *line,
+                        "doc-sync",
+                        format!(
+                            "`{name}` = {value} is not listed in the \
+                             `{formats_md_rel}` record-kind row"
+                        ),
+                    ));
+                }
+            }
+            for tag in &doc_tags {
+                if !code_tags.iter().any(|(_, v, _)| v == tag) {
+                    out.push(diag(
+                        formats_md_rel,
+                        doc_line,
+                        "doc-sync",
+                        format!(
+                            "record-kind row lists tag `{tag}` but no \
+                             `KIND_*` constant has that value in `{}`",
+                            binfmt.rel
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Leg 3: `const FLAG_*: u64` bit positions vs. the FORMATS.md
+    // `bit N (`FLAG_X`)` annotations.
+    let code_flags = scan_flag_bits(binfmt);
+    let doc_flags = formats_flag_bits(formats_md);
+    if doc_flags.is_empty() {
+        out.push(diag(
+            formats_md_rel,
+            0,
+            "doc-sync",
+            "no flag-bit annotations (`bit N (\u{60}FLAG_X\u{60})`) \
+             found"
+                .to_string(),
+        ));
+    }
+    for (name, bit, line) in &code_flags {
+        match doc_flags.iter().find(|(n, _, _)| n == name) {
+            None => out.push(diag(
+                &binfmt.rel,
+                *line,
+                "doc-sync",
+                format!(
+                    "`{name}` (bit {bit}) is not documented in \
+                     `{formats_md_rel}`"
+                ),
+            )),
+            Some((_, doc_bit, doc_line)) if doc_bit != bit => {
+                out.push(diag(
+                    formats_md_rel,
+                    *doc_line,
+                    "doc-sync",
+                    format!(
+                        "docs put `{name}` at bit {doc_bit}, code at \
+                         bit {bit}"
+                    ),
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    for (name, bit, line) in &doc_flags {
+        if !code_flags.iter().any(|(n, _, _)| n == name) {
+            out.push(diag(
+                formats_md_rel,
+                *line,
+                "doc-sync",
+                format!(
+                    "docs document `{name}` (bit {bit}) but no such \
+                     constant exists in `{}`",
+                    binfmt.rel
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// `const PREFIX…: u16 = N;` declarations in non-test code:
+/// `(name, value, 1-based line)`.
+fn scan_u16_consts(f: &SourceFile, prefix: &str) -> Vec<(String, u16, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.trim();
+        let Some(p) = code.find("const ") else { continue };
+        let rest = &code[p + "const ".len()..];
+        if !rest.starts_with(prefix) {
+            continue;
+        }
+        let name_len = rest
+            .find(|c: char| !c.is_alphanumeric() && c != '_')
+            .unwrap_or(rest.len());
+        let name = &rest[..name_len];
+        let Some((ty, value)) = rest[name_len..].split_once('=') else {
+            continue;
+        };
+        if !ty.contains("u16") {
+            continue;
+        }
+        let digits: String = value
+            .chars()
+            .skip_while(|c| c.is_whitespace())
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let Ok(v) = digits.parse::<u16>() {
+            out.push((name.to_string(), v, idx + 1));
+        }
+    }
+    out
+}
+
+/// Rows of the WIRE.md message-kind table, as
+/// `(K_SNAKE_NAME, tag, 1-based line)`.
+fn wire_md_kinds(md: &str) -> Vec<(String, u16, usize)> {
+    let mut out = Vec::new();
+    let mut in_section = false;
+    for (idx, line) in md.lines().enumerate() {
+        let t = line.trim();
+        if t == "## Message kinds" {
+            in_section = true;
+            continue;
+        }
+        if in_section && (t.starts_with("## ") || t.starts_with("### ")) {
+            break;
+        }
+        if !in_section || !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> =
+            t.trim_matches('|').split('|').map(str::trim).collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let Ok(tag) = cells[0].parse::<u16>() else { continue };
+        let Some(name) = backticked(cells[1]) else { continue };
+        out.push((camel_to_kind(&name), tag, idx + 1));
+    }
+    out
+}
+
+/// `HelloAck` → `K_HELLO_ACK`.
+fn camel_to_kind(name: &str) -> String {
+    let mut out = String::from("K_");
+    for (i, c) in name.chars().enumerate() {
+        if c.is_uppercase() && i > 0 {
+            out.push('_');
+        }
+        for u in c.to_uppercase() {
+            out.push(u);
+        }
+    }
+    out
+}
+
+/// First backticked span in `text`.
+fn backticked(text: &str) -> Option<String> {
+    let open = text.find('\u{60}')?;
+    let rest = &text[open + 1..];
+    let close = rest.find('\u{60}')?;
+    Some(rest[..close].to_string())
+}
+
+/// The FORMATS.md record-kind row: the set of backticked integer tags
+/// on the `| kind |` table line, plus that line's number.
+fn formats_kind_row(md: &str) -> Option<(Vec<u16>, usize)> {
+    for (idx, line) in md.lines().enumerate() {
+        if !(line.contains("| kind |") && line.contains("u16:")) {
+            continue;
+        }
+        let mut tags = Vec::new();
+        let mut rest = line;
+        while let Some(open) = rest.find('\u{60}') {
+            let after = &rest[open + 1..];
+            let Some(close) = after.find('\u{60}') else { break };
+            if let Ok(v) = after[..close].parse::<u16>() {
+                tags.push(v);
+            }
+            rest = &after[close + 1..];
+        }
+        if !tags.is_empty() {
+            return Some((tags, idx + 1));
+        }
+    }
+    None
+}
+
+/// `const FLAG_*: u64 = 1;` / `= 1 << N;` as `(name, bit, line)`.
+fn scan_flag_bits(f: &SourceFile) -> Vec<(String, u32, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.trim();
+        let Some(p) = code.find("const FLAG_") else { continue };
+        let rest = &code[p + "const ".len()..];
+        let name_len = rest
+            .find(|c: char| !c.is_alphanumeric() && c != '_')
+            .unwrap_or(rest.len());
+        let name = rest[..name_len].to_string();
+        let Some((_, value)) = rest.split_once('=') else { continue };
+        let value = value.trim().trim_end_matches(';').trim();
+        let bit = if value == "1" {
+            Some(0)
+        } else {
+            value.split_once("<<").and_then(|(one, shift)| {
+                (one.trim() == "1")
+                    .then(|| shift.trim().parse::<u32>().ok())
+                    .flatten()
+            })
+        };
+        if let Some(bit) = bit {
+            out.push((name, bit, idx + 1));
+        }
+    }
+    out
+}
+
+/// `bit N (`FLAG_X`)` annotations anywhere in FORMATS.md, as
+/// `(name, bit, line)`.
+fn formats_flag_bits(md: &str) -> Vec<(String, u32, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in md.lines().enumerate() {
+        let mut rest: &str = line;
+        while let Some(p) = rest.find("bit ") {
+            let after = &rest[p + "bit ".len()..];
+            let digit_len = after
+                .find(|c: char| !c.is_ascii_digit())
+                .unwrap_or(after.len());
+            if digit_len == 0 {
+                rest = after;
+                continue;
+            }
+            let Ok(bit) = after[..digit_len].parse::<u32>() else {
+                rest = after;
+                continue;
+            };
+            let tail = &after[digit_len..];
+            if let Some(name_part) = tail.strip_prefix(" (\u{60}") {
+                if let Some(close) = name_part.find('\u{60}') {
+                    let name = &name_part[..close];
+                    if name.starts_with("FLAG_") {
+                        out.push((name.to_string(), bit, idx + 1));
+                    }
+                }
+            }
+            rest = tail;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule: allow-grammar
+// ---------------------------------------------------------------------
+
+/// Reject malformed allowance markers and unknown rule keys, so a
+/// typo can never silently disable a rule.
+pub fn check_allow_grammar(f: &SourceFile) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (idx, line) in f.lines.iter().enumerate() {
+        if !line.comment.contains("LINT-ALLOW") {
+            continue;
+        }
+        match parse_allow(&line.comment) {
+            Allow::None => {}
+            Allow::Malformed(why) => out.push(diag(
+                &f.rel,
+                idx + 1,
+                "allow-grammar",
+                format!("malformed allowance marker: {why}"),
+            )),
+            Allow::Key(key, _) => {
+                if !ALLOW_KEYS.iter().any(|(k, _)| *k == key) {
+                    let known: Vec<&str> =
+                        ALLOW_KEYS.iter().map(|(k, _)| *k).collect();
+                    out.push(diag(
+                        &f.rel,
+                        idx + 1,
+                        "allow-grammar",
+                        format!(
+                            "unknown allowance key `{key}` (known: \
+                             {})",
+                            known.join(", ")
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::SourceFile;
+
+    fn sf(rel: &str, text: &str) -> SourceFile {
+        SourceFile::parse(rel, text)
+    }
+
+    // ---- rule: safety ------------------------------------------------
+
+    #[test]
+    fn safety_fixture_passes() {
+        let f = sf(
+            "rust/src/linalg/fixture.rs",
+            include_str!("fixtures/safety_ok.rs"),
+        );
+        let diags = check_safety(&f);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn safety_fixture_flags_naked_unsafe() {
+        let f = sf(
+            "rust/src/linalg/fixture.rs",
+            include_str!("fixtures/safety_violation.rs"),
+        );
+        let diags = check_safety(&f);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, "safety");
+    }
+
+    // ---- rule: no-panic ----------------------------------------------
+
+    #[test]
+    fn no_panic_fixture_passes() {
+        let f = sf(
+            "rust/src/net/fixture.rs",
+            include_str!("fixtures/panic_ok.rs"),
+        );
+        let diags = check_no_panic(&f);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn no_panic_fixture_flags_unwrap_and_expect() {
+        let f = sf(
+            "rust/src/net/fixture.rs",
+            include_str!("fixtures/panic_violation.rs"),
+        );
+        let diags = check_no_panic(&f);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.rule == "no-panic"));
+    }
+
+    #[test]
+    fn no_panic_scope_covers_serving_plane_only() {
+        assert!(no_panic_scope("rust/src/coordinator/server.rs"));
+        assert!(no_panic_scope("rust/src/net/router.rs"));
+        assert!(no_panic_scope("rust/src/predictor.rs"));
+        assert!(!no_panic_scope("rust/src/registry/binfmt.rs"));
+        assert!(!no_panic_scope("rust/tests/shard_test.rs"));
+    }
+
+    // ---- rule: alloc-guard -------------------------------------------
+
+    #[test]
+    fn alloc_fixture_passes() {
+        let f = sf(
+            "rust/src/net/wire.rs",
+            include_str!("fixtures/alloc_ok.rs"),
+        );
+        let diags = check_alloc_guard(&f);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn alloc_fixture_flags_unguarded_decode() {
+        let f = sf(
+            "rust/src/net/wire.rs",
+            include_str!("fixtures/alloc_violation.rs"),
+        );
+        let diags = check_alloc_guard(&f);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.rule == "alloc-guard"));
+    }
+
+    // ---- rule: env-doc -----------------------------------------------
+
+    const FAKE_README: &str = "\
+# fixture\n\n## Environment variables\n\n\
+| variable | values |\n|---|---|\n\
+| \u{60}APPROXRBF_FIXTURE_DOCUMENTED\u{60} | any |\n\
+| \u{60}APPROXRBF_FIXTURE_REMOVED\u{60} | any |\n\n## Next\n";
+
+    #[test]
+    fn env_doc_flags_both_directions() {
+        let files = [sf(
+            "rust/src/fixture.rs",
+            include_str!("fixtures/envdoc_snippet.rs"),
+        )];
+        let diags = check_env_doc(&files, "README.md", FAKE_README);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        let messages: Vec<&str> =
+            diags.iter().map(|d| d.message.as_str()).collect();
+        assert!(messages
+            .iter()
+            .any(|m| m.contains("APPROXRBF_FIXTURE_SECRET")));
+        assert!(messages
+            .iter()
+            .any(|m| m.contains("APPROXRBF_FIXTURE_REMOVED")));
+    }
+
+    #[test]
+    fn env_doc_requires_the_section() {
+        let files = [sf(
+            "rust/src/fixture.rs",
+            include_str!("fixtures/envdoc_snippet.rs"),
+        )];
+        let diags = check_env_doc(&files, "README.md", "# no table\n");
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].message.contains("no"));
+    }
+
+    // ---- rule: doc-sync ----------------------------------------------
+
+    const SNIPPET_WIRE_MD: &str = "\
+# wire\n\n## Message kinds\n\n\
+| tag | message |\n|---|---|\n\
+| 1 | \u{60}Hello\u{60} |\n| 2 | \u{60}DataRow\u{60} |\n\n## Next\n";
+
+    const SNIPPET_FORMATS_MD: &str = "\
+# formats\n\n\
+| 0 | 2 | kind | u16: \u{60}1\u{60} = a, \u{60}2\u{60} = b |\n\
+flags: bit 0 (\u{60}FLAG_ALPHA\u{60}); bit 1 (\u{60}FLAG_BETA\u{60})\n";
+
+    fn snippet_sources() -> (SourceFile, SourceFile) {
+        let wire = sf(
+            "rust/src/net/wire.rs",
+            include_str!("fixtures/docsync_snippet.rs"),
+        );
+        let binfmt = sf(
+            "rust/src/registry/binfmt.rs",
+            include_str!("fixtures/docsync_snippet.rs"),
+        );
+        (wire, binfmt)
+    }
+
+    #[test]
+    fn doc_sync_snippet_in_sync_is_clean() {
+        let (wire, binfmt) = snippet_sources();
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            SNIPPET_WIRE_MD,
+            &binfmt,
+            "docs/FORMATS.md",
+            SNIPPET_FORMATS_MD,
+        );
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn doc_sync_flags_tag_value_drift() {
+        let (wire, binfmt) = snippet_sources();
+        let tampered = SNIPPET_WIRE_MD
+            .replace("| 2 | \u{60}DataRow\u{60} |", "| 7 | \u{60}DataRow\u{60} |");
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            &tampered,
+            &binfmt,
+            "docs/FORMATS.md",
+            SNIPPET_FORMATS_MD,
+        );
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].message.contains("K_DATA_ROW"));
+    }
+
+    #[test]
+    fn doc_sync_flags_missing_row_and_flag_drift() {
+        let (wire, binfmt) = snippet_sources();
+        let no_row = SNIPPET_WIRE_MD
+            .replace("| 2 | \u{60}DataRow\u{60} |\n", "");
+        let flag_moved = SNIPPET_FORMATS_MD
+            .replace("bit 1 (\u{60}FLAG_BETA\u{60})", "bit 5 (\u{60}FLAG_BETA\u{60})");
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            &no_row,
+            &binfmt,
+            "docs/FORMATS.md",
+            &flag_moved,
+        );
+        assert_eq!(diags.len(), 2, "{diags:?}");
+    }
+
+    /// Acceptance check: desyncing a live kind constant from the live
+    /// docs must fail the lint. Loads the real sources and tampers the
+    /// in-memory copy of `docs/WIRE.md`.
+    #[test]
+    fn doc_sync_catches_drift_against_live_docs() {
+        let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+        let read = |p: &str| {
+            std::fs::read_to_string(format!("{root}/{p}"))
+                .unwrap_or_else(|e| panic!("read {p}: {e}"))
+        };
+        let wire =
+            sf("rust/src/net/wire.rs", &read("rust/src/net/wire.rs"));
+        let binfmt = sf(
+            "rust/src/registry/binfmt.rs",
+            &read("rust/src/registry/binfmt.rs"),
+        );
+        let wire_md = read("docs/WIRE.md");
+        let formats_md = read("docs/FORMATS.md");
+
+        let clean = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            &wire_md,
+            &binfmt,
+            "docs/FORMATS.md",
+            &formats_md,
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+
+        let tampered = wire_md.replace(
+            "| 3 | \u{60}Request\u{60} |",
+            "| 12 | \u{60}Request\u{60} |",
+        );
+        assert_ne!(tampered, wire_md, "tamper pattern went stale");
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            &tampered,
+            &binfmt,
+            "docs/FORMATS.md",
+            &formats_md,
+        );
+        assert!(
+            diags.iter().any(|d| d.message.contains("K_REQUEST")),
+            "{diags:?}"
+        );
+    }
+
+    // ---- rule: allow-grammar -----------------------------------------
+
+    #[test]
+    fn allow_grammar_flags_unknown_key_and_missing_reason() {
+        let f = sf(
+            "rust/src/net/fixture.rs",
+            include_str!("fixtures/allow_grammar_violation.rs"),
+        );
+        let diags = check_allow_grammar(&f);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.rule == "allow-grammar"));
+    }
+
+    #[test]
+    fn allow_grammar_accepts_known_keys() {
+        let f = sf(
+            "rust/src/net/fixture.rs",
+            include_str!("fixtures/panic_ok.rs"),
+        );
+        let diags = check_allow_grammar(&f);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+}

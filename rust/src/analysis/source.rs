@@ -1,0 +1,510 @@
+//! Line-level source model shared by every arblint rule.
+//!
+//! The rules in [`super::rules`] are deliberately token-level, not
+//! AST-level: the crate must lint itself with nothing but `std`, so a
+//! full parser is out of budget. What the rules *do* need, precisely,
+//! is the distinction between code, comment and string-literal text —
+//! `.unwrap()` inside an error message is fine, `.unwrap()` on a lock
+//! is not — plus knowledge of which lines sit inside `#[cfg(test)]`
+//! regions. [`SourceFile::parse`] provides exactly that: each line of
+//! the input is split into a `code` view (string/char-literal contents
+//! blanked to spaces so delimiters stay balanced, comments removed)
+//! and a `comment` view (comment text only), and a post-pass marks
+//! test regions by brace tracking.
+//!
+//! The lexer handles the constructs that actually appear in this tree:
+//! nested block comments, `//`/`///`/`//!` line comments, string
+//! literals with escapes, raw strings (`r"…"`, `r#"…"#`, byte
+//! variants), char literals vs. lifetimes, and raw identifiers
+//! (`r#fn`). It is shared by the `arblint` binary and the self-tests,
+//! so a classifier bug fails the fixture suite, not just the live run.
+
+/// One physical line of a source file, split into lexical views.
+pub struct Line {
+    /// Original text, untouched. Env-var scanning uses this view:
+    /// `APPROXRBF_*` names live inside string literals by design.
+    pub raw: String,
+    /// Code view: comments stripped, string/char contents blanked.
+    /// Delimiters (`"`, `'`) are kept so parens/braces stay balanced.
+    pub code: String,
+    /// Comment text on this line (line and block comments, doc
+    /// comments included), without the `//`/`/*` markers.
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+/// A classified source file, addressed by its repo-relative path.
+pub struct SourceFile {
+    /// Path relative to the repo root, `/`-separated.
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+/// Cross-line lexer state.
+enum Mode {
+    Code,
+    /// Inside `/* … */`; block comments nest, so track the depth.
+    Block(u32),
+    /// Inside a normal string literal.
+    Str,
+    /// Inside a raw string; the payload is the number of `#`s.
+    RawStr(usize),
+}
+
+impl SourceFile {
+    /// Classify `text` line by line. `rel` is recorded verbatim.
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let mut mode = Mode::Code;
+        let mut lines = Vec::new();
+        for raw in text.lines() {
+            let (code, comment, next) = classify_line(raw, mode);
+            mode = next;
+            lines.push(Line {
+                raw: raw.to_string(),
+                code,
+                comment,
+                in_test: false,
+            });
+        }
+        mark_test_regions(&mut lines);
+        SourceFile { rel: rel.to_string(), lines }
+    }
+}
+
+/// Split one line into code/comment views, advancing the lexer mode.
+fn classify_line(raw: &str, mut mode: Mode) -> (String, String, Mode) {
+    let ch: Vec<char> = raw.chars().collect();
+    let n = ch.len();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < n {
+        match mode {
+            Mode::Block(depth) => {
+                if ch[i] == '*' && i + 1 < n && ch[i + 1] == '/' {
+                    mode = if depth > 1 {
+                        Mode::Block(depth - 1)
+                    } else {
+                        Mode::Code
+                    };
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if ch[i] == '/' && i + 1 < n && ch[i + 1] == '*' {
+                    mode = Mode::Block(depth + 1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else {
+                    comment.push(ch[i]);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if ch[i] == '\\' {
+                    code.push(' ');
+                    if i + 1 < n {
+                        code.push(' ');
+                    }
+                    i += 2;
+                } else if ch[i] == '"' {
+                    mode = Mode::Code;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if ch[i] == '"' && i + hashes < n
+                    && ch[i + 1..].iter().take(hashes).all(|&c| c == '#')
+                {
+                    mode = Mode::Code;
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    i += 1 + hashes;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let c = ch[i];
+                if c == '/' && i + 1 < n && ch[i + 1] == '/' {
+                    // Line comment: the rest of the line is comment
+                    // text (doc-comment slashes land there too, which
+                    // is fine — evidence checks are substring-based).
+                    for &cc in &ch[i + 2..] {
+                        comment.push(cc);
+                    }
+                    break;
+                } else if c == '/' && i + 1 < n && ch[i + 1] == '*' {
+                    mode = Mode::Block(1);
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    mode = Mode::Str;
+                    code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && !prev_is_ident(&ch, i)
+                    && raw_string_hashes(&ch, i).is_some()
+                {
+                    let (skip, hashes) =
+                        raw_string_hashes(&ch, i).unwrap_or((0, 0));
+                    mode = Mode::RawStr(hashes);
+                    for _ in 0..skip {
+                        code.push(' ');
+                    }
+                    code.push('"');
+                    i += skip + 1;
+                } else if c == 'b' && !prev_is_ident(&ch, i) && i + 1 < n && ch[i + 1] == '"' {
+                    mode = Mode::Str;
+                    code.push(' ');
+                    code.push('"');
+                    i += 2;
+                } else if c == '\'' {
+                    match char_literal_len(&ch, i) {
+                        Some(len) => {
+                            code.push('\'');
+                            for _ in 1..len {
+                                code.push(' ');
+                            }
+                            i += len;
+                        }
+                        None => {
+                            // Lifetime or loop label: plain code.
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment, mode)
+}
+
+/// Is `ch[i]` preceded by an identifier character? Guards against
+/// treating the final `r` of `var"…"`-like sequences as a raw-string
+/// prefix (cannot occur syntactically, but cheap to be safe).
+fn prev_is_ident(ch: &[char], i: usize) -> bool {
+    i > 0 && (ch[i - 1].is_alphanumeric() || ch[i - 1] == '_')
+}
+
+/// If `ch[i..]` starts a raw (byte) string — `r"`, `r#"`, `br##"` … —
+/// return `(prefix_len_before_quote, hash_count)`. Raw identifiers
+/// like `r#fn` return `None` (no quote after the hashes).
+fn raw_string_hashes(ch: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if ch[j] == 'b' {
+        j += 1;
+        if j >= ch.len() || ch[j] != 'r' {
+            return None;
+        }
+    }
+    if ch[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < ch.len() && ch[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < ch.len() && ch[j] == '"' {
+        Some((j - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// If `ch[i..]` (starting at a `'`) is a char literal, return its
+/// total length in chars; `None` means lifetime/label.
+fn char_literal_len(ch: &[char], i: usize) -> Option<usize> {
+    let n = ch.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if ch[i + 1] == '\\' {
+        // Escaped char: scan to the closing quote.
+        let mut j = i + 2;
+        while j < n && ch[j] != '\'' {
+            j += 1;
+        }
+        if j < n {
+            return Some(j - i + 1);
+        }
+        return None;
+    }
+    // Unescaped: exactly one char then a closing quote ('x'); any
+    // other shape ('a as a lifetime, '_, 'static) is not a literal.
+    if i + 2 < n && ch[i + 2] == '\'' && ch[i + 1] != '\'' {
+        return Some(3);
+    }
+    None
+}
+
+/// Mark lines inside `#[cfg(test)]` items. The attribute may be
+/// followed by further attributes, blank lines or comments before the
+/// item it gates; braced items (`mod`, `fn`, `impl`) are tracked to
+/// their closing brace, unbraced ones (`use …;`) to the semicolon.
+fn mark_test_regions(lines: &mut [Line]) {
+    let n = lines.len();
+    let mut i = 0;
+    while i < n {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // Find the first real code line at or after the attribute
+        // (the attribute line itself may open the item).
+        let mut j = i;
+        let item = loop {
+            if j >= n {
+                break None;
+            }
+            let after = if j == i {
+                let code = &lines[j].code;
+                let pos = code.find("#[cfg(test)]").map(|p| p + 12);
+                pos.map(|p| code[p..].trim().to_string())
+            } else {
+                Some(lines[j].code.trim().to_string())
+            };
+            match after {
+                Some(t) if t.is_empty() || t.starts_with("#[") || t.starts_with("#!") => {
+                    j += 1;
+                }
+                other => break other,
+            }
+        };
+        let Some(item) = item else {
+            break;
+        };
+        let end = if item.contains('{') {
+            brace_region_end(lines, j)
+        } else {
+            // Unbraced item: runs to the line ending in `;`.
+            let mut k = j;
+            while k < n && !lines[k].code.trim_end().ends_with(';') {
+                k += 1;
+            }
+            k.min(n - 1)
+        };
+        for line in lines.iter_mut().take(end + 1).skip(i) {
+            line.in_test = true;
+        }
+        i = end + 1;
+    }
+}
+
+/// Index of the line on which the brace region opened at line `start`
+/// closes (depth returns to zero). Counts braces in the code view, so
+/// braces inside strings/comments are already blanked.
+fn brace_region_end(lines: &[Line], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (k, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return k;
+        }
+    }
+    lines.len() - 1
+}
+
+/// Result of scanning a comment for an allowance marker.
+pub enum Allow {
+    /// No marker present.
+    None,
+    /// Well-formed marker: `(rule_key, reason)`.
+    Key(String, String),
+    /// Marker present but the grammar is wrong; payload explains how.
+    Malformed(String),
+}
+
+/// Allowance keys accepted in markers, with the rule each silences.
+/// Example of the accepted form, as it appears in source:
+/// `// LINT-ALLOW(panic): poisoning is unreachable, lock scope is three lines.`
+pub const ALLOW_KEYS: [(&str, &str); 5] = [
+    ("safety", "safety"),
+    ("env-doc", "env-doc"),
+    ("doc-sync", "doc-sync"),
+    ("alloc", "alloc-guard"),
+    ("panic", "no-panic"),
+];
+
+/// Parse an allowance marker out of comment text.
+pub fn parse_allow(comment: &str) -> Allow {
+    let Some(pos) = comment.find("LINT-ALLOW") else {
+        return Allow::None;
+    };
+    let rest = &comment[pos + "LINT-ALLOW".len()..];
+    let Some(body) = rest.strip_prefix('(') else {
+        return Allow::Malformed(
+            "expected `(` after LINT-ALLOW".to_string(),
+        );
+    };
+    let Some(close) = body.find(')') else {
+        return Allow::Malformed(
+            "unclosed `(` in LINT-ALLOW marker".to_string(),
+        );
+    };
+    let key = &body[..close];
+    let after = &body[close + 1..];
+    let Some(reason) = after.strip_prefix(':') else {
+        return Allow::Malformed(
+            "expected `:` and a reason after the rule key".to_string(),
+        );
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Allow::Malformed(
+            "empty reason — say why the allowance is sound".to_string(),
+        );
+    }
+    Allow::Key(key.to_string(), reason.to_string())
+}
+
+/// Does this line's comment carry a well-formed allowance for `key`?
+pub fn allows(line: &Line, key: &str) -> bool {
+    matches!(parse_allow(&line.comment), Allow::Key(k, _) if k == key)
+}
+
+/// Find `word` in `code` at an identifier boundary (neither neighbor
+/// is alphanumeric or `_`). Returns the byte offset of the match.
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let at = from + p;
+        let end = at + word.len();
+        let left_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let right_ok =
+            end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if left_ok && right_ok {
+            return Some(at);
+        }
+        from = at + word.len();
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> SourceFile {
+        SourceFile::parse("rust/src/fake.rs", text)
+    }
+
+    #[test]
+    fn line_comment_split() {
+        let f = parse("let x = 1; // trailing note\n");
+        assert_eq!(f.lines[0].code.trim_end(), "let x = 1;");
+        assert_eq!(f.lines[0].comment, " trailing note");
+    }
+
+    #[test]
+    fn slashes_inside_strings_are_code() {
+        let f = parse("let u = \"https://example/a\"; // real\n");
+        assert!(f.lines[0].comment.contains("real"));
+        assert!(!f.lines[0].comment.contains("example"));
+        // String contents blanked, quotes kept.
+        assert!(f.lines[0].code.contains('"'));
+        assert!(!f.lines[0].code.contains("https"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let f = parse("a/* one /* two */ still */b\n/* open\nend */c\n");
+        assert_eq!(f.lines[0].code.replace(' ', ""), "ab");
+        assert_eq!(f.lines[1].code.trim(), "");
+        assert_eq!(f.lines[2].code.replace(' ', ""), "c");
+        assert!(f.lines[1].comment.contains("open"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let f = parse(
+            "let a = r#\"quote \" inside\"#;\nlet b = \"esc \\\" q\";\n",
+        );
+        assert!(!f.lines[0].code.contains("inside"));
+        assert!(f.lines[0].code.trim_end().ends_with(';'));
+        assert!(!f.lines[1].code.contains('q'));
+        assert!(f.lines[1].code.trim_end().ends_with(';'));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let f = parse("fn f<'a>(x: &'a str) -> char { '}' }\n");
+        // The brace inside the char literal must not unbalance code.
+        let open =
+            f.lines[0].code.chars().filter(|&c| c == '{').count();
+        let close =
+            f.lines[0].code.chars().filter(|&c| c == '}').count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let f = parse(
+            "pub fn live() {}\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 fn helper() { x.unwrap(); }\n\
+             }\n\
+             pub fn also_live() {}\n",
+        );
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(!f.lines[5].in_test);
+    }
+
+    #[test]
+    fn allow_marker_grammar() {
+        assert!(matches!(
+            parse_allow(" LINT-ALLOW(panic): startup only."),
+            Allow::Key(k, _) if k == "panic"
+        ));
+        assert!(matches!(
+            parse_allow(" LINT-ALLOW(panic):"),
+            Allow::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_allow(" LINT-ALLOW panic: x"),
+            Allow::Malformed(_)
+        ));
+        assert!(matches!(parse_allow(" plain note"), Allow::None));
+    }
+
+    #[test]
+    fn find_word_respects_boundaries() {
+        assert!(find_word("call unsafe_op_in_unsafe_fn", "unsafe")
+            .is_none());
+        assert_eq!(find_word("an unsafe block", "unsafe"), Some(3));
+    }
+}

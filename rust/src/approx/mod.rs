@@ -4,6 +4,8 @@
 //! [`ApproxModel`] (Eq. 3.8), compressed-model I/O (Table 3), and
 //! error-analysis tooling (Table 1's diff column + Figure 1).
 
+#![forbid(unsafe_code)]
+
 pub mod bounds;
 pub mod builder;
 pub mod error_analysis;

@@ -6,6 +6,8 @@
 //! `Scale::Quick` shrinks workloads for CI/tests; `Scale::Full` is the
 //! EXPERIMENTS.md configuration.
 
+#![forbid(unsafe_code)]
+
 pub mod ablations;
 pub mod ann;
 pub mod context;

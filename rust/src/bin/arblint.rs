@@ -1,0 +1,71 @@
+//! `arblint` — run the repo-native static-analysis pass from
+//! `approxrbf::analysis` over the live tree.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --bin arblint              # lint the containing repo
+//! cargo run --bin arblint -- --root P  # lint the repo rooted at P
+//! ```
+//!
+//! Prints one `file:line: rule: message` diagnostic per finding. Exit
+//! status: 0 clean, 1 findings, 2 usage/io errors. Rule catalog and
+//! allowance grammar: `docs/ANALYSIS.md`.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("arblint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!(
+                    "arblint: unknown argument `{other}` (usage: \
+                     arblint [--root <repo>])"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Default to the repo containing this crate: CARGO_MANIFEST_DIR
+    // is `<repo>/rust` at compile time.
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."))
+    });
+
+    match approxrbf::analysis::run_all(&root) {
+        Ok(diags) if diags.is_empty() => {
+            println!(
+                "arblint: clean ({} files scanned)",
+                approxrbf::analysis::scanned_file_count(&root)
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!(
+                "arblint: {} violation(s) — see docs/ANALYSIS.md for \
+                 the rule catalog and the allowance grammar",
+                diags.len()
+            );
+            ExitCode::from(1)
+        }
+        Err(e) => {
+            eprintln!("arblint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

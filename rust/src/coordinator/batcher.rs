@@ -14,6 +14,9 @@ use std::time::{Duration, Instant};
 
 use super::policy::PolicyTable;
 use super::request::{ModelId, PredictErrorKind, PredictRequest, WorkItem};
+use crate::util::sync::{
+    lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned,
+};
 
 /// Bounded MPMC ingress queue (Mutex + Condvar; std-only).
 pub struct IngressQueue {
@@ -40,9 +43,9 @@ impl IngressQueue {
 
     /// Blocking push (backpressure). Returns false if the queue closed.
     pub fn push(&self, req: PredictRequest) -> bool {
-        let mut g = self.q.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.q);
         while g.items.len() >= self.capacity && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+            g = wait_unpoisoned(&self.not_full, g);
         }
         if g.closed {
             return false;
@@ -60,7 +63,7 @@ impl IngressQueue {
         max: usize,
         max_wait: Duration,
     ) -> Option<Vec<PredictRequest>> {
-        let mut g = self.q.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.q);
         let deadline = Instant::now() + max_wait;
         while g.items.is_empty() && !g.closed {
             let now = Instant::now();
@@ -68,7 +71,7 @@ impl IngressQueue {
                 return Some(Vec::new()); // timed out: empty batch
             }
             let (guard, _) =
-                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+                wait_timeout_unpoisoned(&self.not_empty, g, deadline - now);
             g = guard;
         }
         if g.items.is_empty() && g.closed {
@@ -83,10 +86,11 @@ impl IngressQueue {
             if now >= linger_deadline {
                 break;
             }
-            let (guard, timeout) = self
-                .not_empty
-                .wait_timeout(g, linger_deadline - now)
-                .unwrap();
+            let (guard, timeout) = wait_timeout_unpoisoned(
+                &self.not_empty,
+                g,
+                linger_deadline - now,
+            );
             g = guard;
             if timeout.timed_out() {
                 break;
@@ -100,14 +104,14 @@ impl IngressQueue {
 
     /// Close the queue: pushes fail, pops drain then return None.
     pub fn close(&self) {
-        let mut g = self.q.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.q);
         g.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.q.lock().unwrap().items.len()
+        lock_unpoisoned(&self.q).items.len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 use crate::util::stats::Welford;
+use crate::util::sync::lock_unpoisoned;
 
 use super::request::{ModelId, Route};
 
@@ -200,7 +201,7 @@ impl Metrics {
         n: usize,
         substrate: &str,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.started.get_or_insert_with(Instant::now);
         g.batches += 1;
         g.batch_sizes.push(n as f64);
@@ -226,13 +227,13 @@ impl Metrics {
     /// later sample overwrites — [`Metrics::aggregate`] **sums** the
     /// last-set values across shard sinks.
     pub fn set_queue_depth(&self, n: usize) {
-        self.inner.lock().unwrap().queue_depth = n as u64;
+        lock_unpoisoned(&self.inner).queue_depth = n as u64;
     }
 
     /// Account for requests completed with a fail-fast error instead
     /// of a served prediction.
     pub fn record_dropped(&self, model: &ModelId, n: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.dropped += n as u64;
         g.per_model
             .entry(model.clone())
@@ -246,7 +247,7 @@ impl Metrics {
         latency: Duration,
         in_bound: bool,
     ) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         g.latency.push(latency.as_secs_f64());
         g.histogram[bucket_of(latency)] += 1;
         if !in_bound {
@@ -277,7 +278,7 @@ impl Metrics {
         let mut merged = Inner::default();
         let mut model_shards: HashMap<ModelId, Vec<usize>> = HashMap::new();
         for (index, sink) in shards.iter().enumerate() {
-            let g = sink.inner.lock().unwrap();
+            let g = lock_unpoisoned(&sink.inner);
             merged.started = match (merged.started, g.started) {
                 (Some(a), Some(b)) => Some(a.min(b)),
                 (a, b) => a.or(b),
@@ -365,7 +366,7 @@ impl Metrics {
     /// planes aggregate *exactly* like local ones — moments merge, they
     /// are never re-derived from pre-averaged numbers).
     pub fn export_state(&self) -> MetricsState {
-        let g = self.inner.lock().unwrap();
+        let g = lock_unpoisoned(&self.inner);
         MetricsState {
             served_approx: g.served_approx,
             served_exact: g.served_exact,

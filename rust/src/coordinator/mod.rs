@@ -59,6 +59,8 @@
 //! channel — synchronous callers fail fast instead of waiting out a
 //! timeout.
 
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod metrics;
 pub mod policy;

@@ -20,6 +20,7 @@ use std::time::Duration;
 
 use super::request::ModelId;
 use super::router::RoutePolicy;
+use crate::util::sync::{read_unpoisoned, write_unpoisoned};
 
 /// Per-model serving knobs, persisted in the model's `.arbf` bundle.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -94,23 +95,18 @@ impl PolicyTable {
     }
 
     pub(crate) fn get(&self, model: &ModelId) -> TenantPolicy {
-        self.map
-            .read()
-            .unwrap()
-            .get(model)
-            .copied()
-            .unwrap_or_default()
+        read_unpoisoned(&self.map).get(model).copied().unwrap_or_default()
     }
 
     pub(crate) fn set(&self, model: ModelId, policy: TenantPolicy) {
-        self.map.write().unwrap().insert(model, policy);
+        write_unpoisoned(&self.map).insert(model, policy);
     }
 
     /// Drop a tenant's entry (called when the executor evicts it, so
     /// the table stays bounded by the resident set — a reloaded tenant
     /// re-registers its policy on its next batch).
     pub(crate) fn remove(&self, model: &ModelId) {
-        self.map.write().unwrap().remove(model);
+        write_unpoisoned(&self.map).remove(model);
     }
 }
 

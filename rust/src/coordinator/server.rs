@@ -40,6 +40,7 @@ use crate::svm::SvmModel;
 use crate::{Error, Result};
 
 use super::batcher::IngressQueue;
+use crate::util::sync::lock_unpoisoned;
 use super::metrics::{Metrics, MetricsSnapshot, MetricsState};
 use super::request::{
     Completion, ModelId, PredictError, PredictErrorKind, PredictRequest,
@@ -292,13 +293,11 @@ impl Shared {
                 }
             }
             DimCheck::Registry { store, cache } => {
-                if let Some(&d) = cache.lock().unwrap().get(model) {
+                if let Some(&d) = lock_unpoisoned(cache).get(model) {
                     return Ok(d);
                 }
                 let info = store.peek(model)?;
-                cache
-                    .lock()
-                    .unwrap()
+                lock_unpoisoned(cache)
                     .insert(model.to_string(), info.dim);
                 Ok(info.dim)
             }
@@ -423,7 +422,7 @@ impl Client {
     /// Receive this client's next completion (any order across
     /// batches). `None` on timeout.
     pub fn recv(&self, timeout: Duration) -> Option<Completion> {
-        self.reply_rx.lock().unwrap().recv_timeout(timeout).ok()
+        lock_unpoisoned(&self.reply_rx).recv_timeout(timeout).ok()
     }
 
     /// Open a [`Session`]: a scoped group of submissions with its own
@@ -634,7 +633,7 @@ impl Coordinator {
     /// out `swap_poll`). Also drops cached dimension checks.
     pub fn refresh(&self) {
         if let DimCheck::Registry { cache, .. } = &self.shared.dims {
-            cache.lock().unwrap().clear();
+            lock_unpoisoned(cache).clear();
         }
         self.shared.epoch.fetch_add(1, Ordering::AcqRel);
     }

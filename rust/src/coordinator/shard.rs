@@ -68,9 +68,20 @@ pub fn assign(model: &str, n_shards: usize) -> usize {
     if n_shards <= 1 {
         return 0;
     }
-    (0..n_shards)
-        .max_by_key(|&s| weight(model, s as u64))
-        .expect("non-empty shard range")
+    // Explicit fold instead of max_by_key so the n_shards >= 2 range
+    // needs no "non-empty" panic path (max_by_key returns an Option).
+    // `>=` keeps max_by_key's last-max-wins tie behavior, matching the
+    // independent HRW reimplementation the placement-parity test pins.
+    let mut best = 0usize;
+    let mut best_w = weight(model, 0);
+    for s in 1..n_shards {
+        let w = weight(model, s as u64);
+        if w >= best_w {
+            best = s;
+            best_w = w;
+        }
+    }
+    best
 }
 
 /// One serving lane: ingress + batcher thread + executor thread +

@@ -44,6 +44,7 @@ use crate::registry::{
 };
 use crate::svm::predict::ExactPredictor;
 use crate::svm::SvmModel;
+use crate::util::sync::lock_unpoisoned;
 use crate::Result;
 
 use super::metrics::Metrics;
@@ -238,7 +239,7 @@ impl Prefetcher {
                 while let Ok(id) = rx.recv() {
                     match store.load(&id) {
                         Ok(entry) => {
-                            let mut ready = out.lock().unwrap();
+                            let mut ready = lock_unpoisoned(&out);
                             if ready.len() >= READY_CAP
                                 && !ready.contains_key(&id)
                             {
@@ -274,7 +275,7 @@ impl Prefetcher {
 
     /// Take a decoded entry, if the prefetch completed.
     fn take(&self, id: &ModelId) -> Option<Arc<ModelEntry>> {
-        self.ready.lock().unwrap().remove(id)
+        lock_unpoisoned(&self.ready).remove(id)
     }
 }
 
@@ -558,7 +559,11 @@ fn resolve<'t>(
             }
         }
     }
-    let tenant = tenants.get_mut(model).expect("resident by construction");
+    // Resident by construction (inserted above when absent); the typed
+    // error keeps this path panic-free if that invariant ever breaks.
+    let Some(tenant) = tenants.get_mut(model) else {
+        return Err(format!("tenant '{model}' not resident after load"));
+    };
     tenant.last_used = tick;
     if let Some(store) = store {
         // A completed prefetch swaps in first — atomic from the request
@@ -751,7 +756,13 @@ fn execute(
                 };
                 tenant.prepared = Some(prepared);
             }
-            let prep = tenant.prepared.as_ref().unwrap();
+            // Populated just above when absent; typed error instead of
+            // a panic path if the invariant ever breaks.
+            let Some(prep) = tenant.prepared.as_ref() else {
+                return Err(crate::Error::Other(
+                    "engine buffers missing after prepare".into(),
+                ));
+            };
             match route {
                 Route::Approx => {
                     crate::runtime::EngineApproxPredictor::new(

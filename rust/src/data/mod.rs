@@ -3,6 +3,8 @@
 //! five benchmark datasets (a9a / mnist / ijcnn1 / sensit / epsilon);
 //! see DESIGN.md §4–5 for the substitution rationale.
 
+#![forbid(unsafe_code)]
+
 pub mod dataset;
 pub mod libsvm_format;
 pub mod scale;

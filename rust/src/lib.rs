@@ -163,7 +163,24 @@
 //! synthetic dataset generators matched to the paper's five benchmark
 //! sets ([`data::synth`]), an ANN comparator ([`svm::ann_approx`]), and a
 //! statistics/benchmark harness ([`util::bench`]).
+//!
+//! ## Invariants are machine-checked
+//!
+//! Repo-specific invariants that `clippy` cannot express — every
+//! `unsafe` block justified, every `APPROXRBF_*` environment variable
+//! documented in README's canonical table (see the "Environment
+//! variables" section there), wire/format constants in sync with
+//! `docs/WIRE.md`/`docs/FORMATS.md`, alloc-bomb caps ahead of every
+//! untrusted allocation, and no panic paths in the hot serving modules
+//! — are enforced by the in-tree [`analysis`] pass (`cargo run --bin
+//! arblint`, rule catalog in `docs/ANALYSIS.md`). Every module without
+//! SIMD intrinsics is `#![forbid(unsafe_code)]`; the one exception
+//! ([`linalg::quantblas`]) carries `// SAFETY:` proofs under
+//! `deny(unsafe_op_in_unsafe_fn)`.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod approx;
 pub mod benchsuite;
 pub mod coordinator;

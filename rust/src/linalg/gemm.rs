@@ -10,6 +10,8 @@
 //! * [`gemm_nt_blocked`] — row/col tiling + 8-lane dots + threads
 //!   (paper: BLAS/ATLAS role).
 
+#![forbid(unsafe_code)]
+
 use super::matrix::Mat;
 use super::vecops;
 

@@ -3,6 +3,8 @@
 //! hot paths in [`super::gemm`]/[`super::quadform`] can work on plain
 //! slices.
 
+#![forbid(unsafe_code)]
+
 use crate::{Error, Result};
 
 /// Row-major dense matrix of `f32`.

@@ -3,6 +3,8 @@
 //! chunked evaluators are the SIMD off/on axis; the batched variant
 //! reuses the blocked GEMM for throughput serving.
 
+#![forbid(unsafe_code)]
+
 use super::gemm;
 use super::matrix::Mat;
 use super::vecops;

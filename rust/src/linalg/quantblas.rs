@@ -595,30 +595,37 @@ mod x86 {
         const CHUNK: usize = 16;
         const FLUSH_CHUNKS: usize = 128;
         let chunks = w.len() / CHUNK;
-        let mut acc32 = _mm256_setzero_si256();
-        let mut acc64 = _mm256_setzero_si256();
-        let mut pending = 0usize;
-        for c in 0..chunks {
-            let wp = w.as_ptr().add(c * CHUNK) as *const __m128i;
-            let zp = qz.as_ptr().add(c * CHUNK) as *const __m256i;
-            let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp));
-            let zv = _mm256_loadu_si256(zp);
-            acc32 = _mm256_add_epi32(acc32, _mm256_madd_epi16(wv, zv));
-            pending += 1;
-            if pending == FLUSH_CHUNKS {
-                acc64 = _mm256_add_epi64(acc64, widen_i32x8(acc32));
-                acc32 = _mm256_setzero_si256();
-                pending = 0;
+        // SAFETY: the AVX2 intrinsics are safe to issue because the
+        // caller proved AVX2 at runtime (fn-level contract above); the
+        // unaligned loads stay in bounds because every pointer is
+        // `base + c*CHUNK` with `c < chunks = len/CHUNK`, so the 16
+        // lanes read end at `chunks*CHUNK <= w.len() == qz.len()`.
+        unsafe {
+            let mut acc32 = _mm256_setzero_si256();
+            let mut acc64 = _mm256_setzero_si256();
+            let mut pending = 0usize;
+            for c in 0..chunks {
+                let wp = w.as_ptr().add(c * CHUNK) as *const __m128i;
+                let zp = qz.as_ptr().add(c * CHUNK) as *const __m256i;
+                let wv = _mm256_cvtepi8_epi16(_mm_loadu_si128(wp));
+                let zv = _mm256_loadu_si256(zp);
+                acc32 = _mm256_add_epi32(acc32, _mm256_madd_epi16(wv, zv));
+                pending += 1;
+                if pending == FLUSH_CHUNKS {
+                    acc64 = _mm256_add_epi64(acc64, widen_i32x8(acc32));
+                    acc32 = _mm256_setzero_si256();
+                    pending = 0;
+                }
             }
+            acc64 = _mm256_add_epi64(acc64, widen_i32x8(acc32));
+            let mut lanes = [0i64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc64);
+            let mut total: i64 = lanes.iter().sum();
+            for i in chunks * CHUNK..w.len() {
+                total += i64::from(w[i]) * i64::from(qz[i]);
+            }
+            total
         }
-        acc64 = _mm256_add_epi64(acc64, widen_i32x8(acc32));
-        let mut lanes = [0i64; 4];
-        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc64);
-        let mut total: i64 = lanes.iter().sum();
-        for i in chunks * CHUNK..w.len() {
-            total += i64::from(w[i]) * i64::from(qz[i]);
-        }
-        total
     }
 
     /// Sum 8 i32 lanes into 4 i64 lanes (exact sign extension).
@@ -627,34 +634,47 @@ mod x86 {
     /// Requires AVX2.
     #[target_feature(enable = "avx2")]
     unsafe fn widen_i32x8(v: __m256i) -> __m256i {
-        let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v));
-        let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256(v, 1));
-        _mm256_add_epi64(lo, hi)
+        // SAFETY: register-only AVX2 intrinsics (no memory access);
+        // the caller's AVX2 proof covers the instruction set.
+        unsafe {
+            let lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(v));
+            let hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256(v, 1));
+            _mm256_add_epi64(lo, hi)
+        }
     }
 
     /// f16 dot: F16C converts 8 halves per cycle, FMA accumulates in 8
     /// f32 lanes.
     ///
     /// # Safety
-    /// Requires AVX2 + FMA + F16C.
+    /// Requires AVX2 + FMA + F16C (callers gate on
+    /// [`super::simd_available`]).
     #[target_feature(enable = "avx2,fma,f16c")]
     pub unsafe fn dot_f16_avx2(h: &[u16], z: &[f32]) -> f32 {
         const CHUNK: usize = 8;
         let chunks = h.len() / CHUNK;
-        let mut acc = _mm256_setzero_ps();
-        for c in 0..chunks {
-            let hp = h.as_ptr().add(c * CHUNK) as *const __m128i;
-            let hv = _mm256_cvtph_ps(_mm_loadu_si128(hp));
-            let zv = _mm256_loadu_ps(z.as_ptr().add(c * CHUNK));
-            acc = _mm256_fmadd_ps(hv, zv, acc);
+        // SAFETY: the AVX2/FMA/F16C intrinsics are safe to issue
+        // because the caller proved the features at runtime (fn-level
+        // contract above); the unaligned loads stay in bounds because
+        // every pointer is `base + c*CHUNK` with `c < chunks =
+        // len/CHUNK`, so the 8 lanes read end at `chunks*CHUNK <=
+        // h.len() == z.len()`.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let hp = h.as_ptr().add(c * CHUNK) as *const __m128i;
+                let hv = _mm256_cvtph_ps(_mm_loadu_si128(hp));
+                let zv = _mm256_loadu_ps(z.as_ptr().add(c * CHUNK));
+                acc = _mm256_fmadd_ps(hv, zv, acc);
+            }
+            let mut lanes = [0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+            let mut total: f32 = lanes.iter().sum();
+            for i in chunks * CHUNK..h.len() {
+                total += super::f16_bits_to_f32(h[i]) * z[i];
+            }
+            total
         }
-        let mut lanes = [0f32; 8];
-        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
-        let mut total: f32 = lanes.iter().sum();
-        for i in chunks * CHUNK..h.len() {
-            total += super::f16_bits_to_f32(h[i]) * z[i];
-        }
-        total
     }
 }
 

@@ -25,6 +25,8 @@
 //! tests rely on (the feature map itself is bit-identical everywhere
 //! because it regenerates from the stored seed).
 
+#![forbid(unsafe_code)]
+
 use std::sync::OnceLock;
 
 use crate::{log_info, log_warn};

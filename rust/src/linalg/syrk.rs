@@ -3,6 +3,8 @@
 //! stage (Table 2, t_approx; `M = X D Xᵀ` in the paper's column-major
 //! notation). Loops and Blocked backends mirror the LOOPS vs BLAS axis.
 
+#![forbid(unsafe_code)]
+
 use super::matrix::Mat;
 
 /// Naive: for every SV, rank-1 update of the full d×d matrix.

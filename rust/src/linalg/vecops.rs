@@ -4,6 +4,8 @@
 //! accumulator lanes that LLVM turns into AVX code — the `-march`
 //! compiled equivalent of the paper's hand-enabled vector instructions).
 
+#![forbid(unsafe_code)]
+
 /// Scalar dot product: one accumulator, serial dependency chain.
 /// This is the "SIMD off" evaluator.
 #[inline]

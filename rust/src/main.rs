@@ -24,6 +24,9 @@
 //! approxrbf inspect     --model m.model|--approx m.approx|--arbf m.arbf
 //! ```
 
+#![forbid(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;

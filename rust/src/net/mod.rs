@@ -43,6 +43,8 @@
 //! and a republish hot-swaps tenants mid-stream without dropping
 //! in-flight requests. See `docs/WIRE.md` for the byte-level protocol.
 
+#![forbid(unsafe_code)]
+
 pub mod router;
 pub mod shard_server;
 pub mod wire;

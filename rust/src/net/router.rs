@@ -36,6 +36,7 @@ use crate::coordinator::{
     PredictError, PredictErrorKind, PredictResponse, DEFAULT_MODEL,
 };
 use crate::linalg::Mat;
+use crate::util::sync::lock_unpoisoned;
 use crate::{log_info, log_warn, Error, Result};
 
 use super::wire::{self, Message, WIRE_VERSION};
@@ -97,14 +98,14 @@ struct Link {
 
 impl Link {
     fn alive(&self) -> bool {
-        self.state.lock().unwrap().conn.is_some()
+        lock_unpoisoned(&self.state).conn.is_some()
     }
 
     /// Kill the connection (if any) and fail every in-flight request of
     /// this shard with a typed `Exec` error — fail fast, never hang.
     fn teardown(&self, why: &str) {
         let (pending, had_conn) = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             let had = match st.conn.take() {
                 Some(c) => {
                     let _ = c.shutdown(Shutdown::Both);
@@ -200,7 +201,7 @@ impl Router {
                 .name(format!("approxrbf-net-tender-{}", link.index))
                 .spawn(move || run_tender(link, dims, stop, cfg))
                 .map_err(|e| Error::Other(format!("spawn tender: {e}")))?;
-            inner.tenders.lock().unwrap().push(handle);
+            lock_unpoisoned(&inner.tenders).push(handle);
         }
         // Startup barrier: every shard must come up once.
         let deadline = Instant::now() + inner.config.connect_timeout * 2;
@@ -245,7 +246,7 @@ impl Router {
     /// Model → feature dimension table merged from the shard
     /// handshakes.
     pub fn model_dims(&self) -> HashMap<String, u32> {
-        self.inner.dims.lock().unwrap().clone()
+        lock_unpoisoned(&self.inner.dims).clone()
     }
 
     /// Serving metrics aggregated across every reachable shard: each
@@ -312,7 +313,7 @@ impl RouterInner {
     ) -> std::result::Result<u64, PredictError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mid: ModelId = Arc::from(model);
-        if let Some(&want) = self.dims.lock().unwrap().get(model) {
+        if let Some(&want) = lock_unpoisoned(&self.dims).get(model) {
             if features.len() != want as usize {
                 return Err(PredictError {
                     id,
@@ -338,8 +339,11 @@ impl RouterInner {
                 detail: format!("request encode failed: {e}"),
             },
         })?;
-        let mut st = link.state.lock().unwrap();
-        if st.conn.is_none() {
+        let mut st = lock_unpoisoned(&link.state);
+        // Taking the stream out (and putting it back after a good
+        // write) sidesteps a second `conn` unwrap; the link lock is
+        // held throughout, so no other submitter observes the gap.
+        let Some(mut conn) = st.conn.take() else {
             return Err(PredictError {
                 id,
                 model: mid,
@@ -350,18 +354,16 @@ impl RouterInner {
                     ),
                 },
             });
-        }
+        };
         st.pending.insert(
             id,
             PendingEntry { reply: reply.clone(), model: mid.clone() },
         );
         // Holding the link lock across the write keeps frames atomic on
         // the socket across concurrent submitters.
-        if let Err(e) = st.conn.as_mut().unwrap().write_all(&frame) {
+        if let Err(e) = conn.write_all(&frame) {
             st.pending.remove(&id);
-            if let Some(c) = st.conn.take() {
-                let _ = c.shutdown(Shutdown::Both);
-            }
+            let _ = conn.shutdown(Shutdown::Both);
             return Err(PredictError {
                 id,
                 model: mid,
@@ -373,6 +375,7 @@ impl RouterInner {
                 },
             });
         }
+        st.conn = Some(conn);
         Ok(id)
     }
 
@@ -386,7 +389,7 @@ impl RouterInner {
     ) -> Result<Receiver<T>> {
         let frame = wire::encode_frame(msg)?;
         let (tx, rx) = mpsc::channel();
-        let mut st = link.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&link.state);
         let Some(conn) = st.conn.as_mut() else {
             return Err(Error::Other(format!(
                 "shard {} ({}) unreachable",
@@ -436,7 +439,7 @@ impl RouterInner {
             link.teardown("router shutdown");
         }
         let tenders: Vec<_> =
-            self.tenders.lock().unwrap().drain(..).collect();
+            lock_unpoisoned(&self.tenders).drain(..).collect();
         for t in tenders {
             let _ = t.join();
         }
@@ -542,14 +545,15 @@ fn run_tender(
             Ok((stream, table)) => {
                 backoff = BACKOFF_FLOOR;
                 {
-                    let mut d = dims.lock().unwrap();
+                    let mut d = lock_unpoisoned(&dims);
                     for (id, dim) in table {
                         d.insert(id, dim);
                     }
                 }
                 match stream.try_clone() {
                     Ok(write_half) => {
-                        link.state.lock().unwrap().conn = Some(write_half);
+                        lock_unpoisoned(&link.state).conn =
+                            Some(write_half);
                     }
                     Err(e) => {
                         log_warn!("router: stream clone failed: {e}");
@@ -595,10 +599,7 @@ fn read_loop(
             Message::Response(r) => deliver(link, r.id, Ok(r)),
             Message::Error(e) => {
                 let oob = e.id == 0
-                    && !link
-                        .state
-                        .lock()
-                        .unwrap()
+                    && !lock_unpoisoned(&link.state)
                         .pending
                         .contains_key(&e.id);
                 if oob {
@@ -610,12 +611,8 @@ fn read_loop(
                 }
             }
             Message::Metrics(states) => {
-                let waiter = link
-                    .state
-                    .lock()
-                    .unwrap()
-                    .metrics_waiters
-                    .pop_front();
+                let waiter =
+                    lock_unpoisoned(&link.state).metrics_waiters.pop_front();
                 match waiter {
                     Some(tx) => {
                         let _ = tx.send(states);
@@ -628,7 +625,7 @@ fn read_loop(
             }
             Message::Ack => {
                 let waiter =
-                    link.state.lock().unwrap().ack_waiters.pop_front();
+                    lock_unpoisoned(&link.state).ack_waiters.pop_front();
                 match waiter {
                     Some(tx) => {
                         let _ = tx.send(());
@@ -652,7 +649,7 @@ fn read_loop(
 
 /// Hand a completion to whoever is waiting on its request id.
 fn deliver(link: &Link, id: u64, completion: Completion) {
-    let entry = link.state.lock().unwrap().pending.remove(&id);
+    let entry = lock_unpoisoned(&link.state).pending.remove(&id);
     match entry {
         Some(e) => {
             let _ = e.reply.send(completion);
@@ -715,7 +712,7 @@ impl RemoteClient {
     /// Receive this client's next completion (any order across
     /// shards). `None` on timeout.
     pub fn recv(&self, timeout: Duration) -> Option<Completion> {
-        self.reply_rx.lock().unwrap().recv_timeout(timeout).ok()
+        lock_unpoisoned(&self.reply_rx).recv_timeout(timeout).ok()
     }
 
     /// Open a [`RemoteSession`]: a scoped group of submissions with its

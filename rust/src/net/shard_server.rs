@@ -37,6 +37,7 @@ use crate::coordinator::{
     Completion, Coordinator, PredictError, PredictErrorKind,
 };
 use crate::registry::ModelStore;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 use crate::{log_info, log_warn, Error, Result};
 
 use super::wire::{self, Message, WIRE_VERSION};
@@ -81,15 +82,16 @@ impl InFlight {
     /// Block until a slot frees up; `false` if shutdown was requested
     /// while waiting.
     fn acquire(&self, max: usize, shutdown: &AtomicBool) -> bool {
-        let mut n = self.n.lock().unwrap();
+        let mut n = lock_unpoisoned(&self.n);
         while *n >= max {
             if shutdown.load(Ordering::Relaxed) {
                 return false;
             }
-            let (guard, _) = self
-                .cv
-                .wait_timeout(n, Duration::from_millis(100))
-                .unwrap();
+            let (guard, _) = wait_timeout_unpoisoned(
+                &self.cv,
+                n,
+                Duration::from_millis(100),
+            );
             n = guard;
         }
         *n += 1;
@@ -97,7 +99,7 @@ impl InFlight {
     }
 
     fn release(&self) {
-        let mut n = self.n.lock().unwrap();
+        let mut n = lock_unpoisoned(&self.n);
         *n = n.saturating_sub(1);
         self.cv.notify_one();
     }
@@ -190,7 +192,7 @@ impl ShardServer {
                             let _ = stream
                                 .set_read_timeout(Some(config.read_timeout));
                             if let Ok(clone) = stream.try_clone() {
-                                a_conns.lock().unwrap().push(clone);
+                                lock_unpoisoned(&a_conns).push(clone);
                             }
                             let coord = a_coord.clone();
                             let store = store.clone();
@@ -205,7 +207,7 @@ impl ShardServer {
                                 });
                             match h {
                                 Ok(h) => {
-                                    a_handlers.lock().unwrap().push(h)
+                                    lock_unpoisoned(&a_handlers).push(h)
                                 }
                                 Err(e) => log_warn!(
                                     "shard server: spawn failed: {e}"
@@ -259,11 +261,11 @@ impl ShardServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        for s in self.conns.lock().unwrap().drain(..) {
+        for s in lock_unpoisoned(&self.conns).drain(..) {
             let _ = s.shutdown(Shutdown::Both);
         }
         let handlers: Vec<_> =
-            self.handlers.lock().unwrap().drain(..).collect();
+            lock_unpoisoned(&self.handlers).drain(..).collect();
         for h in handlers {
             let _ = h.join();
         }
@@ -387,7 +389,7 @@ fn handle_connection(
                 }
                 match coord.submit_with(&model, features, &reply_tx) {
                     Ok(coord_id) => {
-                        let mut st = state.lock().unwrap();
+                        let mut st = lock_unpoisoned(&state);
                         if let Some(pos) = st
                             .orphans
                             .iter()
@@ -458,7 +460,7 @@ fn run_pump(
         match reply_rx.recv_timeout(Duration::from_millis(100)) {
             Ok(c) => {
                 let coord_id = completion_id(&c);
-                let mut st = state.lock().unwrap();
+                let mut st = lock_unpoisoned(&state);
                 match st.map.remove(&coord_id) {
                     Some(wire_id) => {
                         drop(st);

@@ -558,11 +558,14 @@ fn parse_header(header: &[u8; FRAME_HEADER_LEN]) -> Result<(u16, u32, usize)> {
             WIRE_MAGIC
         )));
     }
-    let kind = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    let kind = u16::from_le_bytes([header[4], header[5]]);
     // header[6..8] is reserved; tolerated on read (forward compat),
     // always written 0 — same contract as .arbf reserved bytes.
-    let crc = u32::from_le_bytes(header[8..12].try_into().unwrap());
-    let len = u32::from_le_bytes(header[12..16].try_into().unwrap()) as usize;
+    let crc =
+        u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+    let len =
+        u32::from_le_bytes([header[12], header[13], header[14], header[15]])
+            as usize;
     if len > MAX_FRAME_PAYLOAD {
         return Err(Error::Corrupt(format!(
             "frame payload length {len} exceeds cap {MAX_FRAME_PAYLOAD}"
@@ -581,9 +584,9 @@ pub fn decode_frame(bytes: &[u8]) -> Result<(Message, usize)> {
             bytes.len()
         )));
     }
-    let header: &[u8; FRAME_HEADER_LEN] =
-        bytes[..FRAME_HEADER_LEN].try_into().unwrap();
-    let (kind, crc, len) = parse_header(header)?;
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    header.copy_from_slice(&bytes[..FRAME_HEADER_LEN]);
+    let (kind, crc, len) = parse_header(&header)?;
     let total = FRAME_HEADER_LEN + len;
     if bytes.len() < total {
         return Err(Error::Corrupt(format!(

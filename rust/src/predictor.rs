@@ -38,6 +38,8 @@
 //! behind a stable surface. Callers that want trait objects can: the
 //! trait is object-safe (`&dyn Predictor` works).
 
+#![forbid(unsafe_code)]
+
 use crate::linalg::quantblas;
 use crate::linalg::rffmap;
 use crate::linalg::KernelArm;

@@ -37,6 +37,8 @@
 //!   and [`ModelStore::warm_where`] lets each shard pre-decode just
 //!   the tenants it owns.
 
+#![forbid(unsafe_code)]
+
 pub mod binfmt;
 pub mod quant;
 pub mod store;

@@ -8,6 +8,8 @@
 //! feature, so tier-1 builds work on machines without PJRT; the
 //! artifact [`Manifest`] stays available unconditionally for tooling.
 
+#![forbid(unsafe_code)]
+
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;

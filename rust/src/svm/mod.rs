@@ -4,6 +4,8 @@
 //! model format, and the ANN decision-function comparator of Kang & Cho
 //! [15] that the paper benchmarks against in §4.3.
 
+#![forbid(unsafe_code)]
+
 pub mod ann_approx;
 pub mod kernel;
 pub mod lssvm;

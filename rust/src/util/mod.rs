@@ -2,6 +2,8 @@
 //! PRNG, JSON, CLI parsing, statistics, benchmark harness, logging and a
 //! lightweight property-testing helper.
 
+#![forbid(unsafe_code)]
+
 pub mod bench;
 pub mod cli;
 pub mod crc32;
@@ -10,6 +12,7 @@ pub mod logging;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 
 pub use bench::{BenchConfig, Bencher, Sample};
 pub use cli::Args;

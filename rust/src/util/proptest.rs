@@ -8,12 +8,17 @@
 
 /// Run `n` randomized cases. The closure receives a fresh deterministic
 /// [`crate::util::Rng`] per case. Panics propagate with case context.
+/// `APPROXRBF_PROP_CASES` caps `n` when set (the CI Miri leg sets it:
+/// each interpreted case costs orders of magnitude more than native,
+/// and UB detection doesn't need many cases — it needs coverage of
+/// each code path, which the first case or two already gives).
 pub fn run_cases<F: FnMut(&mut crate::util::Rng)>(
     name: &str,
     n: usize,
     base_seed: u64,
     mut body: F,
 ) {
+    let n = case_cap().map_or(n, |cap| n.min(cap));
     for case in 0..n {
         let seed = base_seed
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
@@ -29,6 +34,14 @@ pub fn run_cases<F: FnMut(&mut crate::util::Rng)>(
             std::panic::resume_unwind(e);
         }
     }
+}
+
+/// `APPROXRBF_PROP_CASES` as a positive case cap, if set and valid.
+fn case_cap() -> Option<usize> {
+    std::env::var("APPROXRBF_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&cap| cap >= 1)
 }
 
 /// Property-test macro: `prop_cases!("name", 32, |rng| { ... });`

@@ -1,0 +1,103 @@
+//! Poison-tolerant synchronization wrappers for the serving plane.
+//!
+//! `std`'s `Mutex`/`RwLock`/`Condvar` return a `PoisonError` when some
+//! *other* thread panicked while holding the lock. Everywhere in the
+//! serving plane the guarded state is kept structurally valid at every
+//! await point (bounded queues, counters, connection slots, policy
+//! maps), so the least-bad response to poison is to keep serving with
+//! the recovered guard instead of cascading the original panic through
+//! every lane, tender and pump thread — one crashed worker must not
+//! take the plane down. These wrappers centralize that policy (and the
+//! reasoning), which lets `arblint`'s no-panic rule forbid bare
+//! `.unwrap()` on lock results in `coordinator/`, `net/` and
+//! `predictor.rs` outright.
+//!
+//! The functions are thin: `lock_unpoisoned(&m)` is
+//! `m.lock().unwrap_or_else(PoisonError::into_inner)`.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a panicking holder poisoned it.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar wait, recovering the reacquired guard from poison.
+pub fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard)
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Condvar timed wait, recovering the reacquired guard from poison.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_after_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_poison() {
+        let l = Arc::new(RwLock::new(1u32));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        *write_unpoisoned(&l) = 2;
+        assert_eq!(*read_unpoisoned(&l), 2);
+    }
+
+    #[test]
+    fn condvar_wait_timeout_returns_guard() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (g, timeout) =
+            wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(timeout.timed_out());
+        assert!(!*g);
+    }
+}
