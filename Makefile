@@ -6,7 +6,7 @@ CARGO_DIR := rust
 # NIGHTLY_TOOLCHAIN in .github/workflows/ci.yml).
 NIGHTLY ?= nightly-2025-05-20
 
-.PHONY: tier1 fmt lint lint-arblint build test test-sharded test-quant test-rff test-kernel-blocked test-remote tsan miri bench-smoke doc check-pjrt artifacts
+.PHONY: tier1 fmt lint lint-arblint build test test-sharded test-quant test-rff test-kernel-blocked test-remote test-chaos tsan miri bench-smoke doc check-pjrt artifacts
 
 tier1: fmt lint lint-arblint build test test-sharded test-quant test-rff
 
@@ -65,6 +65,16 @@ test-remote:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_REMOTE=1 \
 		cargo test -q --test remote_e2e -- --test-threads=1
 
+# Mirror the CI tier1-chaos job (one seed of its matrix): the serving
+# plane behind deterministic fault proxies — delays, corruption, cuts,
+# black holes, flap partitions, supervisor restarts. Override the seed
+# with CHAOS_SEED=<u64> to replay a CI failure (docs/TESTING.md).
+CHAOS_SEED ?= 1
+test-chaos:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_CHAOS=1 \
+		APPROXRBF_CHAOS_SEED=$(CHAOS_SEED) \
+		cargo test -q --test chaos_e2e -- --test-threads=1
+
 # Mirror the CI tsan job: ThreadSanitizer over the genuinely concurrent
 # suites (sharded coordinator, then remote TCP plane). -Zbuild-std
 # instruments std itself, without which TSan reports false races inside
@@ -89,7 +99,7 @@ miri:
 		APPROXRBF_PROP_CASES=2 APPROXRBF_QUANT_KERNEL=scalar \
 		APPROXRBF_RFF_KERNEL=scalar cargo +$(NIGHTLY) miri test --lib \
 		util::crc32 util::rng registry::quant linalg::rffmap \
-		linalg::quantblas
+		linalg::quantblas net::wire
 
 # Mirror the CI bench-smoke job: short deterministic serving_bench
 # sweep; BENCH_quant.json's kernel_arms rows must show int8

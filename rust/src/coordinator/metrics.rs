@@ -171,8 +171,27 @@ pub struct MetricsSnapshot {
     /// How many shard sinks were fanned into this snapshot (1 for an
     /// unsharded coordinator).
     pub shard_count: usize,
+    /// Per-shard connection-lifecycle health, sorted by shard index.
+    /// Empty for an in-process plane (there are no connections to
+    /// lose); a network `Router` fills `reconnects` from its link
+    /// ledgers and a `serve-plane` supervisor merges `restarts` via
+    /// [`MetricsSnapshot::record_restarts`]. Operators see flapping
+    /// here without digging through logs.
+    pub shard_health: Vec<ShardHealth>,
     /// Breakdown keyed by model id, sorted by id.
     pub per_model: Vec<ModelMetricsSnapshot>,
+}
+
+/// Connection/process lifecycle counters for one shard of a plane.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardHealth {
+    /// Shard index (placement order).
+    pub shard: usize,
+    /// Times the router re-established this shard's connection after
+    /// losing it (0 on a plane that never flapped).
+    pub reconnects: u64,
+    /// Times a supervisor restarted this shard's process.
+    pub restarts: u64,
 }
 
 fn bucket_of(lat: Duration) -> usize {
@@ -355,6 +374,9 @@ impl Metrics {
             queue_depth: merged.queue_depth,
             uptime_s,
             shard_count: shards.len().max(1),
+            // Sinks carry no lifecycle info; the router/supervisor
+            // layer fills this in after aggregation.
+            shard_health: Vec::new(),
             per_model,
         }
     }
@@ -566,7 +588,50 @@ impl MetricsSnapshot {
                 ),
             ),
             ("models", Json::Obj(models)),
+            (
+                "shard_health",
+                Json::Arr(
+                    self.shard_health
+                        .iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("shard", Json::num(h.shard as f64)),
+                                (
+                                    "reconnects",
+                                    Json::num(h.reconnects as f64),
+                                ),
+                                (
+                                    "restarts",
+                                    Json::num(h.restarts as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
+    }
+
+    /// Merge supervisor restart counters into the per-shard health
+    /// rows (`restarts[i]` is shard `i`'s restart count). Rows are
+    /// created for shards the router has no link ledger for, so a
+    /// restart is never dropped; existing `reconnects` are kept.
+    pub fn record_restarts(&mut self, restarts: &[u64]) {
+        for (shard, &n) in restarts.iter().enumerate() {
+            match self
+                .shard_health
+                .iter_mut()
+                .find(|h| h.shard == shard)
+            {
+                Some(row) => row.restarts += n,
+                None => self.shard_health.push(ShardHealth {
+                    shard,
+                    reconnects: 0,
+                    restarts: n,
+                }),
+            }
+        }
+        self.shard_health.sort_by_key(|h| h.shard);
     }
 
     /// Render the per-model breakdown as an aligned text table (used by
@@ -574,9 +639,19 @@ impl MetricsSnapshot {
     /// `shard` column shows which executor lane(s) served the model.
     pub fn per_model_table(&self) -> String {
         let mut out = format!(
-            "plane: shards={} queue_depth={} uptime={:.1}s\n",
+            "plane: shards={} queue_depth={} uptime={:.1}s",
             self.shard_count, self.queue_depth, self.uptime_s
         );
+        if !self.shard_health.is_empty() {
+            let reconnects: u64 =
+                self.shard_health.iter().map(|h| h.reconnects).sum();
+            let restarts: u64 =
+                self.shard_health.iter().map(|h| h.restarts).sum();
+            out.push_str(&format!(
+                " reconnects={reconnects} restarts={restarts}"
+            ));
+        }
+        out.push('\n');
         out.push_str(
             "model                    substrate shard  served   approx    \
              exact  oob drop  mean lat\n",
@@ -824,5 +899,50 @@ mod tests {
             (BUCKETS + 5) as u64
         );
         assert_eq!(rebuilt.histogram[BUCKETS - 1], 6);
+    }
+
+    #[test]
+    fn shard_health_starts_empty_and_merges_restarts() {
+        let m = Metrics::new();
+        let mut s = m.snapshot();
+        assert!(s.shard_health.is_empty());
+        // A router-style row plus supervisor restarts for two shards.
+        s.shard_health.push(ShardHealth {
+            shard: 1,
+            reconnects: 3,
+            restarts: 0,
+        });
+        s.record_restarts(&[2, 1]);
+        assert_eq!(
+            s.shard_health,
+            vec![
+                ShardHealth { shard: 0, reconnects: 0, restarts: 2 },
+                ShardHealth { shard: 1, reconnects: 3, restarts: 1 },
+            ]
+        );
+        // Merging again accumulates rather than overwrites.
+        s.record_restarts(&[0, 4]);
+        assert_eq!(s.shard_health[1].restarts, 5);
+    }
+
+    #[test]
+    fn shard_health_renders_in_table_and_json() {
+        let m = Metrics::new();
+        let a = mid("default");
+        m.record_batch(&a, Route::Approx, 2, "maclaurin");
+        let mut s = m.snapshot();
+        // No health rows: the plane header stays as before.
+        assert!(!s.per_model_table().contains("reconnects="));
+        s.shard_health.push(ShardHealth {
+            shard: 0,
+            reconnects: 2,
+            restarts: 1,
+        });
+        let table = s.per_model_table();
+        assert!(table.contains("reconnects=2 restarts=1"), "{table}");
+        let json = s.to_json().to_string_compact();
+        assert!(json.contains("\"shard_health\""), "{json}");
+        assert!(json.contains("\"reconnects\""), "{json}");
+        assert!(json.contains("\"restarts\""), "{json}");
     }
 }

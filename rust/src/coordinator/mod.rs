@@ -72,7 +72,7 @@ pub mod worker;
 
 pub use metrics::{
     Metrics, MetricsSnapshot, MetricsState, ModelMetricsSnapshot,
-    ModelMetricsState, WelfordState,
+    ModelMetricsState, ShardHealth, WelfordState,
 };
 pub use policy::TenantPolicy;
 pub use request::{

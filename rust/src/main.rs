@@ -18,6 +18,7 @@
 //!                       [--tenant-max-batch N] [--tenant-max-wait-us N]
 //!                       [--resident-hint N] [--drift-tol T] [--shards N]
 //! approxrbf serve-shard --listen ADDR --store dir [--shards N]
+//! approxrbf serve-plane --shards N --store dir [--lanes N]
 //! approxrbf route       --shards ADDR,ADDR... [--store dir]
 //! approxrbf bench       table1|table2|table3|fig1|ablations|ann|all
 //!                       [--scale full|quick] [--artifacts artifacts]
@@ -40,7 +41,10 @@ use approxrbf::coordinator::{
 };
 use approxrbf::data::{libsvm_format, SynthProfile};
 use approxrbf::linalg::MathBackend;
-use approxrbf::net::{Router, RouterConfig, ShardServer, ShardServerConfig};
+use approxrbf::net::{
+    Router, RouterConfig, ShardServer, ShardServerConfig, Supervisor,
+    SupervisorConfig,
+};
 use approxrbf::registry::{
     binfmt, ModelStore, PayloadKind, PublishOptions, Substrate,
 };
@@ -72,6 +76,7 @@ fn main() {
         "bound-check" => cmd_bound_check(&args),
         "serve" => cmd_serve(&args),
         "serve-shard" => cmd_serve_shard(&args),
+        "serve-plane" => cmd_serve_plane(&args),
         "route" => cmd_route(&args),
         "registry" => cmd_registry(&args),
         "bench" => cmd_bench(&args),
@@ -109,6 +114,10 @@ fn usage() -> String {
                serve-shard expose a registry coordinator over TCP\n              \
                (--listen 127.0.0.1:7070 --store dir [--shards N]\n               \
                [--shard-id I] [--drift-tol T])\n  \
+               serve-plane supervise N serve-shard processes\n              \
+               (--shards N --store dir [--lanes N] [--policy P]\n               \
+               [--drift-tol T]; health-checks over the wire,\n               \
+               restarts crashed shards with capped backoff)\n  \
                route       rendezvous-route tenants over shard servers\n              \
                (--shards HOST:PORT,HOST:PORT… [--requests N])\n  \
                bench       regenerate the paper's tables/figures\n  \
@@ -369,6 +378,62 @@ fn cmd_serve_shard(args: &Args) -> Result<()> {
     let _ = std::io::stdout().flush();
     loop {
         std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+/// `serve-plane`: supervise N `serve-shard` processes — spawn them on
+/// ephemeral loopback ports, health-check over the wire, restart
+/// crashes with capped backoff on pinned addresses. Runs until
+/// killed; prints the address list routers should connect to.
+fn cmd_serve_plane(args: &Args) -> Result<()> {
+    let shards = args.get_usize("shards", 2)?;
+    let store = args.get_or("store", "registry").to_string();
+    let lanes = args.get_usize("lanes", 1)?;
+    let binary = std::env::current_exe().map_err(Error::Io)?;
+    let mut config = SupervisorConfig {
+        shards,
+        store: store.clone().into(),
+        binary,
+        lanes,
+        ..SupervisorConfig::default()
+    };
+    if let Some(p) = args.get("policy") {
+        config.policy = Some(p.to_string());
+    }
+    if let Some(s) = args.get("drift-tol") {
+        let tol = s.parse::<f32>().map_err(|_| {
+            Error::InvalidArg(format!("bad --drift-tol '{s}'"))
+        })?;
+        config.drift_tol = Some(tol);
+    }
+    let supervisor = Supervisor::start(config)?;
+    let addrs = supervisor.addrs();
+    // Orchestrators scrape this line, mirroring the serve-shard
+    // banner contract.
+    println!(
+        "plane: {shards} shard(s) over {store} serving on {}",
+        addrs.join(",")
+    );
+    println!("route with: approxrbf route --shards {}", addrs.join(","));
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+    let mut last_restarts = vec![0u64; shards];
+    loop {
+        std::thread::sleep(Duration::from_secs(5));
+        let restarts = supervisor.restarts();
+        for (shard, (&now, last)) in restarts
+            .iter()
+            .zip(last_restarts.iter_mut())
+            .enumerate()
+        {
+            if now > *last {
+                println!(
+                    "plane: shard {shard} restarted ({now} total)"
+                );
+                let _ = std::io::stdout().flush();
+                *last = now;
+            }
+        }
     }
 }
 

@@ -1,0 +1,806 @@
+//! faultnet — deterministic TCP fault injection for the serving
+//! tier.
+//!
+//! [`FaultProxy`] is an in-process TCP relay that sits between a
+//! [`Router`](super::Router) and a [`ShardServer`](super::ShardServer)
+//! and injects network faults on a schedule that is a pure function
+//! of a u64 seed: forwarding delays, single-bit byte corruption (the
+//! ARBW frame CRC must catch it), mid-stream cuts (mid-frame
+//! truncation + reset from the peer's point of view), bounded
+//! black-hole stalls, and flap partitions that refuse reconnection
+//! attempts. Inbound connections are numbered in accept order, and
+//! connection `k` draws its schedule from `Rng::new(seed).fork(k)`
+//! with a fixed draw order — the schedule does not depend on timing,
+//! thread interleaving, or which fault classes are enabled, so
+//! replaying a seed replays the faults.
+//!
+//! A [`FaultStats`] ledger counts what was actually injected, so a
+//! chaos test can assert that the fault it is pinning invariants
+//! against really fired, instead of silently passing on a schedule
+//! that never triggered.
+//!
+//! The proxy never parses ARBW frames; it works on the raw byte
+//! stream. Fault offsets start at [`FaultSpec::min_offset`] bytes
+//! into a connection (default: safely past the Hello/HelloAck
+//! handshake), so a plane can always finish its startup barrier
+//! before the weather turns.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::router::sleep_interruptible;
+use crate::util::sync::lock_unpoisoned;
+use crate::util::Rng;
+use crate::{log_info, log_warn, Error, Result};
+
+/// Which fault classes a [`FaultPlan`] injects, and how hard. The
+/// default is a fully transparent proxy (every class off); the
+/// [`FaultPlan`] constructors enable one class each, which is how the
+/// chaos suite isolates invariants per class.
+#[derive(Clone, Debug)]
+pub struct FaultSpec {
+    /// Per-chunk probability of pausing the forwarder before
+    /// relaying (0.0 disables delay injection).
+    pub delay_chance: f64,
+    /// Upper bound on one injected delay; the actual pause is drawn
+    /// uniformly from `[1ms, max_delay]`.
+    pub max_delay: Duration,
+    /// Flip one scheduled bit of one scheduled byte per connection.
+    pub corrupt: bool,
+    /// Sever the connection once a scheduled byte offset is reached,
+    /// truncating whatever frame is in flight.
+    pub cut: bool,
+    /// Stop forwarding at a scheduled byte offset (black hole), hold
+    /// for a bounded stall drawn from `[max_stall/2, max_stall]`,
+    /// then sever.
+    pub black_hole: bool,
+    /// Upper bound on one black-hole stall.
+    pub max_stall: Duration,
+    /// Flap partition: refuse this many reconnection attempts
+    /// (connections `1..=flap_refusals`) before accepting again.
+    /// Connection 0 is accepted and cut at its scheduled offset to
+    /// start the flap.
+    pub flap_refusals: u32,
+    /// Byte offsets below this are never faulted, so the ARBW
+    /// handshake always completes.
+    pub min_offset: u64,
+    /// Fault offsets are drawn from `[min_offset, min_offset + span)`.
+    pub offset_span: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            delay_chance: 0.0,
+            max_delay: Duration::from_millis(25),
+            corrupt: false,
+            cut: false,
+            black_hole: false,
+            max_stall: Duration::from_millis(600),
+            flap_refusals: 0,
+            min_offset: 512,
+            offset_span: 4096,
+        }
+    }
+}
+
+/// A seeded fault schedule. `FaultPlan { seed, spec }` is the entire
+/// state: per-connection schedules are regenerated on demand from the
+/// seed, never stored, so two proxies built from the same plan inject
+/// identical faults.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, spec: FaultSpec) -> FaultPlan {
+        FaultPlan { seed, spec }
+    }
+
+    /// Transparent relay: no faults, but the ledger still counts
+    /// connections and bytes.
+    pub fn clean(seed: u64) -> FaultPlan {
+        FaultPlan::new(seed, FaultSpec::default())
+    }
+
+    /// Forwarding delays only — traffic is slowed, never damaged.
+    pub fn delays(seed: u64) -> FaultPlan {
+        let spec = FaultSpec {
+            delay_chance: 0.15,
+            ..FaultSpec::default()
+        };
+        FaultPlan::new(seed, spec)
+    }
+
+    /// One flipped bit per connection; the receiver's CRC must turn
+    /// it into a typed `Corrupt` teardown.
+    pub fn corruption(seed: u64) -> FaultPlan {
+        let spec = FaultSpec { corrupt: true, ..FaultSpec::default() };
+        FaultPlan::new(seed, spec)
+    }
+
+    /// Mid-stream cuts: truncates a frame in flight and resets the
+    /// connection.
+    pub fn cuts(seed: u64) -> FaultPlan {
+        let spec = FaultSpec { cut: true, ..FaultSpec::default() };
+        FaultPlan::new(seed, spec)
+    }
+
+    /// Bounded black-hole stalls followed by a sever.
+    pub fn black_hole(seed: u64) -> FaultPlan {
+        let spec = FaultSpec {
+            black_hole: true,
+            ..FaultSpec::default()
+        };
+        FaultPlan::new(seed, spec)
+    }
+
+    /// Flap partition: cut connection 0, refuse the next `refusals`
+    /// attempts (driving the router's backoff ladder), then accept.
+    pub fn flap(seed: u64, refusals: u32) -> FaultPlan {
+        let spec = FaultSpec {
+            cut: true,
+            flap_refusals: refusals,
+            // Keep the cut early so modest warm-up traffic reaches it.
+            offset_span: 1536,
+            ..FaultSpec::default()
+        };
+        FaultPlan::new(seed, spec)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// The schedule for inbound connection number `conn` (accept
+    /// order, 0-based). Every parameter is drawn in a fixed canonical
+    /// order regardless of which classes are enabled, so enabling a
+    /// class never shifts another class's draws.
+    fn schedule_for(&self, conn: u64) -> ConnSchedule {
+        let spec = &self.spec;
+        let mut rng = Rng::new(self.seed).fork(conn);
+        let span = spec.offset_span.max(1) as usize;
+        // Canonical draw order: delay stream, corrupt, cut, stall.
+        let delay_seed = rng.next_u64();
+        let corrupt_at = spec.min_offset + rng.below(span) as u64;
+        let corrupt_bit = rng.below(8) as u8;
+        let corrupt_dir = dir_from(rng.chance(0.5));
+        let cut_at = spec.min_offset + rng.below(span) as u64;
+        let cut_dir = dir_from(rng.chance(0.5));
+        let stall_at = spec.min_offset + rng.below(span) as u64;
+        let stall_dir = dir_from(rng.chance(0.5));
+        let stall_ms = spec.max_stall.as_millis().max(2) as u64;
+        let stall_for = Duration::from_millis(
+            stall_ms / 2 + rng.below((stall_ms / 2).max(1) as usize) as u64,
+        );
+
+        let flapping = spec.flap_refusals > 0;
+        let refuse =
+            flapping && conn >= 1 && conn <= u64::from(spec.flap_refusals);
+        // Under a flap plan only connection 0 is cut; once the
+        // partition heals, traffic must flow clean again.
+        let cut_on = spec.cut && (!flapping || conn == 0);
+        ConnSchedule {
+            refuse,
+            delay_chance: spec.delay_chance,
+            max_delay: spec.max_delay,
+            delay_seed,
+            corrupt: spec
+                .corrupt
+                .then_some((corrupt_at, corrupt_bit, corrupt_dir)),
+            cut: cut_on.then_some((cut_at, cut_dir)),
+            stall: spec
+                .black_hole
+                .then_some((stall_at, stall_for, stall_dir)),
+        }
+    }
+}
+
+/// Direction of one forwarder inside a proxied connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Dir {
+    /// Router → shard bytes.
+    ClientToServer,
+    /// Shard → router bytes.
+    ServerToClient,
+}
+
+fn dir_from(server_to_client: bool) -> Dir {
+    if server_to_client {
+        Dir::ServerToClient
+    } else {
+        Dir::ClientToServer
+    }
+}
+
+/// Fully-drawn schedule for one connection. Byte-offset faults carry
+/// the direction whose byte stream they apply to.
+#[derive(Clone, Debug)]
+struct ConnSchedule {
+    refuse: bool,
+    delay_chance: f64,
+    max_delay: Duration,
+    delay_seed: u64,
+    corrupt: Option<(u64, u8, Dir)>,
+    cut: Option<(u64, Dir)>,
+    stall: Option<(u64, Duration, Dir)>,
+}
+
+/// What a proxy actually injected — a snapshot of the live ledger.
+/// Chaos tests assert on these counters so a schedule that never
+/// triggered cannot produce a vacuous green.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Inbound connections accepted (including refused ones).
+    pub connections: u64,
+    /// Connections dropped before relaying (flap partition).
+    pub refused: u64,
+    /// Forwarding delays injected.
+    pub delays: u64,
+    /// Bytes whose scheduled bit was flipped.
+    pub corrupted: u64,
+    /// Connections severed at a scheduled cut offset.
+    pub cuts: u64,
+    /// Black-hole stalls held (each ends in a sever).
+    pub stalls: u64,
+    /// Bytes relayed untouched, both directions combined.
+    pub bytes_forwarded: u64,
+}
+
+/// Live atomic counters shared by the accept loop and forwarders.
+#[derive(Debug, Default)]
+struct Ledger {
+    connections: AtomicU64,
+    refused: AtomicU64,
+    delays: AtomicU64,
+    corrupted: AtomicU64,
+    cuts: AtomicU64,
+    stalls: AtomicU64,
+    bytes_forwarded: AtomicU64,
+}
+
+impl Ledger {
+    fn snapshot(&self) -> FaultStats {
+        FaultStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            refused: self.refused.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            corrupted: self.corrupted.load(Ordering::Relaxed),
+            cuts: self.cuts.load(Ordering::Relaxed),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            bytes_forwarded: self.bytes_forwarded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Deterministic fault-injecting TCP relay. Listens on an ephemeral
+/// loopback port ([`FaultProxy::addr`]); every accepted connection is
+/// relayed to `target` through two forwarder threads that apply the
+/// connection's [`FaultPlan`] schedule.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    ledger: Arc<Ledger>,
+    stop: Arc<AtomicBool>,
+    accept: Mutex<Option<JoinHandle<()>>>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl FaultProxy {
+    /// Bind an ephemeral loopback listener and start relaying to
+    /// `target` under `plan`.
+    pub fn spawn(target: SocketAddr, plan: FaultPlan) -> Result<FaultProxy> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").map_err(Error::Io)?;
+        let addr = listener.local_addr().map_err(Error::Io)?;
+        listener.set_nonblocking(true).map_err(Error::Io)?;
+        let ledger = Arc::new(Ledger::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers = Arc::new(Mutex::new(Vec::new()));
+        let handle = {
+            let ledger = Arc::clone(&ledger);
+            let stop = Arc::clone(&stop);
+            let workers = Arc::clone(&workers);
+            std::thread::Builder::new()
+                .name(format!("faultnet-{}", addr.port()))
+                .spawn(move || {
+                    run_accept(listener, target, plan, ledger, stop, workers)
+                })
+                .map_err(Error::Io)?
+        };
+        log_info!(
+            "faultnet: proxy on {} -> {} (seed pinned per plan)",
+            addr,
+            target
+        );
+        Ok(FaultProxy {
+            addr,
+            ledger,
+            stop,
+            accept: Mutex::new(Some(handle)),
+            workers,
+        })
+    }
+
+    /// Address clients should dial instead of the target's.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the injection ledger.
+    pub fn stats(&self) -> FaultStats {
+        self.ledger.snapshot()
+    }
+
+    /// Stop accepting, sever every relay, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = lock_unpoisoned(&self.accept).take() {
+            let _ = h.join();
+        }
+        let drained: Vec<JoinHandle<()>> =
+            lock_unpoisoned(&self.workers).drain(..).collect();
+        for h in drained {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_accept(
+    listener: TcpListener,
+    target: SocketAddr,
+    plan: FaultPlan,
+    ledger: Arc<Ledger>,
+    stop: Arc<AtomicBool>,
+    workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut conn_index: u64 = 0;
+    while !stop.load(Ordering::Relaxed) {
+        let client = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            Err(e) => {
+                log_warn!("faultnet: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+        };
+        let sched = plan.schedule_for(conn_index);
+        conn_index += 1;
+        ledger.connections.fetch_add(1, Ordering::Relaxed);
+        if sched.refuse {
+            ledger.refused.fetch_add(1, Ordering::Relaxed);
+            let _ = client.shutdown(Shutdown::Both);
+            continue;
+        }
+        let server = match TcpStream::connect_timeout(
+            &target,
+            Duration::from_secs(2),
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                log_warn!("faultnet: target {target} unreachable: {e}");
+                let _ = client.shutdown(Shutdown::Both);
+                continue;
+            }
+        };
+        let _ = client.set_nodelay(true);
+        let _ = server.set_nodelay(true);
+        let pair = match (client.try_clone(), server.try_clone()) {
+            (Ok(c2), Ok(s2)) => Some((c2, s2)),
+            _ => None,
+        };
+        let Some((client_rd, server_rd)) = pair else {
+            log_warn!("faultnet: could not clone relay sockets");
+            let _ = client.shutdown(Shutdown::Both);
+            let _ = server.shutdown(Shutdown::Both);
+            continue;
+        };
+        let sched = Arc::new(sched);
+        let mut spawned = Vec::new();
+        let legs = [
+            (Dir::ClientToServer, client_rd, server),
+            (Dir::ServerToClient, server_rd, client),
+        ];
+        for (dir, src, dst) in legs {
+            let sched = Arc::clone(&sched);
+            let ledger = Arc::clone(&ledger);
+            let stop = Arc::clone(&stop);
+            let res = std::thread::Builder::new()
+                .name(format!("faultnet-fwd-{conn_index}"))
+                .spawn(move || {
+                    run_forwarder(src, dst, dir, sched, ledger, stop)
+                });
+            match res {
+                Ok(h) => spawned.push(h),
+                Err(e) => log_warn!("faultnet: forwarder spawn: {e}"),
+            }
+        }
+        let mut workers = lock_unpoisoned(&workers);
+        workers.retain(|h| !h.is_finished());
+        workers.extend(spawned);
+    }
+}
+
+/// Relay one direction of one connection, applying the schedule's
+/// faults at their byte offsets. Exits (severing both ends) on EOF,
+/// socket error, a scheduled cut/stall, or proxy shutdown.
+fn run_forwarder(
+    src: TcpStream,
+    dst: TcpStream,
+    dir: Dir,
+    sched: Arc<ConnSchedule>,
+    ledger: Arc<Ledger>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut src = src;
+    let mut dst = dst;
+    if src
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .is_err()
+    {
+        sever(&src, &dst);
+        return;
+    }
+    let mut rng = {
+        let mut base = Rng::new(sched.delay_seed);
+        base.fork(dir as u64)
+    };
+    let mut corrupt = sched.corrupt.filter(|&(_, _, d)| d == dir);
+    let cut = sched.cut.filter(|&(_, d)| d == dir);
+    let stall = sched.stall.filter(|&(_, _, d)| d == dir);
+    let mut offset: u64 = 0;
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let n = match src.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock
+                        | ErrorKind::TimedOut
+                        | ErrorKind::Interrupted
+                ) =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        };
+        let end = offset + n as u64;
+        let chunk = &mut buf[..n];
+        if sched.delay_chance > 0.0 && rng.chance(sched.delay_chance) {
+            let max_ms = sched.max_delay.as_millis().max(1) as usize;
+            let ms = 1 + rng.below(max_ms) as u64;
+            std::thread::sleep(Duration::from_millis(ms));
+            ledger.delays.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some((at, bit, _)) = corrupt {
+            if at >= offset && at < end {
+                chunk[(at - offset) as usize] ^= 1u8 << bit;
+                ledger.corrupted.fetch_add(1, Ordering::Relaxed);
+                corrupt = None;
+            }
+        }
+        if let Some((at, hold, _)) = stall {
+            if at < end {
+                let keep = at.saturating_sub(offset) as usize;
+                if keep > 0 && dst.write_all(&chunk[..keep]).is_err() {
+                    break;
+                }
+                ledger
+                    .bytes_forwarded
+                    .fetch_add(keep as u64, Ordering::Relaxed);
+                ledger.stalls.fetch_add(1, Ordering::Relaxed);
+                sleep_interruptible(hold, &stop);
+                break;
+            }
+        }
+        if let Some((at, _)) = cut {
+            if at < end {
+                let keep = at.saturating_sub(offset) as usize;
+                if keep > 0 && dst.write_all(&chunk[..keep]).is_err() {
+                    break;
+                }
+                ledger
+                    .bytes_forwarded
+                    .fetch_add(keep as u64, Ordering::Relaxed);
+                ledger.cuts.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
+        if dst.write_all(chunk).is_err() {
+            break;
+        }
+        ledger
+            .bytes_forwarded
+            .fetch_add(n as u64, Ordering::Relaxed);
+        offset = end;
+    }
+    sever(&src, &dst);
+}
+
+/// Shut both ends of a relay leg. The paired forwarder sees EOF or an
+/// error on its next read and exits too, so one scheduled fault tears
+/// the whole proxied connection down — exactly like a real reset.
+fn sever(a: &TcpStream, b: &TcpStream) {
+    let _ = a.shutdown(Shutdown::Both);
+    let _ = b.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo server: accepts connections in a loop, echoing each one's
+    /// bytes back until EOF. Returns (addr, stop, handle).
+    fn echo_server() -> (SocketAddr, Arc<AtomicBool>, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::spawn(move || {
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut s, _)) => {
+                        conns.push(std::thread::spawn(move || {
+                            let mut buf = [0u8; 4096];
+                            s.set_read_timeout(Some(
+                                Duration::from_millis(50),
+                            ))
+                            .unwrap();
+                            loop {
+                                match s.read(&mut buf) {
+                                    Ok(0) => break,
+                                    Ok(n) => {
+                                        if s.write_all(&buf[..n]).is_err()
+                                        {
+                                            break;
+                                        }
+                                    }
+                                    Err(e)
+                                        if matches!(
+                                            e.kind(),
+                                            ErrorKind::WouldBlock
+                                                | ErrorKind::TimedOut
+                                        ) =>
+                                    {
+                                        continue;
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                        }));
+                    }
+                    Err(_) => {
+                        std::thread::sleep(Duration::from_millis(5))
+                    }
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        (addr, stop, handle)
+    }
+
+    fn pattern(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i % 251) as u8).collect()
+    }
+
+    /// Round-trip `data` through `proxy` → echo server; returns what
+    /// came back (may be shorter than sent if the proxy severed).
+    fn round_trip(proxy: &FaultProxy, data: &[u8]) -> Vec<u8> {
+        let mut s = TcpStream::connect(proxy.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        let _ = s.write_all(data);
+        let mut got = Vec::new();
+        let mut buf = [0u8; 4096];
+        let mut idle = 0;
+        while got.len() < data.len() && idle < 20 {
+            match s.read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => {
+                    got.extend_from_slice(&buf[..n]);
+                    idle = 0;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) =>
+                {
+                    idle += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        got
+    }
+
+    #[test]
+    fn schedules_regenerate_deterministically() {
+        let a = FaultPlan::corruption(42);
+        let b = FaultPlan::corruption(42);
+        for conn in 0..8 {
+            let sa = a.schedule_for(conn);
+            let sb = b.schedule_for(conn);
+            assert_eq!(sa.corrupt, sb.corrupt, "conn {conn}");
+            assert_eq!(sa.delay_seed, sb.delay_seed, "conn {conn}");
+        }
+        let c = FaultPlan::corruption(43);
+        let diverges = (0..8).any(|k| {
+            a.schedule_for(k).corrupt != c.schedule_for(k).corrupt
+        });
+        assert!(diverges, "different seeds must give different plans");
+        // Connections draw distinct schedules from one seed.
+        assert_ne!(
+            a.schedule_for(0).delay_seed,
+            a.schedule_for(1).delay_seed
+        );
+    }
+
+    #[test]
+    fn draw_order_is_independent_of_enabled_classes() {
+        // The corruption schedule drawn under a corrupt-only spec
+        // must match the one drawn under an everything-on spec.
+        let lean = FaultPlan::corruption(7);
+        let full = FaultPlan::new(
+            7,
+            FaultSpec {
+                delay_chance: 0.5,
+                corrupt: true,
+                cut: true,
+                black_hole: true,
+                ..FaultSpec::default()
+            },
+        );
+        for conn in 0..8 {
+            assert_eq!(
+                lean.schedule_for(conn).corrupt,
+                full.schedule_for(conn).corrupt,
+                "conn {conn}"
+            );
+        }
+    }
+
+    #[test]
+    fn clean_proxy_is_transparent() {
+        let (addr, stop, server) = echo_server();
+        let proxy = FaultProxy::spawn(addr, FaultPlan::clean(1)).unwrap();
+        let sent = pattern(4096);
+        let got = round_trip(&proxy, &sent);
+        assert_eq!(got, sent);
+        let stats = proxy.stats();
+        assert_eq!(stats.connections, 1);
+        assert_eq!(stats.refused, 0);
+        assert_eq!(stats.corrupted + stats.cuts + stats.stalls, 0);
+        assert!(stats.bytes_forwarded >= 2 * sent.len() as u64);
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_bit() {
+        let (addr, stop, server) = echo_server();
+        // Narrow span so a 4 KiB payload always crosses the offset.
+        let plan = FaultPlan::new(
+            5,
+            FaultSpec {
+                corrupt: true,
+                offset_span: 1024,
+                ..FaultSpec::default()
+            },
+        );
+        let proxy = FaultProxy::spawn(addr, plan).unwrap();
+        let sent = pattern(4096);
+        let got = round_trip(&proxy, &sent);
+        assert_eq!(got.len(), sent.len());
+        let flipped: u32 = sent
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1, "exactly one bit must flip");
+        assert_eq!(proxy.stats().corrupted, 1);
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn cut_severs_mid_stream() {
+        let (addr, stop, server) = echo_server();
+        let plan = FaultPlan::new(
+            9,
+            FaultSpec {
+                cut: true,
+                offset_span: 1024,
+                ..FaultSpec::default()
+            },
+        );
+        let proxy = FaultProxy::spawn(addr, plan).unwrap();
+        let sent = pattern(8192);
+        let got = round_trip(&proxy, &sent);
+        assert!(
+            got.len() < sent.len(),
+            "cut connection returned everything"
+        );
+        assert_eq!(proxy.stats().cuts, 1);
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn black_hole_stalls_then_severs() {
+        let (addr, stop, server) = echo_server();
+        let plan = FaultPlan::new(
+            11,
+            FaultSpec {
+                black_hole: true,
+                max_stall: Duration::from_millis(100),
+                offset_span: 1024,
+                ..FaultSpec::default()
+            },
+        );
+        let proxy = FaultProxy::spawn(addr, plan).unwrap();
+        let sent = pattern(8192);
+        let got = round_trip(&proxy, &sent);
+        assert!(got.len() < sent.len());
+        assert_eq!(proxy.stats().stalls, 1);
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn flap_refuses_scheduled_attempts_then_heals() {
+        let (addr, stop, server) = echo_server();
+        let proxy =
+            FaultProxy::spawn(addr, FaultPlan::flap(3, 2)).unwrap();
+        let mut outcomes = Vec::new();
+        for _ in 0..4 {
+            // One byte sits below min_offset, so an accepted
+            // connection echoes it back; a refused one sees EOF.
+            let got = round_trip(&proxy, &[0xA5]);
+            outcomes.push(got == [0xA5]);
+        }
+        assert_eq!(
+            outcomes,
+            vec![true, false, false, true],
+            "conn 0 accepted, 1..=2 refused, 3 accepted"
+        );
+        let stats = proxy.stats();
+        assert_eq!(stats.connections, 4);
+        assert_eq!(stats.refused, 2);
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        server.join().unwrap();
+    }
+}

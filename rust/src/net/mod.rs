@@ -36,6 +36,18 @@
 //!   only, and aggregates remote metrics through the same
 //!   [`crate::coordinator::Metrics::aggregate`] as the local plane.
 //!   CLI: `approxrbf route --shards HOST:PORT,HOST:PORT…`.
+//! * [`supervisor`] — [`supervisor::Supervisor`] keeps N `serve-shard`
+//!   processes alive: wire-level Hello/Ping health checks, SIGKILL
+//!   detection, capped-backoff restarts on pinned addresses so routers
+//!   reconnect and resume bit-identically. CLI: `approxrbf serve-plane
+//!   --shards N --store DIR`.
+//! * [`faultnet`] — [`faultnet::FaultProxy`], a deterministic
+//!   fault-injecting TCP relay for the chaos test tier: seeded
+//!   per-connection schedules of delays, corruption, cuts, black-hole
+//!   stalls and flap partitions, with a [`faultnet::FaultStats`]
+//!   ledger of what was actually injected. Test infrastructure, but
+//!   shipped in-tree so every invariant it pins stays reproducible
+//!   from one u64 seed (see `docs/TESTING.md`).
 //!
 //! Guarantees carried over from the in-process plane: every accepted
 //! request is answered with exactly one completion; placement parity
@@ -45,9 +57,15 @@
 
 #![forbid(unsafe_code)]
 
+pub mod faultnet;
 pub mod router;
 pub mod shard_server;
+pub mod supervisor;
 pub mod wire;
 
-pub use router::{RemoteClient, RemoteSession, Router, RouterConfig};
+pub use faultnet::{FaultPlan, FaultProxy, FaultSpec, FaultStats};
+pub use router::{
+    LinkHealth, RemoteClient, RemoteSession, Router, RouterConfig,
+};
 pub use shard_server::{ShardServer, ShardServerConfig};
+pub use supervisor::{Supervisor, SupervisorConfig};

@@ -33,7 +33,8 @@ use std::time::{Duration, Instant};
 use crate::coordinator::shard::assign;
 use crate::coordinator::{
     Completion, Metrics, MetricsSnapshot, MetricsState, ModelId,
-    PredictError, PredictErrorKind, PredictResponse, DEFAULT_MODEL,
+    PredictError, PredictErrorKind, PredictResponse, ShardHealth,
+    DEFAULT_MODEL,
 };
 use crate::linalg::Mat;
 use crate::util::sync::lock_unpoisoned;
@@ -90,10 +91,43 @@ struct LinkState {
     ack_waiters: VecDeque<Sender<()>>,
 }
 
+/// Connection-lifecycle counters for one link, kept by its tender.
+/// Exposed through [`Router::link_health`] so chaos tests (and the
+/// metrics surface) can assert reconnect behaviour without timing
+/// heuristics: the tender records exactly what it did.
+#[derive(Default)]
+struct LinkLedger {
+    /// Successful connect + handshake cycles.
+    connects: AtomicU64,
+    /// Failed connect attempts (refused, timed out, bad handshake).
+    failures: AtomicU64,
+    /// Largest backoff actually slept, in ms (the 50ms→ceiling
+    /// envelope a chaos test pins).
+    max_backoff_ms: AtomicU64,
+}
+
+/// Snapshot of one link's lifecycle, from [`Router::link_health`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LinkHealth {
+    /// Shard index (position in the connect-time address list).
+    pub shard: usize,
+    /// Shard address as dialed.
+    pub addr: String,
+    /// Successful connect + handshake cycles.
+    pub connects: u64,
+    /// Recoveries: successful connects after the first.
+    pub reconnects: u64,
+    /// Failed connect attempts.
+    pub failures: u64,
+    /// Largest reconnect backoff actually slept, in ms.
+    pub max_backoff_ms: u64,
+}
+
 struct Link {
     index: usize,
     addr: String,
     state: Mutex<LinkState>,
+    ledger: LinkLedger,
 }
 
 impl Link {
@@ -181,6 +215,7 @@ impl Router {
                     index,
                     addr: addr.clone(),
                     state: Mutex::new(LinkState::default()),
+                    ledger: LinkLedger::default(),
                 })
             })
             .collect();
@@ -270,7 +305,44 @@ impl Router {
             }
         }
         let refs: Vec<&Metrics> = sinks.iter().collect();
-        Metrics::aggregate(&refs)
+        let mut snap = Metrics::aggregate(&refs);
+        snap.shard_health = self
+            .link_health()
+            .into_iter()
+            .map(|h| ShardHealth {
+                shard: h.shard,
+                reconnects: h.reconnects,
+                // Process restarts are the supervisor's to report;
+                // merge via `MetricsSnapshot::record_restarts`.
+                restarts: 0,
+            })
+            .collect();
+        snap
+    }
+
+    /// Per-link connection-lifecycle counters, as recorded by the
+    /// tender threads (connects, reconnects, failed attempts, and the
+    /// largest backoff actually slept).
+    pub fn link_health(&self) -> Vec<LinkHealth> {
+        self.inner
+            .links
+            .iter()
+            .map(|l| {
+                let connects =
+                    l.ledger.connects.load(Ordering::Relaxed);
+                LinkHealth {
+                    shard: l.index,
+                    addr: l.addr.clone(),
+                    connects,
+                    reconnects: connects.saturating_sub(1),
+                    failures: l.ledger.failures.load(Ordering::Relaxed),
+                    max_backoff_ms: l
+                        .ledger
+                        .max_backoff_ms
+                        .load(Ordering::Relaxed),
+                }
+            })
+            .collect()
     }
 
     /// Ask every reachable shard to revalidate model generations now
@@ -453,7 +525,9 @@ impl Drop for RouterInner {
 }
 
 /// Sleep in 50 ms slices so shutdown is not held up by a backoff nap.
-fn sleep_interruptible(total: Duration, stop: &AtomicBool) {
+/// Shared with the `faultnet` proxy and the `serve-plane` supervisor,
+/// whose pauses must yield to shutdown the same way.
+pub(crate) fn sleep_interruptible(total: Duration, stop: &AtomicBool) {
     let mut left = total;
     while left > Duration::ZERO && !stop.load(Ordering::Relaxed) {
         let step = left.min(Duration::from_millis(50));
@@ -544,6 +618,7 @@ fn run_tender(
         match connect_once(&link, &cfg) {
             Ok((stream, table)) => {
                 backoff = BACKOFF_FLOOR;
+                link.ledger.connects.fetch_add(1, Ordering::Relaxed);
                 {
                     let mut d = lock_unpoisoned(&dims);
                     for (id, dim) in table {
@@ -564,6 +639,7 @@ fn run_tender(
                 link.teardown(&why);
             }
             Err(e) => {
+                link.ledger.failures.fetch_add(1, Ordering::Relaxed);
                 log_warn!(
                     "router: connect to shard {} ({}) failed: {e}",
                     link.index,
@@ -574,6 +650,9 @@ fn run_tender(
         if stop.load(Ordering::Relaxed) {
             break;
         }
+        link.ledger
+            .max_backoff_ms
+            .fetch_max(backoff.as_millis() as u64, Ordering::Relaxed);
         sleep_interruptible(backoff, &stop);
         backoff = (backoff * 2).min(cfg.reconnect_ceiling);
     }

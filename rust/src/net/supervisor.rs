@@ -1,0 +1,458 @@
+//! serve-plane supervisor: keep N `serve-shard` processes alive.
+//!
+//! [`Supervisor::start`] spawns one `approxrbf serve-shard` child per
+//! shard (binding an ephemeral loopback port, scraped from the
+//! child's banner line) and then tends each one from a monitor
+//! thread: a crashed child (or one that stops answering the wire
+//! Hello/Ping health probe) is killed and respawned with capped
+//! exponential backoff — the same 50ms→ceiling ladder the
+//! [`Router`](super::Router) uses for reconnects, so a flapping shard
+//! is never hammered.
+//!
+//! The port a shard first binds is **pinned**: restarts pass the same
+//! `--listen` address, so routers connected to the plane reconnect to
+//! the very address they already know and resume serving
+//! bit-identically (placement depends only on address order, which
+//! never changes). `std`'s listener sets `SO_REUSEADDR` on Unix, so
+//! rebinding the pinned port behind lingering `TIME_WAIT` entries
+//! succeeds; a transiently busy port is absorbed by the restart
+//! backoff.
+//!
+//! Restart counts are exported via [`Supervisor::restarts`] and feed
+//! the `restarts` column of
+//! [`MetricsSnapshot::record_restarts`](crate::coordinator::MetricsSnapshot::record_restarts),
+//! so operators can see process churn next to the router's reconnect
+//! counters.
+
+use std::io::{BufRead, BufReader};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::router::sleep_interruptible;
+use super::wire::{self, Message, WIRE_VERSION};
+use crate::util::sync::lock_unpoisoned;
+use crate::{log_info, log_warn, Error, Result};
+
+/// Tuning knobs for a [`Supervisor`].
+#[derive(Clone, Debug)]
+pub struct SupervisorConfig {
+    /// Shard processes to keep alive.
+    pub shards: usize,
+    /// Registry directory every shard serves from.
+    pub store: PathBuf,
+    /// Binary to spawn (`approxrbf`; the CLI passes its own path).
+    pub binary: PathBuf,
+    /// Executor lanes per shard process (`--shards` of `serve-shard`).
+    pub lanes: usize,
+    /// Optional `--policy` forwarded to each shard.
+    pub policy: Option<String>,
+    /// Optional `--drift-tol` forwarded to each shard.
+    pub drift_tol: Option<f32>,
+    /// Pause between wire health probes of a live shard.
+    pub health_interval: Duration,
+    /// Connect/read timeout of one health probe.
+    pub health_timeout: Duration,
+    /// Consecutive failed probes before a shard is declared wedged
+    /// and restarted (a crashed process restarts immediately).
+    pub health_strikes: u32,
+    /// First restart backoff; doubles per attempt.
+    pub backoff_floor: Duration,
+    /// Restart backoff ceiling.
+    pub backoff_ceiling: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            shards: 2,
+            store: PathBuf::from("registry"),
+            binary: PathBuf::from("approxrbf"),
+            lanes: 1,
+            policy: None,
+            drift_tol: None,
+            health_interval: Duration::from_millis(250),
+            health_timeout: Duration::from_secs(1),
+            health_strikes: 3,
+            backoff_floor: Duration::from_millis(50),
+            backoff_ceiling: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One supervised shard slot: the live child (if any), its pinned
+/// listen address, and how often it has been restarted.
+struct ShardSlot {
+    index: usize,
+    child: Mutex<Option<Child>>,
+    addr: Mutex<Option<String>>,
+    restarts: AtomicU64,
+}
+
+/// Process supervisor for a `serve-plane`: spawns, health-checks and
+/// restarts `serve-shard` children. See the module docs.
+pub struct Supervisor {
+    slots: Vec<Arc<ShardSlot>>,
+    stop: Arc<AtomicBool>,
+    monitors: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Supervisor {
+    /// Spawn every shard and start its monitor. Fails (tearing down
+    /// anything already spawned) unless all shards come up and
+    /// announce an address.
+    pub fn start(config: SupervisorConfig) -> Result<Supervisor> {
+        if config.shards == 0 {
+            return Err(Error::InvalidArg(
+                "serve-plane needs at least one shard".into(),
+            ));
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut slots = Vec::with_capacity(config.shards);
+        for index in 0..config.shards {
+            match spawn_shard(&config, index, None) {
+                Ok((child, addr)) => {
+                    log_info!(
+                        "serve-plane: shard {index} up on {addr}"
+                    );
+                    slots.push(Arc::new(ShardSlot {
+                        index,
+                        child: Mutex::new(Some(child)),
+                        addr: Mutex::new(Some(addr)),
+                        restarts: AtomicU64::new(0),
+                    }));
+                }
+                Err(e) => {
+                    for slot in &slots {
+                        kill_child(slot);
+                    }
+                    return Err(Error::Other(format!(
+                        "serve-plane: shard {index} failed to start: {e}"
+                    )));
+                }
+            }
+        }
+        let mut monitors = Vec::with_capacity(slots.len());
+        for slot in &slots {
+            let tended = Arc::clone(slot);
+            let cfg = config.clone();
+            let stop2 = Arc::clone(&stop);
+            let name = format!("serve-plane-monitor-{}", tended.index);
+            let spawned = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || run_monitor(tended, cfg, stop2));
+            match spawned {
+                Ok(handle) => monitors.push(handle),
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    for m in monitors {
+                        let _ = m.join();
+                    }
+                    for slot in &slots {
+                        kill_child(slot);
+                    }
+                    return Err(Error::Other(format!(
+                        "spawn monitor: {e}"
+                    )));
+                }
+            }
+        }
+        Ok(Supervisor {
+            slots,
+            stop,
+            monitors: Mutex::new(monitors),
+        })
+    }
+
+    /// Pinned shard addresses in placement order — hand these to
+    /// [`Router::connect`](super::Router::connect). Stable across
+    /// restarts.
+    pub fn addrs(&self) -> Vec<String> {
+        self.slots
+            .iter()
+            .map(|s| {
+                lock_unpoisoned(&s.addr).clone().unwrap_or_default()
+            })
+            .collect()
+    }
+
+    /// Restart count per shard, in placement order.
+    pub fn restarts(&self) -> Vec<u64> {
+        self.slots
+            .iter()
+            .map(|s| s.restarts.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Kill shard `index`'s process (SIGKILL) — the chaos suite's
+    /// crash lever. The monitor notices and restarts it.
+    pub fn kill_shard(&self, index: usize) -> Result<()> {
+        let slot = self.slots.get(index).ok_or_else(|| {
+            Error::InvalidArg(format!("no shard {index}"))
+        })?;
+        kill_child(slot);
+        Ok(())
+    }
+
+    /// Stop the monitors and kill every child. Idempotent; also runs
+    /// on drop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let monitors: Vec<JoinHandle<()>> =
+            lock_unpoisoned(&self.monitors).drain(..).collect();
+        for m in monitors {
+            let _ = m.join();
+        }
+        for slot in &self.slots {
+            kill_child(slot);
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Kill and reap a slot's child, if any.
+fn kill_child(slot: &ShardSlot) {
+    let mut guard = lock_unpoisoned(&slot.child);
+    if let Some(child) = guard.as_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    *guard = None;
+}
+
+/// Has the slot's child exited (or vanished)?
+fn child_gone(slot: &ShardSlot) -> bool {
+    let mut guard = lock_unpoisoned(&slot.child);
+    match guard.as_mut() {
+        None => true,
+        Some(child) => match child.try_wait() {
+            Ok(None) => false,
+            // Exited — reap happened in try_wait; drop the handle.
+            Ok(Some(_)) => {
+                *guard = None;
+                true
+            }
+            Err(_) => true,
+        },
+    }
+}
+
+/// Spawn one `serve-shard` child and scrape its banner for the bound
+/// address. `listen` pins the address on restart; `None` asks the OS
+/// for an ephemeral port.
+fn spawn_shard(
+    config: &SupervisorConfig,
+    index: usize,
+    listen: Option<&str>,
+) -> Result<(Child, String)> {
+    let mut cmd = Command::new(&config.binary);
+    cmd.arg("serve-shard")
+        .arg("--listen")
+        .arg(listen.unwrap_or("127.0.0.1:0"))
+        .arg("--store")
+        .arg(&config.store)
+        .arg("--shards")
+        .arg(config.lanes.max(1).to_string())
+        .arg("--shard-id")
+        .arg(index.to_string());
+    if let Some(policy) = &config.policy {
+        cmd.arg("--policy").arg(policy);
+    }
+    if let Some(tol) = config.drift_tol {
+        cmd.arg("--drift-tol").arg(tol.to_string());
+    }
+    cmd.stdout(Stdio::piped()).stderr(Stdio::null());
+    let mut child = cmd.spawn().map_err(Error::Io)?;
+    let stdout = match child.stdout.take() {
+        Some(s) => s,
+        None => {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(Error::Other(
+                "serve-shard child has no stdout pipe".into(),
+            ));
+        }
+    };
+    let mut banner = String::new();
+    let read = BufReader::new(stdout).read_line(&mut banner);
+    let addr = read
+        .ok()
+        .filter(|&n| n > 0)
+        .and_then(|_| {
+            banner
+                .split(" serving on ")
+                .nth(1)
+                .and_then(|rest| rest.split_whitespace().next())
+                .map(str::to_string)
+        });
+    match addr {
+        Some(addr) => Ok((child, addr)),
+        None => {
+            let _ = child.kill();
+            let status = child.wait();
+            Err(Error::Other(format!(
+                "serve-shard {index} died before announcing an \
+                 address (banner {banner:?}, status {status:?})"
+            )))
+        }
+    }
+}
+
+/// One wire health probe: TCP connect, Hello/HelloAck, Ping/Pong.
+/// Anything short of a well-formed Pong is a strike.
+fn probe(addr: &str, config: &SupervisorConfig) -> Result<()> {
+    let sa = addr
+        .to_socket_addrs()
+        .map_err(Error::Io)?
+        .next()
+        .ok_or_else(|| {
+            Error::InvalidArg(format!("unresolvable address '{addr}'"))
+        })?;
+    let mut stream =
+        TcpStream::connect_timeout(&sa, config.health_timeout)
+            .map_err(Error::Io)?;
+    stream
+        .set_read_timeout(Some(config.health_timeout))
+        .map_err(Error::Io)?;
+    stream
+        .set_write_timeout(Some(config.health_timeout))
+        .map_err(Error::Io)?;
+    let _ = stream.set_nodelay(true);
+    wire::write_frame(
+        &mut stream,
+        &Message::Hello {
+            version: WIRE_VERSION,
+            client: "serve-plane".to_string(),
+        },
+    )?;
+    match wire::read_frame(&mut stream)? {
+        Some(Message::HelloAck { .. }) => {}
+        other => {
+            return Err(Error::Other(format!(
+                "health probe: expected HelloAck, got {other:?}"
+            )));
+        }
+    }
+    wire::write_frame(&mut stream, &Message::Ping)?;
+    match wire::read_frame(&mut stream)? {
+        Some(Message::Pong) => Ok(()),
+        other => Err(Error::Other(format!(
+            "health probe: expected Pong, got {other:?}"
+        ))),
+    }
+}
+
+/// Tend one shard slot for the supervisor's lifetime: probe while
+/// healthy, restart (with capped backoff, on the pinned address) when
+/// crashed or wedged.
+fn run_monitor(
+    slot: Arc<ShardSlot>,
+    config: SupervisorConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut strikes = 0u32;
+    let mut backoff = config.backoff_floor;
+    while !stop.load(Ordering::Relaxed) {
+        if !child_gone(&slot) {
+            let addr = lock_unpoisoned(&slot.addr).clone();
+            let healthy = match addr {
+                Some(a) => probe(&a, &config).is_ok(),
+                None => false,
+            };
+            if healthy {
+                strikes = 0;
+                backoff = config.backoff_floor;
+                sleep_interruptible(config.health_interval, &stop);
+                continue;
+            }
+            strikes += 1;
+            if strikes < config.health_strikes {
+                sleep_interruptible(config.health_interval, &stop);
+                continue;
+            }
+            log_warn!(
+                "serve-plane: shard {} unresponsive after {} probes — \
+                 restarting",
+                slot.index,
+                strikes
+            );
+            kill_child(&slot);
+        } else {
+            log_warn!(
+                "serve-plane: shard {} process died — restarting",
+                slot.index
+            );
+        }
+        strikes = 0;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        sleep_interruptible(backoff, &stop);
+        backoff = (backoff * 2).min(config.backoff_ceiling);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let pinned = lock_unpoisoned(&slot.addr).clone();
+        match spawn_shard(&config, slot.index, pinned.as_deref()) {
+            Ok((child, addr)) => {
+                *lock_unpoisoned(&slot.child) = Some(child);
+                *lock_unpoisoned(&slot.addr) = Some(addr.clone());
+                slot.restarts.fetch_add(1, Ordering::Relaxed);
+                log_info!(
+                    "serve-plane: shard {} restarted on {addr}",
+                    slot.index
+                );
+            }
+            Err(e) => {
+                log_warn!(
+                    "serve-plane: shard {} restart failed ({e}); \
+                     backing off",
+                    slot.index
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_match_router_backoff_envelope() {
+        let cfg = SupervisorConfig::default();
+        assert_eq!(cfg.backoff_floor, Duration::from_millis(50));
+        assert_eq!(cfg.backoff_ceiling, Duration::from_secs(2));
+        assert!(cfg.health_strikes >= 1);
+        assert!(cfg.shards >= 1);
+    }
+
+    #[test]
+    fn start_refuses_zero_shards() {
+        let cfg = SupervisorConfig {
+            shards: 0,
+            ..SupervisorConfig::default()
+        };
+        assert!(Supervisor::start(cfg).is_err());
+    }
+
+    #[test]
+    fn start_surfaces_bad_binary() {
+        let cfg = SupervisorConfig {
+            shards: 1,
+            binary: PathBuf::from("/nonexistent/approxrbf-missing"),
+            ..SupervisorConfig::default()
+        };
+        let err = Supervisor::start(cfg);
+        assert!(err.is_err());
+    }
+}

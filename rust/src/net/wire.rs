@@ -970,4 +970,78 @@ mod tests {
             }
         });
     }
+
+    /// Decoder fuzz: stack seeded mutations — bit flips anywhere
+    /// (header included), length-field lies, hostile kinds, and
+    /// truncation at any offset — onto valid frames of every message
+    /// kind. The decoders must return Ok or a typed
+    /// `Corrupt`/`Io`, and never panic; this is the same hostile
+    /// surface `faultnet` exercises over real sockets in the chaos
+    /// tier.
+    #[test]
+    fn property_mutated_frames_fail_typed_never_panic() {
+        let samples = all_samples();
+        prop_cases!("wire decoder fuzz", 128, |rng| {
+            let base =
+                encode_frame(&samples[rng.below(samples.len())]).unwrap();
+            let mut bytes = base;
+            for _ in 0..(1 + rng.below(4)) {
+                if bytes.is_empty() {
+                    break;
+                }
+                match rng.below(4) {
+                    0 => {
+                        // Single-bit flip anywhere, header included.
+                        let pos = rng.below(bytes.len());
+                        bytes[pos] ^= 1u8 << rng.below(8);
+                    }
+                    1 if bytes.len() >= FRAME_HEADER_LEN => {
+                        // Length-field lie: any u32, including values
+                        // far past the payload and past the cap.
+                        let lie = rng.next_u64() as u32;
+                        bytes[12..16]
+                            .copy_from_slice(&lie.to_le_bytes());
+                    }
+                    2 if bytes.len() >= 6 => {
+                        // Hostile kind.
+                        let kind = rng.next_u64() as u16;
+                        bytes[4..6]
+                            .copy_from_slice(&kind.to_le_bytes());
+                    }
+                    3 => {
+                        // Truncation at any offset (possibly to 0).
+                        bytes.truncate(rng.below(bytes.len()));
+                    }
+                    _ => {}
+                }
+            }
+
+            match decode_frame(&bytes) {
+                Ok((_, used)) => assert!(used <= bytes.len()),
+                Err(e) => assert!(
+                    matches!(e, Error::Corrupt(_) | Error::Io(_)),
+                    "untyped decode failure: {e}"
+                ),
+            }
+            // The stream reader sees the same bytes as a socket would:
+            // whole frames until a clean EOF, or one typed error.
+            let mut cursor: &[u8] = &bytes;
+            loop {
+                match read_frame(&mut cursor) {
+                    Ok(Some(_)) => {}
+                    Ok(None) => break,
+                    Err(e) => {
+                        assert!(
+                            matches!(
+                                e,
+                                Error::Corrupt(_) | Error::Io(_)
+                            ),
+                            "untyped stream failure: {e}"
+                        );
+                        break;
+                    }
+                }
+            }
+        });
+    }
 }

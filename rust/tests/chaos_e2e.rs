@@ -1,0 +1,577 @@
+//! Chaos tier: the serving plane under deterministic network faults.
+//!
+//! Every test routes real ARBW traffic through a
+//! [`FaultProxy`](approxrbf::net::FaultProxy) whose fault schedule is
+//! a pure function of one u64 seed, and pins an invariant the plane
+//! must keep while the weather is bad:
+//!
+//! * **delays** never change a single decision bit, and the metrics
+//!   plane still accounts every request exactly once;
+//! * **corruption** is caught by the frame CRC and turned into typed
+//!   errors — never a silently wrong answer, never a hang;
+//! * **cuts** on one shard's link leave the other shard's tenants
+//!   bit-identical to a fault-free plane;
+//! * **black holes** are bounded: every accepted request still
+//!   completes within the deadline;
+//! * **flap partitions** drive the router's reconnect ladder through
+//!   its documented 50ms→2s envelope, heal, and resume bit-identical
+//!   serving with `Metrics::aggregate` conserving counts across the
+//!   reconnects;
+//! * a **supervisor** restarts a SIGKILLed shard process on its
+//!   pinned address and the plane resumes, with restarts and
+//!   reconnects surfaced in the metrics snapshot.
+//!
+//! Gated by `APPROXRBF_TEST_CHAOS=1` (binds loopback sockets; the
+//! supervisor test spawns processes); each test is a silent pass
+//! without it. `APPROXRBF_CHAOS_SEED` overrides every test's default
+//! seed — each test prints the seed it ran with, so a CI failure
+//! names its reproducing command (see `docs/TESTING.md`). Waits
+//! derive from `APPROXRBF_TEST_DEADLINE_MS` (`tests/common/mod.rs`).
+//! CI runs the suite across a fixed seed matrix in the `tier1-chaos`
+//! job (`make test-chaos`).
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxrbf::coordinator::{Coordinator, PredictErrorKind};
+use approxrbf::data::Dataset;
+use approxrbf::net::{
+    FaultPlan, FaultProxy, Router, RouterConfig, ShardServer,
+    ShardServerConfig, Supervisor, SupervisorConfig,
+};
+use approxrbf::registry::ModelStore;
+
+use common::{run_in_process, temp_dir, trained_pair, Served, DRIFT_TOL};
+
+fn chaos_enabled() -> bool {
+    match std::env::var("APPROXRBF_TEST_CHAOS") {
+        Ok(v) => v == "1",
+        Err(_) => false,
+    }
+}
+
+/// This run's seed: `APPROXRBF_CHAOS_SEED` if set, else the test's
+/// own default. Printed unconditionally so any failure in the test
+/// body names the exact reproducing command.
+fn chaos_seed(default: u64) -> u64 {
+    let seed = std::env::var("APPROXRBF_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(default);
+    eprintln!(
+        "chaos seed {seed} — replay with: APPROXRBF_TEST_CHAOS=1 \
+         APPROXRBF_CHAOS_SEED={seed} cargo test --test chaos_e2e -- \
+         --test-threads=1"
+    );
+    seed
+}
+
+/// Candidate tenant names; [`chaos_registry`] picks one per shard
+/// with the plane's own placement function, so the tests never depend
+/// on how any specific name happens to hash.
+const CANDIDATES: [&str; 8] = [
+    "tenant-a", "tenant-b", "tenant-c", "tenant-d", "tenant-e",
+    "tenant-f", "tenant-g", "tenant-h",
+];
+
+/// A two-tenant registry where `tenants[i]` is owned by shard `i` of
+/// a two-shard plane.
+fn chaos_registry(
+    tag: &str,
+) -> (Arc<ModelStore>, Vec<(&'static str, Dataset)>) {
+    let mut ids: [Option<&'static str>; 2] = [None, None];
+    for id in CANDIDATES {
+        let shard = Router::place_for(id, 2);
+        if ids[shard].is_none() {
+            ids[shard] = Some(id);
+        }
+    }
+    let store = Arc::new(ModelStore::open(temp_dir(tag)).unwrap());
+    let mut tenants = Vec::new();
+    for (shard, id) in ids.iter().enumerate() {
+        let id = id.unwrap_or_else(|| {
+            panic!("candidate pool never hashes to shard {shard}")
+        });
+        let (m, a, ds) = trained_pair(1000 + 111 * shard as u64, 0.8);
+        store.publish(id, &m, &a).unwrap();
+        tenants.push((id, ds));
+    }
+    (store, tenants)
+}
+
+/// Deterministic round-robin traffic over the tenant set.
+fn build_traffic(
+    tenants: &[(&'static str, Dataset)],
+    n: usize,
+) -> Vec<(&'static str, Vec<f32>)> {
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let (id, ds) = &tenants[i % tenants.len()];
+        let row = (i / tenants.len()) % ds.len();
+        out.push((*id, ds.x.row(row).to_vec()));
+    }
+    out
+}
+
+/// An in-process two-shard plane with a fault proxy in front of each
+/// shard: Router → FaultProxy i → ShardServer i → Coordinator.
+struct ChaosPlane {
+    servers: Vec<ShardServer>,
+    proxies: Vec<FaultProxy>,
+    router: Router,
+}
+
+impl ChaosPlane {
+    fn spawn(store: &Arc<ModelStore>, plans: [FaultPlan; 2]) -> ChaosPlane {
+        let mut servers = Vec::new();
+        let mut proxies = Vec::new();
+        let mut addrs = Vec::new();
+        for (i, plan) in plans.into_iter().enumerate() {
+            let coord = Coordinator::builder()
+                .shards(1)
+                .max_wait(Duration::from_millis(1))
+                .quant_drift_tol(DRIFT_TOL.parse().unwrap())
+                .start_registry(store.clone())
+                .unwrap();
+            let server = ShardServer::bind(
+                "127.0.0.1:0",
+                coord,
+                store.clone(),
+                ShardServerConfig {
+                    shard_id: i as u32,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let proxy =
+                FaultProxy::spawn(server.local_addr(), plan).unwrap();
+            addrs.push(proxy.addr().to_string());
+            servers.push(server);
+            proxies.push(proxy);
+        }
+        let router = Router::connect(&addrs, RouterConfig::default())
+            .expect("router must come up through the proxies");
+        ChaosPlane { servers, proxies, router }
+    }
+
+    fn teardown(self) {
+        let ChaosPlane { servers, proxies, router } = self;
+        router.shutdown();
+        for p in &proxies {
+            p.shutdown();
+        }
+        for s in servers {
+            let _ = s.shutdown();
+        }
+    }
+}
+
+/// Serve `traffic` through the plane expecting zero failures; returns
+/// the decisions in submission order.
+fn serve_clean(
+    router: &Router,
+    traffic: &[(&'static str, Vec<f32>)],
+) -> Vec<Served> {
+    let client = router.client();
+    let mut session = client.session();
+    for (id, z) in traffic {
+        session.submit_to(id, z.clone()).unwrap();
+    }
+    session
+        .wait_all(common::long_deadline())
+        .unwrap()
+        .into_iter()
+        .map(|c| {
+            let r = c.expect("plane must serve this request");
+            (r.model.to_string(), r.generation, r.decision.to_bits(), r.route)
+        })
+        .collect()
+}
+
+#[test]
+fn delays_never_change_bits_and_counts_are_conserved() {
+    if !chaos_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_CHAOS != 1");
+        return;
+    }
+    let seed = chaos_seed(0xC4A0_0001);
+    let (store, tenants) = chaos_registry("delays");
+    let traffic = build_traffic(&tenants, 160);
+    let baseline = run_in_process(&store, &traffic);
+
+    let plane = ChaosPlane::spawn(
+        &store,
+        [FaultPlan::delays(seed), FaultPlan::delays(seed ^ 1)],
+    );
+    let served = serve_clean(&plane.router, &traffic);
+    assert_eq!(
+        served, baseline,
+        "a delayed plane must stay bit-identical (seed {seed})"
+    );
+
+    // Exactly-once accounting survives the slow network.
+    let snap = plane.router.metrics();
+    assert_eq!(
+        snap.served_approx + snap.served_exact,
+        traffic.len() as u64,
+        "seed {seed}"
+    );
+    assert_eq!(snap.dropped, 0, "seed {seed}");
+    let injected: u64 =
+        plane.proxies.iter().map(|p| p.stats().delays).sum();
+    assert!(injected > 0, "no delay ever fired (seed {seed})");
+    plane.teardown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn corruption_is_caught_and_every_request_completes() {
+    if !chaos_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_CHAOS != 1");
+        return;
+    }
+    let seed = chaos_seed(0xC4A0_0002);
+    let (store, tenants) = chaos_registry("corrupt");
+    let traffic = build_traffic(&tenants, 200);
+
+    let plane = ChaosPlane::spawn(
+        &store,
+        [FaultPlan::corruption(seed), FaultPlan::corruption(seed ^ 1)],
+    );
+    let client = plane.router.client();
+    let mut session = client.session();
+    let mut accepted = 0u64;
+    for (id, z) in &traffic {
+        // Submits racing a torn-down link fail fast and typed; they
+        // are not owed a completion.
+        if session.submit_to(id, z.clone()).is_ok() {
+            accepted += 1;
+        }
+    }
+    let completions = session.wait_all(common::long_deadline()).unwrap();
+    assert_eq!(
+        completions.len() as u64,
+        accepted,
+        "exactly one completion per accepted request (seed {seed})"
+    );
+    let mut ok = 0u64;
+    for c in &completions {
+        match c {
+            Ok(_) => ok += 1,
+            // A flipped bit must surface as a typed transport error,
+            // never as a wrong answer or a hang.
+            Err(e) => assert!(
+                matches!(
+                    e.kind,
+                    PredictErrorKind::Exec { .. }
+                        | PredictErrorKind::Shutdown
+                ),
+                "unexpected error kind under corruption: {e} \
+                 (seed {seed})"
+            ),
+        }
+    }
+    let corrupted: u64 =
+        plane.proxies.iter().map(|p| p.stats().corrupted).sum();
+    assert!(corrupted >= 1, "no corruption ever fired (seed {seed})");
+
+    // Conservation across the teardown/reconnect cycles: everything
+    // the client saw succeed was served, nothing was served twice.
+    let conserved = common::poll_until(common::deadline(), || {
+        let snap = plane.router.metrics();
+        let served = snap.served_approx + snap.served_exact;
+        ok <= served && served <= accepted
+    });
+    assert!(conserved, "metrics lost or duplicated requests (seed {seed})");
+    plane.teardown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn cuts_on_one_shard_leave_the_other_bit_identical() {
+    if !chaos_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_CHAOS != 1");
+        return;
+    }
+    let seed = chaos_seed(0xC4A0_0003);
+    let (store, tenants) = chaos_registry("cuts");
+    let (victim, victim_ds) = (tenants[0].0, &tenants[0].1);
+    let survivor_traffic = build_traffic(&tenants[1..2], 120);
+    let baseline = run_in_process(&store, &survivor_traffic);
+
+    // Shard 0's link is cut mid-frame on every connection; shard 1's
+    // proxy is transparent.
+    let plane = ChaosPlane::spawn(
+        &store,
+        [FaultPlan::cuts(seed), FaultPlan::clean(seed ^ 1)],
+    );
+    let vclient = plane.router.client();
+    let mut v_accepted = 0u64;
+    for i in 0..120 {
+        let z = victim_ds.x.row(i % victim_ds.len()).to_vec();
+        if vclient.submit_to(victim, z).is_ok() {
+            v_accepted += 1;
+        }
+    }
+
+    // The survivor's tenants serve clean and bit-identical while the
+    // victim link is being severed over and over.
+    let served = serve_clean(&plane.router, &survivor_traffic);
+    assert_eq!(
+        served, baseline,
+        "survivor shard must stay bit-identical (seed {seed})"
+    );
+
+    // Exactly-once for the victim too: every accepted request gets
+    // one completion (served or typed failure), none hang.
+    for i in 0..v_accepted {
+        assert!(
+            vclient.recv(common::recv_deadline()).is_some(),
+            "victim completion {i}/{v_accepted} never arrived \
+             (seed {seed})"
+        );
+    }
+    assert!(
+        plane.proxies[0].stats().cuts >= 1,
+        "no cut ever fired (seed {seed})"
+    );
+    assert_eq!(plane.proxies[1].stats().cuts, 0);
+    plane.teardown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn black_hole_stalls_are_bounded_and_requests_complete() {
+    if !chaos_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_CHAOS != 1");
+        return;
+    }
+    let seed = chaos_seed(0xC4A0_0004);
+    let (store, tenants) = chaos_registry("blackhole");
+    let traffic = build_traffic(&tenants, 160);
+
+    let plane = ChaosPlane::spawn(
+        &store,
+        [FaultPlan::black_hole(seed), FaultPlan::black_hole(seed ^ 1)],
+    );
+    let client = plane.router.client();
+    let mut session = client.session();
+    let mut accepted = 0u64;
+    let t0 = Instant::now();
+    for (id, z) in &traffic {
+        if session.submit_to(id, z.clone()).is_ok() {
+            accepted += 1;
+        }
+    }
+    // The whole point of a *bounded* black hole: the plane never
+    // wedges. Every accepted request completes within the deadline —
+    // served, or failed typed when the stalled link was severed.
+    let completions = session.wait_all(common::long_deadline()).unwrap();
+    assert_eq!(
+        completions.len() as u64,
+        accepted,
+        "request lost to the black hole (seed {seed})"
+    );
+    assert!(
+        t0.elapsed() < common::long_deadline(),
+        "stall outlived the deadline: {:?} (seed {seed})",
+        t0.elapsed()
+    );
+    let stalls: u64 =
+        plane.proxies.iter().map(|p| p.stats().stalls).sum();
+    assert!(stalls >= 1, "no stall ever fired (seed {seed})");
+    plane.teardown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn flap_partition_backoff_stays_in_envelope_and_heals() {
+    if !chaos_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_CHAOS != 1");
+        return;
+    }
+    let seed = chaos_seed(0xC4A0_0005);
+    const REFUSALS: u32 = 4;
+    let (store, tenants) = chaos_registry("flap");
+    let (victim, victim_ds) = (tenants[0].0, &tenants[0].1);
+    let traffic = build_traffic(&tenants, 120);
+    let baseline = run_in_process(&store, &traffic);
+
+    let plane = ChaosPlane::spawn(
+        &store,
+        [FaultPlan::flap(seed, REFUSALS), FaultPlan::clean(seed ^ 1)],
+    );
+    let mut accepted = 0u64;
+    let mut ok_seen = 0u64;
+
+    // Phase 1: push victim traffic until the scheduled cut starts the
+    // partition.
+    let client = plane.router.client();
+    let t0 = Instant::now();
+    while plane.proxies[0].stats().cuts == 0 {
+        assert!(
+            t0.elapsed() < common::deadline(),
+            "flap cut never fired (seed {seed})"
+        );
+        let z = victim_ds.x.row(0).to_vec();
+        if client.submit_to(victim, z).is_ok() {
+            accepted += 1;
+            if let Some(Ok(_)) = client.recv(Duration::from_millis(200))
+            {
+                ok_seen += 1;
+            }
+        }
+    }
+
+    // Phase 2: the proxy refuses the next REFUSALS reconnection
+    // attempts, driving the backoff ladder; then it heals. Healed
+    // means a fresh session's victim request round-trips Ok.
+    let healed = common::poll_until(common::deadline(), || {
+        let c = plane.router.client();
+        let mut s = c.session();
+        if s.submit_to(victim, victim_ds.x.row(1).to_vec()).is_err() {
+            return false;
+        }
+        accepted += 1;
+        match s.wait_all(common::recv_deadline()) {
+            Ok(cs) => {
+                let all_ok = cs.iter().all(|c| c.is_ok());
+                ok_seen += cs.iter().filter(|c| c.is_ok()).count() as u64;
+                all_ok
+            }
+            Err(_) => false,
+        }
+    });
+    assert!(healed, "flap partition never healed (seed {seed})");
+
+    // The refusals really happened, the tender recorded the ladder,
+    // and the slept backoff stayed inside the documented envelope.
+    let stats = plane.proxies[0].stats();
+    assert_eq!(
+        stats.refused,
+        u64::from(REFUSALS),
+        "seed {seed}"
+    );
+    let health = plane.router.link_health();
+    assert!(
+        health[0].failures >= u64::from(REFUSALS),
+        "refused dials must be recorded as failures: {health:?} \
+         (seed {seed})"
+    );
+    assert!(
+        health[0].reconnects >= 1,
+        "tender never reconnected: {health:?} (seed {seed})"
+    );
+    assert!(
+        (50..=2000).contains(&health[0].max_backoff_ms),
+        "backoff left the 50ms→2s envelope: {health:?} (seed {seed})"
+    );
+
+    // Phase 3: the healed plane serves the full workload
+    // bit-identically to a fault-free one.
+    let served = serve_clean(&plane.router, &traffic);
+    assert_eq!(
+        served, baseline,
+        "healed plane must resume bit-identical (seed {seed})"
+    );
+    accepted += traffic.len() as u64;
+    ok_seen += traffic.len() as u64;
+
+    // Conservation across the whole flap: aggregate never loses or
+    // double-counts a request, and the reconnects surface in the
+    // snapshot's shard-health rows.
+    let conserved = common::poll_until(common::deadline(), || {
+        let snap = plane.router.metrics();
+        let served_total = snap.served_approx + snap.served_exact;
+        ok_seen <= served_total && served_total <= accepted
+    });
+    assert!(conserved, "metrics lost requests across the flap (seed {seed})");
+    let snap = plane.router.metrics();
+    let row = snap
+        .shard_health
+        .iter()
+        .find(|h| h.shard == 0)
+        .expect("shard 0 health row");
+    assert!(row.reconnects >= 1, "seed {seed}");
+    plane.teardown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn supervisor_restarts_crashed_shard_and_plane_resumes() {
+    if !chaos_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_CHAOS != 1");
+        return;
+    }
+    let (store, tenants) = chaos_registry("supervisor");
+    let (victim, victim_ds) = (tenants[0].0, &tenants[0].1);
+    let traffic = build_traffic(&tenants, 80);
+    let baseline = run_in_process(&store, &traffic);
+
+    let sup = Supervisor::start(SupervisorConfig {
+        shards: 2,
+        store: store.root().to_path_buf(),
+        binary: PathBuf::from(env!("CARGO_BIN_EXE_approxrbf")),
+        drift_tol: Some(DRIFT_TOL.parse().unwrap()),
+        health_interval: Duration::from_millis(100),
+        ..SupervisorConfig::default()
+    })
+    .expect("supervisor brings the plane up");
+    let router = Router::connect(&sup.addrs(), RouterConfig::default())
+        .expect("router connects to the supervised plane");
+
+    // Healthy plane first: bit-identical to in-process.
+    assert_eq!(serve_clean(&router, &traffic), baseline);
+
+    // Crash shard 0's process (SIGKILL, no goodbye frame). The
+    // supervisor must respawn it on its pinned address and the router
+    // must reconnect — full service restored within the deadline.
+    sup.kill_shard(0).expect("kill shard 0");
+    let restored = common::poll_until(common::deadline(), || {
+        let c = router.client();
+        let mut s = c.session();
+        if s.submit_to(victim, victim_ds.x.row(0).to_vec()).is_err() {
+            return false;
+        }
+        matches!(
+            s.wait_all(common::recv_deadline()),
+            Ok(cs) if cs.iter().all(|c| c.is_ok())
+        )
+    });
+    assert!(restored, "supervisor never restored shard 0");
+    assert!(
+        sup.restarts()[0] >= 1,
+        "restart not recorded: {:?}",
+        sup.restarts()
+    );
+    assert_eq!(
+        sup.addrs().len(),
+        2,
+        "pinned address list must survive the restart"
+    );
+
+    // The restarted plane still serves the exact same bits.
+    assert_eq!(
+        serve_clean(&router, &traffic),
+        baseline,
+        "restarted shard must serve bit-identically"
+    );
+
+    // Reconnects (router tender) and restarts (supervisor) meet in
+    // one metrics snapshot.
+    let mut snap = router.metrics();
+    snap.record_restarts(&sup.restarts());
+    let row = snap
+        .shard_health
+        .iter()
+        .find(|h| h.shard == 0)
+        .expect("shard 0 health row");
+    assert!(row.restarts >= 1, "snapshot missing supervisor restarts");
+    assert!(row.reconnects >= 1, "snapshot missing router reconnects");
+    router.shutdown();
+    sup.shutdown();
+    let _ = std::fs::remove_dir_all(store.root());
+}

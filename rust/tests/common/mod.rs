@@ -1,0 +1,127 @@
+//! Helpers shared by the socket/process e2e suites (`remote_e2e`,
+//! `chaos_e2e`): env-tunable deadlines, poll-with-timeout, and the
+//! registry/baseline builders both suites compare decisions against.
+//!
+//! Timeouts: every wait in these suites derives from one knob,
+//! `APPROXRBF_TEST_DEADLINE_MS` (default 30000), so a slow or heavily
+//! loaded runner stretches the whole suite with one setting instead
+//! of hunting hard-coded constants. Shrinking it below the default is
+//! for humans iterating locally, not CI.
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxrbf::approx::builder::build_approx_model;
+use approxrbf::approx::bounds::gamma_max_for_data;
+use approxrbf::approx::ApproxModel;
+use approxrbf::coordinator::{Coordinator, Route};
+use approxrbf::data::{synth, Dataset, UnitNormScaler};
+use approxrbf::linalg::MathBackend;
+use approxrbf::registry::ModelStore;
+use approxrbf::svm::smo::{train_csvc, SmoParams};
+use approxrbf::svm::{Kernel, SvmModel};
+
+/// Plane-wide drift tolerance used on BOTH sides of every comparison
+/// (in-process baseline and `serve-shard --drift-tol`), so int8
+/// tenants route deterministically.
+pub const DRIFT_TOL: &str = "1.0";
+
+/// Base e2e deadline in ms: `APPROXRBF_TEST_DEADLINE_MS`, default
+/// 30000. Zero or unparseable values fall back to the default.
+pub fn deadline_ms() -> u64 {
+    std::env::var("APPROXRBF_TEST_DEADLINE_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&ms| ms > 0)
+        .unwrap_or(30_000)
+}
+
+/// The base deadline: bounds any single logical wait (a completion
+/// drain, a fail-fast sweep, a service-restored poll).
+pub fn deadline() -> Duration {
+    Duration::from_millis(deadline_ms())
+}
+
+/// Double deadline for whole-session waits (`Session::wait_all` over
+/// hundreds of requests).
+pub fn long_deadline() -> Duration {
+    Duration::from_millis(deadline_ms() * 2)
+}
+
+/// Short deadline (a third of base) for receiving one completion.
+pub fn recv_deadline() -> Duration {
+    Duration::from_millis((deadline_ms() / 3).max(1))
+}
+
+/// Poll `cond` every 20 ms until it holds or `timeout` elapses;
+/// returns whether it ever held (final re-check included, so a
+/// slow-but-true condition at the boundary still passes).
+pub fn poll_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    cond()
+}
+
+/// Fresh per-process scratch dir (removed first if a previous run
+/// left it behind). The caller removes it at test end.
+pub fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("approxrbf_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Train one (exact, approx) model pair on a synthetic dataset.
+pub fn trained_pair(
+    seed: u64,
+    gamma_mult: f32,
+) -> (SvmModel, ApproxModel, Dataset) {
+    let ds = synth::two_gaussians(seed, 220, 8, 1.5);
+    let scaled = UnitNormScaler.apply_dataset(&ds);
+    let gamma = gamma_max_for_data(&scaled) * gamma_mult;
+    let (model, _) =
+        train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
+            .unwrap();
+    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
+    (model, am, scaled)
+}
+
+/// One served request: (model, generation, decision bits, route).
+pub type Served = (String, u64, u32, Route);
+
+/// The in-process `shards(1)` baseline every remote decision must
+/// bit-match.
+pub fn run_in_process(
+    store: &Arc<ModelStore>,
+    traffic: &[(&'static str, Vec<f32>)],
+) -> Vec<Served> {
+    let coord = Coordinator::builder()
+        .shards(1)
+        .max_wait(Duration::from_millis(1))
+        .quant_drift_tol(DRIFT_TOL.parse().unwrap())
+        .start_registry(store.clone())
+        .unwrap();
+    let client = coord.client();
+    let mut session = client.session();
+    for (id, z) in traffic {
+        session.submit_to(id, z.clone()).unwrap();
+    }
+    let completions = session.wait_all(long_deadline()).unwrap();
+    let rows = completions
+        .into_iter()
+        .map(|c| {
+            let r = c.expect("no failures in the baseline workload");
+            (r.model.to_string(), r.generation, r.decision.to_bits(), r.route)
+        })
+        .collect();
+    coord.shutdown().unwrap();
+    rows
+}

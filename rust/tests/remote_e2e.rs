@@ -10,65 +10,42 @@
 //!   with zero dropped or errored in-flight requests;
 //! * **fail-fast isolation** — killing one shard process turns that
 //!   shard's tenants' requests into typed `PredictError`s (no client
-//!   hang) while the surviving shard's tenants keep serving.
+//!   hang) while the surviving shard's tenants keep serving;
+//! * **rollback over the wire** — `ModelStore::rollback` plus
+//!   `Router::refresh` restores a previous generation's exact decision
+//!   bits on the remote plane, generation for generation with a local
+//!   one.
 //!
 //! Gated by `APPROXRBF_TEST_REMOTE=1` (spawns processes and binds
 //! loopback sockets); each test is a silent pass without it. CI runs
 //! the suite in the dedicated `tier1-remote` job (`make test-remote`).
+//! All waits derive from `APPROXRBF_TEST_DEADLINE_MS` (see
+//! `tests/common/mod.rs`).
+
+mod common;
 
 use std::io::BufRead;
-use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use approxrbf::approx::builder::build_approx_model;
-use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::approx::ApproxModel;
 use approxrbf::coordinator::{
-    Coordinator, PredictErrorKind, Route, RoutePolicy, TenantPolicy,
+    PredictErrorKind, Route, RoutePolicy, TenantPolicy,
 };
-use approxrbf::data::{synth, Dataset, UnitNormScaler};
-use approxrbf::linalg::MathBackend;
+use approxrbf::data::Dataset;
 use approxrbf::net::{Router, RouterConfig};
 use approxrbf::registry::{
     ModelStore, PayloadKind, PublishOptions, Substrate,
 };
-use approxrbf::svm::smo::{train_csvc, SmoParams};
-use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::Rng;
 
-/// Plane-wide drift tolerance used on BOTH sides of every comparison
-/// (in-process baseline and `serve-shard --drift-tol`), so int8 tenants
-/// route deterministically.
-const DRIFT_TOL: &str = "1.0";
+use common::{run_in_process, temp_dir, trained_pair, Served, DRIFT_TOL};
 
 fn remote_enabled() -> bool {
     match std::env::var("APPROXRBF_TEST_REMOTE") {
         Ok(v) => v == "1",
         Err(_) => false,
     }
-}
-
-fn temp_dir(tag: &str) -> PathBuf {
-    let dir = std::env::temp_dir()
-        .join(format!("approxrbf_remote_e2e_{tag}_{}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    dir
-}
-
-fn trained_pair(
-    seed: u64,
-    gamma_mult: f32,
-) -> (SvmModel, ApproxModel, Dataset) {
-    let ds = synth::two_gaussians(seed, 220, 8, 1.5);
-    let scaled = UnitNormScaler.apply_dataset(&ds);
-    let gamma = gamma_max_for_data(&scaled) * gamma_mult;
-    let (model, _) =
-        train_csvc(&scaled, Kernel::Rbf { gamma }, SmoParams::default())
-            .unwrap();
-    let am = build_approx_model(&model, MathBackend::Blocked).unwrap();
-    (model, am, scaled)
 }
 
 /// A mixed tenant set with every serving mode: a policy-pinned
@@ -165,38 +142,6 @@ fn build_traffic(
     out
 }
 
-/// One served request: (model, generation, decision bits, route).
-type Served = (String, u64, u32, Route);
-
-/// The in-process `shards(1)` baseline every remote decision must
-/// bit-match.
-fn run_in_process(
-    store: &Arc<ModelStore>,
-    traffic: &[(&'static str, Vec<f32>)],
-) -> Vec<Served> {
-    let coord = Coordinator::builder()
-        .shards(1)
-        .max_wait(Duration::from_millis(1))
-        .quant_drift_tol(DRIFT_TOL.parse().unwrap())
-        .start_registry(store.clone())
-        .unwrap();
-    let client = coord.client();
-    let mut session = client.session();
-    for (id, z) in traffic {
-        session.submit_to(id, z.clone()).unwrap();
-    }
-    let completions = session.wait_all(Duration::from_secs(60)).unwrap();
-    let rows = completions
-        .into_iter()
-        .map(|c| {
-            let r = c.expect("no failures in the baseline workload");
-            (r.model.to_string(), r.generation, r.decision.to_bits(), r.route)
-        })
-        .collect();
-    coord.shutdown().unwrap();
-    rows
-}
-
 /// One `approxrbf serve-shard` child process; killed on drop.
 struct ShardProc {
     child: Child,
@@ -282,7 +227,7 @@ fn remote_plane_is_bit_identical_to_in_process() {
     for (id, z) in &traffic {
         session.submit_to(id, z.clone()).unwrap();
     }
-    let completions = session.wait_all(Duration::from_secs(60)).unwrap();
+    let completions = session.wait_all(common::long_deadline()).unwrap();
     assert_eq!(completions.len(), baseline.len());
     let mut by_route = [0usize; 2];
     for (i, (c, want)) in completions.iter().zip(&baseline).enumerate() {
@@ -338,7 +283,7 @@ fn mid_stream_republish_over_the_wire_drops_nothing() {
     }
     while responses.len() < 40 {
         let r = client
-            .recv(Duration::from_secs(10))
+            .recv(common::recv_deadline())
             .expect("lost response before swap")
             .expect("no errors before swap");
         assert_eq!(r.generation, 1);
@@ -354,7 +299,7 @@ fn mid_stream_republish_over_the_wire_drops_nothing() {
 
     // Phase C: stream until generation 2 serves; every in-flight and
     // new completion must be Ok throughout — zero drops, zero errors.
-    let deadline = Instant::now() + Duration::from_secs(30);
+    let deadline = Instant::now() + common::deadline();
     let mut submitted = 120u64;
     let mut seen_gen2 = false;
     while !seen_gen2 {
@@ -379,7 +324,7 @@ fn mid_stream_republish_over_the_wire_drops_nothing() {
     }
     while (responses.len() as u64) < submitted {
         let r = client
-            .recv(Duration::from_secs(10))
+            .recv(common::recv_deadline())
             .expect("lost in-flight response across the remote swap")
             .expect("no errors across the remote hot swap");
         responses.push(r);
@@ -428,7 +373,7 @@ fn killing_one_shard_fails_fast_for_its_tenants_only() {
         let ds = &tenants.iter().find(|(t, _)| t == id).unwrap().1;
         client.submit_to(id, ds.x.row(0).to_vec()).unwrap();
         client
-            .recv(Duration::from_secs(10))
+            .recv(common::recv_deadline())
             .expect("warmup response")
             .expect("warmup must serve");
     }
@@ -454,7 +399,7 @@ fn killing_one_shard_fails_fast_for_its_tenants_only() {
                     );
                     victim_errors += 1;
                 }
-                Ok(_) => match client.recv(Duration::from_secs(10)) {
+                Ok(_) => match client.recv(common::recv_deadline()) {
                     Some(Err(e)) => {
                         assert!(
                             matches!(
@@ -477,7 +422,7 @@ fn killing_one_shard_fails_fast_for_its_tenants_only() {
     }
     assert_eq!(victim_errors, 40 * victims.len());
     assert!(
-        t0.elapsed() < Duration::from_secs(30),
+        t0.elapsed() < common::deadline(),
         "fail-fast path took {:?}",
         t0.elapsed()
     );
@@ -490,11 +435,90 @@ fn killing_one_shard_fails_fast_for_its_tenants_only() {
             session.submit_to(id, ds.x.row(r).to_vec()).unwrap();
         }
     }
-    let completions = session.wait_all(Duration::from_secs(30)).unwrap();
+    let completions = session.wait_all(common::deadline()).unwrap();
     assert_eq!(completions.len(), 10 * survivors.len());
     for c in completions {
         c.expect("surviving shard's tenants must keep serving");
     }
+    router.shutdown();
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn rollback_over_the_wire_matches_local_plane() {
+    if !remote_enabled() {
+        eprintln!("skipping: APPROXRBF_TEST_REMOTE != 1");
+        return;
+    }
+    let store = Arc::new(ModelStore::open(temp_dir("rollback")).unwrap());
+    let (m1, a1, ds) = trained_pair(707, 0.8);
+    assert_eq!(store.publish("roll", &m1, &a1).unwrap(), 1);
+    let traffic: Vec<(&'static str, Vec<f32>)> = (0..60)
+        .map(|i| ("roll", ds.x.row(i % ds.len()).to_vec()))
+        .collect();
+
+    let (_shards, router) = spawn_plane(&store);
+    // Serve the fixed traffic over the wire and pin the generation
+    // every response came from.
+    let serve_remote = |expect_gen: u64| -> Vec<Served> {
+        let client = router.client();
+        let mut session = client.session();
+        for (id, z) in &traffic {
+            session.submit_to(id, z.clone()).unwrap();
+        }
+        let rows: Vec<Served> = session
+            .wait_all(common::long_deadline())
+            .unwrap()
+            .into_iter()
+            .map(|c| {
+                let r = c.expect("no failures over the wire");
+                (
+                    r.model.to_string(),
+                    r.generation,
+                    r.decision.to_bits(),
+                    r.route,
+                )
+            })
+            .collect();
+        assert!(
+            rows.iter().all(|(_, g, _, _)| *g == expect_gen),
+            "expected every response from generation {expect_gen}"
+        );
+        rows
+    };
+    let bits = |rows: &[Served]| -> Vec<u32> {
+        rows.iter().map(|(_, _, b, _)| *b).collect()
+    };
+
+    // Generation 1: remote must match a local plane on the same store.
+    let remote1 = serve_remote(1);
+    assert_eq!(remote1, run_in_process(&store, &traffic));
+
+    // Generation 2: republish a different model, nudge the shard
+    // processes over the wire, compare again.
+    let (m2, a2, _) = trained_pair(808, 0.7);
+    assert_eq!(store.publish("roll", &m2, &a2).unwrap(), 2);
+    assert_eq!(router.refresh().unwrap(), 2, "both shards must ack");
+    let remote2 = serve_remote(2);
+    assert_eq!(remote2, run_in_process(&store, &traffic));
+    assert_ne!(
+        bits(&remote1),
+        bits(&remote2),
+        "distinct models must decide differently somewhere"
+    );
+
+    // Generation 3 = rollback: generation 1's payload republished as a
+    // fresh generation. The remote plane must serve generation 1's
+    // exact decision bits again — and still match a local plane.
+    assert_eq!(store.rollback("roll").unwrap(), 3);
+    assert_eq!(router.refresh().unwrap(), 2, "both shards must ack");
+    let remote3 = serve_remote(3);
+    assert_eq!(remote3, run_in_process(&store, &traffic));
+    assert_eq!(
+        bits(&remote3),
+        bits(&remote1),
+        "rollback must restore generation 1's decision bits on the wire"
+    );
     router.shutdown();
     let _ = std::fs::remove_dir_all(store.root());
 }
