@@ -6,9 +6,9 @@ CARGO_DIR := rust
 # NIGHTLY_TOOLCHAIN in .github/workflows/ci.yml).
 NIGHTLY ?= nightly-2025-05-20
 
-.PHONY: tier1 fmt lint lint-arblint build test test-sharded test-quant test-rff test-kernel-blocked test-remote test-chaos tsan miri bench-smoke doc check-pjrt artifacts
+.PHONY: tier1 fmt lint lint-arblint build test test-sharded test-quant test-rff test-v2 test-kernel-blocked test-remote test-chaos tsan miri bench-smoke doc check-pjrt artifacts
 
-tier1: fmt lint lint-arblint build test test-sharded test-quant test-rff
+tier1: fmt lint lint-arblint build test test-sharded test-quant test-rff test-v2
 
 # Mirror the extra CI jobs: rustdoc with warnings denied, and the
 # pjrt feature path against the vendored stub.
@@ -49,6 +49,12 @@ test-quant:
 # random-feature substrate, so the whole suite serves kind-6 bundles.
 test-rff:
 	cd $(CARGO_DIR) && APPROXRBF_TEST_SUBSTRATE=rff cargo test -q
+
+# Mirror the CI tier1-v2 job: every unpinned publish writes a format-v2
+# (64-byte-aligned) bundle, so the whole suite hot-swaps and serves
+# zero-copy from memory-mapped payloads.
+test-v2:
+	cd $(CARGO_DIR) && APPROXRBF_TEST_FORMAT=v2 cargo test -q
 
 # Mirror the CI tier1-quant job's second step: the sharded plane served
 # through the pinned 'blocked' quantized kernel arm (int8 decisions are
@@ -98,15 +104,19 @@ miri:
 		MIRIFLAGS="-Zmiri-env-forward=APPROXRBF_PROP_CASES -Zmiri-env-forward=APPROXRBF_QUANT_KERNEL -Zmiri-env-forward=APPROXRBF_RFF_KERNEL" \
 		APPROXRBF_PROP_CASES=2 APPROXRBF_QUANT_KERNEL=scalar \
 		APPROXRBF_RFF_KERNEL=scalar cargo +$(NIGHTLY) miri test --lib \
-		util::crc32 util::rng registry::quant linalg::rffmap \
-		linalg::quantblas net::wire
+		util::crc32 util::rng registry::quant registry::mapfile \
+		linalg::rffmap linalg::quantblas net::wire
 
-# Mirror the CI bench-smoke job: short deterministic serving_bench
-# sweep; BENCH_quant.json's kernel_arms rows must show int8
-# blocked/simd >= scalar (the CI job gates on it).
+# Mirror the CI bench-smoke job: short deterministic serving_bench and
+# registry_bench sweeps; BENCH_quant.json's kernel_arms rows must show
+# int8 blocked/simd >= scalar, and BENCH_registry.json's large int8 leg
+# must show the v2 mmap swap beating the v1 heap decode (the CI job
+# gates on both).
 bench-smoke:
 	cd $(CARGO_DIR) && APPROXRBF_BENCH_SMOKE=1 \
 		cargo bench --bench serving_bench
+	cd $(CARGO_DIR) && APPROXRBF_BENCH_SMOKE=1 \
+		cargo bench --bench registry_bench
 
 # AOT-lower the L1/L2 kernels to HLO text for the PJRT runtime
 # (requires JAX; consumed by builds with `--features pjrt`).

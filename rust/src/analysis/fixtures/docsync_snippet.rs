@@ -10,3 +10,7 @@ const KIND_B: u16 = 2;
 
 pub const FLAG_ALPHA: u64 = 1;
 pub const FLAG_BETA: u64 = 1 << 1;
+
+pub const FORMAT_V1: u16 = 1;
+pub const FORMAT_V2: u16 = 2;
+pub const PAYLOAD_ALIGN: usize = 64;

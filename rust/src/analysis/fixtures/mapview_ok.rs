@@ -1,0 +1,21 @@
+//! Lint fixture: a map-backing view reader that satisfies the safety
+//! and alloc-guard rules — cap-check call before the length-driven
+//! allocation, `SAFETY:` comment adjacent to the raw-pointer read.
+//! Never compiled — loaded via `include_str!` by the rule self-tests.
+
+fn check_view(len: usize, cap: usize) -> bool {
+    len <= cap
+}
+
+pub fn read_view(bytes: &[u8], len: usize) -> Vec<f32> {
+    if !check_view(len, bytes.len() / 4) {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(len);
+    // SAFETY: `check_view` above bounded `len * 4` within `bytes`, and
+    // `f32` has no invalid bit patterns, so the unaligned read stays
+    // in bounds and yields a valid value.
+    let head = unsafe { bytes.as_ptr().cast::<f32>().read_unaligned() };
+    out.push(head);
+    out
+}

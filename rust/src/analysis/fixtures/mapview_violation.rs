@@ -1,0 +1,11 @@
+//! Lint fixture: map-view violations — a decode-direction function
+//! that allocates from an untrusted length with no cap check, then
+//! casts through a raw pointer with no `SAFETY:` justification.
+//! Never compiled — loaded via `include_str!` by the rule self-tests.
+
+pub fn read_view(bytes: &[u8], len: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(len);
+    let head = unsafe { bytes.as_ptr().cast::<f32>().read_unaligned() };
+    out.push(head);
+    out
+}

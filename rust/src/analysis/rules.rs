@@ -12,11 +12,11 @@
 //!   the scanned sources equals the set documented in the README's
 //!   "Environment variables" table, in both directions.
 //! * `doc-sync` — wire message-kind constants match the table in
-//!   `docs/WIRE.md`; `.arbf` record-kind and flag constants match
-//!   `docs/FORMATS.md`.
-//! * `alloc-guard` — decode-direction functions in the binary-format
-//!   and wire modules show cap-check evidence before allocating from
-//!   a length that untrusted bytes control.
+//!   `docs/WIRE.md`; `.arbf` record-kind, flag and container-format
+//!   constants (`FORMAT_V*`, `PAYLOAD_ALIGN`) match `docs/FORMATS.md`.
+//! * `alloc-guard` — decode-direction functions in the binary-format,
+//!   map-backing and wire modules show cap-check evidence before
+//!   allocating from a length that untrusted bytes control.
 //! * `no-panic` — no `.unwrap()` / `.expect(` / `panic!`-family
 //!   macros in non-test serving-plane code.
 //!
@@ -50,10 +50,13 @@ pub fn no_panic_scope(rel: &str) -> bool {
         || rel == "rust/src/predictor.rs"
 }
 
-/// Files the `alloc-guard` rule covers: the two modules that parse
-/// attacker-controllable bytes (model files and wire frames).
+/// Files the `alloc-guard` rule covers: the modules that parse
+/// attacker-controllable bytes (model files, their mapped backing, and
+/// wire frames).
 pub fn alloc_scope(rel: &str) -> bool {
-    rel == "rust/src/registry/binfmt.rs" || rel == "rust/src/net/wire.rs"
+    rel == "rust/src/registry/binfmt.rs"
+        || rel == "rust/src/registry/mapfile.rs"
+        || rel == "rust/src/net/wire.rs"
 }
 
 // ---------------------------------------------------------------------
@@ -486,10 +489,12 @@ fn scan_env_vars(text: &str, prefix: &str) -> Vec<String> {
 // ---------------------------------------------------------------------
 
 /// Cross-check protocol/format constants against their documentation
-/// tables. Three legs: wire message kinds vs. `docs/WIRE.md`, `.arbf`
-/// record-kind tags vs. `docs/FORMATS.md`, and `.arbf` header flag
-/// bits vs. `docs/FORMATS.md`. Any drift — missing, extra, or a value
-/// mismatch — is a hard error in both directions.
+/// tables. Four legs: wire message kinds vs. `docs/WIRE.md`, `.arbf`
+/// record-kind tags vs. `docs/FORMATS.md`, `.arbf` header flag bits
+/// vs. `docs/FORMATS.md`, and the container-format constants
+/// (`FORMAT_V*`, `PAYLOAD_ALIGN`) vs. the FORMATS.md
+/// `` `NAME` = N `` annotations. Any drift — missing, extra, or a
+/// value mismatch — is a hard error in both directions.
 pub fn check_doc_sync(
     wire: &SourceFile,
     wire_md_rel: &str,
@@ -646,6 +651,62 @@ pub fn check_doc_sync(
                     binfmt.rel
                 ),
             ));
+        }
+    }
+
+    // Leg 4: container-format constants (`FORMAT_V*` version tags and
+    // the `PAYLOAD_ALIGN` alignment) vs. the FORMATS.md
+    // `` `NAME` = N `` annotations. The leg is skipped entirely when
+    // the code declares no such constants, so single-format trees and
+    // the snippet fixtures predating v2 stay silent.
+    let mut fmt_consts: Vec<(String, u64, usize)> =
+        scan_u16_consts(binfmt, "FORMAT_V")
+            .into_iter()
+            .map(|(n, v, l)| (n, u64::from(v), l))
+            .collect();
+    if let Some((v, l)) = scan_usize_const(binfmt, "PAYLOAD_ALIGN") {
+        fmt_consts.push(("PAYLOAD_ALIGN".to_string(), v, l));
+    }
+    if !fmt_consts.is_empty() {
+        let doc_vals = formats_named_values(formats_md);
+        for (name, value, line) in &fmt_consts {
+            match doc_vals.iter().find(|(n, _, _)| n == name) {
+                None => out.push(diag(
+                    &binfmt.rel,
+                    *line,
+                    "doc-sync",
+                    format!(
+                        "`{name}` = {value} has no `\u{60}{name}\u{60} \
+                         = {value}` annotation in `{formats_md_rel}`"
+                    ),
+                )),
+                Some((_, doc_value, doc_line)) if doc_value != value => {
+                    out.push(diag(
+                        formats_md_rel,
+                        *doc_line,
+                        "doc-sync",
+                        format!(
+                            "docs say `{name}` = {doc_value}, code \
+                             says {value}"
+                        ),
+                    ));
+                }
+                Some(_) => {}
+            }
+        }
+        for (name, value, line) in &doc_vals {
+            if !fmt_consts.iter().any(|(n, _, _)| n == name) {
+                out.push(diag(
+                    formats_md_rel,
+                    *line,
+                    "doc-sync",
+                    format!(
+                        "docs annotate `{name}` = {value} but no such \
+                         constant exists in `{}`",
+                        binfmt.rel
+                    ),
+                ));
+            }
         }
     }
     out
@@ -828,6 +889,65 @@ fn formats_flag_bits(md: &str) -> Vec<(String, u32, usize)> {
     out
 }
 
+/// `const NAME: usize = N;` in non-test code, matched by exact name:
+/// `(value, 1-based line)`.
+fn scan_usize_const(f: &SourceFile, name: &str) -> Option<(u64, usize)> {
+    for (idx, line) in f.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.trim();
+        let Some(p) = code.find("const ") else { continue };
+        let Some(rest) = code[p + "const ".len()..].strip_prefix(name)
+        else {
+            continue;
+        };
+        let Some((ty, value)) = rest.split_once('=') else { continue };
+        // `ty` must open with the type annotation, so a longer name
+        // sharing this prefix (e.g. PAYLOAD_ALIGN_MAX) never matches.
+        if !ty.trim_start().starts_with(':') || !ty.contains("usize") {
+            continue;
+        }
+        let digits: String = value
+            .chars()
+            .skip_while(|c| c.is_whitespace())
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        if let Ok(v) = digits.parse::<u64>() {
+            return Some((v, idx + 1));
+        }
+    }
+    None
+}
+
+/// `` `FORMAT_V*` = N `` / `` `PAYLOAD_ALIGN` = N `` annotations
+/// anywhere in FORMATS.md, as `(name, value, line)`.
+fn formats_named_values(md: &str) -> Vec<(String, u64, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in md.lines().enumerate() {
+        let mut rest: &str = line;
+        while let Some(open) = rest.find('\u{60}') {
+            let after = &rest[open + 1..];
+            let Some(close) = after.find('\u{60}') else { break };
+            let name = &after[..close];
+            let tail = &after[close + 1..];
+            if name.starts_with("FORMAT_V") || name == "PAYLOAD_ALIGN" {
+                if let Some(value) = tail.strip_prefix(" = ") {
+                    let digits: String = value
+                        .chars()
+                        .take_while(|c| c.is_ascii_digit())
+                        .collect();
+                    if let Ok(v) = digits.parse::<u64>() {
+                        out.push((name.to_string(), v, idx + 1));
+                    }
+                }
+            }
+            rest = tail;
+        }
+    }
+    out
+}
+
 // ---------------------------------------------------------------------
 // rule: allow-grammar
 // ---------------------------------------------------------------------
@@ -956,6 +1076,33 @@ mod tests {
         assert!(diags.iter().all(|d| d.rule == "alloc-guard"));
     }
 
+    #[test]
+    fn mapview_fixture_passes_safety_and_alloc() {
+        assert!(alloc_scope("rust/src/registry/mapfile.rs"));
+        let f = sf(
+            "rust/src/registry/mapfile.rs",
+            include_str!("fixtures/mapview_ok.rs"),
+        );
+        let mut diags = check_safety(&f);
+        diags.extend(check_alloc_guard(&f));
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn mapview_fixture_flags_naked_cast_and_unguarded_alloc() {
+        let f = sf(
+            "rust/src/registry/mapfile.rs",
+            include_str!("fixtures/mapview_violation.rs"),
+        );
+        let safety = check_safety(&f);
+        assert_eq!(safety.len(), 1, "{safety:?}");
+        assert_eq!(safety[0].rule, "safety");
+        let alloc = check_alloc_guard(&f);
+        assert_eq!(alloc.len(), 1, "{alloc:?}");
+        assert_eq!(alloc[0].rule, "alloc-guard");
+        assert!(alloc[0].message.contains("read_view"), "{alloc:?}");
+    }
+
     // ---- rule: env-doc -----------------------------------------------
 
     const FAKE_README: &str = "\
@@ -1003,7 +1150,9 @@ mod tests {
     const SNIPPET_FORMATS_MD: &str = "\
 # formats\n\n\
 | 0 | 2 | kind | u16: \u{60}1\u{60} = a, \u{60}2\u{60} = b |\n\
-flags: bit 0 (\u{60}FLAG_ALPHA\u{60}); bit 1 (\u{60}FLAG_BETA\u{60})\n";
+flags: bit 0 (\u{60}FLAG_ALPHA\u{60}); bit 1 (\u{60}FLAG_BETA\u{60})\n\
+versions: \u{60}FORMAT_V1\u{60} = 1, \u{60}FORMAT_V2\u{60} = 2; \
+payloads land on \u{60}PAYLOAD_ALIGN\u{60} = 64 boundaries\n";
 
     fn snippet_sources() -> (SourceFile, SourceFile) {
         let wire = sf(
@@ -1064,6 +1213,80 @@ flags: bit 0 (\u{60}FLAG_ALPHA\u{60}); bit 1 (\u{60}FLAG_BETA\u{60})\n";
             &flag_moved,
         );
         assert_eq!(diags.len(), 2, "{diags:?}");
+    }
+
+    #[test]
+    fn doc_sync_flags_format_const_drift() {
+        let (wire, binfmt) = snippet_sources();
+        let tampered = SNIPPET_FORMATS_MD.replace(
+            "\u{60}FORMAT_V2\u{60} = 2",
+            "\u{60}FORMAT_V2\u{60} = 9",
+        );
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            SNIPPET_WIRE_MD,
+            &binfmt,
+            "docs/FORMATS.md",
+            &tampered,
+        );
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].message.contains("FORMAT_V2"), "{diags:?}");
+    }
+
+    #[test]
+    fn doc_sync_flags_missing_and_stale_format_annotations() {
+        let (wire, binfmt) = snippet_sources();
+        // Dropping the alignment annotation while documenting a
+        // `FORMAT_V3` the code never declares must fail once in each
+        // direction.
+        let tampered = SNIPPET_FORMATS_MD.replace(
+            "payloads land on \u{60}PAYLOAD_ALIGN\u{60} = 64 boundaries",
+            "\u{60}FORMAT_V3\u{60} = 3",
+        );
+        assert_ne!(tampered, SNIPPET_FORMATS_MD);
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            SNIPPET_WIRE_MD,
+            &binfmt,
+            "docs/FORMATS.md",
+            &tampered,
+        );
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(
+            diags.iter().any(|d| d.message.contains("PAYLOAD_ALIGN")),
+            "{diags:?}"
+        );
+        assert!(
+            diags.iter().any(|d| d.message.contains("FORMAT_V3")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn doc_sync_format_leg_is_silent_without_the_consts() {
+        // A binfmt without `FORMAT_V*`/`PAYLOAD_ALIGN` (the pre-v2
+        // shape) is not checked against annotations the docs carry.
+        let wire = sf(
+            "rust/src/net/wire.rs",
+            include_str!("fixtures/docsync_snippet.rs"),
+        );
+        let binfmt = sf(
+            "rust/src/registry/binfmt.rs",
+            "const KIND_A: u16 = 1;\nconst KIND_B: u16 = 2;\n\
+             pub const FLAG_ALPHA: u64 = 1;\n\
+             pub const FLAG_BETA: u64 = 1 << 1;\n",
+        );
+        let diags = check_doc_sync(
+            &wire,
+            "docs/WIRE.md",
+            SNIPPET_WIRE_MD,
+            &binfmt,
+            "docs/FORMATS.md",
+            SNIPPET_FORMATS_MD,
+        );
+        assert!(diags.is_empty(), "{diags:?}");
     }
 
     /// Acceptance check: desyncing a live kind constant from the live

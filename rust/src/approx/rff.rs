@@ -32,6 +32,7 @@
 
 use crate::linalg::rffmap::{self, RffArm};
 use crate::linalg::vecops;
+use crate::registry::mapfile::TensorData;
 use crate::svm::{Kernel, SvmModel};
 use crate::util::Rng;
 use crate::{Error, Result};
@@ -72,8 +73,10 @@ pub struct RffModel {
     /// Stored Monte-Carlo decision-error estimate vs the exact model.
     pub err_est: f32,
     /// Folded output weights, length `D` (the `√(2/D)` feature scale
-    /// and the `2/D` kernel-estimator scale are baked in).
-    pub w: Vec<f32>,
+    /// and the `2/D` kernel-estimator scale are baked in). Owned for
+    /// v1 decodes and fits; a borrowed view over the bundle file when
+    /// decoded from a mapped format-v2 record.
+    pub w: TensorData<f32>,
     /// Feature dimension `d`.
     dim: usize,
     /// Regenerated `D×d` row-major frequency matrix (not stored).
@@ -122,8 +125,9 @@ impl RffModel {
         gamma: f32,
         bias: f32,
         err_est: f32,
-        w: Vec<f32>,
+        w: impl Into<TensorData<f32>>,
     ) -> Result<RffModel> {
+        let w = w.into();
         if dim == 0 || w.is_empty() {
             return Err(Error::InvalidArg(format!(
                 "rff model needs dim ≥ 1 and D ≥ 1 (got d={dim}, D={})",
@@ -230,7 +234,7 @@ impl RffModel {
             gamma,
             bias: exact.b,
             err_est: 0.0,
-            w,
+            w: w.into(),
             dim,
             wmat,
             phase,
@@ -305,6 +309,21 @@ impl RffModel {
     /// `W` and `φ` (the map is `O(D·d)` resident but `O(D)` on disk).
     pub fn resident_bytes(&self) -> usize {
         4 * (self.w.len() + self.wmat.len() + self.phase.len()) + 28
+    }
+
+    /// Heap share of [`RffModel::resident_bytes`]: the regenerated map
+    /// always lives on the heap; `w` does only when owned (v1 decode
+    /// or a fresh fit).
+    pub fn heap_bytes(&self) -> usize {
+        self.w.heap_bytes()
+            + 4 * (self.wmat.len() + self.phase.len())
+            + 28
+    }
+
+    /// Mapped-file share of [`RffModel::resident_bytes`] (`w` when
+    /// decoded from a mapped format-v2 record).
+    pub fn mapped_bytes(&self) -> usize {
+        self.w.mapped_bytes()
     }
 }
 

@@ -35,6 +35,12 @@ struct PerModel {
     /// (`exact`/`maclaurin`/`rff`/`f16`/`int8`); empty until the first
     /// served batch (e.g. rows created by `record_dropped` alone).
     substrate: String,
+    /// Resident-bytes *gauge* for this model's decoded entry, split
+    /// heap vs mapped (a format-v2 entry served over a memory map
+    /// charges only its scalar residue as heap). Set by the executor
+    /// at batch time ([`Metrics::set_model_bytes`]); 0 until then.
+    heap_bytes: u64,
+    mapped_bytes: u64,
 }
 
 impl PerModel {
@@ -46,12 +52,16 @@ impl PerModel {
             dropped: 0,
             latency: Welford::new(),
             substrate: String::new(),
+            heap_bytes: 0,
+            mapped_bytes: 0,
         }
     }
 
     /// Fan-in: sum counters, merge moments (never overwrite). The
     /// substrate label is not a counter: any non-empty report wins
-    /// (across a hot swap the newest generation's label sticks).
+    /// (across a hot swap the newest generation's label sticks). The
+    /// byte gauges **sum** — a model resident on several shards really
+    /// does hold one copy per shard.
     fn absorb(&mut self, other: &PerModel) {
         self.served_approx += other.served_approx;
         self.served_exact += other.served_exact;
@@ -61,6 +71,8 @@ impl PerModel {
         if !other.substrate.is_empty() {
             self.substrate = other.substrate.clone();
         }
+        self.heap_bytes += other.heap_bytes;
+        self.mapped_bytes += other.mapped_bytes;
     }
 }
 
@@ -127,6 +139,15 @@ pub struct ModelMetricsSnapshot {
     /// (`exact`/`maclaurin`/`rff`/`f16`/`int8`; empty before any
     /// served batch).
     pub substrate: String,
+    /// Actual heap bytes of this model's decoded entry (summed across
+    /// the shards listed in `shards`). A format-v2 entry served
+    /// zero-copy from a memory map reports only its scalar residue
+    /// here — the payload shows up in `mapped_bytes` instead. 0 before
+    /// any served batch.
+    pub heap_bytes: u64,
+    /// Bytes this model serves as views over mapped bundle files
+    /// (summed across shards; 0 for v1 heap-decoded entries).
+    pub mapped_bytes: u64,
 }
 
 impl ModelMetricsSnapshot {
@@ -249,6 +270,27 @@ impl Metrics {
         lock_unpoisoned(&self.inner).queue_depth = n as u64;
     }
 
+    /// Set the per-model resident-bytes gauge, split heap vs mapped.
+    /// Reported by the executor at batch time from the tenant's cached
+    /// per-generation footprint; a *gauge*, so a later report (hot
+    /// swap, migration) overwrites — [`Metrics::aggregate`] **sums**
+    /// the last-set values across shard sinks, since each shard holds
+    /// its own copy of the entry.
+    pub fn set_model_bytes(
+        &self,
+        model: &ModelId,
+        heap: usize,
+        mapped: usize,
+    ) {
+        let mut g = lock_unpoisoned(&self.inner);
+        let pm = g
+            .per_model
+            .entry(model.clone())
+            .or_insert_with(PerModel::new);
+        pm.heap_bytes = heap as u64;
+        pm.mapped_bytes = mapped as u64;
+    }
+
     /// Account for requests completed with a fail-fast error instead
     /// of a served prediction.
     pub fn record_dropped(&self, model: &ModelId, n: usize) {
@@ -358,6 +400,8 @@ impl Metrics {
                 mean_latency_s: pm.latency.mean(),
                 shards: model_shards.get(id).cloned().unwrap_or_default(),
                 substrate: pm.substrate.clone(),
+                heap_bytes: pm.heap_bytes,
+                mapped_bytes: pm.mapped_bytes,
             })
             .collect();
         per_model.sort_by(|a, b| a.id.cmp(&b.id));
@@ -459,6 +503,12 @@ impl Metrics {
                         dropped: m.dropped,
                         latency: m.latency.to_welford(),
                         substrate: m.substrate.clone(),
+                        // The byte gauges are a local-plane diagnostic:
+                        // they describe *this process's* resident
+                        // entries, so they are not transported and a
+                        // rebuilt remote sink reports 0.
+                        heap_bytes: 0,
+                        mapped_bytes: 0,
                     };
                     (id, pm)
                 })
@@ -548,6 +598,8 @@ impl MetricsSnapshot {
                         ("dropped", Json::num(m.dropped as f64)),
                         ("approx_fraction", Json::num(m.approx_fraction())),
                         ("mean_latency_s", Json::num(m.mean_latency_s)),
+                        ("heap_bytes", Json::num(m.heap_bytes as f64)),
+                        ("mapped_bytes", Json::num(m.mapped_bytes as f64)),
                         (
                             "shards",
                             Json::Arr(
@@ -654,7 +706,7 @@ impl MetricsSnapshot {
         out.push('\n');
         out.push_str(
             "model                    substrate shard  served   approx    \
-             exact  oob drop  mean lat\n",
+             exact  oob drop  mean lat    heap B  mapped B\n",
         );
         for m in &self.per_model {
             let shards = m
@@ -665,7 +717,7 @@ impl MetricsSnapshot {
                 .join(",");
             out.push_str(&format!(
                 "{:<24} {:>9} {:>5} {:>7} {:>8} {:>8} {:>4} {:>4} \
-                 {:>8.1} µs\n",
+                 {:>8.1} µs {:>9} {:>9}\n",
                 m.id,
                 if m.substrate.is_empty() { "-" } else { m.substrate.as_str() },
                 shards,
@@ -674,7 +726,9 @@ impl MetricsSnapshot {
                 m.served_exact,
                 m.out_of_bound,
                 m.dropped,
-                m.mean_latency_s * 1e6
+                m.mean_latency_s * 1e6,
+                m.heap_bytes,
+                m.mapped_bytes
             ));
         }
         out
@@ -802,6 +856,31 @@ mod tests {
         // And it survives the transportable-state roundtrip.
         let rebuilt = Metrics::from_state(&shard0.export_state());
         assert_eq!(rebuilt.snapshot().per_model[0].substrate, "rff");
+    }
+
+    #[test]
+    fn model_bytes_gauge_overwrites_locally_and_sums_across_shards() {
+        let shard0 = Metrics::new();
+        let shard1 = Metrics::new();
+        let id = mid("tenant");
+        shard0.record_batch(&id, Route::Approx, 1, "int8");
+        shard0.set_model_bytes(&id, 4096, 0);
+        // A hot swap to a mapped v2 entry overwrites the gauge.
+        shard0.set_model_bytes(&id, 64, 4032);
+        let s = shard0.snapshot();
+        assert_eq!(s.per_model[0].heap_bytes, 64);
+        assert_eq!(s.per_model[0].mapped_bytes, 4032);
+        // Fan-in sums: each shard holds its own copy of the entry.
+        shard1.set_model_bytes(&id, 64, 4032);
+        let s = Metrics::aggregate(&[&shard0, &shard1]);
+        assert_eq!(s.per_model[0].heap_bytes, 128);
+        assert_eq!(s.per_model[0].mapped_bytes, 8064);
+        let table = s.per_model_table();
+        assert!(table.contains("heap B"), "{table}");
+        assert!(table.contains("8064"), "{table}");
+        let json = s.to_json().to_string_compact();
+        assert!(json.contains("\"heap_bytes\":128"), "{json}");
+        assert!(json.contains("\"mapped_bytes\":8064"), "{json}");
     }
 
     #[test]

@@ -145,6 +145,12 @@ struct Tenant {
     /// Metrics substrate column (see [`substrate_label`]), constant
     /// per generation.
     substrate: &'static str,
+    /// Heap/mapped split of the entry's resident footprint, constant
+    /// per generation (a v2 entry served over a memory map charges
+    /// only its scalar residue as heap); reported to the per-model
+    /// metrics gauge so operators see actual heap, not payload size.
+    heap_bytes: usize,
+    mapped_bytes: usize,
     /// Refresh epoch this tenant last revalidated against.
     epoch_seen: u64,
     last_check: Instant,
@@ -172,11 +178,15 @@ impl Tenant {
         let tol = Tenant::effective_drift_tol(&entry, quant_drift_tol);
         let znorm_sq_budget = entry.znorm_sq_budget_with(tol);
         let substrate = substrate_label(&entry);
+        let (heap_bytes, mapped_bytes) =
+            (entry.heap_bytes(), entry.mapped_bytes());
         Tenant {
             entry,
             sv_norms,
             znorm_sq_budget,
             substrate,
+            heap_bytes,
+            mapped_bytes,
             epoch_seen: epoch,
             last_check: Instant::now(),
             last_used: 0,
@@ -190,6 +200,8 @@ impl Tenant {
         let tol = Tenant::effective_drift_tol(&entry, quant_drift_tol);
         self.znorm_sq_budget = entry.znorm_sq_budget_with(tol);
         self.substrate = substrate_label(&entry);
+        self.heap_bytes = entry.heap_bytes();
+        self.mapped_bytes = entry.mapped_bytes();
         self.entry = entry;
         #[cfg(feature = "pjrt")]
         {
@@ -394,6 +406,11 @@ pub(crate) fn run_worker(
             }
         };
         let generation = tenant.entry.generation;
+        // Per-model resident-bytes gauge, constant per generation and
+        // cached on the tenant; re-set per batch so a hot swap (or a
+        // v1→v2 migration that moves the payload off the heap) updates
+        // the row without extra bookkeeping.
+        metrics.set_model_bytes(&model, tenant.heap_bytes, tenant.mapped_bytes);
         // The Eq. 3.11 budget with this tenant's quantization drift
         // folded in — cached per generation on the tenant (an f32
         // entry serves the raw Maclaurin budget).

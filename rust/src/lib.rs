@@ -267,8 +267,8 @@ pub mod prelude {
     };
     pub use crate::predictor::{ApproxPredictor, PredictOutput, Predictor};
     pub use crate::registry::{
-        ModelStore, PayloadKind, PublishOptions, StoreConfig,
-        StoreEntryInfo,
+        FormatVersion, ModelStore, PayloadKind, PublishOptions,
+        StoreConfig, StoreEntryInfo,
     };
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::Engine;

@@ -11,12 +11,13 @@
 //! approxrbf bound-check --data data.txt [--gamma 0.05]
 //! approxrbf serve       --profile control-like [--policy hybrid]
 //!                       [--shards N] [--xla]
-//! approxrbf registry    publish|list|serve|rollback --store dir [--id name]
-//!                       [--model m.model] [--approx m.approx] [--warm]
-//!                       [--quantize f16|int8] [--substrate maclaurin|rff]
-//!                       [--rff-features D] [--route hybrid]
-//!                       [--tenant-max-batch N] [--tenant-max-wait-us N]
-//!                       [--resident-hint N] [--drift-tol T] [--shards N]
+//! approxrbf registry    publish|list|serve|rollback|migrate --store dir
+//!                       [--id name] [--model m.model] [--approx m.approx]
+//!                       [--warm] [--quantize f16|int8] [--format v1|v2]
+//!                       [--substrate maclaurin|rff] [--rff-features D]
+//!                       [--route hybrid] [--tenant-max-batch N]
+//!                       [--tenant-max-wait-us N] [--resident-hint N]
+//!                       [--drift-tol T] [--shards N] [--to v1|v2]
 //! approxrbf serve-shard --listen ADDR --store dir [--shards N]
 //! approxrbf serve-plane --shards N --store dir [--lanes N]
 //! approxrbf route       --shards ADDR,ADDR... [--store dir]
@@ -46,7 +47,8 @@ use approxrbf::net::{
     SupervisorConfig,
 };
 use approxrbf::registry::{
-    binfmt, ModelStore, PayloadKind, PublishOptions, Substrate,
+    binfmt, FormatVersion, ModelStore, PayloadKind, PublishOptions,
+    Substrate,
 };
 use approxrbf::svm::predict::{labels_from_decisions, ExactPredictor};
 use approxrbf::svm::smo::{train_csvc, SmoParams};
@@ -103,14 +105,15 @@ fn usage() -> String {
                bound-check report γ_MAX for a dataset (Eq. 3.11)\n  \
                serve       run the bound-aware serving coordinator\n              \
                (--shards N spreads tenants over N executor lanes)\n  \
-               registry    publish/list/serve/rollback .arbf model bundles\n              \
+               registry    publish/list/serve/rollback/migrate .arbf bundles\n              \
                (publish --store dir --id name --model m.model\n               \
-               [--warm] [--quantize f16|int8]\n               \
+               [--warm] [--quantize f16|int8] [--format v1|v2]\n               \
                [--substrate maclaurin|rff] [--rff-features D]\n               \
                [--route hybrid]\n               \
                [--tenant-max-batch N] [--tenant-max-wait-us N]\n               \
                [--resident-hint N] [--drift-tol T];\n              \
-               rollback --store dir --id name)\n  \
+               rollback --store dir --id name;\n              \
+               migrate --store dir --id name [--to v1|v2])\n  \
                serve-shard expose a registry coordinator over TCP\n              \
                (--listen 127.0.0.1:7070 --store dir [--shards N]\n               \
                [--shard-id I] [--drift-tol T])\n  \
@@ -715,8 +718,8 @@ fn tenant_policy_from_args(args: &Args) -> Result<Option<TenantPolicy>> {
     Ok(if policy.is_default() { None } else { Some(policy) })
 }
 
-/// `registry publish|list|serve|rollback` — manage and serve `.arbf`
-/// bundles.
+/// `registry publish|list|serve|rollback|migrate` — manage and serve
+/// `.arbf` bundles.
 fn cmd_registry(args: &Args) -> Result<()> {
     let action = args
         .positionals
@@ -747,12 +750,17 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 0 => None,
                 n => Some(n),
             };
+            let format = match args.get("format") {
+                Some(s) => Some(s.parse::<FormatVersion>()?),
+                None => None,
+            };
             let opts = PublishOptions {
                 policy: tenant_policy_from_args(args)?,
                 warm: args.has_flag("warm"),
                 quantize,
                 substrate,
                 rff_features,
+                format,
             };
             let described = match &opts.policy {
                 Some(p) => format!(" policy={p:?}"),
@@ -762,11 +770,12 @@ fn cmd_registry(args: &Args) -> Result<()> {
             let info = store.peek(id)?;
             println!(
                 "published '{id}' generation {generation}: d={} n_sv={} \
-                 substrate={} payload={} {} B{described} -> {}",
+                 substrate={} payload={} format={} {} B{described} -> {}",
                 info.dim,
                 info.n_sv,
                 if info.has_rff { "rff" } else { "maclaurin" },
                 info.payload,
+                info.format,
                 info.size_bytes,
                 store.root().join(format!("{id}.arbf")).display()
             );
@@ -784,6 +793,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                 "n_sv".to_string(),
                 "substrate".to_string(),
                 "payload".to_string(),
+                "format".to_string(),
                 "drift".to_string(),
                 "bytes".to_string(),
                 "policy".to_string(),
@@ -826,6 +836,7 @@ fn cmd_registry(args: &Args) -> Result<()> {
                     i.n_sv.to_string(),
                     if i.has_rff { "rff" } else { "maclaurin" }.to_string(),
                     i.payload.to_string(),
+                    i.format.to_string(),
                     drift,
                     i.size_bytes.to_string(),
                     if i.has_policy { "yes" } else { "-" }.to_string(),
@@ -919,10 +930,37 @@ fn cmd_registry(args: &Args) -> Result<()> {
             print!("{}", m.per_model_table());
             coord.shutdown()?;
         }
+        "migrate" => {
+            let id = args
+                .get("id")
+                .or_else(|| args.positionals.get(1).map(|s| s.as_str()))
+                .ok_or_else(|| {
+                    Error::InvalidArg(
+                        "registry migrate needs --id (or a positional id)"
+                            .into(),
+                    )
+                })?;
+            let to: FormatVersion = args.get_or("to", "v2").parse()?;
+            let before = store.peek(id)?;
+            let generation = store.migrate(id, to)?;
+            if generation == before.generation {
+                println!(
+                    "'{id}' already stores format {to}; nothing to migrate"
+                );
+            } else {
+                println!(
+                    "migrated '{id}' from {} to {to}: generation {} -> \
+                     {generation} (same stored values, decisions \
+                     bit-identical; serving nodes pick it up as an \
+                     ordinary hot swap)",
+                    before.format, before.generation
+                );
+            }
+        }
         other => {
             return Err(Error::InvalidArg(format!(
                 "unknown registry action '{other}' \
-                 (publish|list|serve|rollback)"
+                 (publish|list|serve|rollback|migrate)"
             )))
         }
     }

@@ -24,7 +24,20 @@
 //! ([`SvmModel::check_finite`] / [`ApproxModel::check_finite`] /
 //! [`QuantSvmModel::check`] / [`QuantApproxModel::check`]) and report
 //! [`Error::Corrupt`].
+//!
+//! Two container versions share the record vocabulary. [`FORMAT_V1`]
+//! (the default, byte-pinned by the golden corpus) packs records
+//! back-to-back and always decodes to the heap. [`FORMAT_V2`] writes
+//! every payload at a committed [`PAYLOAD_ALIGN`]-byte file offset —
+//! the record header's reserved word becomes the zero-filled pad
+//! count — and lays quantized/rff tensor segments out dense and
+//! aligned, so [`decode_bundle_mapped`] can serve
+//! [`TensorData`](super::mapfile::TensorData) views straight over a
+//! memory-mapped file with zero copies and bit-identical results.
 
+#![forbid(unsafe_code)]
+
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::approx::{ApproxModel, RffModel};
@@ -34,6 +47,7 @@ use crate::svm::{Kernel, SvmModel};
 use crate::util::crc32::crc32;
 use crate::{Error, Result};
 
+use super::mapfile::{MapFile, MapSlice, TensorData};
 use super::quant::{
     PayloadKind, QuantApproxModel, QuantMat, QuantSvmModel, QuantSymData,
     QuantSymMat, QuantVec, TenantModels,
@@ -41,8 +55,22 @@ use super::quant::{
 
 /// File magic: `ARBF`.
 pub const MAGIC: [u8; 4] = *b"ARBF";
-/// Current format version.
+/// Format version written by default (alias of [`FORMAT_V1`]).
 pub const VERSION: u16 = 1;
+/// Container format version 1: records packed back-to-back, payloads
+/// decoded to the heap. The default; byte-pinned by the golden corpus.
+pub const FORMAT_V1: u16 = 1;
+/// Container format version 2: same record kinds, CRC discipline and
+/// payload semantics as v1, but every payload starts on a
+/// [`PAYLOAD_ALIGN`]-byte file offset (the record header's reserved
+/// word carries the pad count) and quantized/rff tensor segments are
+/// dense and aligned within the payload, so a decoder can hand out
+/// views directly over a memory-mapped file.
+pub const FORMAT_V2: u16 = 2;
+/// Committed payload alignment of format v2, in bytes (one cache
+/// line; enough for every tensor element type and future SIMD loads).
+/// Pinned equal to [`super::mapfile::PAYLOAD_ALIGN`] by a unit test.
+pub const PAYLOAD_ALIGN: usize = 64;
 /// Fixed file header length in bytes.
 pub const FILE_HEADER_LEN: usize = 32;
 /// Fixed per-record header length in bytes.
@@ -90,6 +118,49 @@ const MAX_RECORDS: u16 = 16;
 /// this repo produces (wide profile: ~1500 × 2000 ≈ 3M).
 const MAX_MODEL_ELEMS: u64 = 1 << 28;
 
+/// Container format selector: v1 (packed, heap-decoded — the default)
+/// or v2 (aligned payloads a mapped decoder serves zero-copy).
+/// Parsed from the CLI `--format` flag and the `APPROXRBF_TEST_FORMAT`
+/// environment variable as `"v1"` / `"v2"`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FormatVersion {
+    #[default]
+    V1,
+    V2,
+}
+
+impl FormatVersion {
+    /// The on-disk header version number ([`FORMAT_V1`] /
+    /// [`FORMAT_V2`]).
+    pub fn number(self) -> u16 {
+        match self {
+            FormatVersion::V1 => FORMAT_V1,
+            FormatVersion::V2 => FORMAT_V2,
+        }
+    }
+}
+
+impl std::fmt::Display for FormatVersion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "v{}", self.number())
+    }
+}
+
+impl std::str::FromStr for FormatVersion {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<FormatVersion> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "v1" | "1" => Ok(FormatVersion::V1),
+            "v2" | "2" => Ok(FormatVersion::V2),
+            other => Err(Error::InvalidArg(format!(
+                "unknown format version {other:?} (expected \"v1\" or \
+                 \"v2\")"
+            ))),
+        }
+    }
+}
+
 /// Parsed fixed-size file header (the part [`peek_header`] reads
 /// without touching payloads).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,6 +186,16 @@ impl ArbfHeader {
     /// True iff the header advertises a kind-6 random-feature record.
     pub fn has_rff(&self) -> bool {
         self.flags & FLAG_RFF != 0
+    }
+
+    /// Container format as an enum ([`peek_header`] already rejected
+    /// every version other than [`FORMAT_V1`] / [`FORMAT_V2`]).
+    pub fn format(&self) -> FormatVersion {
+        if self.version == FORMAT_V2 {
+            FormatVersion::V2
+        } else {
+            FormatVersion::V1
+        }
     }
 
     /// Payload precision advertised by the header flags (the full
@@ -151,6 +232,10 @@ pub enum ModelRecord {
 #[derive(Clone, Debug)]
 pub struct Bundle {
     pub generation: u64,
+    /// Container format the bundle was decoded from — rollback and
+    /// `migrate` re-encode at this format so an archived generation
+    /// reverts byte-faithfully.
+    pub format: FormatVersion,
     /// The model pair — f32 or native quantized storage.
     pub models: TenantModels,
     /// Per-tenant serving policy, when the bundle carries one.
@@ -305,13 +390,13 @@ fn quant_svm_payload(m: &QuantSvmModel) -> Vec<u8> {
     push_u32(&mut out, d as u32);
     match &m.coef {
         QuantVec::F16(h) => {
-            for &x in h {
+            for &x in h.iter() {
                 push_u16(&mut out, x);
             }
         }
         QuantVec::Int8 { scale, q } => {
             push_f32(&mut out, *scale);
-            for &x in q {
+            for &x in q.iter() {
                 out.push(x as u8);
             }
         }
@@ -364,28 +449,28 @@ fn quant_approx_payload(a: &QuantApproxModel) -> Vec<u8> {
     push_f32(&mut out, a.max_sv_norm_sq);
     match &a.v {
         QuantVec::F16(h) => {
-            for &x in h {
+            for &x in h.iter() {
                 push_u16(&mut out, x);
             }
         }
         QuantVec::Int8 { scale, q } => {
             push_f32(&mut out, *scale);
-            for &x in q {
+            for &x in q.iter() {
                 out.push(x as u8);
             }
         }
     }
     match &a.m.data {
         QuantSymData::F16(h) => {
-            for &x in h {
+            for &x in h.iter() {
                 push_u16(&mut out, x);
             }
         }
         QuantSymData::Int8 { scales, q } => {
-            for &s in scales {
+            for &s in scales.iter() {
                 push_f32(&mut out, s);
             }
-            for &x in q {
+            for &x in q.iter() {
                 out.push(x as u8);
             }
         }
@@ -405,13 +490,143 @@ fn rff_payload(m: &RffModel) -> Vec<u8> {
     push_f32(&mut out, m.gamma);
     push_f32(&mut out, m.bias);
     push_f32(&mut out, m.err_est);
-    for &x in &m.w {
+    for &x in m.w.iter() {
+        push_f32(&mut out, x);
+    }
+    out
+}
+
+/// Zero-fill `out` up to the next [`PAYLOAD_ALIGN`] boundary, relative
+/// to the payload start — which format v2 places on an absolute
+/// 64-byte file offset, so relative alignment *is* absolute alignment.
+fn pad_payload(out: &mut Vec<u8>) {
+    let end = out.len().next_multiple_of(PAYLOAD_ALIGN);
+    out.resize(end, 0);
+}
+
+/// Format-v2 kind-4/5 role-1 payload: the same scalar prefix as v1,
+/// then each tensor segment — coefficients, int8 per-row SV scales,
+/// and a **dense row-major** SV matrix — zero-padded to a 64-byte
+/// boundary so a mapped decoder can serve typed views straight from
+/// the file. v2 trades v1's sparse row encoding for mappability.
+fn quant_svm_payload_v2(m: &QuantSvmModel) -> Vec<u8> {
+    let (tag, gamma, beta) = match m.kernel {
+        Kernel::Linear => (0u8, 0.0f32, 0.0f32),
+        Kernel::Rbf { gamma } => (1, gamma, 0.0),
+        Kernel::Poly2 { gamma, beta } => (2, gamma, beta),
+    };
+    let (n_sv, d) = (m.n_sv(), m.dim());
+    let mut out = Vec::new();
+    out.push(ROLE_SVM);
+    out.push(tag);
+    push_f32(&mut out, gamma);
+    push_f32(&mut out, beta);
+    push_f32(&mut out, m.b);
+    push_u32(&mut out, n_sv as u32);
+    push_u32(&mut out, d as u32);
+    match &m.coef {
+        QuantVec::F16(h) => {
+            pad_payload(&mut out);
+            for &x in h.iter() {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantVec::Int8 { scale, q } => {
+            push_f32(&mut out, *scale);
+            pad_payload(&mut out);
+            for &x in q.iter() {
+                out.push(x as u8);
+            }
+        }
+    }
+    pad_payload(&mut out);
+    match &m.sv {
+        QuantMat::F16 { h, .. } => {
+            for &x in h.iter() {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantMat::Int8 { scales, q, .. } => {
+            for &s in scales.iter() {
+                push_f32(&mut out, s);
+            }
+            pad_payload(&mut out);
+            for &x in q.iter() {
+                out.push(x as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Format-v2 kind-4/5 role-2 payload: v1's scalar prefix, then `v`,
+/// the int8 per-row `M` scales and the packed upper-triangle `M`
+/// each zero-padded to a 64-byte boundary (same reasoning as
+/// [`quant_svm_payload_v2`]; the v1 role-2 layout was already dense).
+fn quant_approx_payload_v2(a: &QuantApproxModel) -> Vec<u8> {
+    let d = a.dim();
+    let mut out = Vec::new();
+    out.push(ROLE_APPROX);
+    push_u32(&mut out, d as u32);
+    push_f32(&mut out, a.gamma);
+    push_f32(&mut out, a.b);
+    push_f32(&mut out, a.c);
+    push_f32(&mut out, a.max_sv_norm_sq);
+    match &a.v {
+        QuantVec::F16(h) => {
+            pad_payload(&mut out);
+            for &x in h.iter() {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantVec::Int8 { scale, q } => {
+            push_f32(&mut out, *scale);
+            pad_payload(&mut out);
+            for &x in q.iter() {
+                out.push(x as u8);
+            }
+        }
+    }
+    pad_payload(&mut out);
+    match &a.m.data {
+        QuantSymData::F16(h) => {
+            for &x in h.iter() {
+                push_u16(&mut out, x);
+            }
+        }
+        QuantSymData::Int8 { scales, q } => {
+            for &s in scales.iter() {
+                push_f32(&mut out, s);
+            }
+            pad_payload(&mut out);
+            for &x in q.iter() {
+                out.push(x as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Format-v2 kind-6 payload: the same 28-byte prefix as v1 (so
+/// [`peek_rff_summary`] serves both formats unchanged), then the
+/// folded weight vector zero-padded onto a 64-byte boundary.
+fn rff_payload_v2(m: &RffModel) -> Vec<u8> {
+    let mut out = Vec::with_capacity(PAYLOAD_ALIGN + 4 * m.n_features());
+    push_u32(&mut out, m.dim() as u32);
+    push_u32(&mut out, m.n_features() as u32);
+    push_u64(&mut out, m.seed);
+    push_f32(&mut out, m.gamma);
+    push_f32(&mut out, m.bias);
+    push_f32(&mut out, m.err_est);
+    pad_payload(&mut out);
+    for &x in m.w.iter() {
         push_f32(&mut out, x);
     }
     out
 }
 
 fn write_file(
+    format: FormatVersion,
     generation: u64,
     dim: usize,
     n_sv: usize,
@@ -420,11 +635,11 @@ fn write_file(
 ) -> Vec<u8> {
     let total: usize = records
         .iter()
-        .map(|(_, p)| RECORD_HEADER_LEN + p.len())
+        .map(|(_, p)| RECORD_HEADER_LEN + PAYLOAD_ALIGN + p.len())
         .sum();
     let mut out = Vec::with_capacity(FILE_HEADER_LEN + total);
     out.extend_from_slice(&MAGIC);
-    push_u16(&mut out, VERSION);
+    push_u16(&mut out, format.number());
     push_u16(&mut out, records.len() as u16);
     push_u64(&mut out, generation);
     push_u32(&mut out, dim as u32);
@@ -432,18 +647,33 @@ fn write_file(
     push_u64(&mut out, flags);
     for (kind, payload) in records {
         push_u16(&mut out, kind);
-        push_u16(&mut out, 0); // reserved
+        // v1: reserved, always 0 (and ignored on read). v2: the count
+        // of zero bytes inserted after this header so the payload
+        // lands on the next PAYLOAD_ALIGN-byte file offset.
+        let pad = match format {
+            FormatVersion::V1 => 0,
+            FormatVersion::V2 => {
+                // 14 header bytes still to write: pad, crc, length.
+                let header_end = out.len() + 14;
+                header_end.next_multiple_of(PAYLOAD_ALIGN) - header_end
+            }
+        };
+        push_u16(&mut out, pad as u16);
         push_u32(&mut out, crc32(&payload));
         push_u64(&mut out, payload.len() as u64);
+        out.resize(out.len() + pad, 0);
         out.extend_from_slice(&payload);
     }
     out
 }
 
 /// Encode a standalone exact model (one record, generation 0).
+/// Always format v1: standalone files hold f32 payloads, which serve
+/// from the heap in either format.
 pub fn encode_svm(model: &SvmModel) -> Result<Vec<u8>> {
     let payload = svm_payload(model)?;
     Ok(write_file(
+        FormatVersion::V1,
         0,
         model.dim(),
         model.n_sv(),
@@ -455,7 +685,14 @@ pub fn encode_svm(model: &SvmModel) -> Result<Vec<u8>> {
 /// Encode a standalone approximated model (one record, generation 0).
 pub fn encode_approx(am: &ApproxModel) -> Result<Vec<u8>> {
     let payload = approx_payload(am)?;
-    Ok(write_file(0, am.dim(), 0, 0, vec![(KIND_APPROX, payload)]))
+    Ok(write_file(
+        FormatVersion::V1,
+        0,
+        am.dim(),
+        0,
+        0,
+        vec![(KIND_APPROX, payload)],
+    ))
 }
 
 /// Encode a registry bundle: the exact model followed by its
@@ -497,18 +734,46 @@ pub fn encode_bundle_quantized(
     policy: Option<&TenantPolicy>,
     payload: PayloadKind,
 ) -> Result<Vec<u8>> {
-    // Dimension agreement is enforced once, by encode_bundle_native.
+    encode_bundle_quantized_at(
+        generation,
+        exact,
+        approx,
+        policy,
+        payload,
+        FormatVersion::V1,
+    )
+}
+
+/// [`encode_bundle_quantized`] at an explicit container format — the
+/// publish path behind `registry publish --format v2` and
+/// `PublishOptions::format`.
+pub fn encode_bundle_quantized_at(
+    generation: u64,
+    exact: &SvmModel,
+    approx: &ApproxModel,
+    policy: Option<&TenantPolicy>,
+    payload: PayloadKind,
+    format: FormatVersion,
+) -> Result<Vec<u8>> {
+    // Dimension agreement is enforced once, by encode_bundle_native_at.
     match payload {
-        PayloadKind::F32 => {
-            encode_bundle_with(generation, exact, approx, policy)
-        }
-        kind => encode_bundle_native(
+        PayloadKind::F32 => encode_bundle_native_at(
+            generation,
+            &TenantModels::F32 {
+                exact: exact.clone(),
+                approx: approx.clone(),
+            },
+            policy,
+            format,
+        ),
+        kind => encode_bundle_native_at(
             generation,
             &TenantModels::Quantized {
                 exact: QuantSvmModel::quantize(exact, kind)?,
                 approx: QuantApproxModel::quantize(approx, kind)?,
             },
             policy,
+            format,
         ),
     }
 }
@@ -524,7 +789,26 @@ pub fn encode_bundle_rff(
     rff: &RffModel,
     policy: Option<&TenantPolicy>,
 ) -> Result<Vec<u8>> {
-    encode_bundle_native(
+    encode_bundle_rff_at(
+        generation,
+        exact,
+        approx,
+        rff,
+        policy,
+        FormatVersion::V1,
+    )
+}
+
+/// [`encode_bundle_rff`] at an explicit container format.
+pub fn encode_bundle_rff_at(
+    generation: u64,
+    exact: &SvmModel,
+    approx: &ApproxModel,
+    rff: &RffModel,
+    policy: Option<&TenantPolicy>,
+    format: FormatVersion,
+) -> Result<Vec<u8>> {
+    encode_bundle_native_at(
         generation,
         &TenantModels::Rff {
             exact: exact.clone(),
@@ -532,6 +816,7 @@ pub fn encode_bundle_rff(
             rff: rff.clone(),
         },
         policy,
+        format,
     )
 }
 
@@ -545,6 +830,18 @@ pub fn encode_bundle_native(
     generation: u64,
     models: &TenantModels,
     policy: Option<&TenantPolicy>,
+) -> Result<Vec<u8>> {
+    encode_bundle_native_at(generation, models, policy, FormatVersion::V1)
+}
+
+/// [`encode_bundle_native`] at an explicit container format. The same
+/// lossless guarantee holds per format: `encode_bundle_native_at(
+/// decode(x), x.format) == x` for every well-formed `x`.
+pub fn encode_bundle_native_at(
+    generation: u64,
+    models: &TenantModels,
+    policy: Option<&TenantPolicy>,
+    format: FormatVersion,
 ) -> Result<Vec<u8>> {
     let (mut records, mut flags) = match models {
         TenantModels::F32 { exact, approx } => {
@@ -570,7 +867,10 @@ pub fn encode_bundle_native(
             }
             let sp = svm_payload(exact)?;
             let ap = approx_payload(approx)?;
-            let rp = rff_payload(rff);
+            let rp = match format {
+                FormatVersion::V1 => rff_payload(rff),
+                FormatVersion::V2 => rff_payload_v2(rff),
+            };
             (
                 vec![(KIND_SVM, sp), (KIND_APPROX, ap), (KIND_RFF, rp)],
                 FLAG_RFF,
@@ -598,13 +898,17 @@ pub fn encode_bundle_native(
                 PayloadKind::Int8 => (KIND_QUANT_INT8, FLAG_QUANT_INT8),
                 PayloadKind::F32 => unreachable!("quantized storage"),
             };
-            (
-                vec![
-                    (kind, quant_svm_payload(exact)),
-                    (kind, quant_approx_payload(approx)),
-                ],
-                flag,
-            )
+            let (sp, ap) = match format {
+                FormatVersion::V1 => (
+                    quant_svm_payload(exact),
+                    quant_approx_payload(approx),
+                ),
+                FormatVersion::V2 => (
+                    quant_svm_payload_v2(exact),
+                    quant_approx_payload_v2(approx),
+                ),
+            };
+            (vec![(kind, sp), (kind, ap)], flag)
         }
     };
     if let Some(p) = policy {
@@ -620,6 +924,7 @@ pub fn encode_bundle_native(
         flags |= FLAG_HAS_POLICY;
     }
     Ok(write_file(
+        format,
         generation,
         models.dim(),
         models.n_sv(),
@@ -706,6 +1011,78 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// One decode source for format-v2 tensor segments: scalars come from
+/// the payload [`Reader`]; each tensor comes back either as an owned
+/// vector (heap decode, `map == None`) or as a [`MapSlice`] view over
+/// the backing [`MapFile`] — the same bytes either way, so both paths
+/// produce bit-identical models.
+struct TensorSrc<'a> {
+    r: Reader<'a>,
+    /// `(backing map, absolute file offset of the payload start)` when
+    /// decoding over a mapped file on a little-endian host.
+    map: Option<(&'a Arc<MapFile>, usize)>,
+}
+
+impl<'a> TensorSrc<'a> {
+    /// Consume the zero filler up to the next [`PAYLOAD_ALIGN`]
+    /// boundary. Nonzero filler is rejected — the padding is
+    /// CRC-covered here, but the explicit check keeps the contract
+    /// that exactly one valid encoding exists for a given model.
+    fn pad(&mut self) -> Result<()> {
+        let n = self.r.pos.next_multiple_of(PAYLOAD_ALIGN) - self.r.pos;
+        let fill = self.r.take(n, "alignment padding")?;
+        if fill.iter().any(|&b| b != 0) {
+            return Err(Error::Corrupt(
+                "nonzero alignment padding inside record payload".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn u16s(&mut self, n: usize, what: &str) -> Result<TensorData<u16>> {
+        match self.map {
+            Some((map, base)) => {
+                let off = base + self.r.pos;
+                self.r.take(
+                    n.checked_mul(2).ok_or_else(|| {
+                        Error::Corrupt(format!("{what}: length overflow"))
+                    })?,
+                    what,
+                )?;
+                Ok(MapSlice::<u16>::new(map, off, n, what)?.into())
+            }
+            None => Ok(self.r.u16_vec(n, what)?.into()),
+        }
+    }
+
+    fn i8s(&mut self, n: usize, what: &str) -> Result<TensorData<i8>> {
+        match self.map {
+            Some((map, base)) => {
+                let off = base + self.r.pos;
+                self.r.take(n, what)?;
+                Ok(MapSlice::<i8>::new(map, off, n, what)?.into())
+            }
+            None => Ok(self.r.i8_vec(n, what)?.into()),
+        }
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<TensorData<f32>> {
+        match self.map {
+            Some((map, base)) => {
+                let off = base + self.r.pos;
+                self.r.take(
+                    n.checked_mul(4).ok_or_else(|| {
+                        Error::Corrupt(format!("{what}: length overflow"))
+                    })?,
+                    what,
+                )?;
+                Ok(MapSlice::<f32>::new(map, off, n, what)?.into())
+            }
+            None => Ok(self.r.f32_vec(n, what)?.into()),
+        }
+    }
+}
+
 /// Read and validate the fixed file header without touching payloads.
 /// Cheap enough for generation polling on the serving path.
 pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
@@ -717,10 +1094,10 @@ pub fn peek_header(bytes: &[u8]) -> Result<ArbfHeader> {
         )));
     }
     let version = r.u16("version")?;
-    if version != VERSION {
+    if version != FORMAT_V1 && version != FORMAT_V2 {
         return Err(Error::Corrupt(format!(
             "unsupported format version {version} (this build reads \
-             version {VERSION})"
+             versions {FORMAT_V1} and {FORMAT_V2})"
         )));
     }
     let n_records = r.u16("record count")?;
@@ -1144,6 +1521,196 @@ fn decode_quant_approx(
     Ok(model)
 }
 
+/// Format-v2 twin of [`decode_quant_payload`]: dense, 64-byte-aligned
+/// tensor segments instead of v1's sparse rows, sourced through
+/// [`TensorSrc`] so the same code serves heap and mapped decodes.
+fn decode_quant_payload_v2(
+    payload: &[u8],
+    kind: PayloadKind,
+    want_dim: u32,
+    map: Option<(&Arc<MapFile>, usize)>,
+) -> Result<ModelRecord> {
+    let mut src = TensorSrc { r: Reader { buf: payload, pos: 0 }, map };
+    let role = src.r.u8("quant record role")?;
+    let rec = match role {
+        ROLE_SVM => ModelRecord::QuantSvm(decode_quant_svm_v2(
+            &mut src, kind, want_dim,
+        )?),
+        ROLE_APPROX => ModelRecord::QuantApprox(decode_quant_approx_v2(
+            &mut src, kind, want_dim,
+        )?),
+        t => {
+            return Err(Error::Corrupt(format!(
+                "unknown quant record role {t}"
+            )))
+        }
+    };
+    if src.r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "quant record: {} trailing payload bytes",
+            payload.len() - src.r.pos
+        )));
+    }
+    Ok(rec)
+}
+
+fn decode_quant_svm_v2(
+    src: &mut TensorSrc,
+    kind: PayloadKind,
+    want_dim: u32,
+) -> Result<QuantSvmModel> {
+    let tag = src.r.u8("kernel tag")?;
+    let gamma = src.r.f32("gamma")?;
+    let beta = src.r.f32("coef0")?;
+    let b = src.r.f32("bias")?;
+    let n_sv = src.r.u32("n_sv")? as usize;
+    let d = src.r.u32("dim")? as usize;
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "quant svm record dim {d} disagrees with header dim {want_dim}"
+        )));
+    }
+    let kernel = match tag {
+        0 => Kernel::Linear,
+        1 => Kernel::Rbf { gamma },
+        2 => Kernel::Poly2 { gamma, beta },
+        t => {
+            return Err(Error::Corrupt(format!("unknown kernel tag {t}")))
+        }
+    };
+    check_svm_elems(n_sv, d)?;
+    let coef = match kind {
+        PayloadKind::F16 => {
+            src.pad()?;
+            QuantVec::F16(src.u16s(n_sv, "quantized coefficients")?)
+        }
+        PayloadKind::Int8 => {
+            let scale = src.r.f32("coef scale")?;
+            src.pad()?;
+            QuantVec::Int8 {
+                scale,
+                q: src.i8s(n_sv, "quantized coefficients")?,
+            }
+        }
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    src.pad()?;
+    let sv = match kind {
+        PayloadKind::F16 => QuantMat::F16 {
+            rows: n_sv,
+            cols: d,
+            h: src.u16s(n_sv * d, "quantized sv")?,
+        },
+        PayloadKind::Int8 => {
+            let scales = src.f32s(n_sv, "sv row scales")?;
+            src.pad()?;
+            QuantMat::Int8 {
+                rows: n_sv,
+                cols: d,
+                scales,
+                q: src.i8s(n_sv * d, "quantized sv")?,
+            }
+        }
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    let model = QuantSvmModel { kernel, b, coef, sv };
+    model.check().map_err(Error::Corrupt)?;
+    Ok(model)
+}
+
+fn decode_quant_approx_v2(
+    src: &mut TensorSrc,
+    kind: PayloadKind,
+    want_dim: u32,
+) -> Result<QuantApproxModel> {
+    let d = src.r.u32("dim")? as usize;
+    if d == 0 {
+        return Err(Error::Corrupt("quant approx record with dim 0".into()));
+    }
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "quant approx record dim {d} disagrees with header dim \
+             {want_dim}"
+        )));
+    }
+    check_approx_elems(d)?;
+    let gamma = src.r.f32("gamma")?;
+    let b = src.r.f32("b")?;
+    let c = src.r.f32("c")?;
+    let max_sv_norm_sq = src.r.f32("max_sv_norm_sq")?;
+    let packed = QuantSymMat::packed_len(d);
+    let v = match kind {
+        PayloadKind::F16 => {
+            src.pad()?;
+            QuantVec::F16(src.u16s(d, "quantized v")?)
+        }
+        PayloadKind::Int8 => {
+            let scale = src.r.f32("v scale")?;
+            src.pad()?;
+            QuantVec::Int8 { scale, q: src.i8s(d, "quantized v")? }
+        }
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    src.pad()?;
+    let data = match kind {
+        PayloadKind::F16 => {
+            QuantSymData::F16(src.u16s(packed, "quantized M upper")?)
+        }
+        PayloadKind::Int8 => {
+            let scales = src.f32s(d, "M row scales")?;
+            src.pad()?;
+            QuantSymData::Int8 {
+                scales,
+                q: src.i8s(packed, "quantized M upper")?,
+            }
+        }
+        PayloadKind::F32 => unreachable!("quant decoder"),
+    };
+    let model = QuantApproxModel {
+        gamma,
+        b,
+        c,
+        max_sv_norm_sq,
+        v,
+        m: QuantSymMat { d, data },
+    };
+    model.check().map_err(Error::Corrupt)?;
+    Ok(model)
+}
+
+/// Format-v2 twin of [`decode_rff_payload`]: the weight vector comes
+/// from the aligned segment after the (unchanged) 28-byte prefix, as
+/// a mapped view when a backing map is supplied.
+fn decode_rff_payload_v2(
+    payload: &[u8],
+    want_dim: u32,
+    map: Option<(&Arc<MapFile>, usize)>,
+) -> Result<RffModel> {
+    let mut src = TensorSrc { r: Reader { buf: payload, pos: 0 }, map };
+    let d = src.r.u32("rff dim")? as usize;
+    if d != want_dim as usize {
+        return Err(Error::Corrupt(format!(
+            "rff record dim {d} disagrees with header dim {want_dim}"
+        )));
+    }
+    let n_features = src.r.u32("rff feature count")? as usize;
+    check_rff_elems(n_features, d)?;
+    let seed = src.r.u64("rff seed")?;
+    let gamma = src.r.f32("rff gamma")?;
+    let bias = src.r.f32("rff bias")?;
+    let err_est = src.r.f32("rff err_est")?;
+    src.pad()?;
+    let w = src.f32s(n_features, "rff weights")?;
+    if src.r.pos != payload.len() {
+        return Err(Error::Corrupt(format!(
+            "rff record: {} trailing payload bytes",
+            payload.len() - src.r.pos
+        )));
+    }
+    RffModel::from_parts(d, seed, gamma, bias, err_est, w)
+        .map_err(|e| Error::Corrupt(format!("rff record: {e}")))
+}
+
 /// One record's framing facts, without decoding its payload.
 #[derive(Clone, Copy, Debug)]
 pub struct RecordFrame {
@@ -1152,6 +1719,10 @@ pub struct RecordFrame {
     pub payload_len: u64,
     /// Byte offset of the payload within the file.
     pub payload_offset: usize,
+    /// Zero-filled pad bytes between the record header and the
+    /// payload. Always 0 in format v1 (the header word is reserved
+    /// there and ignored on read).
+    pub pad: u16,
 }
 
 /// Walk the record frames of a file (header + framing validation only;
@@ -1159,13 +1730,16 @@ pub struct RecordFrame {
 /// reporting and the format-conformance corpus's CRC re-checks.
 pub fn record_frames(bytes: &[u8]) -> Result<Vec<RecordFrame>> {
     let hdr = peek_header(bytes)?;
+    let v2 = hdr.version == FORMAT_V2;
     let mut r = Reader { buf: bytes, pos: FILE_HEADER_LEN };
     let mut out = Vec::with_capacity(hdr.n_records as usize);
     for i in 0..hdr.n_records {
         let kind = r.u16("record kind")?;
-        let _reserved = r.u16("record reserved")?;
+        let reserved = r.u16("record pad")?;
         let crc = r.u32("record crc")?;
         let len = r.u64("record payload length")?;
+        let pad = check_record_pad(v2, i, reserved, r.pos)?;
+        let _ = r.take(pad as usize, "record padding")?;
         let avail = (r.buf.len() - r.pos) as u64;
         if len > avail {
             return Err(Error::Corrupt(format!(
@@ -1180,6 +1754,7 @@ pub fn record_frames(bytes: &[u8]) -> Result<Vec<RecordFrame>> {
             crc32: crc,
             payload_len: len,
             payload_offset,
+            pad,
         });
     }
     if r.pos != bytes.len() {
@@ -1189,6 +1764,30 @@ pub fn record_frames(bytes: &[u8]) -> Result<Vec<RecordFrame>> {
         )));
     }
     Ok(out)
+}
+
+/// Validate a record header's pad word. In v1 the word is reserved —
+/// ignored entirely, so pre-existing files keep decoding — and the
+/// effective pad is 0. In v2 it must place the payload on the next
+/// [`PAYLOAD_ALIGN`] boundary; `header_end` is the file offset just
+/// after the 16-byte record header.
+fn check_record_pad(
+    v2: bool,
+    record: u16,
+    reserved: u16,
+    header_end: usize,
+) -> Result<u16> {
+    if !v2 {
+        return Ok(0);
+    }
+    let expect = header_end.next_multiple_of(PAYLOAD_ALIGN) - header_end;
+    if reserved as usize != expect {
+        return Err(Error::Corrupt(format!(
+            "record {record}: pad {reserved} does not place the payload \
+             on a {PAYLOAD_ALIGN}-byte boundary (expected {expect})"
+        )));
+    }
+    Ok(reserved)
 }
 
 /// The cheaply-peekable facts of a kind-6 record: what `registry list`
@@ -1225,16 +1824,38 @@ pub fn peek_rff_summary(bytes: &[u8]) -> Result<Option<RffSummary>> {
 }
 
 /// Decode a whole `.arbf` file into its records, verifying framing and
-/// per-record CRCs.
+/// per-record CRCs. Always decodes to the heap; mapped serving goes
+/// through [`decode_bundle_mapped`].
 pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
+    decode_records(bytes, None)
+}
+
+/// Walk and decode every record. `map` supplies the mmap backing for
+/// format-v2 tensor views; `None` (or a v1 file) decodes to the heap.
+/// Every payload is CRC-verified before any view is handed out.
+fn decode_records(
+    bytes: &[u8],
+    map: Option<&Arc<MapFile>>,
+) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
     let hdr = peek_header(bytes)?;
+    let v2 = hdr.version == FORMAT_V2;
     let mut r = Reader { buf: bytes, pos: FILE_HEADER_LEN };
     let mut records = Vec::with_capacity(hdr.n_records as usize);
     for i in 0..hdr.n_records {
         let kind = r.u16("record kind")?;
-        let _reserved = r.u16("record reserved")?;
+        let reserved = r.u16("record pad")?;
         let want_crc = r.u32("record crc")?;
         let len = r.u64("record payload length")?;
+        let pad = check_record_pad(v2, i, reserved, r.pos)?;
+        // The pad bytes precede the payload, so the record CRC does
+        // not cover them: the zero check here is the only thing
+        // standing between filler tampering and silent acceptance.
+        let fill = r.take(pad as usize, "record padding")?;
+        if fill.iter().any(|&b| b != 0) {
+            return Err(Error::Corrupt(format!(
+                "record {i}: nonzero padding before payload"
+            )));
+        }
         let avail = (r.buf.len() - r.pos) as u64;
         if len > avail {
             return Err(Error::Corrupt(format!(
@@ -1242,6 +1863,7 @@ pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
                  size {avail}"
             )));
         }
+        let payload_offset = r.pos;
         let payload = r.take(len as usize, "record payload")?;
         let got_crc = crc32(payload);
         if got_crc != want_crc {
@@ -1250,6 +1872,7 @@ pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
                  computed {got_crc:#010x})"
             )));
         }
+        let src_map = map.map(|m| (m, payload_offset));
         records.push(match kind {
             KIND_SVM => ModelRecord::Svm(decode_svm_payload(payload, hdr.dim)?),
             KIND_APPROX => {
@@ -1258,12 +1881,27 @@ pub fn decode(bytes: &[u8]) -> Result<(ArbfHeader, Vec<ModelRecord>)> {
             KIND_POLICY => {
                 ModelRecord::Policy(decode_policy_payload(payload)?)
             }
+            KIND_QUANT_F16 if v2 => decode_quant_payload_v2(
+                payload,
+                PayloadKind::F16,
+                hdr.dim,
+                src_map,
+            )?,
+            KIND_QUANT_INT8 if v2 => decode_quant_payload_v2(
+                payload,
+                PayloadKind::Int8,
+                hdr.dim,
+                src_map,
+            )?,
             KIND_QUANT_F16 => {
                 decode_quant_payload(payload, PayloadKind::F16, hdr.dim)?
             }
             KIND_QUANT_INT8 => {
                 decode_quant_payload(payload, PayloadKind::Int8, hdr.dim)?
             }
+            KIND_RFF if v2 => ModelRecord::Rff(decode_rff_payload_v2(
+                payload, hdr.dim, src_map,
+            )?),
             KIND_RFF => {
                 ModelRecord::Rff(decode_rff_payload(payload, hdr.dim)?)
             }
@@ -1306,6 +1944,30 @@ pub fn decode_approx(bytes: &[u8]) -> Result<ApproxModel> {
 /// quantized bundle's records must share one precision.
 pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
     let (hdr, records) = decode(bytes)?;
+    assemble_bundle(hdr, records)
+}
+
+///// Decode a bundle over its memory-mapped backing: format-v2 tensor
+/// payloads become borrowed views into `map` (each view holds its own
+/// `Arc` clone, so the mapping outlives the store entry that loaded
+/// it), while v1 files — and big-endian hosts, where the little-endian
+/// wire layout cannot be reinterpreted in place — fall back to a plain
+/// heap decode of the mapped bytes. Every payload is CRC-verified
+/// either way.
+pub fn decode_bundle_mapped(map: &Arc<MapFile>) -> Result<Bundle> {
+    let src = if cfg!(target_endian = "little") {
+        Some(map)
+    } else {
+        None
+    };
+    let (hdr, records) = decode_records(map.bytes(), src)?;
+    assemble_bundle(hdr, records)
+}
+
+fn assemble_bundle(
+    hdr: ArbfHeader,
+    records: Vec<ModelRecord>,
+) -> Result<Bundle> {
     let mut exact = None;
     let mut approx = None;
     let mut q_exact: Option<QuantSvmModel> = None;
@@ -1373,7 +2035,12 @@ pub fn decode_bundle_full(bytes: &[u8]) -> Result<Bundle> {
             if is_rff { "holds" } else { "lacks" }
         )));
     }
-    Ok(Bundle { generation: hdr.generation, models, policy })
+    Ok(Bundle {
+        generation: hdr.generation,
+        format: hdr.format(),
+        models,
+        policy,
+    })
 }
 
 #[cfg(test)]
@@ -1826,6 +2493,7 @@ mod tests {
             QuantApproxModel::quantize(&a, PayloadKind::Int8).unwrap();
         let payload = quant_approx_payload(&qa);
         let bytes = write_file(
+            FormatVersion::V1,
             1,
             a.dim(),
             0,
@@ -2011,5 +2679,294 @@ mod tests {
             PayloadKind::Int8
         )
         .is_ok());
+    }
+
+    // -- format v2 -----------------------------------------------------
+
+    #[test]
+    fn format_version_parses_displays_and_pins_alignment() {
+        assert_eq!("v1".parse::<FormatVersion>().unwrap(), FormatVersion::V1);
+        assert_eq!("V2".parse::<FormatVersion>().unwrap(), FormatVersion::V2);
+        assert_eq!("2".parse::<FormatVersion>().unwrap(), FormatVersion::V2);
+        assert!("v3".parse::<FormatVersion>().is_err());
+        assert!("".parse::<FormatVersion>().is_err());
+        assert_eq!(FormatVersion::V1.to_string(), "v1");
+        assert_eq!(FormatVersion::V2.to_string(), "v2");
+        assert_eq!(FormatVersion::default(), FormatVersion::V1);
+        assert_eq!(FormatVersion::V1.number(), FORMAT_V1);
+        assert_eq!(FormatVersion::V2.number(), FORMAT_V2);
+        assert_eq!(VERSION, FORMAT_V1);
+        // The committed alignment and the mapfile substrate agree.
+        assert_eq!(PAYLOAD_ALIGN, crate::registry::mapfile::PAYLOAD_ALIGN);
+    }
+
+    #[test]
+    fn v2_payloads_start_on_aligned_offsets() {
+        let e = toy_svm();
+        let a = toy_approx();
+        let bundles = [
+            encode_bundle_quantized_at(
+                3, &e, &a, None, PayloadKind::F32, FormatVersion::V2,
+            )
+            .unwrap(),
+            encode_bundle_quantized_at(
+                3, &e, &a, None, PayloadKind::F16, FormatVersion::V2,
+            )
+            .unwrap(),
+            encode_bundle_quantized_at(
+                3, &e, &a, None, PayloadKind::Int8, FormatVersion::V2,
+            )
+            .unwrap(),
+            encode_bundle_rff_at(
+                3, &e, &a, &toy_rff(), None, FormatVersion::V2,
+            )
+            .unwrap(),
+        ];
+        for bytes in bundles {
+            let hdr = peek_header(&bytes).unwrap();
+            assert_eq!(hdr.version, FORMAT_V2);
+            assert_eq!(hdr.format(), FormatVersion::V2);
+            for f in record_frames(&bytes).unwrap() {
+                assert_eq!(
+                    f.payload_offset % PAYLOAD_ALIGN,
+                    0,
+                    "kind {} payload at {}",
+                    f.kind,
+                    f.payload_offset
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn v2_decodes_to_the_same_models_and_reencodes_stably() {
+        let e = toy_svm();
+        let a = toy_approx();
+        for kind in [PayloadKind::F32, PayloadKind::F16, PayloadKind::Int8] {
+            let v1 =
+                encode_bundle_quantized(5, &e, &a, None, kind).unwrap();
+            let v2 = encode_bundle_quantized_at(
+                5,
+                &e,
+                &a,
+                None,
+                kind,
+                FormatVersion::V2,
+            )
+            .unwrap();
+            let b1 = decode_bundle_full(&v1).unwrap();
+            let b2 = decode_bundle_full(&v2).unwrap();
+            assert_eq!(b1.format, FormatVersion::V1);
+            assert_eq!(b2.format, FormatVersion::V2);
+            // Same logical model through either container.
+            assert_eq!(b1.exact_dequant().coef, b2.exact_dequant().coef);
+            assert_eq!(
+                b1.exact_dequant().sv.max_abs_diff(&b2.exact_dequant().sv),
+                0.0
+            );
+            assert_eq!(b1.approx_dequant().v, b2.approx_dequant().v);
+            assert_eq!(
+                b1.approx_dequant().m.max_abs_diff(&b2.approx_dequant().m),
+                0.0
+            );
+            // Byte-stability holds per format: encode(decode(x)) == x.
+            let again = encode_bundle_native_at(
+                5,
+                &b2.models,
+                b2.policy.as_ref(),
+                FormatVersion::V2,
+            )
+            .unwrap();
+            assert_eq!(again, v2, "{kind}: v2 native re-encode drifted");
+        }
+        // Rff bundles too.
+        let rff = toy_rff();
+        let v2 = encode_bundle_rff_at(
+            9,
+            &e,
+            &a,
+            &rff,
+            None,
+            FormatVersion::V2,
+        )
+        .unwrap();
+        let b = decode_bundle_full(&v2).unwrap();
+        assert_eq!(b.format, FormatVersion::V2);
+        let TenantModels::Rff { rff: back, .. } = &b.models else {
+            panic!("expected an rff bundle");
+        };
+        assert_eq!(back.w, rff.w);
+        assert_eq!(
+            encode_bundle_native_at(
+                9,
+                &b.models,
+                b.policy.as_ref(),
+                FormatVersion::V2
+            )
+            .unwrap(),
+            v2
+        );
+        // The 28-byte prefix is format-independent, so the cheap peek
+        // works unchanged on v2.
+        let s = peek_rff_summary(&v2).unwrap().unwrap();
+        assert_eq!(s.n_features, 64);
+        assert_eq!(s.seed, rff.seed);
+    }
+
+    #[test]
+    fn v2_mapped_decode_is_bit_identical_and_borrows() {
+        let e = toy_svm();
+        let a = toy_approx();
+        for kind in [PayloadKind::F16, PayloadKind::Int8] {
+            let bytes = encode_bundle_quantized_at(
+                2,
+                &e,
+                &a,
+                None,
+                kind,
+                FormatVersion::V2,
+            )
+            .unwrap();
+            let map = Arc::new(MapFile::from_bytes(bytes.clone()));
+            let mapped = decode_bundle_mapped(&map).unwrap();
+            let heap = decode_bundle_full(&bytes).unwrap();
+            // Bit-identical models whichever storage backs them.
+            assert_eq!(
+                mapped.exact_dequant().coef,
+                heap.exact_dequant().coef
+            );
+            assert_eq!(
+                mapped
+                    .exact_dequant()
+                    .sv
+                    .max_abs_diff(&heap.exact_dequant().sv),
+                0.0
+            );
+            assert_eq!(mapped.approx_dequant().v, heap.approx_dequant().v);
+            assert_eq!(
+                mapped
+                    .approx_dequant()
+                    .m
+                    .max_abs_diff(&heap.approx_dequant().m),
+                0.0
+            );
+            // The mapped decode actually borrows (on little-endian
+            // hosts), the heap decode never does, and the two
+            // accountings tile the same resident total.
+            if cfg!(target_endian = "little") {
+                assert!(mapped.models.mapped_bytes() > 0, "{kind}");
+                assert!(
+                    mapped.models.heap_bytes()
+                        < heap.models.heap_bytes(),
+                    "{kind}"
+                );
+            }
+            assert_eq!(heap.models.mapped_bytes(), 0);
+            assert_eq!(
+                mapped.models.heap_bytes() + mapped.models.mapped_bytes(),
+                mapped.models.resident_bytes()
+            );
+        }
+        // Rff: the folded weights serve from the map; the regenerated
+        // feature map gives bit-identical decisions.
+        let bytes = encode_bundle_rff_at(
+            2,
+            &e,
+            &a,
+            &toy_rff(),
+            None,
+            FormatVersion::V2,
+        )
+        .unwrap();
+        let map = Arc::new(MapFile::from_bytes(bytes.clone()));
+        let mapped = decode_bundle_mapped(&map).unwrap();
+        let heap = decode_bundle_full(&bytes).unwrap();
+        let TenantModels::Rff { rff: rm, .. } = &mapped.models else {
+            panic!("expected an rff bundle");
+        };
+        let TenantModels::Rff { rff: rh, .. } = &heap.models else {
+            panic!("expected an rff bundle");
+        };
+        assert_eq!(rm.w, rh.w);
+        let z = [0.4f32, -0.2, 1.0];
+        assert_eq!(
+            rm.decision_one(&z).0.to_bits(),
+            rh.decision_one(&z).0.to_bits()
+        );
+        if cfg!(target_endian = "little") {
+            assert!(rm.mapped_bytes() > 0);
+        }
+        // A v1 file through the mapped entry point heap-decodes.
+        let v1 = encode_bundle_quantized(
+            1,
+            &e,
+            &a,
+            None,
+            PayloadKind::Int8,
+        )
+        .unwrap();
+        let map = Arc::new(MapFile::from_bytes(v1));
+        let b = decode_bundle_mapped(&map).unwrap();
+        assert_eq!(b.format, FormatVersion::V1);
+        assert_eq!(b.models.mapped_bytes(), 0);
+    }
+
+    #[test]
+    fn v2_pad_tampering_and_truncation_are_corrupt() {
+        let bytes = encode_bundle_quantized_at(
+            1,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::Int8,
+            FormatVersion::V2,
+        )
+        .unwrap();
+        let frames = record_frames(&bytes).unwrap();
+        let f = frames[0];
+        assert!(f.pad > 0, "first record must need padding");
+        // A corrupted pad count no longer places the payload on the
+        // committed boundary.
+        let mut bad = bytes.clone();
+        let pad_off = f.payload_offset - f.pad as usize - 14;
+        bad[pad_off] = bad[pad_off].wrapping_add(1);
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("boundary")
+        ));
+        // Nonzero filler: the pad precedes the payload, so the CRC
+        // does not cover it — the explicit zero check must refuse.
+        let mut bad = bytes.clone();
+        bad[f.payload_offset - 1] = 0xAA;
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("padding")
+        ));
+        // Truncation inside the padding region stays typed.
+        assert!(matches!(
+            decode_bundle_full(&bytes[..f.payload_offset - 8]),
+            Err(Error::Corrupt(_))
+        ));
+        // A flipped payload byte still fails the CRC on the aligned
+        // layout, mapped or not.
+        let mut bad = bytes.clone();
+        bad[f.payload_offset] ^= 0x01;
+        assert!(matches!(
+            decode_bundle_full(&bad),
+            Err(Error::Corrupt(m)) if m.contains("CRC-32")
+        ));
+        let map = Arc::new(MapFile::from_bytes(bad));
+        assert!(matches!(
+            decode_bundle_mapped(&map),
+            Err(Error::Corrupt(m)) if m.contains("CRC-32")
+        ));
+        // Every prefix truncation of a v2 bundle is typed, never a
+        // panic.
+        for cut in 0..bytes.len() {
+            assert!(matches!(
+                decode_bundle_full(&bytes[..cut]),
+                Err(Error::Corrupt(_))
+            ));
+        }
     }
 }

@@ -1,0 +1,523 @@
+//! Memory-mapped backing storage for zero-copy `.arbf` (format v2)
+//! serving.
+//!
+//! A [`MapFile`] owns the bytes of one bundle file — either a real
+//! read-only `mmap(2)` of the file (64-bit unix targets) or a portable
+//! heap fallback that reads the file into a 64-byte-aligned buffer
+//! behind the same API. A [`MapSlice`] is a bounds- and
+//! alignment-validated typed window into those bytes, and
+//! [`TensorData`] is the storage enum the quantized tensor types hold:
+//! `Owned` (the v1 heap-decode path) or `Mapped` (v2 served straight
+//! from the file). Because every `MapSlice` holds an `Arc<MapFile>`,
+//! the backing map stays alive exactly as long as any tensor view into
+//! it — the model store never has to track map lifetimes separately.
+//!
+//! **This is the only module in the crate with `unsafe` on the serving
+//! path.** The unsafe surface is three operations, each with its
+//! SAFETY argument inline: the `mmap`/`munmap` FFI pair, the
+//! `Send`/`Sync` promotion of the read-only mapping, and the
+//! `from_raw_parts` view construction (whose preconditions are
+//! enforced by [`MapSlice::new`], the only constructor). The heap
+//! fallback allocates with safe code only, so the same view-handout
+//! logic is exercised under Miri through [`MapFile::from_bytes`]
+//! (`docs/ANALYSIS.md` records why the `mmap` arm itself is
+//! `cfg`-excluded from Miri).
+//!
+//! **SIGBUS exclusion.** Reading a mapping whose file shrinks under it
+//! faults. The store's publish discipline makes that unreachable:
+//! bundles are only ever replaced by `rename(2)` of a complete temp
+//! file ([`super::store::ModelStore`]), never truncated or rewritten
+//! in place, so a mapped inode is immutable for the mapping's
+//! lifetime — a republish swaps the directory entry while the old
+//! inode lives on until the last `Arc<MapFile>` drops.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::{Error, Result};
+
+/// Committed payload alignment of `.arbf` format v2: every record
+/// payload starts at a multiple of this within the file, so typed
+/// views over `u16`/`i8`/`f32` tensors are always well aligned (and
+/// cache-line aligned for the quantized GEMV kernels). `mmap`
+/// placement is page-aligned (4096), a multiple of this, so in-file
+/// alignment carries over to virtual addresses.
+pub const PAYLOAD_ALIGN: usize = 64;
+
+/// Cap on a mappable bundle file (1 GiB of payload elements at f32 is
+/// the binfmt `MAX_MODEL_ELEMS` cap; 2 GiB of file leaves headroom for
+/// framing while keeping a corrupt length from demanding an absurd
+/// fallback allocation).
+const MAX_MAP_LEN: u64 = 2 << 30;
+
+/// Refuse to map (or heap-read) implausibly large files — the same
+/// alloc-bomb discipline the binfmt decoders apply to element counts.
+fn check_map_len(len: u64) -> Result<usize> {
+    if len > MAX_MAP_LEN {
+        return Err(Error::Corrupt(format!(
+            "bundle file of {len} bytes exceeds the {MAX_MAP_LEN}-byte \
+             map cap"
+        )));
+    }
+    Ok(len as usize)
+}
+
+#[cfg(all(unix, target_pointer_width = "64", not(miri)))]
+mod sys {
+    //! Minimal raw-mmap FFI: the two libc symbols std already links.
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+#[derive(Debug)]
+enum Backing {
+    /// A live read-only `mmap(2)` of the whole file.
+    #[cfg(all(unix, target_pointer_width = "64", not(miri)))]
+    Mmap { ptr: *const u8 },
+    /// Portable fallback: the file copied into a heap buffer whose
+    /// payload start is 64-byte aligned (`off` skips to the first
+    /// aligned byte, so views see the same alignment the mmap arm
+    /// guarantees).
+    Heap { buf: Vec<u8>, off: usize },
+}
+
+/// The immutable bytes of one `.arbf` file, mapped or heap-resident.
+/// Shared behind an `Arc` by every [`MapSlice`] view into it.
+#[derive(Debug)]
+pub struct MapFile {
+    backing: Backing,
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and never mutated or remapped after
+// construction; `Backing::Mmap::ptr` is only ever read through
+// `bytes()`, and `munmap` runs exactly once, in `Drop`, when no other
+// reference can exist. Immutable shared reads from any thread are
+// therefore race-free, the same contract `&[u8]` itself has.
+unsafe impl Send for MapFile {}
+// SAFETY: as above — all access is read-only through `bytes()`.
+unsafe impl Sync for MapFile {}
+
+impl MapFile {
+    /// Map `path` read-only, falling back to an aligned heap read when
+    /// `mmap` is unavailable (non-unix, 32-bit, Miri) or fails. Empty
+    /// files are always heap-backed (zero-length mappings are invalid).
+    pub fn open(path: &Path) -> Result<Arc<MapFile>> {
+        let file = std::fs::File::open(path)?;
+        let len = check_map_len(file.metadata()?.len())?;
+        #[cfg(all(unix, target_pointer_width = "64", not(miri)))]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            // SAFETY: mmap with a null addr hint, PROT_READ and
+            // MAP_PRIVATE over a file descriptor we own is always
+            // memory-safe: the kernel either returns a fresh mapping of
+            // `len` bytes (valid for reads until the matching munmap in
+            // Drop) or MAP_FAILED, which we check. `len > 0` and the
+            // fd outliving the call are the only preconditions.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize != -1 {
+                return Ok(Arc::new(MapFile {
+                    backing: Backing::Mmap { ptr: ptr as *const u8 },
+                    len,
+                }));
+            }
+            // mmap refused (e.g. exotic filesystem): fall through to
+            // the heap read, which serves identically.
+        }
+        let mut buf = Vec::new();
+        {
+            use std::io::Read;
+            let mut f = file;
+            f.read_to_end(&mut buf)?;
+        }
+        if buf.len() != len {
+            return Err(Error::Corrupt(format!(
+                "bundle file changed size during read ({} vs {len} \
+                 bytes)",
+                buf.len()
+            )));
+        }
+        Ok(Arc::new(MapFile::from_bytes(buf)))
+    }
+
+    /// Heap-backed map over `bytes`, re-copied so the payload start is
+    /// 64-byte aligned. The portable arm of [`MapFile::open`], and the
+    /// constructor tests (including Miri) use to exercise the view
+    /// handout without any FFI.
+    pub fn from_bytes(bytes: Vec<u8>) -> MapFile {
+        let len = bytes.len();
+        let mut buf = vec![0u8; len + PAYLOAD_ALIGN - 1];
+        let off = buf.as_ptr().align_offset(PAYLOAD_ALIGN);
+        buf[off..off + len].copy_from_slice(&bytes);
+        MapFile { backing: Backing::Heap { buf, off }, len }
+    }
+
+    /// The mapped (or heap-resident) file bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64", not(miri)))]
+            Backing::Mmap { ptr } => {
+                // SAFETY: `ptr` came from a successful mmap of exactly
+                // `self.len` readable bytes that stays live until Drop;
+                // the mapped inode is immutable under the store's
+                // rename-only publish discipline (module docs), so the
+                // bytes behind the slice never change or vanish.
+                unsafe { std::slice::from_raw_parts(*ptr, self.len) }
+            }
+            Backing::Heap { buf, off } => &buf[*off..*off + self.len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when backed by a real `mmap` (false on the heap fallback).
+    pub fn is_mmap(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64", not(miri)))]
+            Backing::Mmap { .. } => true,
+            Backing::Heap { .. } => false,
+        }
+    }
+}
+
+impl Drop for MapFile {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64", not(miri)))]
+        if let Backing::Mmap { ptr } = self.backing {
+            // SAFETY: `ptr`/`self.len` are exactly what mmap returned,
+            // unmapped exactly once (Drop), with no outstanding
+            // references (dropping the MapFile requires no Arc clones
+            // remain, and every view holds one).
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, self.len);
+            }
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u16 {}
+    impl Sealed for i8 {}
+    impl Sealed for f32 {}
+}
+
+/// Element types a [`MapSlice`] may reinterpret file bytes as. Sealed
+/// to the three tensor element types of the format, all of which are
+/// valid for every bit pattern (no padding, no niches) — the property
+/// the `from_raw_parts` in [`MapSlice::as_slice`] relies on.
+pub trait MapElem: sealed::Sealed + Copy + Send + Sync + 'static {}
+impl MapElem for u16 {}
+impl MapElem for i8 {}
+impl MapElem for f32 {}
+
+/// A typed, validated window into a [`MapFile`]: `len` elements of `T`
+/// starting `off` bytes into the file. Constructing one checks bounds,
+/// element alignment and byte order once; [`MapSlice::as_slice`] is
+/// then a constant-time pointer cast. Cloning is cheap (an `Arc`
+/// bump), and the clone keeps the whole backing map alive.
+#[derive(Clone, Debug)]
+pub struct MapSlice<T: MapElem> {
+    map: Arc<MapFile>,
+    off: usize,
+    len: usize,
+    _elem: std::marker::PhantomData<T>,
+}
+
+impl<T: MapElem> MapSlice<T> {
+    /// Validate and build a view of `len` elements at byte offset
+    /// `off`. Rejects out-of-bounds ranges, misaligned offsets and
+    /// big-endian hosts (the file is little-endian; a multi-byte view
+    /// would transpose every element), so `as_slice` has no failure
+    /// modes left.
+    pub fn new(
+        map: &Arc<MapFile>,
+        off: usize,
+        len: usize,
+        what: &str,
+    ) -> Result<MapSlice<T>> {
+        if cfg!(target_endian = "big") && std::mem::size_of::<T>() > 1 {
+            return Err(Error::InvalidArg(format!(
+                "{what}: mapped multi-byte views require a little-endian \
+                 host (decode to the heap instead)"
+            )));
+        }
+        let bytes =
+            len.checked_mul(std::mem::size_of::<T>()).ok_or_else(|| {
+                Error::Corrupt(format!("{what}: mapped length overflow"))
+            })?;
+        let end = off.checked_add(bytes).ok_or_else(|| {
+            Error::Corrupt(format!("{what}: mapped offset overflow"))
+        })?;
+        if end > map.len() {
+            return Err(Error::Corrupt(format!(
+                "{what}: mapped view [{off}, {end}) exceeds the \
+                 {}-byte file",
+                map.len()
+            )));
+        }
+        let addr = map.bytes().as_ptr() as usize + off;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return Err(Error::Corrupt(format!(
+                "{what}: mapped view at byte offset {off} is not \
+                 {}-byte aligned",
+                std::mem::align_of::<T>()
+            )));
+        }
+        Ok(MapSlice {
+            map: map.clone(),
+            off,
+            len,
+            _elem: std::marker::PhantomData,
+        })
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        let ptr = self.map.bytes()[self.off..].as_ptr();
+        // SAFETY: `new` (the only constructor) proved `off + len *
+        // size_of::<T>()` lies inside the backing bytes, that the
+        // address is aligned for T, and that the host is little-endian
+        // for multi-byte T; `T: MapElem` is sealed to types valid for
+        // every bit pattern. The backing `Arc<MapFile>` is immutable
+        // and outlives `&self`, so the slice is valid for the returned
+        // lifetime.
+        unsafe { std::slice::from_raw_parts(ptr as *const T, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Storage behind every quantized tensor (and the rff weight vector):
+/// decoded onto the heap (v1 bundles, or any decode without a backing
+/// map) or served as a view over a mapped v2 file. Derefs to `[T]`, so
+/// all element access is storage-agnostic; the only observable
+/// difference is the heap/mapped accounting split.
+#[derive(Clone, Debug)]
+pub enum TensorData<T: MapElem> {
+    Owned(Vec<T>),
+    Mapped(MapSlice<T>),
+}
+
+impl<T: MapElem> std::ops::Deref for TensorData<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            TensorData::Owned(v) => v,
+            TensorData::Mapped(s) => s.as_slice(),
+        }
+    }
+}
+
+impl<T: MapElem> From<Vec<T>> for TensorData<T> {
+    fn from(v: Vec<T>) -> TensorData<T> {
+        TensorData::Owned(v)
+    }
+}
+
+impl<T: MapElem> From<MapSlice<T>> for TensorData<T> {
+    fn from(s: MapSlice<T>) -> TensorData<T> {
+        TensorData::Mapped(s)
+    }
+}
+
+impl<T: MapElem> FromIterator<T> for TensorData<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(it: I) -> TensorData<T> {
+        TensorData::Owned(it.into_iter().collect())
+    }
+}
+
+impl<T: MapElem + PartialEq> PartialEq for TensorData<T> {
+    fn eq(&self, other: &TensorData<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: MapElem + PartialEq> PartialEq<Vec<T>> for TensorData<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: MapElem> TensorData<T> {
+    /// Bytes this tensor holds on the heap (0 when mapped).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            TensorData::Owned(v) => v.len() * std::mem::size_of::<T>(),
+            TensorData::Mapped(_) => 0,
+        }
+    }
+
+    /// Bytes this tensor serves from a mapped file (0 when owned).
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            TensorData::Owned(_) => 0,
+            TensorData::Mapped(s) => s.len() * std::mem::size_of::<T>(),
+        }
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, TensorData::Mapped(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backing(bytes: &[u8]) -> Arc<MapFile> {
+        Arc::new(MapFile::from_bytes(bytes.to_vec()))
+    }
+
+    #[test]
+    fn from_bytes_is_payload_aligned_and_faithful() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        let map = backing(&data);
+        assert_eq!(map.bytes(), &data[..]);
+        assert_eq!(map.len(), 256);
+        assert_eq!(map.bytes().as_ptr() as usize % PAYLOAD_ALIGN, 0);
+        assert!(!map.is_mmap());
+        let empty = backing(&[]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.bytes(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn map_slice_reads_typed_views() {
+        let mut bytes = Vec::new();
+        for v in [1u16, 2, 0x8000, 0xffff] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [0.5f32, -2.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = backing(&bytes);
+        let h = MapSlice::<u16>::new(&map, 0, 4, "h").unwrap();
+        assert_eq!(h.as_slice(), &[1, 2, 0x8000, 0xffff]);
+        let f = MapSlice::<f32>::new(&map, 8, 2, "f").unwrap();
+        assert_eq!(f.as_slice(), &[0.5, -2.0]);
+        let q = MapSlice::<i8>::new(&map, 0, 16, "q").unwrap();
+        assert_eq!(q.as_slice()[0], 1);
+        assert_eq!(q.as_slice()[5], -1i8);
+    }
+
+    #[test]
+    fn map_slice_rejects_out_of_bounds_and_misalignment() {
+        let map = backing(&[0u8; 64]);
+        // Past the end.
+        assert!(MapSlice::<u16>::new(&map, 0, 33, "t").is_err());
+        assert!(MapSlice::<f32>::new(&map, 64, 1, "t").is_err());
+        // Offset overflow.
+        assert!(MapSlice::<i8>::new(&map, usize::MAX, 2, "t").is_err());
+        // Misaligned multi-byte views (base is 64-aligned, so odd
+        // in-file offsets are odd addresses).
+        assert!(MapSlice::<u16>::new(&map, 1, 4, "t").is_err());
+        assert!(MapSlice::<f32>::new(&map, 2, 4, "t").is_err());
+        // i8 has no alignment to violate.
+        assert!(MapSlice::<i8>::new(&map, 1, 4, "t").is_ok());
+        // Zero-length views are fine anywhere in bounds.
+        assert!(MapSlice::<u16>::new(&map, 64, 0, "t").is_ok());
+    }
+
+    #[test]
+    fn tensor_data_derefs_and_accounts_storage() {
+        let owned: TensorData<f32> = vec![1.0f32, 2.0].into();
+        assert_eq!(&owned[..], &[1.0, 2.0]);
+        assert_eq!(owned.heap_bytes(), 8);
+        assert_eq!(owned.mapped_bytes(), 0);
+        assert!(!owned.is_mapped());
+
+        let mut bytes = Vec::new();
+        for v in [1.0f32, 2.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = backing(&bytes);
+        let mapped: TensorData<f32> =
+            MapSlice::new(&map, 0, 2, "w").unwrap().into();
+        assert_eq!(&mapped[..], &[1.0, 2.0]);
+        assert_eq!(mapped.heap_bytes(), 0);
+        assert_eq!(mapped.mapped_bytes(), 8);
+        assert!(mapped.is_mapped());
+        // Storage kinds compare by contents.
+        assert_eq!(owned, mapped);
+        let collected: TensorData<f32> = [1.0f32, 2.0].into_iter().collect();
+        assert_eq!(collected, mapped);
+    }
+
+    #[test]
+    fn mapped_views_keep_the_backing_alive() {
+        let mut bytes = Vec::new();
+        for v in [7u16, 8, 9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = backing(&bytes);
+        let view = MapSlice::<u16>::new(&map, 0, 3, "v").unwrap();
+        drop(map); // the view's Arc keeps the bytes valid
+        assert_eq!(view.as_slice(), &[7, 8, 9]);
+    }
+
+    #[cfg(not(miri))]
+    #[test]
+    fn open_maps_a_real_file_with_aligned_base() {
+        let path = std::env::temp_dir().join(format!(
+            "approxrbf_mapfile_test_{}.bin",
+            std::process::id()
+        ));
+        let data: Vec<u8> = (0..200u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let map = MapFile::open(&path).unwrap();
+        assert_eq!(map.bytes(), &data[..]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(map.is_mmap());
+        assert_eq!(map.bytes().as_ptr() as usize % PAYLOAD_ALIGN, 0);
+        // Empty files take the heap arm (zero-length maps are invalid).
+        std::fs::write(&path, b"").unwrap();
+        let empty = MapFile::open(&path).unwrap();
+        assert!(empty.is_empty() && !empty.is_mmap());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[cfg(not(miri))]
+    #[test]
+    fn open_rejects_missing_and_oversized() {
+        let missing = std::env::temp_dir().join("approxrbf_mapfile_nope");
+        assert!(MapFile::open(&missing).is_err());
+        assert!(check_map_len(MAX_MAP_LEN).is_ok());
+        assert!(check_map_len(MAX_MAP_LEN + 1).is_err());
+    }
+}

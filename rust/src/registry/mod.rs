@@ -36,10 +36,15 @@
 //!   on the id): nothing about sharding is persisted in the format,
 //!   and [`ModelStore::warm_where`] lets each shard pre-decode just
 //!   the tenants it owns.
-
-#![forbid(unsafe_code)]
+//! * [`mapfile`] — format-v2 zero-copy backing: a read-only
+//!   `mmap(2)` of the bundle file (aligned-heap fallback elsewhere)
+//!   whose 64-byte-aligned payloads the quantized tensors serve as
+//!   borrowed views, so a v2 hot-swap is O(header) instead of
+//!   O(payload). The only `unsafe` in the registry lives there; the
+//!   codec/store modules each carry `#![forbid(unsafe_code)]`.
 
 pub mod binfmt;
+pub mod mapfile;
 pub mod quant;
 pub mod store;
 
@@ -47,7 +52,10 @@ pub mod store;
 /// compared by content.
 pub type ModelId = std::sync::Arc<str>;
 
-pub use binfmt::{ArbfHeader, Bundle, ModelRecord, RffSummary};
+pub use binfmt::{
+    ArbfHeader, Bundle, FormatVersion, ModelRecord, RffSummary,
+};
+pub use mapfile::{MapFile, TensorData};
 pub use quant::{
     PayloadKind, QuantApproxModel, QuantInfo, QuantSvmModel, TenantModels,
 };

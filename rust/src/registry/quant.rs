@@ -32,7 +32,16 @@
 //! The byte-level record layouts (kind 4 = f16, kind 5 = int8) live in
 //! [`super::binfmt`]; this module owns the value-level transforms and
 //! the in-memory quantized model types.
+//!
+//! Since format v2, every quantized tensor holds its elements behind
+//! [`TensorData`]: decoded onto the heap (v1 bundles) or borrowed as a
+//! view over a memory-mapped bundle file (v2) — the arithmetic above
+//! is storage-agnostic, and [`TensorData`]'s heap/mapped accounting is
+//! what `registry list` and the serving metrics report.
 
+#![forbid(unsafe_code)]
+
+use super::mapfile::TensorData;
 use crate::approx::bounds::{ExactQuantErr, QuantErrorBound};
 use crate::approx::{ApproxModel, RffModel};
 use crate::linalg::quantblas::{self, KernelArm, QuantZ};
@@ -150,8 +159,8 @@ fn int8_dequant(scale: f32, q: i8) -> f32 {
 /// A quantized dense vector (one int8 scale for the whole vector).
 #[derive(Clone, Debug)]
 pub enum QuantVec {
-    F16(Vec<u16>),
-    Int8 { scale: f32, q: Vec<i8> },
+    F16(TensorData<u16>),
+    Int8 { scale: f32, q: TensorData<i8> },
 }
 
 impl QuantVec {
@@ -165,7 +174,7 @@ impl QuantVec {
             }
             PayloadKind::Int8 => {
                 let (scale, q) = int8_quantize_row(v)?;
-                Ok(QuantVec::Int8 { scale, q })
+                Ok(QuantVec::Int8 { scale, q: q.into() })
             }
             PayloadKind::F32 => Err(Error::InvalidArg(
                 "QuantVec::quantize: f32 is not a quantized kind".into(),
@@ -207,7 +216,7 @@ impl QuantVec {
     /// Contiguous f16 storage, when this vector is f16.
     pub fn as_f16(&self) -> Option<&[u16]> {
         match self {
-            QuantVec::F16(h) => Some(h),
+            QuantVec::F16(h) => Some(&h[..]),
             QuantVec::Int8 { .. } => None,
         }
     }
@@ -216,7 +225,7 @@ impl QuantVec {
     pub fn as_i8(&self) -> Option<(f32, &[i8])> {
         match self {
             QuantVec::F16(_) => None,
-            QuantVec::Int8 { scale, q } => Some((*scale, q)),
+            QuantVec::Int8 { scale, q } => Some((*scale, &q[..])),
         }
     }
 
@@ -254,6 +263,24 @@ impl QuantVec {
         }
     }
 
+    /// The heap-resident share of [`QuantVec::resident_bytes`] (the
+    /// whole thing for owned storage; just the scale scalar when the
+    /// codes are served from a mapped file).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            QuantVec::F16(h) => h.heap_bytes(),
+            QuantVec::Int8 { q, .. } => q.heap_bytes() + 4,
+        }
+    }
+
+    /// The mapped-file share of [`QuantVec::resident_bytes`].
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            QuantVec::F16(h) => h.mapped_bytes(),
+            QuantVec::Int8 { q, .. } => q.mapped_bytes(),
+        }
+    }
+
     fn check(&self, what: &str) -> std::result::Result<(), String> {
         match self {
             QuantVec::F16(h) => check_f16_finite(h, what),
@@ -266,8 +293,13 @@ impl QuantVec {
 /// per-row int8 scales.
 #[derive(Clone, Debug)]
 pub enum QuantMat {
-    F16 { rows: usize, cols: usize, h: Vec<u16> },
-    Int8 { rows: usize, cols: usize, scales: Vec<f32>, q: Vec<i8> },
+    F16 { rows: usize, cols: usize, h: TensorData<u16> },
+    Int8 {
+        rows: usize,
+        cols: usize,
+        scales: TensorData<f32>,
+        q: TensorData<i8>,
+    },
 }
 
 impl QuantMat {
@@ -293,7 +325,12 @@ impl QuantMat {
                     scales.push(s);
                     q.extend_from_slice(&rq);
                 }
-                Ok(QuantMat::Int8 { rows, cols, scales, q })
+                Ok(QuantMat::Int8 {
+                    rows,
+                    cols,
+                    scales: scales.into(),
+                    q: q.into(),
+                })
             }
             PayloadKind::F32 => Err(Error::InvalidArg(
                 "QuantMat::quantize: f32 is not a quantized kind".into(),
@@ -336,7 +373,7 @@ impl QuantMat {
     /// Contiguous row-major f16 storage, when this matrix is f16.
     pub fn as_f16(&self) -> Option<&[u16]> {
         match self {
-            QuantMat::F16 { h, .. } => Some(h),
+            QuantMat::F16 { h, .. } => Some(&h[..]),
             QuantMat::Int8 { .. } => None,
         }
     }
@@ -346,7 +383,9 @@ impl QuantMat {
     pub fn as_i8(&self) -> Option<(&[f32], &[i8])> {
         match self {
             QuantMat::F16 { .. } => None,
-            QuantMat::Int8 { scales, q, .. } => Some((scales, q)),
+            QuantMat::Int8 { scales, q, .. } => {
+                Some((&scales[..], &q[..]))
+            }
         }
     }
 
@@ -420,6 +459,26 @@ impl QuantMat {
         }
     }
 
+    /// The heap-resident share of [`QuantMat::resident_bytes`].
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            QuantMat::F16 { h, .. } => h.heap_bytes(),
+            QuantMat::Int8 { scales, q, .. } => {
+                q.heap_bytes() + scales.heap_bytes()
+            }
+        }
+    }
+
+    /// The mapped-file share of [`QuantMat::resident_bytes`].
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            QuantMat::F16 { h, .. } => h.mapped_bytes(),
+            QuantMat::Int8 { scales, q, .. } => {
+                q.mapped_bytes() + scales.mapped_bytes()
+            }
+        }
+    }
+
     fn check(&self, what: &str) -> std::result::Result<(), String> {
         let want = self.rows() * self.cols();
         match self {
@@ -433,7 +492,7 @@ impl QuantMat {
                 if q.len() != want || scales.len() != self.rows() {
                     return Err(format!("{what}: storage length mismatch"));
                 }
-                for &s in scales {
+                for &s in scales.iter() {
                     check_scale(s, what)?;
                 }
                 Ok(())
@@ -455,8 +514,8 @@ pub struct QuantSymMat {
 
 #[derive(Clone, Debug)]
 pub enum QuantSymData {
-    F16(Vec<u16>),
-    Int8 { scales: Vec<f32>, q: Vec<i8> },
+    F16(TensorData<u16>),
+    Int8 { scales: TensorData<f32>, q: TensorData<i8> },
 }
 
 impl QuantSymMat {
@@ -507,7 +566,7 @@ impl QuantSymMat {
                     q.extend_from_slice(&rq);
                     off += len;
                 }
-                QuantSymData::Int8 { scales, q }
+                QuantSymData::Int8 { scales: scales.into(), q: q.into() }
             }
             PayloadKind::F32 => {
                 return Err(Error::InvalidArg(
@@ -543,7 +602,7 @@ impl QuantSymMat {
     /// Contiguous packed-triangle f16 storage, when f16.
     pub fn as_f16(&self) -> Option<&[u16]> {
         match &self.data {
-            QuantSymData::F16(h) => Some(h),
+            QuantSymData::F16(h) => Some(&h[..]),
             QuantSymData::Int8 { .. } => None,
         }
     }
@@ -553,7 +612,9 @@ impl QuantSymMat {
     pub fn as_i8(&self) -> Option<(&[f32], &[i8])> {
         match &self.data {
             QuantSymData::F16(_) => None,
-            QuantSymData::Int8 { scales, q } => Some((scales, q)),
+            QuantSymData::Int8 { scales, q } => {
+                Some((&scales[..], &q[..]))
+            }
         }
     }
 
@@ -623,6 +684,26 @@ impl QuantSymMat {
         }
     }
 
+    /// The heap-resident share of [`QuantSymMat::resident_bytes`].
+    pub fn heap_bytes(&self) -> usize {
+        match &self.data {
+            QuantSymData::F16(h) => h.heap_bytes(),
+            QuantSymData::Int8 { scales, q } => {
+                q.heap_bytes() + scales.heap_bytes()
+            }
+        }
+    }
+
+    /// The mapped-file share of [`QuantSymMat::resident_bytes`].
+    pub fn mapped_bytes(&self) -> usize {
+        match &self.data {
+            QuantSymData::F16(h) => h.mapped_bytes(),
+            QuantSymData::Int8 { scales, q } => {
+                q.mapped_bytes() + scales.mapped_bytes()
+            }
+        }
+    }
+
     fn check(&self, what: &str) -> std::result::Result<(), String> {
         let want = Self::packed_len(self.d);
         match &self.data {
@@ -636,7 +717,7 @@ impl QuantSymMat {
                 if q.len() != want || scales.len() != self.d {
                     return Err(format!("{what}: storage length mismatch"));
                 }
-                for &s in scales {
+                for &s in scales.iter() {
                     check_scale(s, what)?;
                 }
                 Ok(())
@@ -824,6 +905,18 @@ impl QuantSvmModel {
         self.coef.resident_bytes() + self.sv.resident_bytes() + 16
     }
 
+    /// Heap share of [`QuantSvmModel::resident_bytes`] (everything for
+    /// a v1 decode; only scalars/scales when served from a mapped v2
+    /// bundle).
+    pub fn heap_bytes(&self) -> usize {
+        self.coef.heap_bytes() + self.sv.heap_bytes() + 16
+    }
+
+    /// Mapped-file share of [`QuantSvmModel::resident_bytes`].
+    pub fn mapped_bytes(&self) -> usize {
+        self.coef.mapped_bytes() + self.sv.mapped_bytes()
+    }
+
     /// Structural + value validation (shared by the binary decoder).
     pub fn check(&self) -> std::result::Result<(), String> {
         if self.sv.rows() != self.coef.len() {
@@ -968,6 +1061,16 @@ impl QuantApproxModel {
     /// Approximate resident footprint in bytes (storage only).
     pub fn resident_bytes(&self) -> usize {
         self.v.resident_bytes() + self.m.resident_bytes() + 20
+    }
+
+    /// Heap share of [`QuantApproxModel::resident_bytes`].
+    pub fn heap_bytes(&self) -> usize {
+        self.v.heap_bytes() + self.m.heap_bytes() + 20
+    }
+
+    /// Mapped-file share of [`QuantApproxModel::resident_bytes`].
+    pub fn mapped_bytes(&self) -> usize {
+        self.v.mapped_bytes() + self.m.mapped_bytes()
     }
 
     /// Structural + value validation (shared by the binary decoder).
@@ -1153,6 +1256,37 @@ impl TenantModels {
                 let a = 4 * (approx.dim() * approx.dim() + approx.dim()) + 20;
                 e + a + rff.resident_bytes()
             }
+        }
+    }
+
+    /// The heap-resident share of [`TenantModels::resident_bytes`] —
+    /// what the LRU budget and the metrics `per_model_table` should
+    /// charge this tenant. Equal to `resident_bytes()` for v1 heap
+    /// decodes; for a bundle served from a mapped v2 file only the
+    /// scalars, scales and regenerated rff feature map stay on the
+    /// heap.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            TenantModels::F32 { .. } => self.resident_bytes(),
+            TenantModels::Quantized { exact, approx } => {
+                exact.heap_bytes() + approx.heap_bytes()
+            }
+            TenantModels::Rff { exact, approx, rff } => {
+                let e = 4 * (exact.n_sv() * exact.dim() + exact.n_sv()) + 16;
+                let a = 4 * (approx.dim() * approx.dim() + approx.dim()) + 20;
+                e + a + rff.heap_bytes()
+            }
+        }
+    }
+
+    /// The mapped-file share of [`TenantModels::resident_bytes`].
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            TenantModels::F32 { .. } => 0,
+            TenantModels::Quantized { exact, approx } => {
+                exact.mapped_bytes() + approx.mapped_bytes()
+            }
+            TenantModels::Rff { rff, .. } => rff.mapped_bytes(),
         }
     }
 }

@@ -25,6 +25,18 @@
 //!   subset of stored bundles a predicate claims; a sharded
 //!   coordinator's lanes use it at startup to each warm only the
 //!   tenants rendezvous placement assigns to them.
+//! * **Zero-copy v2 serving** — bundles load through a read-only
+//!   memory map ([`super::mapfile::MapFile`]); format-v2 payloads are
+//!   64-byte aligned in the file, so quantized tensors (and the rff
+//!   weight vector) become borrowed views over the mapped bytes and a
+//!   load decodes O(header) instead of O(payload). Each view holds an
+//!   `Arc` of the backing map, so the mapping lives exactly as long as
+//!   the entry. [`PublishOptions::format`] (or the
+//!   `APPROXRBF_TEST_FORMAT` environment override) selects the
+//!   container format; [`ModelStore::migrate`] re-encodes a stored
+//!   bundle across formats losslessly as a new generation.
+
+#![forbid(unsafe_code)]
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -39,7 +51,8 @@ use crate::log_warn;
 use crate::svm::SvmModel;
 use crate::{Error, Result};
 
-use super::binfmt;
+use super::binfmt::{self, FormatVersion};
+use super::mapfile::MapFile;
 use super::quant::{PayloadKind, QuantInfo, TenantModels};
 use super::ModelId;
 
@@ -138,6 +151,13 @@ pub struct PublishOptions {
     /// runs the adaptive ladder
     /// ([`crate::approx::rff::RffModel::fit`]).
     pub rff_features: Option<usize>,
+    /// Container format of the published bundle: `Some` forces it;
+    /// `None` defers to the `APPROXRBF_TEST_FORMAT` environment
+    /// override (`v2`; the CI `tier1-v2` job runs the whole suite with
+    /// it set), defaulting to v1. Format v2 lays payloads out
+    /// 64-byte-aligned so loads serve them zero-copy from a memory
+    /// map; decisions are bit-identical across formats either way.
+    pub format: Option<FormatVersion>,
 }
 
 /// Default payload precision for publishes that don't pin one: the
@@ -159,6 +179,27 @@ fn default_publish_payload() -> PayloadKind {
         });
     }
     kind
+}
+
+/// Default container format for publishes that don't pin one: the
+/// `APPROXRBF_TEST_FORMAT` environment variable when set (logged
+/// once), else v1.
+fn default_publish_format() -> FormatVersion {
+    let format = std::env::var("APPROXRBF_TEST_FORMAT")
+        .ok()
+        .and_then(|s| s.parse::<FormatVersion>().ok())
+        .unwrap_or(FormatVersion::V1);
+    if format != FormatVersion::V1 {
+        static ANNOUNCED: std::sync::Once = std::sync::Once::new();
+        ANNOUNCED.call_once(|| {
+            log_warn!(
+                "registry: APPROXRBF_TEST_FORMAT={format} overrides the \
+                 default publish format (PublishOptions::format still \
+                 wins)"
+            );
+        });
+    }
+    format
 }
 
 /// Default substrate for publishes that don't pin one: the
@@ -279,9 +320,27 @@ impl ModelEntry {
         self.models.approx_dequant()
     }
 
-    /// Approximate resident footprint of the model pair in bytes.
+    /// Approximate resident footprint of the model pair in bytes
+    /// (heap + mapped; see [`ModelEntry::heap_bytes`]).
     pub fn resident_bytes(&self) -> usize {
         self.models.resident_bytes()
+    }
+
+    /// Bytes of the model pair actually resident on the heap. For a
+    /// format-v2 entry served over a memory map the quantized tensors
+    /// (and rff weights) are views, so this is just the scalar /
+    /// metadata residue — the number the LRU budget and per-model
+    /// metrics should charge, where [`ModelEntry::resident_bytes`]
+    /// would overcount by the whole payload.
+    pub fn heap_bytes(&self) -> usize {
+        self.models.heap_bytes()
+    }
+
+    /// Bytes served as borrowed views over a mapped bundle file (0 for
+    /// heap-decoded entries). `heap_bytes() + mapped_bytes() ==
+    /// resident_bytes()` always holds.
+    pub fn mapped_bytes(&self) -> usize {
+        self.models.mapped_bytes()
     }
 }
 
@@ -299,6 +358,9 @@ pub struct StoreEntryInfo {
     pub payload: PayloadKind,
     /// True iff the header flags advertise an rff (kind-6) bundle.
     pub has_rff: bool,
+    /// Container format stamped in the header (v1 heap-decoded, v2
+    /// zero-copy mappable).
+    pub format: FormatVersion,
 }
 
 struct Cache {
@@ -581,6 +643,7 @@ impl ModelStore {
             }
             None => default_publish_substrate(),
         };
+        let format = opts.format.unwrap_or_else(default_publish_format);
         let (payload, bytes) = match substrate {
             Substrate::Rff => {
                 if let Some(kind) = opts.quantize {
@@ -596,24 +659,26 @@ impl ModelStore {
                     opts.rff_features,
                     rff::seed_for_id(id),
                 )?;
-                let bytes = binfmt::encode_bundle_rff(
+                let bytes = binfmt::encode_bundle_rff_at(
                     generation,
                     exact,
                     approx,
                     &rffm,
                     opts.policy.as_ref(),
+                    format,
                 )?;
                 (PayloadKind::F32, bytes)
             }
             Substrate::Maclaurin => {
                 let payload =
                     opts.quantize.unwrap_or_else(default_publish_payload);
-                let bytes = binfmt::encode_bundle_quantized(
+                let bytes = binfmt::encode_bundle_quantized_at(
                     generation,
                     exact,
                     approx,
                     opts.policy.as_ref(),
                     payload,
+                    format,
                 )?;
                 (payload, bytes)
             }
@@ -625,10 +690,11 @@ impl ModelStore {
         // Invalidate so the next load picks the new generation up —
         // or, when warming, seed the cache. An f32 Maclaurin warm seeds
         // the state already in memory (no decode, no disk read on first
-        // request); a quantized or rff warm decodes the bytes just
-        // written, so the warmed entry is exactly what any other lane
-        // loads from disk (sharded planes must stay
-        // decision-identical).
+        // request); a quantized or rff warm decodes the file just
+        // renamed into place through the same mapped path load() takes,
+        // so the warmed entry is exactly what any other lane loads from
+        // disk — bit-identical decisions *and* the same borrowed-vs-heap
+        // storage (sharded planes must stay decision-identical).
         let mut cache = self.cache.lock().unwrap();
         cache.entries.remove(id);
         if opts.warm {
@@ -640,7 +706,8 @@ impl ModelStore {
                     approx: approx.clone(),
                 }
             } else {
-                binfmt::decode_bundle_full(&bytes)?.models
+                let map = MapFile::open(&self.path_of(id))?;
+                binfmt::decode_bundle_mapped(&map)?.models
             };
             let entry = Arc::new(ModelEntry {
                 id: Arc::from(id),
@@ -681,13 +748,44 @@ impl ModelStore {
             )));
         }
         let generation = current.generation + 1;
-        // Native re-encode: an archived quantized bundle reverts with
-        // its stored q-values and scales verbatim — no requantization,
-        // no double quantization error.
-        let out = binfmt::encode_bundle_native(
+        // Native re-encode at the archive's own container format: an
+        // archived quantized bundle reverts with its stored q-values
+        // and scales verbatim — no requantization, no double
+        // quantization error — and a v2 archive reverts to a v2 file.
+        let out = binfmt::encode_bundle_native_at(
             generation,
             &bundle.models,
             bundle.policy.as_ref(),
+            bundle.format,
+        )?;
+        self.archive_current(id, current.generation);
+        self.atomic_write(id, &out)?;
+        self.cache.lock().unwrap().entries.remove(id);
+        Ok(generation)
+    }
+
+    /// Re-encode the current generation of `id` at container format
+    /// `to`, published as a *new* generation through the ordinary
+    /// archive + hot-swap path. The models are carried in their native
+    /// storage (stored q-values and scales verbatim), so decisions are
+    /// bit-identical across the migration in both directions. A no-op
+    /// (returning the current generation) when the bundle is already at
+    /// `to`.
+    pub fn migrate(&self, id: &str, to: FormatVersion) -> Result<u64> {
+        Self::validate_id(id)?;
+        let _publishing = self.publish_lock.lock().unwrap();
+        let current = self.peek(id)?;
+        if current.format == to {
+            return Ok(current.generation);
+        }
+        let bytes = std::fs::read(self.path_of(id))?;
+        let bundle = binfmt::decode_bundle_full(&bytes)?;
+        let generation = current.generation + 1;
+        let out = binfmt::encode_bundle_native_at(
+            generation,
+            &bundle.models,
+            bundle.policy.as_ref(),
+            to,
         )?;
         self.archive_current(id, current.generation);
         self.atomic_write(id, &out)?;
@@ -713,6 +811,7 @@ impl ModelStore {
             has_policy: hdr.has_policy(),
             payload: hdr.payload(),
             has_rff: hdr.has_rff(),
+            format: hdr.format(),
         })
     }
 
@@ -733,10 +832,14 @@ impl ModelStore {
             }
         }
         // Decode outside the lock: large bundles should not serialize
-        // unrelated tenants' cache hits.
-        let bytes = std::fs::read(self.path_of(id))
-            .map_err(|e| not_found_to_invalid(e.into(), id))?;
-        let bundle = binfmt::decode_bundle_full(&bytes)?;
+        // unrelated tenants' cache hits. The map (not a read) is the
+        // zero-copy seam: a v2 bundle's tensors come back as views over
+        // it, each holding its own `Arc` of the mapping, so the backing
+        // stays alive exactly as long as the entry; v1 bundles decode
+        // onto the heap from the same bytes and the map drops here.
+        let map = MapFile::open(&self.path_of(id))
+            .map_err(|e| not_found_to_invalid(e, id))?;
+        let bundle = binfmt::decode_bundle_mapped(&map)?;
         let entry = Arc::new(ModelEntry {
             id: Arc::from(id),
             generation: bundle.generation,
@@ -1382,6 +1485,252 @@ mod tests {
         let fresh = ModelStore::open(store.root()).unwrap();
         let cold = fresh.load("hot").unwrap();
         for z in [[0.3f32, -0.7], [1.5, 0.25], [0.0, 0.0]] {
+            assert_eq!(
+                warmed.approx_decision_one(&z).to_bits(),
+                cold.approx_decision_one(&z).to_bits()
+            );
+            assert_eq!(
+                warmed.exact_decision_one(&z).to_bits(),
+                cold.exact_decision_one(&z).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn v2_publish_loads_bit_identical_and_borrowed() {
+        let store = temp_store("v2");
+        let (e, a) = pair(1.0);
+        for kind in [PayloadKind::F16, PayloadKind::Int8] {
+            let v1_id = format!("v1-{kind}");
+            let v2_id = format!("v2-{kind}");
+            for (id, format) in
+                [(&v1_id, FormatVersion::V1), (&v2_id, FormatVersion::V2)]
+            {
+                store
+                    .publish_with(
+                        id,
+                        &e,
+                        &a,
+                        PublishOptions {
+                            quantize: Some(kind),
+                            format: Some(format),
+                            ..Default::default()
+                        },
+                    )
+                    .unwrap();
+                assert_eq!(store.peek(id).unwrap().format, format);
+            }
+            let h = store.load(&v1_id).unwrap();
+            let m = store.load(&v2_id).unwrap();
+            // v1 always decodes to the heap; v2 serves its tensors as
+            // views over the map (little-endian hosts — elsewhere the
+            // decoder falls back to the heap and stays bit-identical).
+            assert_eq!(h.mapped_bytes(), 0, "{kind}");
+            if cfg!(target_endian = "little") {
+                assert!(m.mapped_bytes() > 0, "{kind}");
+                assert!(m.heap_bytes() < h.heap_bytes(), "{kind}");
+            }
+            assert_eq!(
+                m.heap_bytes() + m.mapped_bytes(),
+                m.resident_bytes()
+            );
+            for z in [[0.3f32, -0.7], [1.5, 0.25], [0.0, 0.0]] {
+                assert_eq!(
+                    m.approx_decision_one(&z).to_bits(),
+                    h.approx_decision_one(&z).to_bits(),
+                    "{kind}"
+                );
+                assert_eq!(
+                    m.exact_decision_one(&z).to_bits(),
+                    h.exact_decision_one(&z).to_bits(),
+                    "{kind}"
+                );
+            }
+        }
+        // f32 payloads serve from the heap even in a v2 container.
+        store
+            .publish_with(
+                "f32-v2",
+                &e,
+                &a,
+                PublishOptions {
+                    quantize: Some(PayloadKind::F32),
+                    substrate: Some(Substrate::Maclaurin),
+                    format: Some(FormatVersion::V2),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let info = store.peek("f32-v2").unwrap();
+        assert_eq!(info.format, FormatVersion::V2);
+        assert_eq!(info.payload, PayloadKind::F32);
+        let entry = store.load("f32-v2").unwrap();
+        assert_eq!(entry.mapped_bytes(), 0);
+        assert_eq!(entry.approx_dequant().c, a.c);
+    }
+
+    #[test]
+    fn rff_v2_republish_serves_mapped_weights_bit_identically() {
+        let store = temp_store("rffv2");
+        let (e, a) = pair(1.0);
+        // Same id across both publishes: the rff map's seed derives
+        // from the id, so the two generations carry the same weights
+        // and their decisions are comparable bit-for-bit.
+        let opts = |format| PublishOptions {
+            substrate: Some(Substrate::Rff),
+            rff_features: Some(64),
+            format: Some(format),
+            ..Default::default()
+        };
+        store
+            .publish_with("r", &e, &a, opts(FormatVersion::V1))
+            .unwrap();
+        assert_eq!(store.peek("r").unwrap().format, FormatVersion::V1);
+        let h = store.load("r").unwrap();
+        assert_eq!(h.mapped_bytes(), 0);
+        store
+            .publish_with("r", &e, &a, opts(FormatVersion::V2))
+            .unwrap();
+        assert_eq!(store.peek("r").unwrap().format, FormatVersion::V2);
+        let m = store.load("r").unwrap();
+        assert!(m.models.rff().is_some());
+        if cfg!(target_endian = "little") {
+            assert!(m.mapped_bytes() > 0);
+        }
+        for z in [[0.3f32, -0.4], [1.0, 2.0], [0.0, 0.0]] {
+            assert_eq!(
+                m.approx_decision_one(&z).to_bits(),
+                h.approx_decision_one(&z).to_bits()
+            );
+            assert_eq!(
+                m.exact_decision_one(&z).to_bits(),
+                h.exact_decision_one(&z).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn migrate_round_trips_bit_identically() {
+        let store = temp_store("migrate");
+        let (e, a) = pair(1.0);
+        store
+            .publish_with(
+                "m",
+                &e,
+                &a,
+                PublishOptions {
+                    quantize: Some(PayloadKind::Int8),
+                    format: Some(FormatVersion::V1),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let gen1 = store.load("m").unwrap();
+        // Migrating to the format already stored is a no-op.
+        assert_eq!(store.migrate("m", FormatVersion::V1).unwrap(), 1);
+        assert_eq!(store.peek("m").unwrap().generation, 1);
+        // v1 → v2: a new generation, same stored q-values.
+        assert_eq!(store.migrate("m", FormatVersion::V2).unwrap(), 2);
+        let info = store.peek("m").unwrap();
+        assert_eq!(info.generation, 2);
+        assert_eq!(info.format, FormatVersion::V2);
+        assert_eq!(info.payload, PayloadKind::Int8);
+        let v2 = store.load("m").unwrap();
+        // …and back. Both hops preserve decisions bit-for-bit.
+        assert_eq!(store.migrate("m", FormatVersion::V1).unwrap(), 3);
+        assert_eq!(store.peek("m").unwrap().format, FormatVersion::V1);
+        let back = store.load("m").unwrap();
+        let z = [0.25f32, -0.5];
+        for entry in [&v2, &back] {
+            assert_eq!(
+                entry.approx_decision_one(&z).to_bits(),
+                gen1.approx_decision_one(&z).to_bits()
+            );
+            assert_eq!(
+                entry.exact_decision_one(&z).to_bits(),
+                gen1.exact_decision_one(&z).to_bits()
+            );
+        }
+        assert!(store.migrate("ghost", FormatVersion::V2).is_err());
+    }
+
+    #[test]
+    fn rollback_preserves_the_archived_format() {
+        let store = temp_store("fmtrollback");
+        let (e1, a1) = pair(1.0);
+        let (e2, a2) = pair(2.0);
+        store
+            .publish_with(
+                "m",
+                &e1,
+                &a1,
+                PublishOptions {
+                    quantize: Some(PayloadKind::F16),
+                    format: Some(FormatVersion::V2),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        let gen1 = store.load("m").unwrap();
+        store
+            .publish_with(
+                "m",
+                &e2,
+                &a2,
+                PublishOptions {
+                    quantize: Some(PayloadKind::F32),
+                    substrate: Some(Substrate::Maclaurin),
+                    format: Some(FormatVersion::V1),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(store.peek("m").unwrap().format, FormatVersion::V1);
+        // Rolling back republishes the v2 archive as a v2 file.
+        assert_eq!(store.rollback("m").unwrap(), 3);
+        let info = store.peek("m").unwrap();
+        assert_eq!(info.format, FormatVersion::V2);
+        assert_eq!(info.payload, PayloadKind::F16);
+        let entry = store.load("m").unwrap();
+        let z = [0.3f32, 0.6];
+        assert_eq!(
+            entry.approx_decision_one(&z).to_bits(),
+            gen1.approx_decision_one(&z).to_bits()
+        );
+        assert_eq!(
+            entry.exact_decision_one(&z).to_bits(),
+            gen1.exact_decision_one(&z).to_bits()
+        );
+    }
+
+    #[test]
+    fn v2_warm_publish_seeds_the_mapped_entry() {
+        let store = temp_store("v2warm");
+        let (e, a) = pair(1.0);
+        store
+            .publish_with(
+                "hot",
+                &e,
+                &a,
+                PublishOptions {
+                    warm: true,
+                    quantize: Some(PayloadKind::Int8),
+                    format: Some(FormatVersion::V2),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(store.cached_count(), 1);
+        let warmed = store.load("hot").unwrap();
+        // The warmed entry is borrowed over the published file exactly
+        // like a cold lane's load — not a private heap decode.
+        if cfg!(target_endian = "little") {
+            assert!(warmed.mapped_bytes() > 0);
+        }
+        let fresh = ModelStore::open(store.root()).unwrap();
+        let cold = fresh.load("hot").unwrap();
+        assert_eq!(warmed.mapped_bytes(), cold.mapped_bytes());
+        for z in [[0.3f32, -0.7], [1.5, 0.25]] {
             assert_eq!(
                 warmed.approx_decision_one(&z).to_bits(),
                 cold.approx_decision_one(&z).to_bits()

@@ -1,11 +1,21 @@
 #!/usr/bin/env python3
-"""Regenerates the golden `.arbf` corpus (v1, kinds 1-6).
+"""Regenerates the golden `.arbf` corpus (v1 + v2, kinds 1-6).
 
 The committed binaries are CANONICAL: rust/tests/format_conformance.rs
 asserts that the Rust encoder reproduces them byte-for-byte, so any
 format change must be made deliberately (edit docs/FORMATS.md, bump the
 version or add a kind, regenerate here, and update the conformance
 expectations).
+
+Format v2 (the zero-copy layout) shares every record kind and the CRC
+discipline with v1 but places each payload on a 64-byte file offset:
+the record header's formerly-reserved u16 holds the count of zero pad
+bytes inserted after the header (not CRC-covered; readers re-derive and
+zero-check it), and the quantized kind-4/5 payloads switch to dense
+tensors whose segments are zero-padded to 64-byte boundaries inside the
+payload (CRC-covered) so typed views can serve straight from a mapped
+file. Kinds 1-3 payload bodies are byte-identical across formats; the
+kind-6 28-byte prefix is too, with only the weight vector realigned.
 
 Every model value in the corpus is dyadic (a small multiple of a power
 of two), and every int8 row max is 127 * 2^-k, so f32 arithmetic, f16
@@ -75,6 +85,33 @@ def arbf(generation, dim, n_sv, flags, records):
     for kind, payload in records:
         out += record(kind, payload)
     return out
+
+
+PAYLOAD_ALIGN = 64
+
+
+def record_v2(offset, kind, payload):
+    """v2 record written at absolute file offset `offset`: the header's
+    pad word counts the zero bytes that place the payload on the next
+    PAYLOAD_ALIGN-byte file offset. Pad bytes are NOT CRC-covered."""
+    pad = -(offset + 16) % PAYLOAD_ALIGN
+    out = u16(kind) + u16(pad) + u32(zlib.crc32(payload)) + u64(len(payload))
+    return out + b"\x00" * pad + payload
+
+
+def arbf_v2(generation, dim, n_sv, flags, records):
+    out = b"ARBF" + u16(2) + u16(len(records)) + u64(generation)
+    out += u32(dim) + u32(n_sv) + u64(flags)
+    for kind, payload in records:
+        out += record_v2(len(out), kind, payload)
+    return out
+
+
+def pad64(out):
+    """Zero-fill to the next PAYLOAD_ALIGN boundary relative to the
+    payload start (v2 places payloads on absolute 64-byte offsets, so
+    relative alignment is absolute alignment). CRC-covered."""
+    return out + b"\x00" * (-len(out) % PAYLOAD_ALIGN)
 
 
 FLAG_HAS_POLICY = 1
@@ -229,6 +266,78 @@ def rff_payload(r):
     return out
 
 
+# -- v2 payload builders (dense tensors, 64-byte intra-payload pads) -------
+
+
+def f16_svm_payload_v2(m):
+    out = u8(1) + u8(m["tag"]) + f32(m["gamma"]) + f32(m["beta"]) + f32(m["b"])
+    out += u32(len(m["coef"])) + u32(len(m["rows"][0]))
+    out = pad64(out)
+    for c in m["coef"]:
+        out += f16(c)
+    out = pad64(out)
+    for row in m["rows"]:  # dense row-major, zeros included
+        for v in row:
+            out += f16(v)
+    return out
+
+
+def f16_approx_payload_v2(a):
+    out = u8(2) + u32(a["d"]) + f32(a["gamma"]) + f32(a["b"]) + f32(a["c"])
+    out += f32(a["max_sv_norm_sq"])
+    out = pad64(out)
+    for v in a["v"]:
+        out += f16(v)
+    out = pad64(out)
+    for row in a["m_upper"]:
+        for v in row:
+            out += f16(v)
+    return out
+
+
+def int8_svm_payload_v2(m):
+    out = u8(1) + u8(m["tag"]) + f32(m["gamma"]) + f32(m["beta"]) + f32(m["b"])
+    out += u32(len(m["coef"]["q"])) + u32(len(m["rows"][0]["q"]))
+    out += f32(m["coef"]["scale"])
+    out = pad64(out)
+    for q in m["coef"]["q"]:
+        out += i8(q)
+    out = pad64(out)
+    for row in m["rows"]:  # all per-row scales first...
+        out += f32(row["scale"])
+    out = pad64(out)
+    for row in m["rows"]:  # ...then the dense row-major q block
+        for q in row["q"]:
+            out += i8(q)
+    return out
+
+
+def int8_approx_payload_v2(a):
+    out = u8(2) + u32(a["d"]) + f32(a["gamma"]) + f32(a["b"]) + f32(a["c"])
+    out += f32(a["max_sv_norm_sq"])
+    out += f32(a["v"]["scale"])
+    out = pad64(out)
+    for q in a["v"]["q"]:
+        out += i8(q)
+    out = pad64(out)
+    for row in a["m_upper"]:
+        out += f32(row["scale"])
+    out = pad64(out)
+    for row in a["m_upper"]:
+        for q in row["q"]:
+            out += i8(q)
+    return out
+
+
+def rff_payload_v2(r):
+    out = u32(r["dim"]) + u32(len(r["w"])) + u64(r["seed"])
+    out += f32(r["gamma"]) + f32(r["bias"]) + f32(r["err_est"])
+    out = pad64(out)
+    for v in r["w"]:
+        out += f32(v)
+    return out
+
+
 # -- fixtures --------------------------------------------------------------
 
 FIXTURES = {
@@ -261,6 +370,42 @@ FIXTURES = {
         3,
         FLAG_RFF,
         [(1, svm_payload(SVM)), (2, approx_payload(APPROX)), (6, rff_payload(RFF))],
+    ),
+    # v2 twins: same toy values and generations, zero-copy layout.
+    # Kinds 1-3 reuse the v1 payload builders byte-for-byte; only the
+    # record framing (header pad word) differs. Together the four
+    # bundles cover record kinds 1-6 under the v2 framing.
+    "v2_bundle_policy.arbf": arbf_v2(
+        7,
+        3,
+        3,
+        FLAG_HAS_POLICY,
+        [(1, svm_payload(SVM)), (2, approx_payload(APPROX)), (3, POLICY)],
+    ),
+    "v2_bundle_f16.arbf": arbf_v2(
+        3,
+        3,
+        3,
+        FLAG_QUANT_F16,
+        [(4, f16_svm_payload_v2(SVM)), (4, f16_approx_payload_v2(APPROX))],
+    ),
+    "v2_bundle_int8_policy.arbf": arbf_v2(
+        9,
+        3,
+        3,
+        FLAG_QUANT_INT8 | FLAG_HAS_POLICY,
+        [
+            (5, int8_svm_payload_v2(SVM8)),
+            (5, int8_approx_payload_v2(APPROX8)),
+            (3, POLICY),
+        ],
+    ),
+    "v2_bundle_rff.arbf": arbf_v2(
+        11,
+        3,
+        3,
+        FLAG_RFF,
+        [(1, svm_payload(SVM)), (2, approx_payload(APPROX)), (6, rff_payload_v2(RFF))],
     ),
 }
 

@@ -17,13 +17,22 @@
 //!
 //! Every fixture value is dyadic, so f32/f16/int8 round trips in the
 //! corpus are exact and the assertions below can use `==` on floats.
+//!
+//! The corpus also pins format version 2 (the zero-copy layout): four
+//! `v2_*` twins of the bundle fixtures hold the same toy values under
+//! the 64-byte-aligned framing, and the tests below assert byte
+//! stability per format, v1↔v2 re-encode round trips, bit-identical
+//! decisions between heap and mapped decodes, and loud rejection of
+//! pad-word / filler tampering that v1's CRCs alone would not catch.
+
+use std::sync::Arc;
 
 use approxrbf::coordinator::{RoutePolicy, TenantPolicy};
 use approxrbf::linalg::Mat;
 use approxrbf::registry::binfmt::{
     self, FLAG_HAS_POLICY, FLAG_QUANT_F16, FLAG_QUANT_INT8, FLAG_RFF,
 };
-use approxrbf::registry::{PayloadKind, TenantModels};
+use approxrbf::registry::{FormatVersion, MapFile, PayloadKind, TenantModels};
 use approxrbf::approx::{ApproxModel, RffModel};
 use approxrbf::svm::{Kernel, SvmModel};
 use approxrbf::util::crc32::crc32;
@@ -500,4 +509,327 @@ fn quantized_fixture_serves_decisions_equal_to_dequantized_eval() {
     } else {
         panic!("int8 fixture decoded as f32");
     }
+}
+
+// ---------------------------------------------------------------------
+// format v2: zero-copy framing over the same record kinds
+// ---------------------------------------------------------------------
+
+/// Every v2 payload must sit on a 64-byte file offset, reached by the
+/// pad count committed in the record header.
+fn assert_v2_framing(bytes: &[u8]) {
+    for (i, f) in binfmt::record_frames(bytes).unwrap().iter().enumerate() {
+        assert_eq!(f.payload_offset % 64, 0, "record {i}: payload misaligned");
+        assert!((f.pad as usize) < 64, "record {i}: overlong pad {}", f.pad);
+    }
+}
+
+#[test]
+fn golden_v2_bundle_with_policy() {
+    let bytes = fixture("v2_bundle_policy.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.version, hdr.n_records, hdr.generation), (2, 3, 7));
+    assert_eq!(hdr.format(), FormatVersion::V2);
+    assert_eq!(hdr.flags, FLAG_HAS_POLICY);
+    assert_eq!(hdr.payload(), PayloadKind::F32);
+    assert_crcs_recompute(&bytes);
+    assert_v2_framing(&bytes);
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.format, FormatVersion::V2);
+    assert_eq!(b.policy, Some(toy_policy()));
+    assert_eq!(b.exact_dequant().coef, toy_svm().coef);
+    assert_eq!(b.approx_dequant().v, toy_approx().v);
+    assert_eq!(
+        binfmt::encode_bundle_native_at(
+            7,
+            &b.models,
+            b.policy.as_ref(),
+            FormatVersion::V2
+        )
+        .unwrap(),
+        bytes
+    );
+    // f32 payloads serve from the heap in either format: a mapped
+    // decode of this bundle borrows nothing.
+    let map = Arc::new(MapFile::from_bytes(bytes));
+    let m = binfmt::decode_bundle_mapped(&map).unwrap();
+    assert_eq!(m.models.mapped_bytes(), 0);
+}
+
+#[test]
+fn golden_v2_bundle_f16() {
+    let bytes = fixture("v2_bundle_f16.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (2, 3));
+    assert_eq!(hdr.flags, FLAG_QUANT_F16);
+    assert_eq!(hdr.payload(), PayloadKind::F16);
+    assert_crcs_recompute(&bytes);
+    assert_v2_framing(&bytes);
+    assert!(binfmt::record_frames(&bytes)
+        .unwrap()
+        .iter()
+        .all(|f| f.kind == 4));
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.payload(), PayloadKind::F16);
+    // Same dyadic toy values as the v1 twin — lossless dequantization.
+    let e = b.exact_dequant();
+    let a = b.approx_dequant();
+    assert_eq!(e.coef, toy_svm().coef);
+    assert_eq!(e.sv.max_abs_diff(&toy_svm().sv), 0.0);
+    assert_eq!(a.v, toy_approx().v);
+    assert_eq!(a.m.max_abs_diff(&toy_approx().m), 0.0);
+    // Byte stability via BOTH paths, at the v2 container.
+    assert_eq!(
+        binfmt::encode_bundle_native_at(3, &b.models, None, FormatVersion::V2)
+            .unwrap(),
+        bytes
+    );
+    assert_eq!(
+        binfmt::encode_bundle_quantized_at(
+            3,
+            &toy_svm(),
+            &toy_approx(),
+            None,
+            PayloadKind::F16,
+            FormatVersion::V2
+        )
+        .unwrap(),
+        bytes
+    );
+}
+
+#[test]
+fn golden_v2_bundle_int8_with_policy() {
+    let bytes = fixture("v2_bundle_int8_policy.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (3, 9));
+    assert_eq!(hdr.flags, FLAG_QUANT_INT8 | FLAG_HAS_POLICY);
+    assert_eq!(hdr.payload(), PayloadKind::Int8);
+    assert_crcs_recompute(&bytes);
+    assert_v2_framing(&bytes);
+    let frames = binfmt::record_frames(&bytes).unwrap();
+    assert_eq!(
+        frames.iter().map(|f| f.kind).collect::<Vec<_>>(),
+        vec![5, 5, 3]
+    );
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    assert_eq!(b.policy, Some(toy_policy()));
+    let e = b.exact_dequant();
+    let a = b.approx_dequant();
+    assert_eq!(e.coef, toy_svm_int8().coef);
+    assert_eq!(e.sv.max_abs_diff(&toy_svm_int8().sv), 0.0);
+    assert_eq!(a.m.max_abs_diff(&toy_approx_int8().m), 0.0);
+    assert_eq!(
+        binfmt::encode_bundle_native_at(
+            9,
+            &b.models,
+            b.policy.as_ref(),
+            FormatVersion::V2
+        )
+        .unwrap(),
+        bytes
+    );
+    assert_eq!(
+        binfmt::encode_bundle_quantized_at(
+            9,
+            &toy_svm_int8(),
+            &toy_approx_int8(),
+            Some(&toy_policy()),
+            PayloadKind::Int8,
+            FormatVersion::V2
+        )
+        .unwrap(),
+        bytes
+    );
+}
+
+#[test]
+fn golden_v2_bundle_rff() {
+    let bytes = fixture("v2_bundle_rff.arbf");
+    let hdr = binfmt::peek_header(&bytes).unwrap();
+    assert_eq!((hdr.n_records, hdr.generation), (3, 11));
+    assert_eq!(hdr.flags, FLAG_RFF);
+    assert_crcs_recompute(&bytes);
+    assert_v2_framing(&bytes);
+    let frames = binfmt::record_frames(&bytes).unwrap();
+    assert_eq!(
+        frames.iter().map(|f| f.kind).collect::<Vec<_>>(),
+        vec![1, 2, 6]
+    );
+    // v2 pads the 28-byte prefix out to one alignment unit, then D×f32.
+    assert_eq!(frames[2].payload_len, 64 + 4 * 4);
+    // The 28-byte prefix is format-invariant: peek serves v2 unchanged.
+    let s = binfmt::peek_rff_summary(&bytes).unwrap().expect("kind-6 peek");
+    assert_eq!((s.n_features, s.seed, s.gamma, s.err_est), (4, 42, 0.125, 0.25));
+    let b = binfmt::decode_bundle_full(&bytes).unwrap();
+    let r = b.models.rff().expect("rff fixture decoded without kind-6");
+    assert_eq!((r.dim(), r.n_features()), (3, 4));
+    assert_eq!(r.w, vec![0.5, -1.0, 0.25, 2.0]);
+    assert_eq!(
+        binfmt::encode_bundle_native_at(11, &b.models, None, FormatVersion::V2)
+            .unwrap(),
+        bytes
+    );
+    assert_eq!(
+        binfmt::encode_bundle_rff_at(
+            11,
+            &toy_svm(),
+            &toy_approx(),
+            &toy_rff(),
+            None,
+            FormatVersion::V2
+        )
+        .unwrap(),
+        bytes
+    );
+}
+
+#[test]
+fn v1_to_v2_reencode_round_trips_byte_identically() {
+    // migrate()'s codec core: decode v1, re-encode at v2 — which must
+    // reproduce the committed v2 twin exactly — decode that, re-encode
+    // at v1, and land back on the original bytes.
+    for name in [
+        "v1_bundle_policy.arbf",
+        "v1_bundle_f16.arbf",
+        "v1_bundle_int8_policy.arbf",
+        "v1_bundle_rff.arbf",
+    ] {
+        let bytes = fixture(name);
+        let b = binfmt::decode_bundle_full(&bytes).unwrap();
+        let v2 = binfmt::encode_bundle_native_at(
+            b.generation,
+            &b.models,
+            b.policy.as_ref(),
+            FormatVersion::V2,
+        )
+        .unwrap();
+        assert_eq!(
+            v2,
+            fixture(&name.replace("v1_", "v2_")),
+            "{name}: v2 re-encode does not match the committed twin"
+        );
+        let b2 = binfmt::decode_bundle_full(&v2).unwrap();
+        let back = binfmt::encode_bundle_native_at(
+            b2.generation,
+            &b2.models,
+            b2.policy.as_ref(),
+            FormatVersion::V1,
+        )
+        .unwrap();
+        assert_eq!(back, bytes, "{name}: v1 -> v2 -> v1 drifted");
+    }
+}
+
+#[test]
+fn v2_fixtures_serve_mapped_decisions_bit_identical_to_v1_heap() {
+    // The serving contract the whole zero-copy layer rests on: a v2
+    // bundle decoded over its mapped backing produces decisions
+    // bit-identical to the v1 heap decode of the same model.
+    for (v1, v2) in [
+        ("v1_bundle_policy.arbf", "v2_bundle_policy.arbf"),
+        ("v1_bundle_f16.arbf", "v2_bundle_f16.arbf"),
+        ("v1_bundle_int8_policy.arbf", "v2_bundle_int8_policy.arbf"),
+        ("v1_bundle_rff.arbf", "v2_bundle_rff.arbf"),
+    ] {
+        let heap = binfmt::decode_bundle_full(&fixture(v1)).unwrap();
+        let map = Arc::new(MapFile::from_bytes(fixture(v2)));
+        let mapped = binfmt::decode_bundle_mapped(&map).unwrap();
+        assert_eq!(heap.payload(), mapped.payload(), "{v2}: payload kind");
+        let borrows = !matches!(mapped.models, TenantModels::F32 { .. });
+        if cfg!(target_endian = "little") && borrows {
+            assert!(
+                mapped.models.mapped_bytes() > 0,
+                "{v2}: expected mapped tensor views"
+            );
+        }
+        for z in [
+            [0.25f32, -0.5, 0.125],
+            [1.0, 0.0, -1.0],
+            [-0.125, 2.0, 0.5],
+            [0.0, 0.0, 0.0],
+        ] {
+            let want = heap.models.approx_decision_one(&z);
+            let got = mapped.models.approx_decision_one(&z);
+            assert_eq!(
+                want.to_bits(),
+                got.to_bits(),
+                "{v2}: mapped decision drift at {z:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn v2_fixtures_reject_framing_mutations() {
+    for name in [
+        "v2_bundle_policy.arbf",
+        "v2_bundle_f16.arbf",
+        "v2_bundle_int8_policy.arbf",
+        "v2_bundle_rff.arbf",
+    ] {
+        let bytes = fixture(name);
+        let frames = binfmt::record_frames(&bytes).unwrap();
+        // The first record always pads (header ends at offset 48).
+        let f = &frames[0];
+        assert!(f.pad > 0, "{name}: expected a padded first record");
+        let hdr_start = f.payload_offset - f.pad as usize - 16;
+        // In v2 the pad word is load-bearing: a flip that was "ignored
+        // reserved bytes" under v1 now misplaces the payload.
+        let mut m = bytes.clone();
+        m[hdr_start + 2] = m[hdr_start + 2].wrapping_add(1);
+        assert!(
+            matches!(binfmt::decode(&m), Err(Error::Corrupt(msg))
+                if msg.contains("boundary")),
+            "{name}: bad pad word must miss the boundary"
+        );
+        // Filler tampering: the pad bytes precede the payload and are
+        // not CRC-covered — only the explicit zero check refuses them.
+        let mut m = bytes.clone();
+        m[f.payload_offset - 1] = 0xAA;
+        assert!(
+            matches!(binfmt::decode(&m), Err(Error::Corrupt(msg))
+                if msg.contains("padding")),
+            "{name}: nonzero filler must be refused"
+        );
+        // Truncation inside the pad region stays typed.
+        assert!(
+            matches!(
+                binfmt::decode(&bytes[..f.payload_offset - 1]),
+                Err(Error::Corrupt(_))
+            ),
+            "{name}: truncation inside padding"
+        );
+        // And the CRC discipline is unchanged from v1.
+        let mut m = bytes.clone();
+        m[f.payload_offset] ^= 0x01;
+        assert!(
+            matches!(binfmt::decode(&m), Err(Error::Corrupt(_))),
+            "{name}: payload flip must break the CRC"
+        );
+    }
+}
+
+#[test]
+fn v2_intra_payload_padding_tamper_is_refused_even_with_valid_crc() {
+    // The dense kind-4 payload carries CRC-covered zero filler between
+    // tensor segments. Recomputing the CRC over a tampered filler byte
+    // defeats the CRC check on purpose — the decoder's explicit zero
+    // check must still refuse the payload.
+    let bytes = fixture("v2_bundle_f16.arbf");
+    let frames = binfmt::record_frames(&bytes).unwrap();
+    let f = &frames[0];
+    // Record 0: a 22-byte scalar prefix zero-padded to 64 before the
+    // coefficient block, so payload byte 30 is intra-payload filler.
+    let mut m = bytes.clone();
+    m[f.payload_offset + 30] = 0xAA;
+    let start = f.payload_offset;
+    let end = start + f.payload_len as usize;
+    let crc = crc32(&m[start..end]).to_le_bytes();
+    let hdr_start = f.payload_offset - f.pad as usize - 16;
+    m[hdr_start + 4..hdr_start + 8].copy_from_slice(&crc);
+    assert!(matches!(
+        binfmt::decode_bundle_full(&m),
+        Err(Error::Corrupt(msg)) if msg.contains("alignment padding")
+    ));
 }

@@ -9,13 +9,13 @@ use std::time::Duration;
 
 use approxrbf::approx::builder::build_approx_model;
 use approxrbf::approx::bounds::gamma_max_for_data;
-use approxrbf::approx::ApproxModel;
+use approxrbf::approx::{ApproxModel, RffModel};
 use approxrbf::coordinator::{Coordinator, Route, RoutePolicy, TenantPolicy};
 use approxrbf::data::{synth, Dataset, UnitNormScaler};
 use approxrbf::linalg::{Mat, MathBackend};
 use approxrbf::prop_cases;
 use approxrbf::registry::{
-    binfmt, ModelStore, PayloadKind, PublishOptions,
+    binfmt, FormatVersion, MapFile, ModelStore, PayloadKind, PublishOptions,
 };
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
@@ -634,6 +634,93 @@ fn property_quantized_bundles_roundtrip_within_bounds_and_reencode_stably() {
                     );
                 }
             }
+        }
+    });
+}
+
+/// The zero-copy acceptance: across kernels, payload precisions and
+/// the rff substrate, a bundle decoded over its v2 mapped backing
+/// produces decisions **bit-identical** to the v1 heap decode of the
+/// same model — storage (borrowed views vs owned vectors) must never
+/// leak into arithmetic.
+#[test]
+fn property_v2_mapped_decisions_bit_identical_to_v1_heap() {
+    prop_cases!("v1 heap == v2 mmap", 12, |rng| {
+        let am = random_approx(rng);
+        let d = am.dim();
+        let mut sv = Mat::zeros(2, d);
+        for c in 0..d {
+            *sv.at_mut(0, c) = rng.normal() as f32;
+            *sv.at_mut(1, c) = rng.normal() as f32;
+        }
+        let kernel = match rng.below(3) {
+            0 => Kernel::Linear,
+            1 => Kernel::Rbf { gamma: am.gamma },
+            _ => Kernel::Poly2 { gamma: am.gamma, beta: 0.5 },
+        };
+        let exact =
+            SvmModel::new(kernel, sv, vec![1.0, -1.0], am.b).unwrap();
+        let queries: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let assert_twin = |v1: Vec<u8>, v2: Vec<u8>, what: &str| {
+            let heap = binfmt::decode_bundle_full(&v1).unwrap();
+            let map = Arc::new(MapFile::from_bytes(v2));
+            let mapped = binfmt::decode_bundle_mapped(&map).unwrap();
+            assert_eq!(mapped.format, FormatVersion::V2, "{what}");
+            for z in &queries {
+                let a0 = heap.models.approx_decision_one(z);
+                let a1 = mapped.models.approx_decision_one(z);
+                assert_eq!(a0.to_bits(), a1.to_bits(), "{what}: approx");
+                let e0 = heap.models.exact_decision_one(z);
+                let e1 = mapped.models.exact_decision_one(z);
+                assert_eq!(e0.to_bits(), e1.to_bits(), "{what}: exact");
+            }
+            mapped.models.mapped_bytes()
+        };
+        for kind in [PayloadKind::F32, PayloadKind::F16, PayloadKind::Int8] {
+            let v1 = binfmt::encode_bundle_quantized(5, &exact, &am, None, kind)
+                .unwrap();
+            let v2 = binfmt::encode_bundle_quantized_at(
+                5,
+                &exact,
+                &am,
+                None,
+                kind,
+                FormatVersion::V2,
+            )
+            .unwrap();
+            let mapped_bytes = assert_twin(v1, v2, &format!("{kind}"));
+            if cfg!(target_endian = "little") && kind != PayloadKind::F32 {
+                assert!(mapped_bytes > 0, "{kind}: expected mapped views");
+            }
+        }
+        // The rff substrate: identical stored weights (and seed, so an
+        // identical regenerated feature map) under both containers.
+        let n_feat = 4 * (1 + rng.below(8));
+        let w: Vec<f32> = (0..n_feat).map(|_| rng.normal() as f32).collect();
+        let rff = RffModel::from_parts(
+            d,
+            1 + rng.below(1 << 20) as u64,
+            am.gamma,
+            rng.normal() as f32,
+            0.25,
+            w,
+        )
+        .unwrap();
+        let v1 = binfmt::encode_bundle_rff(5, &exact, &am, &rff, None).unwrap();
+        let v2 = binfmt::encode_bundle_rff_at(
+            5,
+            &exact,
+            &am,
+            &rff,
+            None,
+            FormatVersion::V2,
+        )
+        .unwrap();
+        let mapped_bytes = assert_twin(v1, v2, "rff");
+        if cfg!(target_endian = "little") {
+            assert!(mapped_bytes > 0, "rff: expected mapped weights");
         }
     });
 }

@@ -35,7 +35,7 @@ use approxrbf::coordinator::{
 use approxrbf::data::Dataset;
 use approxrbf::net::{Router, RouterConfig};
 use approxrbf::registry::{
-    ModelStore, PayloadKind, PublishOptions, Substrate,
+    FormatVersion, ModelStore, PayloadKind, PublishOptions, Substrate,
 };
 use approxrbf::util::Rng;
 
@@ -50,8 +50,9 @@ fn remote_enabled() -> bool {
 
 /// A mixed tenant set with every serving mode: a policy-pinned
 /// AlwaysExact tenant, two hybrid f32 tenants (one partly pushed out of
-/// bound by the traffic generator), a native-int8 tenant, and a
-/// random-feature tenant.
+/// bound by the traffic generator), a native-int8 tenant, a
+/// random-feature tenant, and a format-v2 int8 tenant the shard
+/// processes serve from mapped bytes.
 fn mixed_registry(
     tag: &str,
 ) -> (Arc<ModelStore>, Vec<(&'static str, Dataset)>) {
@@ -61,6 +62,7 @@ fn mixed_registry(
     let (m3, a3, d3) = trained_pair(303, 0.8);
     let (m4, a4, d4) = trained_pair(404, 0.8);
     let (m5, a5, d5) = trained_pair(505, 0.8);
+    let (m6, a6, d6) = trained_pair(606, 0.8);
     store
         .publish_with(
             "pinned-exact",
@@ -107,6 +109,21 @@ fn mixed_registry(
             },
         )
         .unwrap();
+    // The zero-copy tenant: the shard processes decode this bundle over
+    // a memory map and serve borrowed tensor views — decisions must
+    // still be bit-identical to the in-process (equally mapped) plane.
+    store
+        .publish_with(
+            "zc-v2-int8",
+            &m6,
+            &a6,
+            PublishOptions {
+                quantize: Some(PayloadKind::Int8),
+                format: Some(FormatVersion::V2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
     (
         store,
         vec![
@@ -115,6 +132,7 @@ fn mixed_registry(
             ("hybrid-mixed", d3),
             ("quant-int8", d4),
             ("subst-rff", d5),
+            ("zc-v2-int8", d6),
         ],
     )
 }
@@ -249,6 +267,7 @@ fn remote_plane_is_bit_identical_to_in_process() {
     assert!(by_route[0] > 0 && by_route[1] > 0);
     assert!(baseline.iter().any(|(m, _, _, _)| m == "quant-int8"));
     assert!(baseline.iter().any(|(m, _, _, _)| m == "subst-rff"));
+    assert!(baseline.iter().any(|(m, _, _, _)| m == "zc-v2-int8"));
 
     // Remote metrics fan-in accounts every request exactly once.
     let snap = router.metrics();

@@ -30,7 +30,7 @@ use approxrbf::linalg::{quantblas, MathBackend};
 use approxrbf::prop_cases;
 use approxrbf::registry::quant::TenantModels;
 use approxrbf::registry::{
-    ModelStore, PayloadKind, PublishOptions, Substrate,
+    FormatVersion, ModelStore, PayloadKind, PublishOptions, Substrate,
 };
 use approxrbf::svm::smo::{train_csvc, SmoParams};
 use approxrbf::svm::{Kernel, SvmModel};
@@ -447,6 +447,70 @@ fn quantized_tenant_is_shard_invariant_and_within_bound_of_f32_twin() {
                 "request {i}: served bits differ from arm {arm}"
             );
         }
+    }
+    let _ = std::fs::remove_dir_all(store.root());
+}
+
+#[test]
+fn v2_mapped_tenant_is_shard_invariant_and_bit_identical_to_v1_twin() {
+    // The zero-copy acceptance on the sharded plane: the same trained
+    // int8 weights published at format v1 (heap) and v2 (mapped) serve
+    // request-for-request identical decision bits, and both tenants are
+    // bit-identical between shards(1) and shards(4).
+    let store = Arc::new(ModelStore::open(temp_dir("v2parity")).unwrap());
+    let (m, a, ds) = trained_pair(707, 0.8);
+    let opts = |format| PublishOptions {
+        quantize: Some(PayloadKind::Int8),
+        format: Some(format),
+        ..Default::default()
+    };
+    store
+        .publish_with("zc-v1", &m, &a, opts(FormatVersion::V1))
+        .unwrap();
+    store
+        .publish_with("zc-v2", &m, &a, opts(FormatVersion::V2))
+        .unwrap();
+    // The entries differ in storage, never in values.
+    let e1 = store.load("zc-v1").unwrap();
+    let e2 = store.load("zc-v2").unwrap();
+    assert_eq!(e1.mapped_bytes(), 0);
+    if cfg!(target_endian = "little") {
+        assert!(e2.mapped_bytes() > 0, "v2 int8 entry must map its tensors");
+        assert!(e2.heap_bytes() < e1.heap_bytes(), "v2 must shed heap");
+    }
+    let tenants: Vec<(&'static str, Dataset)> =
+        vec![("zc-v1", ds.clone()), ("zc-v2", ds)];
+    let traffic = build_traffic(&tenants, 240);
+    let (r1, _) = run_plane(&store, &traffic, 1);
+    let (r4, s4) = run_plane(&store, &traffic, 4);
+    assert_eq!(r1.len(), r4.len());
+    for (i, (a1, b4)) in r1.iter().zip(&r4).enumerate() {
+        assert_eq!(a1, b4, "request {i} differs between 1 and 4 shards");
+    }
+    // build_traffic alternates the tenants over the same rows, so pair
+    // (2k, 2k+1) carries identical features: the twins must answer with
+    // the same decision bits, request for request.
+    for k in 0..traffic.len() / 2 {
+        let (id_a, gen_a, bits_a, route_a) = &r1[2 * k];
+        let (id_b, gen_b, bits_b, route_b) = &r1[2 * k + 1];
+        assert_eq!((id_a.as_str(), *gen_a), ("zc-v1", 1));
+        assert_eq!((id_b.as_str(), *gen_b), ("zc-v2", 1));
+        assert_eq!(route_a, route_b, "pair {k}: v1/v2 route drift");
+        assert_eq!(bits_a, bits_b, "pair {k}: v1/v2 decision drift");
+    }
+    // The aggregated snapshot carries the residency gauges: the mapped
+    // tenant's row sheds heap onto mapped_bytes, the v1 twin's doesn't.
+    let row = |id: &str| {
+        s4.per_model
+            .iter()
+            .find(|m| m.id == id)
+            .unwrap_or_else(|| panic!("no metrics row for {id}"))
+    };
+    assert_eq!(row("zc-v1").mapped_bytes, 0);
+    assert!(row("zc-v1").heap_bytes > 0);
+    if cfg!(target_endian = "little") {
+        assert!(row("zc-v2").mapped_bytes > 0);
+        assert!(row("zc-v2").heap_bytes < row("zc-v1").heap_bytes);
     }
     let _ = std::fs::remove_dir_all(store.root());
 }
